@@ -1,0 +1,102 @@
+//! End-to-end driver: exercises the full three-layer system on a real
+//! small workload and proves all layers compose.
+//!
+//!   Layer 1  Pallas kernels (masked-matmul trace / CN tiles / motif
+//!            formulas) — authored in python/compile/kernels, AOT-lowered
+//!            to HLO text by `make artifacts`.
+//!   Layer 2  JAX entry points — python/compile/model.py, one HLO
+//!            artifact each.
+//!   Layer 3  This Rust binary: dataset registry, degree-sorted dense
+//!            tiling, sparsity-aware tile-triple dispatch through PJRT,
+//!            the combinatorial engines as cross-check, and the motif
+//!            census workload of the paper's intro.
+//!
+//! Workload: motif census (3-motifs + 4-motifs) over a family of RMAT
+//! graphs, computed three ways — Sandslash-Hi (ESU), Sandslash-Lo
+//! (formula local counting), and the XLA-accelerated path (CN tiles +
+//! formula kernel through PJRT). All three must agree exactly; the
+//! driver reports per-path wall time and edges/s. Requires `make
+//! artifacts` first.
+//!
+//!     cargo run --release --example end_to_end
+
+use sandslash::apps::motif::{motif3_lo, motif4_hi, motif4_lo};
+use sandslash::apps::tc::tc_hi;
+use sandslash::engine::{MinerConfig, OptFlags};
+use sandslash::graph::gen;
+use sandslash::pattern::library::MOTIF4_NAMES;
+use sandslash::runtime::accel::Accelerator;
+use sandslash::util::timer::{fmt_secs, timed};
+
+fn main() {
+    let accel = match Accelerator::load("artifacts") {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("cannot load artifacts ({e:#}); run `make artifacts` first");
+            std::process::exit(1);
+        }
+    };
+    println!("PJRT platform: {} (artifacts loaded: tc_tile, cn_tile, motif_formulas)", accel.platform());
+
+    let cfg = MinerConfig::new(OptFlags::hi());
+    let lo = MinerConfig::new(OptFlags::lo());
+    let mut failures = 0;
+
+    for (name, g) in [
+        ("rmat-11", gen::rmat(11, 6, 7, &[])),
+        ("er-2k", gen::erdos_renyi(2048, 0.004, 8, &[])),
+        ("ba-2k", gen::barabasi_albert(2048, 5, 9, &[])),
+    ] {
+        let m = g.num_undirected_edges() as f64;
+        println!("\n=== {name}: |V|={} |E|={} ===", g.num_vertices(), m);
+
+        // --- triangles through all three paths ---
+        let (t_eng, s_eng) = timed(|| tc_hi(&g, &cfg));
+        let (t_xla, s_xla) = timed(|| accel.triangle_count(&g).expect("xla tc"));
+        println!(
+            "TC:  engine={t_eng} [{} | {:.1} Medges/s]   xla={t_xla} [{}]",
+            fmt_secs(s_eng),
+            m / s_eng / 1e6,
+            fmt_secs(s_xla)
+        );
+        if t_eng != t_xla {
+            println!("  MISMATCH");
+            failures += 1;
+        }
+
+        // --- full 4-motif census through all three paths ---
+        let (hi, s_hi) = timed(|| motif4_hi(&g, &cfg).0);
+        let (lo4, s_lo) = timed(|| motif4_lo(&g, &lo));
+        let (acc4, s_acc) = timed(|| accel.motif4(&g, &lo).expect("xla motif4"));
+        println!(
+            "4-MC: hi [{}]  lo [{}]  xla [{}]  (lo speedup over hi: {:.1}x)",
+            fmt_secs(s_hi),
+            fmt_secs(s_lo),
+            fmt_secs(s_acc),
+            s_hi / s_lo.max(1e-9)
+        );
+        for (i, mname) in MOTIF4_NAMES.iter().enumerate() {
+            let ok = hi[i] == lo4[i] && lo4[i] == acc4[i];
+            println!(
+                "  {mname:>16}: hi={:<12} lo={:<12} xla={:<12} {}",
+                hi[i],
+                lo4[i],
+                acc4[i],
+                if ok { "ok" } else { "MISMATCH" }
+            );
+            if !ok {
+                failures += 1;
+            }
+        }
+
+        // --- 3-motif signature line (the paper-intro use case) ---
+        let m3 = motif3_lo(&g, &lo);
+        println!("  signature: wedges={} triangles={}", m3[0], m3[1]);
+    }
+
+    if failures > 0 {
+        eprintln!("\nend_to_end: {failures} mismatches");
+        std::process::exit(1);
+    }
+    println!("\nend_to_end: all three layers agree on every count. OK");
+}

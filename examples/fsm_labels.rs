@@ -1,0 +1,42 @@
+//! Frequent subgraph mining on a labeled graph (the paper's k-FSM
+//! application, Table 1 right column): find all edge-induced patterns
+//! with MNI domain support above a threshold.
+//!
+//!     cargo run --release --example fsm_labels
+
+use sandslash::apps::fsm_app;
+use sandslash::coordinator::datasets;
+use sandslash::engine::{MinerConfig, OptFlags};
+
+fn main() {
+    let g = datasets::load("pa-tiny").expect("dataset");
+    println!(
+        "pa-tiny: |V|={} |E|={} labels={}",
+        g.num_vertices(),
+        g.num_undirected_edges(),
+        g.num_labels()
+    );
+    let cfg = MinerConfig::new(OptFlags::hi());
+
+    for sigma in [2u64, 5, 10] {
+        let (r, secs) = sandslash::util::timer::timed(|| fsm_app::fsm(&g, 3, sigma, &cfg));
+        println!(
+            "\nsigma > {sigma}: {} frequent patterns (k <= 3 edges) in {}",
+            r.frequent.len(),
+            sandslash::util::timer::fmt_secs(secs)
+        );
+        for f in r.frequent.iter().take(8) {
+            let labels: Vec<u32> =
+                (0..f.pattern.num_vertices()).map(|v| f.pattern.label(v)).collect();
+            println!(
+                "  {} labels{:?}  support={}  embeddings={}",
+                f.pattern, labels, f.support, f.embeddings
+            );
+        }
+        if r.frequent.len() > 8 {
+            println!("  ... and {} more", r.frequent.len() - 8);
+        }
+    }
+    println!("\nAnti-monotone MNI pruning means raising sigma shrinks the result");
+    println!("monotonically without re-exploring pruned sub-pattern subtrees.");
+}

@@ -1,0 +1,51 @@
+//! Quickstart: the Sandslash high-level API in ~30 lines.
+//!
+//! A GPM problem is a *specification* (paper Table 1): three flags plus
+//! patterns. Sandslash picks the search strategy, data structures and
+//! optimizations (§4.3). Run with:
+//!
+//!     cargo run --release --example quickstart
+
+use sandslash::apps::{solve, MiningOutput};
+use sandslash::engine::{MinerConfig, OptFlags, ProblemSpec};
+use sandslash::graph::gen;
+
+fn main() {
+    // A power-law graph standing in for a small social network.
+    let g = gen::rmat(12, 8, 42, &[]);
+    println!(
+        "graph: {} vertices, {} edges",
+        g.num_vertices(),
+        g.num_undirected_edges()
+    );
+    let cfg = MinerConfig::new(OptFlags::hi());
+
+    // Triangle counting: vertex-induced, counting, explicit pattern.
+    if let MiningOutput::Count(c) = solve(&g, &ProblemSpec::tc(), &cfg) {
+        println!("triangles: {c}");
+    }
+
+    // 4-clique listing — same spec shape, bigger pattern.
+    if let MiningOutput::Count(c) = solve(&g, &ProblemSpec::clique_listing(4), &cfg) {
+        println!("4-cliques: {c}");
+    }
+
+    // 3-motif counting: implicit patterns, classified automatically.
+    if let MiningOutput::PerPattern(rows) = solve(&g, &ProblemSpec::motif_counting(3), &cfg) {
+        for (name, count) in rows {
+            println!("3-motif {name}: {count}");
+        }
+    }
+
+    // Subgraph listing of an explicit edge-induced pattern.
+    let spec = ProblemSpec::subgraph_listing(sandslash::pattern::library::diamond());
+    if let MiningOutput::Count(c) = solve(&g, &spec, &cfg) {
+        println!("diamonds (edge-induced embeddings): {c}");
+    }
+
+    // Flip one flag set to get the low-level optimized path (LC/LG).
+    let lo = MinerConfig::new(OptFlags::lo());
+    if let MiningOutput::Count(c) = solve(&g, &ProblemSpec::clique_listing(5), &lo) {
+        println!("5-cliques (Sandslash-Lo, local graphs): {c}");
+    }
+}

@@ -1,0 +1,71 @@
+"""AOT lowering: JAX (Layer 2) -> HLO text artifacts for the Rust runtime.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the `xla` rust crate) rejects; the text parser
+reassigns ids and round-trips cleanly.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+Writes one ``<name>.hlo.txt`` per entry point plus ``manifest.txt``
+recording shapes so the Rust side can validate its buffers.
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+ENTRY_POINTS = {
+    "tc_tile": (model.tc_tile, model.tc_tile_spec),
+    "cn_tile": (model.cn_tile, model.cn_tile_spec),
+    "motif_formulas": (model.motif_formulas, model.motif_formulas_spec),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(name: str) -> str:
+    fn, spec_fn = ENTRY_POINTS[name]
+    return to_hlo_text(jax.jit(fn).lower(*spec_fn()))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", choices=sorted(ENTRY_POINTS), default=None)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    names = [args.only] if args.only else sorted(ENTRY_POINTS)
+    manifest = [
+        f"tile={model.TILE}",
+        f"block_k={model.BLOCK_K}",
+        f"edge_lanes={model.EDGE_LANES}",
+    ]
+    for name in names:
+        text = lower_entry(name)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        _, spec_fn = ENTRY_POINTS[name]
+        shapes = ";".join(
+            f"{s.dtype}{list(s.shape)}" for s in spec_fn()
+        )
+        manifest.append(f"{name}: {shapes}")
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for the Pallas kernels in tc_block.py.
+
+These are the correctness reference: pytest (python/tests/) asserts the
+Pallas kernels match these to float tolerance over hypothesis-generated
+inputs, and the Rust integration tests check the AOT artifacts reproduce
+the same numbers end-to-end through PJRT.
+"""
+
+import jax.numpy as jnp
+
+
+def masked_matmul_trace(x, y, m):
+    """sum((x @ y) * m), scalar f32 (as shape [1] to match the kernel)."""
+    return jnp.sum(jnp.dot(x, y) * m).reshape((1,))
+
+
+def masked_matmul_tile(x, y, m):
+    """(x @ y) * m elementwise."""
+    return jnp.dot(x, y) * m
+
+
+def motif_local_counts(tri, deg_u, deg_v, valid):
+    """Stacked per-edge 4-motif local counts; see _motif_kernel."""
+    staru = deg_u - tri - 1.0
+    starv = deg_v - tri - 1.0
+    diamond = tri * (tri - 1.0) * 0.5
+    tailed = tri * (staru + starv)
+    path4 = staru * starv
+    star3 = 0.5 * (staru * (staru - 1.0) + starv * (starv - 1.0))
+    wedge = staru + starv
+    return jnp.stack(
+        [diamond * valid, tailed * valid, path4 * valid, star3 * valid,
+         wedge * valid]
+    )
+
+
+def triangle_count_dense(adj_oriented):
+    """Reference triangle count from a dense oriented adjacency matrix."""
+    u = adj_oriented.astype(jnp.float32)
+    return jnp.sum(jnp.dot(u, u) * u)

@@ -1,0 +1,161 @@
+"""Layer-1 Pallas kernels for dense-tile graph pattern counting.
+
+The combinatorial Sandslash engine (Layer 3, Rust) mines patterns by
+subgraph-tree exploration.  For *counting* problems on dense regions of the
+adjacency matrix, a linear-algebra formulation is far more
+hardware-friendly (cf. KokkosKernels LA-based triangle counting, ref [57]
+of the paper): with an oriented (DAG) adjacency matrix U,
+
+    #triangles = sum( (U @ U) * U )          (elementwise mask, no /6)
+
+and per-edge common-neighbour counts (used by the paper's Local Counting
+optimization, Section 5 / Listing 3) are
+
+    CN = (A @ A) * A        (CN[u,v] = #triangles through edge (u,v))
+
+Both are tile-decomposable: the Rust coordinator streams [B,B] blocks of
+the adjacency matrix and accumulates scalar / tile partial results, which
+lets it skip all-zero tiles (sparsity-aware tiling).
+
+TPU adaptation (DESIGN.md "Hardware Adaptation"): the paper's CPU
+hand-optimized baselines (GAP, PGD) count via sorted-list intersection; on
+a matrix unit the same reduction is a masked matmul.  We tile for VMEM
+with a K-blocked BlockSpec so each grid step holds three tiles in VMEM and
+drives the MXU with a [B,BK]x[BK,B] contraction.  Pallas runs under
+interpret=True here (CPU PJRT cannot execute Mosaic custom-calls); the
+BlockSpec structure is what a real TPU lowering would use.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+# ---------------------------------------------------------------------------
+# masked matmul trace:  out = sum((x @ y) * m)
+# ---------------------------------------------------------------------------
+
+def _mmt_kernel(x_ref, y_ref, m_ref, o_ref):
+    """Grid = (K/BK,): accumulate sum((x_blk @ y_blk) * m) over K blocks.
+
+    The mask multiply distributes over the K-sum:
+        sum_ij m_ij * sum_k x_ik y_kj = sum_k sum_ij m_ij * (x_:k @ y_k:)_ij
+    so each K-step masks + reduces its own partial product.  All grid steps
+    map to the same output block; Pallas' sequential-revisit semantics turn
+    o_ref into the running accumulator (no extra VMEM scratch needed).
+    """
+    k = pl.program_id(0)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[0] = jnp.float32(0.0)
+
+    part = jnp.dot(x_ref[...], y_ref[...], preferred_element_type=jnp.float32)
+    o_ref[0] += jnp.sum(part * m_ref[...])
+
+
+def masked_matmul_trace(x, y, m, *, block_k=None):
+    """sum((x @ y) * m) via a Pallas kernel with a K-blocked schedule.
+
+    x: [B, K], y: [K, B], m: [B, B] (f32 0/1 mask).  Returns f32[1].
+    """
+    b, kdim = x.shape
+    bk = block_k or kdim
+    assert kdim % bk == 0, "block_k must divide K"
+    steps = kdim // bk
+    return pl.pallas_call(
+        _mmt_kernel,
+        grid=(steps,),
+        in_specs=[
+            pl.BlockSpec((b, bk), lambda k: (0, k)),
+            pl.BlockSpec((bk, b), lambda k: (k, 0)),
+            pl.BlockSpec((b, b), lambda k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda k: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1,), jnp.float32),
+        interpret=True,
+    )(x, y, m)
+
+
+# ---------------------------------------------------------------------------
+# masked matmul tile:  out = (x @ y) * m    (per-edge common-neighbour counts)
+# ---------------------------------------------------------------------------
+
+def _mmm_kernel(x_ref, y_ref, m_ref, o_ref):
+    k = pl.program_id(0)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    ) * m_ref[...]
+
+
+def masked_matmul_tile(x, y, m, *, block_k=None):
+    """(x @ y) * m via a Pallas kernel.  Returns f32[B, B].
+
+    With x = y = m = adjacency tile row/col blocks, out[u, v] is the number
+    of common neighbours of u and v restricted to the K range — i.e. the
+    per-edge local triangle count tile used by formula-based local counting
+    (paper Section 5, Fig. 6).
+    """
+    b, kdim = x.shape
+    bk = block_k or kdim
+    assert kdim % bk == 0, "block_k must divide K"
+    steps = kdim // bk
+    return pl.pallas_call(
+        _mmm_kernel,
+        grid=(steps,),
+        in_specs=[
+            pl.BlockSpec((b, bk), lambda k: (0, k)),
+            pl.BlockSpec((bk, b), lambda k: (k, 0)),
+            pl.BlockSpec((b, b), lambda k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, b), lambda k: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, b), jnp.float32),
+        interpret=True,
+    )(x, y, m)
+
+
+# ---------------------------------------------------------------------------
+# motif formula kernel: 4-motif local counts from edge statistics
+# ---------------------------------------------------------------------------
+
+def _motif_kernel(tri_ref, du_ref, dv_ref, valid_ref, o_ref):
+    """Vectorized Listing-3 formulas (paper Appendix A), one lane per edge.
+
+    Inputs per edge e=(u,v): local triangle count tri, degrees du/dv and a
+    validity mask (padding lanes contribute 0).  Outputs, stacked on the
+    leading axis: [diamond, tailed_triangle, path4, star3, wedge] local
+    counts.  Diamond uses C(tri,2); wedge uses Eq. (1) of the paper.
+    """
+    tri = tri_ref[...]
+    du = du_ref[...]
+    dv = dv_ref[...]
+    valid = valid_ref[...]
+    staru = du - tri - 1.0
+    starv = dv - tri - 1.0
+    diamond = tri * (tri - 1.0) * 0.5
+    tailed = tri * (staru + starv)
+    path4 = staru * starv
+    star3 = 0.5 * (staru * (staru - 1.0) + starv * (starv - 1.0))
+    wedge = staru + starv
+    o_ref[0, :] = diamond * valid
+    o_ref[1, :] = tailed * valid
+    o_ref[2, :] = path4 * valid
+    o_ref[3, :] = star3 * valid
+    o_ref[4, :] = wedge * valid
+
+
+def motif_local_counts(tri, deg_u, deg_v, valid):
+    """Per-edge 4-motif local counts.  All inputs f32[L]; returns f32[5, L]."""
+    (l,) = tri.shape
+    return pl.pallas_call(
+        _motif_kernel,
+        out_shape=jax.ShapeDtypeStruct((5, l), jnp.float32),
+        interpret=True,
+    )(tri, deg_u, deg_v, valid)

@@ -1,0 +1,65 @@
+"""Layer-2 JAX compute graphs composed from the Layer-1 Pallas kernels.
+
+Each public function here is a fixed-shape jittable computation that
+``aot.py`` lowers to HLO text once at build time.  The Rust coordinator
+(rust/src/runtime) loads the resulting artifacts and calls them on the hot
+path; Python is never imported at runtime.
+
+Tile size: TILE = 128 matches the TPU MXU systolic array edge (128x128)
+and keeps the three-tile working set (3 * 128^2 * 4B = 192 KiB) far inside
+a TensorCore's ~16 MiB VMEM, leaving room for double-buffered HBM->VMEM
+prefetch of the next (x, y) tile pair.  EDGE_LANES = 4096 is a whole
+number of 8x128 vregs for the elementwise motif formula kernel.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import tc_block
+
+TILE = 128
+BLOCK_K = 128
+EDGE_LANES = 4096
+
+
+def tc_tile(x, y, m):
+    """Scalar triangle contribution of one (x, y, m) tile triple.
+
+    With U the DAG-oriented adjacency matrix split into TILE x TILE blocks,
+    sum over all (i, k, j) of tc_tile(U[i,k], U[k,j], U[i,j]) equals the
+    exact triangle count of the graph (no over-count correction needed).
+    """
+    return (tc_block.masked_matmul_trace(x, y, m, block_k=BLOCK_K),)
+
+
+def cn_tile(x, y, m):
+    """Per-edge common-neighbour count tile: (x @ y) * m.
+
+    Accumulated over k-blocks by the Rust caller to produce per-edge local
+    triangle counts for formula-based Local Counting (paper Section 5).
+    """
+    return (tc_block.masked_matmul_tile(x, y, m, block_k=BLOCK_K),)
+
+
+def motif_formulas(tri, deg_u, deg_v, valid):
+    """Batched 4-motif local counts from per-edge statistics.
+
+    Inputs are f32[EDGE_LANES] (padded; `valid` zeroes the padding).
+    Output f32[5, EDGE_LANES]: diamond / tailed-triangle / 4-path / 3-star
+    / wedge local counts per edge (Listing 3 of the paper, vectorized).
+    """
+    return (tc_block.motif_local_counts(tri, deg_u, deg_v, valid),)
+
+
+def tc_tile_spec():
+    t = jax.ShapeDtypeStruct((TILE, TILE), jnp.float32)
+    return (t, t, t)
+
+
+def cn_tile_spec():
+    return tc_tile_spec()
+
+
+def motif_formulas_spec():
+    v = jax.ShapeDtypeStruct((EDGE_LANES,), jnp.float32)
+    return (v, v, v, v)

@@ -1,0 +1,50 @@
+"""L2 model shape checks + AOT lowering round-trip sanity."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+def _tiles(seed=0, density=0.2):
+    rng = np.random.default_rng(seed)
+    t = model.TILE
+    mk = lambda: (rng.random((t, t)) < density).astype(np.float32)
+    return mk(), mk(), mk()
+
+
+def test_tc_tile_shapes_and_value():
+    x, y, m = _tiles()
+    (out,) = model.tc_tile(x, y, m)
+    assert out.shape == (1,)
+    np.testing.assert_allclose(out, ref.masked_matmul_trace(x, y, m), rtol=1e-5)
+
+
+def test_cn_tile_shapes_and_value():
+    x, y, m = _tiles(seed=1)
+    (out,) = model.cn_tile(x, y, m)
+    assert out.shape == (model.TILE, model.TILE)
+    np.testing.assert_allclose(out, ref.masked_matmul_tile(x, y, m), rtol=1e-5)
+
+
+def test_motif_formulas_shape():
+    l = model.EDGE_LANES
+    z = jnp.zeros((l,), jnp.float32)
+    (out,) = model.motif_formulas(z, z, z, z)
+    assert out.shape == (5, l)
+
+
+def test_all_entry_points_lower_to_hlo_text():
+    for name in aot.ENTRY_POINTS:
+        text = aot.lower_entry(name)
+        assert text.startswith("HloModule"), name
+        # entry layout mentions the right arity
+        assert "entry_computation_layout" in text, name
+
+
+def test_specs_match_entry_arity():
+    for name, (fn, spec_fn) in aot.ENTRY_POINTS.items():
+        specs = spec_fn()
+        out = fn(*[jnp.zeros(s.shape, s.dtype) for s in specs])
+        assert isinstance(out, tuple) and len(out) == 1, name

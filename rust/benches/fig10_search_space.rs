@@ -1,0 +1,10 @@
+//! Regenerates paper Fig. 10: number of enumerated embeddings,
+//! Sandslash-Hi vs Sandslash-Lo, for 5-CL and 4-MC.
+use sandslash::coordinator::campaign;
+
+fn main() {
+    let rows = campaign::fig10(&["or-tiny", "fr-tiny"]);
+    println!("{}", campaign::to_markdown(&rows));
+    println!("\nExpected shape (paper): Lo's LG/LC prune the enumeration space by");
+    println!("orders of magnitude (the 'result' column holds the counter).");
+}

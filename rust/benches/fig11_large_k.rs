@@ -1,0 +1,10 @@
+//! Regenerates paper Fig. 11: k-CL on the Friendster-like graph for
+//! k = 4..8 across all systems (log-scale time in the paper).
+use sandslash::coordinator::campaign;
+
+fn main() {
+    let rows = campaign::fig11("fr-tiny", 4..=8);
+    println!("{}", campaign::to_markdown(&rows));
+    println!("\nExpected shape (paper): emulations blow up with k; Sandslash-Lo");
+    println!("tracks (and beats) kClist throughout.");
+}

@@ -1,0 +1,13 @@
+//! Regenerates paper Table 5: TC execution time across systems
+//! (Pangolin-, AutoMine-, Peregrine-like emulations, GAP, Sandslash-Hi)
+//! on the five unlabeled mini datasets.
+use sandslash::coordinator::campaign;
+
+fn main() {
+    let graphs = sandslash::coordinator::datasets::unlabeled_names();
+    let rows = campaign::table5(graphs);
+    println!("{}", campaign::to_markdown(&rows));
+    println!("\nExpected shape (paper): DAG-based systems (Pangolin-like, GAP,");
+    println!("Sandslash-Hi) cluster together; Peregrine-like (no DAG) and");
+    println!("AutoMine-like (no SB, 6x space) trail.");
+}

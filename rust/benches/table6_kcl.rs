@@ -1,0 +1,11 @@
+//! Regenerates paper Table 6: k-CL (k = 4, 5) across systems + kClist +
+//! Sandslash-Lo. Emulation-heavy -> tiny datasets keep the no-DAG
+//! baselines inside bench budget (paper shows them timing out at scale).
+use sandslash::coordinator::campaign;
+
+fn main() {
+    let rows = campaign::table6(&["lj-tiny", "or-tiny", "fr-tiny"], &[4, 5]);
+    println!("{}", campaign::to_markdown(&rows));
+    println!("\nExpected shape (paper): Sandslash-Lo ~ kClist < Sandslash-Hi <<");
+    println!("Peregrine-like ~ Pangolin-like ~ AutoMine-like.");
+}

@@ -1,0 +1,11 @@
+//! Regenerates paper Table 7: k-MC (k = 3, 4) across systems + PGD +
+//! Sandslash-Lo (formula-based local counting).
+use sandslash::coordinator::campaign;
+
+fn main() {
+    let rows = campaign::table7(&["lj-tiny", "or-tiny"], &[3, 4]);
+    println!("{}", campaign::to_markdown(&rows));
+    println!("\nExpected shape (paper): LC makes Sandslash-Lo orders of magnitude");
+    println!("faster than Sandslash-Hi on 4-MC; PGD close behind (no SB);");
+    println!("BFS (Pangolin-like) worst on 4-MC.");
+}

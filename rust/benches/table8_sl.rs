@@ -1,0 +1,10 @@
+//! Regenerates paper Table 8: SL (diamond, 4-cycle) for Pangolin-like,
+//! Peregrine-like (both without MNC) and Sandslash-Hi.
+use sandslash::coordinator::campaign;
+
+fn main() {
+    let rows = campaign::table8(&["lj-tiny", "or-tiny", "fr-tiny"]);
+    println!("{}", campaign::to_markdown(&rows));
+    println!("\nExpected shape (paper): MNC gives Sandslash the edge; the");
+    println!("no-MNC emulations pay a has_edge probe per (candidate, position).");
+}

@@ -1,0 +1,254 @@
+//! System emulations (DESIGN.md §5): run each paper application under
+//! the search strategy + optimization subset of AutoMine, Pangolin and
+//! Peregrine (paper Table 3b), inside one engine so the comparisons in
+//! Tables 5–9 isolate exactly the effects the paper attributes to each
+//! system.
+
+use crate::engine::bfs::bfs_count_motifs;
+use crate::engine::dfs;
+use crate::engine::esu::MotifTable;
+use crate::engine::hooks::NoHooks;
+use crate::engine::{MinerConfig, OptFlags};
+use crate::graph::csr::intersect_count;
+use crate::graph::orientation::{orient, OrientScheme};
+use crate::graph::CsrGraph;
+use crate::pattern::symmetry::automorphism_count;
+use crate::pattern::{library, plan, Pattern};
+use crate::util::pool::parallel_reduce;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum System {
+    SandslashHi,
+    SandslashLo,
+    AutomineLike,
+    PangolinLike,
+    PeregrineLike,
+}
+
+impl System {
+    pub fn name(&self) -> &'static str {
+        match self {
+            System::SandslashHi => "sandslash-hi",
+            System::SandslashLo => "sandslash-lo",
+            System::AutomineLike => "automine-like",
+            System::PangolinLike => "pangolin-like",
+            System::PeregrineLike => "peregrine-like",
+        }
+    }
+
+    pub fn flags(&self) -> OptFlags {
+        match self {
+            System::SandslashHi => OptFlags::hi(),
+            System::SandslashLo => OptFlags::lo(),
+            System::AutomineLike => OptFlags::automine_like(),
+            System::PangolinLike => OptFlags::pangolin_like(),
+            System::PeregrineLike => OptFlags::peregrine_like(),
+        }
+    }
+}
+
+/// TC under each system model.
+pub fn tc(g: &CsrGraph, sys: System, cfg: &MinerConfig) -> u64 {
+    let cfg = MinerConfig { opts: sys.flags(), ..*cfg };
+    match sys {
+        // Hi/Lo and Pangolin use DAG + intersections (Table 3)
+        System::SandslashHi | System::SandslashLo => crate::apps::tc::tc_hi(g, &cfg),
+        System::PangolinLike => {
+            // BFS: materialize the level-1 frontier (all DAG edges), then
+            // a level-2 sweep — same arithmetic, BFS storage behaviour.
+            let dag = orient(g, OrientScheme::Degree);
+            let frontier: Vec<(u32, u32)> = (0..dag.num_vertices() as u32)
+                .flat_map(|v| dag.out_neighbors(v).iter().map(move |&u| (v, u)))
+                .collect();
+            parallel_reduce(
+                frontier.len(),
+                cfg.threads,
+                cfg.chunk,
+                || 0u64,
+                |acc, i| {
+                    let (v, u) = frontier[i];
+                    *acc += intersect_count(dag.out_neighbors(v), dag.out_neighbors(u)) as u64;
+                },
+                |a, b| a + b,
+            )
+        }
+        // Peregrine: on-the-fly SB, no DAG; AutoMine: no SB, divide
+        System::AutomineLike | System::PeregrineLike => {
+            crate::apps::tc::tc_generic(g, &cfg).0
+        }
+    }
+}
+
+/// k-CL under each system model.
+pub fn clique(g: &CsrGraph, k: usize, sys: System, cfg: &MinerConfig) -> u64 {
+    let cfg = MinerConfig { opts: sys.flags(), ..*cfg };
+    match sys {
+        System::SandslashHi => crate::apps::clique::clique_hi(g, k, &cfg).0,
+        System::SandslashLo => crate::apps::clique::clique_lo(g, k, &cfg).0,
+        System::PangolinLike => bfs_cliques(g, k, &cfg),
+        System::AutomineLike => {
+            let pl = plan(&library::clique(k), true, false);
+            let (c, _) = dfs::count(g, &pl, &cfg, &NoHooks);
+            c / automorphism_count(&library::clique(k))
+        }
+        System::PeregrineLike => {
+            let pl = plan(&library::clique(k), true, true);
+            dfs::count(g, &pl, &cfg, &NoHooks).0
+        }
+    }
+}
+
+/// BFS k-clique listing on the DAG (Pangolin's strategy): every level is
+/// fully materialized before the next begins.
+pub fn bfs_cliques(g: &CsrGraph, k: usize, cfg: &MinerConfig) -> u64 {
+    let dag = orient(g, OrientScheme::Degree);
+    // level 2: all DAG edges with their candidate sets
+    let mut level: Vec<Vec<u32>> = Vec::new();
+    for v in 0..dag.num_vertices() as u32 {
+        for &u in dag.out_neighbors(v) {
+            let mut cand = Vec::new();
+            crate::graph::csr::intersect_into(
+                dag.out_neighbors(v),
+                dag.out_neighbors(u),
+                &mut cand,
+            );
+            level.push(cand);
+        }
+    }
+    for _depth in 2..(k - 1) {
+        level = parallel_reduce(
+            level.len(),
+            cfg.threads,
+            cfg.chunk,
+            Vec::new,
+            |out: &mut Vec<Vec<u32>>, i| {
+                let cand = &level[i];
+                for (j, &u) in cand.iter().enumerate() {
+                    let _ = j;
+                    let mut next = Vec::new();
+                    crate::graph::csr::intersect_into(cand, dag.out_neighbors(u), &mut next);
+                    out.push(next);
+                }
+            },
+            |mut a, b| {
+                a.extend(b);
+                a
+            },
+        );
+    }
+    level.iter().map(|c| c.len() as u64).sum()
+}
+
+/// k-MC under each system model; returns counts in all_motifs(k) order.
+pub fn motifs(g: &CsrGraph, k: usize, sys: System, cfg: &MinerConfig) -> Vec<u64> {
+    let cfg = MinerConfig { opts: sys.flags(), ..*cfg };
+    match sys {
+        System::SandslashHi => match k {
+            3 => crate::apps::motif::motif3_hi(g, &cfg).0,
+            4 => crate::apps::motif::motif4_hi(g, &cfg).0,
+            _ => panic!("k-MC supports k in 3..=4"),
+        },
+        System::SandslashLo => match k {
+            3 => crate::apps::motif::motif3_lo(g, &cfg),
+            4 => crate::apps::motif::motif4_lo(g, &cfg),
+            _ => panic!("k-MC supports k in 3..=4"),
+        },
+        System::PangolinLike => {
+            let table = MotifTable::new(k);
+            bfs_count_motifs(g, k, &cfg, &table).counts
+        }
+        // pattern-at-a-time: match each motif separately through the
+        // pattern-guided engine (vertex-induced plans)
+        System::AutomineLike | System::PeregrineLike => {
+            let sb = sys == System::PeregrineLike;
+            library::all_motifs(k)
+                .iter()
+                .map(|p| {
+                    let pl = plan(p, true, sb);
+                    let (c, _) = dfs::count(g, &pl, &cfg, &NoHooks);
+                    if sb {
+                        c
+                    } else {
+                        c / automorphism_count(p)
+                    }
+                })
+                .collect()
+        }
+    }
+}
+
+/// SL under each system model.
+pub fn sl(g: &CsrGraph, p: &Pattern, sys: System, cfg: &MinerConfig) -> u64 {
+    let mut cfg = MinerConfig { opts: sys.flags(), ..*cfg };
+    match sys {
+        System::PangolinLike => {
+            // Pangolin lacks MNC (Table 3b) — pay per-candidate has_edge
+            cfg.opts.mnc = false;
+            crate::apps::sl::sl_count(g, p, &cfg).0
+        }
+        System::PeregrineLike => {
+            // VSB instead of MNC: emulate as MNC off (per-level
+            // recomputation of vertex sets)
+            cfg.opts.mnc = false;
+            crate::apps::sl::sl_count(g, p, &cfg).0
+        }
+        _ => crate::apps::sl::sl_count(g, p, &cfg).0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    fn cfg() -> MinerConfig {
+        MinerConfig { threads: 2, chunk: 16, opts: OptFlags::hi() }
+    }
+
+    const ALL: [System; 5] = [
+        System::SandslashHi,
+        System::SandslashLo,
+        System::AutomineLike,
+        System::PangolinLike,
+        System::PeregrineLike,
+    ];
+
+    #[test]
+    fn all_systems_agree_on_tc() {
+        let g = gen::rmat(8, 6, 4, &[]);
+        let want = crate::apps::tc::tc_hi(&g, &cfg());
+        for s in ALL {
+            assert_eq!(tc(&g, s, &cfg()), want, "{}", s.name());
+        }
+    }
+
+    #[test]
+    fn all_systems_agree_on_cliques() {
+        let g = gen::erdos_renyi(40, 0.25, 6, &[]);
+        for k in [3, 4] {
+            let want = crate::apps::clique::clique_brute(&g, k);
+            for s in ALL {
+                assert_eq!(clique(&g, k, s, &cfg()), want, "{} k={k}", s.name());
+            }
+        }
+    }
+
+    #[test]
+    fn all_systems_agree_on_motifs() {
+        let g = gen::erdos_renyi(35, 0.2, 8, &[]);
+        let want = motifs(&g, 4, System::SandslashHi, &cfg());
+        for s in ALL {
+            assert_eq!(motifs(&g, 4, s, &cfg()), want, "{}", s.name());
+        }
+    }
+
+    #[test]
+    fn all_systems_agree_on_sl() {
+        let g = gen::erdos_renyi(35, 0.2, 10, &[]);
+        let p = crate::pattern::library::diamond();
+        let want = sl(&g, &p, System::SandslashHi, &cfg());
+        for s in [System::SandslashHi, System::PangolinLike, System::PeregrineLike] {
+            assert_eq!(sl(&g, &p, s, &cfg()), want, "{}", s.name());
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! Hand-optimized baselines (faithful reimplementations of published
+//! algorithms) and system emulations (search strategy + optimization
+//! subsets of AutoMine / Pangolin / Peregrine, per DESIGN.md §5).
+
+pub mod emulation;
+pub mod gap_tc;
+pub mod kclist;
+pub mod peregrine_fsm;
+pub mod pgd;

@@ -1,0 +1,258 @@
+//! k-Clique Listing (k-CL).
+//!
+//! * Sandslash-Hi: DAG orientation (degree-based) + per-root DFS where
+//!   the candidate set is the running intersection of out-neighborhoods
+//!   (the set-intersection realization of MNC for cliques).
+//! * Sandslash-Lo: adds the LG optimization — kClist-style search on a
+//!   shrinking local graph built from the core-ordered DAG (paper §5,
+//!   Listing 4). The low-level user code is `initLG`/`updateLG`; the
+//!   engine mechanics live in [`crate::engine::local_graph`].
+
+use crate::engine::local_graph::LocalGraph;
+use crate::engine::MinerConfig;
+use crate::graph::csr::intersect_into;
+use crate::graph::orientation::{orient, Dag, OrientScheme};
+use crate::graph::CsrGraph;
+use crate::util::metrics::SearchStats;
+use crate::util::pool::parallel_reduce;
+
+/// Sandslash-Hi k-CL: DAG + running intersections.
+pub fn clique_hi(g: &CsrGraph, k: usize, cfg: &MinerConfig) -> (u64, SearchStats) {
+    assert!(k >= 3);
+    let dag = orient(g, OrientScheme::Degree);
+    clique_on_dag(g, &dag, k, cfg)
+}
+
+pub fn clique_on_dag(
+    _g: &CsrGraph,
+    dag: &Dag,
+    k: usize,
+    cfg: &MinerConfig,
+) -> (u64, SearchStats) {
+    let n = dag.num_vertices();
+    struct St {
+        count: u64,
+        stats: SearchStats,
+        /// per-level candidate buffers (reused, zero allocation per node)
+        bufs: Vec<Vec<u32>>,
+    }
+    let out = parallel_reduce(
+        n,
+        cfg.threads,
+        cfg.chunk,
+        || St { count: 0, stats: SearchStats::default(), bufs: vec![Vec::new(); k] },
+        |st, v| {
+            let v = v as u32;
+            let out_v = dag.out_neighbors(v);
+            if out_v.len() + 2 < k {
+                return; // DF: cannot reach k
+            }
+            if cfg.opts.stats {
+                st.stats.enumerated += 1;
+            }
+            rec(dag, k, 2, out_v, st, cfg);
+        },
+        |a, b| {
+            let mut stats = a.stats;
+            stats.merge(&b.stats);
+            St { count: a.count + b.count, stats, bufs: a.bufs }
+        },
+    );
+
+    fn rec(dag: &Dag, k: usize, depth: usize, cands: &[u32], st: &mut St, cfg: &MinerConfig) {
+        if depth == k {
+            st.count += cands.len() as u64;
+            if cfg.opts.stats {
+                st.stats.enumerated += cands.len() as u64;
+                st.stats.matches += cands.len() as u64;
+            }
+            return;
+        }
+        // move the buffer out to satisfy the borrow checker, put it back
+        let mut buf = std::mem::take(&mut st.bufs[depth]);
+        for i in 0..cands.len() {
+            let u = cands[i];
+            if cfg.opts.stats {
+                st.stats.enumerated += 1;
+                st.stats.intersections += 1;
+            }
+            buf.clear();
+            intersect_into(cands, dag.out_neighbors(u), &mut buf);
+            if buf.len() + depth + 1 >= k {
+                rec(dag, k, depth + 1, &buf, st, cfg);
+            } else if cfg.opts.stats {
+                st.stats.pruned += 1;
+            }
+        }
+        st.bufs[depth] = buf;
+    }
+
+    (out.count, out.stats)
+}
+
+/// Sandslash-Lo k-CL: core-ordered DAG + local-graph search (kClist).
+/// This is the paper's Listing-4 user code wired to the LG substrate.
+pub fn clique_lo(g: &CsrGraph, k: usize, cfg: &MinerConfig) -> (u64, SearchStats) {
+    assert!(k >= 3);
+    let dag = orient(g, OrientScheme::Core);
+    let n = dag.num_vertices();
+    let max_out = dag.max_out_degree();
+    struct St {
+        count: u64,
+        stats: SearchStats,
+        lg: LocalGraph,
+    }
+    let out = parallel_reduce(
+        n,
+        cfg.threads,
+        cfg.chunk,
+        || St {
+            count: 0,
+            stats: SearchStats::default(),
+            lg: LocalGraph::new(max_out.max(1), k),
+        },
+        |st, v| {
+            let v = v as u32;
+            if dag.out_degree(v) + 2 < k {
+                return;
+            }
+            // initLG: local graph on out(v)
+            let nl = st.lg.init_from_dag(&dag, v);
+            if cfg.opts.stats {
+                st.stats.lg_vertices += nl as u64;
+            }
+            // depth 1: every local vertex is a (v, u) 2-clique
+            for u in 0..nl {
+                visit(k, 1, u, st, cfg);
+            }
+        },
+        |a, b| {
+            let mut stats = a.stats;
+            stats.merge(&b.stats);
+            St { count: a.count + b.count, stats, lg: a.lg }
+        },
+    );
+
+    /// Extend the clique with local vertex `u` at `depth` and recurse
+    /// over u's surviving candidate prefix. Candidates are read in place
+    /// from the local graph (no per-node allocation — §Perf): `u`'s list
+    /// prefix is stable during its own subtree because a DAG vertex is
+    /// never compacted by its own descendants.
+    fn visit(k: usize, depth: usize, u: usize, st: &mut St, cfg: &MinerConfig) {
+        if cfg.opts.stats {
+            st.stats.enumerated += 1;
+        }
+        // embedding after adding u = root + depth locals = depth + 1
+        let deg = st.lg.degree(depth - 1, u) as usize;
+        if depth + 2 == k {
+            // every remaining candidate completes a k-clique
+            st.count += deg as u64;
+            if cfg.opts.stats {
+                st.stats.matches += deg as u64;
+                st.stats.enumerated += deg as u64;
+            }
+            return;
+        }
+        if deg + depth + 1 < k {
+            if cfg.opts.stats {
+                st.stats.pruned += 1;
+            }
+            return;
+        }
+        // updateLG: shrink to the neighbors of u surviving this depth
+        st.lg.shrink(depth, u);
+        for i in 0..deg {
+            let w = st.lg.candidate_at(u, i) as usize;
+            visit(k, depth + 1, w, st, cfg);
+        }
+        st.lg.unshrink(depth, u);
+    }
+
+    (out.count, out.stats)
+}
+
+/// Brute-force oracle.
+pub fn clique_brute(g: &CsrGraph, k: usize) -> u64 {
+    fn rec(g: &CsrGraph, k: usize, emb: &mut Vec<u32>, start: u32, count: &mut u64) {
+        if emb.len() == k {
+            *count += 1;
+            return;
+        }
+        for v in start..g.num_vertices() as u32 {
+            if emb.iter().all(|&u| g.has_edge(u, v)) {
+                emb.push(v);
+                rec(g, k, emb, v + 1, count);
+                emb.pop();
+            }
+        }
+    }
+    let mut c = 0;
+    rec(g, k, &mut Vec::new(), 0, &mut c);
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::OptFlags;
+    use crate::graph::gen;
+
+    fn cfg() -> MinerConfig {
+        MinerConfig { threads: 2, chunk: 16, opts: OptFlags::hi() }
+    }
+
+    #[test]
+    fn k4_in_complete6() {
+        let g = gen::complete(6);
+        assert_eq!(clique_hi(&g, 4, &cfg()).0, 15);
+        assert_eq!(clique_lo(&g, 4, &cfg()).0, 15);
+    }
+
+    #[test]
+    fn k5_in_complete7() {
+        let g = gen::complete(7);
+        assert_eq!(clique_hi(&g, 5, &cfg()).0, 21); // C(7,5)
+        assert_eq!(clique_lo(&g, 5, &cfg()).0, 21);
+    }
+
+    #[test]
+    fn hi_lo_brute_agree_on_random() {
+        for seed in [4, 5] {
+            let g = gen::erdos_renyi(40, 0.3, seed, &[]);
+            for k in 3..=5 {
+                let brute = clique_brute(&g, k);
+                assert_eq!(clique_hi(&g, k, &cfg()).0, brute, "hi k={k}");
+                assert_eq!(clique_lo(&g, k, &cfg()).0, brute, "lo k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn rmat_hi_lo_agree_large_k() {
+        let g = gen::rmat(9, 10, 77, &[]);
+        for k in 4..=7 {
+            assert_eq!(clique_hi(&g, k, &cfg()).0, clique_lo(&g, k, &cfg()).0, "k={k}");
+        }
+    }
+
+    #[test]
+    fn no_cliques_in_sparse_ring() {
+        let g = gen::ring(20);
+        assert_eq!(clique_hi(&g, 3, &cfg()).0, 0);
+        assert_eq!(clique_lo(&g, 4, &cfg()).0, 0);
+    }
+
+    #[test]
+    fn lo_search_space_not_larger_than_hi() {
+        // Fig. 10: the LG path should enumerate no more embeddings.
+        let g = gen::rmat(8, 10, 5, &[]);
+        let mut c = cfg();
+        c.opts = OptFlags::hi().with_stats();
+        let (_, hi_stats) = clique_hi(&g, 5, &c);
+        let mut cl = cfg();
+        cl.opts = OptFlags::lo().with_stats();
+        let (_, lo_stats) = clique_lo(&g, 5, &cl);
+        assert!(lo_stats.enumerated <= hi_stats.enumerated * 2,
+            "lo={} hi={}", lo_stats.enumerated, hi_stats.enumerated);
+    }
+}

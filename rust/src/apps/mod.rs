@@ -1,0 +1,174 @@
+//! The five paper applications (TC, k-CL, SL, k-MC, k-FSM), their
+//! hand-optimized baselines, and the high-level `solve` facade that turns
+//! a [`ProblemSpec`] into an answer — the dispatch table of paper §4.3.
+
+pub mod baselines;
+pub mod clique;
+pub mod fsm_app;
+pub mod motif;
+pub mod sl;
+pub mod tc;
+
+use crate::engine::{MinerConfig, ProblemSpec};
+use crate::graph::CsrGraph;
+use crate::pattern::library;
+
+/// What a solved GPM problem returns.
+#[derive(Debug)]
+pub enum MiningOutput {
+    /// Single-pattern count.
+    Count(u64),
+    /// Multi-pattern counts with human-readable names.
+    PerPattern(Vec<(String, u64)>),
+    /// Frequent patterns with their supports.
+    Frequent(Vec<(String, u64)>),
+    /// Materialized embeddings (listing problems on request).
+    Listing(Vec<Vec<u32>>),
+}
+
+/// High-level entry point: analyze the spec and run the right engine
+/// with the right optimizations (the automation the paper's high-level
+/// API promises).
+pub fn solve(g: &CsrGraph, spec: &ProblemSpec, cfg: &MinerConfig) -> MiningOutput {
+    if let Some(sigma) = spec.min_support {
+        // implicit-pattern, edge-induced, anti-monotonic support: FSM
+        let r = fsm_app::fsm(g, spec.k, sigma, cfg);
+        return MiningOutput::Frequent(
+            r.frequent
+                .into_iter()
+                .map(|f| (format!("{}", f.pattern), f.support))
+                .collect(),
+        );
+    }
+    if !spec.explicit {
+        // implicit vertex-induced: motif counting
+        let counts = match spec.k {
+            3 => motif::motif3_hi(g, cfg).0,
+            4 => motif::motif4_hi(g, cfg).0,
+            k => {
+                let table = crate::engine::esu::MotifTable::new(k);
+                crate::engine::esu::count_motifs(
+                    g,
+                    k,
+                    cfg,
+                    &crate::engine::hooks::NoHooks,
+                    &table,
+                )
+                .0
+            }
+        };
+        let names: Vec<String> = match spec.k {
+            3 => library::MOTIF3_NAMES.iter().map(|s| s.to_string()).collect(),
+            4 => library::MOTIF4_NAMES.iter().map(|s| s.to_string()).collect(),
+            k => (0..counts.len()).map(|i| format!("motif{k}-{i}")).collect(),
+        };
+        return MiningOutput::PerPattern(names.into_iter().zip(counts).collect());
+    }
+    // explicit pattern(s)
+    if spec.patterns.len() == 1 {
+        let p = &spec.patterns[0];
+        if p.is_clique() && spec.vertex_induced {
+            if p.num_vertices() == 3 {
+                return MiningOutput::Count(tc::tc_hi(g, cfg));
+            }
+            // DAG decision (§4.3): cliques get orientation; LG when Lo
+            let (c, _) = if cfg.opts.lg {
+                clique::clique_lo(g, p.num_vertices(), cfg)
+            } else {
+                clique::clique_hi(g, p.num_vertices(), cfg)
+            };
+            return MiningOutput::Count(c);
+        }
+        if spec.listing && !spec.vertex_induced {
+            let (c, _) = sl::sl_count(g, p, cfg);
+            return MiningOutput::Count(c);
+        }
+        let pl = crate::pattern::plan(p, spec.vertex_induced, cfg.opts.sb);
+        let (c, _) = crate::engine::dfs::count(g, &pl, cfg, &crate::engine::hooks::NoHooks);
+        let c = if cfg.opts.sb {
+            c
+        } else {
+            c / crate::pattern::symmetry::automorphism_count(p)
+        };
+        return MiningOutput::Count(c);
+    }
+    // multiple explicit patterns: count each
+    MiningOutput::PerPattern(
+        spec.patterns
+            .iter()
+            .map(|p| {
+                let pl = crate::pattern::plan(p, spec.vertex_induced, true);
+                let (c, _) =
+                    crate::engine::dfs::count(g, &pl, cfg, &crate::engine::hooks::NoHooks);
+                (format!("{p}"), c)
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::OptFlags;
+    use crate::graph::gen;
+
+    fn cfg() -> MinerConfig {
+        MinerConfig { threads: 2, chunk: 16, opts: OptFlags::hi() }
+    }
+
+    #[test]
+    fn solve_tc_spec() {
+        let g = gen::complete(5);
+        match solve(&g, &ProblemSpec::tc(), &cfg()) {
+            MiningOutput::Count(c) => assert_eq!(c, 10),
+            other => panic!("unexpected output {other:?}"),
+        }
+    }
+
+    #[test]
+    fn solve_clique_spec_hi_and_lo() {
+        let g = gen::erdos_renyi(30, 0.3, 4, &[]);
+        let want = clique::clique_brute(&g, 4);
+        for opts in [OptFlags::hi(), OptFlags::lo()] {
+            let c = MinerConfig { opts, ..cfg() };
+            match solve(&g, &ProblemSpec::clique_listing(4), &c) {
+                MiningOutput::Count(got) => assert_eq!(got, want),
+                other => panic!("unexpected output {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn solve_motif_spec() {
+        let g = gen::ring(8);
+        match solve(&g, &ProblemSpec::motif_counting(3), &cfg()) {
+            MiningOutput::PerPattern(rows) => {
+                assert_eq!(rows[0], ("wedge".to_string(), 8));
+                assert_eq!(rows[1], ("triangle".to_string(), 0));
+            }
+            other => panic!("unexpected output {other:?}"),
+        }
+    }
+
+    #[test]
+    fn solve_sl_spec() {
+        let g = gen::complete(4);
+        let spec = ProblemSpec::subgraph_listing(crate::pattern::library::diamond());
+        match solve(&g, &spec, &cfg()) {
+            MiningOutput::Count(c) => assert_eq!(c, 6),
+            other => panic!("unexpected output {other:?}"),
+        }
+    }
+
+    #[test]
+    fn solve_fsm_spec() {
+        let g = gen::erdos_renyi(40, 0.15, 21, &[1, 2]);
+        match solve(&g, &ProblemSpec::fsm(2, 2), &cfg()) {
+            MiningOutput::Frequent(rows) => {
+                assert!(!rows.is_empty());
+                assert!(rows.iter().all(|(_, s)| *s > 2));
+            }
+            other => panic!("unexpected output {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,173 @@
+//! k-Motif Counting (k-MC), k = 3, 4.
+//!
+//! * Sandslash-Hi: pattern-oblivious exact-once enumeration (ESU engine)
+//!   with MEC+MNC, classifying leaves by connectivity codes.
+//! * Sandslash-Lo: formula-based Local Counting (paper §5, Listings 2–3;
+//!   PGD [3]): enumerate only the cheap anchor patterns (triangles for
+//!   3-MC; 4-cliques and induced 4-cycles for 4-MC), derive everything
+//!   else from per-edge/per-vertex local counts, then convert raw counts
+//!   to induced counts with the standard correction identities.
+
+use crate::engine::esu::{count_motifs, MotifTable};
+use crate::engine::hooks::NoHooks;
+use crate::engine::MinerConfig;
+use crate::graph::CsrGraph;
+use crate::pattern::{library, plan};
+use crate::util::metrics::SearchStats;
+use crate::util::pool::parallel_reduce;
+
+use super::clique::clique_hi;
+use super::tc::tc_hi;
+
+/// 3-motif counts, Hi path: [wedge, triangle] (all_motifs(3) order).
+pub fn motif3_hi(g: &CsrGraph, cfg: &MinerConfig) -> (Vec<u64>, SearchStats) {
+    let table = MotifTable::new(3);
+    count_motifs(g, 3, cfg, &NoHooks, &table)
+}
+
+/// 4-motif counts, Hi path (all_motifs(4) order:
+/// [3-star, 4-path, tailed-triangle, 4-cycle, diamond, 4-clique]).
+pub fn motif4_hi(g: &CsrGraph, cfg: &MinerConfig) -> (Vec<u64>, SearchStats) {
+    let table = MotifTable::new(4);
+    count_motifs(g, 4, cfg, &NoHooks, &table)
+}
+
+/// 3-MC-Lo (paper Listing 2): triangles by enumeration, wedges by the
+/// per-vertex formula Σ_v C(deg v, 2) − 3T.
+pub fn motif3_lo(g: &CsrGraph, cfg: &MinerConfig) -> Vec<u64> {
+    let t = tc_hi(g, cfg);
+    let paths2: u64 = parallel_reduce(
+        g.num_vertices(),
+        cfg.threads,
+        cfg.chunk,
+        || 0u64,
+        |acc, v| {
+            let d = g.degree(v as u32) as u64;
+            *acc += d.saturating_sub(1) * d / 2; // localReduce at depth 0
+        },
+        |a, b| a + b,
+    );
+    vec![paths2 - 3 * t, t]
+}
+
+/// Per-edge raw local counts for the 4-motif formulas: returns
+/// (Σ C(tri_e,2), Σ tri_e(s_u+s_v), Σ s_u·s_v) — the body of Listing 3.
+pub fn edge_raw_counts(g: &CsrGraph, cfg: &MinerConfig) -> (u64, u64, u64) {
+    let edges: Vec<(u32, u32)> = g.edges().collect();
+    parallel_reduce(
+        edges.len(),
+        cfg.threads,
+        cfg.chunk,
+        || (0u64, 0u64, 0u64),
+        |acc, i| {
+            let (u, v) = edges[i];
+            let tri = g.intersect_count(u, v) as u64;
+            let su = g.degree(u) as u64 - tri - 1;
+            let sv = g.degree(v) as u64 - tri - 1;
+            acc.0 += tri.saturating_sub(1) * tri / 2;
+            acc.1 += tri * (su + sv);
+            acc.2 += su * sv;
+        },
+        |a, b| (a.0 + b.0, a.1 + b.1, a.2 + b.2),
+    )
+}
+
+/// 4-MC-Lo (paper Listing 3 + PGD conversions): enumerate 4-cliques and
+/// induced 4-cycles only; derive diamond / tailed-triangle / 4-path /
+/// 3-star from local counts:
+///
+/// ```text
+/// D  = Σ_e C(tri_e,2) − 6·C4
+/// TT = (Σ_e tri_e(s_u+s_v) − 4·D) / 2
+/// P4 = Σ_e s_u·s_v − 4·Cy
+/// S3 = Σ_v C(deg v,3) − TT − 2·D − 4·C4
+/// ```
+pub fn motif4_lo(g: &CsrGraph, cfg: &MinerConfig) -> Vec<u64> {
+    // anchors: the two enumerated patterns of Listing 3
+    let (c4, _) = clique_hi(g, 4, cfg);
+    let cyc_plan = plan(&library::cycle(4), true, true);
+    let (cy, _) = crate::engine::dfs::count(g, &cyc_plan, cfg, &NoHooks);
+    // local counts
+    let (raw_d, raw_tt, raw_p4) = edge_raw_counts(g, cfg);
+    let raw_s3: u64 = parallel_reduce(
+        g.num_vertices(),
+        cfg.threads,
+        cfg.chunk,
+        || 0u64,
+        |acc, v| {
+            let d = g.degree(v as u32) as u64;
+            if d >= 3 {
+                *acc += d * (d - 1) * (d - 2) / 6;
+            }
+        },
+        |a, b| a + b,
+    );
+    // conversions to induced counts
+    let d = raw_d - 6 * c4;
+    let tt = (raw_tt - 4 * d) / 2;
+    let p4 = raw_p4 - 4 * cy;
+    let s3 = raw_s3 - tt - 2 * d - 4 * c4;
+    vec![s3, p4, tt, cy, d, c4]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::OptFlags;
+    use crate::graph::gen;
+
+    fn cfg() -> MinerConfig {
+        MinerConfig { threads: 2, chunk: 16, opts: OptFlags::hi() }
+    }
+
+    #[test]
+    fn lo3_matches_hi3() {
+        for seed in [1, 2] {
+            let g = gen::erdos_renyi(80, 0.1, seed, &[]);
+            let (hi, _) = motif3_hi(&g, &cfg());
+            let lo = motif3_lo(&g, &cfg());
+            assert_eq!(hi, lo, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn lo4_matches_hi4_er() {
+        for seed in [3, 4] {
+            let g = gen::erdos_renyi(50, 0.15, seed, &[]);
+            let (hi, _) = motif4_hi(&g, &cfg());
+            let lo = motif4_lo(&g, &cfg());
+            assert_eq!(hi, lo, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn lo4_matches_hi4_rmat() {
+        let g = gen::rmat(8, 5, 6, &[]);
+        let (hi, _) = motif4_hi(&g, &cfg());
+        let lo = motif4_lo(&g, &cfg());
+        assert_eq!(hi, lo);
+    }
+
+    #[test]
+    fn complete_graph_4motifs() {
+        let g = gen::complete(6);
+        let lo = motif4_lo(&g, &cfg());
+        assert_eq!(lo, vec![0, 0, 0, 0, 0, 15]);
+    }
+
+    #[test]
+    fn ring_4motifs() {
+        let g = gen::ring(12);
+        let lo = motif4_lo(&g, &cfg());
+        // 12 paths, nothing else
+        assert_eq!(lo, vec![0, 12, 0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn motif3_total_is_connected_triples() {
+        let g = gen::erdos_renyi(40, 0.2, 8, &[]);
+        let (hi, _) = motif3_hi(&g, &cfg());
+        let lo = motif3_lo(&g, &cfg());
+        assert_eq!(hi.iter().sum::<u64>(), lo.iter().sum::<u64>());
+    }
+}

@@ -1,0 +1,6 @@
+//! Coordinator: dataset registry and experiment campaign driver (the
+//! part of the framework that regenerates every table and figure of the
+//! paper's evaluation from one command).
+
+pub mod campaign;
+pub mod datasets;

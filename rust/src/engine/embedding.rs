@@ -1,0 +1,153 @@
+//! Embedding state for DFS exploration, with Memoization of Embedding
+//! Connectivity (MEC): each embedding vertex carries its *connectivity
+//! code* — a bit-vector over earlier positions it is adjacent to (paper
+//! Fig. 4 / Fig. 13). Codes are pushed and popped with the DFS so leaf
+//! classification never re-touches the input graph.
+
+use crate::graph::{CsrGraph, VertexId};
+use crate::pattern::Pattern;
+
+#[derive(Debug, Default, Clone)]
+pub struct Embedding {
+    verts: Vec<VertexId>,
+    codes: Vec<u32>,
+}
+
+impl Embedding {
+    pub fn with_capacity(k: usize) -> Self {
+        Self { verts: Vec::with_capacity(k), codes: Vec::with_capacity(k) }
+    }
+
+    #[inline]
+    pub fn push(&mut self, v: VertexId, code: u32) {
+        self.verts.push(v);
+        self.codes.push(code);
+    }
+
+    #[inline]
+    pub fn pop(&mut self) {
+        self.verts.pop();
+        self.codes.pop();
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.verts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.verts.is_empty()
+    }
+
+    #[inline]
+    pub fn verts(&self) -> &[VertexId] {
+        &self.verts
+    }
+
+    #[inline]
+    pub fn codes(&self) -> &[u32] {
+        &self.codes
+    }
+
+    #[inline]
+    pub fn vertex(&self, pos: usize) -> VertexId {
+        self.verts[pos]
+    }
+
+    #[inline]
+    pub fn contains(&self, v: VertexId) -> bool {
+        self.verts.contains(&v)
+    }
+
+    /// Recompute the connectivity code of `v` against the current
+    /// embedding from the input graph (the MEC-off path).
+    pub fn compute_code(&self, g: &CsrGraph, v: VertexId) -> u32 {
+        let mut code = 0u32;
+        for (i, &u) in self.verts.iter().enumerate() {
+            if g.has_edge(u, v) {
+                code |= 1 << i;
+            }
+        }
+        code
+    }
+}
+
+/// Pack per-position connectivity codes into a single integer key.
+/// Position i contributes i bits (position 0 has none), so a k-vertex
+/// embedding packs into k(k-1)/2 bits — 10 bits for k = 5.
+#[inline]
+pub fn pack_codes(codes: &[u32]) -> u64 {
+    let mut key = 0u64;
+    let mut shift = 0u32;
+    for (i, &c) in codes.iter().enumerate().skip(1) {
+        key |= ((c as u64) & ((1 << i) - 1)) << shift;
+        shift += i as u32;
+    }
+    key
+}
+
+/// Rebuild the pattern structure of an embedding from packed codes
+/// (paper Fig. 13: "with this code we can rebuild the exact structure").
+pub fn pattern_from_packed(k: usize, key: u64) -> Pattern {
+    let mut p = Pattern::new(k);
+    let mut shift = 0u32;
+    for i in 1..k {
+        let code = (key >> shift) & ((1 << i) - 1);
+        for j in 0..i {
+            if code >> j & 1 == 1 {
+                p.add_edge(j, i);
+            }
+        }
+        shift += i as u32;
+    }
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+    use crate::pattern::{canonical_code, library};
+
+    #[test]
+    fn push_pop_tracks_codes() {
+        let mut e = Embedding::with_capacity(3);
+        e.push(10, 0);
+        e.push(20, 0b1);
+        e.push(30, 0b11);
+        assert_eq!(e.len(), 3);
+        assert_eq!(e.codes(), &[0, 0b1, 0b11]);
+        e.pop();
+        assert_eq!(e.len(), 2);
+    }
+
+    #[test]
+    fn compute_code_matches_graph() {
+        // diamond: 0-1, 0-2, 1-2, 1-3, 2-3
+        let g = GraphBuilder::from_edges(4, &[(0, 1), (0, 2), (1, 2), (1, 3), (2, 3)]).build();
+        let mut e = Embedding::with_capacity(4);
+        e.push(0, 0);
+        e.push(1, 0b1);
+        e.push(2, 0b11);
+        // vertex 3 adjacent to 1 (pos 1) and 2 (pos 2), not 0 (pos 0)
+        assert_eq!(e.compute_code(&g, 3), 0b110);
+    }
+
+    #[test]
+    fn fig13_roundtrip() {
+        // Paper Fig. 13: embedding code {1,1,1,1,0,1} rebuilds the
+        // structure. Here: codes per position [., 1, 11, 101].
+        let codes = [0u32, 0b1, 0b11, 0b101];
+        let key = pack_codes(&codes);
+        let p = pattern_from_packed(4, key);
+        assert!(p.has_edge(0, 1) && p.has_edge(0, 2) && p.has_edge(1, 2));
+        assert!(p.has_edge(0, 3) && p.has_edge(2, 3) && !p.has_edge(1, 3));
+    }
+
+    #[test]
+    fn packed_triangle_is_triangle() {
+        let key = pack_codes(&[0, 0b1, 0b11]);
+        let p = pattern_from_packed(3, key);
+        assert_eq!(canonical_code(&p), canonical_code(&library::triangle()));
+    }
+}

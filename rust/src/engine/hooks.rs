@@ -1,0 +1,79 @@
+//! The Sandslash low-level API (paper Listing 1).
+//!
+//! Users customize the mining process by implementing this trait; every
+//! method has a pass-through default so a "no-op hooks" implementation
+//! costs nothing (the engines are generic over `H: LowLevelApi`, so the
+//! defaults inline away — no virtual dispatch on the hot path).
+//!
+//! Mapping to the paper's API:
+//! * `to_extend(emb, pos)`      — Listing 1 line 1
+//! * `to_add(g, emb, u, level)` — Listing 1 line 2 (vertex extension)
+//! * `get_pattern(codes)`       — Listing 1 line 4 (CP optimization)
+//! * `local_reduce(...)`        — Listing 1 line 5 (LC optimization)
+//! * local-graph search (`initLG`/`updateLG`, lines 6–8) is provided by
+//!   [`crate::engine::local_graph::LocalGraph`], which the k-CL-Lo app
+//!   drives exactly as in the paper's Listing 4.
+
+use crate::graph::{CsrGraph, VertexId};
+
+pub trait LowLevelApi: Sync {
+    /// Should the embedding vertex at `pos` be extended? (FP)
+    #[inline]
+    fn to_extend(&self, _emb: &[VertexId], _pos: usize) -> bool {
+        true
+    }
+
+    /// May the embedding be extended with vertex `u` at `level`? (FP)
+    #[inline]
+    fn to_add(&self, _g: &CsrGraph, _emb: &[VertexId], _u: VertexId, _level: usize) -> bool {
+        true
+    }
+
+    /// Classify the pattern of a full embedding from its packed
+    /// connectivity codes; return a pattern id. (CP) `None` = use the
+    /// system's canonical classification.
+    #[inline]
+    fn get_pattern(&self, _packed_codes: u64) -> Option<usize> {
+        None
+    }
+
+    /// Accumulate formula-based local counts at `depth`. (LC)
+    #[inline]
+    fn local_reduce(&self, _g: &CsrGraph, _depth: usize, _emb: &[VertexId], _supports: &mut [i64]) {
+    }
+}
+
+/// The high-level path: no customization.
+#[derive(Default, Clone, Copy)]
+pub struct NoHooks;
+
+impl LowLevelApi for NoHooks {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct OnlyEven;
+    impl LowLevelApi for OnlyEven {
+        fn to_add(&self, _g: &CsrGraph, _emb: &[VertexId], u: VertexId, _l: usize) -> bool {
+            u % 2 == 0
+        }
+    }
+
+    #[test]
+    fn defaults_pass_through() {
+        let g = crate::graph::gen::ring(4);
+        let h = NoHooks;
+        assert!(h.to_extend(&[0], 0));
+        assert!(h.to_add(&g, &[0], 1, 1));
+        assert_eq!(h.get_pattern(0), None);
+    }
+
+    #[test]
+    fn custom_hook_overrides() {
+        let g = crate::graph::gen::ring(4);
+        let h = OnlyEven;
+        assert!(h.to_add(&g, &[], 2, 0));
+        assert!(!h.to_add(&g, &[], 3, 0));
+    }
+}

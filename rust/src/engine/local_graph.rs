@@ -1,0 +1,241 @@
+//! Search on Local Graphs (paper §5 "LG", Listing 4; kClist [16]).
+//!
+//! For k-CL, every extension vertex must be adjacent to *all* embedding
+//! vertices, so instead of scanning global neighbor lists the search
+//! materializes the subgraph induced by the out-neighborhood of the root
+//! and then *shrinks* it level by level: at depth d only vertices that
+//! survived depth d-1 and are adjacent to the newly chosen vertex remain.
+//!
+//! Representation follows kClist: one adjacency array shared across
+//! depths with *per-depth degrees* — `updateLG` just swaps surviving
+//! neighbors to the front of each list and records the new degree, so
+//! push/pop is O(touched edges) with zero allocation (exactly the
+//! mechanics of the paper's Listing 4).
+
+use crate::graph::orientation::Dag;
+use crate::graph::VertexId;
+
+pub struct LocalGraph {
+    /// Local-id adjacency, flat; lists mutate in place across depths.
+    adj: Vec<u32>,
+    offsets: Vec<u32>,
+    /// deg[depth][v_local]
+    deg: Vec<Vec<u32>>,
+    /// label[v_local] = deepest level at which the vertex is still alive.
+    alive: Vec<u32>,
+    /// Map local id -> global vertex.
+    globals: Vec<VertexId>,
+    num_local: usize,
+    max_depth: usize,
+}
+
+impl LocalGraph {
+    pub fn new(max_vertices: usize, max_depth: usize) -> Self {
+        Self {
+            adj: Vec::new(),
+            offsets: vec![0; max_vertices + 1],
+            deg: vec![vec![0; max_vertices]; max_depth + 1],
+            alive: vec![0; max_vertices],
+            globals: vec![0; max_vertices],
+            num_local: 0,
+            max_depth,
+        }
+    }
+
+    /// `initLG`: build the local graph induced by the out-neighborhood of
+    /// `root` in the DAG (vertices = out(root); edges = DAG edges among
+    /// them). Returns the number of local vertices.
+    pub fn init_from_dag(&mut self, dag: &Dag, root: VertexId) -> usize {
+        let nbrs = dag.out_neighbors(root);
+        let n = nbrs.len();
+        self.num_local = n;
+        if self.deg[0].len() < n {
+            for d in &mut self.deg {
+                d.resize(n, 0);
+            }
+            self.alive.resize(n, 0);
+            self.globals.resize(n, 0);
+            self.offsets.resize(n + 1, 0);
+        }
+        self.globals[..n].copy_from_slice(nbrs);
+        for a in self.alive[..n].iter_mut() {
+            *a = 0;
+        }
+        // adjacency among locals: intersect out(u) with nbrs
+        self.adj.clear();
+        self.offsets[0] = 0;
+        for (i, &u) in nbrs.iter().enumerate() {
+            let mut d = 0u32;
+            let (mut a, mut b) = (0usize, 0usize);
+            let out_u = dag.out_neighbors(u);
+            while a < out_u.len() && b < n {
+                let (x, y) = (out_u[a], nbrs[b]);
+                if x == y {
+                    self.adj.push(b as u32); // local id of the target
+                    d += 1;
+                    a += 1;
+                    b += 1;
+                } else if x < y {
+                    a += 1;
+                } else {
+                    b += 1;
+                }
+            }
+            self.deg[0][i] = d;
+            self.offsets[i + 1] = self.adj.len() as u32;
+        }
+        n
+    }
+
+    pub fn num_vertices(&self) -> usize {
+        self.num_local
+    }
+
+    pub fn global(&self, local: usize) -> VertexId {
+        self.globals[local]
+    }
+
+    #[inline]
+    pub fn degree(&self, depth: usize, local: usize) -> u32 {
+        self.deg[depth][local]
+    }
+
+    #[inline]
+    pub fn adj(&self, depth: usize, local: usize) -> &[u32] {
+        let s = self.offsets[local] as usize;
+        &self.adj[s..s + self.deg[depth][local] as usize]
+    }
+
+    #[inline]
+    pub fn is_alive(&self, depth: usize, local: usize) -> bool {
+        self.alive[local] >= depth as u32
+    }
+
+    /// `updateLG`: descend to `depth`, keeping only vertices adjacent to
+    /// `chosen` (local id) that are alive at depth-1. For every survivor,
+    /// compact its depth-(d-1) adjacency list in place so the first
+    /// `deg[d]` entries are the surviving neighbors (Listing 4's
+    /// swap-to-tail loop).
+    pub fn shrink(&mut self, depth: usize, chosen: usize) -> u32 {
+        debug_assert!(depth <= self.max_depth);
+        // Survivors are chosen's depth-1 list prefix. Iterating it by
+        // index is safe: compaction below only touches survivors' lists,
+        // and `chosen` is never its own DAG-descendant, so chosen's range
+        // is left untouched (no allocation needed — §Perf: the original
+        // `to_vec` here cost ~2x on the k-CL hot path).
+        let c_start = self.offsets[chosen] as usize;
+        let n_surv = self.deg[depth - 1][chosen] as usize;
+        for i in 0..n_surv {
+            let v = self.adj[c_start + i] as usize;
+            self.alive[v] = depth as u32;
+        }
+        for i in 0..n_surv {
+            let v = self.adj[c_start + i] as usize;
+            let start = self.offsets[v] as usize;
+            let old_deg = self.deg[depth - 1][v] as usize;
+            let mut keep = 0usize;
+            for j in 0..old_deg {
+                let w = self.adj[start + j];
+                if self.alive[w as usize] >= depth as u32 {
+                    self.adj.swap(start + keep, start + j);
+                    keep += 1;
+                }
+            }
+            self.deg[depth][v] = keep as u32;
+        }
+        n_surv as u32
+    }
+
+    /// Undo `shrink` at `depth` (drop survivor markings). Adjacency
+    /// permutations don't need undoing: list *prefixes* per depth remain
+    /// valid because deeper compactions only permute within the prefix of
+    /// shallower depths.
+    pub fn unshrink(&mut self, depth: usize, chosen: usize) {
+        let s = self.offsets[chosen] as usize;
+        let d = self.deg[depth - 1][chosen] as usize;
+        for i in 0..d {
+            let v = self.adj[s + i] as usize;
+            if self.alive[v] >= depth as u32 {
+                self.alive[v] = depth as u32 - 1;
+            }
+        }
+    }
+
+    /// Survivor local-ids at `depth` reachable from `chosen`'s list at
+    /// depth-1 (the candidate set for the next level).
+    pub fn candidates(&self, depth: usize, chosen: usize) -> &[u32] {
+        let s = self.offsets[chosen] as usize;
+        &self.adj[s..s + self.deg[depth - 1][chosen] as usize]
+    }
+
+    /// In-place candidate access (no slice borrow held across recursion).
+    #[inline]
+    pub fn candidate_at(&self, chosen: usize, i: usize) -> u32 {
+        self.adj[self.offsets[chosen] as usize + i]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::graph::orientation::{orient, OrientScheme};
+
+    #[test]
+    fn init_builds_neighborhood_subgraph() {
+        let g = gen::complete(5);
+        let dag = orient(&g, OrientScheme::Degree);
+        let mut lg = LocalGraph::new(8, 5);
+        // root = rank-0 vertex: its out-neighborhood is the other 4
+        let root = (0..5u32).find(|&v| dag.out_degree(v) == 4).unwrap();
+        let n = lg.init_from_dag(&dag, root);
+        assert_eq!(n, 4);
+        // local graph of K5's neighborhood is the DAG on K4: degrees 3,2,1,0
+        let mut degs: Vec<u32> = (0..4).map(|v| lg.degree(0, v)).collect();
+        degs.sort_unstable();
+        assert_eq!(degs, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn shrink_keeps_only_common_neighbors() {
+        let g = gen::complete(5);
+        let dag = orient(&g, OrientScheme::Core);
+        let mut lg = LocalGraph::new(8, 5);
+        let root = (0..5u32).find(|&v| dag.out_degree(v) == 4).unwrap();
+        lg.init_from_dag(&dag, root);
+        // choose the local vertex with max local out-degree (3)
+        let chosen = (0..4).max_by_key(|&v| lg.degree(0, v)).unwrap();
+        let survivors = lg.shrink(1, chosen);
+        assert_eq!(survivors, 3);
+        lg.unshrink(1, chosen);
+    }
+
+    #[test]
+    fn shrink_unshrink_restores_depth0_view() {
+        let g = gen::rmat(7, 8, 2, &[]);
+        let dag = orient(&g, OrientScheme::Core);
+        let mut lg = LocalGraph::new(g.max_degree() + 1, 6);
+        for root in 0..g.num_vertices() as u32 {
+            if dag.out_degree(root) < 2 {
+                continue;
+            }
+            let n = lg.init_from_dag(&dag, root);
+            let before: Vec<Vec<u32>> = (0..n)
+                .map(|v| {
+                    let mut a = lg.adj(0, v).to_vec();
+                    a.sort_unstable();
+                    a
+                })
+                .collect();
+            let chosen = (0..n).max_by_key(|&v| lg.degree(0, v)).unwrap();
+            lg.shrink(1, chosen);
+            lg.unshrink(1, chosen);
+            for v in 0..n {
+                let mut a = lg.adj(0, v).to_vec();
+                a.sort_unstable();
+                assert_eq!(a, before[v], "root {root} local {v}");
+            }
+            break;
+        }
+    }
+}

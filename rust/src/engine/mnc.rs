@@ -1,0 +1,174 @@
+//! Memoization of Neighborhood Connectivity (paper §4.3, Fig. 5).
+//!
+//! A thread-private map from data-vertex id to a bit-vector of embedding
+//! positions it is adjacent to. Maintained incrementally on DFS
+//! push/pop; a single lookup then answers "which embedding vertices is
+//! candidate u connected to?" replacing one `has_edge` binary search per
+//! (candidate, position) pair.
+//!
+//! Implemented as open-addressing with linear probing over power-of-two
+//! capacity (std `HashMap`'s SipHash is too slow for this hot loop —
+//! measured in the §Perf pass).
+
+use crate::graph::VertexId;
+
+const EMPTY: u32 = u32::MAX;
+
+pub struct ConnectivityMap {
+    keys: Vec<u32>,
+    vals: Vec<u32>,
+    mask: usize,
+    len: usize,
+}
+
+impl ConnectivityMap {
+    /// Capacity should comfortably exceed the max embedding neighborhood
+    /// size (max degree × pattern size); the map grows automatically.
+    pub fn with_capacity(cap: usize) -> Self {
+        let cap = (cap.max(16) * 2).next_power_of_two();
+        Self { keys: vec![EMPTY; cap], vals: vec![0; cap], mask: cap - 1, len: 0 }
+    }
+
+    #[inline]
+    fn slot(&self, key: u32) -> usize {
+        // Fibonacci hashing: good dispersion for near-sequential ids.
+        (key.wrapping_mul(0x9E3779B9) as usize) & self.mask
+    }
+
+    /// OR `bit` into the entry for `key`.
+    #[inline]
+    pub fn or_insert(&mut self, key: VertexId, bit: u32) {
+        if self.len * 4 >= self.keys.len() * 3 {
+            self.grow();
+        }
+        let mut i = self.slot(key);
+        loop {
+            let k = self.keys[i];
+            if k == key {
+                self.vals[i] |= bit;
+                return;
+            }
+            if k == EMPTY {
+                self.keys[i] = key;
+                self.vals[i] = bit;
+                self.len += 1;
+                return;
+            }
+            i = (i + 1) & self.mask;
+        }
+    }
+
+    /// AND-NOT `bit` out of the entry for `key` (no tombstone removal —
+    /// entries with value 0 stay until `clear`; the DFS pops exactly what
+    /// it pushed so stale zero entries are rare and harmless).
+    #[inline]
+    pub fn and_remove(&mut self, key: VertexId, bit: u32) {
+        let mut i = self.slot(key);
+        loop {
+            let k = self.keys[i];
+            if k == key {
+                self.vals[i] &= !bit;
+                return;
+            }
+            if k == EMPTY {
+                return;
+            }
+            i = (i + 1) & self.mask;
+        }
+    }
+
+    /// Positions bit-vector for `key` (0 when absent).
+    #[inline]
+    pub fn get(&self, key: VertexId) -> u32 {
+        let mut i = self.slot(key);
+        loop {
+            let k = self.keys[i];
+            if k == key {
+                return self.vals[i];
+            }
+            if k == EMPTY {
+                return 0;
+            }
+            i = (i + 1) & self.mask;
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.keys.iter_mut().for_each(|k| *k = EMPTY);
+        self.len = 0;
+    }
+
+    fn grow(&mut self) {
+        let old_keys = std::mem::replace(&mut self.keys, vec![EMPTY; (self.mask + 1) * 2]);
+        let old_vals = std::mem::take(&mut self.vals);
+        self.vals = vec![0; self.keys.len()];
+        self.mask = self.keys.len() - 1;
+        self.len = 0;
+        for (k, v) in old_keys.into_iter().zip(old_vals) {
+            if k != EMPTY && v != 0 {
+                let mut i = self.slot(k);
+                loop {
+                    if self.keys[i] == EMPTY {
+                        self.keys[i] = k;
+                        self.vals[i] = v;
+                        self.len += 1;
+                        break;
+                    }
+                    i = (i + 1) & self.mask;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_get_remove_roundtrip() {
+        let mut m = ConnectivityMap::with_capacity(8);
+        m.or_insert(100, 1 << 0);
+        m.or_insert(100, 1 << 2);
+        m.or_insert(7, 1 << 1);
+        assert_eq!(m.get(100), 0b101);
+        assert_eq!(m.get(7), 0b10);
+        assert_eq!(m.get(42), 0);
+        m.and_remove(100, 1 << 0);
+        assert_eq!(m.get(100), 0b100);
+    }
+
+    #[test]
+    fn grows_past_initial_capacity() {
+        let mut m = ConnectivityMap::with_capacity(4);
+        for k in 0..1000u32 {
+            m.or_insert(k, 1);
+        }
+        for k in 0..1000u32 {
+            assert_eq!(m.get(k), 1, "key {k}");
+        }
+    }
+
+    #[test]
+    fn collision_chains_probe_correctly() {
+        let mut m = ConnectivityMap::with_capacity(16);
+        // keys engineered to collide under the multiplier are hard to
+        // construct portably; hammer adjacent ids instead
+        for k in 0..20u32 {
+            m.or_insert(k, 1 << (k % 30));
+        }
+        for k in 0..20u32 {
+            assert_eq!(m.get(k), 1 << (k % 30));
+        }
+    }
+
+    #[test]
+    fn fig5_scenario() {
+        // Paper Fig. 5: v3 adjacent to v0 (position 0) and v2 (position 2).
+        let mut m = ConnectivityMap::with_capacity(8);
+        let v3 = 3u32;
+        m.or_insert(v3, 1 << 0); // when v0 pushed
+        m.or_insert(v3, 1 << 2); // when v2 pushed
+        assert_eq!(m.get(v3), 0b101); // positions {0, 2}
+    }
+}

@@ -1,0 +1,27 @@
+//! The Sandslash mining engines and two-level API.
+//!
+//! * [`spec`] — high-level problem specification (paper Table 1)
+//! * [`hooks`] — low-level API (paper Listing 1)
+//! * [`dfs`] — pattern-guided DFS over matching plans
+//! * [`esu`] — pattern-oblivious exact-once vertex-induced enumeration
+//! * [`bfs`] — level-synchronous engine (Pangolin-like emulation)
+//! * [`fsm`] — sub-pattern-tree DFS for frequent subgraph mining
+//! * [`local_graph`] — kClist-style shrinking local graphs (LG)
+//! * [`embedding`], [`mnc`] — MEC codes and the MNC connectivity map
+//! * [`support`] — count and MNI/domain supports
+//! * [`opts`] — optimization flags and presets (paper Table 3)
+
+pub mod bfs;
+pub mod dfs;
+pub mod embedding;
+pub mod esu;
+pub mod fsm;
+pub mod hooks;
+pub mod local_graph;
+pub mod mnc;
+pub mod opts;
+pub mod spec;
+pub mod support;
+
+pub use opts::{MinerConfig, OptFlags};
+pub use spec::ProblemSpec;

@@ -1,0 +1,101 @@
+//! Optimization flags (paper Table 3) and miner configuration.
+//!
+//! Every table in the evaluation is a sweep over these flags: the system
+//! emulations (DESIGN.md §5) are just preset combinations.
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct OptFlags {
+    /// Symmetry breaking via partial orders (B.1).
+    pub sb: bool,
+    /// Orientation: search the degree/core-ordered DAG (B.2; cliques).
+    pub dag: bool,
+    /// Matching order (B.3; explicit patterns).
+    pub mo: bool,
+    /// Degree filtering.
+    pub df: bool,
+    /// Memoization of neighborhood connectivity (connectivity map).
+    pub mnc: bool,
+    /// Memoization of embedding connectivity (carry codes down the tree).
+    pub mec: bool,
+    /// Low-level: formula-based local counting.
+    pub lc: bool,
+    /// Low-level: search on shrinking local graphs.
+    pub lg: bool,
+    /// Collect search-space statistics (Fig. 10).
+    pub stats: bool,
+}
+
+impl OptFlags {
+    /// Sandslash-Hi: all high-level optimizations (Table 3a left).
+    pub fn hi() -> Self {
+        Self { sb: true, dag: true, mo: true, df: true, mnc: true, mec: true, lc: false, lg: false, stats: false }
+    }
+
+    /// Sandslash-Lo: Hi plus low-level optimizations.
+    pub fn lo() -> Self {
+        Self { lc: true, lg: true, ..Self::hi() }
+    }
+
+    /// Everything off (naive enumeration with only correctness checks).
+    pub fn none() -> Self {
+        Self { sb: true, dag: false, mo: false, df: false, mnc: false, mec: false, lc: false, lg: false, stats: false }
+    }
+
+    /// AutoMine-like: matching order but no symmetry breaking, no DAG —
+    /// counts every automorphic copy and divides at the end (DESIGN.md §5).
+    pub fn automine_like() -> Self {
+        Self { sb: false, dag: false, mo: true, df: false, mnc: false, mec: true, lc: false, lg: false, stats: false }
+    }
+
+    /// Pangolin-like: BFS strategy (selected separately), SB + DAG but no
+    /// MNC/MO/DF.
+    pub fn pangolin_like() -> Self {
+        Self { sb: true, dag: true, mo: false, df: false, mnc: false, mec: true, lc: false, lg: false, stats: false }
+    }
+
+    /// Peregrine-like: DFS, on-the-fly SB and MO, but no DAG orientation.
+    pub fn peregrine_like() -> Self {
+        Self { sb: true, dag: false, mo: true, df: false, mnc: false, mec: true, lc: false, lg: false, stats: false }
+    }
+
+    pub fn with_stats(mut self) -> Self {
+        self.stats = true;
+        self
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct MinerConfig {
+    pub threads: usize,
+    /// Root-task chunk size for dynamic self-scheduling.
+    pub chunk: usize,
+    pub opts: OptFlags,
+}
+
+impl MinerConfig {
+    pub fn new(opts: OptFlags) -> Self {
+        Self { threads: crate::util::pool::default_threads(), chunk: 64, opts }
+    }
+
+    pub fn single_thread(opts: OptFlags) -> Self {
+        Self { threads: 1, chunk: usize::MAX, opts }
+    }
+
+    pub fn with_threads(mut self, t: usize) -> Self {
+        self.threads = t;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_differ_as_documented() {
+        assert!(OptFlags::hi().sb && OptFlags::hi().mnc && !OptFlags::hi().lc);
+        assert!(OptFlags::lo().lc && OptFlags::lo().lg);
+        assert!(!OptFlags::automine_like().sb);
+        assert!(!OptFlags::peregrine_like().dag && OptFlags::peregrine_like().sb);
+    }
+}

@@ -1,0 +1,129 @@
+//! The Sandslash high-level API (paper Table 1).
+//!
+//! A GPM problem is *specified*, not programmed: three required flags
+//! (vertex/edge-induced, listing/counting, explicit/implicit patterns)
+//! plus pattern definitions or an implicit-pattern rule. The solver
+//! (`apps::solve`) analyzes the spec — exactly the decision table of
+//! §4.3 — and picks search strategy, data structures, and optimizations.
+
+use crate::pattern::Pattern;
+
+#[derive(Clone, Debug)]
+pub struct ProblemSpec {
+    /// `isVertexInduced`
+    pub vertex_induced: bool,
+    /// `isListing` (false = counting)
+    pub listing: bool,
+    /// `isExplicit`
+    pub explicit: bool,
+    /// Maximum embedding size k (vertices for vertex-induced problems,
+    /// edges for edge-induced FSM).
+    pub k: usize,
+    /// `getExplicitPatterns()`
+    pub patterns: Vec<Pattern>,
+    /// `isImplicitPattern(pt) := pt.support > min_support` (FSM)
+    pub min_support: Option<u64>,
+}
+
+impl ProblemSpec {
+    /// TC: vertex-induced counting of the explicit triangle pattern.
+    pub fn tc() -> Self {
+        Self {
+            vertex_induced: true,
+            listing: false,
+            explicit: true,
+            k: 3,
+            patterns: vec![crate::pattern::library::triangle()],
+            min_support: None,
+        }
+    }
+
+    /// k-CL: vertex-induced listing of the k-clique.
+    pub fn clique_listing(k: usize) -> Self {
+        Self {
+            vertex_induced: true,
+            listing: true,
+            explicit: true,
+            k,
+            patterns: vec![crate::pattern::library::clique(k)],
+            min_support: None,
+        }
+    }
+
+    /// SL: edge-induced listing of an explicit pattern.
+    pub fn subgraph_listing(p: Pattern) -> Self {
+        Self {
+            vertex_induced: false,
+            listing: true,
+            explicit: true,
+            k: p.num_vertices(),
+            patterns: vec![p],
+            min_support: None,
+        }
+    }
+
+    /// k-MC: vertex-induced counting of all (implicit) k-vertex patterns.
+    pub fn motif_counting(k: usize) -> Self {
+        Self {
+            vertex_induced: true,
+            listing: false,
+            explicit: false,
+            k,
+            patterns: Vec::new(),
+            min_support: None,
+        }
+    }
+
+    /// k-FSM: edge-induced, implicit patterns filtered by MNI support —
+    /// the right-hand column of the paper's Table 1.
+    pub fn fsm(max_edges: usize, min_support: u64) -> Self {
+        Self {
+            vertex_induced: false,
+            listing: false,
+            explicit: false,
+            k: max_edges,
+            patterns: Vec::new(),
+            min_support: Some(min_support),
+        }
+    }
+
+    /// Decision: orientation (DAG) is enabled only for single explicit
+    /// clique patterns (§4.3).
+    pub fn wants_dag(&self) -> bool {
+        self.explicit && self.patterns.len() == 1 && self.patterns[0].is_clique()
+    }
+
+    /// Decision: matching order for single explicit non-triangle patterns.
+    pub fn wants_mo(&self) -> bool {
+        self.explicit
+            && self.patterns.len() == 1
+            && !(self.patterns[0].is_clique() && self.patterns[0].num_vertices() == 3)
+    }
+
+    /// Decision: MNC everywhere except triangles (set intersection wins).
+    pub fn wants_mnc(&self) -> bool {
+        !(self.explicit
+            && self.patterns.len() == 1
+            && self.patterns[0].num_vertices() == 3
+            && self.patterns[0].is_clique())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decision_table_matches_paper() {
+        assert!(ProblemSpec::tc().wants_dag());
+        assert!(!ProblemSpec::tc().wants_mo()); // triangle: MO not beneficial
+        assert!(!ProblemSpec::tc().wants_mnc()); // triangle: intersection
+        assert!(ProblemSpec::clique_listing(4).wants_dag());
+        assert!(ProblemSpec::clique_listing(4).wants_mo());
+        let sl = ProblemSpec::subgraph_listing(crate::pattern::library::diamond());
+        assert!(!sl.wants_dag()); // diamond is not a clique
+        assert!(sl.wants_mo() && sl.wants_mnc());
+        assert!(!ProblemSpec::motif_counting(4).wants_dag());
+        assert!(ProblemSpec::fsm(3, 100).min_support.is_some());
+    }
+}

@@ -1,0 +1,151 @@
+//! Graph construction: edge list -> clean symmetric CSR.
+//!
+//! Mirrors the preprocessing the paper applies to its inputs (Table 4):
+//! symmetrize, drop self loops, dedupe, sort neighbor lists.
+
+use super::csr::{CsrGraph, VertexId};
+
+pub struct GraphBuilder {
+    n: usize,
+    edges: Vec<(VertexId, VertexId)>,
+    labels: Vec<u32>,
+}
+
+impl GraphBuilder {
+    pub fn new(n: usize) -> Self {
+        Self { n, edges: Vec::new(), labels: Vec::new() }
+    }
+
+    pub fn from_edges(n: usize, edges: &[(VertexId, VertexId)]) -> Self {
+        let mut b = Self::new(n);
+        for &(u, v) in edges {
+            b.add_edge(u, v);
+        }
+        b
+    }
+
+    pub fn add_edge(&mut self, u: VertexId, v: VertexId) {
+        self.edges.push((u, v));
+    }
+
+    pub fn with_labels(mut self, labels: Vec<u32>) -> Self {
+        assert_eq!(labels.len(), self.n);
+        self.labels = labels;
+        self
+    }
+
+    /// Finalize: symmetrize, drop loops, dedupe, sort adjacency.
+    pub fn build(self) -> CsrGraph {
+        let n = self.n;
+        let mut deg = vec![0u64; n];
+        let mut dir: Vec<(VertexId, VertexId)> =
+            Vec::with_capacity(self.edges.len() * 2);
+        for &(u, v) in &self.edges {
+            if u == v {
+                continue; // no self loops
+            }
+            assert!((u as usize) < n && (v as usize) < n, "edge out of range");
+            dir.push((u, v));
+            dir.push((v, u));
+        }
+        dir.sort_unstable();
+        dir.dedup();
+        for &(u, _) in &dir {
+            deg[u as usize] += 1;
+        }
+        let mut offsets = vec![0u64; n + 1];
+        for i in 0..n {
+            offsets[i + 1] = offsets[i] + deg[i];
+        }
+        let mut neighbors = vec![0 as VertexId; dir.len()];
+        let mut cursor = offsets.clone();
+        for &(u, v) in &dir {
+            neighbors[cursor[u as usize] as usize] = v;
+            cursor[u as usize] += 1;
+        }
+        CsrGraph { offsets, neighbors, labels: self.labels }
+    }
+}
+
+/// Relabel a graph's vertices by `perm` (new_id = perm[old_id]),
+/// preserving labels. Used by tests to check relabeling invariance and by
+/// the degree-sorted dense-tile path.
+pub fn relabel(g: &CsrGraph, perm: &[VertexId]) -> CsrGraph {
+    let n = g.num_vertices();
+    assert_eq!(perm.len(), n);
+    let mut b = GraphBuilder::new(n);
+    for (u, v) in g.edges() {
+        b.add_edge(perm[u as usize], perm[v as usize]);
+    }
+    if g.is_labeled() {
+        let mut labels = vec![0u32; n];
+        for old in 0..n {
+            labels[perm[old] as usize] = g.labels[old];
+        }
+        b = b.with_labels(labels);
+    }
+    b.build()
+}
+
+/// Permutation that sorts vertices by descending degree (ties by id).
+pub fn degree_desc_order(g: &CsrGraph) -> Vec<VertexId> {
+    let n = g.num_vertices();
+    let mut order: Vec<VertexId> = (0..n as VertexId).collect();
+    order.sort_by_key(|&v| (std::cmp::Reverse(g.degree(v)), v));
+    // order[rank] = old vertex; invert into perm[old] = rank
+    let mut perm = vec![0 as VertexId; n];
+    for (rank, &old) in order.iter().enumerate() {
+        perm[old as usize] = rank as VertexId;
+    }
+    perm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dedupes_and_symmetrizes() {
+        let g = GraphBuilder::from_edges(3, &[(0, 1), (1, 0), (0, 1), (1, 2)]).build();
+        assert_eq!(g.num_undirected_edges(), 2);
+        assert_eq!(g.neighbors(1), &[0, 2]);
+    }
+
+    #[test]
+    fn drops_self_loops() {
+        let g = GraphBuilder::from_edges(2, &[(0, 0), (0, 1)]).build();
+        assert_eq!(g.num_undirected_edges(), 1);
+        assert_eq!(g.neighbors(0), &[1]);
+    }
+
+    #[test]
+    fn relabel_preserves_structure() {
+        let g = GraphBuilder::from_edges(4, &[(0, 1), (1, 2), (2, 3), (3, 0)]).build();
+        let perm = vec![3, 2, 1, 0];
+        let h = relabel(&g, &perm);
+        assert_eq!(h.num_undirected_edges(), 4);
+        assert!(h.has_edge(3, 2)); // old (0,1)
+        assert!(h.has_edge(0, 3)); // old (3,0)
+        assert_eq!(h.degree(0), 2);
+    }
+
+    #[test]
+    fn relabel_moves_labels() {
+        let g = GraphBuilder::from_edges(3, &[(0, 1), (1, 2)])
+            .with_labels(vec![10, 20, 30])
+            .build();
+        let h = relabel(&g, &[2, 1, 0]);
+        assert_eq!(h.label(2), 10);
+        assert_eq!(h.label(0), 30);
+    }
+
+    #[test]
+    fn degree_order_sorts_desc() {
+        let g = GraphBuilder::from_edges(4, &[(0, 1), (0, 2), (0, 3), (1, 2)]).build();
+        let perm = degree_desc_order(&g);
+        assert_eq!(perm[0], 0); // vertex 0 has max degree -> rank 0
+        let h = relabel(&g, &perm);
+        let degs: Vec<usize> = (0..4).map(|v| h.degree(v)).collect();
+        assert!(degs.windows(2).all(|w| w[0] >= w[1]));
+    }
+}

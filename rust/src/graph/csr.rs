@@ -1,0 +1,228 @@
+//! Compressed Sparse Row graph, the input representation for all mining.
+//!
+//! Matches the paper's setup (Table 4): symmetric, no self loops, no
+//! duplicate edges, neighbor lists sorted ascending. Sorted adjacency is
+//! what makes intersection-based connectivity checks and symmetry
+//! breaking cheap. Optional vertex labels support FSM.
+
+pub type VertexId = u32;
+
+#[derive(Clone, Debug, Default)]
+pub struct CsrGraph {
+    /// Offsets into `neighbors`; length = n + 1.
+    pub offsets: Vec<u64>,
+    /// Concatenated sorted neighbor lists.
+    pub neighbors: Vec<VertexId>,
+    /// Optional vertex labels (empty = unlabeled graph).
+    pub labels: Vec<u32>,
+}
+
+impl CsrGraph {
+    pub fn num_vertices(&self) -> usize {
+        self.offsets.len().saturating_sub(1)
+    }
+
+    /// Number of directed edges stored (for symmetric graphs this is 2x
+    /// the undirected edge count).
+    pub fn num_directed_edges(&self) -> usize {
+        self.neighbors.len()
+    }
+
+    pub fn num_undirected_edges(&self) -> usize {
+        self.neighbors.len() / 2
+    }
+
+    #[inline]
+    pub fn degree(&self, v: VertexId) -> usize {
+        (self.offsets[v as usize + 1] - self.offsets[v as usize]) as usize
+    }
+
+    #[inline]
+    pub fn neighbors(&self, v: VertexId) -> &[VertexId] {
+        &self.neighbors[self.offsets[v as usize] as usize..self.offsets[v as usize + 1] as usize]
+    }
+
+    #[inline]
+    pub fn label(&self, v: VertexId) -> u32 {
+        if self.labels.is_empty() { 0 } else { self.labels[v as usize] }
+    }
+
+    pub fn is_labeled(&self) -> bool {
+        !self.labels.is_empty()
+    }
+
+    pub fn num_labels(&self) -> usize {
+        self.labels.iter().copied().max().map(|m| m as usize + 1).unwrap_or(0)
+    }
+
+    /// Edge test via binary search on the sorted neighbor list of the
+    /// lower-degree endpoint.
+    #[inline]
+    pub fn has_edge(&self, u: VertexId, v: VertexId) -> bool {
+        let (a, b) = if self.degree(u) <= self.degree(v) { (u, v) } else { (v, u) };
+        self.neighbors(a).binary_search(&b).is_ok()
+    }
+
+    /// Iterate undirected edges (u < v) in CSR order.
+    pub fn edges(&self) -> impl Iterator<Item = (VertexId, VertexId)> + '_ {
+        (0..self.num_vertices() as VertexId).flat_map(move |u| {
+            self.neighbors(u)
+                .iter()
+                .copied()
+                .filter(move |&v| u < v)
+                .map(move |v| (u, v))
+        })
+    }
+
+    pub fn max_degree(&self) -> usize {
+        (0..self.num_vertices() as VertexId)
+            .map(|v| self.degree(v))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Sorted-list intersection count (linear merge).
+    pub fn intersect_count(&self, u: VertexId, v: VertexId) -> usize {
+        intersect_count(self.neighbors(u), self.neighbors(v))
+    }
+
+    /// Sorted-list intersection into `out` (cleared first).
+    pub fn intersect_into(&self, u: VertexId, v: VertexId, out: &mut Vec<VertexId>) {
+        out.clear();
+        intersect_into(self.neighbors(u), self.neighbors(v), out);
+    }
+}
+
+/// Linear-merge intersection count of two sorted slices.
+#[inline]
+pub fn intersect_count(a: &[VertexId], b: &[VertexId], ) -> usize {
+    // Galloping pays off when lengths are very skewed; the crossover was
+    // measured in the §Perf pass (see EXPERIMENTS.md).
+    if a.len() * 32 < b.len() {
+        return gallop_count(a, b);
+    }
+    if b.len() * 32 < a.len() {
+        return gallop_count(b, a);
+    }
+    let (mut i, mut j, mut n) = (0, 0, 0);
+    while i < a.len() && j < b.len() {
+        let (x, y) = (a[i], b[j]);
+        i += (x <= y) as usize;
+        j += (y <= x) as usize;
+        n += (x == y) as usize;
+    }
+    n
+}
+
+/// Count |a ∩ b| by binary-searching each element of the short list `a`
+/// in the long list `b`, narrowing the search window as we go.
+fn gallop_count(a: &[VertexId], b: &[VertexId]) -> usize {
+    let mut lo = 0usize;
+    let mut n = 0usize;
+    for &x in a {
+        match b[lo..].binary_search(&x) {
+            Ok(pos) => {
+                n += 1;
+                lo += pos + 1;
+            }
+            Err(pos) => lo += pos,
+        }
+        if lo >= b.len() {
+            break;
+        }
+    }
+    n
+}
+
+/// Linear-merge intersection of two sorted slices, appended to `out`.
+#[inline]
+pub fn intersect_into(a: &[VertexId], b: &[VertexId], out: &mut Vec<VertexId>) {
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() && j < b.len() {
+        let (x, y) = (a[i], b[j]);
+        if x == y {
+            out.push(x);
+            i += 1;
+            j += 1;
+        } else if x < y {
+            i += 1;
+        } else {
+            j += 1;
+        }
+    }
+}
+
+/// Count elements of sorted `a` strictly less than `bound` (for symmetry
+/// breaking bounded intersections).
+#[inline]
+pub fn count_less_than(a: &[VertexId], bound: VertexId) -> usize {
+    a.partition_point(|&x| x < bound)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+
+    fn diamond() -> CsrGraph {
+        // 0-1, 0-2, 1-2, 1-3, 2-3 (diamond = 4-clique minus edge 0-3)
+        GraphBuilder::from_edges(4, &[(0, 1), (0, 2), (1, 2), (1, 3), (2, 3)]).build()
+    }
+
+    #[test]
+    fn degrees_and_neighbors_sorted() {
+        let g = diamond();
+        assert_eq!(g.num_vertices(), 4);
+        assert_eq!(g.num_undirected_edges(), 5);
+        assert_eq!(g.degree(1), 3);
+        assert_eq!(g.neighbors(1), &[0, 2, 3]);
+        assert!(g.neighbors(2).windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn has_edge_both_directions() {
+        let g = diamond();
+        assert!(g.has_edge(0, 1) && g.has_edge(1, 0));
+        assert!(!g.has_edge(0, 3));
+    }
+
+    #[test]
+    fn edges_iterator_unique_ordered() {
+        let g = diamond();
+        let es: Vec<_> = g.edges().collect();
+        assert_eq!(es, vec![(0, 1), (0, 2), (1, 2), (1, 3), (2, 3)]);
+    }
+
+    #[test]
+    fn intersections() {
+        let g = diamond();
+        assert_eq!(g.intersect_count(1, 2), 2); // common: 0 and 3
+        let mut out = Vec::new();
+        g.intersect_into(1, 2, &mut out);
+        assert_eq!(out, vec![0, 3]);
+    }
+
+    #[test]
+    fn gallop_matches_linear() {
+        let a: Vec<u32> = (0..1000).step_by(7).collect();
+        let b: Vec<u32> = vec![14, 21, 500, 700, 999];
+        let linear = {
+            let (mut i, mut j, mut n) = (0, 0, 0);
+            while i < a.len() && j < b.len() {
+                if a[i] == b[j] { n += 1; i += 1; j += 1; }
+                else if a[i] < b[j] { i += 1; } else { j += 1; }
+            }
+            n
+        };
+        assert_eq!(gallop_count(&b, &a), linear);
+        assert_eq!(intersect_count(&b, &a), linear);
+    }
+
+    #[test]
+    fn count_less_than_bounds() {
+        let a = vec![1u32, 3, 5, 7];
+        assert_eq!(count_less_than(&a, 0), 0);
+        assert_eq!(count_less_than(&a, 4), 2);
+        assert_eq!(count_less_than(&a, 100), 4);
+    }
+}

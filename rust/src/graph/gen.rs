@@ -1,0 +1,195 @@
+//! Synthetic graph generators.
+//!
+//! The paper evaluates on SNAP/web-crawl graphs (LiveJournal, Orkut,
+//! Twitter40, Friendster, UK2007, Gsh) and labeled graphs (Patents,
+//! Youtube, ProteinDB). Those are multi-GB downloads we do not have, so
+//! the dataset registry (`coordinator::datasets`) maps each to a seeded
+//! synthetic stand-in generated here (DESIGN.md §4 records the
+//! substitution). RMAT reproduces the heavy-tailed degree skew that
+//! drives GPM search-space behaviour; Erdős–Rényi provides a low-skew
+//! contrast; ring/grid give degenerate shapes for tests.
+
+use super::builder::GraphBuilder;
+use super::csr::{CsrGraph, VertexId};
+use crate::util::rng::Rng;
+
+/// Erdős–Rényi G(n, p). If `label_pool` is non-empty, labels are drawn
+/// uniformly from it.
+pub fn erdos_renyi(n: usize, p: f64, seed: u64, label_pool: &[u32]) -> CsrGraph {
+    let mut rng = Rng::seeded(seed);
+    let mut b = GraphBuilder::new(n);
+    for u in 0..n as VertexId {
+        for v in (u + 1)..n as VertexId {
+            if rng.chance(p) {
+                b.add_edge(u, v);
+            }
+        }
+    }
+    finish(b, n, &mut rng, label_pool)
+}
+
+/// RMAT power-law generator (Chakrabarti et al.), the standard synthetic
+/// stand-in for social/web graphs. `scale` = log2(n); `edge_factor` =
+/// average degree / 2.
+pub fn rmat(scale: u32, edge_factor: usize, seed: u64, label_pool: &[u32]) -> CsrGraph {
+    // Graph500-style parameters produce realistic skew.
+    rmat_with(scale, edge_factor, 0.57, 0.19, 0.19, seed, label_pool)
+}
+
+pub fn rmat_with(
+    scale: u32,
+    edge_factor: usize,
+    a: f64,
+    b: f64,
+    c: f64,
+    seed: u64,
+    label_pool: &[u32],
+) -> CsrGraph {
+    let n = 1usize << scale;
+    let m = n * edge_factor;
+    let mut rng = Rng::seeded(seed);
+    let mut builder = GraphBuilder::new(n);
+    for _ in 0..m {
+        let (mut u, mut v) = (0usize, 0usize);
+        for _ in 0..scale {
+            let r = rng.f64();
+            let (du, dv) = if r < a {
+                (0, 0)
+            } else if r < a + b {
+                (0, 1)
+            } else if r < a + b + c {
+                (1, 0)
+            } else {
+                (1, 1)
+            };
+            u = (u << 1) | du;
+            v = (v << 1) | dv;
+        }
+        if u != v {
+            builder.add_edge(u as VertexId, v as VertexId);
+        }
+    }
+    finish(builder, n, &mut rng, label_pool)
+}
+
+/// Ring of n vertices (each degree 2): zero triangles, useful for
+/// boundary tests.
+pub fn ring(n: usize) -> CsrGraph {
+    let mut b = GraphBuilder::new(n);
+    for u in 0..n as VertexId {
+        b.add_edge(u, ((u as usize + 1) % n) as VertexId);
+    }
+    b.build()
+}
+
+/// Complete graph K_n: C(n,3) triangles, C(n,k) k-cliques.
+pub fn complete(n: usize) -> CsrGraph {
+    let mut b = GraphBuilder::new(n);
+    for u in 0..n as VertexId {
+        for v in (u + 1)..n as VertexId {
+            b.add_edge(u, v);
+        }
+    }
+    b.build()
+}
+
+/// Barabási–Albert preferential attachment with `m` edges per new vertex.
+/// Produces power-law degrees plus guaranteed connectivity.
+pub fn barabasi_albert(n: usize, m: usize, seed: u64, label_pool: &[u32]) -> CsrGraph {
+    assert!(n > m && m >= 1);
+    let mut rng = Rng::seeded(seed);
+    let mut b = GraphBuilder::new(n);
+    // endpoint pool: vertices appear proportionally to degree
+    let mut pool: Vec<VertexId> = Vec::with_capacity(2 * n * m);
+    for u in 0..m as VertexId {
+        for v in (u + 1)..=(m as VertexId) {
+            b.add_edge(u, v);
+            pool.push(u);
+            pool.push(v);
+        }
+    }
+    for u in (m + 1)..n {
+        let mut targets: Vec<VertexId> = Vec::with_capacity(m);
+        while targets.len() < m {
+            let t = pool[rng.below(pool.len() as u64) as usize];
+            if t != u as VertexId && !targets.contains(&t) {
+                targets.push(t);
+            }
+        }
+        for &t in &targets {
+            b.add_edge(u as VertexId, t);
+            pool.push(u as VertexId);
+            pool.push(t);
+        }
+    }
+    finish(b, n, &mut rng, label_pool)
+}
+
+fn finish(b: GraphBuilder, n: usize, rng: &mut Rng, label_pool: &[u32]) -> CsrGraph {
+    if label_pool.is_empty() {
+        b.build()
+    } else {
+        let labels = (0..n)
+            .map(|_| label_pool[rng.below(label_pool.len() as u64) as usize])
+            .collect();
+        b.with_labels(labels).build()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn er_edge_count_plausible() {
+        let g = erdos_renyi(100, 0.1, 1, &[]);
+        let expected = 0.1 * 100.0 * 99.0 / 2.0;
+        let m = g.num_undirected_edges() as f64;
+        assert!((expected * 0.6..expected * 1.4).contains(&m), "m={m}");
+    }
+
+    #[test]
+    fn rmat_is_skewed() {
+        let g = rmat(10, 8, 2, &[]);
+        assert!(g.num_vertices() == 1024);
+        // power-law: max degree should far exceed the average
+        let avg = g.num_directed_edges() as f64 / g.num_vertices() as f64;
+        assert!(g.max_degree() as f64 > 4.0 * avg, "max={} avg={avg}", g.max_degree());
+    }
+
+    #[test]
+    fn generators_deterministic() {
+        let a = rmat(8, 8, 42, &[]);
+        let b = rmat(8, 8, 42, &[]);
+        assert_eq!(a.neighbors, b.neighbors);
+        let c = rmat(8, 8, 43, &[]);
+        assert_ne!(a.neighbors, c.neighbors);
+    }
+
+    #[test]
+    fn ring_has_no_triangles() {
+        let g = ring(10);
+        assert_eq!(g.num_undirected_edges(), 10);
+        assert!(g.edges().all(|(u, v)| g.intersect_count(u, v) == 0));
+    }
+
+    #[test]
+    fn complete_graph_degrees() {
+        let g = complete(6);
+        assert_eq!(g.num_undirected_edges(), 15);
+        assert!((0..6).all(|v| g.degree(v) == 5));
+    }
+
+    #[test]
+    fn ba_connected_min_degree() {
+        let g = barabasi_albert(200, 3, 5, &[]);
+        assert!((0..200u32).all(|v| g.degree(v) >= 3));
+    }
+
+    #[test]
+    fn labels_drawn_from_pool() {
+        let g = erdos_renyi(50, 0.2, 3, &[2, 5, 9]);
+        assert!(g.is_labeled());
+        assert!(g.labels.iter().all(|l| [2, 5, 9].contains(l)));
+    }
+}

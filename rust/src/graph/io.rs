@@ -1,0 +1,183 @@
+//! Graph IO: edge-list text (optionally labeled) and a binary CSR
+//! snapshot format for fast reloads of generated benchmark inputs.
+
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use super::builder::GraphBuilder;
+use super::csr::{CsrGraph, VertexId};
+
+/// Load a whitespace-separated edge list: `u v` per line, `#` comments.
+/// Vertex ids are assigned densely from the raw ids encountered.
+pub fn load_edge_list(path: &Path) -> std::io::Result<CsrGraph> {
+    let f = std::fs::File::open(path)?;
+    let mut edges: Vec<(VertexId, VertexId)> = Vec::new();
+    let mut max_v: VertexId = 0;
+    for line in BufReader::new(f).lines() {
+        let line = line?;
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let (u, v) = (
+            parse_id(it.next(), path)?,
+            parse_id(it.next(), path)?,
+        );
+        max_v = max_v.max(u).max(v);
+        edges.push((u, v));
+    }
+    Ok(GraphBuilder::from_edges(max_v as usize + 1, &edges).build())
+}
+
+/// Load a labeled graph: lines `v <label>` in a `# labels` section follow
+/// the edge lines, or a companion `<path>.labels` file with one label per
+/// vertex line.
+pub fn load_labels(path: &Path, n: usize) -> std::io::Result<Vec<u32>> {
+    let f = std::fs::File::open(path)?;
+    let mut labels = vec![0u32; n];
+    for (i, line) in BufReader::new(f).lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || i >= n {
+            continue;
+        }
+        labels[i] = line.parse().map_err(bad_data)?;
+    }
+    Ok(labels)
+}
+
+fn parse_id(tok: Option<&str>, path: &Path) -> std::io::Result<VertexId> {
+    tok.ok_or_else(|| bad_data(format!("{path:?}: missing vertex id")))?
+        .parse()
+        .map_err(bad_data)
+}
+
+fn bad_data<E: std::fmt::Display>(e: E) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string())
+}
+
+/// Save an edge list (undirected edges once, u < v).
+pub fn save_edge_list(g: &CsrGraph, path: &Path) -> std::io::Result<()> {
+    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    for (u, v) in g.edges() {
+        writeln!(w, "{u} {v}")?;
+    }
+    Ok(())
+}
+
+const SNAPSHOT_MAGIC: u64 = 0x53_41_4E_44_43_53_52_31; // "SANDCSR1"
+
+/// Binary snapshot: magic, n, m, has_labels, offsets, neighbors, labels.
+pub fn save_snapshot(g: &CsrGraph, path: &Path) -> std::io::Result<()> {
+    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    let n = g.num_vertices() as u64;
+    let m = g.neighbors.len() as u64;
+    let has_labels = g.is_labeled() as u64;
+    for x in [SNAPSHOT_MAGIC, n, m, has_labels] {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    for &o in &g.offsets {
+        w.write_all(&o.to_le_bytes())?;
+    }
+    for &v in &g.neighbors {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    for &l in &g.labels {
+        w.write_all(&l.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+pub fn load_snapshot(path: &Path) -> std::io::Result<CsrGraph> {
+    let mut r = BufReader::new(std::fs::File::open(path)?);
+    let magic = read_u64(&mut r)?;
+    if magic != SNAPSHOT_MAGIC {
+        return Err(bad_data("not a sandslash CSR snapshot"));
+    }
+    let n = read_u64(&mut r)? as usize;
+    let m = read_u64(&mut r)? as usize;
+    let has_labels = read_u64(&mut r)? != 0;
+    let mut offsets = Vec::with_capacity(n + 1);
+    for _ in 0..=n {
+        offsets.push(read_u64(&mut r)?);
+    }
+    let mut neighbors = Vec::with_capacity(m);
+    for _ in 0..m {
+        neighbors.push(read_u32(&mut r)?);
+    }
+    let mut labels = Vec::new();
+    if has_labels {
+        labels.reserve(n);
+        for _ in 0..n {
+            labels.push(read_u32(&mut r)?);
+        }
+    }
+    Ok(CsrGraph { offsets, neighbors, labels })
+}
+
+fn read_u64<R: Read>(r: &mut R) -> std::io::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_u32<R: Read>(r: &mut R) -> std::io::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("sandslash_io_{}_{}", std::process::id(), name));
+        p
+    }
+
+    #[test]
+    fn edge_list_roundtrip() {
+        let g = gen::erdos_renyi(50, 0.2, 7, &[]);
+        let path = tmp("el.txt");
+        save_edge_list(&g, &path).unwrap();
+        let h = load_edge_list(&path).unwrap();
+        assert_eq!(g.num_undirected_edges(), h.num_undirected_edges());
+        for (u, v) in g.edges() {
+            assert!(h.has_edge(u, v));
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn snapshot_roundtrip_labeled() {
+        let g = gen::erdos_renyi(40, 0.15, 9, &[0, 1, 2]);
+        let path = tmp("snap.bin");
+        save_snapshot(&g, &path).unwrap();
+        let h = load_snapshot(&path).unwrap();
+        assert_eq!(g.offsets, h.offsets);
+        assert_eq!(g.neighbors, h.neighbors);
+        assert_eq!(g.labels, h.labels);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let path = tmp("bad.bin");
+        std::fs::write(&path, [0u8; 64]).unwrap();
+        assert!(load_snapshot(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn edge_list_with_comments() {
+        let path = tmp("comments.el");
+        std::fs::write(&path, "# header\n0 1\n1 2 # trailing\n\n2 0\n").unwrap();
+        let g = load_edge_list(&path).unwrap();
+        assert_eq!(g.num_undirected_edges(), 3);
+        std::fs::remove_file(path).ok();
+    }
+}

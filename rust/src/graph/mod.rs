@@ -1,0 +1,11 @@
+//! Graph substrate: CSR storage, construction, IO, synthetic generators,
+//! degeneracy/orientation preprocessing and statistics.
+
+pub mod builder;
+pub mod csr;
+pub mod gen;
+pub mod io;
+pub mod orientation;
+pub mod stats;
+
+pub use csr::{CsrGraph, VertexId};

@@ -1,0 +1,234 @@
+//! Orientation (total-order DAG construction) and k-core decomposition —
+//! paper Appendix B.2.
+//!
+//! For clique patterns, Sandslash converts the symmetric input graph into
+//! a DAG so each clique is enumerated exactly once with no runtime
+//! symmetry checks. Two schemes, as in the paper: (1) degree-based (each
+//! edge points to the higher-degree endpoint, ties to larger id), and
+//! (2) core-based (degeneracy order, as in kClist) which bounds the
+//! out-degree by the graph's degeneracy — the key to kClist-style local
+//! graphs staying small.
+
+use super::csr::{CsrGraph, VertexId};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OrientScheme {
+    Degree,
+    Core,
+}
+
+/// Directed adjacency produced by orientation: `out[v]` is sorted by the
+/// *rank* order used for orientation, stored as original vertex ids
+/// sorted ascending (sorted lists keep intersections cheap).
+#[derive(Clone, Debug)]
+pub struct Dag {
+    pub offsets: Vec<u64>,
+    pub targets: Vec<VertexId>,
+    /// rank[v] = position of v in the total order (smaller = earlier).
+    pub rank: Vec<u32>,
+}
+
+impl Dag {
+    pub fn num_vertices(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    #[inline]
+    pub fn out_neighbors(&self, v: VertexId) -> &[VertexId] {
+        &self.targets[self.offsets[v as usize] as usize..self.offsets[v as usize + 1] as usize]
+    }
+
+    #[inline]
+    pub fn out_degree(&self, v: VertexId) -> usize {
+        self.out_neighbors(v).len()
+    }
+
+    pub fn max_out_degree(&self) -> usize {
+        (0..self.num_vertices() as VertexId)
+            .map(|v| self.out_degree(v))
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// Build a DAG under the given scheme.
+pub fn orient(g: &CsrGraph, scheme: OrientScheme) -> Dag {
+    let rank: Vec<u32> = match scheme {
+        OrientScheme::Degree => {
+            // rank by (degree, id): edge points to higher (degree, id)
+            let n = g.num_vertices();
+            let mut order: Vec<VertexId> = (0..n as VertexId).collect();
+            order.sort_by_key(|&v| (g.degree(v), v));
+            let mut rank = vec![0u32; n];
+            for (r, &v) in order.iter().enumerate() {
+                rank[v as usize] = r as u32;
+            }
+            rank
+        }
+        OrientScheme::Core => degeneracy_order(g).1,
+    };
+    build_dag(g, &rank)
+}
+
+fn build_dag(g: &CsrGraph, rank: &[u32]) -> Dag {
+    let n = g.num_vertices();
+    let mut offsets = vec![0u64; n + 1];
+    for v in 0..n as VertexId {
+        let d = g
+            .neighbors(v)
+            .iter()
+            .filter(|&&u| rank[u as usize] > rank[v as usize])
+            .count();
+        offsets[v as usize + 1] = d as u64;
+    }
+    for i in 0..n {
+        offsets[i + 1] += offsets[i];
+    }
+    let mut targets = vec![0 as VertexId; offsets[n] as usize];
+    let mut cursor: Vec<u64> = offsets.clone();
+    for v in 0..n as VertexId {
+        for &u in g.neighbors(v) {
+            if rank[u as usize] > rank[v as usize] {
+                targets[cursor[v as usize] as usize] = u;
+                cursor[v as usize] += 1;
+            }
+        }
+        // neighbors(v) is sorted by id; keep out-lists sorted by id too
+        let s = offsets[v as usize] as usize;
+        let e = cursor[v as usize] as usize;
+        targets[s..e].sort_unstable();
+    }
+    Dag { offsets, targets, rank: rank.to_vec() }
+}
+
+/// Peeling k-core decomposition (Matula–Beck). Returns (core numbers,
+/// degeneracy rank) where rank follows the peel order.
+pub fn degeneracy_order(g: &CsrGraph) -> (Vec<u32>, Vec<u32>) {
+    let n = g.num_vertices();
+    let max_d = g.max_degree();
+    let mut deg: Vec<u32> = (0..n as VertexId).map(|v| g.degree(v) as u32).collect();
+    // bucket sort by degree
+    let mut bins = vec![0usize; max_d + 2];
+    for &d in &deg {
+        bins[d as usize + 1] += 1;
+    }
+    for i in 1..bins.len() {
+        bins[i] += bins[i - 1];
+    }
+    let mut pos = vec![0usize; n];
+    let mut order = vec![0 as VertexId; n];
+    {
+        let mut cursor = bins.clone();
+        for v in 0..n as VertexId {
+            let d = deg[v as usize] as usize;
+            pos[v as usize] = cursor[d];
+            order[cursor[d]] = v;
+            cursor[d] += 1;
+        }
+    }
+    let mut bin_start = bins;
+    let mut core = vec![0u32; n];
+    let mut rank = vec![0u32; n];
+    let mut current_core = 0u32;
+    for i in 0..n {
+        let v = order[i];
+        current_core = current_core.max(deg[v as usize]);
+        core[v as usize] = current_core;
+        rank[v as usize] = i as u32;
+        for &u in g.neighbors(v) {
+            let du = deg[u as usize];
+            if du > deg[v as usize] && pos[u as usize] > i {
+                // move u one bucket down: swap with first element of its bucket
+                let bucket = du as usize;
+                let first_pos = bin_start[bucket].max(i + 1);
+                let w = order[first_pos];
+                if w != u {
+                    let pu = pos[u as usize];
+                    order.swap(first_pos, pu);
+                    pos[u as usize] = first_pos;
+                    pos[w as usize] = pu;
+                }
+                bin_start[bucket] = first_pos + 1;
+                deg[u as usize] -= 1;
+            }
+        }
+    }
+    (core, rank)
+}
+
+/// Graph degeneracy = max core number.
+pub fn degeneracy(g: &CsrGraph) -> u32 {
+    degeneracy_order(g).0.into_iter().max().unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    #[test]
+    fn dag_halves_edges() {
+        let g = gen::rmat(8, 8, 11, &[]);
+        for scheme in [OrientScheme::Degree, OrientScheme::Core] {
+            let d = orient(&g, scheme);
+            assert_eq!(d.targets.len(), g.num_undirected_edges());
+        }
+    }
+
+    #[test]
+    fn dag_is_acyclic_by_rank() {
+        let g = gen::rmat(7, 6, 3, &[]);
+        let d = orient(&g, OrientScheme::Degree);
+        for v in 0..g.num_vertices() as VertexId {
+            for &u in d.out_neighbors(v) {
+                assert!(d.rank[u as usize] > d.rank[v as usize]);
+            }
+        }
+    }
+
+    #[test]
+    fn out_lists_sorted() {
+        let g = gen::rmat(7, 6, 4, &[]);
+        let d = orient(&g, OrientScheme::Core);
+        for v in 0..g.num_vertices() as VertexId {
+            assert!(d.out_neighbors(v).windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn complete_graph_core_numbers() {
+        let g = gen::complete(6);
+        let (core, _) = degeneracy_order(&g);
+        assert!(core.iter().all(|&c| c == 5));
+        assert_eq!(degeneracy(&g), 5);
+    }
+
+    #[test]
+    fn ring_core_is_two() {
+        let g = gen::ring(12);
+        assert_eq!(degeneracy(&g), 2);
+    }
+
+    #[test]
+    fn core_orientation_bounds_outdegree_by_degeneracy() {
+        let g = gen::rmat(9, 8, 5, &[]);
+        let d = orient(&g, OrientScheme::Core);
+        let k = degeneracy(&g) as usize;
+        assert!(
+            d.max_out_degree() <= k,
+            "max_out={} degeneracy={}",
+            d.max_out_degree(),
+            k
+        );
+    }
+
+    #[test]
+    fn star_core_is_one() {
+        let mut b = crate::graph::builder::GraphBuilder::new(6);
+        for v in 1..6 {
+            b.add_edge(0, v);
+        }
+        let g = b.build();
+        assert_eq!(degeneracy(&g), 1);
+    }
+}

@@ -1,0 +1,59 @@
+//! Graph statistics reporting (the `sandslash stats` subcommand) —
+//! reproduces the columns of the paper's Table 4 for our inputs.
+
+use super::csr::CsrGraph;
+use super::orientation;
+
+#[derive(Debug, Clone)]
+pub struct GraphStats {
+    pub vertices: usize,
+    pub edges: usize,
+    pub avg_degree: f64,
+    pub max_degree: usize,
+    pub degeneracy: u32,
+    pub labels: usize,
+}
+
+pub fn stats(g: &CsrGraph) -> GraphStats {
+    GraphStats {
+        vertices: g.num_vertices(),
+        edges: g.num_undirected_edges(),
+        avg_degree: g.num_directed_edges() as f64 / g.num_vertices().max(1) as f64,
+        max_degree: g.max_degree(),
+        degeneracy: orientation::degeneracy(g),
+        labels: g.num_labels(),
+    }
+}
+
+impl std::fmt::Display for GraphStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "|V|={} |E|={} avg_deg={:.1} max_deg={} degeneracy={} labels={}",
+            self.vertices, self.edges, self.avg_degree, self.max_degree,
+            self.degeneracy, self.labels
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    #[test]
+    fn stats_of_complete_graph() {
+        let s = stats(&gen::complete(5));
+        assert_eq!(s.vertices, 5);
+        assert_eq!(s.edges, 10);
+        assert_eq!(s.max_degree, 4);
+        assert_eq!(s.degeneracy, 4);
+        assert_eq!(s.labels, 0);
+    }
+
+    #[test]
+    fn display_contains_fields() {
+        let s = stats(&gen::ring(8)).to_string();
+        assert!(s.contains("|V|=8") && s.contains("degeneracy=2"));
+    }
+}

@@ -1,0 +1,23 @@
+//! # Sandslash
+//!
+//! A two-level framework for efficient graph pattern mining (GPM),
+//! reproducing Chen et al., *"Sandslash: A Two-Level Framework for
+//! Efficient Graph Pattern Mining"* (2020) as a three-layer
+//! Rust + JAX/Pallas system.
+//!
+//! * [`graph`] — CSR graphs, generators, orientation (the input substrate)
+//! * [`pattern`] — pattern analysis: isomorphism, symmetry breaking,
+//!   matching orders, canonical codes
+//! * [`engine`] — the mining engines and the two-level API
+//! * [`apps`] — the five paper applications + hand-optimized baselines
+//! * [`runtime`] — PJRT loader for the AOT-compiled Pallas counting path
+//! * [`coordinator`] — dataset registry and experiment campaign driver
+//! * [`util`] — substrates (RNG, bitset, pool, CLI, config, bench)
+
+pub mod graph;
+pub mod pattern;
+pub mod engine;
+pub mod apps;
+pub mod runtime;
+pub mod coordinator;
+pub mod util;

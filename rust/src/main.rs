@@ -1,0 +1,312 @@
+//! Sandslash CLI — the Layer-3 leader entrypoint.
+//!
+//! Subcommands:
+//!   gen <kind> --out <file> [--scale N --ef N --seed N --labels N]
+//!   stats   --graph <name|file>
+//!   tc      --graph <name|file> [--system S]
+//!   clique  --graph <name|file> --k K [--lo] [--system S]
+//!   motif   --graph <name|file> --k K [--lo] [--system S]
+//!   sl      --graph <name|file> --pattern diamond|4cycle [--system S]
+//!   fsm     --graph <name|file> --k K --sigma S [--bfs|--peregrine]
+//!   accel   --graph <name|file> [--artifacts DIR] [--motif4]
+//!   campaign <table5|table6|table7|table8|table9|fig8|fig9|fig10|fig11|scaling|all>
+//!
+//! `--graph` accepts a registered dataset name (see coordinator::datasets)
+//! or a path to an edge-list / .csr snapshot file.
+
+use sandslash::apps::baselines::emulation::{self, System};
+use sandslash::apps::{clique, fsm_app, motif, sl, tc};
+use sandslash::coordinator::{campaign, datasets};
+use sandslash::engine::{MinerConfig, OptFlags};
+use sandslash::graph::{gen, io, stats, CsrGraph};
+use sandslash::pattern::library;
+use sandslash::util::cli::Args;
+use sandslash::util::timer::{fmt_secs, timed};
+
+fn main() {
+    let args = Args::from_env();
+    let code = run(&args);
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> i32 {
+    match args.subcommand.as_deref() {
+        Some("gen") => cmd_gen(args),
+        Some("stats") => cmd_stats(args),
+        Some("tc") => cmd_tc(args),
+        Some("clique") => cmd_clique(args),
+        Some("motif") => cmd_motif(args),
+        Some("sl") => cmd_sl(args),
+        Some("fsm") => cmd_fsm(args),
+        Some("accel") => cmd_accel(args),
+        Some("campaign") => cmd_campaign(args),
+        _ => {
+            eprintln!("{}", USAGE);
+            2
+        }
+    }
+}
+
+const USAGE: &str = "sandslash <gen|stats|tc|clique|motif|sl|fsm|accel|campaign> [options]\n\
+    see rust/src/main.rs header for per-command options";
+
+fn load_graph(args: &Args) -> Option<CsrGraph> {
+    let name = args.get_or("graph", "er-small");
+    if let Some(g) = datasets::load(name) {
+        return Some(g);
+    }
+    let path = std::path::Path::new(name);
+    if !path.exists() {
+        eprintln!("unknown graph '{name}' (not a dataset name or file)");
+        return None;
+    }
+    let res = if name.ends_with(".csr") {
+        io::load_snapshot(path)
+    } else {
+        io::load_edge_list(path)
+    };
+    match res {
+        Ok(g) => Some(g),
+        Err(e) => {
+            eprintln!("failed to load {name}: {e}");
+            None
+        }
+    }
+}
+
+fn config(args: &Args) -> MinerConfig {
+    let opts = if args.flag("lo") { OptFlags::lo() } else { OptFlags::hi() };
+    let mut cfg = MinerConfig::new(opts);
+    if let Some(t) = args.get("threads") {
+        cfg.threads = t.parse().unwrap_or(cfg.threads);
+    }
+    cfg
+}
+
+fn system(args: &Args) -> System {
+    match args.get_or("system", "hi") {
+        "lo" => System::SandslashLo,
+        "automine" => System::AutomineLike,
+        "pangolin" => System::PangolinLike,
+        "peregrine" => System::PeregrineLike,
+        _ => System::SandslashHi,
+    }
+}
+
+fn cmd_gen(args: &Args) -> i32 {
+    let kind = args.positional.first().map(|s| s.as_str()).unwrap_or("rmat");
+    let seed = args.get_u64("seed", 42);
+    let label_pool: Vec<u32> = (1..=args.get_u64("labels", 0) as u32).collect();
+    let g = match kind {
+        "rmat" => gen::rmat(args.get_u64("scale", 12) as u32, args.get_usize("ef", 8), seed, &label_pool),
+        "er" => gen::erdos_renyi(args.get_usize("n", 1000), args.get_f64("p", 0.01), seed, &label_pool),
+        "ba" => gen::barabasi_albert(args.get_usize("n", 1000), args.get_usize("m", 4), seed, &label_pool),
+        "ring" => gen::ring(args.get_usize("n", 1000)),
+        "complete" => gen::complete(args.get_usize("n", 32)),
+        other => {
+            eprintln!("unknown generator '{other}'");
+            return 2;
+        }
+    };
+    let out = args.get_or("out", "graph.csr");
+    let res = if out.ends_with(".csr") {
+        io::save_snapshot(&g, std::path::Path::new(out))
+    } else {
+        io::save_edge_list(&g, std::path::Path::new(out))
+    };
+    match res {
+        Ok(()) => {
+            println!("wrote {out}: {}", stats::stats(&g));
+            0
+        }
+        Err(e) => {
+            eprintln!("write failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_stats(args: &Args) -> i32 {
+    let Some(g) = load_graph(args) else { return 1 };
+    println!("{}", stats::stats(&g));
+    0
+}
+
+fn cmd_tc(args: &Args) -> i32 {
+    let Some(g) = load_graph(args) else { return 1 };
+    let cfg = config(args);
+    let (c, t) = timed(|| emulation::tc(&g, system(args), &cfg));
+    println!("triangles = {c}  [{}]  system={}", fmt_secs(t), system(args).name());
+    0
+}
+
+fn cmd_clique(args: &Args) -> i32 {
+    let Some(g) = load_graph(args) else { return 1 };
+    let cfg = config(args);
+    let k = args.get_usize("k", 4);
+    let (c, t) = if args.flag("lo") {
+        timed(|| clique::clique_lo(&g, k, &cfg).0)
+    } else {
+        timed(|| emulation::clique(&g, k, system(args), &cfg))
+    };
+    println!("{k}-cliques = {c}  [{}]", fmt_secs(t));
+    0
+}
+
+fn cmd_motif(args: &Args) -> i32 {
+    let Some(g) = load_graph(args) else { return 1 };
+    let cfg = config(args);
+    let k = args.get_usize("k", 3);
+    let sys = if args.flag("lo") { System::SandslashLo } else { system(args) };
+    let (counts, t) = timed(|| emulation::motifs(&g, k, sys, &cfg));
+    let names: &[&str] = match k {
+        3 => &library::MOTIF3_NAMES,
+        4 => &library::MOTIF4_NAMES,
+        _ => &[],
+    };
+    println!("{k}-motif census  [{}]  system={}", fmt_secs(t), sys.name());
+    for (i, c) in counts.iter().enumerate() {
+        let name = names.get(i).copied().unwrap_or("motif");
+        println!("  {name:>16}: {c}");
+    }
+    0
+}
+
+fn cmd_sl(args: &Args) -> i32 {
+    let Some(g) = load_graph(args) else { return 1 };
+    let cfg = config(args);
+    let p = match args.get_or("pattern", "diamond") {
+        "diamond" => library::diamond(),
+        "4cycle" => library::cycle(4),
+        "tailed-triangle" => library::tailed_triangle(),
+        other => {
+            eprintln!("unknown pattern '{other}'");
+            return 2;
+        }
+    };
+    let (c, t) = timed(|| sl::sl_count(&g, &p, &cfg).0);
+    println!("embeddings = {c}  [{}]", fmt_secs(t));
+    0
+}
+
+fn cmd_fsm(args: &Args) -> i32 {
+    let Some(g) = load_graph(args) else { return 1 };
+    if !g.is_labeled() {
+        eprintln!("FSM needs a labeled graph (e.g. --graph pa-mini)");
+        return 2;
+    }
+    let cfg = config(args);
+    let k = args.get_usize("k", 3);
+    let sigma = args.get_u64("sigma", 100);
+    let (r, t) = if args.flag("bfs") {
+        timed(|| fsm_app::fsm_bfs(&g, k, sigma, &cfg))
+    } else if args.flag("peregrine") {
+        timed(|| sandslash::apps::baselines::peregrine_fsm::peregrine_fsm(&g, k, sigma, &cfg))
+    } else {
+        timed(|| fsm_app::fsm(&g, k, sigma, &cfg))
+    };
+    println!("{} frequent patterns (k<={k}, sigma>{sigma})  [{}]", r.frequent.len(), fmt_secs(t));
+    for f in r.frequent.iter().take(args.get_usize("show", 10)) {
+        println!("  {}  support={}", f.pattern, f.support);
+    }
+    0
+}
+
+fn cmd_accel(args: &Args) -> i32 {
+    let Some(g) = load_graph(args) else { return 1 };
+    let dir = args.get_or("artifacts", "artifacts");
+    let cfg = config(args);
+    let accel = match sandslash::runtime::accel::Accelerator::load(dir) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("accelerator load failed: {e:#}");
+            return 1;
+        }
+    };
+    println!("PJRT platform: {}", accel.platform());
+    let (want, t_cpu) = timed(|| tc::tc_hi(&g, &cfg));
+    let (got, t_xla) = timed(|| accel.triangle_count(&g));
+    match got {
+        Ok(got) => {
+            println!(
+                "triangles: combinatorial={want} [{}]  xla-tiled={got} [{}]",
+                fmt_secs(t_cpu),
+                fmt_secs(t_xla)
+            );
+            if got != want {
+                eprintln!("MISMATCH");
+                return 1;
+            }
+        }
+        Err(e) => {
+            eprintln!("xla path failed: {e:#}");
+            return 1;
+        }
+    }
+    if args.flag("motif4") {
+        let (hi, t_hi) = timed(|| motif::motif4_hi(&g, &cfg).0);
+        let (acc4, t_acc) = timed(|| accel.motif4(&g, &cfg));
+        match acc4 {
+            Ok(acc4) => {
+                println!("4-motifs: engine [{}] vs accel [{}]", fmt_secs(t_hi), fmt_secs(t_acc));
+                for (i, name) in library::MOTIF4_NAMES.iter().enumerate() {
+                    println!("  {name:>16}: engine={} accel={}", hi[i], acc4[i]);
+                }
+                if hi != acc4 {
+                    eprintln!("MISMATCH");
+                    return 1;
+                }
+            }
+            Err(e) => {
+                eprintln!("accel motif4 failed: {e:#}");
+                return 1;
+            }
+        }
+    }
+    0
+}
+
+fn cmd_campaign(args: &Args) -> i32 {
+    let which = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
+    let un: Vec<&str> = datasets::unlabeled_names().to_vec();
+    let la: Vec<&str> = datasets::labeled_names().to_vec();
+    let mut rows = Vec::new();
+    match which {
+        "table5" => rows.extend(campaign::table5(&un)),
+        "table6" => rows.extend(campaign::table6(&["lj-tiny", "or-tiny", "fr-tiny"], &[4, 5])),
+        "table7" => rows.extend(campaign::table7(&["lj-tiny", "or-tiny"], &[3, 4])),
+        "table8" => rows.extend(campaign::table8(&["lj-tiny", "or-tiny", "fr-tiny"])),
+        "table9" => rows.extend(campaign::table9(&["pa-tiny", "yo-tiny", "pdb-tiny"], 3, &[2, 4, 10])),
+        "fig8" => rows.extend(campaign::fig8(&["lj-tiny", "or-tiny"], 4)),
+        "fig9" => rows.extend(campaign::fig9(&["or-tiny", "fr-tiny"], 8)),
+        "fig10" => rows.extend(campaign::fig10(&["or-tiny", "fr-tiny"])),
+        "fig11" => rows.extend(campaign::fig11("fr-tiny", 4..=8)),
+        "scaling" => rows.extend(campaign::scaling(
+            "lj-mini",
+            sandslash::util::pool::default_threads(),
+        )),
+        "all" => {
+            rows.extend(campaign::table5(&un));
+            rows.extend(campaign::table6(&["lj-tiny", "or-tiny", "fr-tiny"], &[4, 5]));
+            rows.extend(campaign::table7(&["lj-tiny", "or-tiny"], &[3, 4]));
+            rows.extend(campaign::table8(&["lj-tiny", "or-tiny", "fr-tiny"]));
+            rows.extend(campaign::table9(&["pa-tiny", "yo-tiny", "pdb-tiny"], 3, &[2, 4, 10]));
+            rows.extend(campaign::fig8(&["lj-tiny", "or-tiny"], 4));
+            rows.extend(campaign::fig9(&["or-tiny", "fr-tiny"], 8));
+            rows.extend(campaign::fig10(&["or-tiny", "fr-tiny"]));
+            rows.extend(campaign::fig11("fr-tiny", 4..=8));
+        }
+        other => {
+            eprintln!("unknown campaign '{other}'");
+            return 2;
+        }
+    }
+    println!("{}", campaign::to_markdown(&rows));
+    if let Some(out) = args.get("out") {
+        if let Err(e) = std::fs::write(out, campaign::to_markdown(&rows)) {
+            eprintln!("write {out}: {e}");
+            return 1;
+        }
+    }
+    0
+}

@@ -1,0 +1,205 @@
+//! Canonical codes for small patterns.
+//!
+//! A canonical code is a total-order invariant of the isomorphism class:
+//! two patterns are isomorphic iff their codes are equal. We use the
+//! lexicographically-minimal (label-sequence, adjacency-bitstring) over
+//! all vertex permutations, with degree/label partition pruning — cheap
+//! for the ≤ 8-vertex patterns GPM mines, and exact. This implements the
+//! paper's pattern classification fallback (Appendix B.5) and pattern
+//! identity for FSM sub-pattern binning.
+
+use super::pgraph::Pattern;
+
+/// Canonical code: (n, labels in canonical order, upper-triangle
+/// adjacency bits row-major).
+#[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct CanonCode {
+    pub n: u8,
+    pub labels: Vec<u32>,
+    pub bits: u64,
+}
+
+/// Compute the canonical code by brute-force minimization over
+/// permutations, pruned by sorting vertices into (label, degree) classes
+/// first (only permutations within classes can be minimal).
+pub fn canonical_code(p: &Pattern) -> CanonCode {
+    canonical_form(p).0
+}
+
+/// Canonical code plus the minimizing permutation (perm[old] = canonical
+/// position). Needed by FSM to align embedding mappings of isomorphic
+/// children into a shared position space before binning.
+pub fn canonical_form(p: &Pattern) -> (CanonCode, Vec<usize>) {
+    let n = p.num_vertices();
+    assert!(n <= 8, "canonical_code supports patterns up to 8 vertices");
+    // group vertices by (label, degree) signature — the canonical order
+    // must list signature groups in sorted order, so we only permute
+    // within groups.
+    let mut verts: Vec<usize> = (0..n).collect();
+    verts.sort_by_key(|&v| (p.label(v), std::cmp::Reverse(p.degree(v)), v));
+
+    let mut best: Option<(CanonCode, Vec<usize>)> = None;
+    let mut perm: Vec<usize> = vec![0; n]; // perm[old] = new position
+    permute_groups(p, &verts, 0, &mut perm, &mut best);
+    best.unwrap()
+}
+
+fn signature(p: &Pattern, v: usize) -> (u32, std::cmp::Reverse<usize>) {
+    (p.label(v), std::cmp::Reverse(p.degree(v)))
+}
+
+fn permute_groups(
+    p: &Pattern,
+    sorted: &[usize],
+    pos: usize,
+    perm: &mut Vec<usize>,
+    best: &mut Option<(CanonCode, Vec<usize>)>,
+) {
+    let n = p.num_vertices();
+    if pos == n {
+        let code = encode(p, perm);
+        if best.as_ref().map(|(b, _)| code < *b).unwrap_or(true) {
+            *best = Some((code, perm.clone()));
+        }
+        return;
+    }
+    // find the signature group containing position `pos`
+    let sig = signature(p, sorted[pos]);
+    let group_end = (pos..n)
+        .take_while(|&i| signature(p, sorted[i]) == sig)
+        .last()
+        .unwrap()
+        + 1;
+    // try every unused member of the group at position `pos`
+    let mut members: Vec<usize> = sorted[pos..group_end].to_vec();
+    heap_permutations(&mut members, &mut |order| {
+        for (off, &v) in order.iter().enumerate() {
+            perm[v] = pos + off;
+        }
+        permute_groups_rest(p, sorted, group_end, perm, best);
+    });
+}
+
+fn permute_groups_rest(
+    p: &Pattern,
+    sorted: &[usize],
+    pos: usize,
+    perm: &mut Vec<usize>,
+    best: &mut Option<(CanonCode, Vec<usize>)>,
+) {
+    permute_groups(p, sorted, pos, perm, best)
+}
+
+fn heap_permutations(xs: &mut Vec<usize>, f: &mut impl FnMut(&[usize])) {
+    let n = xs.len();
+    if n == 0 {
+        f(xs);
+        return;
+    }
+    let mut c = vec![0usize; n];
+    f(xs);
+    let mut i = 0;
+    while i < n {
+        if c[i] < i {
+            if i % 2 == 0 {
+                xs.swap(0, i);
+            } else {
+                xs.swap(c[i], i);
+            }
+            f(xs);
+            c[i] += 1;
+            i = 0;
+        } else {
+            c[i] = 0;
+            i += 1;
+        }
+    }
+}
+
+fn encode(p: &Pattern, perm: &[usize]) -> CanonCode {
+    let n = p.num_vertices();
+    let mut inv = vec![0usize; n]; // inv[new] = old
+    for old in 0..n {
+        inv[perm[old]] = old;
+    }
+    let mut bits: u64 = 0;
+    let mut bit = 0;
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if p.has_edge(inv[i], inv[j]) {
+                bits |= 1 << bit;
+            }
+            bit += 1;
+        }
+    }
+    CanonCode {
+        n: n as u8,
+        labels: (0..n).map(|i| p.label(inv[i])).collect(),
+        bits,
+    }
+}
+
+/// Graph isomorphism for small patterns, via canonical codes.
+pub fn isomorphic(a: &Pattern, b: &Pattern) -> bool {
+    a.num_vertices() == b.num_vertices()
+        && a.num_edges() == b.num_edges()
+        && canonical_code(a) == canonical_code(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relabeled_patterns_share_code() {
+        let p = Pattern::from_edges(&[(0, 1), (1, 2), (2, 3)]); // path
+        let q = Pattern::from_edges(&[(0, 2), (2, 1), (1, 3)]); // same path, renamed
+        assert_eq!(canonical_code(&p), canonical_code(&q));
+        assert!(isomorphic(&p, &q));
+    }
+
+    #[test]
+    fn distinguishes_path_from_star() {
+        let path = Pattern::from_edges(&[(0, 1), (1, 2), (2, 3)]);
+        let star = Pattern::from_edges(&[(0, 1), (0, 2), (0, 3)]);
+        assert!(!isomorphic(&path, &star));
+    }
+
+    #[test]
+    fn distinguishes_by_labels() {
+        let mut a = Pattern::from_edges(&[(0, 1)]);
+        a.set_label(0, 1);
+        a.set_label(1, 2);
+        let mut b = Pattern::from_edges(&[(0, 1)]);
+        b.set_label(0, 2);
+        b.set_label(1, 1);
+        // same structure, label multiset equal -> isomorphic as labeled graphs
+        assert_eq!(canonical_code(&a), canonical_code(&b));
+        let mut c = Pattern::from_edges(&[(0, 1)]);
+        c.set_label(0, 1);
+        c.set_label(1, 1);
+        assert_ne!(canonical_code(&a), canonical_code(&c));
+    }
+
+    #[test]
+    fn labeled_wedge_symmetry() {
+        // wedge u-c-v: labels (1,9,2) and (2,9,1) are the same labeled
+        // pattern; (1,9,1) differs.
+        let mk = |lu, lc, lv| {
+            let mut p = Pattern::from_edges(&[(0, 1), (1, 2)]);
+            p.set_label(0, lu);
+            p.set_label(1, lc);
+            p.set_label(2, lv);
+            p
+        };
+        assert_eq!(canonical_code(&mk(1, 9, 2)), canonical_code(&mk(2, 9, 1)));
+        assert_ne!(canonical_code(&mk(1, 9, 2)), canonical_code(&mk(1, 9, 1)));
+    }
+
+    #[test]
+    fn clique_code_is_all_ones() {
+        let k4 = Pattern::from_edges(&[(0, 1), (0, 2), (0, 3), (1, 2), (1, 3), (2, 3)]);
+        let code = canonical_code(&k4);
+        assert_eq!(code.bits, 0b111111);
+    }
+}

@@ -1,0 +1,140 @@
+//! Pattern constructors and motif enumeration — the paper's "helper
+//! functions to enumerate a clique or all patterns of a given size k"
+//! (§3.1 footnote 2).
+
+use super::canonical::{canonical_code, CanonCode};
+use super::pgraph::Pattern;
+
+pub fn clique(k: usize) -> Pattern {
+    let mut p = Pattern::new(k);
+    for u in 0..k {
+        for v in (u + 1)..k {
+            p.add_edge(u, v);
+        }
+    }
+    p
+}
+
+pub fn triangle() -> Pattern {
+    clique(3)
+}
+
+pub fn path(k: usize) -> Pattern {
+    let mut p = Pattern::new(k);
+    for v in 1..k {
+        p.add_edge(v - 1, v);
+    }
+    p
+}
+
+pub fn wedge() -> Pattern {
+    path(3)
+}
+
+pub fn cycle(k: usize) -> Pattern {
+    let mut p = path(k);
+    p.add_edge(k - 1, 0);
+    p
+}
+
+/// Star with `leaves` leaves (center = vertex 0).
+pub fn star(leaves: usize) -> Pattern {
+    let mut p = Pattern::new(leaves + 1);
+    for v in 1..=leaves {
+        p.add_edge(0, v);
+    }
+    p
+}
+
+/// Diamond = K4 minus one edge.
+pub fn diamond() -> Pattern {
+    Pattern::from_edges(&[(0, 1), (0, 2), (1, 2), (1, 3), (2, 3)])
+}
+
+/// Tailed triangle = triangle with a pendant edge.
+pub fn tailed_triangle() -> Pattern {
+    Pattern::from_edges(&[(0, 1), (0, 2), (1, 2), (2, 3)])
+}
+
+/// All connected k-vertex motifs (vertex-induced patterns), one per
+/// isomorphism class, enumerated by brute force over edge subsets and
+/// deduplicated by canonical code. k=3 -> 2 motifs, k=4 -> 6, k=5 -> 21
+/// (Fig. 1 of the paper shows the 3- and 4-vertex sets).
+pub fn all_motifs(k: usize) -> Vec<Pattern> {
+    assert!((2..=6).contains(&k));
+    let pairs: Vec<(usize, usize)> = (0..k)
+        .flat_map(|u| ((u + 1)..k).map(move |v| (u, v)))
+        .collect();
+    let mut seen: Vec<CanonCode> = Vec::new();
+    let mut out = Vec::new();
+    for mask in 0u32..(1 << pairs.len()) {
+        let mut p = Pattern::new(k);
+        for (i, &(u, v)) in pairs.iter().enumerate() {
+            if mask >> i & 1 == 1 {
+                p.add_edge(u, v);
+            }
+        }
+        if !p.is_connected() {
+            continue;
+        }
+        let code = canonical_code(&p);
+        if !seen.contains(&code) {
+            seen.push(code);
+            out.push(p);
+        }
+    }
+    // stable order: by edge count then code — gives deterministic motif ids
+    let mut indexed: Vec<(usize, CanonCode, Pattern)> = out
+        .into_iter()
+        .map(|p| (p.num_edges(), canonical_code(&p), p))
+        .collect();
+    indexed.sort_by(|a, b| (a.0, &a.1).cmp(&(b.0, &b.1)));
+    indexed.into_iter().map(|(_, _, p)| p).collect()
+}
+
+/// Human names for the 3-motifs in `all_motifs(3)` order.
+pub const MOTIF3_NAMES: [&str; 2] = ["wedge", "triangle"];
+/// Human names for the 4-motifs in `all_motifs(4)` order.
+pub const MOTIF4_NAMES: [&str; 6] =
+    ["3-star", "4-path", "tailed-triangle", "4-cycle", "diamond", "4-clique"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pattern::canonical::isomorphic;
+
+    #[test]
+    fn motif_counts_match_theory() {
+        assert_eq!(all_motifs(3).len(), 2);
+        assert_eq!(all_motifs(4).len(), 6);
+        assert_eq!(all_motifs(5).len(), 21);
+    }
+
+    #[test]
+    fn motif3_order_is_wedge_triangle() {
+        let m = all_motifs(3);
+        assert!(isomorphic(&m[0], &wedge()));
+        assert!(isomorphic(&m[1], &triangle()));
+    }
+
+    #[test]
+    fn motif4_order_matches_names() {
+        let m = all_motifs(4);
+        assert!(isomorphic(&m[0], &star(3)));
+        assert!(isomorphic(&m[1], &path(4)));
+        assert!(isomorphic(&m[2], &tailed_triangle()));
+        assert!(isomorphic(&m[3], &cycle(4)));
+        assert!(isomorphic(&m[4], &diamond()));
+        assert!(isomorphic(&m[5], &clique(4)));
+    }
+
+    #[test]
+    fn constructors_have_expected_shape() {
+        assert!(clique(5).is_clique());
+        assert_eq!(cycle(5).num_edges(), 5);
+        assert_eq!(star(4).num_vertices(), 5);
+        assert_eq!(diamond().num_edges(), 5);
+        assert_eq!(tailed_triangle().num_edges(), 4);
+        assert_eq!(path(4).min_degree(), 1);
+    }
+}

@@ -1,0 +1,207 @@
+//! Pattern-guided search plans (paper Appendix B.3 "Matching Order").
+//!
+//! For an explicit pattern, Sandslash analyzes the pattern once and emits
+//! a `MatchingPlan`: the order in which pattern vertices are matched plus
+//! per-level constraint masks (adjacency, induced non-adjacency, symmetry
+//! partial orders, labels, degree bounds). The DFS engine interprets the
+//! plan directly — this is the "Sandslash generates toExtend/toAdd
+//! automatically for explicit-pattern problems" of Appendix B.4.
+//!
+//! Order selection is the paper's greedy: prefer placing vertices that
+//! (1) participate in more symmetry-breaking partial orders with already
+//! placed vertices, then (2) have more edges to placed vertices (denser
+//! sub-pattern first).
+
+use super::pgraph::Pattern;
+use super::symmetry::symmetry_constraints;
+
+#[derive(Clone, Debug)]
+pub struct LevelPlan {
+    /// Original pattern vertex matched at this position.
+    pub pattern_vertex: usize,
+    /// Positions j < i whose match must be adjacent to the candidate.
+    pub adj_mask: u32,
+    /// Positions j < i whose match must NOT be adjacent (vertex-induced).
+    pub nonadj_mask: u32,
+    /// Candidate id must be greater than matches at these positions.
+    pub gt_mask: u32,
+    /// Candidate id must be less than matches at these positions.
+    pub lt_mask: u32,
+    /// Position whose neighborhood the engine scans for candidates
+    /// (must be set in `adj_mask`); position 0 has no pivot.
+    pub pivot: usize,
+    /// Required vertex label (0 when unlabeled).
+    pub label: u32,
+    /// Pattern degree of this vertex (degree-filtering bound).
+    pub degree: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct MatchingPlan {
+    pub levels: Vec<LevelPlan>,
+    pub vertex_induced: bool,
+    /// True if symmetry-breaking constraints are included in the masks.
+    pub sb: bool,
+}
+
+impl MatchingPlan {
+    pub fn size(&self) -> usize {
+        self.levels.len()
+    }
+}
+
+/// Build a matching plan for `p`. `vertex_induced` adds non-adjacency
+/// constraints; `sb` embeds symmetry-breaking partial orders.
+pub fn plan(p: &Pattern, vertex_induced: bool, sb: bool) -> MatchingPlan {
+    let n = p.num_vertices();
+    assert!(n >= 1);
+    let constraints = if sb { symmetry_constraints(p) } else { Vec::new() };
+
+    // --- greedy order over original pattern vertices ---
+    let mut order: Vec<usize> = Vec::with_capacity(n);
+    let mut placed: u16 = 0;
+    // first vertex: most constraints, then max degree, then min id
+    let score0 = |v: usize| {
+        let c = constraints.iter().filter(|&&(a, b)| a == v || b == v).count();
+        (c, p.degree(v))
+    };
+    let first = (0..n).max_by_key(|&v| (score0(v), std::cmp::Reverse(v))).unwrap();
+    order.push(first);
+    placed |= 1 << first;
+    while order.len() < n {
+        let next = (0..n)
+            .filter(|&v| placed >> v & 1 == 0)
+            .filter(|&v| p.adj_mask(v) & placed != 0) // stay connected
+            .max_by_key(|&v| {
+                let cons = constraints
+                    .iter()
+                    .filter(|&&(a, b)| {
+                        (a == v && placed >> b & 1 == 1) || (b == v && placed >> a & 1 == 1)
+                    })
+                    .count();
+                let edges = (p.adj_mask(v) & placed).count_ones();
+                (cons, edges, std::cmp::Reverse(v))
+            })
+            .expect("pattern must be connected");
+        order.push(next);
+        placed |= 1 << next;
+    }
+
+    // --- per-level constraint masks in position space ---
+    let mut pos_of = vec![0usize; n];
+    for (i, &v) in order.iter().enumerate() {
+        pos_of[v] = i;
+    }
+    let levels = order
+        .iter()
+        .enumerate()
+        .map(|(i, &v)| {
+            let mut adj_mask = 0u32;
+            let mut nonadj_mask = 0u32;
+            for j in 0..i {
+                let u = order[j];
+                if p.has_edge(u, v) {
+                    adj_mask |= 1 << j;
+                } else if vertex_induced {
+                    nonadj_mask |= 1 << j;
+                }
+            }
+            let mut gt_mask = 0u32;
+            let mut lt_mask = 0u32;
+            for &(a, b) in &constraints {
+                // constraint: match(a) < match(b)
+                if b == v && pos_of[a] < i {
+                    gt_mask |= 1 << pos_of[a];
+                }
+                if a == v && pos_of[b] < i {
+                    lt_mask |= 1 << pos_of[b];
+                }
+            }
+            // pivot: latest adjacent position (smallest expected frontier)
+            let pivot = if adj_mask == 0 {
+                0
+            } else {
+                31 - adj_mask.leading_zeros() as usize
+            };
+            LevelPlan {
+                pattern_vertex: v,
+                adj_mask,
+                nonadj_mask,
+                gt_mask,
+                lt_mask,
+                pivot,
+                label: p.label(v),
+                degree: p.degree(v),
+            }
+        })
+        .collect();
+
+    MatchingPlan { levels, vertex_induced, sb }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pattern::library;
+
+    #[test]
+    fn triangle_plan_is_total_order() {
+        let pl = plan(&library::triangle(), true, true);
+        assert_eq!(pl.size(), 3);
+        // every level after the first connects to all previous
+        assert_eq!(pl.levels[1].adj_mask, 0b1);
+        assert_eq!(pl.levels[2].adj_mask, 0b11);
+        // symmetry fully broken: each new vertex > some previous
+        assert!(pl.levels[1].gt_mask != 0);
+        assert!(pl.levels[2].gt_mask != 0);
+    }
+
+    #[test]
+    fn diamond_plan_matches_triangle_first() {
+        // paper Fig. 12: the chosen order matches a triangle before the
+        // 4th vertex (denser sub-pattern first).
+        let pl = plan(&library::diamond(), true, true);
+        let first3: Vec<usize> = pl.levels[..3].iter().map(|l| l.pattern_vertex).collect();
+        // positions 1 and 2 of the diamond are the degree-3 chord vertices
+        assert!(first3.contains(&1) && first3.contains(&2));
+        // level 2 closes a triangle (adjacent to both previous)
+        assert_eq!(pl.levels[2].adj_mask & 0b11, 0b11);
+    }
+
+    #[test]
+    fn wedge_plan_nonadjacency() {
+        let pl = plan(&library::wedge(), true, true);
+        // the two endpoints are mutually non-adjacent in an induced wedge
+        let last = &pl.levels[2];
+        assert_ne!(last.nonadj_mask, 0);
+        // endpoints are symmetric: a gt/lt constraint must exist somewhere
+        assert!(pl.levels.iter().any(|l| l.gt_mask != 0 || l.lt_mask != 0));
+    }
+
+    #[test]
+    fn edge_induced_plan_has_no_nonadjacency() {
+        let pl = plan(&library::cycle(4), false, true);
+        assert!(pl.levels.iter().all(|l| l.nonadj_mask == 0));
+    }
+
+    #[test]
+    fn pivot_always_adjacent_and_prior() {
+        for p in [library::clique(4), library::diamond(), library::cycle(4), library::star(3)] {
+            let pl = plan(&p, true, true);
+            for (i, l) in pl.levels.iter().enumerate().skip(1) {
+                assert!(l.adj_mask >> l.pivot & 1 == 1, "{p} level {i}");
+                assert!(l.pivot < i);
+            }
+        }
+    }
+
+    #[test]
+    fn order_is_permutation() {
+        for k in 3..=6 {
+            let pl = plan(&library::clique(k), true, true);
+            let mut vs: Vec<usize> = pl.levels.iter().map(|l| l.pattern_vertex).collect();
+            vs.sort_unstable();
+            assert_eq!(vs, (0..k).collect::<Vec<_>>());
+        }
+    }
+}

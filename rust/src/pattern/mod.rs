@@ -1,0 +1,12 @@
+//! Pattern analysis: representation, isomorphism/automorphism, symmetry
+//! breaking, matching orders and canonical codes.
+
+pub mod canonical;
+pub mod library;
+pub mod matching_order;
+pub mod pgraph;
+pub mod symmetry;
+
+pub use canonical::{canonical_code, isomorphic, CanonCode};
+pub use matching_order::{plan, MatchingPlan};
+pub use pgraph::Pattern;

@@ -1,0 +1,211 @@
+//! Small pattern graphs (≤ 16 vertices) with dense bitmask adjacency.
+//!
+//! A *pattern* (paper §2) is an explicitly-given small graph; embeddings
+//! of it are searched in the big CSR input graph. Patterns are specified
+//! as edge-lists exactly as in the paper's high-level API (e.g. TC's
+//! pattern is `{(0,1),(0,2),(1,2)}`).
+
+pub const MAX_PATTERN_VERTICES: usize = 16;
+
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct Pattern {
+    n: usize,
+    /// adj[i] = bitmask of neighbors of i.
+    adj: [u16; MAX_PATTERN_VERTICES],
+    /// Vertex labels (0 = unlabeled).
+    labels: [u32; MAX_PATTERN_VERTICES],
+}
+
+impl Pattern {
+    pub fn new(n: usize) -> Self {
+        assert!(n <= MAX_PATTERN_VERTICES);
+        Self { n, adj: [0; MAX_PATTERN_VERTICES], labels: [0; MAX_PATTERN_VERTICES] }
+    }
+
+    /// Build from an edge list; n = max endpoint + 1.
+    pub fn from_edges(edges: &[(usize, usize)]) -> Self {
+        let n = edges
+            .iter()
+            .map(|&(u, v)| u.max(v) + 1)
+            .max()
+            .unwrap_or(0);
+        let mut p = Self::new(n);
+        for &(u, v) in edges {
+            p.add_edge(u, v);
+        }
+        p
+    }
+
+    pub fn add_edge(&mut self, u: usize, v: usize) {
+        assert!(u != v && u < self.n && v < self.n);
+        self.adj[u] |= 1 << v;
+        self.adj[v] |= 1 << u;
+    }
+
+    pub fn set_label(&mut self, v: usize, label: u32) {
+        self.labels[v] = label;
+    }
+
+    pub fn label(&self, v: usize) -> u32 {
+        self.labels[v]
+    }
+
+    pub fn num_vertices(&self) -> usize {
+        self.n
+    }
+
+    pub fn num_edges(&self) -> usize {
+        (0..self.n).map(|i| self.adj[i].count_ones() as usize).sum::<usize>() / 2
+    }
+
+    #[inline]
+    pub fn has_edge(&self, u: usize, v: usize) -> bool {
+        self.adj[u] >> v & 1 == 1
+    }
+
+    #[inline]
+    pub fn adj_mask(&self, v: usize) -> u16 {
+        self.adj[v]
+    }
+
+    pub fn degree(&self, v: usize) -> usize {
+        self.adj[v].count_ones() as usize
+    }
+
+    pub fn min_degree(&self) -> usize {
+        (0..self.n).map(|v| self.degree(v)).min().unwrap_or(0)
+    }
+
+    pub fn edges(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        for u in 0..self.n {
+            for v in (u + 1)..self.n {
+                if self.has_edge(u, v) {
+                    out.push((u, v));
+                }
+            }
+        }
+        out
+    }
+
+    pub fn is_clique(&self) -> bool {
+        self.num_edges() == self.n * (self.n - 1) / 2
+    }
+
+    pub fn is_connected(&self) -> bool {
+        if self.n == 0 {
+            return true;
+        }
+        let mut seen: u16 = 1;
+        let mut frontier: u16 = 1;
+        while frontier != 0 {
+            let mut next: u16 = 0;
+            let mut f = frontier;
+            while f != 0 {
+                let v = f.trailing_zeros() as usize;
+                f &= f - 1;
+                next |= self.adj[v] & !seen;
+            }
+            seen |= next;
+            frontier = next;
+        }
+        seen.count_ones() as usize == self.n
+    }
+
+    pub fn is_labeled(&self) -> bool {
+        (0..self.n).any(|v| self.labels[v] != 0)
+    }
+
+    /// Induced sub-pattern on the vertex set given by `mask`, vertices
+    /// renumbered in ascending order.
+    pub fn induced(&self, mask: u16) -> Pattern {
+        let verts: Vec<usize> =
+            (0..self.n).filter(|&v| mask >> v & 1 == 1).collect();
+        let mut p = Pattern::new(verts.len());
+        for (i, &u) in verts.iter().enumerate() {
+            p.labels[i] = self.labels[u];
+            for (j, &v) in verts.iter().enumerate().skip(i + 1) {
+                if self.has_edge(u, v) {
+                    p.add_edge(i, j);
+                }
+            }
+        }
+        p
+    }
+
+    /// Apply a vertex permutation: new vertex `perm[i]` takes old `i`.
+    pub fn permuted(&self, perm: &[usize]) -> Pattern {
+        let mut p = Pattern::new(self.n);
+        for u in 0..self.n {
+            p.labels[perm[u]] = self.labels[u];
+            for v in (u + 1)..self.n {
+                if self.has_edge(u, v) {
+                    p.add_edge(perm[u], perm[v]);
+                }
+            }
+        }
+        p
+    }
+}
+
+impl std::fmt::Display for Pattern {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "P{}[", self.n)?;
+        for (i, (u, v)) in self.edges().iter().enumerate() {
+            if i > 0 {
+                write!(f, " ")?;
+            }
+            write!(f, "({u},{v})")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn triangle_basics() {
+        let p = Pattern::from_edges(&[(0, 1), (0, 2), (1, 2)]);
+        assert_eq!(p.num_vertices(), 3);
+        assert_eq!(p.num_edges(), 3);
+        assert!(p.is_clique() && p.is_connected());
+        assert_eq!(p.min_degree(), 2);
+    }
+
+    #[test]
+    fn wedge_is_not_clique() {
+        let p = Pattern::from_edges(&[(0, 1), (1, 2)]);
+        assert!(!p.is_clique());
+        assert!(p.is_connected());
+        assert_eq!(p.degree(1), 2);
+        assert_eq!(p.min_degree(), 1);
+    }
+
+    #[test]
+    fn disconnected_detected() {
+        let mut p = Pattern::new(4);
+        p.add_edge(0, 1);
+        p.add_edge(2, 3);
+        assert!(!p.is_connected());
+    }
+
+    #[test]
+    fn induced_subpattern() {
+        let diamond = Pattern::from_edges(&[(0, 1), (0, 2), (1, 2), (1, 3), (2, 3)]);
+        let tri = diamond.induced(0b0111);
+        assert_eq!(tri.num_edges(), 3);
+        assert!(tri.is_clique());
+        let edge = diamond.induced(0b1001); // vertices 0,3: non-adjacent
+        assert_eq!(edge.num_edges(), 0);
+    }
+
+    #[test]
+    fn permuted_preserves_edge_count() {
+        let p = Pattern::from_edges(&[(0, 1), (1, 2), (2, 3)]);
+        let q = p.permuted(&[3, 2, 1, 0]);
+        assert_eq!(q.num_edges(), 3);
+        assert!(q.has_edge(3, 2) && q.has_edge(2, 1) && q.has_edge(1, 0));
+    }
+}

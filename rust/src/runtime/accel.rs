@@ -1,0 +1,213 @@
+//! The accelerated counting path: Rust coordinator -> PJRT -> AOT
+//! Pallas kernels.
+//!
+//! Loads the HLO-text artifacts produced by `make artifacts`
+//! (python/compile/aot.py) once, compiles them on the PJRT CPU client,
+//! and streams dense adjacency tiles through them:
+//!
+//! * `tc_tile`:  Σ over (i,k,j) of sum((U_ik @ U_kj) ⊙ U_ij) = exact
+//!   triangle count on the oriented tiling.
+//! * `cn_tile`:  per-edge common-neighbour tiles -> local triangle
+//!   counts for formula-based 4-motif counting.
+//! * `motif_formulas`: batched Listing-3 local-count lanes.
+//!
+//! Python never runs here: artifacts are self-contained HLO text.
+
+use anyhow::{Context, Result};
+
+use crate::graph::CsrGraph;
+
+use super::pjrt::Runtime;
+use super::tiles::{TiledAdjacency, TILE};
+
+pub struct Accelerator {
+    rt: Runtime,
+    tc_tile: xla::PjRtLoadedExecutable,
+    cn_tile: xla::PjRtLoadedExecutable,
+    motif_formulas: xla::PjRtLoadedExecutable,
+    pub edge_lanes: usize,
+}
+
+impl Accelerator {
+    /// Load artifacts from the given directory (default: `artifacts/`).
+    pub fn load(dir: &str) -> Result<Self> {
+        let rt = Runtime::cpu()?;
+        let path = |n: &str| format!("{dir}/{n}.hlo.txt");
+        let tc_tile = rt
+            .load_hlo_text(&path("tc_tile"))
+            .with_context(|| "loading tc_tile (run `make artifacts`)")?;
+        let cn_tile = rt.load_hlo_text(&path("cn_tile"))?;
+        let motif_formulas = rt.load_hlo_text(&path("motif_formulas"))?;
+        Ok(Self { rt, tc_tile, cn_tile, motif_formulas, edge_lanes: 4096 })
+    }
+
+    pub fn platform(&self) -> String {
+        self.rt.platform()
+    }
+
+    fn lit(tile: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+        Ok(xla::Literal::vec1(tile).reshape(dims)?)
+    }
+
+    /// Exact triangle count via the tiled masked-matmul-trace kernel.
+    pub fn triangle_count(&self, g: &CsrGraph) -> Result<u64> {
+        let tiled = TiledAdjacency::build(g, true);
+        let mut total = 0f64;
+        let d = [TILE as i64, TILE as i64];
+        for (i, k, j) in tiled.triples() {
+            let x = Self::lit(tiled.tile(i, k).unwrap(), &d)?;
+            let y = Self::lit(tiled.tile(k, j).unwrap(), &d)?;
+            let m = Self::lit(tiled.tile(i, j).unwrap(), &d)?;
+            let out = self.tc_tile.execute::<xla::Literal>(&[x, y, m])?[0][0]
+                .to_literal_sync()?;
+            let v = out.to_tuple1()?.to_vec::<f32>()?;
+            total += v[0] as f64;
+        }
+        Ok(total as u64)
+    }
+
+    /// Per-edge local triangle counts for the whole (symmetric) tiling:
+    /// returns the tiled CN matrix as (tile row, tile col, dense tile).
+    pub fn common_neighbor_tiles(
+        &self,
+        tiled: &TiledAdjacency,
+    ) -> Result<Vec<(usize, usize, Vec<f32>)>> {
+        let d = [TILE as i64, TILE as i64];
+        let grid = tiled.grid;
+        let mut out = Vec::new();
+        for i in 0..grid {
+            for j in 0..grid {
+                let Some(mask) = tiled.tile(i, j) else { continue };
+                let mut acc = vec![0f32; TILE * TILE];
+                let mut any = false;
+                for k in 0..grid {
+                    let (Some(x), Some(y)) = (tiled.tile(i, k), tiled.tile(k, j)) else {
+                        continue;
+                    };
+                    let r = self
+                        .cn_tile
+                        .execute::<xla::Literal>(&[
+                            Self::lit(x, &d)?,
+                            Self::lit(y, &d)?,
+                            Self::lit(mask, &d)?,
+                        ])?[0][0]
+                        .to_literal_sync()?;
+                    let v = r.to_tuple1()?.to_vec::<f32>()?;
+                    for (a, b) in acc.iter_mut().zip(v) {
+                        *a += b;
+                    }
+                    any = true;
+                }
+                if any {
+                    out.push((i, j, acc));
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Run the batched motif-formula kernel over per-edge statistics.
+    /// Inputs are padded to `edge_lanes`; returns the 5 raw-count sums
+    /// [Σ C(tri,2), Σ tri(s_u+s_v), Σ s_u·s_v, Σ star3-lane, Σ wedge-lane].
+    pub fn motif_raw_sums(
+        &self,
+        tri: &[f32],
+        deg_u: &[f32],
+        deg_v: &[f32],
+    ) -> Result<[f64; 5]> {
+        assert_eq!(tri.len(), deg_u.len());
+        assert_eq!(tri.len(), deg_v.len());
+        let lanes = self.edge_lanes;
+        let mut sums = [0f64; 5];
+        let mut base = 0;
+        while base < tri.len() {
+            let n = lanes.min(tri.len() - base);
+            let pad = |xs: &[f32]| -> Vec<f32> {
+                let mut v = xs[base..base + n].to_vec();
+                v.resize(lanes, 0.0);
+                v
+            };
+            let valid: Vec<f32> = (0..lanes).map(|i| (i < n) as u32 as f32).collect();
+            let args = [
+                Self::lit(&pad(tri), &[lanes as i64])?,
+                Self::lit(&pad(deg_u), &[lanes as i64])?,
+                Self::lit(&pad(deg_v), &[lanes as i64])?,
+                Self::lit(&valid, &[lanes as i64])?,
+            ];
+            let r = self.motif_formulas.execute::<xla::Literal>(&args)?[0][0]
+                .to_literal_sync()?;
+            let v = r.to_tuple1()?.to_vec::<f32>()?; // [5, lanes] row-major
+            for row in 0..5 {
+                sums[row] += v[row * lanes..(row + 1) * lanes]
+                    .iter()
+                    .map(|&x| x as f64)
+                    .sum::<f64>();
+            }
+            base += n;
+        }
+        Ok(sums)
+    }
+
+    /// Accelerated 4-motif counting: per-edge triangle counts from the
+    /// CN kernel, raw sums from the formula kernel, anchors (4-clique,
+    /// induced 4-cycle) from the combinatorial engine, conversions on the
+    /// CPU. Returns counts in all_motifs(4) order.
+    pub fn motif4(&self, g: &CsrGraph, cfg: &crate::engine::MinerConfig) -> Result<Vec<u64>> {
+        // per-edge statistics through the L1 kernels
+        let (tri, du, dv) = per_edge_stats_via_kernels(self, g)?;
+        let raw = self.motif_raw_sums(&tri, &du, &dv)?;
+        let (raw_d, raw_tt, raw_p4) = (raw[0] as u64, raw[1] as u64, raw[2] as u64);
+        // anchors via the combinatorial engine
+        let (c4, _) = crate::apps::clique::clique_hi(g, 4, cfg);
+        let pl = crate::pattern::plan(&crate::pattern::library::cycle(4), true, true);
+        let (cy, _) = crate::engine::dfs::count(g, &pl, cfg, &crate::engine::hooks::NoHooks);
+        let raw_s3: u64 = (0..g.num_vertices() as u32)
+            .map(|v| {
+                let d = g.degree(v) as u64;
+                if d >= 3 {
+                    d * (d - 1) * (d - 2) / 6
+                } else {
+                    0
+                }
+            })
+            .sum();
+        let d = raw_d - 6 * c4;
+        let tt = (raw_tt - 4 * d) / 2;
+        let p4 = raw_p4 - 4 * cy;
+        let s3 = raw_s3 - tt - 2 * d - 4 * c4;
+        Ok(vec![s3, p4, tt, cy, d, c4])
+    }
+}
+
+/// Per-edge (tri, deg_u, deg_v) for all undirected edges, computing tri
+/// through the CN tile kernel on the symmetric tiling.
+fn per_edge_stats_via_kernels(
+    acc: &Accelerator,
+    g: &CsrGraph,
+) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+    use crate::graph::builder::{degree_desc_order, relabel};
+    let perm = degree_desc_order(g);
+    let h = relabel(g, &perm);
+    let tiled = TiledAdjacency::build(g, false); // tiles of h, symmetric
+    let cn = acc.common_neighbor_tiles(&tiled)?;
+    // index CN tiles for lookup
+    let grid = tiled.grid;
+    let mut cn_map: Vec<Option<Vec<f32>>> = (0..grid * grid).map(|_| None).collect();
+    for (i, j, t) in cn {
+        cn_map[i * grid + j] = Some(t);
+    }
+    let mut tri = Vec::new();
+    let mut du = Vec::new();
+    let mut dv = Vec::new();
+    for (u, v) in h.edges() {
+        let (r, c) = (u as usize, v as usize);
+        let t = cn_map[(r / TILE) * grid + c / TILE]
+            .as_ref()
+            .map(|t| t[(r % TILE) * TILE + (c % TILE)])
+            .unwrap_or(0.0);
+        tri.push(t);
+        du.push(h.degree(u) as f32);
+        dv.push(h.degree(v) as f32);
+    }
+    Ok((tri, du, dv))
+}

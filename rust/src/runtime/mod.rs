@@ -1,0 +1,7 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts (Layer 1/2 outputs) and
+//! execute them from the Rust hot path. Python never runs at mining
+//! time — `make artifacts` is strictly build-time.
+
+pub mod accel;
+pub mod pjrt;
+pub mod tiles;

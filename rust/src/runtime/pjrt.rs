@@ -1,0 +1,20 @@
+//! Thin wrapper over the `xla` crate's PJRT CPU client.
+use anyhow::Result;
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        Ok(Self { client: xla::PjRtClient::cpu()? })
+    }
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+    pub fn load_hlo_text(&self, path: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        Ok(self.client.compile(&comp)?)
+    }
+}

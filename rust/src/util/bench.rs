@@ -1,0 +1,90 @@
+//! Micro/macro benchmark harness (substitute for `criterion`, which is
+//! not in the offline registry). `cargo bench` targets use
+//! `harness = false` and drive this directly.
+//!
+//! Protocol: warm up once, then run until `min_runs` samples or
+//! `max_seconds` elapsed, reporting min/median/mean. Benches print the
+//! paper-table rows they regenerate.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Vec<f64>,
+}
+
+impl BenchResult {
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+    pub fn mean(&self) -> f64 {
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+    pub fn median(&self) -> f64 {
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s[s.len() / 2]
+    }
+}
+
+pub struct Bench {
+    pub min_runs: usize,
+    pub max_seconds: f64,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self { min_runs: 3, max_seconds: 10.0 }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Self { min_runs: 2, max_seconds: 5.0 }
+    }
+
+    /// Run `f` repeatedly; returns timing samples. The closure's return
+    /// value is black-boxed to keep the optimizer honest.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+        // warmup
+        std::hint::black_box(f());
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.min_runs
+            || (start.elapsed().as_secs_f64() < self.max_seconds && samples.len() < 25)
+        {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t.elapsed().as_secs_f64());
+            if start.elapsed().as_secs_f64() >= self.max_seconds && samples.len() >= self.min_runs
+            {
+                break;
+            }
+        }
+        BenchResult { name: name.to_string(), samples }
+    }
+}
+
+/// Print a markdown table of results: one row per (row_label, cells).
+pub fn print_table(title: &str, columns: &[&str], rows: &[(String, Vec<String>)]) {
+    println!("\n### {title}\n");
+    println!("| | {} |", columns.join(" | "));
+    println!("|---|{}|", columns.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+    for (label, cells) in rows {
+        println!("| {} | {} |", label, cells.join(" | "));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_at_least_min_runs() {
+        let b = Bench { min_runs: 4, max_seconds: 0.05 };
+        let r = b.run("noop", || 1 + 1);
+        assert!(r.samples.len() >= 4);
+        assert!(r.min() >= 0.0);
+        assert!(r.median() >= r.min());
+    }
+}

@@ -1,0 +1,119 @@
+//! Fixed-capacity bitset over `Vec<u64>` words.
+//!
+//! Used for visited sets during search, k-core peeling, MNI domains, and
+//! dense-tile extraction. Clearing tracks touched words so repeated use
+//! inside the DFS hot loop is O(touched), not O(capacity).
+
+#[derive(Clone, Debug, Default)]
+pub struct BitSet {
+    words: Vec<u64>,
+    /// Indices of words that may be non-zero (for sparse clearing).
+    touched: Vec<u32>,
+}
+
+impl BitSet {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            words: vec![0; capacity.div_ceil(64)],
+            touched: Vec::new(),
+        }
+    }
+
+    #[inline]
+    pub fn capacity(&self) -> usize {
+        self.words.len() * 64
+    }
+
+    #[inline]
+    pub fn insert(&mut self, i: usize) {
+        let w = i / 64;
+        if self.words[w] == 0 {
+            self.touched.push(w as u32);
+        }
+        self.words[w] |= 1u64 << (i % 64);
+    }
+
+    #[inline]
+    pub fn remove(&mut self, i: usize) {
+        self.words[i / 64] &= !(1u64 << (i % 64));
+    }
+
+    #[inline]
+    pub fn contains(&self, i: usize) -> bool {
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    /// Sparse clear: only zero the words touched since the last clear.
+    pub fn clear(&mut self) {
+        for &w in &self.touched {
+            self.words[w as usize] = 0;
+        }
+        self.touched.clear();
+    }
+
+    /// Full O(capacity) clear (use after bulk ops that bypass `insert`).
+    pub fn clear_all(&mut self) {
+        self.words.iter_mut().for_each(|w| *w = 0);
+        self.touched.clear();
+    }
+
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    pub fn iter_ones(&self) -> impl Iterator<Item = usize> + '_ {
+        self.words.iter().enumerate().flat_map(|(wi, &w)| {
+            let mut bits = w;
+            std::iter::from_fn(move || {
+                if bits == 0 {
+                    None
+                } else {
+                    let b = bits.trailing_zeros() as usize;
+                    bits &= bits - 1;
+                    Some(wi * 64 + b)
+                }
+            })
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_contains_remove() {
+        let mut b = BitSet::new(200);
+        b.insert(0);
+        b.insert(63);
+        b.insert(64);
+        b.insert(199);
+        assert!(b.contains(0) && b.contains(63) && b.contains(64) && b.contains(199));
+        assert!(!b.contains(100));
+        b.remove(63);
+        assert!(!b.contains(63));
+        assert_eq!(b.count_ones(), 3);
+    }
+
+    #[test]
+    fn sparse_clear_resets() {
+        let mut b = BitSet::new(1 << 16);
+        for i in [5usize, 1000, 60000] {
+            b.insert(i);
+        }
+        b.clear();
+        assert_eq!(b.count_ones(), 0);
+        for i in [5usize, 1000, 60000] {
+            assert!(!b.contains(i));
+        }
+    }
+
+    #[test]
+    fn iter_ones_sorted() {
+        let mut b = BitSet::new(300);
+        for i in [7usize, 64, 65, 255] {
+            b.insert(i);
+        }
+        assert_eq!(b.iter_ones().collect::<Vec<_>>(), vec![7, 64, 65, 255]);
+    }
+}

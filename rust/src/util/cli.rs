@@ -1,0 +1,111 @@
+//! Minimal command-line argument parser (no external crates available in
+//! the offline registry, so this substitutes for `clap`).
+//!
+//! Grammar: `sandslash <subcommand> [positional...] [--key value|--flag]`.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: HashMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Self {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(name.to_string(), v);
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string))
+    }
+
+    #[test]
+    fn parses_subcommand_and_options() {
+        let a = parse("tc --graph lj-mini --threads 8 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("tc"));
+        assert_eq!(a.get("graph"), Some("lj-mini"));
+        assert_eq!(a.get_usize("threads", 1), 8);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn parses_eq_form_and_positionals() {
+        let a = parse("gen rmat --n=1000 out.el");
+        assert_eq!(a.subcommand.as_deref(), Some("gen"));
+        assert_eq!(a.positional, vec!["rmat", "out.el"]);
+        assert_eq!(a.get_u64("n", 0), 1000);
+    }
+
+    #[test]
+    fn trailing_flag_not_eaten_as_value() {
+        let a = parse("motif --k 4 --lo");
+        assert_eq!(a.get_usize("k", 0), 4);
+        assert!(a.flag("lo"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("tc");
+        assert_eq!(a.get_or("graph", "er-small"), "er-small");
+        assert_eq!(a.get_f64("density", 0.5), 0.5);
+    }
+}

@@ -1,0 +1,103 @@
+//! Key-value configuration files (substitute for serde/TOML).
+//!
+//! Format: one `key = value` per line; `#` comments; `[section]` headers
+//! prefix keys as `section.key`. Used by the campaign driver to describe
+//! dataset registries and experiment sweeps.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+#[derive(Debug, Default, Clone)]
+pub struct Config {
+    pub values: BTreeMap<String, String>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: unterminated section", lineno + 1))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{}.{}", section, k.trim())
+            };
+            values.insert(key, v.trim().to_string());
+        }
+        Ok(Self { values })
+    }
+
+    pub fn load(path: &Path) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path:?}: {e}"))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// All keys within a section (returned without the section prefix).
+    pub fn section(&self, name: &str) -> BTreeMap<String, String> {
+        let prefix = format!("{name}.");
+        self.values
+            .iter()
+            .filter_map(|(k, v)| {
+                k.strip_prefix(&prefix).map(|s| (s.to_string(), v.clone()))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_comments() {
+        let c = Config::parse(
+            "top = 1\n# comment\n[graphs]\nlj = rmat:17  # inline\nor = rmat:16\n",
+        )
+        .unwrap();
+        assert_eq!(c.get("top"), Some("1"));
+        assert_eq!(c.get("graphs.lj"), Some("rmat:17"));
+        let s = c.section("graphs");
+        assert_eq!(s.len(), 2);
+        assert_eq!(s["or"], "rmat:16");
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(Config::parse("novalue\n").is_err());
+        assert!(Config::parse("[unclosed\n").is_err());
+    }
+
+    #[test]
+    fn typed_getters() {
+        let c = Config::parse("n = 42\nf = 2.5\n").unwrap();
+        assert_eq!(c.get_usize("n", 0), 42);
+        assert_eq!(c.get_f64("f", 0.0), 2.5);
+        assert_eq!(c.get_usize("missing", 7), 7);
+    }
+}

@@ -1,0 +1,89 @@
+//! Search-space and runtime metrics.
+//!
+//! The paper's Fig. 10 compares the *number of enumerated embeddings*
+//! between Sandslash-Hi and Sandslash-Lo; these counters regenerate that
+//! figure. Counters are plain `u64` aggregated through the per-thread
+//! reduce path (no atomics in the hot loop).
+
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct SearchStats {
+    /// Embeddings materialized at any level of the embedding tree.
+    pub enumerated: u64,
+    /// Embeddings that reached full pattern size (leaves).
+    pub matches: u64,
+    /// Candidates rejected by pruning (SB, DF, connectivity, FP).
+    pub pruned: u64,
+    /// Intersection operations performed.
+    pub intersections: u64,
+    /// Local-graph vertices materialized (LG overhead proxy).
+    pub lg_vertices: u64,
+}
+
+impl SearchStats {
+    pub fn merge(&mut self, other: &SearchStats) {
+        self.enumerated += other.enumerated;
+        self.matches += other.matches;
+        self.pruned += other.pruned;
+        self.intersections += other.intersections;
+        self.lg_vertices += other.lg_vertices;
+    }
+}
+
+/// One row of a result report (used by the campaign driver + benches).
+#[derive(Debug, Clone)]
+pub struct ResultRow {
+    pub experiment: String,
+    pub system: String,
+    pub graph: String,
+    pub params: String,
+    pub seconds: f64,
+    pub value: String,
+}
+
+impl ResultRow {
+    pub fn markdown_header() -> String {
+        "| experiment | system | graph | params | time | result |\n|---|---|---|---|---|---|".to_string()
+    }
+
+    pub fn to_markdown(&self) -> String {
+        format!(
+            "| {} | {} | {} | {} | {} | {} |",
+            self.experiment,
+            self.system,
+            self.graph,
+            self.params,
+            crate::util::timer::fmt_secs(self.seconds),
+            self.value
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = SearchStats { enumerated: 1, matches: 2, pruned: 3, intersections: 4, lg_vertices: 5 };
+        let b = SearchStats { enumerated: 10, matches: 20, pruned: 30, intersections: 40, lg_vertices: 50 };
+        a.merge(&b);
+        assert_eq!(a.enumerated, 11);
+        assert_eq!(a.matches, 22);
+        assert_eq!(a.pruned, 33);
+        assert_eq!(a.intersections, 44);
+        assert_eq!(a.lg_vertices, 55);
+    }
+
+    #[test]
+    fn markdown_row_shape() {
+        let r = ResultRow {
+            experiment: "table5".into(),
+            system: "sandslash-hi".into(),
+            graph: "lj-mini".into(),
+            params: "".into(),
+            seconds: 0.5,
+            value: "42".into(),
+        };
+        assert_eq!(r.to_markdown().matches('|').count(), 7);
+    }
+}

@@ -1,0 +1,12 @@
+//! Infrastructure substrates built from scratch (the offline crate
+//! registry has no `rand`/`clap`/`serde`/`rayon`/`criterion`, so the
+//! framework ships its own equivalents).
+
+pub mod bench;
+pub mod bitset;
+pub mod cli;
+pub mod config;
+pub mod metrics;
+pub mod pool;
+pub mod rng;
+pub mod timer;

@@ -1,0 +1,62 @@
+//! Wall-clock timing helpers used by apps, benches and the campaign
+//! driver.
+
+use std::time::Instant;
+
+/// Simple stopwatch.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn seconds(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn millis(&self) -> f64 {
+        self.seconds() * 1e3
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Timer::start();
+    let out = f();
+    (out, t.seconds())
+}
+
+/// Human format for seconds: "123 ms", "4.56 s", "2.1 min".
+pub fn fmt_secs(s: f64) -> String {
+    if !s.is_finite() {
+        "—".to_string()
+    } else if s < 1.0 {
+        format!("{:.1} ms", s * 1e3)
+    } else if s < 120.0 {
+        format!("{s:.2} s")
+    } else {
+        format!("{:.1} min", s / 60.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timed_returns_value_and_positive_time() {
+        let (v, secs) = timed(|| 21 * 2);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_secs(0.002).ends_with("ms"));
+        assert!(fmt_secs(3.5).ends_with(" s"));
+        assert!(fmt_secs(300.0).ends_with("min"));
+    }
+}

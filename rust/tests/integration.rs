@@ -1,0 +1,145 @@
+//! Cross-engine integration tests: every path through the system must
+//! agree on every count, across graph families, thread counts and
+//! optimization presets.
+
+use sandslash::apps::baselines::emulation::{self, System};
+use sandslash::apps::baselines::{gap_tc, kclist, peregrine_fsm, pgd};
+use sandslash::apps::{clique, fsm_app, motif, sl, solve, tc, MiningOutput};
+use sandslash::engine::{MinerConfig, OptFlags, ProblemSpec};
+use sandslash::graph::gen;
+use sandslash::pattern::library;
+
+fn cfg() -> MinerConfig {
+    MinerConfig { threads: 4, chunk: 16, opts: OptFlags::hi() }
+}
+
+const SYSTEMS: [System; 5] = [
+    System::SandslashHi,
+    System::SandslashLo,
+    System::AutomineLike,
+    System::PangolinLike,
+    System::PeregrineLike,
+];
+
+#[test]
+fn tc_all_paths_agree_across_families() {
+    for g in [
+        gen::rmat(9, 8, 1, &[]),
+        gen::erdos_renyi(500, 0.03, 2, &[]),
+        gen::barabasi_albert(600, 5, 3, &[]),
+    ] {
+        let want = tc::tc_hi(&g, &cfg());
+        assert_eq!(gap_tc::gap_tc(&g, &cfg()), want);
+        for s in SYSTEMS {
+            assert_eq!(emulation::tc(&g, s, &cfg()), want, "{}", s.name());
+        }
+    }
+}
+
+#[test]
+fn cliques_all_paths_agree() {
+    let g = gen::rmat(9, 9, 4, &[]);
+    for k in [3, 4, 5, 6] {
+        let want = clique::clique_hi(&g, k, &cfg()).0;
+        assert_eq!(clique::clique_lo(&g, k, &cfg()).0, want, "lo k={k}");
+        assert_eq!(kclist::kclist(&g, k, &cfg()).0, want, "kclist k={k}");
+        for s in SYSTEMS {
+            assert_eq!(emulation::clique(&g, k, s, &cfg()), want, "{} k={k}", s.name());
+        }
+    }
+}
+
+#[test]
+fn motifs_all_paths_agree() {
+    let g = gen::rmat(8, 6, 5, &[]);
+    for k in [3, 4] {
+        let want = emulation::motifs(&g, k, System::SandslashHi, &cfg());
+        for s in SYSTEMS {
+            assert_eq!(emulation::motifs(&g, k, s, &cfg()), want, "{} k={k}", s.name());
+        }
+        let pgd_counts = match k {
+            3 => pgd::pgd_motif3(&g, &cfg()),
+            _ => pgd::pgd_motif4(&g, &cfg()),
+        };
+        assert_eq!(pgd_counts, want, "pgd k={k}");
+    }
+}
+
+#[test]
+fn sl_systems_agree_on_both_patterns() {
+    let g = gen::rmat(8, 7, 6, &[]);
+    for p in [library::diamond(), library::cycle(4)] {
+        let want = sl::sl_count(&g, &p, &cfg()).0;
+        for s in [System::SandslashHi, System::PangolinLike, System::PeregrineLike] {
+            assert_eq!(emulation::sl(&g, &p, s, &cfg()), want, "{}", s.name());
+        }
+    }
+}
+
+#[test]
+fn fsm_three_engines_agree() {
+    let g = gen::erdos_renyi(60, 0.08, 7, &[1, 2, 3]);
+    let a = fsm_app::fsm(&g, 3, 1, &cfg());
+    let b = fsm_app::fsm_bfs(&g, 3, 1, &cfg());
+    let c = peregrine_fsm::peregrine_fsm(&g, 3, 1, &cfg());
+    let key = |r: &sandslash::engine::fsm::FsmResult| {
+        r.frequent
+            .iter()
+            .map(|f| (f.code.clone(), f.support))
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(key(&a), key(&b));
+    assert_eq!(key(&a), key(&c));
+}
+
+#[test]
+fn thread_scaling_preserves_all_results() {
+    let g = gen::rmat(9, 8, 8, &[]);
+    for threads in [1, 2, 8] {
+        let c = MinerConfig { threads, chunk: 8, opts: OptFlags::hi() };
+        assert_eq!(tc::tc_hi(&g, &c), tc::tc_hi(&g, &cfg()));
+        assert_eq!(clique::clique_lo(&g, 5, &c).0, clique::clique_lo(&g, 5, &cfg()).0);
+        assert_eq!(motif::motif4_lo(&g, &c), motif::motif4_lo(&g, &cfg()));
+    }
+}
+
+#[test]
+fn solve_facade_covers_all_five_apps() {
+    let g = gen::rmat(8, 8, 9, &[]);
+    let lg = gen::erdos_renyi(80, 0.08, 10, &[1, 2]);
+    match solve(&g, &ProblemSpec::tc(), &cfg()) {
+        MiningOutput::Count(c) => assert_eq!(c, tc::tc_hi(&g, &cfg())),
+        o => panic!("{o:?}"),
+    }
+    match solve(&g, &ProblemSpec::clique_listing(4), &cfg()) {
+        MiningOutput::Count(c) => assert_eq!(c, clique::clique_hi(&g, 4, &cfg()).0),
+        o => panic!("{o:?}"),
+    }
+    match solve(&g, &ProblemSpec::motif_counting(4), &cfg()) {
+        MiningOutput::PerPattern(rows) => {
+            let got: Vec<u64> = rows.iter().map(|(_, c)| *c).collect();
+            assert_eq!(got, motif::motif4_hi(&g, &cfg()).0);
+        }
+        o => panic!("{o:?}"),
+    }
+    match solve(&g, &ProblemSpec::subgraph_listing(library::diamond()), &cfg()) {
+        MiningOutput::Count(c) => assert_eq!(c, sl::sl_count(&g, &library::diamond(), &cfg()).0),
+        o => panic!("{o:?}"),
+    }
+    match solve(&lg, &ProblemSpec::fsm(2, 2), &cfg()) {
+        MiningOutput::Frequent(rows) => {
+            assert_eq!(rows.len(), fsm_app::fsm(&lg, 2, 2, &cfg()).frequent.len());
+        }
+        o => panic!("{o:?}"),
+    }
+}
+
+#[test]
+fn dataset_registry_consistency() {
+    use sandslash::coordinator::datasets;
+    // tiny datasets must load and produce consistent counts across systems
+    let g = datasets::load("lj-tiny").unwrap();
+    let want = tc::tc_hi(&g, &cfg());
+    assert_eq!(emulation::tc(&g, System::PeregrineLike, &cfg()), want);
+    assert_eq!(emulation::tc(&g, System::PangolinLike, &cfg()), want);
+}

@@ -1,0 +1,150 @@
+//! Property-based tests (hand-rolled driver over the crate's seeded RNG,
+//! standing in for proptest — see DESIGN.md §4): invariants that must
+//! hold for *any* graph, exercised across randomized instances.
+
+use sandslash::apps::{clique, motif, sl, tc};
+use sandslash::engine::{fsm, MinerConfig, OptFlags};
+use sandslash::graph::builder::relabel;
+use sandslash::graph::{gen, CsrGraph};
+use sandslash::pattern::library;
+use sandslash::util::rng::Rng;
+
+fn cfg() -> MinerConfig {
+    MinerConfig { threads: 2, chunk: 16, opts: OptFlags::hi() }
+}
+
+/// Random graph drawn from a seeded family mix.
+fn random_graph(rng: &mut Rng) -> CsrGraph {
+    match rng.below(3) {
+        0 => gen::erdos_renyi(
+            40 + rng.below(60) as usize,
+            0.05 + rng.f64() * 0.2,
+            rng.next_u64(),
+            &[],
+        ),
+        1 => gen::rmat(7 + rng.below(2) as u32, 4 + rng.below(6) as usize, rng.next_u64(), &[]),
+        _ => gen::barabasi_albert(50 + rng.below(100) as usize, 3, rng.next_u64(), &[]),
+    }
+}
+
+fn random_permutation(rng: &mut Rng, n: usize) -> Vec<u32> {
+    let mut p: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut p);
+    p
+}
+
+#[test]
+fn prop_counts_invariant_under_relabeling() {
+    let mut rng = Rng::seeded(0xC0FFEE);
+    for round in 0..12 {
+        let g = random_graph(&mut rng);
+        let perm = random_permutation(&mut rng, g.num_vertices());
+        let h = relabel(&g, &perm);
+        assert_eq!(tc::tc_hi(&g, &cfg()), tc::tc_hi(&h, &cfg()), "round {round}");
+        assert_eq!(
+            clique::clique_lo(&g, 4, &cfg()).0,
+            clique::clique_lo(&h, 4, &cfg()).0,
+            "round {round}"
+        );
+        assert_eq!(motif::motif4_lo(&g, &cfg()), motif::motif4_lo(&h, &cfg()), "round {round}");
+        assert_eq!(
+            sl::sl_count(&g, &library::diamond(), &cfg()).0,
+            sl::sl_count(&h, &library::diamond(), &cfg()).0,
+            "round {round}"
+        );
+    }
+}
+
+#[test]
+fn prop_hi_equals_lo_equals_brute() {
+    let mut rng = Rng::seeded(0xBEEF);
+    for round in 0..8 {
+        let g = gen::erdos_renyi(
+            30 + rng.below(20) as usize,
+            0.1 + rng.f64() * 0.2,
+            rng.next_u64(),
+            &[],
+        );
+        let brute3 = clique::clique_brute(&g, 3);
+        assert_eq!(tc::tc_hi(&g, &cfg()), brute3, "round {round}");
+        for k in [4, 5] {
+            let brute = clique::clique_brute(&g, k);
+            assert_eq!(clique::clique_hi(&g, k, &cfg()).0, brute, "hi round {round} k={k}");
+            assert_eq!(clique::clique_lo(&g, k, &cfg()).0, brute, "lo round {round} k={k}");
+        }
+    }
+}
+
+#[test]
+fn prop_motif_identities() {
+    // Global combinatorial identities tie the motif census to degree
+    // statistics — a strong oracle that needs no enumeration.
+    let mut rng = Rng::seeded(0xF00D);
+    for round in 0..10 {
+        let g = random_graph(&mut rng);
+        let m3 = motif::motif3_lo(&g, &cfg());
+        // wedges + 3*triangles == sum_v C(deg v, 2)
+        let paths2: u64 = (0..g.num_vertices() as u32)
+            .map(|v| {
+                let d = g.degree(v) as u64;
+                d.saturating_sub(1) * d / 2
+            })
+            .sum();
+        assert_eq!(m3[0] + 3 * m3[1], paths2, "round {round}");
+
+        let m4 = motif::motif4_lo(&g, &cfg());
+        let hi4 = motif::motif4_hi(&g, &cfg()).0;
+        assert_eq!(m4, hi4, "round {round}");
+    }
+}
+
+#[test]
+fn prop_fsm_antimonotone_and_label_permutation() {
+    let mut rng = Rng::seeded(0xAB5);
+    for round in 0..6 {
+        let g = gen::erdos_renyi(
+            40 + rng.below(30) as usize,
+            0.08 + rng.f64() * 0.08,
+            rng.next_u64(),
+            &[1, 2, 3],
+        );
+        // anti-monotonicity of result sets in sigma
+        let r1 = fsm::mine_fsm(&g, 3, 1, 2);
+        let r2 = fsm::mine_fsm(&g, 3, 3, 2);
+        let codes1: Vec<_> = r1.frequent.iter().map(|f| f.code.clone()).collect();
+        for f in &r2.frequent {
+            assert!(codes1.contains(&f.code), "round {round}: sigma-up grew the set");
+            assert!(f.support > 3);
+        }
+        // every frequent pattern's parent-support >= its own support
+        for f in &r1.frequent {
+            if f.pattern.num_edges() >= 2 {
+                let parent = fsm::canonical_parent_code(&f.pattern);
+                let ps = r1
+                    .frequent
+                    .iter()
+                    .find(|x| x.code == parent)
+                    .map(|x| x.support)
+                    .expect("parent of a frequent pattern must be frequent");
+                assert!(ps >= f.support, "round {round}: MNI not anti-monotone");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_edge_count_conservation_in_generators() {
+    let mut rng = Rng::seeded(0x9E3);
+    for _ in 0..10 {
+        let g = random_graph(&mut rng);
+        // CSR symmetry: directed degree sum equals 2x undirected edges
+        let degsum: usize = (0..g.num_vertices() as u32).map(|v| g.degree(v)).sum();
+        assert_eq!(degsum, 2 * g.num_undirected_edges());
+        // neighbor lists sorted, no self loops, no duplicates
+        for v in 0..g.num_vertices() as u32 {
+            let ns = g.neighbors(v);
+            assert!(ns.windows(2).all(|w| w[0] < w[1]), "sorted+unique");
+            assert!(!ns.contains(&v), "no self loop");
+        }
+    }
+}

@@ -1,0 +1,64 @@
+//! Runtime integration: the AOT artifacts (Layer 1/2) must reproduce the
+//! combinatorial engine's numbers through PJRT (Layer 3). Skips politely
+//! when artifacts haven't been built (`make artifacts`).
+
+use sandslash::apps::motif::motif4_hi;
+use sandslash::apps::tc::tc_hi;
+use sandslash::engine::{MinerConfig, OptFlags};
+use sandslash::graph::gen;
+use sandslash::runtime::accel::Accelerator;
+use sandslash::runtime::tiles::TiledAdjacency;
+
+fn cfg() -> MinerConfig {
+    MinerConfig { threads: 2, chunk: 16, opts: OptFlags::hi() }
+}
+
+fn accel() -> Option<Accelerator> {
+    if !std::path::Path::new("artifacts/tc_tile.hlo.txt").exists() {
+        eprintln!("artifacts missing; run `make artifacts` (skipping)");
+        return None;
+    }
+    Some(Accelerator::load("artifacts").expect("artifact load"))
+}
+
+#[test]
+fn xla_triangle_count_matches_engine() {
+    let Some(a) = accel() else { return };
+    for g in [
+        gen::erdos_renyi(300, 0.05, 1, &[]),
+        gen::rmat(9, 5, 2, &[]),
+        gen::ring(500),
+    ] {
+        let want = tc_hi(&g, &cfg());
+        let got = a.triangle_count(&g).expect("xla tc");
+        assert_eq!(got, want);
+    }
+}
+
+#[test]
+fn xla_motif4_matches_engine() {
+    let Some(a) = accel() else { return };
+    let g = gen::erdos_renyi(400, 0.02, 3, &[]);
+    let want = motif4_hi(&g, &cfg()).0;
+    let got = a.motif4(&g, &cfg()).expect("xla motif4");
+    assert_eq!(got, want);
+}
+
+#[test]
+fn cpu_tile_reference_matches_engine() {
+    // the pure-Rust tile reference validates the tiling independent of XLA
+    let g = gen::rmat(8, 6, 4, &[]);
+    let tiled = TiledAdjacency::build(&g, true);
+    assert_eq!(tiled.masked_trace_cpu() as u64, tc_hi(&g, &cfg()));
+}
+
+#[test]
+fn empty_tile_skipping_is_lossless() {
+    let Some(a) = accel() else { return };
+    // ring graph: extremely sparse tiling, most tiles empty
+    let g = gen::ring(1000);
+    assert_eq!(a.triangle_count(&g).expect("xla"), 0);
+    let g2 = gen::complete(130); // spans >1 tile, dense
+    let want = tc_hi(&g2, &cfg());
+    assert_eq!(a.triangle_count(&g2).expect("xla"), want);
+}
