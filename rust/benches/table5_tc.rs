@@ -1,7 +1,15 @@
 //! Regenerates paper Table 5: TC execution time across systems
 //! (Pangolin-, AutoMine-, Peregrine-like emulations, GAP, Sandslash-Hi)
-//! on the five unlabeled mini datasets.
+//! on the five unlabeled mini datasets — then runs the PR-1 measurement:
+//! scalar (probe/MNC) vs set-centric extension for triangle counting on
+//! RMAT(2^14), recording the `tc` section of `BENCH_pr1.json` at the
+//! repo root.
 use sandslash::coordinator::campaign;
+use sandslash::engine::hooks::NoHooks;
+use sandslash::engine::{dfs, MinerConfig, OptFlags};
+use sandslash::graph::gen;
+use sandslash::pattern::{library, plan};
+use sandslash::util::bench::{pr1_report_path, print_table, Bench, Pr1Section};
 
 fn main() {
     let graphs = sandslash::coordinator::datasets::unlabeled_names();
@@ -10,4 +18,53 @@ fn main() {
     println!("\nExpected shape (paper): DAG-based systems (Pangolin-like, GAP,");
     println!("Sandslash-Hi) cluster together; Peregrine-like (no DAG) and");
     println!("AutoMine-like (no SB, 6x space) trail.");
+
+    // ---- PR-1: scalar vs set-centric extension, TC on RMAT(2^14) ----
+    let g = gen::rmat(14, 8, 42, &[]);
+    let pl = plan(&library::triangle(), true, true);
+    let set_cfg = MinerConfig::new(OptFlags::hi());
+    let mut scalar_cfg = set_cfg;
+    scalar_cfg.opts.sets = false;
+    let (set_count, _) = dfs::count(&g, &pl, &set_cfg, &NoHooks);
+    let (scalar_count, _) = dfs::count(&g, &pl, &scalar_cfg, &NoHooks);
+    assert_eq!(set_count, scalar_count, "scalar/set-centric differential failed");
+
+    let bench = Bench::quick();
+    let r_scalar = bench.run("tc-scalar", || dfs::count(&g, &pl, &scalar_cfg, &NoHooks).0);
+    let r_set = bench.run("tc-set", || dfs::count(&g, &pl, &set_cfg, &NoHooks).0);
+    let r_dag = bench.run("tc-dag", || sandslash::apps::tc::tc_hi(&g, &set_cfg));
+    let fmt = |r: &sandslash::util::bench::BenchResult| {
+        vec![
+            format!("{:.4}", r.min()),
+            format!("{:.4}", r.median()),
+            format!("{:.4}", r.mean()),
+        ]
+    };
+    print_table(
+        "PR-1 TC: scalar vs set-centric (rmat scale=14 ef=8 seed=42)",
+        &["min s", "median s", "mean s"],
+        &[
+            ("scalar (probe+MNC)".to_string(), fmt(&r_scalar)),
+            ("set-centric".to_string(), fmt(&r_set)),
+            ("dag+intersect (tc_hi)".to_string(), fmt(&r_dag)),
+        ],
+    );
+    let section = Pr1Section {
+        graph: "rmat scale=14 ef=8 seed=42",
+        pattern: "triangle",
+        count: set_count,
+        scalar_secs: r_scalar.min(),
+        set_secs: r_set.min(),
+        dag_secs: Some(r_dag.min()),
+        samples: r_set.samples.len(),
+    };
+    println!(
+        "\ntriangles = {set_count}; set-centric speedup over scalar = {:.2}x",
+        section.speedup()
+    );
+    if let Err(e) = section.write("tc", set_cfg.threads) {
+        eprintln!("could not write BENCH_pr1.json: {e}");
+    } else {
+        println!("wrote `tc` section of {}", pr1_report_path().display());
+    }
 }

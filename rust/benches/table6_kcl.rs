@@ -1,11 +1,70 @@
 //! Regenerates paper Table 6: k-CL (k = 4, 5) across systems + kClist +
 //! Sandslash-Lo. Emulation-heavy -> tiny datasets keep the no-DAG
 //! baselines inside bench budget (paper shows them timing out at scale).
+//! Then runs the PR-1 measurement: scalar (probe/MNC) vs set-centric
+//! extension for 4-clique counting on RMAT(2^14), recording the `kcl4`
+//! section of `BENCH_pr1.json` at the repo root.
 use sandslash::coordinator::campaign;
+use sandslash::engine::hooks::NoHooks;
+use sandslash::engine::{dfs, MinerConfig, OptFlags};
+use sandslash::graph::gen;
+use sandslash::pattern::{library, plan};
+use sandslash::util::bench::{pr1_report_path, print_table, Bench, Pr1Section};
 
 fn main() {
     let rows = campaign::table6(&["lj-tiny", "or-tiny", "fr-tiny"], &[4, 5]);
     println!("{}", campaign::to_markdown(&rows));
     println!("\nExpected shape (paper): Sandslash-Lo ~ kClist < Sandslash-Hi <<");
     println!("Peregrine-like ~ Pangolin-like ~ AutoMine-like.");
+
+    // ---- PR-1: scalar vs set-centric extension, 4-CL on RMAT(2^14) ----
+    let g = gen::rmat(14, 4, 42, &[]);
+    let pl = plan(&library::clique(4), true, true);
+    let set_cfg = MinerConfig::new(OptFlags::hi());
+    let mut scalar_cfg = set_cfg;
+    scalar_cfg.opts.sets = false;
+    let (set_count, _) = dfs::count(&g, &pl, &set_cfg, &NoHooks);
+    let (scalar_count, _) = dfs::count(&g, &pl, &scalar_cfg, &NoHooks);
+    assert_eq!(set_count, scalar_count, "scalar/set-centric differential failed");
+
+    let bench = Bench::quick();
+    let r_scalar = bench.run("kcl4-scalar", || dfs::count(&g, &pl, &scalar_cfg, &NoHooks).0);
+    let r_set = bench.run("kcl4-set", || dfs::count(&g, &pl, &set_cfg, &NoHooks).0);
+    let r_dag = bench.run("kcl4-dag", || {
+        sandslash::apps::clique::clique_hi(&g, 4, &set_cfg).0
+    });
+    let fmt = |r: &sandslash::util::bench::BenchResult| {
+        vec![
+            format!("{:.4}", r.min()),
+            format!("{:.4}", r.median()),
+            format!("{:.4}", r.mean()),
+        ]
+    };
+    print_table(
+        "PR-1 4-CL: scalar vs set-centric (rmat scale=14 ef=4 seed=42)",
+        &["min s", "median s", "mean s"],
+        &[
+            ("scalar (probe+MNC)".to_string(), fmt(&r_scalar)),
+            ("set-centric".to_string(), fmt(&r_set)),
+            ("dag running-intersect (clique_hi)".to_string(), fmt(&r_dag)),
+        ],
+    );
+    let section = Pr1Section {
+        graph: "rmat scale=14 ef=4 seed=42",
+        pattern: "4-clique",
+        count: set_count,
+        scalar_secs: r_scalar.min(),
+        set_secs: r_set.min(),
+        dag_secs: Some(r_dag.min()),
+        samples: r_set.samples.len(),
+    };
+    println!(
+        "\n4-cliques = {set_count}; set-centric speedup over scalar = {:.2}x",
+        section.speedup()
+    );
+    if let Err(e) = section.write("kcl4", set_cfg.threads) {
+        eprintln!("could not write BENCH_pr1.json: {e}");
+    } else {
+        println!("wrote `kcl4` section of {}", pr1_report_path().display());
+    }
 }

@@ -9,7 +9,7 @@ use crate::engine::dfs;
 use crate::engine::esu::MotifTable;
 use crate::engine::hooks::NoHooks;
 use crate::engine::{MinerConfig, OptFlags};
-use crate::graph::csr::intersect_count;
+use crate::graph::setops::intersect_count;
 use crate::graph::orientation::{orient, OrientScheme};
 use crate::graph::CsrGraph;
 use crate::pattern::symmetry::automorphism_count;
@@ -107,7 +107,7 @@ pub fn bfs_cliques(g: &CsrGraph, k: usize, cfg: &MinerConfig) -> u64 {
     for v in 0..dag.num_vertices() as u32 {
         for &u in dag.out_neighbors(v) {
             let mut cand = Vec::new();
-            crate::graph::csr::intersect_into(
+            crate::graph::setops::intersect_into(
                 dag.out_neighbors(v),
                 dag.out_neighbors(u),
                 &mut cand,
@@ -126,7 +126,7 @@ pub fn bfs_cliques(g: &CsrGraph, k: usize, cfg: &MinerConfig) -> u64 {
                 for (j, &u) in cand.iter().enumerate() {
                     let _ = j;
                     let mut next = Vec::new();
-                    crate::graph::csr::intersect_into(cand, dag.out_neighbors(u), &mut next);
+                    crate::graph::setops::intersect_into(cand, dag.out_neighbors(u), &mut next);
                     out.push(next);
                 }
             },

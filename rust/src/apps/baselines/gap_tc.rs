@@ -5,7 +5,7 @@
 
 use crate::engine::MinerConfig;
 use crate::graph::builder::{degree_desc_order, relabel};
-use crate::graph::csr::intersect_count;
+use crate::graph::setops::intersect_count;
 use crate::graph::CsrGraph;
 use crate::util::pool::parallel_reduce;
 

@@ -10,7 +10,7 @@
 
 use crate::engine::local_graph::LocalGraph;
 use crate::engine::MinerConfig;
-use crate::graph::csr::intersect_into;
+use crate::graph::setops::{intersect_count, intersect_into};
 use crate::graph::orientation::{orient, Dag, OrientScheme};
 use crate::graph::CsrGraph;
 use crate::util::metrics::SearchStats;
@@ -60,14 +60,6 @@ pub fn clique_on_dag(
     );
 
     fn rec(dag: &Dag, k: usize, depth: usize, cands: &[u32], st: &mut St, cfg: &MinerConfig) {
-        if depth == k {
-            st.count += cands.len() as u64;
-            if cfg.opts.stats {
-                st.stats.enumerated += cands.len() as u64;
-                st.stats.matches += cands.len() as u64;
-            }
-            return;
-        }
         // move the buffer out to satisfy the borrow checker, put it back
         let mut buf = std::mem::take(&mut st.bufs[depth]);
         for i in 0..cands.len() {
@@ -75,6 +67,17 @@ pub fn clique_on_dag(
             if cfg.opts.stats {
                 st.stats.enumerated += 1;
                 st.stats.intersections += 1;
+            }
+            if depth + 1 == k {
+                // last level: count the intersection without
+                // materializing it (same kernel family, no buffer write)
+                let c = intersect_count(cands, dag.out_neighbors(u)) as u64;
+                st.count += c;
+                if cfg.opts.stats {
+                    st.stats.enumerated += c;
+                    st.stats.matches += c;
+                }
+                continue;
             }
             buf.clear();
             intersect_into(cands, dag.out_neighbors(u), &mut buf);

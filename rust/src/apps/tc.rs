@@ -9,7 +9,7 @@
 use crate::engine::dfs;
 use crate::engine::hooks::NoHooks;
 use crate::engine::{MinerConfig, OptFlags};
-use crate::graph::csr::intersect_count;
+use crate::graph::setops::intersect_count;
 use crate::graph::orientation::{orient, Dag, OrientScheme};
 use crate::graph::CsrGraph;
 use crate::pattern::{library, plan};

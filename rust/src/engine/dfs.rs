@@ -6,28 +6,83 @@
 //! thread explores its subtree depth-first, maintaining:
 //!
 //! * the embedding stack with MEC connectivity codes,
-//! * the MNC connectivity map (when `opts.mnc`),
+//! * the extension state for the selected mode (below),
 //! * symmetry-breaking / non-adjacency / degree constraints from the plan.
+//!
+//! Two extension modes:
+//!
+//! * **Set-centric** (`opts.sets`, the default): each level's candidate
+//!   set is computed once with the adaptive kernels in
+//!   [`crate::graph::setops`] — the intersection of the adjacency lists
+//!   named by `adj_mask`, minus the lists in `nonadj_mask`, with the
+//!   symmetry-breaking partial orders fused into the seed list as range
+//!   bounds. Buffers are per-thread and per-level, so the hot path does
+//!   no allocation; high-degree roots additionally publish their
+//!   neighborhood as a bitmap probed in O(1) per candidate.
+//! * **Scalar** (`opts.sets` off): the seed behaviour — scan the pivot's
+//!   neighbor list and test every candidate against each constraint,
+//!   via the MNC connectivity index when `opts.mnc`. Kept both as the
+//!   differential-testing oracle and as the emulation substrate for the
+//!   probe-based systems of Tables 5–9.
 //!
 //! Matches are delivered to a caller-supplied leaf visitor through the
 //! per-thread accumulator, merged once at the end — no synchronization on
 //! the hot path.
 
-use crate::graph::{CsrGraph, VertexId};
+use crate::graph::{setops, CsrGraph, VertexId};
 use crate::pattern::matching_order::MatchingPlan;
+use crate::util::bitset::BitSet;
 use crate::util::metrics::SearchStats;
 use crate::util::pool::parallel_reduce;
 
 use super::hooks::LowLevelApi;
-use super::mnc::ConnectivityMap;
+use super::mnc::Connectivity;
 use super::opts::MinerConfig;
+
+/// Root degree at which materializing the root's neighborhood as a
+/// bitmap pays for itself: the build costs O(deg(root)) once, and every
+/// later level replaces a merge against that (large) list with O(1)
+/// probes per surviving candidate (crossover in EXPERIMENTS.md).
+const ROOT_BITSET_MIN_DEGREE: usize = 256;
+
+/// Per-thread, per-level candidate-set buffers — the set-centric
+/// frontier. All storage is reused across root tasks: zero allocation on
+/// the hot path once warm.
+struct Frontier {
+    /// `bufs[level]` holds the materialized candidate set while that
+    /// level's subtree is explored.
+    bufs: Vec<Vec<VertexId>>,
+    /// Ping-pong scratch shared across levels (returned before recursing).
+    scratch: Vec<VertexId>,
+    /// High-degree root's neighborhood bitmap (lazily sized to |V|).
+    root_bits: BitSet,
+    root_bits_built: bool,
+}
+
+impl Frontier {
+    fn new(k: usize) -> Self {
+        Self {
+            bufs: vec![Vec::new(); k],
+            scratch: Vec::new(),
+            root_bits: BitSet::default(),
+            root_bits_built: false,
+        }
+    }
+
+    fn ensure_bits(&mut self, n: usize) {
+        if self.root_bits.capacity() < n {
+            self.root_bits = BitSet::new(n);
+        }
+    }
+}
 
 /// Per-thread mining state.
 struct ThreadState<A> {
     acc: A,
     stats: SearchStats,
     emb: Vec<VertexId>,
-    map: ConnectivityMap,
+    conn: Connectivity,
+    front: Frontier,
 }
 
 /// Mine all embeddings of `plan` in `g`; `leaf` is invoked with the
@@ -44,7 +99,16 @@ pub fn mine<A: Send, H: LowLevelApi>(
 ) -> (A, SearchStats) {
     let n = g.num_vertices();
     let k = plan.size();
-    let use_mnc = cfg.opts.mnc && k > 2;
+    let use_sets = cfg.opts.sets && k > 2;
+    let use_mnc = !use_sets && cfg.opts.mnc && k > 2;
+    // the root bitmap only pays off if some level past the first
+    // extension constrains against the root's neighborhood AND takes the
+    // materialized path (single-source levels never probe the bitmap)
+    let needs_root_bits = use_sets
+        && plan.levels.iter().skip(2).any(|l| {
+            (l.adj_mask | l.nonadj_mask) & 1 != 0
+                && (l.adj_mask.count_ones() > 1 || l.nonadj_mask != 0)
+        });
     let lvl0 = &plan.levels[0];
 
     let (acc, stats) = {
@@ -56,7 +120,8 @@ pub fn mine<A: Send, H: LowLevelApi>(
                 acc: init(),
                 stats: SearchStats::default(),
                 emb: Vec::with_capacity(k),
-                map: ConnectivityMap::with_capacity(1024),
+                conn: Connectivity::new(),
+                front: Frontier::new(k),
             },
             |st, v| {
                 let v = v as VertexId;
@@ -77,22 +142,46 @@ pub fn mine<A: Send, H: LowLevelApi>(
                     return;
                 }
                 if use_mnc {
+                    st.conn.begin_root(n, g.degree(v));
                     for &u in g.neighbors(v) {
-                        st.map.or_insert(u, 1);
+                        st.conn.or_insert(u, 1);
                     }
                 }
-                extend(g, plan, cfg, hooks, st, 1, use_mnc, &leaf);
+                let built_bits =
+                    needs_root_bits && g.degree(v) >= ROOT_BITSET_MIN_DEGREE;
+                if built_bits {
+                    st.front.ensure_bits(n);
+                    for &u in g.neighbors(v) {
+                        st.front.root_bits.insert(u as usize);
+                    }
+                    st.front.root_bits_built = true;
+                }
+                if use_sets {
+                    extend_set(g, plan, cfg, hooks, st, 1, &leaf);
+                } else {
+                    extend(g, plan, cfg, hooks, st, 1, use_mnc, &leaf);
+                }
+                if built_bits {
+                    st.front.root_bits.clear();
+                    st.front.root_bits_built = false;
+                }
                 if use_mnc {
                     // symmetric pop: O(deg) instead of O(capacity) clear
                     for &u in g.neighbors(v) {
-                        st.map.and_remove(u, 1);
+                        st.conn.and_remove(u, 1);
                     }
                 }
             },
             |a, b| {
                 let mut stats = a.stats;
                 stats.merge(&b.stats);
-                ThreadState { acc: merge(a.acc, b.acc), stats, emb: a.emb, map: a.map }
+                ThreadState {
+                    acc: merge(a.acc, b.acc),
+                    stats,
+                    emb: a.emb,
+                    conn: a.conn,
+                    front: a.front,
+                }
             },
         );
         (result.acc, result.stats)
@@ -100,6 +189,190 @@ pub fn mine<A: Send, H: LowLevelApi>(
     (acc, stats)
 }
 
+/// Set-centric extension: materialize the candidate set for `level` with
+/// the adaptive kernels, then visit each survivor.
+fn extend_set<A, H: LowLevelApi>(
+    g: &CsrGraph,
+    plan: &MatchingPlan,
+    cfg: &MinerConfig,
+    hooks: &H,
+    st: &mut ThreadState<A>,
+    level: usize,
+    leaf: &(impl Fn(&mut A, &[VertexId]) + Sync),
+) {
+    let lp = &plan.levels[level];
+    if !hooks.to_extend(&st.emb, lp.pivot) {
+        return;
+    }
+    // Symmetry-breaking partial orders collapse to one exclusive range:
+    // cand > max(emb[j], j in gt_mask) and cand < min(emb[j], j in
+    // lt_mask). Fused into the seed list below, so out-of-range
+    // candidates are never materialized.
+    let mut lo: Option<VertexId> = None;
+    let mut hi: Option<VertexId> = None;
+    let mut m = lp.gt_mask;
+    while m != 0 {
+        let j = m.trailing_zeros() as usize;
+        m &= m - 1;
+        let b = st.emb[j];
+        if lo.map_or(true, |l| b > l) {
+            lo = Some(b);
+        }
+    }
+    let mut m = lp.lt_mask;
+    while m != 0 {
+        let j = m.trailing_zeros() as usize;
+        m &= m - 1;
+        let b = st.emb[j];
+        if hi.map_or(true, |h| b < h) {
+            hi = Some(b);
+        }
+    }
+    if let (Some(l), Some(h)) = (lo, hi) {
+        if l + 1 >= h {
+            return; // empty range
+        }
+    }
+
+    if lp.adj_mask.count_ones() == 1 && lp.nonadj_mask == 0 {
+        // Single adjacency source and no anti-constraints: iterate the
+        // bounded slice of the pivot's list in place, no copy.
+        let nbrs = g.neighbors(st.emb[lp.pivot]);
+        let s = lo.map_or(0, |l| nbrs.partition_point(|&x| x <= l));
+        let e = hi.map_or(nbrs.len(), |h| nbrs.partition_point(|&x| x < h));
+        for idx in s..e {
+            let cand = nbrs[idx];
+            visit_candidate(g, plan, cfg, hooks, st, level, cand, leaf);
+        }
+        return;
+    }
+
+    // Materialized frontier: seed from the shortest adjacency list
+    // (bounds fused), then shrink with intersections / differences.
+    let mut cur = std::mem::take(&mut st.front.bufs[level]);
+    let mut tmp = std::mem::take(&mut st.front.scratch);
+    cur.clear();
+    // gather adjacency sources; the root's (usually largest) list is
+    // replaced by an O(|cur|) bitmap filter when its bitmap is built
+    let mut srcs = [(0u32, 0 as VertexId); 32];
+    let mut ns = 0usize;
+    let mut root_filter = false;
+    let mut m = lp.adj_mask;
+    while m != 0 {
+        let j = m.trailing_zeros() as usize;
+        m &= m - 1;
+        if j == 0 && st.front.root_bits_built {
+            root_filter = true;
+            continue;
+        }
+        let u = st.emb[j];
+        srcs[ns] = (g.degree(u) as u32, u);
+        ns += 1;
+    }
+    if ns == 0 {
+        // adjacency is the root alone: seed from its list after all
+        root_filter = false;
+        let u = st.emb[0];
+        srcs[0] = (g.degree(u) as u32, u);
+        ns = 1;
+    }
+    srcs[..ns].sort_unstable();
+    let first = g.neighbors(srcs[0].1);
+    let s = lo.map_or(0, |l| first.partition_point(|&x| x <= l));
+    let e = hi.map_or(first.len(), |h| first.partition_point(|&x| x < h));
+    cur.extend_from_slice(&first[s..e]);
+    if root_filter && !cur.is_empty() {
+        if cfg.opts.stats {
+            st.stats.intersections += 1;
+        }
+        setops::retain_in_bitset(&mut cur, &st.front.root_bits);
+    }
+    for i in 1..ns {
+        if cur.is_empty() {
+            break;
+        }
+        if cfg.opts.stats {
+            st.stats.intersections += 1;
+        }
+        tmp.clear();
+        setops::intersect_into(&cur, g.neighbors(srcs[i].1), &mut tmp);
+        std::mem::swap(&mut cur, &mut tmp);
+    }
+    // non-adjacency (vertex-induced) constraints: anti-intersections
+    let mut m = lp.nonadj_mask;
+    while m != 0 && !cur.is_empty() {
+        let j = m.trailing_zeros() as usize;
+        m &= m - 1;
+        if cfg.opts.stats {
+            st.stats.intersections += 1;
+        }
+        if j == 0 && st.front.root_bits_built {
+            setops::retain_not_in_bitset(&mut cur, &st.front.root_bits);
+        } else {
+            tmp.clear();
+            setops::difference_into(&cur, g.neighbors(st.emb[j]), &mut tmp);
+            std::mem::swap(&mut cur, &mut tmp);
+        }
+    }
+    // scratch must be back in place before recursing (deeper levels
+    // reuse it); bufs[level] stays checked out while we iterate
+    st.front.scratch = tmp;
+    for idx in 0..cur.len() {
+        let cand = cur[idx];
+        visit_candidate(g, plan, cfg, hooks, st, level, cand, leaf);
+    }
+    st.front.bufs[level] = cur;
+}
+
+/// Shared per-candidate tail of the set-centric path: residual filters
+/// (DF, label, injectivity, FP hook), then match or recurse.
+#[inline]
+fn visit_candidate<A, H: LowLevelApi>(
+    g: &CsrGraph,
+    plan: &MatchingPlan,
+    cfg: &MinerConfig,
+    hooks: &H,
+    st: &mut ThreadState<A>,
+    level: usize,
+    cand: VertexId,
+    leaf: &(impl Fn(&mut A, &[VertexId]) + Sync),
+) {
+    let k = plan.size();
+    let lp = &plan.levels[level];
+    if cfg.opts.df && g.degree(cand) < lp.degree {
+        st.stats.pruned += cfg.opts.stats as u64;
+        return;
+    }
+    if lp.label != 0 && g.label(cand) != lp.label {
+        return;
+    }
+    if st.emb.contains(&cand) {
+        return;
+    }
+    if !hooks.to_add(g, &st.emb, cand, level) {
+        st.stats.pruned += cfg.opts.stats as u64;
+        return;
+    }
+    if level + 1 == k {
+        st.emb.push(cand);
+        if cfg.opts.stats {
+            st.stats.enumerated += 1;
+            st.stats.matches += 1;
+        }
+        leaf(&mut st.acc, &st.emb);
+        st.emb.pop();
+        return;
+    }
+    st.emb.push(cand);
+    if cfg.opts.stats {
+        st.stats.enumerated += 1;
+    }
+    extend_set(g, plan, cfg, hooks, st, level + 1, leaf);
+    st.emb.pop();
+}
+
+/// Scalar extension (the seed path): scan the pivot's neighbor list and
+/// test every candidate against each constraint individually.
 fn extend<A, H: LowLevelApi>(
     g: &CsrGraph,
     plan: &MatchingPlan,
@@ -160,7 +433,7 @@ fn extend<A, H: LowLevelApi>(
         }
         // connectivity constraints
         let conn_ok = if use_mnc {
-            let code = st.map.get(cand);
+            let code = st.conn.get(cand);
             (code & lp.adj_mask) == lp.adj_mask && (code & lp.nonadj_mask) == 0
         } else {
             let mut good = true;
@@ -216,13 +489,13 @@ fn extend<A, H: LowLevelApi>(
         let bit = 1u32 << level;
         if use_mnc {
             for &u in g.neighbors(cand) {
-                st.map.or_insert(u, bit);
+                st.conn.or_insert(u, bit);
             }
         }
         extend(g, plan, cfg, hooks, st, level + 1, use_mnc, leaf);
         if use_mnc {
             for &u in g.neighbors(cand) {
-                st.map.and_remove(u, bit);
+                st.conn.and_remove(u, bit);
             }
         }
         st.emb.pop();
@@ -270,8 +543,6 @@ mod tests {
     #[test]
     fn wedges_in_star() {
         // star with 4 leaves: C(4,2) = 6 induced wedges
-        let g = gen::complete(2); // placeholder replaced below
-        let _ = g;
         let mut b = crate::graph::builder::GraphBuilder::new(5);
         for v in 1..5 {
             b.add_edge(0, v);
@@ -317,12 +588,38 @@ mod tests {
         let g = gen::rmat(8, 6, 17, &[]);
         for pat in [library::diamond(), library::cycle(4), library::clique(4)] {
             let pl = plan(&pat, true, true);
-            let with = cfg(OptFlags::hi());
-            let mut without = cfg(OptFlags::hi());
+            // exercise the scalar path: MNC on vs off must agree
+            let mut with = cfg(OptFlags::hi());
+            with.opts.sets = false;
+            let mut without = with;
             without.opts.mnc = false;
             let (a, _) = count(&g, &pl, &with, &NoHooks);
             let (b, _) = count(&g, &pl, &without, &NoHooks);
             assert_eq!(a, b, "pattern {pat}");
+            // and the default set-centric path must match both
+            let (s, _) = count(&g, &pl, &cfg(OptFlags::hi()), &NoHooks);
+            assert_eq!(s, a, "set-centric vs scalar, pattern {pat}");
+        }
+    }
+
+    #[test]
+    fn set_and_scalar_paths_agree() {
+        let g = gen::rmat(8, 6, 29, &[]);
+        for vertex_induced in [true, false] {
+            for pat in [
+                library::triangle(),
+                library::wedge(),
+                library::diamond(),
+                library::cycle(4),
+                library::clique(4),
+            ] {
+                let pl = plan(&pat, vertex_induced, true);
+                let (s, _) = count(&g, &pl, &cfg(OptFlags::hi()), &NoHooks);
+                let mut scalar = cfg(OptFlags::hi());
+                scalar.opts.sets = false;
+                let (c, _) = count(&g, &pl, &scalar, &NoHooks);
+                assert_eq!(s, c, "pattern {pat} induced={vertex_induced}");
+            }
         }
     }
 
@@ -373,5 +670,27 @@ mod tests {
         // triangles whose level-1 and level-2 vertices are even; root free:
         // still fewer than all
         assert!(even < all && even > 0);
+    }
+
+    #[test]
+    fn root_bitmap_mode_agrees_on_hub_graph() {
+        // star-core graph: hub degree far above ROOT_BITSET_MIN_DEGREE so
+        // roots exercise the bitmap filter path
+        let hub_deg = super::ROOT_BITSET_MIN_DEGREE * 2;
+        let mut b = crate::graph::builder::GraphBuilder::new(hub_deg + 2);
+        for v in 2..(hub_deg + 2) as u32 {
+            b.add_edge(0, v);
+            b.add_edge(1, v);
+        }
+        b.add_edge(0, 1);
+        let g = b.build();
+        for pat in [library::triangle(), library::cycle(4), library::diamond()] {
+            let pl = plan(&pat, true, true);
+            let (s, _) = count(&g, &pl, &cfg(OptFlags::hi()), &NoHooks);
+            let mut scalar = cfg(OptFlags::hi());
+            scalar.opts.sets = false;
+            let (c, _) = count(&g, &pl, &scalar, &NoHooks);
+            assert_eq!(s, c, "pattern {pat}");
+        }
     }
 }

@@ -8,7 +8,9 @@
 //!
 //! Implemented as open-addressing with linear probing over power-of-two
 //! capacity (std `HashMap`'s SipHash is too slow for this hot loop —
-//! measured in the §Perf pass).
+//! measured in the §Perf pass). [`Connectivity`] wraps the map together
+//! with a dense direct-indexed mode that takes over for high-degree
+//! roots (the "bitset mode" of the set-centric extension work).
 
 use crate::graph::VertexId;
 
@@ -121,6 +123,76 @@ impl ConnectivityMap {
     }
 }
 
+/// Root degree at which the dense code table beats the hash map: a hub
+/// root touches thousands of distinct vertices, so probe chains and
+/// hashing lose to a direct-indexed array (measured alongside the
+/// kernel crossovers, see EXPERIMENTS.md).
+pub const DENSE_ROOT_DEGREE: usize = 512;
+
+/// Adaptive MNC index: hash map for ordinary roots, a direct-indexed
+/// dense code table ("bitset mode") for high-degree roots. The dense
+/// table is one `u32` position-bitset per data vertex, allocated lazily
+/// once per thread; because the DFS pops exactly what it pushes, every
+/// root subtree leaves the table zeroed and no clearing pass is needed.
+pub struct Connectivity {
+    map: ConnectivityMap,
+    dense: Vec<u32>,
+    use_dense: bool,
+}
+
+impl Default for Connectivity {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Connectivity {
+    pub fn new() -> Self {
+        Self {
+            map: ConnectivityMap::with_capacity(1024),
+            dense: Vec::new(),
+            use_dense: false,
+        }
+    }
+
+    /// Choose the index mode for the next root's subtree. Must be called
+    /// before the root's neighborhood is inserted; the mode stays fixed
+    /// until the matching symmetric removal completes.
+    pub fn begin_root(&mut self, n: usize, root_degree: usize) {
+        self.use_dense = root_degree >= DENSE_ROOT_DEGREE;
+        if self.use_dense && self.dense.len() < n {
+            self.dense.resize(n, 0);
+        }
+    }
+
+    #[inline]
+    pub fn or_insert(&mut self, key: VertexId, bit: u32) {
+        if self.use_dense {
+            self.dense[key as usize] |= bit;
+        } else {
+            self.map.or_insert(key, bit);
+        }
+    }
+
+    #[inline]
+    pub fn and_remove(&mut self, key: VertexId, bit: u32) {
+        if self.use_dense {
+            self.dense[key as usize] &= !bit;
+        } else {
+            self.map.and_remove(key, bit);
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, key: VertexId) -> u32 {
+        if self.use_dense {
+            self.dense[key as usize]
+        } else {
+            self.map.get(key)
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -159,6 +231,29 @@ mod tests {
         }
         for k in 0..20u32 {
             assert_eq!(m.get(k), 1 << (k % 30));
+        }
+    }
+
+    #[test]
+    fn dense_and_hash_modes_agree() {
+        let n = 4096;
+        let mut hash = Connectivity::new();
+        hash.begin_root(n, 4); // below the threshold: hash mode
+        let mut dense = Connectivity::new();
+        dense.begin_root(n, DENSE_ROOT_DEGREE); // at threshold: dense mode
+        for k in (0..n as u32).step_by(7) {
+            hash.or_insert(k, 1 << (k % 20));
+            dense.or_insert(k, 1 << (k % 20));
+        }
+        for k in 0..n as u32 {
+            assert_eq!(hash.get(k), dense.get(k), "key {k}");
+        }
+        for k in (0..n as u32).step_by(14) {
+            hash.and_remove(k, 1 << (k % 20));
+            dense.and_remove(k, 1 << (k % 20));
+        }
+        for k in 0..n as u32 {
+            assert_eq!(hash.get(k), dense.get(k), "key {k} after removal");
         }
     }
 

@@ -17,6 +17,11 @@ pub struct OptFlags {
     pub mnc: bool,
     /// Memoization of embedding connectivity (carry codes down the tree).
     pub mec: bool,
+    /// Set-centric extension: compute each DFS level's candidate set once
+    /// with the adaptive kernels in [`crate::graph::setops`] (G²Miner /
+    /// kClist-style formulation) instead of probing every neighbor of the
+    /// pivot. Supersedes MNC in the generic engine when enabled.
+    pub sets: bool,
     /// Low-level: formula-based local counting.
     pub lc: bool,
     /// Low-level: search on shrinking local graphs.
@@ -26,9 +31,10 @@ pub struct OptFlags {
 }
 
 impl OptFlags {
-    /// Sandslash-Hi: all high-level optimizations (Table 3a left).
+    /// Sandslash-Hi: all high-level optimizations (Table 3a left) plus
+    /// the set-centric extension frontier.
     pub fn hi() -> Self {
-        Self { sb: true, dag: true, mo: true, df: true, mnc: true, mec: true, lc: false, lg: false, stats: false }
+        Self { sb: true, dag: true, mo: true, df: true, mnc: true, mec: true, sets: true, lc: false, lg: false, stats: false }
     }
 
     /// Sandslash-Lo: Hi plus low-level optimizations.
@@ -38,24 +44,26 @@ impl OptFlags {
 
     /// Everything off (naive enumeration with only correctness checks).
     pub fn none() -> Self {
-        Self { sb: true, dag: false, mo: false, df: false, mnc: false, mec: false, lc: false, lg: false, stats: false }
+        Self { sb: true, dag: false, mo: false, df: false, mnc: false, mec: false, sets: false, lc: false, lg: false, stats: false }
     }
 
     /// AutoMine-like: matching order but no symmetry breaking, no DAG —
     /// counts every automorphic copy and divides at the end (DESIGN.md §5).
+    /// Emulations stay on the scalar probe path so the table comparisons
+    /// keep isolating the optimizations each system lacks.
     pub fn automine_like() -> Self {
-        Self { sb: false, dag: false, mo: true, df: false, mnc: false, mec: true, lc: false, lg: false, stats: false }
+        Self { sb: false, dag: false, mo: true, df: false, mnc: false, mec: true, sets: false, lc: false, lg: false, stats: false }
     }
 
     /// Pangolin-like: BFS strategy (selected separately), SB + DAG but no
     /// MNC/MO/DF.
     pub fn pangolin_like() -> Self {
-        Self { sb: true, dag: true, mo: false, df: false, mnc: false, mec: true, lc: false, lg: false, stats: false }
+        Self { sb: true, dag: true, mo: false, df: false, mnc: false, mec: true, sets: false, lc: false, lg: false, stats: false }
     }
 
     /// Peregrine-like: DFS, on-the-fly SB and MO, but no DAG orientation.
     pub fn peregrine_like() -> Self {
-        Self { sb: true, dag: false, mo: true, df: false, mnc: false, mec: true, lc: false, lg: false, stats: false }
+        Self { sb: true, dag: false, mo: true, df: false, mnc: false, mec: true, sets: false, lc: false, lg: false, stats: false }
     }
 
     pub fn with_stats(mut self) -> Self {
@@ -94,8 +102,12 @@ mod tests {
     #[test]
     fn presets_differ_as_documented() {
         assert!(OptFlags::hi().sb && OptFlags::hi().mnc && !OptFlags::hi().lc);
+        assert!(OptFlags::hi().sets && OptFlags::lo().sets);
         assert!(OptFlags::lo().lc && OptFlags::lo().lg);
         assert!(!OptFlags::automine_like().sb);
         assert!(!OptFlags::peregrine_like().dag && OptFlags::peregrine_like().sb);
+        // emulated systems stay on the scalar probe path
+        assert!(!OptFlags::automine_like().sets && !OptFlags::pangolin_like().sets);
+        assert!(!OptFlags::peregrine_like().sets && !OptFlags::none().sets);
     }
 }

@@ -81,7 +81,7 @@ impl CsrGraph {
             .unwrap_or(0)
     }
 
-    /// Sorted-list intersection count (linear merge).
+    /// Sorted-list intersection count (adaptive kernel).
     pub fn intersect_count(&self, u: VertexId, v: VertexId) -> usize {
         intersect_count(self.neighbors(u), self.neighbors(v))
     }
@@ -93,71 +93,10 @@ impl CsrGraph {
     }
 }
 
-/// Linear-merge intersection count of two sorted slices.
-#[inline]
-pub fn intersect_count(a: &[VertexId], b: &[VertexId], ) -> usize {
-    // Galloping pays off when lengths are very skewed; the crossover was
-    // measured in the §Perf pass (see EXPERIMENTS.md).
-    if a.len() * 32 < b.len() {
-        return gallop_count(a, b);
-    }
-    if b.len() * 32 < a.len() {
-        return gallop_count(b, a);
-    }
-    let (mut i, mut j, mut n) = (0, 0, 0);
-    while i < a.len() && j < b.len() {
-        let (x, y) = (a[i], b[j]);
-        i += (x <= y) as usize;
-        j += (y <= x) as usize;
-        n += (x == y) as usize;
-    }
-    n
-}
-
-/// Count |a ∩ b| by binary-searching each element of the short list `a`
-/// in the long list `b`, narrowing the search window as we go.
-fn gallop_count(a: &[VertexId], b: &[VertexId]) -> usize {
-    let mut lo = 0usize;
-    let mut n = 0usize;
-    for &x in a {
-        match b[lo..].binary_search(&x) {
-            Ok(pos) => {
-                n += 1;
-                lo += pos + 1;
-            }
-            Err(pos) => lo += pos,
-        }
-        if lo >= b.len() {
-            break;
-        }
-    }
-    n
-}
-
-/// Linear-merge intersection of two sorted slices, appended to `out`.
-#[inline]
-pub fn intersect_into(a: &[VertexId], b: &[VertexId], out: &mut Vec<VertexId>) {
-    let (mut i, mut j) = (0, 0);
-    while i < a.len() && j < b.len() {
-        let (x, y) = (a[i], b[j]);
-        if x == y {
-            out.push(x);
-            i += 1;
-            j += 1;
-        } else if x < y {
-            i += 1;
-        } else {
-            j += 1;
-        }
-    }
-}
-
-/// Count elements of sorted `a` strictly less than `bound` (for symmetry
-/// breaking bounded intersections).
-#[inline]
-pub fn count_less_than(a: &[VertexId], bound: VertexId) -> usize {
-    a.partition_point(|&x| x < bound)
-}
+// The tuned set kernels live in `graph::setops` (adaptive merge /
+// gallop / bitset selection — crossovers in EXPERIMENTS.md); re-exported
+// here because the neighbor-list slices they operate on are CSR rows.
+pub use super::setops::{count_less_than, intersect_count, intersect_into};
 
 #[cfg(test)]
 mod tests {
@@ -203,26 +142,12 @@ mod tests {
     }
 
     #[test]
-    fn gallop_matches_linear() {
+    fn reexported_kernels_visible_through_csr() {
+        // kernel-level tests live in graph::setops; this guards the
+        // re-export surface existing callers rely on
         let a: Vec<u32> = (0..1000).step_by(7).collect();
         let b: Vec<u32> = vec![14, 21, 500, 700, 999];
-        let linear = {
-            let (mut i, mut j, mut n) = (0, 0, 0);
-            while i < a.len() && j < b.len() {
-                if a[i] == b[j] { n += 1; i += 1; j += 1; }
-                else if a[i] < b[j] { i += 1; } else { j += 1; }
-            }
-            n
-        };
-        assert_eq!(gallop_count(&b, &a), linear);
-        assert_eq!(intersect_count(&b, &a), linear);
-    }
-
-    #[test]
-    fn count_less_than_bounds() {
-        let a = vec![1u32, 3, 5, 7];
-        assert_eq!(count_less_than(&a, 0), 0);
-        assert_eq!(count_less_than(&a, 4), 2);
-        assert_eq!(count_less_than(&a, 100), 4);
+        assert_eq!(intersect_count(&b, &a), 3); // 14, 21, 700
+        assert_eq!(count_less_than(&b, 500), 2);
     }
 }

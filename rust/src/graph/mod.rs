@@ -1,11 +1,13 @@
 //! Graph substrate: CSR storage, construction, IO, synthetic generators,
-//! degeneracy/orientation preprocessing and statistics.
+//! degeneracy/orientation preprocessing, statistics, and the adaptive
+//! set-operation kernels ([`setops`]) every extension path runs on.
 
 pub mod builder;
 pub mod csr;
 pub mod gen;
 pub mod io;
 pub mod orientation;
+pub mod setops;
 pub mod stats;
 
 pub use csr::{CsrGraph, VertexId};

@@ -1,0 +1,377 @@
+//! Set-operation kernels — the single tuned implementation of sorted-set
+//! intersection / difference in the system.
+//!
+//! Sandslash's performance hinges on fast subgraph extension (paper
+//! §4–§5): MNC and LG exist precisely to replace per-candidate edge
+//! probes with set operations, and every fast path (TC, k-CL, SL, the
+//! set-centric DFS frontier) bottoms out here. Three kernel families,
+//! chosen adaptively by length/density heuristics (crossovers recorded
+//! in EXPERIMENTS.md):
+//!
+//! * **linear merge** — both lists walked in lockstep; best when the
+//!   lengths are within ~[`GALLOP_FACTOR`] of each other.
+//! * **galloping** — each element of the short list binary-searched in a
+//!   shrinking window of the long list; wins when the lengths are skewed
+//!   by more than [`GALLOP_FACTOR`].
+//! * **bitset filter** — O(1) word-indexed membership probes against a
+//!   pre-built neighborhood bitmap ([`BitSet`]); wins when one operand
+//!   is reused across many operations (e.g. a high-degree root's
+//!   neighborhood, built once per root task and probed at every level).
+//!
+//! Bounded variants (`*_below`) fuse a symmetry-breaking upper bound
+//! into the kernel so candidates violating `cand < bound` are never
+//! even visited — the DFS frontier achieves the same fusion by slicing
+//! its seed list, these are for callers intersecting directly;
+//! [`difference_into`] is the anti-intersection needed by
+//! vertex-induced (non-adjacency) constraints.
+
+use super::csr::VertexId;
+use crate::util::bitset::BitSet;
+
+/// Length-skew crossover between linear merge and galloping: gallop when
+/// `short * GALLOP_FACTOR < long`. The merge costs O(short + long), the
+/// gallop O(short * log(long)); 32 puts the switch safely past the point
+/// where the binary-search branch misses stop paying for themselves
+/// (measured in the §Perf pass, see EXPERIMENTS.md).
+pub const GALLOP_FACTOR: usize = 32;
+
+#[inline]
+fn skewed(short: usize, long: usize) -> bool {
+    short * GALLOP_FACTOR < long
+}
+
+/// |a ∩ b| for sorted slices; adaptive merge/gallop.
+#[inline]
+pub fn intersect_count(a: &[VertexId], b: &[VertexId]) -> usize {
+    if skewed(a.len(), b.len()) {
+        return gallop_count(a, b);
+    }
+    if skewed(b.len(), a.len()) {
+        return gallop_count(b, a);
+    }
+    merge_count(a, b)
+}
+
+/// a ∩ b appended to `out` (not cleared); adaptive merge/gallop.
+#[inline]
+pub fn intersect_into(a: &[VertexId], b: &[VertexId], out: &mut Vec<VertexId>) {
+    if skewed(a.len(), b.len()) {
+        return gallop_into(a, b, out);
+    }
+    if skewed(b.len(), a.len()) {
+        return gallop_into(b, a, out);
+    }
+    merge_into(a, b, out)
+}
+
+/// |{x ∈ a ∩ b : x < bound}| with the bound fused into the kernel: both
+/// inputs are pre-truncated by binary search, so elements ≥ bound are
+/// never visited (symmetry-breaking `lt` constraints).
+#[inline]
+pub fn intersect_count_below(a: &[VertexId], b: &[VertexId], bound: VertexId) -> usize {
+    let a = &a[..a.partition_point(|&x| x < bound)];
+    let b = &b[..b.partition_point(|&x| x < bound)];
+    intersect_count(a, b)
+}
+
+/// {x ∈ a ∩ b : x < bound} appended to `out`; bound fused as in
+/// [`intersect_count_below`].
+#[inline]
+pub fn intersect_into_below(
+    a: &[VertexId],
+    b: &[VertexId],
+    bound: VertexId,
+    out: &mut Vec<VertexId>,
+) {
+    let a = &a[..a.partition_point(|&x| x < bound)];
+    let b = &b[..b.partition_point(|&x| x < bound)];
+    intersect_into(a, b, out)
+}
+
+/// a \ b (anti-intersection) appended to `out`, for non-adjacency
+/// constraints of vertex-induced matching. Adaptive: when `b` is much
+/// longer than `a`, each element of `a` is binary-searched in a
+/// shrinking window of `b` instead of merging.
+pub fn difference_into(a: &[VertexId], b: &[VertexId], out: &mut Vec<VertexId>) {
+    if skewed(a.len(), b.len()) {
+        let mut lo = 0usize;
+        for (i, &x) in a.iter().enumerate() {
+            if lo >= b.len() {
+                out.extend_from_slice(&a[i..]);
+                return;
+            }
+            match b[lo..].binary_search(&x) {
+                Ok(pos) => lo += pos + 1,
+                Err(pos) => {
+                    lo += pos;
+                    out.push(x);
+                }
+            }
+        }
+        return;
+    }
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() && j < b.len() {
+        let (x, y) = (a[i], b[j]);
+        if x == y {
+            i += 1;
+            j += 1;
+        } else if x < y {
+            out.push(x);
+            i += 1;
+        } else {
+            j += 1;
+        }
+    }
+    out.extend_from_slice(&a[i..]);
+}
+
+/// Keep only the elements of `v` present in `bits` (in-place bitset
+/// intersection; order preserved, no allocation).
+pub fn retain_in_bitset(v: &mut Vec<VertexId>, bits: &BitSet) {
+    let mut w = 0usize;
+    for i in 0..v.len() {
+        let x = v[i];
+        if bits.contains(x as usize) {
+            v[w] = x;
+            w += 1;
+        }
+    }
+    v.truncate(w);
+}
+
+/// Keep only the elements of `v` absent from `bits` (in-place bitset
+/// anti-intersection).
+pub fn retain_not_in_bitset(v: &mut Vec<VertexId>, bits: &BitSet) {
+    let mut w = 0usize;
+    for i in 0..v.len() {
+        let x = v[i];
+        if !bits.contains(x as usize) {
+            v[w] = x;
+            w += 1;
+        }
+    }
+    v.truncate(w);
+}
+
+/// |a ∩ bits| via O(1) membership probes.
+pub fn intersect_bitset_count(a: &[VertexId], bits: &BitSet) -> usize {
+    a.iter().filter(|&&x| bits.contains(x as usize)).count()
+}
+
+/// Word-parallel intersection count of two bit vectors: AND + popcount,
+/// 64 memberships per instruction pair. Both slices must cover the same
+/// universe; trailing words of the longer slice are ignored.
+pub fn intersect_words_count(a: &[u64], b: &[u64]) -> usize {
+    a.iter()
+        .zip(b.iter())
+        .map(|(&x, &y)| (x & y).count_ones() as usize)
+        .sum()
+}
+
+/// Count elements of sorted `a` strictly less than `bound` (for symmetry
+/// breaking bounded intersections).
+#[inline]
+pub fn count_less_than(a: &[VertexId], bound: VertexId) -> usize {
+    a.partition_point(|&x| x < bound)
+}
+
+/// Linear-merge intersection count (branch-light lockstep walk).
+#[inline]
+fn merge_count(a: &[VertexId], b: &[VertexId]) -> usize {
+    let (mut i, mut j, mut n) = (0, 0, 0);
+    while i < a.len() && j < b.len() {
+        let (x, y) = (a[i], b[j]);
+        i += (x <= y) as usize;
+        j += (y <= x) as usize;
+        n += (x == y) as usize;
+    }
+    n
+}
+
+/// Linear-merge intersection appended to `out`.
+#[inline]
+fn merge_into(a: &[VertexId], b: &[VertexId], out: &mut Vec<VertexId>) {
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() && j < b.len() {
+        let (x, y) = (a[i], b[j]);
+        if x == y {
+            out.push(x);
+            i += 1;
+            j += 1;
+        } else if x < y {
+            i += 1;
+        } else {
+            j += 1;
+        }
+    }
+}
+
+/// Count |a ∩ b| by binary-searching each element of the short list `a`
+/// in the long list `b`, narrowing the search window as we go.
+fn gallop_count(a: &[VertexId], b: &[VertexId]) -> usize {
+    let mut lo = 0usize;
+    let mut n = 0usize;
+    for &x in a {
+        match b[lo..].binary_search(&x) {
+            Ok(pos) => {
+                n += 1;
+                lo += pos + 1;
+            }
+            Err(pos) => lo += pos,
+        }
+        if lo >= b.len() {
+            break;
+        }
+    }
+    n
+}
+
+/// Galloping intersection appended to `out` (`a` is the short list).
+fn gallop_into(a: &[VertexId], b: &[VertexId], out: &mut Vec<VertexId>) {
+    let mut lo = 0usize;
+    for &x in a {
+        match b[lo..].binary_search(&x) {
+            Ok(pos) => {
+                out.push(x);
+                lo += pos + 1;
+            }
+            Err(pos) => lo += pos,
+        }
+        if lo >= b.len() {
+            break;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_intersect(a: &[u32], b: &[u32]) -> Vec<u32> {
+        a.iter().copied().filter(|x| b.contains(x)).collect()
+    }
+
+    #[test]
+    fn empty_disjoint_identical() {
+        let a: Vec<u32> = vec![1, 3, 5];
+        let empty: Vec<u32> = vec![];
+        assert_eq!(intersect_count(&a, &empty), 0);
+        assert_eq!(intersect_count(&empty, &a), 0);
+        assert_eq!(intersect_count(&empty, &empty), 0);
+        let b: Vec<u32> = vec![2, 4, 6];
+        assert_eq!(intersect_count(&a, &b), 0);
+        assert_eq!(intersect_count(&a, &a), 3);
+        let mut out = Vec::new();
+        intersect_into(&a, &a, &mut out);
+        assert_eq!(out, a);
+    }
+
+    #[test]
+    fn gallop_matches_merge_on_skewed_lists() {
+        let long: Vec<u32> = (0..2000).step_by(3).collect();
+        let short: Vec<u32> = vec![0, 3, 4, 600, 601, 1998];
+        assert!(skewed(short.len(), long.len()));
+        let want = naive_intersect(&short, &long);
+        assert_eq!(intersect_count(&short, &long), want.len());
+        assert_eq!(intersect_count(&long, &short), want.len());
+        let mut out = Vec::new();
+        intersect_into(&short, &long, &mut out);
+        assert_eq!(out, want);
+        out.clear();
+        intersect_into(&long, &short, &mut out);
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn bounded_below_all_and_above_all() {
+        let a: Vec<u32> = vec![10, 20, 30];
+        let b: Vec<u32> = vec![10, 25, 30];
+        // bound below every element: empty result
+        assert_eq!(intersect_count_below(&a, &b, 5), 0);
+        let mut out = Vec::new();
+        intersect_into_below(&a, &b, 5, &mut out);
+        assert!(out.is_empty());
+        // bound above every element: same as unbounded
+        assert_eq!(intersect_count_below(&a, &b, 1000), 2);
+        intersect_into_below(&a, &b, 1000, &mut out);
+        assert_eq!(out, vec![10, 30]);
+        // bound is exclusive
+        assert_eq!(intersect_count_below(&a, &b, 30), 1);
+        out.clear();
+        intersect_into_below(&a, &b, 30, &mut out);
+        assert_eq!(out, vec![10]);
+    }
+
+    #[test]
+    fn difference_edge_cases() {
+        let a: Vec<u32> = vec![1, 2, 3, 4];
+        let empty: Vec<u32> = vec![];
+        let mut out = Vec::new();
+        difference_into(&a, &empty, &mut out);
+        assert_eq!(out, a);
+        out.clear();
+        difference_into(&empty, &a, &mut out);
+        assert!(out.is_empty());
+        out.clear();
+        difference_into(&a, &a, &mut out);
+        assert!(out.is_empty());
+        out.clear();
+        difference_into(&a, &[2, 4], &mut out);
+        assert_eq!(out, vec![1, 3]);
+    }
+
+    #[test]
+    fn difference_gallop_matches_merge() {
+        let long: Vec<u32> = (0..3000).step_by(2).collect();
+        let short: Vec<u32> = vec![0, 1, 100, 101, 2998, 2999, 5000];
+        assert!(skewed(short.len(), long.len()));
+        let mut got = Vec::new();
+        difference_into(&short, &long, &mut got);
+        let want: Vec<u32> =
+            short.iter().copied().filter(|x| !long.contains(x)).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn bitset_filters_match_list_kernels() {
+        let a: Vec<u32> = vec![0, 5, 63, 64, 65, 199];
+        let b: Vec<u32> = vec![5, 64, 199, 200];
+        let mut bits = BitSet::new(256);
+        for &x in &b {
+            bits.insert(x as usize);
+        }
+        assert_eq!(intersect_bitset_count(&a, &bits), intersect_count(&a, &b));
+        let mut keep = a.clone();
+        retain_in_bitset(&mut keep, &bits);
+        assert_eq!(keep, naive_intersect(&a, &b));
+        let mut drop = a.clone();
+        retain_not_in_bitset(&mut drop, &bits);
+        let mut want = Vec::new();
+        difference_into(&a, &b, &mut want);
+        assert_eq!(drop, want);
+    }
+
+    #[test]
+    fn word_parallel_count() {
+        let mut x = BitSet::new(300);
+        let mut y = BitSet::new(300);
+        for i in [1usize, 64, 65, 130, 299] {
+            x.insert(i);
+        }
+        for i in [1usize, 65, 131, 299] {
+            y.insert(i);
+        }
+        assert_eq!(intersect_words_count(x.words(), y.words()), 3);
+        assert_eq!(intersect_words_count(x.words(), x.words()), 5);
+        assert_eq!(intersect_words_count(&[], y.words()), 0);
+    }
+
+    #[test]
+    fn count_less_than_bounds() {
+        let a = vec![1u32, 3, 5, 7];
+        assert_eq!(count_less_than(&a, 0), 0);
+        assert_eq!(count_less_than(&a, 4), 2);
+        assert_eq!(count_less_than(&a, 100), 4);
+    }
+}

@@ -1,0 +1,62 @@
+//! Stub accelerator used when the crate is built without the `xla`
+//! feature. The real PJRT path ([`super`]'s `accel`/`pjrt` modules with
+//! the feature on) needs the external `xla` and `anyhow` crates, which
+//! the offline build environment does not provide; this keeps the same
+//! API surface so callers compile unchanged, with every entry point
+//! reporting that the runtime is unavailable.
+
+use crate::engine::MinerConfig;
+use crate::graph::CsrGraph;
+use std::fmt;
+
+/// Error carried by every stub entry point.
+#[derive(Debug, Clone, Copy)]
+pub struct AccelUnavailable;
+
+impl fmt::Display for AccelUnavailable {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "PJRT runtime unavailable: built without the `xla` feature \
+             (requires vendored `xla` + `anyhow` crates)"
+        )
+    }
+}
+
+impl std::error::Error for AccelUnavailable {}
+
+pub type Result<T> = std::result::Result<T, AccelUnavailable>;
+
+/// Same surface as the real `runtime::accel::Accelerator`.
+pub struct Accelerator {
+    pub edge_lanes: usize,
+}
+
+impl Accelerator {
+    pub fn load(_dir: &str) -> Result<Self> {
+        Err(AccelUnavailable)
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    pub fn triangle_count(&self, _g: &CsrGraph) -> Result<u64> {
+        Err(AccelUnavailable)
+    }
+
+    pub fn motif4(&self, _g: &CsrGraph, _cfg: &MinerConfig) -> Result<Vec<u64>> {
+        Err(AccelUnavailable)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_reports_unavailable() {
+        let err = Accelerator::load("artifacts").err().expect("stub must fail");
+        assert!(format!("{err:#}").contains("xla"));
+    }
+}

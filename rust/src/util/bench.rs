@@ -65,6 +65,210 @@ impl Bench {
     }
 }
 
+/// Minimal ordered JSON object builder for the `BENCH_*.json` artifacts
+/// (the offline registry has no serde). Values are stored pre-rendered;
+/// keys keep insertion order.
+#[derive(Clone, Debug, Default)]
+pub struct Json {
+    pairs: Vec<(String, String)>,
+}
+
+impl Json {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn str(mut self, k: &str, v: &str) -> Self {
+        let escaped = v.replace('\\', "\\\\").replace('"', "\\\"");
+        self.pairs.push((k.to_string(), format!("\"{escaped}\"")));
+        self
+    }
+
+    pub fn int(mut self, k: &str, v: u64) -> Self {
+        self.pairs.push((k.to_string(), v.to_string()));
+        self
+    }
+
+    pub fn num(mut self, k: &str, v: f64) -> Self {
+        let rendered = if v.is_finite() { format!("{v:.6}") } else { "null".to_string() };
+        self.pairs.push((k.to_string(), rendered));
+        self
+    }
+
+    /// Render as a single-line JSON object.
+    pub fn render_inline(&self) -> String {
+        let body: Vec<String> =
+            self.pairs.iter().map(|(k, v)| format!("\"{k}\": {v}")).collect();
+        format!("{{ {} }}", body.join(", "))
+    }
+}
+
+/// Insert or replace one named section of a bench-report file, keeping
+/// every section written by other benches. File layout (fixed, written
+/// only by this function):
+///
+/// ```json
+/// { <meta pairs...>, "sections": { "<name>": { ... }, ... } }
+/// ```
+pub fn upsert_bench_section(
+    path: &std::path::Path,
+    meta: &Json,
+    section: &str,
+    body: &Json,
+) -> std::io::Result<()> {
+    let mut sections: Vec<(String, String)> = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|t| extract_sections(&t))
+        .unwrap_or_default();
+    let rendered = body.render_inline();
+    match sections.iter_mut().find(|(n, _)| n == section) {
+        Some(entry) => entry.1 = rendered,
+        None => sections.push((section.to_string(), rendered)),
+    }
+    let mut out = String::from("{\n");
+    for (k, v) in &meta.pairs {
+        out.push_str(&format!("  \"{k}\": {v},\n"));
+    }
+    out.push_str("  \"sections\": {\n");
+    let rows: Vec<String> =
+        sections.iter().map(|(n, b)| format!("    \"{n}\": {b}")).collect();
+    out.push_str(&rows.join(",\n"));
+    out.push_str("\n  }\n}\n");
+    std::fs::write(path, out)
+}
+
+/// Pull the `"sections"` object out of a previously written report:
+/// returns (name, raw-object-text) in file order, or `None` if the text
+/// does not match the layout `upsert_bench_section` writes.
+fn extract_sections(text: &str) -> Option<Vec<(String, String)>> {
+    let start = text.find("\"sections\"")?;
+    let rest = &text[start + "\"sections\"".len()..];
+    let s = &rest[rest.find('{')?..];
+    let b = s.as_bytes();
+    let mut i = 1usize; // past the opening '{'
+    let mut out = Vec::new();
+    loop {
+        while i < b.len() && (b[i].is_ascii_whitespace() || b[i] == b',') {
+            i += 1;
+        }
+        if i >= b.len() {
+            return None;
+        }
+        if b[i] == b'}' {
+            return Some(out);
+        }
+        if b[i] != b'"' {
+            return None;
+        }
+        let key_start = i + 1;
+        let mut j = key_start;
+        while j < b.len() && b[j] != b'"' {
+            j += 1; // section names are written without escapes
+        }
+        if j >= b.len() {
+            return None;
+        }
+        let key = s[key_start..j].to_string();
+        i = j + 1;
+        while i < b.len() && b[i] != b'{' {
+            if b[i] == b':' || b[i].is_ascii_whitespace() {
+                i += 1;
+            } else {
+                return None;
+            }
+        }
+        if i >= b.len() {
+            return None;
+        }
+        // balanced-brace scan, string-aware
+        let obj_start = i;
+        let (mut depth, mut in_str, mut esc) = (0usize, false, false);
+        while i < b.len() {
+            let c = b[i];
+            if in_str {
+                if esc {
+                    esc = false;
+                } else if c == b'\\' {
+                    esc = true;
+                } else if c == b'"' {
+                    in_str = false;
+                }
+            } else if c == b'"' {
+                in_str = true;
+            } else if c == b'{' {
+                depth += 1;
+            } else if c == b'}' {
+                depth -= 1;
+                if depth == 0 {
+                    i += 1;
+                    break;
+                }
+            }
+            i += 1;
+        }
+        if depth != 0 {
+            return None;
+        }
+        out.push((key, s[obj_start..i].to_string()));
+    }
+}
+
+/// Repo-root path of the PR-1 set-centric-extension report
+/// (`BENCH_pr1.json`, one directory above the crate manifest).
+pub fn pr1_report_path() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_pr1.json")
+}
+
+/// Standard meta block for the PR-1 report; section bodies carry their
+/// own graph description.
+pub fn pr1_meta(threads: usize) -> Json {
+    Json::new()
+        .str("bench", "pr1-set-centric-extension")
+        .int("threads", threads as u64)
+        .str("build", if cfg!(debug_assertions) { "dev" } else { "release" })
+        .str(
+            "regenerate",
+            "cargo test -q (smoke) or cargo bench --bench table5_tc / table6_kcl (sampled)",
+        )
+}
+
+/// One measured scalar-vs-set-centric comparison, as recorded in a
+/// PR-1 report section (shared by the benches and the tier-1 smoke
+/// test so the JSON schema cannot drift between writers).
+pub struct Pr1Section<'a> {
+    pub graph: &'a str,
+    pub pattern: &'a str,
+    pub count: u64,
+    pub scalar_secs: f64,
+    pub set_secs: f64,
+    /// Hand-tuned DAG fast path, when measured alongside.
+    pub dag_secs: Option<f64>,
+    pub samples: usize,
+}
+
+impl Pr1Section<'_> {
+    pub fn speedup(&self) -> f64 {
+        self.scalar_secs / self.set_secs
+    }
+
+    /// Upsert this section into the PR-1 report at the repo root.
+    pub fn write(&self, section: &str, threads: usize) -> std::io::Result<()> {
+        let mut body = Json::new()
+            .str("graph", self.graph)
+            .str("pattern", self.pattern)
+            .int("count", self.count)
+            .num("scalar_secs", self.scalar_secs)
+            .num("set_secs", self.set_secs);
+        if let Some(d) = self.dag_secs {
+            body = body.num("dag_intersect_secs", d);
+        }
+        let body = body
+            .num("speedup_set_over_scalar", self.speedup())
+            .int("samples", self.samples as u64);
+        upsert_bench_section(&pr1_report_path(), &pr1_meta(threads), section, &body)
+    }
+}
+
 /// Print a markdown table of results: one row per (row_label, cells).
 pub fn print_table(title: &str, columns: &[&str], rows: &[(String, Vec<String>)]) {
     println!("\n### {title}\n");
@@ -86,5 +290,49 @@ mod tests {
         assert!(r.samples.len() >= 4);
         assert!(r.min() >= 0.0);
         assert!(r.median() >= r.min());
+    }
+
+    #[test]
+    fn json_renders_escaped_and_ordered() {
+        let j = Json::new().str("name", "a \"b\" \\ c").int("n", 7).num("t", 0.5);
+        assert_eq!(
+            j.render_inline(),
+            "{ \"name\": \"a \\\"b\\\" \\\\ c\", \"n\": 7, \"t\": 0.500000 }"
+        );
+        let nan = Json::new().num("t", f64::NAN);
+        assert_eq!(nan.render_inline(), "{ \"t\": null }");
+    }
+
+    #[test]
+    fn upsert_round_trips_and_preserves_other_sections() {
+        let path = std::env::temp_dir().join(format!(
+            "sandslash_bench_upsert_{}.json",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&path);
+        let meta = Json::new().str("bench", "unit").int("threads", 2);
+        let a = Json::new().int("count", 10).num("secs", 0.25);
+        upsert_bench_section(&path, &meta, "alpha", &a).unwrap();
+        let b = Json::new().int("count", 20).num("secs", 0.5);
+        upsert_bench_section(&path, &meta, "beta", &b).unwrap();
+        // replace alpha; beta must survive
+        let a2 = Json::new().int("count", 11).num("secs", 0.125);
+        upsert_bench_section(&path, &meta, "alpha", &a2).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"alpha\": { \"count\": 11"));
+        assert!(text.contains("\"beta\": { \"count\": 20"));
+        let sections = extract_sections(&text).unwrap();
+        assert_eq!(sections.len(), 2);
+        assert_eq!(sections[0].0, "alpha");
+        assert_eq!(sections[1].0, "beta");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn extract_rejects_foreign_layouts() {
+        assert!(extract_sections("not json").is_none());
+        assert!(extract_sections("{\"sections\": {").is_none());
+        let ok = extract_sections("{\"sections\": {}}").unwrap();
+        assert!(ok.is_empty());
     }
 }

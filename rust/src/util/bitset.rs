@@ -43,6 +43,13 @@ impl BitSet {
         (self.words[i / 64] >> (i % 64)) & 1 == 1
     }
 
+    /// Raw backing words (for the word-parallel kernels in
+    /// [`crate::graph::setops`]).
+    #[inline]
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
     /// Sparse clear: only zero the words touched since the last clear.
     pub fn clear(&mut self) {
         for &w in &self.touched {

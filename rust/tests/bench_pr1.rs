@@ -1,0 +1,75 @@
+//! Tier-1 smoke benchmark for the PR-1 set-centric extension work:
+//! every `cargo test` run (a) differentially checks the scalar and
+//! set-centric paths on RMAT(2^14) inputs at full scale and (b) rewrites
+//! `BENCH_pr1.json` at the repo root with single-shot wall times. The
+//! `table5_tc` / `table6_kcl` benches overwrite the same sections with
+//! properly sampled release numbers — this test just keeps the artifact
+//! alive and honest on every tier-1 run.
+
+use sandslash::engine::hooks::NoHooks;
+use sandslash::engine::{dfs, MinerConfig, OptFlags};
+use sandslash::graph::gen;
+use sandslash::graph::CsrGraph;
+use sandslash::pattern::{library, plan, Pattern};
+use sandslash::util::bench::{pr1_report_path, Pr1Section};
+use sandslash::util::timer::timed;
+
+fn measure_and_write(
+    g: &CsrGraph,
+    p: &Pattern,
+    graph_desc: &str,
+    pname: &str,
+    section: &str,
+) -> f64 {
+    let pl = plan(p, true, true);
+    let set_cfg = MinerConfig::new(OptFlags::hi());
+    let mut scalar_cfg = set_cfg;
+    scalar_cfg.opts.sets = false;
+    // first runs double as warmup and as the differential check
+    let (set_count, _) = dfs::count(g, &pl, &set_cfg, &NoHooks);
+    let (scalar_count, _) = dfs::count(g, &pl, &scalar_cfg, &NoHooks);
+    assert_eq!(
+        set_count, scalar_count,
+        "scalar vs set-centric disagree on {graph_desc} / {pname}"
+    );
+    let (_, scalar_secs) = timed(|| dfs::count(g, &pl, &scalar_cfg, &NoHooks).0);
+    let (_, set_secs) = timed(|| dfs::count(g, &pl, &set_cfg, &NoHooks).0);
+    let s = Pr1Section {
+        graph: graph_desc,
+        pattern: pname,
+        count: set_count,
+        scalar_secs,
+        set_secs,
+        dag_secs: None,
+        samples: 1,
+    };
+    if let Err(e) = s.write(section, set_cfg.threads) {
+        eprintln!("skipping BENCH_pr1.json write: {e}");
+    }
+    s.speedup()
+}
+
+#[test]
+fn bench_pr1_smoke_regenerates_report() {
+    let g_tc = gen::rmat(14, 8, 42, &[]);
+    let tc_speedup = measure_and_write(
+        &g_tc,
+        &library::triangle(),
+        "rmat scale=14 ef=8 seed=42",
+        "triangle",
+        "tc",
+    );
+    let g_cl = gen::rmat(14, 4, 42, &[]);
+    let cl_speedup = measure_and_write(
+        &g_cl,
+        &library::clique(4),
+        "rmat scale=14 ef=4 seed=42",
+        "4-clique",
+        "kcl4",
+    );
+    eprintln!(
+        "BENCH_pr1 smoke: set-centric speedup over scalar — tc {tc_speedup:.2}x, \
+         4-clique {cl_speedup:.2}x ({})",
+        pr1_report_path().display()
+    );
+}
