@@ -1,10 +1,16 @@
-//! Regenerates paper Fig. 9: k-CL speedup from local-graph search (LG),
-//! k = 4..8, on the Orkut- and Friendster-like minis.
+//! Regenerates paper Fig. 9: speedup from local-graph search (LG) —
+//! k-CL (k = 4..8, hand-tuned kClist path) plus the PR-2 generalized
+//! LG stage on non-clique patterns (diamond, tailed-triangle, 4-cycle)
+//! through the generic DFS engine — on the Orkut- and Friendster-like
+//! minis. Every row pair asserts hi/lo count equality, so the bench
+//! doubles as a differential check.
 use sandslash::coordinator::campaign;
 
 fn main() {
     let rows = campaign::fig9(&["or-tiny", "fr-tiny"], 8);
     println!("{}", campaign::to_markdown(&rows));
-    println!("\nExpected shape (paper): speedup 1.2-3.5x, growing with k on the");
-    println!("denser graph, peaking then flattening on the sparser one.");
+    println!("\nExpected shape (paper): k-CL speedup 1.2-3.5x, growing with k on");
+    println!("the denser graph, peaking then flattening on the sparser one.");
+    println!("Non-clique patterns gain less (fewer cone levels to shrink at) but");
+    println!("must never lose past the crossover; heuristic in EXPERIMENTS.md.");
 }

@@ -17,15 +17,24 @@ use crate::pattern::{library, plan, Pattern};
 use crate::util::pool::parallel_reduce;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// Which GPM system's optimization set to emulate (DESIGN.md §5):
+/// each variant is a preset [`OptFlags`] combination (plus the BFS
+/// strategy for Pangolin).
 pub enum System {
+    /// Sandslash with all high-level optimizations (Table 3a).
     SandslashHi,
+    /// Sandslash-Hi plus the low-level LC/LG optimizations.
     SandslashLo,
+    /// AutoMine: MO but no SB/DAG; counts every automorphic copy.
     AutomineLike,
+    /// Pangolin: BFS strategy with SB + DAG, no MO/DF/MNC.
     PangolinLike,
+    /// Peregrine: DFS with on-the-fly SB and MO, no DAG.
     PeregrineLike,
 }
 
 impl System {
+    /// Row label used in the campaign tables.
     pub fn name(&self) -> &'static str {
         match self {
             System::SandslashHi => "sandslash-hi",
@@ -36,6 +45,7 @@ impl System {
         }
     }
 
+    /// The optimization preset this system runs with.
     pub fn flags(&self) -> OptFlags {
         match self {
             System::SandslashHi => OptFlags::hi(),

@@ -9,6 +9,8 @@ use crate::graph::setops::intersect_count;
 use crate::graph::CsrGraph;
 use crate::util::pool::parallel_reduce;
 
+/// GAP-benchmark-style triangle count (Table 5's hand-optimized
+/// non-GPM baseline).
 pub fn gap_tc(g: &CsrGraph, cfg: &MinerConfig) -> u64 {
     // preprocessing: degree-descending relabel
     let perm = degree_desc_order(g);

@@ -7,6 +7,13 @@
 //!   shrinking local graph built from the core-ordered DAG (paper §5,
 //!   Listing 4). The low-level user code is `initLG`/`updateLG`; the
 //!   engine mechanics live in [`crate::engine::local_graph`].
+//!
+//! Cliques mined through the *generic* plan interpreter (e.g. via
+//! [`crate::apps::solve`] with a non-clique spec, or the differential
+//! tests) get the generalized LG stage of
+//! [`crate::engine::local_graph::PlanLocalGraph`] instead; this module
+//! keeps the hand-tuned DAG form as the performance ceiling the paper
+//! reports in Fig. 9.
 
 use crate::engine::local_graph::LocalGraph;
 use crate::engine::MinerConfig;
@@ -23,6 +30,9 @@ pub fn clique_hi(g: &CsrGraph, k: usize, cfg: &MinerConfig) -> (u64, SearchStats
     clique_on_dag(g, &dag, k, cfg)
 }
 
+/// k-CL on a caller-supplied DAG: per-root DFS where the candidate
+/// set is the running intersection of out-neighborhoods (shared by
+/// `clique_hi` and emulations that pick their own orientation).
 pub fn clique_on_dag(
     _g: &CsrGraph,
     dag: &Dag,

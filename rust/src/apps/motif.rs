@@ -74,7 +74,10 @@ pub fn edge_raw_counts(g: &CsrGraph, cfg: &MinerConfig) -> (u64, u64, u64) {
 
 /// 4-MC-Lo (paper Listing 3 + PGD conversions): enumerate 4-cliques and
 /// induced 4-cycles only; derive diamond / tailed-triangle / 4-path /
-/// 3-star from local counts:
+/// 3-star from local counts. The 4-cycle anchor runs through the
+/// generic DFS engine, so with `OptFlags::lg` in `cfg` it uses the
+/// generalized shrinking-local-graph stage past the plan's coverage
+/// level. Conversions:
 ///
 /// ```text
 /// D  = Σ_e C(tri_e,2) − 6·C4
@@ -145,6 +148,18 @@ mod tests {
         let g = gen::rmat(8, 5, 6, &[]);
         let (hi, _) = motif4_hi(&g, &cfg());
         let lo = motif4_lo(&g, &cfg());
+        assert_eq!(hi, lo);
+    }
+
+    #[test]
+    fn lo4_with_lg_stage_matches_hi4() {
+        // the 4-cycle anchor rides the generic engine: with the full Lo
+        // preset it takes the local-graph stage and must not change
+        let g = gen::rmat(8, 5, 9, &[]);
+        let (hi, _) = motif4_hi(&g, &cfg());
+        let mut c = cfg();
+        c.opts = OptFlags::lo();
+        let lo = motif4_lo(&g, &c);
         assert_eq!(hi, lo);
     }
 

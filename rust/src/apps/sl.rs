@@ -4,7 +4,12 @@
 //!
 //! Sandslash-Hi applies MO + SB + DF + MNC automatically from the
 //! high-level spec; this module is a thin wrapper over the
-//! pattern-guided DFS engine with an edge-induced plan.
+//! pattern-guided DFS engine with an edge-induced plan. With
+//! `OptFlags::lg` (the Lo preset) the engine additionally switches deep
+//! levels onto shrinking local graphs
+//! ([`crate::engine::local_graph::PlanLocalGraph`]) — SL inherits the
+//! stage with no changes here because it rides the same plan
+//! interpreter.
 
 use crate::engine::dfs;
 use crate::engine::hooks::NoHooks;
@@ -160,6 +165,18 @@ mod tests {
         // all listed embeddings are genuinely cycles
         for r in rows.iter().take(50) {
             assert!(g.has_edge(r[0], r[1]) || g.has_edge(r[0], r[2]) || g.has_edge(r[0], r[3]));
+        }
+    }
+
+    #[test]
+    fn lg_stage_matches_hi_on_sl_patterns() {
+        let g = gen::rmat(8, 6, 17, &[]);
+        for p in [library::diamond(), library::cycle(4)] {
+            let (hi, _) = sl_count(&g, &p, &cfg());
+            let mut c = cfg();
+            c.opts = OptFlags::lo();
+            let (lo, _) = sl_count(&g, &p, &c);
+            assert_eq!(hi, lo, "{p}");
         }
     }
 

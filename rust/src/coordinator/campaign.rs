@@ -164,9 +164,22 @@ pub fn fig8(graphs: &[&str], k: usize) -> Vec<ResultRow> {
     rows
 }
 
-/// Fig. 9: k-CL speedup from local-graph search, k = 4..=max_k.
+/// Fig. 9: speedup from local-graph search. Cliques (k = 4..=max_k) run
+/// the hand-tuned kClist path; the non-clique patterns run the generic
+/// DFS engine with the PR-2 `OptFlags::lg` stage against the
+/// set-centric baseline, so the figure now also measures the
+/// generalized LG of paper §5 on diamond/house-class plans.
 pub fn fig9(graphs: &[&str], max_k: usize) -> Vec<ResultRow> {
+    use crate::engine::dfs;
+    use crate::engine::hooks::NoHooks;
+    use crate::pattern::plan;
+
     let mut rows = Vec::new();
+    let pats = [
+        ("diamond", library::diamond()),
+        ("tailed-triangle", library::tailed_triangle()),
+        ("4-cycle", library::cycle(4)),
+    ];
     for name in graphs {
         let g = datasets::load(name).expect("dataset");
         for k in 4..=max_k {
@@ -175,6 +188,16 @@ pub fn fig9(graphs: &[&str], max_k: usize) -> Vec<ResultRow> {
             rows.push(row("fig9-lg", "sandslash-hi", name, &kp, t_hi, a));
             let (b, t_lo) = timed(|| clique::clique_lo(&g, k, &cfg()).0);
             rows.push(row("fig9-lg", "sandslash-lo(LG)", name, &kp, t_lo, b));
+            assert_eq!(a, b);
+        }
+        for (pname, p) in &pats {
+            let pl = plan(p, true, true);
+            let mut lo_cfg = cfg();
+            lo_cfg.opts = OptFlags::lo();
+            let (a, t_hi) = timed(|| dfs::count(&g, &pl, &cfg(), &NoHooks).0);
+            rows.push(row("fig9-lg", "sandslash-hi", name, pname, t_hi, a));
+            let (b, t_lo) = timed(|| dfs::count(&g, &pl, &lo_cfg, &NoHooks).0);
+            rows.push(row("fig9-lg", "sandslash-lo(LG)", name, pname, t_lo, b));
             assert_eq!(a, b);
         }
     }
@@ -281,7 +304,9 @@ mod tests {
     #[test]
     fn fig9_smoke() {
         let rows = fig9(&["er-small"], 4);
-        assert_eq!(rows.len(), 2);
+        // one hi/lo pair for 4-cliques + one per non-clique pattern
+        assert_eq!(rows.len(), 8);
+        assert!(rows.iter().any(|r| r.params == "diamond"));
     }
 
     #[test]

@@ -22,6 +22,7 @@ pub fn unlabeled_names() -> &'static [&'static str] {
     &["lj-mini", "or-mini", "tw4-mini", "fr-mini", "uk-mini"]
 }
 
+/// All registered labeled (k-FSM) dataset names in canonical order.
 pub fn labeled_names() -> &'static [&'static str] {
     &["pa-mini", "yo-mini", "pdb-mini"]
 }

@@ -26,8 +26,11 @@ struct BfsEmb {
 /// materialized embeddings (the memory-pressure proxy reported in
 /// EXPERIMENTS.md).
 pub struct BfsOutcome {
+    /// Per-motif counts (library order).
     pub counts: Vec<u64>,
+    /// Search counters.
     pub stats: SearchStats,
+    /// Peak number of simultaneously materialized embeddings.
     pub peak_embeddings: u64,
 }
 

@@ -9,7 +9,7 @@
 //! * the extension state for the selected mode (below),
 //! * symmetry-breaking / non-adjacency / degree constraints from the plan.
 //!
-//! Two extension modes:
+//! Three extension modes:
 //!
 //! * **Set-centric** (`opts.sets`, the default): each level's candidate
 //!   set is computed once with the adaptive kernels in
@@ -19,6 +19,15 @@
 //!   bounds. Buffers are per-thread and per-level, so the hot path does
 //!   no allocation; high-degree roots additionally publish their
 //!   neighborhood as a bitmap probed in O(1) per candidate.
+//! * **Local-graph** (`opts.lg`, layered on the set-centric mode; paper
+//!   §5 "LG"): once the search passes the plan's coverage level
+//!   (`MatchingPlan::lg_level`) and the matched prefix's neighborhoods
+//!   are small enough (`LG_UNIVERSE_CAP`), the remaining levels run on
+//!   a [`crate::engine::local_graph::PlanLocalGraph`]: candidates come
+//!   from degeneracy-bounded local lists shrunk kClist-style at cone
+//!   levels, and every plan constraint — adjacency, anti-adjacency,
+//!   symmetry range bounds — resolves against local ids. The
+//!   set-centric path is the differential oracle for this stage.
 //! * **Scalar** (`opts.sets` off): the seed behaviour — scan the pivot's
 //!   neighbor list and test every candidate against each constraint,
 //!   via the MNC connectivity index when `opts.mnc`. Kept both as the
@@ -30,12 +39,13 @@
 //! the hot path.
 
 use crate::graph::{setops, CsrGraph, VertexId};
-use crate::pattern::matching_order::MatchingPlan;
+use crate::pattern::matching_order::{LevelPlan, MatchingPlan};
 use crate::util::bitset::BitSet;
 use crate::util::metrics::SearchStats;
 use crate::util::pool::parallel_reduce;
 
 use super::hooks::LowLevelApi;
+use super::local_graph::PlanLocalGraph;
 use super::mnc::Connectivity;
 use super::opts::MinerConfig;
 
@@ -44,6 +54,23 @@ use super::opts::MinerConfig;
 /// later level replaces a merge against that (large) list with O(1)
 /// probes per surviving candidate (crossover in EXPERIMENTS.md).
 const ROOT_BITSET_MIN_DEGREE: usize = 256;
+
+/// Crossover for the local-graph stage (`opts.lg`): switch from global
+/// set intersections to a shrinking local graph once the estimated
+/// local universe — the summed degrees of the matched vertices whose
+/// neighborhoods seed it (`LevelPlan::lg_pre_mask`) — drops to this
+/// size. Building the local adjacency costs roughly one bounded
+/// intersection per universe member, so it must be amortized over the
+/// remaining levels; past ~2k members the build cost exceeds what the
+/// degeneracy-bounded deep intersections save on the graphs we target
+/// (heuristic recorded in EXPERIMENTS.md §PR-2).
+const LG_UNIVERSE_CAP: usize = 2048;
+
+/// The LG switch needs at least this many unmatched levels: with only
+/// one level left, the local graph would be built and immediately
+/// discarded after a single candidate sweep that the global kernels do
+/// just as fast.
+const LG_MIN_REMAINING: usize = 2;
 
 /// Per-thread, per-level candidate-set buffers — the set-centric
 /// frontier. All storage is reused across root tasks: zero allocation on
@@ -83,6 +110,37 @@ struct ThreadState<A> {
     emb: Vec<VertexId>,
     conn: Connectivity,
     front: Frontier,
+    /// Shrinking local graph for the `opts.lg` stage (storage reused
+    /// across root tasks).
+    lg: PlanLocalGraph,
+}
+
+/// Collapse a level's symmetry-breaking partial orders to one exclusive
+/// range: `cand > max(emb[j], j in gt_mask)` and `cand < min(emb[j],
+/// j in lt_mask)`. Shared by the set-centric and local-graph paths.
+#[inline]
+fn sb_range(lp: &LevelPlan, emb: &[VertexId]) -> (Option<VertexId>, Option<VertexId>) {
+    let mut lo: Option<VertexId> = None;
+    let mut hi: Option<VertexId> = None;
+    let mut m = lp.gt_mask;
+    while m != 0 {
+        let j = m.trailing_zeros() as usize;
+        m &= m - 1;
+        let b = emb[j];
+        if lo.map_or(true, |l| b > l) {
+            lo = Some(b);
+        }
+    }
+    let mut m = lp.lt_mask;
+    while m != 0 {
+        let j = m.trailing_zeros() as usize;
+        m &= m - 1;
+        let b = emb[j];
+        if hi.map_or(true, |h| b < h) {
+            hi = Some(b);
+        }
+    }
+    (lo, hi)
 }
 
 /// Mine all embeddings of `plan` in `g`; `leaf` is invoked with the
@@ -122,6 +180,7 @@ pub fn mine<A: Send, H: LowLevelApi>(
                 emb: Vec::with_capacity(k),
                 conn: Connectivity::new(),
                 front: Frontier::new(k),
+                lg: PlanLocalGraph::new(),
             },
             |st, v| {
                 let v = v as VertexId;
@@ -181,6 +240,7 @@ pub fn mine<A: Send, H: LowLevelApi>(
                     emb: a.emb,
                     conn: a.conn,
                     front: a.front,
+                    lg: a.lg,
                 }
             },
         );
@@ -201,33 +261,34 @@ fn extend_set<A, H: LowLevelApi>(
     leaf: &(impl Fn(&mut A, &[VertexId]) + Sync),
 ) {
     let lp = &plan.levels[level];
+    // Local-graph stage (opts.lg): from the plan's coverage level on,
+    // the neighborhoods of the matched prefix contain every future
+    // candidate. Once they are small enough (crossover heuristic, see
+    // EXPERIMENTS.md §PR-2), build a shrinking local graph and run the
+    // rest of this subtree on degeneracy-bounded local lists.
+    if cfg.opts.lg
+        && level >= plan.lg_level
+        && plan.size() - level >= LG_MIN_REMAINING
+    {
+        let mut est = 0usize;
+        let mut m = lp.lg_pre_mask;
+        while m != 0 {
+            let j = m.trailing_zeros() as usize;
+            m &= m - 1;
+            est += g.degree(st.emb[j]);
+        }
+        if est <= LG_UNIVERSE_CAP {
+            extend_lg_root(g, plan, cfg, hooks, st, level, leaf);
+            return;
+        }
+    }
     if !hooks.to_extend(&st.emb, lp.pivot) {
         return;
     }
-    // Symmetry-breaking partial orders collapse to one exclusive range:
-    // cand > max(emb[j], j in gt_mask) and cand < min(emb[j], j in
-    // lt_mask). Fused into the seed list below, so out-of-range
-    // candidates are never materialized.
-    let mut lo: Option<VertexId> = None;
-    let mut hi: Option<VertexId> = None;
-    let mut m = lp.gt_mask;
-    while m != 0 {
-        let j = m.trailing_zeros() as usize;
-        m &= m - 1;
-        let b = st.emb[j];
-        if lo.map_or(true, |l| b > l) {
-            lo = Some(b);
-        }
-    }
-    let mut m = lp.lt_mask;
-    while m != 0 {
-        let j = m.trailing_zeros() as usize;
-        m &= m - 1;
-        let b = st.emb[j];
-        if hi.map_or(true, |h| b < h) {
-            hi = Some(b);
-        }
-    }
+    // Symmetry-breaking partial orders collapse to one exclusive range,
+    // fused into the seed list below, so out-of-range candidates are
+    // never materialized.
+    let (lo, hi) = sb_range(lp, &st.emb);
     if let (Some(l), Some(h)) = (lo, hi) {
         if l + 1 >= h {
             return; // empty range
@@ -324,6 +385,37 @@ fn extend_set<A, H: LowLevelApi>(
     st.front.bufs[level] = cur;
 }
 
+/// Residual per-candidate filters shared by the set-centric and
+/// local-graph paths: degree bound (DF), label, injectivity, and the
+/// low-level `to_add` hook — one implementation so the two paths
+/// cannot drift. Returns true when the candidate survives.
+#[inline]
+fn admit_candidate<A, H: LowLevelApi>(
+    g: &CsrGraph,
+    cfg: &MinerConfig,
+    hooks: &H,
+    st: &mut ThreadState<A>,
+    lp: &LevelPlan,
+    level: usize,
+    cand: VertexId,
+) -> bool {
+    if cfg.opts.df && g.degree(cand) < lp.degree {
+        st.stats.pruned += cfg.opts.stats as u64;
+        return false;
+    }
+    if lp.label != 0 && g.label(cand) != lp.label {
+        return false;
+    }
+    if st.emb.contains(&cand) {
+        return false;
+    }
+    if !hooks.to_add(g, &st.emb, cand, level) {
+        st.stats.pruned += cfg.opts.stats as u64;
+        return false;
+    }
+    true
+}
+
 /// Shared per-candidate tail of the set-centric path: residual filters
 /// (DF, label, injectivity, FP hook), then match or recurse.
 #[inline]
@@ -339,18 +431,7 @@ fn visit_candidate<A, H: LowLevelApi>(
 ) {
     let k = plan.size();
     let lp = &plan.levels[level];
-    if cfg.opts.df && g.degree(cand) < lp.degree {
-        st.stats.pruned += cfg.opts.stats as u64;
-        return;
-    }
-    if lp.label != 0 && g.label(cand) != lp.label {
-        return;
-    }
-    if st.emb.contains(&cand) {
-        return;
-    }
-    if !hooks.to_add(g, &st.emb, cand, level) {
-        st.stats.pruned += cfg.opts.stats as u64;
+    if !admit_candidate(g, cfg, hooks, st, lp, level, cand) {
         return;
     }
     if level + 1 == k {
@@ -369,6 +450,112 @@ fn visit_candidate<A, H: LowLevelApi>(
     }
     extend_set(g, plan, cfg, hooks, st, level + 1, leaf);
     st.emb.pop();
+}
+
+/// Entry point of the local-graph stage: build the local universe for
+/// the current partial embedding, then run every remaining level on it.
+fn extend_lg_root<A, H: LowLevelApi>(
+    g: &CsrGraph,
+    plan: &MatchingPlan,
+    cfg: &MinerConfig,
+    hooks: &H,
+    st: &mut ThreadState<A>,
+    level: usize,
+    leaf: &(impl Fn(&mut A, &[VertexId]) + Sync),
+) {
+    let lp = &plan.levels[level];
+    let n = st.lg.init(g, &st.emb, lp.lg_pre_mask, lp.lg_touch_mask, plan.size());
+    if cfg.opts.stats {
+        st.stats.lg_vertices += n as u64;
+    }
+    if n == 0 {
+        return;
+    }
+    extend_lg(g, plan, cfg, hooks, st, level, leaf);
+}
+
+/// Local-graph extension for one level: translate the symmetry bounds
+/// into a local-id range once, materialize the smallest source list
+/// (bounded), then admit each candidate with a single O(1) test of its
+/// embedding-adjacency bitmask against the level's adjacency and
+/// anti-adjacency masks — the local-space realization of the paper's
+/// Listing-4 search, generalized to arbitrary plans.
+fn extend_lg<A, H: LowLevelApi>(
+    g: &CsrGraph,
+    plan: &MatchingPlan,
+    cfg: &MinerConfig,
+    hooks: &H,
+    st: &mut ThreadState<A>,
+    level: usize,
+    leaf: &(impl Fn(&mut A, &[VertexId]) + Sync),
+) {
+    let k = plan.size();
+    let lp = &plan.levels[level];
+    if !hooks.to_extend(&st.emb, lp.pivot) {
+        return;
+    }
+    let (lo, hi) = sb_range(lp, &st.emb);
+    if let (Some(l), Some(h)) = (lo, hi) {
+        if l + 1 >= h {
+            return; // empty range
+        }
+    }
+    let (lo_l, hi_l) = st.lg.local_range(lo, hi);
+    if lo_l >= hi_l {
+        return;
+    }
+    // seed from the smallest source list (pre-LG candidate list or a
+    // chosen vertex's shrunken adjacency prefix)
+    let mut seed = usize::MAX;
+    let mut best = usize::MAX;
+    let mut m = lp.adj_mask;
+    while m != 0 {
+        let j = m.trailing_zeros() as usize;
+        m &= m - 1;
+        let len = st.lg.source_len(j);
+        if len < best {
+            best = len;
+            seed = j;
+        }
+    }
+    debug_assert!(seed != usize::MAX, "level has no adjacency source");
+    let mut buf = std::mem::take(&mut st.front.bufs[level]);
+    buf.clear();
+    st.lg.copy_source(seed, lo_l, hi_l, &mut buf);
+    if cfg.opts.stats {
+        st.stats.intersections += 1;
+    }
+    for idx in 0..buf.len() {
+        let u = buf[idx] as usize;
+        let ea = st.lg.embadj(u);
+        if ea & lp.adj_mask != lp.adj_mask || ea & lp.nonadj_mask != 0 {
+            st.stats.pruned += cfg.opts.stats as u64;
+            continue;
+        }
+        let cand = st.lg.global(u);
+        if !admit_candidate(g, cfg, hooks, st, lp, level, cand) {
+            continue;
+        }
+        if level + 1 == k {
+            st.emb.push(cand);
+            if cfg.opts.stats {
+                st.stats.enumerated += 1;
+                st.stats.matches += 1;
+            }
+            leaf(&mut st.acc, &st.emb);
+            st.emb.pop();
+            continue;
+        }
+        st.emb.push(cand);
+        if cfg.opts.stats {
+            st.stats.enumerated += 1;
+        }
+        st.lg.push(u, lp.lg_cone);
+        extend_lg(g, plan, cfg, hooks, st, level + 1, leaf);
+        st.lg.pop();
+        st.emb.pop();
+    }
+    st.front.bufs[level] = buf;
 }
 
 /// Scalar extension (the seed path): scan the pivot's neighbor list and
@@ -670,6 +857,70 @@ mod tests {
         // triangles whose level-1 and level-2 vertices are even; root free:
         // still fewer than all
         assert!(even < all && even > 0);
+    }
+
+    #[test]
+    fn lg_mode_agrees_with_set_centric_across_patterns() {
+        let g = gen::rmat(8, 6, 41, &[]);
+        for vertex_induced in [true, false] {
+            for pat in [
+                library::triangle(),
+                library::wedge(),
+                library::diamond(),
+                library::cycle(4),
+                library::cycle(5),
+                library::clique(4),
+                library::clique(5),
+                library::tailed_triangle(),
+            ] {
+                let pl = plan(&pat, vertex_induced, true);
+                let (s, _) = count(&g, &pl, &cfg(OptFlags::hi()), &NoHooks);
+                let (l, _) = count(&g, &pl, &cfg(OptFlags::lo()), &NoHooks);
+                assert_eq!(s, l, "pattern {pat} induced={vertex_induced}");
+            }
+        }
+    }
+
+    #[test]
+    fn lg_mode_respects_fp_hook() {
+        struct NoOdd;
+        impl LowLevelApi for NoOdd {
+            fn to_add(&self, _g: &CsrGraph, _e: &[VertexId], u: VertexId, _l: usize) -> bool {
+                u % 2 == 0
+            }
+        }
+        let g = gen::rmat(7, 6, 19, &[]);
+        for pat in [library::diamond(), library::cycle(4)] {
+            let pl = plan(&pat, true, true);
+            let (s, _) = count(&g, &pl, &cfg(OptFlags::hi()), &NoOdd);
+            let (l, _) = count(&g, &pl, &cfg(OptFlags::lo()), &NoOdd);
+            assert_eq!(s, l, "pattern {pat}");
+        }
+    }
+
+    #[test]
+    fn lg_mode_thread_invariant() {
+        let g = gen::rmat(9, 7, 23, &[]);
+        let pl = plan(&library::diamond(), true, true);
+        let c1 = MinerConfig { threads: 1, chunk: usize::MAX, opts: OptFlags::lo() };
+        let c4 = MinerConfig { threads: 4, chunk: 16, opts: OptFlags::lo() };
+        let (a, _) = count(&g, &pl, &c1, &NoHooks);
+        let (b, _) = count(&g, &pl, &c4, &NoHooks);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn lg_reports_universe_stats() {
+        let g = gen::rmat(8, 8, 3, &[]);
+        let pl = plan(&library::clique(4), true, true);
+        let mut c = cfg(OptFlags::lo().with_stats());
+        c.threads = 1;
+        let (hi_count, _) = count(&g, &pl, &cfg(OptFlags::hi()), &NoHooks);
+        let (lo_count, stats) = count(&g, &pl, &c, &NoHooks);
+        assert_eq!(hi_count, lo_count);
+        // cliques pass the coverage level at 1, so LG fires on this
+        // small graph and the universe counter moves
+        assert!(stats.lg_vertices > 0);
     }
 
     #[test]

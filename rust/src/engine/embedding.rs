@@ -8,53 +8,63 @@ use crate::graph::{CsrGraph, VertexId};
 use crate::pattern::Pattern;
 
 #[derive(Debug, Default, Clone)]
+/// Embedding stack with per-vertex MEC connectivity codes.
 pub struct Embedding {
     verts: Vec<VertexId>,
     codes: Vec<u32>,
 }
 
 impl Embedding {
+    /// Pre-size for a k-vertex pattern.
     pub fn with_capacity(k: usize) -> Self {
         Self { verts: Vec::with_capacity(k), codes: Vec::with_capacity(k) }
     }
 
     #[inline]
+    /// Push a vertex with its connectivity code.
     pub fn push(&mut self, v: VertexId, code: u32) {
         self.verts.push(v);
         self.codes.push(code);
     }
 
     #[inline]
+    /// Pop the deepest vertex (and its code).
     pub fn pop(&mut self) {
         self.verts.pop();
         self.codes.pop();
     }
 
     #[inline]
+    /// Current embedding size.
     pub fn len(&self) -> usize {
         self.verts.len()
     }
 
+    /// True when no vertices are matched.
     pub fn is_empty(&self) -> bool {
         self.verts.is_empty()
     }
 
     #[inline]
+    /// Matched vertices, in matching order.
     pub fn verts(&self) -> &[VertexId] {
         &self.verts
     }
 
     #[inline]
+    /// Connectivity codes, parallel to `verts`.
     pub fn codes(&self) -> &[u32] {
         &self.codes
     }
 
     #[inline]
+    /// Vertex matched at `pos`.
     pub fn vertex(&self, pos: usize) -> VertexId {
         self.verts[pos]
     }
 
     #[inline]
+    /// Injectivity check: is `v` already matched?
     pub fn contains(&self, v: VertexId) -> bool {
         self.verts.contains(&v)
     }

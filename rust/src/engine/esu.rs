@@ -20,14 +20,18 @@ use super::opts::MinerConfig;
 /// Motif classification table: packed MEC codes -> motif index in
 /// `library::all_motifs(k)` order.
 pub struct MotifTable {
+    /// Motif size.
     pub k: usize,
     table: Vec<u16>,
+    /// Number of isomorphism classes (`all_motifs(k).len()`).
     pub num_motifs: usize,
 }
 
+/// Sentinel for packed codes that are not connected k-subgraphs.
 pub const UNCLASSIFIED: u16 = u16::MAX;
 
 impl MotifTable {
+    /// Build the classification table for `k` in 3..=5.
     pub fn new(k: usize) -> Self {
         assert!((3..=5).contains(&k));
         let motifs = library::all_motifs(k);
@@ -48,6 +52,7 @@ impl MotifTable {
     }
 
     #[inline]
+    /// Motif index for packed MEC codes (or [`UNCLASSIFIED`]).
     pub fn classify(&self, packed: u64) -> u16 {
         self.table[packed as usize]
     }

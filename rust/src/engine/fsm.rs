@@ -21,16 +21,24 @@ use crate::util::pool::parallel_reduce;
 use super::support::DomainSupport;
 
 #[derive(Clone, Debug)]
+/// One frequent pattern with its support evidence.
 pub struct FrequentPattern {
+    /// The pattern graph.
     pub pattern: Pattern,
+    /// Canonical code (dedup key).
     pub code: CanonCode,
+    /// Domain (MNI) support.
     pub support: u64,
+    /// Number of edge-induced embeddings found.
     pub embeddings: u64,
 }
 
 #[derive(Debug, Default)]
+/// Output of an FSM run.
 pub struct FsmResult {
+    /// Frequent patterns, sorted by canonical code.
     pub frequent: Vec<FrequentPattern>,
+    /// Search counters.
     pub stats: SearchStats,
 }
 
@@ -125,9 +133,13 @@ pub fn mine_fsm(
 
 /// One child of a sub-pattern-tree node, ready for support evaluation.
 pub struct ChildNode {
+    /// Canonical code (dedup key).
     pub code: CanonCode,
+    /// The pattern graph.
     pub pattern: Pattern,
+    /// Embeddings carried down the sub-pattern tree.
     pub embeddings: Vec<Vec<VertexId>>,
+    /// Domain (MNI) support.
     pub support: u64,
 }
 

@@ -16,6 +16,8 @@
 
 use crate::graph::{CsrGraph, VertexId};
 
+/// The low-level customization hooks of the paper's Listing 1 (see
+/// the module docs for the line-by-line mapping).
 pub trait LowLevelApi: Sync {
     /// Should the embedding vertex at `pos` be extended? (FP)
     #[inline]

@@ -1,20 +1,103 @@
-//! Search on Local Graphs (paper §5 "LG", Listing 4; kClist [16]).
+//! Search on Shrinking Local Graphs (paper §5 "LG", Listing 4; kClist).
 //!
-//! For k-CL, every extension vertex must be adjacent to *all* embedding
-//! vertices, so instead of scanning global neighbor lists the search
-//! materializes the subgraph induced by the out-neighborhood of the root
-//! and then *shrinks* it level by level: at depth d only vertices that
-//! survived depth d-1 and are adjacent to the newly chosen vertex remain.
+//! Deep DFS levels should intersect small, degeneracy-bounded *local*
+//! adjacency lists instead of global CSR rows. Two substrates share the
+//! same list mechanics:
+//!
+//! * [`LocalGraph`] — the clique-only original: vertices are the
+//!   DAG out-neighborhood of the root, every extension must be adjacent
+//!   to the whole embedding, so each level shrinks the graph to the
+//!   chosen vertex's neighbors (exactly kClist / the paper's Listing 4).
+//!   Driven by the hand-tuned k-CL-Lo app
+//!   ([`crate::apps::clique::clique_lo`]).
+//! * [`PlanLocalGraph`] — the generalization to **arbitrary matching
+//!   plans**: the local vertex universe is the union of the candidate
+//!   sets named by the plan (the neighborhoods of the already-matched
+//!   vertices that future levels constrain against), each local vertex
+//!   tracks an *adjacency bitmask against the partial embedding* so
+//!   non-edge (anti-adjacency) constraints resolve in O(1), and
+//!   symmetry-breaking range bounds are translated once into local-id
+//!   bounds. Levels that constrain every deeper level ("cone" levels,
+//!   [`crate::pattern::matching_order::LevelPlan::lg_cone`]) still get
+//!   the kClist shrink. Driven by the generic DFS engine
+//!   ([`crate::engine::dfs`]) behind `OptFlags::lg`.
 //!
 //! Representation follows kClist: one adjacency array shared across
 //! depths with *per-depth degrees* — `updateLG` just swaps surviving
 //! neighbors to the front of each list and records the new degree, so
 //! push/pop is O(touched edges) with zero allocation (exactly the
-//! mechanics of the paper's Listing 4).
+//! mechanics of the paper's Listing 4). The private `shrink_lists` /
+//! `unshrink_lists` helpers are that shared mechanic.
 
 use crate::graph::orientation::Dag;
-use crate::graph::VertexId;
+use crate::graph::{CsrGraph, VertexId};
 
+/// `updateLG` (paper Listing 4): descend to `depth`, keeping only
+/// vertices adjacent to `chosen` that are alive at `depth - 1`. For
+/// every survivor, compact its depth-(d-1) adjacency list in place so
+/// the first `deg[d]` entries are the surviving neighbors (the
+/// swap-to-front loop). Returns the number of survivors.
+///
+/// O(touched edges), zero allocation. `chosen`'s own range is left
+/// untouched: compaction only rewrites survivors' lists, and `chosen`
+/// is never its own neighbor (no self loops), so iterating its prefix
+/// by index during the loop is safe.
+fn shrink_lists(
+    adj: &mut [u32],
+    offsets: &[u32],
+    deg: &mut [Vec<u32>],
+    alive: &mut [u32],
+    depth: usize,
+    chosen: usize,
+) -> u32 {
+    let c_start = offsets[chosen] as usize;
+    let n_surv = deg[depth - 1][chosen] as usize;
+    for i in 0..n_surv {
+        let v = adj[c_start + i] as usize;
+        alive[v] = depth as u32;
+    }
+    for i in 0..n_surv {
+        let v = adj[c_start + i] as usize;
+        let start = offsets[v] as usize;
+        let old_deg = deg[depth - 1][v] as usize;
+        let mut keep = 0usize;
+        for j in 0..old_deg {
+            let w = adj[start + j];
+            if alive[w as usize] >= depth as u32 {
+                adj.swap(start + keep, start + j);
+                keep += 1;
+            }
+        }
+        deg[depth][v] = keep as u32;
+    }
+    n_surv as u32
+}
+
+/// Undo [`shrink_lists`] at `depth` (drop survivor markings). Adjacency
+/// permutations don't need undoing: list *prefixes* per depth remain
+/// valid because deeper compactions only permute within the prefix of
+/// shallower depths.
+fn unshrink_lists(
+    adj: &[u32],
+    offsets: &[u32],
+    deg: &[Vec<u32>],
+    alive: &mut [u32],
+    depth: usize,
+    chosen: usize,
+) {
+    let s = offsets[chosen] as usize;
+    let d = deg[depth - 1][chosen] as usize;
+    for i in 0..d {
+        let v = adj[s + i] as usize;
+        if alive[v] >= depth as u32 {
+            alive[v] = depth as u32 - 1;
+        }
+    }
+}
+
+/// Clique-only shrinking local graph over a DAG out-neighborhood
+/// (kClist; paper Listing 4). See the module docs for the relation to
+/// [`PlanLocalGraph`].
 pub struct LocalGraph {
     /// Local-id adjacency, flat; lists mutate in place across depths.
     adj: Vec<u32>,
@@ -30,6 +113,8 @@ pub struct LocalGraph {
 }
 
 impl LocalGraph {
+    /// Allocate for local graphs of up to `max_vertices` vertices and
+    /// shrink depth `max_depth` (both grown on demand by `init`).
     pub fn new(max_vertices: usize, max_depth: usize) -> Self {
         Self {
             adj: Vec::new(),
@@ -87,78 +172,50 @@ impl LocalGraph {
         n
     }
 
+    /// Number of local vertices in the current local graph.
     pub fn num_vertices(&self) -> usize {
         self.num_local
     }
 
+    /// Global vertex id behind local id `local`.
     pub fn global(&self, local: usize) -> VertexId {
         self.globals[local]
     }
 
+    /// Local out-degree of `local` at `depth`.
     #[inline]
     pub fn degree(&self, depth: usize, local: usize) -> u32 {
         self.deg[depth][local]
     }
 
+    /// Adjacency prefix of `local` valid at `depth` (the surviving
+    /// neighbors).
     #[inline]
     pub fn adj(&self, depth: usize, local: usize) -> &[u32] {
         let s = self.offsets[local] as usize;
         &self.adj[s..s + self.deg[depth][local] as usize]
     }
 
+    /// Whether `local` survived every shrink up to `depth`.
     #[inline]
     pub fn is_alive(&self, depth: usize, local: usize) -> bool {
         self.alive[local] >= depth as u32
     }
 
     /// `updateLG`: descend to `depth`, keeping only vertices adjacent to
-    /// `chosen` (local id) that are alive at depth-1. For every survivor,
-    /// compact its depth-(d-1) adjacency list in place so the first
-    /// `deg[d]` entries are the surviving neighbors (Listing 4's
-    /// swap-to-tail loop).
+    /// `chosen` (local id) that are alive at depth-1 (the shared
+    /// `shrink_lists` mechanic; no allocation — §Perf: the original
+    /// `to_vec` here cost ~2x on the k-CL hot path).
     pub fn shrink(&mut self, depth: usize, chosen: usize) -> u32 {
         debug_assert!(depth <= self.max_depth);
-        // Survivors are chosen's depth-1 list prefix. Iterating it by
-        // index is safe: compaction below only touches survivors' lists,
-        // and `chosen` is never its own DAG-descendant, so chosen's range
-        // is left untouched (no allocation needed — §Perf: the original
-        // `to_vec` here cost ~2x on the k-CL hot path).
-        let c_start = self.offsets[chosen] as usize;
-        let n_surv = self.deg[depth - 1][chosen] as usize;
-        for i in 0..n_surv {
-            let v = self.adj[c_start + i] as usize;
-            self.alive[v] = depth as u32;
-        }
-        for i in 0..n_surv {
-            let v = self.adj[c_start + i] as usize;
-            let start = self.offsets[v] as usize;
-            let old_deg = self.deg[depth - 1][v] as usize;
-            let mut keep = 0usize;
-            for j in 0..old_deg {
-                let w = self.adj[start + j];
-                if self.alive[w as usize] >= depth as u32 {
-                    self.adj.swap(start + keep, start + j);
-                    keep += 1;
-                }
-            }
-            self.deg[depth][v] = keep as u32;
-        }
-        n_surv as u32
+        let Self { adj, offsets, deg, alive, .. } = self;
+        shrink_lists(adj, offsets, deg, alive, depth, chosen)
     }
 
-    /// Undo `shrink` at `depth` (drop survivor markings). Adjacency
-    /// permutations don't need undoing: list *prefixes* per depth remain
-    /// valid because deeper compactions only permute within the prefix of
-    /// shallower depths.
+    /// Undo `shrink` at `depth` (drop survivor markings).
     pub fn unshrink(&mut self, depth: usize, chosen: usize) {
-        let s = self.offsets[chosen] as usize;
-        let d = self.deg[depth - 1][chosen] as usize;
-        for i in 0..d {
-            let v = self.adj[s + i] as usize;
-            if self.alive[v] >= depth as u32 {
-                self.alive[v] = depth as u32 - 1;
-            }
-        }
+        let Self { adj, offsets, deg, alive, .. } = self;
+        unshrink_lists(adj, offsets, deg, alive, depth, chosen);
     }
 
     /// Survivor local-ids at `depth` reachable from `chosen`'s list at
@@ -175,11 +232,355 @@ impl LocalGraph {
     }
 }
 
+/// One vertex pushed into a [`PlanLocalGraph`] descent.
+struct LgFrame {
+    /// Local id of the chosen vertex.
+    local: u32,
+    /// Shrink depth at push time — the vertex's adjacency prefix at this
+    /// depth is its valid candidate list for deeper levels (rows above
+    /// it are never written for this vertex once it stops surviving).
+    sd_at: u32,
+    /// Whether this push performed a kClist shrink (cone level).
+    cone: bool,
+}
+
+/// Shrinking local graph for **arbitrary matching plans** (the
+/// generalization of the paper's clique-only LG; see module docs).
+///
+/// Lifecycle, driven by [`crate::engine::dfs`] when `OptFlags::lg` is
+/// set and the crossover heuristic fires:
+///
+/// 1. [`init`](PlanLocalGraph::init) — build the local universe from
+///    the union of the neighborhoods named by the plan's `lg_pre_mask`,
+///    the local adjacency among universe members, the per-vertex
+///    embedding-adjacency bitmasks for every position in
+///    `lg_touch_mask`, and one sorted candidate list per pre-LG source
+///    position.
+/// 2. [`push`](PlanLocalGraph::push) / [`pop`](PlanLocalGraph::pop) —
+///    O(touched edges) descent bookkeeping: mark/unmark the new
+///    position's adjacency bit on the chosen vertex's local neighbors,
+///    and shrink/unshrink the graph at cone levels.
+/// 3. [`copy_source`](PlanLocalGraph::copy_source) — materialize a
+///    bounded candidate seed list; the engine then filters each seed
+///    element with one [`embadj`](PlanLocalGraph::embadj) mask test.
+///
+/// Local ids are assigned in ascending global-id order, so
+/// symmetry-breaking bounds translate once per level into a local-id
+/// range ([`local_range`](PlanLocalGraph::local_range)) instead of
+/// being re-checked per candidate.
+#[derive(Default)]
+pub struct PlanLocalGraph {
+    /// Local-id adjacency, flat; lists mutate in place across depths.
+    adj: Vec<u32>,
+    offsets: Vec<u32>,
+    /// deg[shrink_depth][v_local]
+    deg: Vec<Vec<u32>>,
+    /// label[v_local] = deepest shrink the vertex survived.
+    alive: Vec<u32>,
+    /// Map local id -> global vertex, sorted ascending.
+    globals: Vec<VertexId>,
+    /// embadj[v_local] bit p = v is adjacent to the vertex matched at
+    /// embedding position p (pre-LG positions filled at init, LG-phase
+    /// positions maintained by push/pop).
+    embadj: Vec<u32>,
+    /// pre[j] = sorted local ids adjacent to emb[j], for every adjacency
+    /// source position j < base named by the plan's suffix.
+    pre: Vec<Vec<u32>>,
+    /// Vertices chosen during the LG phase, by position - base.
+    stack: Vec<LgFrame>,
+    num_local: usize,
+    /// Embedding length at init (= the plan level of the switch).
+    base: usize,
+    /// Current shrink depth (= number of cone frames on the stack).
+    sd: usize,
+}
+
+impl PlanLocalGraph {
+    /// Empty local graph; all storage is grown on first
+    /// [`init`](PlanLocalGraph::init) and reused across root tasks.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// `initLG`, generalized: build the local graph for the partial
+    /// embedding `emb`. The vertex universe is the union of
+    /// `N(emb[j])` over the positions `j` in `pre_mask` (the plan's
+    /// [`lg_pre_mask`](crate::pattern::matching_order::LevelPlan::lg_pre_mask)
+    /// — every candidate of every remaining level lies in it), minus
+    /// the embedding itself. `touch_mask` names the additional
+    /// positions (non-adjacency sources) whose adjacency bit must be
+    /// precomputed. `depth_budget` bounds the number of cone shrinks
+    /// (the plan size is always enough). Returns the universe size.
+    pub fn init(
+        &mut self,
+        g: &CsrGraph,
+        emb: &[VertexId],
+        pre_mask: u32,
+        touch_mask: u32,
+        depth_budget: usize,
+    ) -> usize {
+        self.base = emb.len();
+        self.sd = 0;
+        self.stack.clear();
+        debug_assert!(pre_mask != 0);
+        debug_assert_eq!(pre_mask & !((1u32 << self.base) - 1), 0);
+
+        // ---- universe: union of the named neighborhoods, minus emb
+        self.globals.clear();
+        let mut m = pre_mask;
+        while m != 0 {
+            let j = m.trailing_zeros() as usize;
+            m &= m - 1;
+            self.globals.extend_from_slice(g.neighbors(emb[j]));
+        }
+        self.globals.sort_unstable();
+        self.globals.dedup();
+        self.globals.retain(|v| !emb.contains(v));
+        let n = self.globals.len();
+        self.num_local = n;
+        if n == 0 {
+            return 0;
+        }
+
+        // ---- storage (grown once, reused across tasks)
+        if self.alive.len() < n {
+            self.alive.resize(n, 0);
+            self.embadj.resize(n, 0);
+            self.offsets.resize(n + 1, 0);
+        }
+        for a in self.alive[..n].iter_mut() {
+            *a = 0;
+        }
+        for e in self.embadj[..n].iter_mut() {
+            *e = 0;
+        }
+        while self.deg.len() <= depth_budget {
+            self.deg.push(Vec::new());
+        }
+        for row in self.deg.iter_mut() {
+            if row.len() < n {
+                row.resize(n, 0);
+            }
+        }
+        if self.pre.len() < self.base {
+            self.pre.resize_with(self.base, Vec::new);
+        }
+
+        // ---- adjacency among universe members (sorted by local id at
+        // depth 0; deeper prefixes are unordered after shrinks)
+        let Self { adj, offsets, deg, globals, .. } = self;
+        adj.clear();
+        offsets[0] = 0;
+        for i in 0..n {
+            let mut d = 0u32;
+            for_each_common(g.neighbors(globals[i]), &globals[..n], |b| {
+                adj.push(b as u32);
+                d += 1;
+            });
+            deg[0][i] = d;
+            offsets[i + 1] = adj.len() as u32;
+        }
+
+        // ---- embedding-adjacency bits + pre-LG candidate lists
+        let Self { globals, embadj, pre, .. } = self;
+        let mut m = touch_mask | pre_mask;
+        while m != 0 {
+            let j = m.trailing_zeros() as usize;
+            m &= m - 1;
+            let bit = 1u32 << j;
+            let want_list = pre_mask >> j & 1 == 1;
+            if want_list {
+                pre[j].clear();
+            }
+            let list = &mut pre[j];
+            for_each_common(g.neighbors(emb[j]), &globals[..n], |b| {
+                embadj[b] |= bit;
+                if want_list {
+                    list.push(b as u32);
+                }
+            });
+        }
+        n
+    }
+
+    /// Number of local vertices in the current universe.
+    pub fn num_vertices(&self) -> usize {
+        self.num_local
+    }
+
+    /// Global vertex id behind local id `local`.
+    #[inline]
+    pub fn global(&self, local: usize) -> VertexId {
+        self.globals[local]
+    }
+
+    /// Adjacency bitmask of `local` against the partial embedding (one
+    /// bit per matched position; see the struct docs).
+    #[inline]
+    pub fn embadj(&self, local: usize) -> u32 {
+        self.embadj[local]
+    }
+
+    /// Current shrink depth (number of cone levels on the stack).
+    pub fn shrink_depth(&self) -> usize {
+        self.sd
+    }
+
+    /// Deepest shrink `local` survived (the raw `alive` label).
+    pub fn alive_label(&self, local: usize) -> u32 {
+        self.alive[local]
+    }
+
+    /// Local degree of `local` at shrink depth `depth`.
+    pub fn degree(&self, depth: usize, local: usize) -> u32 {
+        self.deg[depth][local]
+    }
+
+    /// Adjacency prefix of `local` valid at shrink depth `depth`.
+    pub fn adj_prefix(&self, depth: usize, local: usize) -> &[u32] {
+        let s = self.offsets[local] as usize;
+        &self.adj[s..s + self.deg[depth][local] as usize]
+    }
+
+    /// Translate global symmetry-breaking bounds (`cand > lo`,
+    /// `cand < hi`) into a half-open local-id range — valid because
+    /// local ids are assigned in ascending global order.
+    pub fn local_range(&self, lo: Option<VertexId>, hi: Option<VertexId>) -> (u32, u32) {
+        let g = &self.globals[..self.num_local];
+        let s = lo.map_or(0, |l| g.partition_point(|&x| x <= l));
+        let e = hi.map_or(self.num_local, |h| g.partition_point(|&x| x < h));
+        (s as u32, e as u32)
+    }
+
+    /// Length of the candidate source list for plan position `pos`:
+    /// the precomputed list for pre-LG positions, the chosen vertex's
+    /// valid adjacency prefix for LG-phase positions.
+    pub fn source_len(&self, pos: usize) -> usize {
+        if pos < self.base {
+            self.pre[pos].len()
+        } else {
+            let f = &self.stack[pos - self.base];
+            self.deg[f.sd_at as usize][f.local as usize] as usize
+        }
+    }
+
+    /// Append the source list for `pos`, restricted to the local-id
+    /// range `[lo, hi)` (from [`local_range`](Self::local_range)), onto
+    /// `out`. Pre-LG lists are sorted, so the bounds are fused by
+    /// binary search; LG-phase prefixes are unordered after shrinks and
+    /// are filtered element-wise. The copy (rather than iterating the
+    /// prefix in place) keeps the list stable while deeper shrinks
+    /// permute it.
+    pub fn copy_source(&self, pos: usize, lo: u32, hi: u32, out: &mut Vec<u32>) {
+        if pos < self.base {
+            let list = &self.pre[pos];
+            let s = list.partition_point(|&u| u < lo);
+            let e = list.partition_point(|&u| u < hi);
+            out.extend_from_slice(&list[s..e]);
+        } else {
+            let f = &self.stack[pos - self.base];
+            let start = self.offsets[f.local as usize] as usize;
+            let len = self.deg[f.sd_at as usize][f.local as usize] as usize;
+            for &u in &self.adj[start..start + len] {
+                if u >= lo && u < hi {
+                    out.push(u);
+                }
+            }
+        }
+    }
+
+    /// Record `local` as the match for the next embedding position:
+    /// set that position's adjacency bit on every valid local neighbor,
+    /// and — when `cone` (the level constrains all deeper levels) —
+    /// perform the kClist shrink. O(touched edges).
+    pub fn push(&mut self, local: usize, cone: bool) {
+        let pos_bit = 1u32 << (self.base + self.stack.len());
+        let sd_at = self.sd;
+        // a legal candidate survived every shrink so far, so its
+        // adjacency prefix at the current depth is valid
+        debug_assert!(self.alive[local] as usize >= sd_at);
+        let start = self.offsets[local] as usize;
+        let len = self.deg[sd_at][local] as usize;
+        for i in start..start + len {
+            self.embadj[self.adj[i] as usize] |= pos_bit;
+        }
+        self.stack.push(LgFrame { local: local as u32, sd_at: sd_at as u32, cone });
+        if cone {
+            self.sd += 1;
+            let depth = self.sd;
+            let Self { adj, offsets, deg, alive, .. } = self;
+            shrink_lists(adj, offsets, deg, alive, depth, local);
+        }
+    }
+
+    /// Undo the matching [`push`](Self::push): unshrink (if a cone
+    /// level) and clear the position's adjacency bits. The bit-clearing
+    /// prefix is identical to the one marked at push time — deeper
+    /// shrinks only permute *within* it and never change its length.
+    pub fn pop(&mut self) {
+        let f = self.stack.pop().expect("PlanLocalGraph::pop without push");
+        let local = f.local as usize;
+        if f.cone {
+            let depth = self.sd;
+            {
+                let Self { adj, offsets, deg, alive, .. } = self;
+                unshrink_lists(adj, offsets, deg, alive, depth, local);
+            }
+            self.sd -= 1;
+            debug_assert_eq!(self.sd, f.sd_at as usize);
+        }
+        let pos_bit = 1u32 << (self.base + self.stack.len());
+        let start = self.offsets[local] as usize;
+        let len = self.deg[f.sd_at as usize][local] as usize;
+        for i in start..start + len {
+            self.embadj[self.adj[i] as usize] &= !pos_bit;
+        }
+    }
+}
+
+/// Visit the positions in `globals` whose value also appears in sorted
+/// `nbrs`, in ascending order — the universe-membership merge used by
+/// [`PlanLocalGraph::init`]. Adaptive like the
+/// [`crate::graph::setops`] kernels: binary-search the shorter side
+/// when the lengths are skewed by more than 8x, lockstep merge
+/// otherwise.
+fn for_each_common(nbrs: &[VertexId], globals: &[VertexId], mut f: impl FnMut(usize)) {
+    if nbrs.len() > globals.len().saturating_mul(8) {
+        for (b, &gv) in globals.iter().enumerate() {
+            if nbrs.binary_search(&gv).is_ok() {
+                f(b);
+            }
+        }
+    } else if globals.len() > nbrs.len().saturating_mul(8) {
+        for &x in nbrs {
+            if let Ok(b) = globals.binary_search(&x) {
+                f(b);
+            }
+        }
+    } else {
+        let (mut a, mut b) = (0usize, 0usize);
+        while a < nbrs.len() && b < globals.len() {
+            let (x, y) = (nbrs[a], globals[b]);
+            if x == y {
+                f(b);
+                a += 1;
+                b += 1;
+            } else if x < y {
+                a += 1;
+            } else {
+                b += 1;
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::graph::gen;
     use crate::graph::orientation::{orient, OrientScheme};
+    use crate::pattern::{library, plan, MatchingPlan};
+    use crate::util::rng::Rng;
 
     #[test]
     fn init_builds_neighborhood_subgraph() {
@@ -236,6 +637,195 @@ mod tests {
                 assert_eq!(a, before[v], "root {root} local {v}");
             }
             break;
+        }
+    }
+
+    // ---------- PlanLocalGraph ----------
+
+    #[test]
+    fn plan_lg_universe_and_bits_for_diamond_prefix() {
+        // K4: init after matching the first diamond chord vertex
+        let g = gen::complete(4);
+        let pl = plan(&library::diamond(), true, true);
+        assert_eq!(pl.lg_level, 1);
+        let lp = &pl.levels[1];
+        let mut lg = PlanLocalGraph::new();
+        let emb = [0u32];
+        let n = lg.init(&g, &emb, lp.lg_pre_mask, lp.lg_touch_mask, pl.size());
+        // universe = N(0) = {1, 2, 3}
+        assert_eq!(n, 3);
+        assert_eq!((0..n).map(|u| lg.global(u)).collect::<Vec<_>>(), vec![1, 2, 3]);
+        // all universe members are adjacent to position 0
+        for u in 0..n {
+            assert_eq!(lg.embadj(u) & 1, 1);
+            assert_eq!(lg.degree(0, u), 2); // K3 among locals
+        }
+        // pre list for position 0 covers the whole universe, sorted
+        assert_eq!(lg.source_len(0), 3);
+        let mut out = Vec::new();
+        lg.copy_source(0, 0, n as u32, &mut out);
+        assert_eq!(out, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn plan_lg_local_range_translates_bounds() {
+        let g = gen::complete(5);
+        let pl = plan(&library::clique(3), true, true);
+        let mut lg = PlanLocalGraph::new();
+        let lp = &pl.levels[1];
+        lg.init(&g, &[2u32], lp.lg_pre_mask, lp.lg_touch_mask, pl.size());
+        // universe = {0, 1, 3, 4}
+        assert_eq!(lg.num_vertices(), 4);
+        // cand > 2 keeps locals {3, 4} = local ids {2, 3}
+        assert_eq!(lg.local_range(Some(2), None), (2, 4));
+        // cand < 4 keeps globals {0, 1, 3} = local ids {0, 1, 2}
+        assert_eq!(lg.local_range(None, Some(4)), (0, 3));
+        assert_eq!(lg.local_range(Some(0), Some(3)), (1, 2));
+    }
+
+    /// Random legal descent through a plan: push candidates that satisfy
+    /// the embadj constraints, snapshotting (alive, per-depth degrees,
+    /// prefix sets) before each push and checking exact restoration
+    /// after the matching pop — the LG push/pop invariants.
+    fn walk_and_check(
+        pl: &MatchingPlan,
+        lg: &mut PlanLocalGraph,
+        emb: &mut Vec<u32>,
+        level: usize,
+        rng: &mut Rng,
+        budget: &mut u32,
+    ) {
+        if level == pl.size() || *budget == 0 {
+            return;
+        }
+        *budget -= 1;
+        let lp = &pl.levels[level];
+        let n = lg.num_vertices();
+        let sd = lg.shrink_depth();
+        let cands: Vec<usize> = (0..n)
+            .filter(|&u| {
+                lg.embadj(u) & lp.adj_mask == lp.adj_mask
+                    && lg.embadj(u) & lp.nonadj_mask == 0
+                    && !emb.contains(&lg.global(u))
+            })
+            .collect();
+        // candidates implied alive by the cone-adjacency argument
+        for &u in &cands {
+            assert!(lg.alive_label(u) >= sd as u32, "candidate not alive");
+        }
+        // explore a couple of random branches
+        for _ in 0..2 {
+            if cands.is_empty() {
+                break;
+            }
+            let u = cands[rng.below(cands.len() as u64) as usize];
+            let snap_alive: Vec<u32> = (0..n).map(|v| lg.alive_label(v)).collect();
+            let snap_deg: Vec<Vec<u32>> =
+                (0..=sd).map(|d| (0..n).map(|v| lg.degree(d, v)).collect()).collect();
+            // depth-sd rows are only valid (written this task) for
+            // vertices alive at sd; dead vertices keep stale counts
+            // from earlier tasks, so their prefixes must not be sliced
+            let snap_pfx: Vec<Option<Vec<u32>>> = (0..n)
+                .map(|v| {
+                    if sd == 0 || lg.alive_label(v) >= sd as u32 {
+                        let mut p = lg.adj_prefix(sd, v).to_vec();
+                        p.sort_unstable();
+                        Some(p)
+                    } else {
+                        None
+                    }
+                })
+                .collect();
+            let snap_emb: Vec<u32> = (0..n).map(|v| lg.embadj(v)).collect();
+
+            emb.push(lg.global(u));
+            lg.push(u, lp.lg_cone);
+            if lp.lg_cone {
+                // alive labels never regress below their pre-push value:
+                // survivors advance to the new depth, everyone else keeps
+                // the old label
+                for v in 0..n {
+                    assert!(
+                        lg.alive_label(v) == snap_alive[v]
+                            || lg.alive_label(v) == sd as u32 + 1,
+                        "alive regressed at {v}"
+                    );
+                }
+            }
+            walk_and_check(pl, lg, emb, level + 1, rng, budget);
+            lg.pop();
+            emb.pop();
+
+            for v in 0..n {
+                assert_eq!(lg.alive_label(v), snap_alive[v], "alive not restored at {v}");
+                assert_eq!(lg.embadj(v), snap_emb[v], "embadj not restored at {v}");
+                if let Some(want) = &snap_pfx[v] {
+                    let mut p = lg.adj_prefix(sd, v).to_vec();
+                    p.sort_unstable();
+                    assert_eq!(&p, want, "prefix set changed at {v}");
+                }
+            }
+            for (d, row) in snap_deg.iter().enumerate() {
+                for v in 0..n {
+                    assert_eq!(lg.degree(d, v), row[v], "deg[{d}][{v}] not restored");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn plan_lg_push_pop_property() {
+        let mut rng = Rng::seeded(0x516);
+        for (pi, pat) in [
+            library::clique(4),
+            library::diamond(),
+            library::cycle(4),
+            library::cycle(5),
+            library::tailed_triangle(),
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            let g = gen::rmat(7, 6, 31 + pi as u64, &[]);
+            let pl = plan(&pat, true, true);
+            let level = pl.lg_level;
+            if level + 2 > pl.size() {
+                continue;
+            }
+            let mut lg = PlanLocalGraph::new();
+            let mut tried = 0;
+            for root in 0..g.num_vertices() as u32 {
+                // grow a legal prefix emb[0..level] by brute force
+                let mut emb = vec![root];
+                for l in 1..level {
+                    let lp = &pl.levels[l];
+                    let cand = (0..g.num_vertices() as u32).find(|&v| {
+                        !emb.contains(&v)
+                            && (0..l).all(|j| {
+                                lp.adj_mask >> j & 1 == 0 || g.has_edge(v, emb[j])
+                            })
+                    });
+                    match cand {
+                        Some(v) => emb.push(v),
+                        None => break,
+                    }
+                }
+                if emb.len() < level {
+                    continue;
+                }
+                let lp = &pl.levels[level];
+                let n = lg.init(&g, &emb, lp.lg_pre_mask, lp.lg_touch_mask, pl.size());
+                if n < 3 {
+                    continue;
+                }
+                let mut budget = 200u32;
+                walk_and_check(&pl, &mut lg, &mut emb, level, &mut rng, &mut budget);
+                tried += 1;
+                if tried >= 5 {
+                    break;
+                }
+            }
+            assert!(tried > 0, "no usable roots for {pat}");
         }
     }
 }

@@ -16,6 +16,8 @@ use crate::graph::VertexId;
 
 const EMPTY: u32 = u32::MAX;
 
+/// Open-addressing map: data-vertex id -> embedding-adjacency bits
+/// (the sparse MNC index; see module docs).
 pub struct ConnectivityMap {
     keys: Vec<u32>,
     vals: Vec<u32>,
@@ -95,6 +97,8 @@ impl ConnectivityMap {
         }
     }
 
+    /// Reset all entries (O(capacity); the engines prefer symmetric
+    /// removal, which is O(touched)).
     pub fn clear(&mut self) {
         self.keys.iter_mut().for_each(|k| *k = EMPTY);
         self.len = 0;
@@ -147,6 +151,7 @@ impl Default for Connectivity {
 }
 
 impl Connectivity {
+    /// Map-backed index with a default capacity; see `begin_root`.
     pub fn new() -> Self {
         Self {
             map: ConnectivityMap::with_capacity(1024),
@@ -166,6 +171,7 @@ impl Connectivity {
     }
 
     #[inline]
+    /// OR `bit` into the code for `key` (DFS push).
     pub fn or_insert(&mut self, key: VertexId, bit: u32) {
         if self.use_dense {
             self.dense[key as usize] |= bit;
@@ -175,6 +181,7 @@ impl Connectivity {
     }
 
     #[inline]
+    /// Clear `bit` from the code for `key` (symmetric DFS pop).
     pub fn and_remove(&mut self, key: VertexId, bit: u32) {
         if self.use_dense {
             self.dense[key as usize] &= !bit;
@@ -184,6 +191,7 @@ impl Connectivity {
     }
 
     #[inline]
+    /// Current adjacency code for `key` (0 when absent).
     pub fn get(&self, key: VertexId) -> u32 {
         if self.use_dense {
             self.dense[key as usize]

@@ -2,7 +2,31 @@
 //!
 //! Every table in the evaluation is a sweep over these flags: the system
 //! emulations (DESIGN.md §5) are just preset combinations.
+//!
+//! ```
+//! use sandslash::engine::OptFlags;
+//!
+//! let hi = OptFlags::hi(); // all high-level optimizations (Table 3a)
+//! assert!(hi.sets && hi.sb && hi.dag && !hi.lg);
+//!
+//! let lo = OptFlags::lo(); // Hi + local counting + shrinking local graphs
+//! assert!(lo.lc && lo.lg);
+//!
+//! // emulated systems stay on the scalar probe path so table
+//! // comparisons isolate the optimizations each system lacks
+//! assert!(!OptFlags::peregrine_like().sets);
+//!
+//! // flags compose freely for sweeps (e.g. Fig. 8's MNC ablation)
+//! let mut ablated = OptFlags::hi();
+//! ablated.mnc = false;
+//! assert_ne!(ablated, OptFlags::hi());
+//! ```
 
+/// One switch per optimization of the paper's Table 3 (high-level:
+/// `sb`/`dag`/`mo`/`df`/`mnc`/`mec`/`sets`; low-level: `lc`/`lg`), plus
+/// the `stats` toggle for Fig.-10 style search-space counters. Presets
+/// ([`OptFlags::hi`], [`OptFlags::lo`], the `*_like` emulations) are
+/// the sweep points used by every table in EXPERIMENTS.md.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct OptFlags {
     /// Symmetry breaking via partial orders (B.1).
@@ -24,7 +48,12 @@ pub struct OptFlags {
     pub sets: bool,
     /// Low-level: formula-based local counting.
     pub lc: bool,
-    /// Low-level: search on shrinking local graphs.
+    /// Low-level: search on shrinking local graphs (paper §5 "LG").
+    /// In the generic DFS engine this layers on `sets`: past the plan's
+    /// coverage level, small frontiers switch to a
+    /// [`crate::engine::local_graph::PlanLocalGraph`] and deep levels
+    /// intersect degeneracy-bounded local lists instead of global CSR
+    /// rows. The clique apps use the hand-tuned kClist form instead.
     pub lg: bool,
     /// Collect search-space statistics (Fig. 10).
     pub stats: bool,
@@ -66,29 +95,37 @@ impl OptFlags {
         Self { sb: true, dag: false, mo: true, df: false, mnc: false, mec: true, sets: false, lc: false, lg: false, stats: false }
     }
 
+    /// This preset with search-space statistics collection enabled.
     pub fn with_stats(mut self) -> Self {
         self.stats = true;
         self
     }
 }
 
+/// Execution configuration for one mining run: thread count, dynamic
+/// self-scheduling chunk size, and the optimization flags.
 #[derive(Clone, Copy, Debug)]
 pub struct MinerConfig {
+    /// Worker thread count (root tasks are claimed dynamically).
     pub threads: usize,
     /// Root-task chunk size for dynamic self-scheduling.
     pub chunk: usize,
+    /// Optimization switches (paper Table 3).
     pub opts: OptFlags,
 }
 
 impl MinerConfig {
+    /// All available cores with the default chunk size.
     pub fn new(opts: OptFlags) -> Self {
         Self { threads: crate::util::pool::default_threads(), chunk: 64, opts }
     }
 
+    /// One worker, one chunk — deterministic sequential execution.
     pub fn single_thread(opts: OptFlags) -> Self {
         Self { threads: 1, chunk: usize::MAX, opts }
     }
 
+    /// This configuration with an explicit thread count.
     pub fn with_threads(mut self, t: usize) -> Self {
         self.threads = t;
         self

@@ -9,6 +9,7 @@
 use crate::pattern::Pattern;
 
 #[derive(Clone, Debug)]
+/// A GPM problem specification (paper Table 1): what to mine, not how.
 pub struct ProblemSpec {
     /// `isVertexInduced`
     pub vertex_induced: bool,

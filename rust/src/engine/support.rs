@@ -14,10 +14,12 @@ use crate::graph::VertexId;
 /// positions — the paper's `getDomainSupport` helper.
 #[derive(Clone, Debug, Default)]
 pub struct DomainSupport {
+    /// Distinct data vertices seen at each pattern position.
     pub domains: Vec<HashSet<VertexId>>,
 }
 
 impl DomainSupport {
+    /// Empty domains for a k-position pattern.
     pub fn new(k: usize) -> Self {
         Self { domains: vec![HashSet::new(); k] }
     }

@@ -5,6 +5,7 @@
 
 use super::csr::{CsrGraph, VertexId};
 
+/// Accumulates raw (possibly dirty) edges, then builds a clean CSR.
 pub struct GraphBuilder {
     n: usize,
     edges: Vec<(VertexId, VertexId)>,
@@ -12,10 +13,12 @@ pub struct GraphBuilder {
 }
 
 impl GraphBuilder {
+    /// Builder for a graph on `n` vertices.
     pub fn new(n: usize) -> Self {
         Self { n, edges: Vec::new(), labels: Vec::new() }
     }
 
+    /// Builder pre-loaded with `edges`.
     pub fn from_edges(n: usize, edges: &[(VertexId, VertexId)]) -> Self {
         let mut b = Self::new(n);
         for &(u, v) in edges {
@@ -24,10 +27,12 @@ impl GraphBuilder {
         b
     }
 
+    /// Record an undirected edge (loops/dupes cleaned at build).
     pub fn add_edge(&mut self, u: VertexId, v: VertexId) {
         self.edges.push((u, v));
     }
 
+    /// Attach one label per vertex.
     pub fn with_labels(mut self, labels: Vec<u32>) -> Self {
         assert_eq!(labels.len(), self.n);
         self.labels = labels;

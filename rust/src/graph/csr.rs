@@ -5,9 +5,11 @@
 //! what makes intersection-based connectivity checks and symmetry
 //! breaking cheap. Optional vertex labels support FSM.
 
+/// Vertex identifier (`u32` keeps CSR arrays compact).
 pub type VertexId = u32;
 
 #[derive(Clone, Debug, Default)]
+/// Symmetric CSR graph; see the module docs for the invariants.
 pub struct CsrGraph {
     /// Offsets into `neighbors`; length = n + 1.
     pub offsets: Vec<u64>,
@@ -18,6 +20,7 @@ pub struct CsrGraph {
 }
 
 impl CsrGraph {
+    /// Number of vertices.
     pub fn num_vertices(&self) -> usize {
         self.offsets.len().saturating_sub(1)
     }
@@ -28,29 +31,35 @@ impl CsrGraph {
         self.neighbors.len()
     }
 
+    /// Number of undirected edges.
     pub fn num_undirected_edges(&self) -> usize {
         self.neighbors.len() / 2
     }
 
     #[inline]
+    /// Degree of `v`.
     pub fn degree(&self, v: VertexId) -> usize {
         (self.offsets[v as usize + 1] - self.offsets[v as usize]) as usize
     }
 
     #[inline]
+    /// Sorted neighbor list of `v`.
     pub fn neighbors(&self, v: VertexId) -> &[VertexId] {
         &self.neighbors[self.offsets[v as usize] as usize..self.offsets[v as usize + 1] as usize]
     }
 
     #[inline]
+    /// Label of `v` (0 for unlabeled graphs).
     pub fn label(&self, v: VertexId) -> u32 {
         if self.labels.is_empty() { 0 } else { self.labels[v as usize] }
     }
 
+    /// Whether vertex labels are present.
     pub fn is_labeled(&self) -> bool {
         !self.labels.is_empty()
     }
 
+    /// One past the largest label value (0 when unlabeled).
     pub fn num_labels(&self) -> usize {
         self.labels.iter().copied().max().map(|m| m as usize + 1).unwrap_or(0)
     }
@@ -74,6 +83,7 @@ impl CsrGraph {
         })
     }
 
+    /// Largest vertex degree.
     pub fn max_degree(&self) -> usize {
         (0..self.num_vertices() as VertexId)
             .map(|v| self.degree(v))

@@ -36,6 +36,7 @@ pub fn rmat(scale: u32, edge_factor: usize, seed: u64, label_pool: &[u32]) -> Cs
     rmat_with(scale, edge_factor, 0.57, 0.19, 0.19, seed, label_pool)
 }
 
+/// RMAT with explicit quadrant probabilities (`a`, `b`, `c`; `d` implied).
 pub fn rmat_with(
     scale: u32,
     edge_factor: usize,

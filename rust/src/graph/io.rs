@@ -89,6 +89,7 @@ pub fn save_snapshot(g: &CsrGraph, path: &Path) -> std::io::Result<()> {
     Ok(())
 }
 
+/// Load a binary CSR snapshot produced by the save path.
 pub fn load_snapshot(path: &Path) -> std::io::Result<CsrGraph> {
     let mut r = BufReader::new(std::fs::File::open(path)?);
     let magic = read_u64(&mut r)?;

@@ -12,8 +12,11 @@
 use super::csr::{CsrGraph, VertexId};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// Total-order scheme used to orient the graph.
 pub enum OrientScheme {
+    /// Rank by (degree, id): each edge points to the higher endpoint.
     Degree,
+    /// Degeneracy (peel) order, as in kClist.
     Core,
 }
 
@@ -22,27 +25,33 @@ pub enum OrientScheme {
 /// sorted ascending (sorted lists keep intersections cheap).
 #[derive(Clone, Debug)]
 pub struct Dag {
+    /// Offsets into `targets`; length n + 1.
     pub offsets: Vec<u64>,
+    /// Concatenated sorted out-neighbor lists.
     pub targets: Vec<VertexId>,
     /// rank[v] = position of v in the total order (smaller = earlier).
     pub rank: Vec<u32>,
 }
 
 impl Dag {
+    /// Number of vertices.
     pub fn num_vertices(&self) -> usize {
         self.offsets.len() - 1
     }
 
     #[inline]
+    /// Sorted out-neighbors of `v` (higher-ranked endpoints).
     pub fn out_neighbors(&self, v: VertexId) -> &[VertexId] {
         &self.targets[self.offsets[v as usize] as usize..self.offsets[v as usize + 1] as usize]
     }
 
     #[inline]
+    /// Out-degree of `v`.
     pub fn out_degree(&self, v: VertexId) -> usize {
         self.out_neighbors(v).len()
     }
 
+    /// Largest out-degree (bounded by the degeneracy under `Core`).
     pub fn max_out_degree(&self) -> usize {
         (0..self.num_vertices() as VertexId)
             .map(|v| self.out_degree(v))

@@ -24,6 +24,29 @@
 //! its seed list, these are for callers intersecting directly;
 //! [`difference_into`] is the anti-intersection needed by
 //! vertex-induced (non-adjacency) constraints.
+//!
+//! All kernels operate on sorted, duplicate-free slices (CSR neighbor
+//! rows are maintained that way by construction):
+//!
+//! ```
+//! use sandslash::graph::setops;
+//!
+//! let a: Vec<u32> = vec![1, 3, 5, 7];
+//! let b: Vec<u32> = vec![3, 4, 5, 9];
+//! assert_eq!(setops::intersect_count(&a, &b), 2);
+//!
+//! let mut out = Vec::new();
+//! setops::intersect_into(&a, &b, &mut out);
+//! assert_eq!(out, vec![3, 5]);
+//!
+//! // symmetry-breaking bound fused: elements >= 5 are never visited
+//! assert_eq!(setops::intersect_count_below(&a, &b, 5), 1);
+//!
+//! // anti-intersection for vertex-induced (non-edge) constraints
+//! out.clear();
+//! setops::difference_into(&a, &b, &mut out);
+//! assert_eq!(out, vec![1, 7]);
+//! ```
 
 use super::csr::VertexId;
 use crate::util::bitset::BitSet;

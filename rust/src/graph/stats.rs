@@ -5,15 +5,23 @@ use super::csr::CsrGraph;
 use super::orientation;
 
 #[derive(Debug, Clone)]
+/// The Table-4 statistics columns for one input graph.
 pub struct GraphStats {
+    /// Number of vertices.
     pub vertices: usize,
+    /// Number of undirected edges.
     pub edges: usize,
+    /// Average degree (2|E| / |V|).
     pub avg_degree: f64,
+    /// Maximum degree.
     pub max_degree: usize,
+    /// Graph degeneracy (maximum core number).
     pub degeneracy: u32,
+    /// Number of distinct vertex labels (0 = unlabeled).
     pub labels: usize,
 }
 
+/// Compute the statistics of `g`.
 pub fn stats(g: &CsrGraph) -> GraphStats {
     GraphStats {
         vertices: g.num_vertices(),

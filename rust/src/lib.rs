@@ -5,6 +5,37 @@
 //! Efficient Graph Pattern Mining"* (2020) as a three-layer
 //! Rust + JAX/Pallas system.
 //!
+//! ## The two-level API
+//!
+//! The paper's thesis is that GPM systems force a false choice between
+//! productivity and performance, and that a *two-level* design removes
+//! it:
+//!
+//! * **High level** — a problem is *specified*, not programmed: a
+//!   [`engine::spec::ProblemSpec`] names the induced-ness, the
+//!   listing/counting mode, and the (explicit or implicit) patterns.
+//!   [`apps::solve`] analyzes the spec exactly as the paper's §4.3
+//!   decision table and picks the search strategy (DFS over a
+//!   [`pattern::MatchingPlan`], pattern-oblivious ESU, BFS, or the
+//!   sub-pattern-tree FSM engine) plus the high-level optimizations of
+//!   Table 3: symmetry breaking (SB), DAG orientation, matching orders
+//!   (MO), degree filtering (DF), and the MEC/MNC memoizations —
+//!   all selected through [`engine::OptFlags`].
+//! * **Low level** — expert users (and the Lo presets) refine the same
+//!   search through the [`engine::hooks::LowLevelApi`] trait (the
+//!   paper's Listing 1: `toExtend`/`toAdd`/pattern classification /
+//!   local counting) and the low-level optimizations: formula-based
+//!   local counting (LC, [`apps::motif`]) and search on shrinking
+//!   local graphs (LG, [`engine::local_graph`]) — without rewriting
+//!   the enumeration logic.
+//!
+//! Both levels bottom out in one tuned set-kernel layer
+//! ([`graph::setops`]), so there is exactly one intersection
+//! implementation to optimize, differential-test, and (eventually)
+//! offload to the Pallas runtime.
+//!
+//! ## Layer map
+//!
 //! * [`graph`] — CSR graphs, generators, orientation (the input substrate)
 //! * [`pattern`] — pattern analysis: isomorphism, symmetry breaking,
 //!   matching orders, canonical codes
@@ -13,6 +44,10 @@
 //! * [`runtime`] — PJRT loader for the AOT-compiled Pallas counting path
 //! * [`coordinator`] — dataset registry and experiment campaign driver
 //! * [`util`] — substrates (RNG, bitset, pool, CLI, config, bench)
+//!
+//! `ARCHITECTURE.md` at the repo root walks the life of a query through
+//! these layers with per-file pointers; `EXPERIMENTS.md` records every
+//! measured constant baked into the source.
 
 // Hot-path engine functions thread explicit state (graph, plan, config,
 // hooks, thread state) instead of bundling context structs, and iterate
@@ -20,6 +55,9 @@
 // candidate set is checked out — both intentional.
 #![allow(clippy::too_many_arguments)]
 #![allow(clippy::needless_range_loop)]
+// Docs are enforced: `cargo doc --no-deps` runs with `-D warnings` in
+// CI, so every public item needs at least a one-line doc comment.
+#![warn(missing_docs)]
 
 pub mod graph;
 pub mod pattern;

@@ -14,8 +14,11 @@ use super::pgraph::Pattern;
 /// adjacency bits row-major).
 #[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct CanonCode {
+    /// Number of vertices.
     pub n: u8,
+    /// Vertex labels in canonical vertex order.
     pub labels: Vec<u32>,
+    /// Upper-triangle adjacency bits, row-major.
     pub bits: u64,
 }
 

@@ -5,6 +5,7 @@
 use super::canonical::{canonical_code, CanonCode};
 use super::pgraph::Pattern;
 
+/// Complete graph on `k` vertices.
 pub fn clique(k: usize) -> Pattern {
     let mut p = Pattern::new(k);
     for u in 0..k {
@@ -15,10 +16,12 @@ pub fn clique(k: usize) -> Pattern {
     p
 }
 
+/// The 3-clique.
 pub fn triangle() -> Pattern {
     clique(3)
 }
 
+/// Simple path on `k` vertices.
 pub fn path(k: usize) -> Pattern {
     let mut p = Pattern::new(k);
     for v in 1..k {
@@ -27,10 +30,12 @@ pub fn path(k: usize) -> Pattern {
     p
 }
 
+/// Path on 3 vertices (open triangle).
 pub fn wedge() -> Pattern {
     path(3)
 }
 
+/// Simple cycle on `k` vertices.
 pub fn cycle(k: usize) -> Pattern {
     let mut p = path(k);
     p.add_edge(k - 1, 0);

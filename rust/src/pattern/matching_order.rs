@@ -15,6 +15,9 @@
 use super::pgraph::Pattern;
 use super::symmetry::symmetry_constraints;
 
+/// Per-level constraints of a [`MatchingPlan`], interpreted by the DFS
+/// engine ([`crate::engine::dfs`]). All masks are bit-vectors over
+/// *positions* (earlier levels of the plan), not pattern vertex ids.
 #[derive(Clone, Debug)]
 pub struct LevelPlan {
     /// Original pattern vertex matched at this position.
@@ -34,17 +37,49 @@ pub struct LevelPlan {
     pub label: u32,
     /// Pattern degree of this vertex (degree-filtering bound).
     pub degree: usize,
+    /// LG metadata: true when this position constrains *every* deeper
+    /// level (`adj_mask_i` contains this position for all `i > pos`).
+    /// Choosing a vertex at such a level lets the local-graph engine
+    /// shrink the candidate universe kClist-style, because no future
+    /// candidate can be non-adjacent to it.
+    pub lg_cone: bool,
+    /// LG metadata: positions `j < pos` whose *neighborhoods* seed the
+    /// local-graph universe when the engine switches to LG at this
+    /// level — the union of `adj_mask & (2^pos - 1)` over this and all
+    /// deeper levels. Every future candidate is adjacent to at least
+    /// one of these matched vertices iff `pos >= MatchingPlan::lg_level`.
+    pub lg_pre_mask: u32,
+    /// LG metadata: like [`LevelPlan::lg_pre_mask`] but including
+    /// non-adjacency sources — the positions whose adjacency bit must be
+    /// precomputed for universe members at LG init so anti-edge
+    /// constraints resolve against local ids.
+    pub lg_touch_mask: u32,
 }
 
+/// A compiled matching order: one [`LevelPlan`] per pattern vertex, in
+/// the order the engine matches them.
 #[derive(Clone, Debug)]
 pub struct MatchingPlan {
+    /// Per-position constraint sets, index = matching position.
     pub levels: Vec<LevelPlan>,
+    /// True when non-adjacency constraints are included (vertex-induced
+    /// semantics).
     pub vertex_induced: bool,
     /// True if symmetry-breaking constraints are included in the masks.
     pub sb: bool,
+    /// Smallest position `L >= 1` such that every level `i >= L` has an
+    /// adjacency constraint against some position `< L`. From this
+    /// level on, the union of the matched vertices' neighborhoods
+    /// covers every future candidate, so the engine may switch to
+    /// shrinking local graphs ([`crate::engine::local_graph`]). Always
+    /// `<= size() - 1` for a connected pattern with at least two
+    /// vertices (the single-vertex plan keeps the initial sentinel 1,
+    /// which the engine's remaining-levels guard never reaches).
+    pub lg_level: usize,
 }
 
 impl MatchingPlan {
+    /// Number of pattern vertices (= number of levels).
     pub fn size(&self) -> usize {
         self.levels.len()
     }
@@ -132,11 +167,50 @@ pub fn plan(p: &Pattern, vertex_induced: bool, sb: bool) -> MatchingPlan {
                 pivot,
                 label: p.label(v),
                 degree: p.degree(v),
+                lg_cone: false,     // filled below
+                lg_pre_mask: 0,     // filled below
+                lg_touch_mask: 0,   // filled below
             }
         })
         .collect();
 
-    MatchingPlan { levels, vertex_induced, sb }
+    let mut plan = MatchingPlan { levels, vertex_induced, sb, lg_level: n.max(2) - 1 };
+    fill_lg_metadata(&mut plan);
+    plan
+}
+
+/// Derive the local-graph metadata from the finished masks: suffix
+/// unions of (non-)adjacency sources per level, the cone flags, and the
+/// earliest level at which the matched prefix's neighborhoods cover all
+/// future candidates (see [`MatchingPlan::lg_level`]).
+fn fill_lg_metadata(plan: &mut MatchingPlan) {
+    let n = plan.levels.len();
+    // suffix unions, restricted per level to already-matched positions
+    let mut adj_union = 0u32;
+    let mut touch_union = 0u32;
+    for i in (0..n).rev() {
+        adj_union |= plan.levels[i].adj_mask;
+        touch_union |= plan.levels[i].adj_mask | plan.levels[i].nonadj_mask;
+        let low = (1u32 << i) - 1;
+        plan.levels[i].lg_pre_mask = adj_union & low;
+        plan.levels[i].lg_touch_mask = touch_union & low;
+    }
+    // cone: position p constrains every deeper level
+    for p in 0..n {
+        plan.levels[p].lg_cone =
+            ((p + 1)..n).all(|i| plan.levels[i].adj_mask >> p & 1 == 1);
+    }
+    // earliest coverage level: every level >= L touches a position < L.
+    // Coverage is monotone in L, so the first satisfying L is minimal;
+    // L = n-1 always qualifies for a connected pattern (adj_mask of the
+    // last level is non-empty and within the first n-1 positions).
+    for l in 1..n {
+        let low = (1u32 << l) - 1;
+        if (l..n).all(|i| plan.levels[i].adj_mask & low != 0) {
+            plan.lg_level = l;
+            break;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -193,6 +267,66 @@ mod tests {
                 assert!(l.pivot < i);
             }
         }
+    }
+
+    #[test]
+    fn lg_metadata_invariants() {
+        for p in [
+            library::clique(5),
+            library::diamond(),
+            library::cycle(4),
+            library::cycle(5),
+            library::wedge(),
+            library::star(3),
+            library::tailed_triangle(),
+        ] {
+            for vi in [true, false] {
+                let pl = plan(&p, vi, true);
+                let k = pl.size();
+                // lg_level is a valid coverage point
+                assert!(pl.lg_level >= 1 && pl.lg_level <= k.max(2) - 1, "{p}");
+                let low = (1u32 << pl.lg_level) - 1;
+                for i in pl.lg_level..k {
+                    assert_ne!(pl.levels[i].adj_mask & low, 0, "{p} level {i}");
+                }
+                // cone flags match their definition
+                for pos in 0..k {
+                    let want = ((pos + 1)..k)
+                        .all(|i| pl.levels[i].adj_mask >> pos & 1 == 1);
+                    assert_eq!(pl.levels[pos].lg_cone, want, "{p} pos {pos}");
+                }
+                // pre/touch masks are the suffix source unions
+                for l in 0..k {
+                    let lowl = (1u32 << l) - 1;
+                    let adj: u32 =
+                        (l..k).fold(0, |m, i| m | pl.levels[i].adj_mask) & lowl;
+                    let touch: u32 = (l..k).fold(0, |m, i| {
+                        m | pl.levels[i].adj_mask | pl.levels[i].nonadj_mask
+                    }) & lowl;
+                    assert_eq!(pl.levels[l].lg_pre_mask, adj, "{p} level {l}");
+                    assert_eq!(pl.levels[l].lg_touch_mask, touch, "{p} level {l}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lg_level_for_known_patterns() {
+        // cliques: every level is adjacent to position 0 and every
+        // position is a cone
+        let pl = plan(&library::clique(5), true, true);
+        assert_eq!(pl.lg_level, 1);
+        assert!(pl.levels.iter().all(|l| l.lg_cone));
+        // diamond: triangle matched first, position 0 in every mask
+        let pl = plan(&library::diamond(), true, true);
+        assert_eq!(pl.lg_level, 1);
+        // 4-cycle: the last level is adjacent only to positions 1 and 2,
+        // so coverage begins at level 2
+        let pl = plan(&library::cycle(4), true, true);
+        assert_eq!(pl.lg_level, 2);
+        // the two path-interior positions cannot both constrain all
+        // future levels in a 4-cycle
+        assert!(!(pl.levels[0].lg_cone && pl.levels[1].lg_cone));
     }
 
     #[test]

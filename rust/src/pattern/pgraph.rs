@@ -5,9 +5,11 @@
 //! as edge-lists exactly as in the paper's high-level API (e.g. TC's
 //! pattern is `{(0,1),(0,2),(1,2)}`).
 
+/// Patterns are capped at 16 vertices (adjacency masks fit in `u16`).
 pub const MAX_PATTERN_VERTICES: usize = 16;
 
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
+/// A small pattern graph with bitmask adjacency rows.
 pub struct Pattern {
     n: usize,
     /// adj[i] = bitmask of neighbors of i.
@@ -17,6 +19,7 @@ pub struct Pattern {
 }
 
 impl Pattern {
+    /// Edgeless pattern on `n` vertices.
     pub fn new(n: usize) -> Self {
         assert!(n <= MAX_PATTERN_VERTICES);
         Self { n, adj: [0; MAX_PATTERN_VERTICES], labels: [0; MAX_PATTERN_VERTICES] }
@@ -36,46 +39,56 @@ impl Pattern {
         p
     }
 
+    /// Add an undirected edge.
     pub fn add_edge(&mut self, u: usize, v: usize) {
         assert!(u != v && u < self.n && v < self.n);
         self.adj[u] |= 1 << v;
         self.adj[v] |= 1 << u;
     }
 
+    /// Set the label of `v` (labels are matched exactly).
     pub fn set_label(&mut self, v: usize, label: u32) {
         self.labels[v] = label;
     }
 
+    /// Label of `v` (0 = unlabeled).
     pub fn label(&self, v: usize) -> u32 {
         self.labels[v]
     }
 
+    /// Number of vertices.
     pub fn num_vertices(&self) -> usize {
         self.n
     }
 
+    /// Number of edges.
     pub fn num_edges(&self) -> usize {
         (0..self.n).map(|i| self.adj[i].count_ones() as usize).sum::<usize>() / 2
     }
 
     #[inline]
+    /// Adjacency test.
     pub fn has_edge(&self, u: usize, v: usize) -> bool {
         self.adj[u] >> v & 1 == 1
     }
 
     #[inline]
+    /// Adjacency row of `v` as a bitmask.
     pub fn adj_mask(&self, v: usize) -> u16 {
         self.adj[v]
     }
 
+    /// Degree of `v`.
     pub fn degree(&self, v: usize) -> usize {
         self.adj[v].count_ones() as usize
     }
 
+    /// Smallest vertex degree.
     pub fn min_degree(&self) -> usize {
         (0..self.n).map(|v| self.degree(v)).min().unwrap_or(0)
     }
 
+    /// All edges (u < v).
     pub fn edges(&self) -> Vec<(usize, usize)> {
         let mut out = Vec::new();
         for u in 0..self.n {
@@ -88,10 +101,12 @@ impl Pattern {
         out
     }
 
+    /// True when every vertex pair is adjacent.
     pub fn is_clique(&self) -> bool {
         self.num_edges() == self.n * (self.n - 1) / 2
     }
 
+    /// Connectivity check over the adjacency masks.
     pub fn is_connected(&self) -> bool {
         if self.n == 0 {
             return true;
@@ -112,6 +127,7 @@ impl Pattern {
         seen.count_ones() as usize == self.n
     }
 
+    /// Whether any vertex carries a non-zero label.
     pub fn is_labeled(&self) -> bool {
         (0..self.n).any(|v| self.labels[v] != 0)
     }

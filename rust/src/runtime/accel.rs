@@ -20,11 +20,13 @@ use crate::graph::CsrGraph;
 use super::pjrt::Runtime;
 use super::tiles::{TiledAdjacency, TILE};
 
+/// Compiled Pallas kernels plus the PJRT runtime that executes them.
 pub struct Accelerator {
     rt: Runtime,
     tc_tile: xla::PjRtLoadedExecutable,
     cn_tile: xla::PjRtLoadedExecutable,
     motif_formulas: xla::PjRtLoadedExecutable,
+    /// Batch width for the per-edge formula lanes.
     pub edge_lanes: usize,
 }
 
@@ -41,6 +43,7 @@ impl Accelerator {
         Ok(Self { rt, tc_tile, cn_tile, motif_formulas, edge_lanes: 4096 })
     }
 
+    /// Backend platform name reported by PJRT.
     pub fn platform(&self) -> String {
         self.rt.platform()
     }

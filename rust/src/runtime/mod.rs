@@ -19,6 +19,8 @@ pub mod pjrt;
 #[cfg(not(feature = "xla"))]
 pub mod stub;
 #[cfg(not(feature = "xla"))]
+/// Stub-backed `accel` alias so callers compile without the `xla`
+/// feature (see [`stub`]).
 pub mod accel {
     pub use super::stub::*;
 }

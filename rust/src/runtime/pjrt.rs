@@ -1,17 +1,21 @@
 //! Thin wrapper over the `xla` crate's PJRT CPU client.
 use anyhow::Result;
 
+/// Owned PJRT CPU client.
 pub struct Runtime {
     client: xla::PjRtClient,
 }
 
 impl Runtime {
+    /// Create a CPU-backed PJRT client.
     pub fn cpu() -> Result<Self> {
         Ok(Self { client: xla::PjRtClient::cpu()? })
     }
+    /// Backend platform name reported by PJRT.
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
+    /// Compile an HLO-text artifact into a loaded executable.
     pub fn load_hlo_text(&self, path: &str) -> Result<xla::PjRtLoadedExecutable> {
         let proto = xla::HloModuleProto::from_text_file(path)?;
         let comp = xla::XlaComputation::from_proto(&proto);

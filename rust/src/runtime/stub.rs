@@ -25,26 +25,32 @@ impl fmt::Display for AccelUnavailable {
 
 impl std::error::Error for AccelUnavailable {}
 
+/// Result alias matching the real runtime's `anyhow::Result`.
 pub type Result<T> = std::result::Result<T, AccelUnavailable>;
 
 /// Same surface as the real `runtime::accel::Accelerator`.
 pub struct Accelerator {
+    /// Mirrors the real accelerator's batch width.
     pub edge_lanes: usize,
 }
 
 impl Accelerator {
+    /// Always fails: the runtime is compiled out.
     pub fn load(_dir: &str) -> Result<Self> {
         Err(AccelUnavailable)
     }
 
+    /// Placeholder platform name.
     pub fn platform(&self) -> String {
         "unavailable".to_string()
     }
 
+    /// Always fails: the runtime is compiled out.
     pub fn triangle_count(&self, _g: &CsrGraph) -> Result<u64> {
         Err(AccelUnavailable)
     }
 
+    /// Always fails: the runtime is compiled out.
     pub fn motif4(&self, _g: &CsrGraph, _cfg: &MinerConfig) -> Result<Vec<u64>> {
         Err(AccelUnavailable)
     }

@@ -10,6 +10,7 @@ use crate::graph::builder::{degree_desc_order, relabel};
 use crate::graph::orientation::{orient, OrientScheme};
 use crate::graph::CsrGraph;
 
+/// Tile side length (matches the Pallas kernel block shape).
 pub const TILE: usize = 128;
 
 /// A blocked dense view of (an orientation of) the adjacency matrix.
@@ -18,7 +19,9 @@ pub struct TiledAdjacency {
     pub grid: usize,
     /// Row-major tile pointers; `None` = all-zero tile (skipped).
     tiles: Vec<Option<Box<[f32]>>>,
+    /// Vertex count after degree-sorted relabeling.
     pub num_vertices: usize,
+    /// Number of materialized (non-empty) tiles.
     pub nonzero_tiles: usize,
 }
 
@@ -58,6 +61,7 @@ impl TiledAdjacency {
     }
 
     #[inline]
+    /// Tile at grid position (r, c); `None` = all-zero.
     pub fn tile(&self, r: usize, c: usize) -> Option<&[f32]> {
         self.tiles[r * self.grid + c].as_deref()
     }

@@ -5,21 +5,47 @@
 //! Protocol: warm up once, then run until `min_runs` samples or
 //! `max_seconds` elapsed, reporting min/median/mean. Benches print the
 //! paper-table rows they regenerate.
+//!
+//! # The `BENCH_pr1.json` regeneration contract
+//!
+//! The artifact at the repo root is written **only** through
+//! [`upsert_bench_section`], and its per-section schema only through
+//! [`Pr1Section::write`] — two writers share it without drifting:
+//!
+//! * every tier-1 `cargo test -q` run, via `rust/tests/bench_pr1.rs`
+//!   (single-shot smoke numbers, dev profile); this is what replaces
+//!   the committed `"build": "pending"` placeholder with real numbers
+//!   on any machine that has a Rust toolchain;
+//! * `cargo bench --bench table5_tc` / `--bench table6_kcl` (sampled,
+//!   release), which overwrite the same sections with better numbers.
+//!
+//! Writers must assert their differential check (scalar count ==
+//! set-centric count) *before* recording times, so a committed
+//! artifact always describes an agreeing build. Sections are upserted
+//! individually — regenerating one bench never clobbers another's
+//! section. The meta block ([`pr1_meta`]) records threads, dev vs
+//! release, and the exact regeneration commands.
 
 use std::time::Instant;
 
+/// Samples collected for one benchmark.
 pub struct BenchResult {
+    /// Benchmark label.
     pub name: String,
+    /// Wall-time samples in seconds.
     pub samples: Vec<f64>,
 }
 
 impl BenchResult {
+    /// Fastest sample (least scheduler noise; used for speedups).
     pub fn min(&self) -> f64 {
         self.samples.iter().copied().fold(f64::INFINITY, f64::min)
     }
+    /// Arithmetic mean of the samples.
     pub fn mean(&self) -> f64 {
         self.samples.iter().sum::<f64>() / self.samples.len() as f64
     }
+    /// Median sample.
     pub fn median(&self) -> f64 {
         let mut s = self.samples.clone();
         s.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -27,8 +53,11 @@ impl BenchResult {
     }
 }
 
+/// Benchmark protocol parameters (see the module docs).
 pub struct Bench {
+    /// Minimum number of samples.
     pub min_runs: usize,
+    /// Soft wall-clock budget.
     pub max_seconds: f64,
 }
 
@@ -39,6 +68,7 @@ impl Default for Bench {
 }
 
 impl Bench {
+    /// Reduced protocol for smoke runs.
     pub fn quick() -> Self {
         Self { min_runs: 2, max_seconds: 5.0 }
     }
@@ -74,21 +104,25 @@ pub struct Json {
 }
 
 impl Json {
+    /// Empty object.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Append a string field (escaped).
     pub fn str(mut self, k: &str, v: &str) -> Self {
         let escaped = v.replace('\\', "\\\\").replace('"', "\\\"");
         self.pairs.push((k.to_string(), format!("\"{escaped}\"")));
         self
     }
 
+    /// Append an integer field.
     pub fn int(mut self, k: &str, v: u64) -> Self {
         self.pairs.push((k.to_string(), v.to_string()));
         self
     }
 
+    /// Append a float field (non-finite renders as `null`).
     pub fn num(mut self, k: &str, v: f64) -> Self {
         let rendered = if v.is_finite() { format!("{v:.6}") } else { "null".to_string() };
         self.pairs.push((k.to_string(), rendered));
@@ -236,17 +270,24 @@ pub fn pr1_meta(threads: usize) -> Json {
 /// PR-1 report section (shared by the benches and the tier-1 smoke
 /// test so the JSON schema cannot drift between writers).
 pub struct Pr1Section<'a> {
+    /// Input description (generator + parameters).
     pub graph: &'a str,
+    /// Pattern name.
     pub pattern: &'a str,
+    /// Agreed embedding count (differential check).
     pub count: u64,
+    /// Scalar-path wall time (seconds).
     pub scalar_secs: f64,
+    /// Set-centric wall time (seconds).
     pub set_secs: f64,
     /// Hand-tuned DAG fast path, when measured alongside.
     pub dag_secs: Option<f64>,
+    /// Number of timing samples behind the figures.
     pub samples: usize,
 }
 
 impl Pr1Section<'_> {
+    /// Scalar-over-set speedup.
     pub fn speedup(&self) -> f64 {
         self.scalar_secs / self.set_secs
     }

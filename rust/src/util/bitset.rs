@@ -5,6 +5,7 @@
 //! inside the DFS hot loop is O(touched), not O(capacity).
 
 #[derive(Clone, Debug, Default)]
+/// Fixed-capacity bitset with O(touched) clearing.
 pub struct BitSet {
     words: Vec<u64>,
     /// Indices of words that may be non-zero (for sparse clearing).
@@ -12,6 +13,7 @@ pub struct BitSet {
 }
 
 impl BitSet {
+    /// All-zero bitset able to hold indices < `capacity` (rounded up).
     pub fn new(capacity: usize) -> Self {
         Self {
             words: vec![0; capacity.div_ceil(64)],
@@ -20,11 +22,13 @@ impl BitSet {
     }
 
     #[inline]
+    /// Capacity in bits (a multiple of 64).
     pub fn capacity(&self) -> usize {
         self.words.len() * 64
     }
 
     #[inline]
+    /// Set bit `i`.
     pub fn insert(&mut self, i: usize) {
         let w = i / 64;
         if self.words[w] == 0 {
@@ -34,11 +38,13 @@ impl BitSet {
     }
 
     #[inline]
+    /// Clear bit `i`.
     pub fn remove(&mut self, i: usize) {
         self.words[i / 64] &= !(1u64 << (i % 64));
     }
 
     #[inline]
+    /// Test bit `i`.
     pub fn contains(&self, i: usize) -> bool {
         (self.words[i / 64] >> (i % 64)) & 1 == 1
     }
@@ -64,10 +70,12 @@ impl BitSet {
         self.touched.clear();
     }
 
+    /// Number of set bits.
     pub fn count_ones(&self) -> usize {
         self.words.iter().map(|w| w.count_ones() as usize).sum()
     }
 
+    /// Iterate set bits in ascending order.
     pub fn iter_ones(&self) -> impl Iterator<Item = usize> + '_ {
         self.words.iter().enumerate().flat_map(|(wi, &w)| {
             let mut bits = w;

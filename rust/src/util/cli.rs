@@ -6,10 +6,15 @@
 use std::collections::HashMap;
 
 #[derive(Debug, Default, Clone)]
+/// Parsed command line.
 pub struct Args {
+    /// First bare argument, if any.
     pub subcommand: Option<String>,
+    /// Remaining bare arguments.
     pub positional: Vec<String>,
+    /// `--key value` / `--key=value` pairs.
     pub options: HashMap<String, String>,
+    /// Bare `--flag` switches.
     pub flags: Vec<String>,
 }
 
@@ -41,30 +46,37 @@ impl Args {
         out
     }
 
+    /// Parse the process arguments.
     pub fn from_env() -> Self {
         Self::parse(std::env::args().skip(1))
     }
 
+    /// Whether `--name` was passed.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Value of option `--name`.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.options.get(name).map(|s| s.as_str())
     }
 
+    /// Option value or `default`.
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.get(name).unwrap_or(default)
     }
 
+    /// Option parsed as `usize`, or `default`.
     pub fn get_usize(&self, name: &str, default: usize) -> usize {
         self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// Option parsed as `u64`, or `default`.
     pub fn get_u64(&self, name: &str, default: u64) -> u64 {
         self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// Option parsed as `f64`, or `default`.
     pub fn get_f64(&self, name: &str, default: f64) -> f64 {
         self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
     }

@@ -8,11 +8,14 @@ use std::collections::BTreeMap;
 use std::path::Path;
 
 #[derive(Debug, Default, Clone)]
+/// Parsed key-value configuration.
 pub struct Config {
+    /// Flattened `section.key` -> value map.
     pub values: BTreeMap<String, String>,
 }
 
 impl Config {
+    /// Parse the text format described in the module docs.
     pub fn parse(text: &str) -> Result<Self, String> {
         let mut values = BTreeMap::new();
         let mut section = String::new();
@@ -41,19 +44,23 @@ impl Config {
         Ok(Self { values })
     }
 
+    /// Read and parse a config file.
     pub fn load(path: &Path) -> Result<Self, String> {
         let text = std::fs::read_to_string(path).map_err(|e| format!("{path:?}: {e}"))?;
         Self::parse(&text)
     }
 
+    /// Raw value for `key`.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.values.get(key).map(|s| s.as_str())
     }
 
+    /// Value parsed as `usize`, or `default`.
     pub fn get_usize(&self, key: &str, default: usize) -> usize {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// Value parsed as `f64`, or `default`.
     pub fn get_f64(&self, key: &str, default: f64) -> f64 {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }

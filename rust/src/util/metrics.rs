@@ -6,6 +6,7 @@
 //! reduce path (no atomics in the hot loop).
 
 #[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+/// Search-space counters (kept per thread, merged at the end).
 pub struct SearchStats {
     /// Embeddings materialized at any level of the embedding tree.
     pub enumerated: u64,
@@ -20,6 +21,7 @@ pub struct SearchStats {
 }
 
 impl SearchStats {
+    /// Accumulate another thread's counters.
     pub fn merge(&mut self, other: &SearchStats) {
         self.enumerated += other.enumerated;
         self.matches += other.matches;
@@ -32,19 +34,27 @@ impl SearchStats {
 /// One row of a result report (used by the campaign driver + benches).
 #[derive(Debug, Clone)]
 pub struct ResultRow {
+    /// Experiment id (e.g. `table5-tc`).
     pub experiment: String,
+    /// System / configuration label.
     pub system: String,
+    /// Input graph name.
     pub graph: String,
+    /// Free-form parameter string (e.g. `k=5`).
     pub params: String,
+    /// Wall time in seconds.
     pub seconds: f64,
+    /// Primary result (count, size, ...).
     pub value: String,
 }
 
 impl ResultRow {
+    /// Table header row.
     pub fn markdown_header() -> String {
         "| experiment | system | graph | params | time | result |\n|---|---|---|---|---|---|".to_string()
     }
 
+    /// Render as one markdown table row.
     pub fn to_markdown(&self) -> String {
         format!(
             "| {} | {} | {} | {} | {} | {} |",

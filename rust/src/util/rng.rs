@@ -34,6 +34,7 @@ impl Rng {
     }
 
     #[inline]
+    /// Next 64 random bits (xoshiro256**).
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;
         let result = s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);

@@ -9,14 +9,17 @@ pub struct Timer {
 }
 
 impl Timer {
+    /// Start a stopwatch.
     pub fn start() -> Self {
         Self { start: Instant::now() }
     }
 
+    /// Elapsed seconds.
     pub fn seconds(&self) -> f64 {
         self.start.elapsed().as_secs_f64()
     }
 
+    /// Elapsed milliseconds.
     pub fn millis(&self) -> f64 {
         self.seconds() * 1e3
     }

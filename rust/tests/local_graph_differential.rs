@@ -1,0 +1,122 @@
+//! Differential tests for the generalized local-graph stage (PR 2):
+//! the LG-enabled DFS engine (`OptFlags::lo`, which layers `lg` on the
+//! set-centric frontier) must produce exactly the counts of the
+//! PR-1 set-centric path (`OptFlags::hi`) and of the scalar probe
+//! oracle, across the pattern library — including the non-clique
+//! patterns (wedge, diamond, house, cycles) whose plans exercise
+//! non-cone levels, anti-adjacency bitmasks, and pre-LG seed lists —
+//! on randomized RMAT graphs, vertex- and edge-induced, single- and
+//! multi-threaded.
+
+use sandslash::engine::hooks::NoHooks;
+use sandslash::engine::{dfs, MinerConfig, OptFlags};
+use sandslash::graph::gen;
+use sandslash::pattern::{library, plan, Pattern};
+
+/// House: a 4-cycle with a triangle roof — the classic non-clique,
+/// non-library pattern from the paper's SL/motif discussions.
+fn house() -> Pattern {
+    Pattern::from_edges(&[(0, 1), (1, 2), (2, 3), (3, 0), (0, 4), (1, 4)])
+}
+
+fn patterns() -> Vec<(&'static str, Pattern)> {
+    vec![
+        ("wedge", library::wedge()),
+        ("triangle", library::triangle()),
+        ("diamond", library::diamond()),
+        ("tailed-triangle", library::tailed_triangle()),
+        ("4-cycle", library::cycle(4)),
+        ("5-cycle", library::cycle(5)),
+        ("house", house()),
+        ("4-clique", library::clique(4)),
+        ("5-clique", library::clique(5)),
+        ("3-star", library::star(3)),
+    ]
+}
+
+fn count_with(
+    g: &sandslash::graph::CsrGraph,
+    p: &Pattern,
+    vertex_induced: bool,
+    opts: OptFlags,
+    threads: usize,
+) -> u64 {
+    let pl = plan(p, vertex_induced, true);
+    let cfg = MinerConfig { threads, chunk: 16, opts };
+    dfs::count(g, &pl, &cfg, &NoHooks).0
+}
+
+#[test]
+fn lg_matches_set_centric_and_scalar_across_patterns_and_rmat_seeds() {
+    for seed in [11u64, 22, 33] {
+        let g = gen::rmat(9, 6, seed, &[]);
+        for (name, p) in patterns() {
+            for vertex_induced in [true, false] {
+                let lg = count_with(&g, &p, vertex_induced, OptFlags::lo(), 2);
+                let set = count_with(&g, &p, vertex_induced, OptFlags::hi(), 2);
+                let mut scalar_opts = OptFlags::hi();
+                scalar_opts.sets = false;
+                let scalar = count_with(&g, &p, vertex_induced, scalar_opts, 2);
+                assert_eq!(
+                    lg, set,
+                    "lg vs set-centric: seed={seed} {name} induced={vertex_induced}"
+                );
+                assert_eq!(
+                    lg, scalar,
+                    "lg vs scalar: seed={seed} {name} induced={vertex_induced}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn lg_thread_invariant_on_skewed_graph() {
+    // heavy-tailed RMAT: some roots exceed the LG universe crossover so
+    // worker tasks mix the global set-centric and local-graph paths
+    let g = gen::rmat(10, 8, 7, &[]);
+    for (name, p) in patterns() {
+        let t1 = count_with(&g, &p, true, OptFlags::lo(), 1);
+        let t4 = count_with(&g, &p, true, OptFlags::lo(), 4);
+        assert_eq!(t1, t4, "{name}");
+    }
+}
+
+#[test]
+fn lg_matches_on_labeled_graph() {
+    // labeled pattern vertices exercise the residual label filter on
+    // the local-graph candidate loop
+    let g = gen::rmat(8, 6, 5, &[1, 2, 3]);
+    let mut dia = library::diamond();
+    dia.set_label(0, 1);
+    dia.set_label(3, 2);
+    let mut cyc = library::cycle(4);
+    cyc.set_label(1, 3);
+    for (name, p) in [("labeled diamond", dia), ("labeled 4-cycle", cyc)] {
+        let lg = count_with(&g, &p, true, OptFlags::lo(), 2);
+        let set = count_with(&g, &p, true, OptFlags::hi(), 2);
+        assert_eq!(lg, set, "{name}");
+    }
+}
+
+#[test]
+fn lg_matches_on_hub_graph_straddling_the_crossover() {
+    // star-core graph: hub roots blow past the universe cap (stay on
+    // the global path), spoke roots switch to LG — counts must agree
+    // regardless of which side of the crossover each subtree lands on
+    let hub_deg = 3000usize; // > LG_UNIVERSE_CAP
+    let mut b = sandslash::graph::builder::GraphBuilder::new(hub_deg + 2);
+    for v in 2..(hub_deg + 2) as u32 {
+        b.add_edge(0, v);
+        b.add_edge(1, v);
+    }
+    b.add_edge(0, 1);
+    let g = b.build();
+    for (name, p) in
+        [("diamond", library::diamond()), ("4-cycle", library::cycle(4)), ("wedge", library::wedge())]
+    {
+        let lg = count_with(&g, &p, true, OptFlags::lo(), 2);
+        let set = count_with(&g, &p, true, OptFlags::hi(), 2);
+        assert_eq!(lg, set, "{name}");
+    }
+}
