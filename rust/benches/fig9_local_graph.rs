@@ -3,8 +3,15 @@
 //! LG stage on non-clique patterns (diamond, tailed-triangle, 4-cycle)
 //! through the generic DFS engine — on the Orkut- and Friendster-like
 //! minis. Every row pair asserts hi/lo count equality, so the bench
-//! doubles as a differential check.
-use sandslash::coordinator::campaign;
+//! doubles as a differential check. The PR-3 block then re-runs the
+//! LG-heavy configurations with the vectorized kernels force-disabled
+//! vs re-enabled, so the figure also records what the SIMD dispatch is
+//! worth on this stage (its dense mode rides the mask kernels).
+use sandslash::coordinator::{campaign, datasets};
+use sandslash::engine::hooks::NoHooks;
+use sandslash::engine::{dfs, MinerConfig, OptFlags};
+use sandslash::pattern::{library, plan};
+use sandslash::util::bench::{pr3_compare, print_table, Bench};
 
 fn main() {
     let rows = campaign::fig9(&["or-tiny", "fr-tiny"], 8);
@@ -13,4 +20,42 @@ fn main() {
     println!("the denser graph, peaking then flattening on the sparser one.");
     println!("Non-clique patterns gain less (fewer cone levels to shrink at) but");
     println!("must never lose past the crossover; heuristic in EXPERIMENTS.md.");
+
+    // ---- PR-3: scalar vs SIMD kernels through the LG stage, via the
+    // shared protocol (count equality + SIMD-merge selection asserted
+    // inside bench::pr3_compare) ----
+    let g = datasets::load("or-tiny").expect("dataset");
+    let bench = Bench::quick();
+    let mut table = Vec::new();
+    for (pname, p) in [
+        ("diamond", library::diamond()),
+        ("5-clique", library::clique(5)),
+    ] {
+        let pl = plan(&p, true, true);
+        let cfg = MinerConfig::new(OptFlags::lo());
+        let pr3 = pr3_compare(
+            "or-tiny",
+            pname,
+            1,
+            || {
+                let (count, _) = dfs::count(&g, &pl, &cfg, &NoHooks);
+                let r = bench.run("lg-kernels", || dfs::count(&g, &pl, &cfg, &NoHooks).0);
+                (count, r.min())
+            },
+            || dfs::count(&g, &pl, &cfg, &NoHooks).0,
+        );
+        table.push((
+            format!("{pname} scalar kernels"),
+            vec![format!("{:.4}", pr3.scalar_secs)],
+        ));
+        table.push((
+            format!("{pname} simd kernels ({})", pr3.simd),
+            vec![format!("{:.4}", pr3.simd_secs)],
+        ));
+    }
+    print_table(
+        "PR-3 LG stage (OptFlags::lo, or-tiny): scalar vs SIMD kernel dispatch",
+        &["min s"],
+        &table,
+    );
 }

@@ -9,7 +9,7 @@ use sandslash::engine::hooks::NoHooks;
 use sandslash::engine::{dfs, MinerConfig, OptFlags};
 use sandslash::graph::gen;
 use sandslash::pattern::{library, plan};
-use sandslash::util::bench::{pr1_report_path, print_table, Bench, Pr1Section};
+use sandslash::util::bench::{pr1_report_path, pr3_compare, print_table, Bench, Pr1Section};
 
 fn main() {
     let graphs = sandslash::coordinator::datasets::unlabeled_names();
@@ -66,5 +66,40 @@ fn main() {
         eprintln!("could not write BENCH_pr1.json: {e}");
     } else {
         println!("wrote `tc` section of {}", pr1_report_path().display());
+    }
+
+    // ---- PR-3: scalar vs SIMD kernel dispatch, same input, same run
+    // (shared protocol: count equality + SIMD-merge selection asserted
+    // inside bench::pr3_compare) ----
+    let mut nsamples = 0usize;
+    let mut pr3 = pr3_compare(
+        "rmat scale=14 ef=8 seed=42",
+        "triangle",
+        1,
+        || {
+            let (count, _) = dfs::count(&g, &pl, &set_cfg, &NoHooks);
+            let r = bench.run("tc-set-kernels", || dfs::count(&g, &pl, &set_cfg, &NoHooks).0);
+            nsamples = r.samples.len();
+            (count, r.min())
+        },
+        || dfs::count(&g, &pl, &set_cfg, &NoHooks).0,
+    );
+    pr3.samples = nsamples;
+    print_table(
+        "PR-3 TC kernels: scalar vs SIMD dispatch (rmat scale=14 ef=8 seed=42)",
+        &["min s"],
+        &[
+            ("scalar kernels (forced)".to_string(), vec![format!("{:.4}", pr3.scalar_secs)]),
+            (
+                format!("simd kernels ({})", pr3.simd),
+                vec![format!("{:.4}", pr3.simd_secs)],
+            ),
+        ],
+    );
+    println!("\nkernel speedup ({} over scalar) = {:.2}x", pr3.simd, pr3.speedup());
+    if let Err(e) = pr3.write("pr3-tc", set_cfg.threads) {
+        eprintln!("could not write BENCH_pr1.json: {e}");
+    } else {
+        println!("wrote `pr3-tc` section of {}", pr1_report_path().display());
     }
 }

@@ -18,7 +18,10 @@
 //!   symmetry-breaking partial orders fused into the seed list as range
 //!   bounds. Buffers are per-thread and per-level, so the hot path does
 //!   no allocation; high-degree roots additionally publish their
-//!   neighborhood as a bitmap probed in O(1) per candidate.
+//!   neighborhood as a bitmap probed in O(1) per candidate — and when
+//!   the seed list is itself dense, the level intersects bitset×bitset
+//!   with the word-parallel kernels instead
+//!   ([`DENSE_FRONTIER_WORD_FACTOR`], §PR-3).
 //! * **Local-graph** (`opts.lg`, layered on the set-centric mode; paper
 //!   §5 "LG"): once the search passes the plan's coverage level
 //!   (`MatchingPlan::lg_level`) and the matched prefix's neighborhoods
@@ -72,6 +75,24 @@ const LG_UNIVERSE_CAP: usize = 2048;
 /// just as fast.
 const LG_MIN_REMAINING: usize = 2;
 
+/// Dense bitset×bitset frontier crossover (EXPERIMENTS.md §PR-3): with
+/// the root bitmap built, replace "copy seed list, probe each element
+/// against the bitmap" by "publish the seed as a second bitmap, AND
+/// word-parallel, decode survivors" once the bounded seed list reaches
+/// `(|V| / 64) * DENSE_FRONTIER_WORD_FACTOR` elements. The AND costs
+/// |V|/64 word ops regardless of seed length, the probe filter one
+/// dependent load per seed element; 4 covers the seed-bitmap build on
+/// top of break-even.
+const DENSE_FRONTIER_WORD_FACTOR: usize = 4;
+
+/// LG dense-scan crossover (EXPERIMENTS.md §PR-3): scan the bounded
+/// embedding-adjacency mask range with the word-parallel mask kernel
+/// instead of copying the shortest source list when the local-id range
+/// is at most this factor longer than that list — the vectorized scan
+/// retires ~8 mask tests per cycle where the copy path pays one
+/// copy + scalar mask test per seed element.
+const LG_DENSE_SCAN_FACTOR: usize = 8;
+
 /// Per-thread, per-level candidate-set buffers — the set-centric
 /// frontier. All storage is reused across root tasks: zero allocation on
 /// the hot path once warm.
@@ -84,6 +105,10 @@ struct Frontier {
     /// High-degree root's neighborhood bitmap (lazily sized to |V|).
     root_bits: BitSet,
     root_bits_built: bool,
+    /// Scratch bitmap for the dense bitset×bitset frontier mode: the
+    /// bounded seed list is published here, ANDed word-parallel against
+    /// `root_bits`, and sparse-cleared before returning (§PR-3).
+    cand_bits: BitSet,
 }
 
 impl Frontier {
@@ -93,12 +118,19 @@ impl Frontier {
             scratch: Vec::new(),
             root_bits: BitSet::default(),
             root_bits_built: false,
+            cand_bits: BitSet::default(),
         }
     }
 
     fn ensure_bits(&mut self, n: usize) {
         if self.root_bits.capacity() < n {
             self.root_bits = BitSet::new(n);
+        }
+    }
+
+    fn ensure_cand_bits(&mut self, n: usize) {
+        if self.cand_bits.capacity() < n {
+            self.cand_bits = BitSet::new(n);
         }
     }
 }
@@ -341,12 +373,34 @@ fn extend_set<A, H: LowLevelApi>(
     let first = g.neighbors(srcs[0].1);
     let s = lo.map_or(0, |l| first.partition_point(|&x| x <= l));
     let e = hi.map_or(first.len(), |h| first.partition_point(|&x| x < h));
-    cur.extend_from_slice(&first[s..e]);
-    if root_filter && !cur.is_empty() {
+    let n_verts = g.num_vertices();
+    if root_filter && (e - s) >= (n_verts / 64) * DENSE_FRONTIER_WORD_FACTOR {
+        // Dense bitset×bitset frontier (§PR-3): both operands are a
+        // sizable fraction of |V|, so publish the bounded seed as a
+        // second bitmap and AND it against the root bitmap
+        // word-parallel; survivors decode in ascending order, exactly
+        // the list the probe filter would have produced.
+        st.front.ensure_cand_bits(n_verts);
+        for &u in &first[s..e] {
+            st.front.cand_bits.insert(u as usize);
+        }
         if cfg.opts.stats {
             st.stats.intersections += 1;
         }
-        setops::retain_in_bitset(&mut cur, &st.front.root_bits);
+        setops::and_words_into(
+            st.front.cand_bits.words(),
+            st.front.root_bits.words(),
+            &mut cur,
+        );
+        st.front.cand_bits.clear();
+    } else {
+        cur.extend_from_slice(&first[s..e]);
+        if root_filter && !cur.is_empty() {
+            if cfg.opts.stats {
+                st.stats.intersections += 1;
+            }
+            setops::retain_in_bitset(&mut cur, &st.front.root_bits);
+        }
     }
     for i in 1..ns {
         if cur.is_empty() {
@@ -521,7 +575,22 @@ fn extend_lg<A, H: LowLevelApi>(
     debug_assert!(seed != usize::MAX, "level has no adjacency source");
     let mut buf = std::mem::take(&mut st.front.bufs[level]);
     buf.clear();
-    st.lg.copy_source(seed, lo_l, hi_l, &mut buf);
+    let span = (hi_l - lo_l) as usize;
+    // the `seed` guard keeps a (plan-invariant-violating) source-less
+    // level loud in release builds too: it falls through to
+    // `copy_source(usize::MAX, ..)` and panics instead of silently
+    // enumerating the whole range with `want == 0`
+    if seed != usize::MAX && span <= best.saturating_mul(LG_DENSE_SCAN_FACTOR) {
+        // Dense mask scan (§PR-3): the embedding-adjacency masks alone
+        // decide membership (a mask-passing vertex is in every
+        // adjacency source's list by construction — see
+        // `PlanLocalGraph::collect_candidates`), so sweep the bounded
+        // mask range word-parallel instead of copying the seed list.
+        // Everything appended here passes the mask test below.
+        st.lg.collect_candidates(lo_l, hi_l, lp.adj_mask, lp.nonadj_mask, &mut buf);
+    } else {
+        st.lg.copy_source(seed, lo_l, hi_l, &mut buf);
+    }
     if cfg.opts.stats {
         st.stats.intersections += 1;
     }
@@ -576,11 +645,34 @@ fn extend<A, H: LowLevelApi>(
     if !hooks.to_extend(&st.emb, lp.pivot) {
         return;
     }
-    // Candidates: neighborhood of the pivot's match. Borrow juggling:
-    // neighbors() borrows g (not st), so iterating while mutating st is
-    // fine.
-    for idx in 0..g.degree(pivot_v) {
-        let cand = g.neighbors(pivot_v)[idx];
+    // Dense-MNC prefilter (§PR-3): for hub roots the connectivity codes
+    // live in a flat table, so the whole pivot row is mask-filtered in
+    // one gathered kernel pass before the per-candidate filters run —
+    // the same survivors the per-candidate `conn.get` test admits, in
+    // the same order, so only where pruning is *counted* moves.
+    let dense_conn = use_mnc && st.conn.is_dense() && (lp.adj_mask | lp.nonadj_mask) != 0;
+    let prefiltered = if dense_conn {
+        let mut buf = std::mem::take(&mut st.front.bufs[level]);
+        buf.clear();
+        st.conn
+            .filter_into(g.neighbors(pivot_v), lp.adj_mask, lp.nonadj_mask, &mut buf);
+        if cfg.opts.stats {
+            st.stats.pruned += (g.degree(pivot_v) - buf.len()) as u64;
+        }
+        Some(buf)
+    } else {
+        None
+    };
+    let n_cands = prefiltered.as_ref().map_or(g.degree(pivot_v), Vec::len);
+    // Candidates: neighborhood of the pivot's match (or its
+    // connectivity-filtered subset). Borrow juggling: neighbors()
+    // borrows g (not st), and the prefilter buffer is read by index,
+    // so iterating while mutating st is fine.
+    for idx in 0..n_cands {
+        let cand = match &prefiltered {
+            Some(buf) => buf[idx],
+            None => g.neighbors(pivot_v)[idx],
+        };
         // degree filter (DF)
         if cfg.opts.df && g.degree(cand) < lp.degree {
             st.stats.pruned += cfg.opts.stats as u64;
@@ -618,8 +710,11 @@ fn extend<A, H: LowLevelApi>(
             st.stats.pruned += cfg.opts.stats as u64;
             continue;
         }
-        // connectivity constraints
-        let conn_ok = if use_mnc {
+        // connectivity constraints (already applied by the dense-MNC
+        // prefilter when it ran)
+        let conn_ok = if dense_conn {
+            true
+        } else if use_mnc {
             let code = st.conn.get(cand);
             (code & lp.adj_mask) == lp.adj_mask && (code & lp.nonadj_mask) == 0
         } else {
@@ -686,6 +781,9 @@ fn extend<A, H: LowLevelApi>(
             }
         }
         st.emb.pop();
+    }
+    if let Some(buf) = prefiltered {
+        st.front.bufs[level] = buf;
     }
 }
 
@@ -921,6 +1019,56 @@ mod tests {
         // cliques pass the coverage level at 1, so LG fires on this
         // small graph and the universe counter moves
         assert!(stats.lg_vertices > 0);
+    }
+
+    #[test]
+    fn dense_frontier_and_dense_mnc_agree_on_two_hub_graph() {
+        // both hubs adjacent to every vertex: the root bitmap is built,
+        // the bounded seed lists are a large fraction of |V| (the
+        // word-parallel bitset×bitset path fires), and hub roots push
+        // the scalar path into dense-MNC gather mode
+        let n = 640usize;
+        let mut b = crate::graph::builder::GraphBuilder::new(n);
+        for v in 2..n as u32 {
+            b.add_edge(0, v);
+            b.add_edge(1, v);
+            // a sparse ring among the leaves so deeper levels survive
+            let w = if v + 1 < n as u32 { v + 1 } else { 2 };
+            b.add_edge(v, w);
+        }
+        b.add_edge(0, 1);
+        let g = b.build();
+        crate::util::metrics::dispatch::set_enabled(true);
+        let before = crate::util::metrics::dispatch::snapshot();
+        for pat in [
+            library::triangle(),
+            library::cycle(4),
+            library::diamond(),
+            library::clique(4),
+        ] {
+            for vertex_induced in [true, false] {
+                let pl = plan(&pat, vertex_induced, true);
+                let (s, _) = count(&g, &pl, &cfg(OptFlags::hi()), &NoHooks);
+                let mut scalar = cfg(OptFlags::hi());
+                scalar.opts.sets = false;
+                let (c, _) = count(&g, &pl, &scalar, &NoHooks);
+                assert_eq!(s, c, "pattern {pat} induced={vertex_induced}");
+                let mut probe = scalar;
+                probe.opts.mnc = false;
+                let (p, _) = count(&g, &pl, &probe, &NoHooks);
+                assert_eq!(s, p, "probe path, pattern {pat} induced={vertex_induced}");
+            }
+        }
+        let after = crate::util::metrics::dispatch::snapshot();
+        // the word-parallel dense frontier must actually have run
+        assert!(
+            after.word_parallel > before.word_parallel,
+            "dense bitset×bitset frontier never dispatched"
+        );
+        assert!(
+            after.gather_filter > before.gather_filter,
+            "dense-MNC gathered prefilter never dispatched"
+        );
     }
 
     #[test]

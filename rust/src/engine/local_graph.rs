@@ -489,6 +489,35 @@ impl PlanLocalGraph {
         }
     }
 
+    /// Dense-mode candidate scan (EXPERIMENTS.md §PR-3): append every
+    /// local id in `[lo, hi)` whose embedding-adjacency mask satisfies
+    /// `mask & want == want && mask & veto == 0`, via the vectorized
+    /// mask kernel in [`crate::graph::setops`] (8 masks per compare on
+    /// AVX2) instead of per-bit tests on a copied seed list.
+    ///
+    /// Equivalent to seeding from any adjacency source named in `want`
+    /// and then mask-filtering: a mask-passing vertex carries the bit
+    /// of every source position, and a bit is set exactly for members
+    /// of that source's candidate list (pre-LG lists at init, valid
+    /// shrink prefixes at push) — so membership is implied and only
+    /// the mask test remains. Output is ascending by local id.
+    pub fn collect_candidates(
+        &self,
+        lo: u32,
+        hi: u32,
+        want: u32,
+        veto: u32,
+        out: &mut Vec<u32>,
+    ) {
+        crate::graph::setops::mask_filter_into(
+            &self.embadj[lo as usize..hi as usize],
+            lo,
+            want,
+            veto,
+            out,
+        );
+    }
+
     /// Record `local` as the match for the next embedding position:
     /// set that position's adjacency bit on every valid local neighbor,
     /// and — when `cone` (the level constrains all deeper levels) —
@@ -681,6 +710,38 @@ mod tests {
         // cand < 4 keeps globals {0, 1, 3} = local ids {0, 1, 2}
         assert_eq!(lg.local_range(None, Some(4)), (0, 3));
         assert_eq!(lg.local_range(Some(0), Some(3)), (1, 2));
+    }
+
+    #[test]
+    fn plan_lg_collect_candidates_matches_manual_filter() {
+        let g = gen::rmat(7, 6, 9, &[]);
+        let pl = plan(&library::diamond(), true, true);
+        let lp = &pl.levels[pl.lg_level];
+        let mut lg = PlanLocalGraph::new();
+        let mut checked = 0;
+        for root in 0..g.num_vertices() as u32 {
+            let emb = [root];
+            let n = lg.init(&g, &emb, lp.lg_pre_mask, lp.lg_touch_mask, pl.size());
+            if n < 4 {
+                continue;
+            }
+            for (lo, hi) in [(0u32, n as u32), (1, n as u32 - 1)] {
+                let mut got = Vec::new();
+                lg.collect_candidates(lo, hi, lp.adj_mask, lp.nonadj_mask, &mut got);
+                let want: Vec<u32> = (lo..hi)
+                    .filter(|&u| {
+                        let ea = lg.embadj(u as usize);
+                        ea & lp.adj_mask == lp.adj_mask && ea & lp.nonadj_mask == 0
+                    })
+                    .collect();
+                assert_eq!(got, want, "root {root} range [{lo},{hi})");
+            }
+            checked += 1;
+            if checked >= 5 {
+                break;
+            }
+        }
+        assert!(checked > 0, "no usable roots");
     }
 
     /// Random legal descent through a plan: push candidates that satisfy

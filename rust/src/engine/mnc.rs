@@ -199,6 +199,39 @@ impl Connectivity {
             self.map.get(key)
         }
     }
+
+    #[inline]
+    /// Whether the dense direct-indexed table is active for the current
+    /// root (decided by [`begin_root`](Self::begin_root)).
+    pub fn is_dense(&self) -> bool {
+        self.use_dense
+    }
+
+    /// Filter `cands` down to those whose adjacency code `c` satisfies
+    /// `c & want == want && c & veto == 0`, appending survivors to
+    /// `out` in input order — the whole-row connectivity probe. In
+    /// dense mode the codes are gathered and tested with the
+    /// vectorized kernels in [`crate::graph::setops`]
+    /// (EXPERIMENTS.md §PR-3); in map mode each code is probed
+    /// individually (hash lookups cannot be gathered).
+    pub fn filter_into(
+        &self,
+        cands: &[VertexId],
+        want: u32,
+        veto: u32,
+        out: &mut Vec<VertexId>,
+    ) {
+        if self.use_dense {
+            crate::graph::setops::gather_mask_filter_into(&self.dense, cands, want, veto, out);
+        } else {
+            for &u in cands {
+                let c = self.map.get(u);
+                if c & want == want && c & veto == 0 {
+                    out.push(u);
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -263,6 +296,36 @@ mod tests {
         for k in 0..n as u32 {
             assert_eq!(hash.get(k), dense.get(k), "key {k} after removal");
         }
+    }
+
+    #[test]
+    fn filter_into_agrees_across_modes_and_with_get() {
+        let n = 2048usize;
+        let mut hash = Connectivity::new();
+        hash.begin_root(n, 4); // hash mode
+        let mut dense = Connectivity::new();
+        dense.begin_root(n, DENSE_ROOT_DEGREE); // dense mode
+        assert!(!hash.is_dense() && dense.is_dense());
+        for k in (0..n as u32).step_by(3) {
+            hash.or_insert(k, 1 << (k % 12));
+            dense.or_insert(k, 1 << (k % 12));
+        }
+        let cands: Vec<u32> = (0..n as u32).step_by(2).collect();
+        let (want, veto) = (1u32 << 3, 1u32 << 9);
+        let mut from_hash = Vec::new();
+        hash.filter_into(&cands, want, veto, &mut from_hash);
+        let mut from_dense = Vec::new();
+        dense.filter_into(&cands, want, veto, &mut from_dense);
+        let reference: Vec<u32> = cands
+            .iter()
+            .copied()
+            .filter(|&u| {
+                let c = hash.get(u);
+                c & want == want && c & veto == 0
+            })
+            .collect();
+        assert_eq!(from_hash, reference);
+        assert_eq!(from_dense, reference);
     }
 
     #[test]

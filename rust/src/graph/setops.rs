@@ -4,19 +4,34 @@
 //! Sandslash's performance hinges on fast subgraph extension (paper
 //! §4–§5): MNC and LG exist precisely to replace per-candidate edge
 //! probes with set operations, and every fast path (TC, k-CL, SL, the
-//! set-centric DFS frontier) bottoms out here. Three kernel families,
+//! set-centric DFS frontier) bottoms out here. Four kernel families,
 //! chosen adaptively by length/density heuristics (crossovers recorded
 //! in EXPERIMENTS.md):
 //!
 //! * **linear merge** — both lists walked in lockstep; best when the
-//!   lengths are within ~[`GALLOP_FACTOR`] of each other.
+//!   lengths are within ~[`GALLOP_FACTOR`] of each other and at least
+//!   one side is too short for a vector block.
 //! * **galloping** — each element of the short list binary-searched in a
 //!   shrinking window of the long list; wins when the lengths are skewed
 //!   by more than [`GALLOP_FACTOR`].
-//! * **bitset filter** — O(1) word-indexed membership probes against a
-//!   pre-built neighborhood bitmap ([`BitSet`]); wins when one operand
-//!   is reused across many operations (e.g. a high-degree root's
-//!   neighborhood, built once per root task and probed at every level).
+//! * **SIMD block merge** — `std::arch` x86_64 shuffle kernels
+//!   (SSE/SSSE3 4-lane, AVX2 8-lane): compare one block of each list
+//!   all-pairs via lane rotations, advance the block with the smaller
+//!   maximum, compact matches with a shuffle LUT. Selected when both
+//!   operands have at least [`SIMD_MIN_LEN`] elements and the CPU
+//!   reports the feature at runtime (`is_x86_feature_detected!`); the
+//!   portable scalar kernels remain the fallback and the differential
+//!   oracle. `SANDSLASH_NO_SIMD=1` (or
+//!   [`set_simd_enabled`]`(false)`) forces the scalar path.
+//! * **word-parallel / bitset** — O(1) word-indexed membership probes
+//!   against a pre-built neighborhood bitmap ([`BitSet`]), and
+//!   bitset×bitset AND(+popcount) over raw words — 64 memberships per
+//!   instruction pair — for dense frontiers, embedding-adjacency mask
+//!   scans, and gathered connectivity-code filters.
+//!
+//! Every dispatch decision increments a process-global counter in
+//! [`crate::util::metrics::dispatch`], so tests and benches can assert
+//! which family actually ran.
 //!
 //! Bounded variants (`*_below`) fuse a symmetry-breaking upper bound
 //! into the kernel so candidates violating `cand < bound` are never
@@ -46,10 +61,17 @@
 //! out.clear();
 //! setops::difference_into(&a, &b, &mut out);
 //! assert_eq!(out, vec![1, 7]);
+//!
+//! // the vectorized and scalar kernels are interchangeable
+//! setops::set_simd_enabled(false);
+//! assert_eq!(setops::intersect_count(&a, &b), 2);
+//! setops::set_simd_enabled(true); // back to runtime detection
 //! ```
 
 use super::csr::VertexId;
 use crate::util::bitset::BitSet;
+use crate::util::metrics::dispatch;
+use std::sync::atomic::{AtomicU8, Ordering};
 
 /// Length-skew crossover between linear merge and galloping: gallop when
 /// `short * GALLOP_FACTOR < long`. The merge costs O(short + long), the
@@ -58,32 +80,188 @@ use crate::util::bitset::BitSet;
 /// (measured in the §Perf pass, see EXPERIMENTS.md).
 pub const GALLOP_FACTOR: usize = 32;
 
+/// Minimum operand length for the vectorized block merge: below one
+/// AVX2 block per side the setup and scalar tail dominate, so shorter
+/// inputs stay on the scalar merge (EXPERIMENTS.md §PR-3).
+pub const SIMD_MIN_LEN: usize = 8;
+
 #[inline]
 fn skewed(short: usize, long: usize) -> bool {
     short * GALLOP_FACTOR < long
 }
 
-/// |a ∩ b| for sorted slices; adaptive merge/gallop.
+// ---------------------------------------------------------------------------
+// Runtime SIMD mode (cached CPU feature detection + kill switches)
+// ---------------------------------------------------------------------------
+
+/// Cached SIMD mode byte: 0 = undetected; low nibble = merge-kernel
+/// level (1 scalar / 2 ssse3 / 3 avx2); bit 4 = POPCNT available.
+static SIMD_MODE: AtomicU8 = AtomicU8::new(0);
+
+const MODE_SCALAR: u8 = 1;
+const MODE_SSE: u8 = 2;
+const MODE_AVX2: u8 = 3;
+const MODE_LEVEL_MASK: u8 = 0x0F;
+const MODE_POPCNT: u8 = 0x10;
+
+/// Vectorization level selected for the merge kernels (cached runtime
+/// CPU detection; see [`set_simd_enabled`] for the overrides).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// Portable scalar kernels only (non-x86_64, old CPUs, or forced).
+    Scalar,
+    /// SSE/SSSE3 4-lane shuffle kernels.
+    Sse,
+    /// AVX2 8-lane shuffle/permute kernels (plus gathered filters).
+    Avx2,
+}
+
+#[inline]
+fn simd_mode() -> u8 {
+    match SIMD_MODE.load(Ordering::Relaxed) {
+        0 => detect_simd_mode(),
+        m => m,
+    }
+}
+
+#[cold]
+fn detect_simd_mode() -> u8 {
+    let m = compute_simd_mode();
+    SIMD_MODE.store(m, Ordering::Relaxed);
+    m
+}
+
+#[cfg(target_arch = "x86_64")]
+fn compute_simd_mode() -> u8 {
+    let disabled = std::env::var("SANDSLASH_NO_SIMD")
+        .is_ok_and(|v| !v.trim().is_empty() && v.trim() != "0");
+    if disabled {
+        return MODE_SCALAR;
+    }
+    let mut m = if is_x86_feature_detected!("avx2") {
+        MODE_AVX2
+    } else if is_x86_feature_detected!("ssse3") {
+        MODE_SSE
+    } else {
+        MODE_SCALAR
+    };
+    if is_x86_feature_detected!("popcnt") {
+        m |= MODE_POPCNT;
+    }
+    m
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn compute_simd_mode() -> u8 {
+    MODE_SCALAR
+}
+
+/// The merge-kernel vectorization level currently in effect.
+pub fn simd_level() -> SimdLevel {
+    match simd_mode() & MODE_LEVEL_MASK {
+        MODE_AVX2 => SimdLevel::Avx2,
+        MODE_SSE => SimdLevel::Sse,
+        _ => SimdLevel::Scalar,
+    }
+}
+
+/// Whether any vectorized merge kernel is active (false on non-x86
+/// builds, pre-SSSE3 CPUs, under `SANDSLASH_NO_SIMD=1`, or after
+/// [`set_simd_enabled`]`(false)`).
+pub fn simd_active() -> bool {
+    simd_level() != SimdLevel::Scalar
+}
+
+/// Human-readable dispatch level for bench metadata rows.
+pub fn simd_level_name() -> &'static str {
+    match simd_level() {
+        SimdLevel::Avx2 => "avx2",
+        SimdLevel::Sse => "ssse3",
+        SimdLevel::Scalar => "scalar",
+    }
+}
+
+/// Force the portable scalar kernels (`false`) or return to runtime
+/// feature detection (`true`, which still honors `SANDSLASH_NO_SIMD`).
+///
+/// Process-global, for benches and differential tests that need
+/// scalar-vs-SIMD rows *from the same run*; every kernel is correct at
+/// every level, so flipping this concurrently never changes results —
+/// only which counters in [`crate::util::metrics::dispatch`] move.
+pub fn set_simd_enabled(on: bool) {
+    let m = if on { 0 } else { MODE_SCALAR };
+    SIMD_MODE.store(m, Ordering::Relaxed);
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn popcnt_enabled() -> bool {
+    simd_mode() & MODE_POPCNT != 0
+}
+
+// ---------------------------------------------------------------------------
+// Adaptive entry points
+// ---------------------------------------------------------------------------
+
+/// |a ∩ b| for sorted slices; adaptive merge/gallop/SIMD.
 #[inline]
 pub fn intersect_count(a: &[VertexId], b: &[VertexId]) -> usize {
     if skewed(a.len(), b.len()) {
+        dispatch::note_gallop();
         return gallop_count(a, b);
     }
     if skewed(b.len(), a.len()) {
+        dispatch::note_gallop();
         return gallop_count(b, a);
     }
+    #[cfg(target_arch = "x86_64")]
+    if a.len() >= SIMD_MIN_LEN && b.len() >= SIMD_MIN_LEN {
+        match simd_level() {
+            SimdLevel::Avx2 => {
+                dispatch::note_simd_merge();
+                // SAFETY: AVX2 support verified by runtime detection.
+                return unsafe { x86::intersect_count_avx2(a, b) };
+            }
+            SimdLevel::Sse => {
+                dispatch::note_simd_merge();
+                // SAFETY: SSSE3 support verified by runtime detection.
+                return unsafe { x86::intersect_count_sse(a, b) };
+            }
+            SimdLevel::Scalar => {}
+        }
+    }
+    dispatch::note_merge();
     merge_count(a, b)
 }
 
-/// a ∩ b appended to `out` (not cleared); adaptive merge/gallop.
+/// a ∩ b appended to `out` (not cleared); adaptive merge/gallop/SIMD.
 #[inline]
 pub fn intersect_into(a: &[VertexId], b: &[VertexId], out: &mut Vec<VertexId>) {
     if skewed(a.len(), b.len()) {
+        dispatch::note_gallop();
         return gallop_into(a, b, out);
     }
     if skewed(b.len(), a.len()) {
+        dispatch::note_gallop();
         return gallop_into(b, a, out);
     }
+    #[cfg(target_arch = "x86_64")]
+    if a.len() >= SIMD_MIN_LEN && b.len() >= SIMD_MIN_LEN {
+        match simd_level() {
+            SimdLevel::Avx2 => {
+                dispatch::note_simd_merge();
+                // SAFETY: AVX2 support verified by runtime detection.
+                return unsafe { x86::intersect_into_avx2(a, b, out) };
+            }
+            SimdLevel::Sse => {
+                dispatch::note_simd_merge();
+                // SAFETY: SSSE3 support verified by runtime detection.
+                return unsafe { x86::intersect_into_sse(a, b, out) };
+            }
+            SimdLevel::Scalar => {}
+        }
+    }
+    dispatch::note_merge();
     merge_into(a, b, out)
 }
 
@@ -149,6 +327,10 @@ pub fn difference_into(a: &[VertexId], b: &[VertexId], out: &mut Vec<VertexId>) 
     out.extend_from_slice(&a[i..]);
 }
 
+// ---------------------------------------------------------------------------
+// Bitset / word-parallel kernels
+// ---------------------------------------------------------------------------
+
 /// Keep only the elements of `v` present in `bits` (in-place bitset
 /// intersection; order preserved, no allocation).
 pub fn retain_in_bitset(v: &mut Vec<VertexId>, bits: &BitSet) {
@@ -183,13 +365,84 @@ pub fn intersect_bitset_count(a: &[VertexId], bits: &BitSet) -> usize {
 }
 
 /// Word-parallel intersection count of two bit vectors: AND + popcount,
-/// 64 memberships per instruction pair. Both slices must cover the same
-/// universe; trailing words of the longer slice are ignored.
+/// 64 memberships per instruction pair (hardware `popcnt` when the CPU
+/// has it). Both slices must cover the same universe; trailing words of
+/// the longer slice are ignored.
 pub fn intersect_words_count(a: &[u64], b: &[u64]) -> usize {
+    dispatch::note_word_parallel();
+    #[cfg(target_arch = "x86_64")]
+    if popcnt_enabled() {
+        // SAFETY: POPCNT support verified by runtime detection.
+        return unsafe { x86::words_and_count_popcnt(a, b) };
+    }
     a.iter()
         .zip(b.iter())
         .map(|(&x, &y)| (x & y).count_ones() as usize)
         .sum()
+}
+
+/// Word-parallel AND of two bit vectors with the set bits of the result
+/// decoded (ascending) onto `out` — the bitset×bitset dense-frontier
+/// kernel: the AND runs 64 memberships per instruction pair and only
+/// surviving candidates pay the bit-extraction cost. Trailing words of
+/// the longer slice are ignored.
+pub fn and_words_into(a: &[u64], b: &[u64], out: &mut Vec<VertexId>) {
+    dispatch::note_word_parallel();
+    for (wi, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        let mut w = x & y;
+        while w != 0 {
+            let bit = w.trailing_zeros() as usize;
+            out.push((wi * 64 + bit) as VertexId);
+            w &= w - 1;
+        }
+    }
+}
+
+/// Scan a contiguous range of 32-bit constraint masks, appending
+/// `base + index` for every mask `m` with `m & want == want` and
+/// `m & veto == 0` — the LG dense-mode candidate scan over the
+/// embedding-adjacency array (vectorized 8 masks per compare on AVX2).
+pub fn mask_filter_into(masks: &[u32], base: u32, want: u32, veto: u32, out: &mut Vec<u32>) {
+    dispatch::note_mask_filter();
+    #[cfg(target_arch = "x86_64")]
+    if simd_level() == SimdLevel::Avx2 && masks.len() >= 16 {
+        // SAFETY: AVX2 support verified by runtime detection.
+        return unsafe { x86::mask_filter_avx2(masks, base, want, veto, out) };
+    }
+    for (k, &m) in masks.iter().enumerate() {
+        if m & want == want && m & veto == 0 {
+            // wrapping, matching the AVX2 kernel's id arithmetic, so the
+            // two paths agree on every input
+            out.push(base.wrapping_add(k as u32));
+        }
+    }
+}
+
+/// Gather `codes[key]` for every key and append the keys whose code `c`
+/// satisfies `c & want == want && c & veto == 0` (input order kept) —
+/// the MNC dense-mode connectivity filter (AVX2 `vpgatherdd` when
+/// available). Keys must index into `codes`; out-of-range keys panic
+/// exactly as slice indexing does.
+pub fn gather_mask_filter_into(
+    codes: &[u32],
+    keys: &[VertexId],
+    want: u32,
+    veto: u32,
+    out: &mut Vec<VertexId>,
+) {
+    dispatch::note_gather_filter();
+    #[cfg(target_arch = "x86_64")]
+    if simd_level() == SimdLevel::Avx2 && keys.len() >= 16 {
+        // SAFETY: AVX2 support verified by runtime detection; the
+        // kernel bounds-checks each block before gathering.
+        return unsafe { x86::gather_filter_avx2(codes, keys, want, veto, out) };
+    }
+    for &u in keys {
+        let c = codes[u as usize];
+        if c & want == want && c & veto == 0 {
+            out.push(u);
+        }
+    }
 }
 
 /// Count elements of sorted `a` strictly less than `bound` (for symmetry
@@ -199,9 +452,15 @@ pub fn count_less_than(a: &[VertexId], bound: VertexId) -> usize {
     a.partition_point(|&x| x < bound)
 }
 
-/// Linear-merge intersection count (branch-light lockstep walk).
+// ---------------------------------------------------------------------------
+// Scalar reference kernels (also the SIMD tails and differential oracle)
+// ---------------------------------------------------------------------------
+
+/// Linear-merge intersection count (branch-light lockstep walk). Public
+/// as the scalar reference the SIMD kernels are differentially tested
+/// against; normal callers use the adaptive [`intersect_count`].
 #[inline]
-fn merge_count(a: &[VertexId], b: &[VertexId]) -> usize {
+pub fn merge_count(a: &[VertexId], b: &[VertexId]) -> usize {
     let (mut i, mut j, mut n) = (0, 0, 0);
     while i < a.len() && j < b.len() {
         let (x, y) = (a[i], b[j]);
@@ -212,9 +471,11 @@ fn merge_count(a: &[VertexId], b: &[VertexId]) -> usize {
     n
 }
 
-/// Linear-merge intersection appended to `out`.
+/// Linear-merge intersection appended to `out`. Public as the scalar
+/// reference for differential tests; normal callers use the adaptive
+/// [`intersect_into`].
 #[inline]
-fn merge_into(a: &[VertexId], b: &[VertexId], out: &mut Vec<VertexId>) {
+pub fn merge_into(a: &[VertexId], b: &[VertexId], out: &mut Vec<VertexId>) {
     let (mut i, mut j) = (0, 0);
     while i < a.len() && j < b.len() {
         let (x, y) = (a[i], b[j]);
@@ -263,6 +524,334 @@ fn gallop_into(a: &[VertexId], b: &[VertexId], out: &mut Vec<VertexId>) {
         }
         if lo >= b.len() {
             break;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// x86_64 kernels (runtime-dispatched; every function has a scalar twin)
+// ---------------------------------------------------------------------------
+
+/// `std::arch` x86_64 kernels. All functions are `unsafe` because they
+/// require the CPU feature named in their `#[target_feature]`; the safe
+/// dispatchers above verify it at runtime before calling. Block-merge
+/// correctness rests on the module-wide contract (sorted, duplicate-free
+/// inputs): comparing one block of each list all-pairs and advancing the
+/// block with the smaller maximum visits every equal pair exactly once.
+#[cfg(target_arch = "x86_64")]
+#[allow(clippy::uninit_vec)] // spare capacity is written via `storeu` before every `set_len`
+mod x86 {
+    use std::arch::x86_64::*;
+
+    /// Shuffle-control LUT for SSE lane compaction: entry `m` moves the
+    /// 32-bit lanes whose bit is set in `m` to the front, in order
+    /// (0x80 bytes zero the rest, which `set_len` never exposes).
+    const fn sse_compact_table() -> [[u8; 16]; 16] {
+        let mut t = [[0x80u8; 16]; 16];
+        let mut m = 0usize;
+        while m < 16 {
+            let mut out = 0usize;
+            let mut lane = 0usize;
+            while lane < 4 {
+                if m & (1 << lane) != 0 {
+                    let mut b = 0usize;
+                    while b < 4 {
+                        t[m][out * 4 + b] = (lane * 4 + b) as u8;
+                        b += 1;
+                    }
+                    out += 1;
+                }
+                lane += 1;
+            }
+            m += 1;
+        }
+        t
+    }
+    static SSE_COMPACT: [[u8; 16]; 16] = sse_compact_table();
+
+    /// Permute-index LUT for AVX2 lane compaction: entry `m` lists the
+    /// set-bit lane indices of `m` first (tail lanes are ignored —
+    /// `set_len` only advances by popcount(m)).
+    const fn avx2_compact_table() -> [[u32; 8]; 256] {
+        let mut t = [[0u32; 8]; 256];
+        let mut m = 0usize;
+        while m < 256 {
+            let mut out = 0usize;
+            let mut lane = 0usize;
+            while lane < 8 {
+                if m & (1 << lane) != 0 {
+                    t[m][out] = lane as u32;
+                    out += 1;
+                }
+                lane += 1;
+            }
+            m += 1;
+        }
+        t
+    }
+    static AVX2_COMPACT: [[u32; 8]; 256] = avx2_compact_table();
+
+    /// Lane-rotation index vectors for the AVX2 all-pairs compare:
+    /// row r-1 rotates the block left by r lanes.
+    static AVX2_ROTATIONS: [[i32; 8]; 7] = [
+        [1, 2, 3, 4, 5, 6, 7, 0],
+        [2, 3, 4, 5, 6, 7, 0, 1],
+        [3, 4, 5, 6, 7, 0, 1, 2],
+        [4, 5, 6, 7, 0, 1, 2, 3],
+        [5, 6, 7, 0, 1, 2, 3, 4],
+        [6, 7, 0, 1, 2, 3, 4, 5],
+        [7, 0, 1, 2, 3, 4, 5, 6],
+    ];
+
+    /// Bitmask of `va` lanes equal to any lane of `vb` (4-lane blocks;
+    /// three 32-bit rotations cover all pairs).
+    #[inline]
+    #[target_feature(enable = "ssse3")]
+    unsafe fn sse_match_mask(va: __m128i, vb: __m128i) -> u32 {
+        let c0 = _mm_cmpeq_epi32(va, vb);
+        let c1 = _mm_cmpeq_epi32(va, _mm_shuffle_epi32::<0b00_11_10_01>(vb));
+        let c2 = _mm_cmpeq_epi32(va, _mm_shuffle_epi32::<0b01_00_11_10>(vb));
+        let c3 = _mm_cmpeq_epi32(va, _mm_shuffle_epi32::<0b10_01_00_11>(vb));
+        let any = _mm_or_si128(_mm_or_si128(c0, c1), _mm_or_si128(c2, c3));
+        _mm_movemask_ps(_mm_castsi128_ps(any)) as u32
+    }
+
+    /// SSE block-merge intersection count; scalar merge finishes the
+    /// ragged tails.
+    ///
+    /// # Safety
+    /// The CPU must support SSSE3 (runtime-checked by the dispatcher).
+    #[target_feature(enable = "ssse3")]
+    pub unsafe fn intersect_count_sse(a: &[u32], b: &[u32]) -> usize {
+        let (mut i, mut j, mut n) = (0usize, 0usize, 0usize);
+        let a4 = a.len() & !3;
+        let b4 = b.len() & !3;
+        while i < a4 && j < b4 {
+            let va = _mm_loadu_si128(a.as_ptr().add(i) as *const __m128i);
+            let vb = _mm_loadu_si128(b.as_ptr().add(j) as *const __m128i);
+            n += sse_match_mask(va, vb).count_ones() as usize;
+            let a_max = *a.get_unchecked(i + 3);
+            let b_max = *b.get_unchecked(j + 3);
+            i += ((a_max <= b_max) as usize) << 2;
+            j += ((b_max <= a_max) as usize) << 2;
+        }
+        n + super::merge_count(&a[i..], &b[j..])
+    }
+
+    /// SSE block-merge intersection appended to `out` (shuffle-LUT lane
+    /// compaction); scalar merge finishes the ragged tails.
+    ///
+    /// # Safety
+    /// The CPU must support SSSE3 (runtime-checked by the dispatcher).
+    #[target_feature(enable = "ssse3")]
+    pub unsafe fn intersect_into_sse(a: &[u32], b: &[u32], out: &mut Vec<u32>) {
+        let (mut i, mut j) = (0usize, 0usize);
+        let a4 = a.len() & !3;
+        let b4 = b.len() & !3;
+        while i < a4 && j < b4 {
+            let va = _mm_loadu_si128(a.as_ptr().add(i) as *const __m128i);
+            let vb = _mm_loadu_si128(b.as_ptr().add(j) as *const __m128i);
+            let mask = sse_match_mask(va, vb);
+            if mask != 0 {
+                let shuf = _mm_loadu_si128(SSE_COMPACT[mask as usize].as_ptr() as *const __m128i);
+                let packed = _mm_shuffle_epi8(va, shuf);
+                out.reserve(4);
+                let len = out.len();
+                _mm_storeu_si128(out.as_mut_ptr().add(len) as *mut __m128i, packed);
+                out.set_len(len + mask.count_ones() as usize);
+            }
+            let a_max = *a.get_unchecked(i + 3);
+            let b_max = *b.get_unchecked(j + 3);
+            i += ((a_max <= b_max) as usize) << 2;
+            j += ((b_max <= a_max) as usize) << 2;
+        }
+        super::merge_into(&a[i..], &b[j..], out);
+    }
+
+    /// Bitmask of `va` lanes equal to any lane of `vb` (8-lane blocks;
+    /// seven cross-lane rotations cover all pairs).
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn avx2_match_mask(va: __m256i, vb: __m256i) -> u32 {
+        let mut any = _mm256_cmpeq_epi32(va, vb);
+        for rot in &AVX2_ROTATIONS {
+            let idx = _mm256_loadu_si256(rot.as_ptr() as *const __m256i);
+            let rotated = _mm256_permutevar8x32_epi32(vb, idx);
+            any = _mm256_or_si256(any, _mm256_cmpeq_epi32(va, rotated));
+        }
+        _mm256_movemask_ps(_mm256_castsi256_ps(any)) as u32
+    }
+
+    /// AVX2 block-merge intersection count; scalar merge finishes the
+    /// ragged tails.
+    ///
+    /// # Safety
+    /// The CPU must support AVX2 (runtime-checked by the dispatcher).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn intersect_count_avx2(a: &[u32], b: &[u32]) -> usize {
+        let (mut i, mut j, mut n) = (0usize, 0usize, 0usize);
+        let a8 = a.len() & !7;
+        let b8 = b.len() & !7;
+        while i < a8 && j < b8 {
+            let va = _mm256_loadu_si256(a.as_ptr().add(i) as *const __m256i);
+            let vb = _mm256_loadu_si256(b.as_ptr().add(j) as *const __m256i);
+            n += avx2_match_mask(va, vb).count_ones() as usize;
+            let a_max = *a.get_unchecked(i + 7);
+            let b_max = *b.get_unchecked(j + 7);
+            i += ((a_max <= b_max) as usize) << 3;
+            j += ((b_max <= a_max) as usize) << 3;
+        }
+        n + super::merge_count(&a[i..], &b[j..])
+    }
+
+    /// AVX2 block-merge intersection appended to `out` (permute-LUT
+    /// lane compaction); scalar merge finishes the ragged tails.
+    ///
+    /// # Safety
+    /// The CPU must support AVX2 (runtime-checked by the dispatcher).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn intersect_into_avx2(a: &[u32], b: &[u32], out: &mut Vec<u32>) {
+        let (mut i, mut j) = (0usize, 0usize);
+        let a8 = a.len() & !7;
+        let b8 = b.len() & !7;
+        while i < a8 && j < b8 {
+            let va = _mm256_loadu_si256(a.as_ptr().add(i) as *const __m256i);
+            let vb = _mm256_loadu_si256(b.as_ptr().add(j) as *const __m256i);
+            let mask = avx2_match_mask(va, vb);
+            if mask != 0 {
+                let idx =
+                    _mm256_loadu_si256(AVX2_COMPACT[mask as usize].as_ptr() as *const __m256i);
+                let packed = _mm256_permutevar8x32_epi32(va, idx);
+                out.reserve(8);
+                let len = out.len();
+                _mm256_storeu_si256(out.as_mut_ptr().add(len) as *mut __m256i, packed);
+                out.set_len(len + mask.count_ones() as usize);
+            }
+            let a_max = *a.get_unchecked(i + 7);
+            let b_max = *b.get_unchecked(j + 7);
+            i += ((a_max <= b_max) as usize) << 3;
+            j += ((b_max <= a_max) as usize) << 3;
+        }
+        super::merge_into(&a[i..], &b[j..], out);
+    }
+
+    /// AND + hardware popcount over word pairs.
+    ///
+    /// # Safety
+    /// The CPU must support POPCNT (runtime-checked by the dispatcher).
+    #[target_feature(enable = "popcnt")]
+    pub unsafe fn words_and_count_popcnt(a: &[u64], b: &[u64]) -> usize {
+        a.iter()
+            .zip(b.iter())
+            .map(|(&x, &y)| (x & y).count_ones() as usize)
+            .sum()
+    }
+
+    /// AVX2 mask-range scan: 8 constraint tests per compare, matched
+    /// indices compacted through the permute LUT.
+    ///
+    /// # Safety
+    /// The CPU must support AVX2 (runtime-checked by the dispatcher).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn mask_filter_avx2(
+        masks: &[u32],
+        base: u32,
+        want: u32,
+        veto: u32,
+        out: &mut Vec<u32>,
+    ) {
+        let vwant = _mm256_set1_epi32(want as i32);
+        let vveto = _mm256_set1_epi32(veto as i32);
+        let vzero = _mm256_setzero_si256();
+        let lanes = _mm256_setr_epi32(0, 1, 2, 3, 4, 5, 6, 7);
+        let n8 = masks.len() & !7;
+        let mut k = 0usize;
+        while k < n8 {
+            let vm = _mm256_loadu_si256(masks.as_ptr().add(k) as *const __m256i);
+            let adj_ok = _mm256_cmpeq_epi32(_mm256_and_si256(vm, vwant), vwant);
+            let veto_ok = _mm256_cmpeq_epi32(_mm256_and_si256(vm, vveto), vzero);
+            let ok = _mm256_and_si256(adj_ok, veto_ok);
+            let mask = _mm256_movemask_ps(_mm256_castsi256_ps(ok)) as u32;
+            if mask != 0 {
+                let ids = _mm256_add_epi32(
+                    _mm256_set1_epi32(base.wrapping_add(k as u32) as i32),
+                    lanes,
+                );
+                let idx =
+                    _mm256_loadu_si256(AVX2_COMPACT[mask as usize].as_ptr() as *const __m256i);
+                let packed = _mm256_permutevar8x32_epi32(ids, idx);
+                out.reserve(8);
+                let len = out.len();
+                _mm256_storeu_si256(out.as_mut_ptr().add(len) as *mut __m256i, packed);
+                out.set_len(len + mask.count_ones() as usize);
+            }
+            k += 8;
+        }
+        for (k2, &m) in masks.iter().enumerate().skip(n8) {
+            if m & want == want && m & veto == 0 {
+                out.push(base.wrapping_add(k2 as u32));
+            }
+        }
+    }
+
+    /// AVX2 gathered code filter: `vpgatherdd` fetches 8 codes per
+    /// block; a block with any out-of-range key falls back to the
+    /// bounds-checked scalar loop (panics exactly like slice indexing).
+    ///
+    /// # Safety
+    /// The CPU must support AVX2 (runtime-checked by the dispatcher).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn gather_filter_avx2(
+        codes: &[u32],
+        keys: &[u32],
+        want: u32,
+        veto: u32,
+        out: &mut Vec<u32>,
+    ) {
+        let vwant = _mm256_set1_epi32(want as i32);
+        let vveto = _mm256_set1_epi32(veto as i32);
+        let vzero = _mm256_setzero_si256();
+        let vlen = _mm256_set1_epi32(codes.len().min(i32::MAX as usize) as i32);
+        let vneg1 = _mm256_set1_epi32(-1);
+        let n8 = keys.len() & !7;
+        let mut k = 0usize;
+        while k < n8 {
+            let vkeys = _mm256_loadu_si256(keys.as_ptr().add(k) as *const __m256i);
+            // in-bounds check per block: 0 <= key < codes.len() as i32
+            let below = _mm256_cmpgt_epi32(vlen, vkeys);
+            let nonneg = _mm256_cmpgt_epi32(vkeys, vneg1);
+            let inb = _mm256_and_si256(below, nonneg);
+            if _mm256_movemask_ps(_mm256_castsi256_ps(inb)) as u32 != 0xFF {
+                for &u in &keys[k..k + 8] {
+                    let c = codes[u as usize];
+                    if c & want == want && c & veto == 0 {
+                        out.push(u);
+                    }
+                }
+                k += 8;
+                continue;
+            }
+            let vcodes = _mm256_i32gather_epi32::<4>(codes.as_ptr() as *const i32, vkeys);
+            let adj_ok = _mm256_cmpeq_epi32(_mm256_and_si256(vcodes, vwant), vwant);
+            let veto_ok = _mm256_cmpeq_epi32(_mm256_and_si256(vcodes, vveto), vzero);
+            let ok = _mm256_and_si256(adj_ok, veto_ok);
+            let mask = _mm256_movemask_ps(_mm256_castsi256_ps(ok)) as u32;
+            if mask != 0 {
+                let idx =
+                    _mm256_loadu_si256(AVX2_COMPACT[mask as usize].as_ptr() as *const __m256i);
+                let packed = _mm256_permutevar8x32_epi32(vkeys, idx);
+                out.reserve(8);
+                let len = out.len();
+                _mm256_storeu_si256(out.as_mut_ptr().add(len) as *mut __m256i, packed);
+                out.set_len(len + mask.count_ones() as usize);
+            }
+            k += 8;
+        }
+        for &u in &keys[n8..] {
+            let c = codes[u as usize];
+            if c & want == want && c & veto == 0 {
+                out.push(u);
+            }
         }
     }
 }
@@ -388,6 +977,93 @@ mod tests {
         assert_eq!(intersect_words_count(x.words(), y.words()), 3);
         assert_eq!(intersect_words_count(x.words(), x.words()), 5);
         assert_eq!(intersect_words_count(&[], y.words()), 0);
+    }
+
+    #[test]
+    fn and_words_decodes_sorted_survivors() {
+        let mut x = BitSet::new(300);
+        let mut y = BitSet::new(300);
+        for i in [1usize, 64, 65, 130, 299] {
+            x.insert(i);
+        }
+        for i in [1usize, 65, 131, 299] {
+            y.insert(i);
+        }
+        let mut got: Vec<u32> = Vec::new();
+        and_words_into(x.words(), y.words(), &mut got);
+        assert_eq!(got, vec![1, 65, 299]);
+        got.clear();
+        and_words_into(&[], y.words(), &mut got);
+        assert!(got.is_empty());
+    }
+
+    #[test]
+    fn simd_merge_matches_scalar_reference_when_available() {
+        // exercised regardless of host CPU: the dispatcher falls back
+        // to the scalar kernels when no vector feature is detected
+        let a: Vec<u32> = (0..200).step_by(3).collect();
+        let b: Vec<u32> = (0..200).step_by(2).collect();
+        assert!(a.len() >= SIMD_MIN_LEN && b.len() >= SIMD_MIN_LEN);
+        assert_eq!(intersect_count(&a, &b), merge_count(&a, &b));
+        let mut got = Vec::new();
+        intersect_into(&a, &b, &mut got);
+        let mut want = Vec::new();
+        merge_into(&a, &b, &mut want);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn mask_filter_matches_scalar_loop() {
+        let masks: Vec<u32> = (0..100u32).map(|k| k % 8).collect();
+        let (want_bits, veto_bits) = (0b001u32, 0b100u32);
+        let mut got = Vec::new();
+        mask_filter_into(&masks, 10, want_bits, veto_bits, &mut got);
+        let want: Vec<u32> = masks
+            .iter()
+            .enumerate()
+            .filter(|(_, &m)| m & want_bits == want_bits && m & veto_bits == 0)
+            .map(|(k, _)| 10 + k as u32)
+            .collect();
+        assert_eq!(got, want);
+        // empty range
+        got.clear();
+        mask_filter_into(&[], 0, 1, 0, &mut got);
+        assert!(got.is_empty());
+    }
+
+    #[test]
+    fn gather_filter_matches_scalar_loop() {
+        let codes: Vec<u32> = (0..256u32).map(|k| (k * 7) % 16).collect();
+        let keys: Vec<u32> = (0..256).step_by(3).collect();
+        let (want_bits, veto_bits) = (0b0010u32, 0b1000u32);
+        let mut got = Vec::new();
+        gather_mask_filter_into(&codes, &keys, want_bits, veto_bits, &mut got);
+        let want: Vec<u32> = keys
+            .iter()
+            .copied()
+            .filter(|&u| {
+                let c = codes[u as usize];
+                c & want_bits == want_bits && c & veto_bits == 0
+            })
+            .collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn simd_mode_reports_consistently() {
+        // whatever the host supports, level and name must agree, and the
+        // kill switch must force (and then release) the scalar level
+        let detected = simd_level();
+        match detected {
+            SimdLevel::Avx2 => assert_eq!(simd_level_name(), "avx2"),
+            SimdLevel::Sse => assert_eq!(simd_level_name(), "ssse3"),
+            SimdLevel::Scalar => assert_eq!(simd_level_name(), "scalar"),
+        }
+        set_simd_enabled(false);
+        assert_eq!(simd_level(), SimdLevel::Scalar);
+        assert!(!simd_active());
+        set_simd_enabled(true);
+        assert_eq!(simd_level(), detected);
     }
 
     #[test]

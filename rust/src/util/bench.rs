@@ -19,12 +19,21 @@
 //! * `cargo bench --bench table5_tc` / `--bench table6_kcl` (sampled,
 //!   release), which overwrite the same sections with better numbers.
 //!
+//! The same two writers also maintain the PR-3 sections (`pr3-tc`,
+//! `pr3-kcl4`, via [`Pr3Section::write`]): the set-centric
+//! configuration run twice *in the same process* — once with
+//! `setops::set_simd_enabled(false)` (portable scalar kernels) and
+//! once with runtime feature detection — so the rows differ only in
+//! kernel dispatch, which the writers verify through the
+//! [`crate::util::metrics::dispatch`] counters.
+//!
 //! Writers must assert their differential check (scalar count ==
-//! set-centric count) *before* recording times, so a committed
-//! artifact always describes an agreeing build. Sections are upserted
-//! individually — regenerating one bench never clobbers another's
-//! section. The meta block ([`pr1_meta`]) records threads, dev vs
-//! release, and the exact regeneration commands.
+//! set-centric count, scalar-kernel count == SIMD-kernel count)
+//! *before* recording times, so a committed artifact always describes
+//! an agreeing build. Sections are upserted individually —
+//! regenerating one bench never clobbers another's section. The meta
+//! block ([`pr1_meta`]) records threads, dev vs release, and the exact
+//! regeneration commands.
 
 use std::time::Instant;
 
@@ -262,7 +271,8 @@ pub fn pr1_meta(threads: usize) -> Json {
         .str("build", if cfg!(debug_assertions) { "dev" } else { "release" })
         .str(
             "regenerate",
-            "cargo test -q (smoke) or cargo bench --bench table5_tc / table6_kcl (sampled)",
+            "cargo test -q (smoke) or cargo bench --bench table5_tc / table6_kcl (sampled); \
+             pr3-* sections compare the scalar vs SIMD kernel dispatch from the same run",
         )
 }
 
@@ -305,6 +315,116 @@ impl Pr1Section<'_> {
         }
         let body = body
             .num("speedup_set_over_scalar", self.speedup())
+            .int("samples", self.samples as u64);
+        upsert_bench_section(&pr1_report_path(), &pr1_meta(threads), section, &body)
+    }
+}
+
+/// One measured scalar-kernels vs SIMD-kernels comparison
+/// (EXPERIMENTS.md §PR-3), as recorded in a `pr3-*` report section:
+/// the same set-centric configuration with vectorization force-disabled
+/// and re-enabled from the same process, so the rows differ only in
+/// kernel dispatch. Shared by the benches and the tier-1 smoke test so
+/// the JSON schema cannot drift between writers.
+pub struct Pr3Section<'a> {
+    /// Input description (generator + parameters).
+    pub graph: &'a str,
+    /// Pattern name.
+    pub pattern: &'a str,
+    /// Agreed embedding count (differential check across kernel levels).
+    pub count: u64,
+    /// Detected dispatch level of the vectorized rows
+    /// (`"avx2"` / `"ssse3"` / `"scalar"`).
+    pub simd: &'a str,
+    /// Wall time with the portable scalar kernels (seconds).
+    pub scalar_secs: f64,
+    /// Wall time with the vectorized kernels (seconds).
+    pub simd_secs: f64,
+    /// Number of timing samples behind the figures.
+    pub samples: usize,
+}
+
+/// Run the §PR-3 scalar-vs-SIMD measurement protocol once and return
+/// the section row — the *single* implementation shared by the tier-1
+/// smoke test and the `table5_tc`/`table6_kcl`/`fig9_local_graph`
+/// benches so the run-toggle-assert sequence cannot drift between
+/// writers:
+///
+/// 1. with dispatch counting **off** (so neither phase pays counter
+///    overhead and the two timings are comparable), force the portable
+///    scalar kernels and call `timed_run` (which must return the
+///    embedding count and the wall seconds to record), then re-enable
+///    runtime dispatch and call it again;
+/// 2. assert both runs agree on the count;
+/// 3. re-check selection on a separate, *untimed* `check_run` with
+///    counting on: when the host actually has a vector unit, the SIMD
+///    merge must have been *selected* (dispatch-counter delta), not
+///    merely available. `check_run` should be one cheap pass of the
+///    same workload — its wall time is never recorded.
+///
+/// The previous counting state is restored before returning.
+pub fn pr3_compare<'a>(
+    graph: &'a str,
+    pattern: &'a str,
+    samples: usize,
+    mut timed_run: impl FnMut() -> (u64, f64),
+    mut check_run: impl FnMut() -> u64,
+) -> Pr3Section<'a> {
+    use crate::graph::setops;
+    use crate::util::metrics::dispatch;
+    let counting_was = dispatch::enabled();
+    dispatch::set_enabled(false);
+    setops::set_simd_enabled(false);
+    let (scalar_count, scalar_secs) = timed_run();
+    setops::set_simd_enabled(true);
+    let (simd_count, simd_secs) = timed_run();
+    assert_eq!(
+        scalar_count, simd_count,
+        "scalar vs SIMD kernels disagree on {graph} / {pattern}"
+    );
+    dispatch::set_enabled(true);
+    let before = dispatch::snapshot();
+    let check_count = check_run();
+    let after = dispatch::snapshot();
+    dispatch::set_enabled(counting_was);
+    assert_eq!(
+        check_count, simd_count,
+        "selection-check run disagrees on {graph} / {pattern}"
+    );
+    if setops::simd_active() {
+        assert!(
+            after.simd_merge > before.simd_merge,
+            "SIMD merge available ({}) but never selected on {pattern}",
+            setops::simd_level_name()
+        );
+    }
+    Pr3Section {
+        graph,
+        pattern,
+        count: simd_count,
+        simd: setops::simd_level_name(),
+        scalar_secs,
+        simd_secs,
+        samples,
+    }
+}
+
+impl Pr3Section<'_> {
+    /// Scalar-kernels-over-SIMD-kernels speedup.
+    pub fn speedup(&self) -> f64 {
+        self.scalar_secs / self.simd_secs
+    }
+
+    /// Upsert this section into the shared report at the repo root.
+    pub fn write(&self, section: &str, threads: usize) -> std::io::Result<()> {
+        let body = Json::new()
+            .str("graph", self.graph)
+            .str("pattern", self.pattern)
+            .int("count", self.count)
+            .str("simd_level", self.simd)
+            .num("scalar_kernel_secs", self.scalar_secs)
+            .num("simd_kernel_secs", self.simd_secs)
+            .num("speedup_simd_over_scalar", self.speedup())
             .int("samples", self.samples as u64);
         upsert_bench_section(&pr1_report_path(), &pr1_meta(threads), section, &body)
     }

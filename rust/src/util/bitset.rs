@@ -3,21 +3,47 @@
 //! Used for visited sets during search, k-core peeling, MNI domains, and
 //! dense-tile extraction. Clearing tracks touched words so repeated use
 //! inside the DFS hot loop is O(touched), not O(capacity).
+//!
+//! Touched-word tracking is deduplicated with a per-word epoch stamp:
+//! a word enters `touched` at most once per clear cycle, so
+//! insert→remove→insert hammering on one word can never grow the list
+//! past the word count (the PR-3 bugfix — previously `insert` re-pushed
+//! any currently-zero word, so `touched` grew without bound and the
+//! "sparse" clear could walk a list longer than the bitset itself).
+//! `remove` never untracks: a word stays tracked until the next clear,
+//! which is what makes the dedupe invariant (`touched.len() <=
+//! words.len()`) hold unconditionally.
 
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 /// Fixed-capacity bitset with O(touched) clearing.
 pub struct BitSet {
     words: Vec<u64>,
     /// Indices of words that may be non-zero (for sparse clearing).
+    /// Deduplicated: a word appears at most once per clear cycle.
     touched: Vec<u32>,
+    /// `stamp[w] == epoch` ⇔ word `w` is already in `touched`.
+    stamp: Vec<u32>,
+    /// Current clear cycle; bumped by `clear`/`clear_all` so stamps
+    /// invalidate in O(1) instead of being rewritten.
+    epoch: u32,
+}
+
+impl Default for BitSet {
+    fn default() -> Self {
+        Self::new(0)
+    }
 }
 
 impl BitSet {
     /// All-zero bitset able to hold indices < `capacity` (rounded up).
     pub fn new(capacity: usize) -> Self {
+        let nwords = capacity.div_ceil(64);
         Self {
-            words: vec![0; capacity.div_ceil(64)],
+            words: vec![0; nwords],
             touched: Vec::new(),
+            stamp: vec![0; nwords],
+            // stamps start at 0, so the epoch must start elsewhere
+            epoch: 1,
         }
     }
 
@@ -31,14 +57,17 @@ impl BitSet {
     /// Set bit `i`.
     pub fn insert(&mut self, i: usize) {
         let w = i / 64;
-        if self.words[w] == 0 {
+        if self.stamp[w] != self.epoch {
+            self.stamp[w] = self.epoch;
             self.touched.push(w as u32);
         }
         self.words[w] |= 1u64 << (i % 64);
     }
 
     #[inline]
-    /// Clear bit `i`.
+    /// Clear bit `i`. The word stays tracked (see the module docs): it
+    /// will be re-zeroed (a no-op) at the next clear rather than risk a
+    /// duplicate `touched` entry if re-inserted first.
     pub fn remove(&mut self, i: usize) {
         self.words[i / 64] &= !(1u64 << (i % 64));
     }
@@ -62,12 +91,24 @@ impl BitSet {
             self.words[w as usize] = 0;
         }
         self.touched.clear();
+        self.advance_epoch();
     }
 
     /// Full O(capacity) clear (use after bulk ops that bypass `insert`).
     pub fn clear_all(&mut self) {
         self.words.iter_mut().for_each(|w| *w = 0);
         self.touched.clear();
+        self.advance_epoch();
+    }
+
+    /// Start the next clear cycle; on (u32) wraparound the stamps are
+    /// rewritten so a stale stamp can never collide with a live epoch.
+    fn advance_epoch(&mut self) {
+        self.epoch = self.epoch.wrapping_add(1);
+        if self.epoch == 0 {
+            self.stamp.iter_mut().for_each(|s| *s = 0);
+            self.epoch = 1;
+        }
     }
 
     /// Number of set bits.
@@ -130,5 +171,76 @@ mod tests {
             b.insert(i);
         }
         assert_eq!(b.iter_ones().collect::<Vec<_>>(), vec![7, 64, 65, 255]);
+    }
+
+    #[test]
+    fn insert_remove_cycles_keep_touched_bounded() {
+        // regression for the PR-3 bugfix: insert → remove → insert on
+        // the same word used to append a duplicate touched entry each
+        // cycle, growing the list without bound
+        let mut b = BitSet::new(512);
+        for round in 0..10_000usize {
+            let i = (round * 7) % 512;
+            b.insert(i);
+            b.remove(i);
+            b.insert(i);
+            assert!(
+                b.touched.len() <= b.words.len(),
+                "touched overflowed at round {round}: {} > {}",
+                b.touched.len(),
+                b.words.len()
+            );
+        }
+        // the dedupe must not break sparse clearing
+        b.clear();
+        assert_eq!(b.count_ones(), 0);
+        assert!(b.touched.is_empty());
+        // and the next cycle re-tracks from scratch
+        b.insert(100);
+        assert_eq!(b.touched.len(), 1);
+        b.clear();
+        assert_eq!(b.count_ones(), 0);
+    }
+
+    #[test]
+    fn remove_keeps_word_tracked_until_clear() {
+        let mut b = BitSet::new(128);
+        b.insert(3);
+        b.remove(3); // word 0 now zero but still tracked
+        b.insert(70);
+        assert_eq!(b.touched.len(), 2);
+        b.insert(5); // same word as 3: must not re-track
+        assert_eq!(b.touched.len(), 2);
+        b.clear();
+        assert!(!b.contains(5) && !b.contains(70));
+        assert!(b.touched.is_empty());
+    }
+
+    #[test]
+    fn clear_all_resets_tracking_too() {
+        let mut b = BitSet::new(256);
+        b.insert(1);
+        b.insert(200);
+        b.clear_all();
+        assert_eq!(b.count_ones(), 0);
+        b.insert(1);
+        assert_eq!(b.touched.len(), 1);
+        b.clear();
+        assert_eq!(b.count_ones(), 0);
+    }
+
+    #[test]
+    fn epoch_wraparound_rewrites_stamps() {
+        let mut b = BitSet::new(64);
+        b.epoch = u32::MAX; // one clear away from wrapping
+        b.insert(0);
+        b.clear();
+        assert_eq!(b.epoch, 1);
+        assert!(b.stamp.iter().all(|&s| s == 0));
+        // tracking still works after the wrap
+        b.insert(7);
+        assert_eq!(b.touched.len(), 1);
+        b.clear();
+        assert_eq!(b.count_ones(), 0);
     }
 }

@@ -5,6 +5,128 @@
 //! figure. Counters are plain `u64` aggregated through the per-thread
 //! reduce path (no atomics in the hot loop).
 
+/// Kernel-dispatch counters for the adaptive set-operation layer
+/// ([`crate::graph::setops`]).
+///
+/// **Off by default**: the crate's counting design keeps atomics out of
+/// the mining hot loop (per-thread [`SearchStats`] merged at the end),
+/// and a process-global `fetch_add` per intersection would be a
+/// contended cross-core RMW under parallel mining. So each `note_*`
+/// call first reads one shared `AtomicBool` (read-only cache line, no
+/// contention) and returns unless counting was switched on with
+/// [`set_enabled`](dispatch::set_enabled). Tests and benches that
+/// assert dispatch selection enable counting around their runs; when
+/// enabled, it is one relaxed increment per *kernel invocation* (never
+/// per element), each counter padded to its own cache line. Counters
+/// are process-global and monotone: to attribute selections to a code
+/// region, take a [`snapshot`](dispatch::snapshot) before and after
+/// and compare (EXPERIMENTS.md §PR-3 uses exactly this to assert the
+/// SIMD path is actually chosen on the TC and k-CL benches).
+pub mod dispatch {
+    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+    static ENABLED: AtomicBool = AtomicBool::new(false);
+
+    /// Switch dispatch counting on or off (process-global; leave it on
+    /// for the rest of the process once a test enables it — deltas via
+    /// [`snapshot`] stay correct either way).
+    pub fn set_enabled(on: bool) {
+        ENABLED.store(on, Ordering::Relaxed);
+    }
+
+    /// Whether dispatch counting is currently on.
+    pub fn enabled() -> bool {
+        ENABLED.load(Ordering::Relaxed)
+    }
+
+    /// A counter alone on its cache line (no false sharing between the
+    /// kernel families).
+    #[repr(align(64))]
+    struct PaddedCounter(AtomicU64);
+
+    static MERGE: PaddedCounter = PaddedCounter(AtomicU64::new(0));
+    static GALLOP: PaddedCounter = PaddedCounter(AtomicU64::new(0));
+    static SIMD_MERGE: PaddedCounter = PaddedCounter(AtomicU64::new(0));
+    static WORD_PARALLEL: PaddedCounter = PaddedCounter(AtomicU64::new(0));
+    static MASK_FILTER: PaddedCounter = PaddedCounter(AtomicU64::new(0));
+    static GATHER_FILTER: PaddedCounter = PaddedCounter(AtomicU64::new(0));
+
+    /// Point-in-time copy of every dispatch counter.
+    #[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+    pub struct DispatchCounts {
+        /// Scalar lockstep merge intersections.
+        pub merge: u64,
+        /// Galloping (binary-search) intersections.
+        pub gallop: u64,
+        /// Vectorized (SSE/AVX2) block-merge intersections.
+        pub simd_merge: u64,
+        /// Word-parallel bitset AND / popcount kernels.
+        pub word_parallel: u64,
+        /// Embedding-adjacency mask range scans (LG dense mode).
+        pub mask_filter: u64,
+        /// Gathered connectivity-code filters (MNC dense mode).
+        pub gather_filter: u64,
+    }
+
+    /// Read all counters (relaxed loads: exact under quiescence,
+    /// monotone lower bounds under concurrency).
+    pub fn snapshot() -> DispatchCounts {
+        DispatchCounts {
+            merge: MERGE.0.load(Ordering::Relaxed),
+            gallop: GALLOP.0.load(Ordering::Relaxed),
+            simd_merge: SIMD_MERGE.0.load(Ordering::Relaxed),
+            word_parallel: WORD_PARALLEL.0.load(Ordering::Relaxed),
+            mask_filter: MASK_FILTER.0.load(Ordering::Relaxed),
+            gather_filter: GATHER_FILTER.0.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Zero every counter. Racy against concurrent miners — inside a
+    /// shared test binary prefer [`snapshot`] deltas instead.
+    pub fn reset() {
+        for c in [&MERGE, &GALLOP, &SIMD_MERGE, &WORD_PARALLEL, &MASK_FILTER, &GATHER_FILTER] {
+            c.0.store(0, Ordering::Relaxed);
+        }
+    }
+
+    #[inline]
+    pub(crate) fn note_merge() {
+        if enabled() {
+            MERGE.0.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+    #[inline]
+    pub(crate) fn note_gallop() {
+        if enabled() {
+            GALLOP.0.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+    #[inline]
+    pub(crate) fn note_simd_merge() {
+        if enabled() {
+            SIMD_MERGE.0.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+    #[inline]
+    pub(crate) fn note_word_parallel() {
+        if enabled() {
+            WORD_PARALLEL.0.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+    #[inline]
+    pub(crate) fn note_mask_filter() {
+        if enabled() {
+            MASK_FILTER.0.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+    #[inline]
+    pub(crate) fn note_gather_filter() {
+        if enabled() {
+            GATHER_FILTER.0.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
 #[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
 /// Search-space counters (kept per thread, merged at the end).
 pub struct SearchStats {
@@ -82,6 +204,25 @@ mod tests {
         assert_eq!(a.pruned, 33);
         assert_eq!(a.intersections, 44);
         assert_eq!(a.lg_vertices, 55);
+    }
+
+    #[test]
+    fn dispatch_counters_record_and_snapshot() {
+        dispatch::set_enabled(true);
+        let before = dispatch::snapshot();
+        dispatch::note_merge();
+        dispatch::note_gallop();
+        dispatch::note_simd_merge();
+        dispatch::note_word_parallel();
+        dispatch::note_mask_filter();
+        dispatch::note_gather_filter();
+        let after = dispatch::snapshot();
+        assert!(after.merge > before.merge);
+        assert!(after.gallop > before.gallop);
+        assert!(after.simd_merge > before.simd_merge);
+        assert!(after.word_parallel > before.word_parallel);
+        assert!(after.mask_filter > before.mask_filter);
+        assert!(after.gather_filter > before.gather_filter);
     }
 
     #[test]

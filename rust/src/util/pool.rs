@@ -9,16 +9,43 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-/// Number of worker threads to use (overridable via SANDSLASH_THREADS).
+/// Number of worker threads to use (overridable via `SANDSLASH_THREADS`).
+///
+/// An override that is set but unusable — unparsable or zero — is
+/// rejected *loudly* (one stderr warning per process) before falling
+/// back to all cores. Silently swallowing it made campaign runs report
+/// a thread count in BENCH metadata that was never actually applied.
 pub fn default_threads() -> usize {
     if let Ok(v) = std::env::var("SANDSLASH_THREADS") {
-        if let Ok(n) = v.parse::<usize>() {
-            if n > 0 {
-                return n;
+        match parse_thread_override(&v) {
+            Ok(n) => return n,
+            Err(why) => {
+                static WARN_ONCE: std::sync::Once = std::sync::Once::new();
+                WARN_ONCE.call_once(|| {
+                    eprintln!(
+                        "sandslash: ignoring SANDSLASH_THREADS={v:?} ({why}); \
+                         using all available cores"
+                    );
+                });
             }
         }
     }
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Parse a `SANDSLASH_THREADS` override: a positive integer,
+/// surrounding whitespace tolerated. The error names the reason for
+/// the one-shot stderr warning in [`default_threads`].
+fn parse_thread_override(raw: &str) -> Result<usize, &'static str> {
+    let trimmed = raw.trim();
+    if trimmed.is_empty() {
+        return Err("empty value");
+    }
+    match trimmed.parse::<usize>() {
+        Ok(0) => Err("thread count must be positive"),
+        Ok(n) => Ok(n),
+        Err(_) => Err("not an unsigned integer"),
+    }
 }
 
 /// Parallel for over `0..n`: each worker repeatedly claims `chunk` indices.
@@ -107,6 +134,23 @@ pub fn parallel_reduce<A: Send>(
 mod tests {
     use super::*;
     use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn thread_override_parse_paths() {
+        // valid values, with and without surrounding whitespace
+        assert_eq!(parse_thread_override("1"), Ok(1));
+        assert_eq!(parse_thread_override("8"), Ok(8));
+        assert_eq!(parse_thread_override(" 16 "), Ok(16));
+        // rejected: zero, garbage, negatives, empties, fractions
+        assert_eq!(parse_thread_override("0"), Err("thread count must be positive"));
+        assert_eq!(parse_thread_override(" 0 "), Err("thread count must be positive"));
+        assert_eq!(parse_thread_override(""), Err("empty value"));
+        assert_eq!(parse_thread_override("   "), Err("empty value"));
+        assert_eq!(parse_thread_override("abc"), Err("not an unsigned integer"));
+        assert_eq!(parse_thread_override("-4"), Err("not an unsigned integer"));
+        assert_eq!(parse_thread_override("2.5"), Err("not an unsigned integer"));
+        assert_eq!(parse_thread_override("8 cores"), Err("not an unsigned integer"));
+    }
 
     #[test]
     fn parallel_for_covers_all_indices_once() {

@@ -1,17 +1,21 @@
-//! Tier-1 smoke benchmark for the PR-1 set-centric extension work:
-//! every `cargo test` run (a) differentially checks the scalar and
-//! set-centric paths on RMAT(2^14) inputs at full scale and (b) rewrites
-//! `BENCH_pr1.json` at the repo root with single-shot wall times. The
-//! `table5_tc` / `table6_kcl` benches overwrite the same sections with
-//! properly sampled release numbers — this test just keeps the artifact
-//! alive and honest on every tier-1 run.
+//! Tier-1 smoke benchmark for the PR-1 set-centric extension work and
+//! the PR-3 SIMD kernel dispatch: every `cargo test` run (a)
+//! differentially checks the scalar and set-centric paths on RMAT(2^14)
+//! inputs at full scale, (b) re-runs the set-centric configuration with
+//! the vectorized kernels force-disabled and re-enabled — asserting via
+//! the dispatch counters that the SIMD merge is actually *selected* on
+//! the TC and k-CL workloads when the host supports it — and (c)
+//! rewrites `BENCH_pr1.json` at the repo root with single-shot wall
+//! times. The `table5_tc` / `table6_kcl` benches overwrite the same
+//! sections with properly sampled release numbers — this test just
+//! keeps the artifact alive and honest on every tier-1 run.
 
 use sandslash::engine::hooks::NoHooks;
 use sandslash::engine::{dfs, MinerConfig, OptFlags};
-use sandslash::graph::gen;
+use sandslash::graph::{gen, setops};
 use sandslash::graph::CsrGraph;
 use sandslash::pattern::{library, plan, Pattern};
-use sandslash::util::bench::{pr1_report_path, Pr1Section};
+use sandslash::util::bench::{pr1_report_path, pr3_compare, Pr1Section};
 use sandslash::util::timer::timed;
 
 fn measure_and_write(
@@ -49,6 +53,36 @@ fn measure_and_write(
     s.speedup()
 }
 
+/// PR-3 rows (§PR-3) through the shared protocol (`bench::pr3_compare`):
+/// the same set-centric run with the portable scalar kernels and with
+/// runtime SIMD dispatch, from the same process; count equality and
+/// SIMD-merge *selection* (dispatch-counter delta) asserted inside.
+fn measure_pr3(
+    g: &CsrGraph,
+    p: &Pattern,
+    graph_desc: &str,
+    pname: &str,
+    section: &str,
+) -> f64 {
+    let pl = plan(p, true, true);
+    let cfg = MinerConfig::new(OptFlags::hi());
+    let s = pr3_compare(
+        graph_desc,
+        pname,
+        1,
+        || {
+            let (count, _) = dfs::count(g, &pl, &cfg, &NoHooks); // warmup + count
+            let (_, secs) = timed(|| dfs::count(g, &pl, &cfg, &NoHooks).0);
+            (count, secs)
+        },
+        || dfs::count(g, &pl, &cfg, &NoHooks).0,
+    );
+    if let Err(e) = s.write(section, cfg.threads) {
+        eprintln!("skipping BENCH_pr1.json write: {e}");
+    }
+    s.speedup()
+}
+
 #[test]
 fn bench_pr1_smoke_regenerates_report() {
     let g_tc = gen::rmat(14, 8, 42, &[]);
@@ -67,9 +101,26 @@ fn bench_pr1_smoke_regenerates_report() {
         "4-clique",
         "kcl4",
     );
+    // PR-3: scalar vs SIMD kernel dispatch on the same two workloads
+    let tc_simd = measure_pr3(
+        &g_tc,
+        &library::triangle(),
+        "rmat scale=14 ef=8 seed=42",
+        "triangle",
+        "pr3-tc",
+    );
+    let cl_simd = measure_pr3(
+        &g_cl,
+        &library::clique(4),
+        "rmat scale=14 ef=4 seed=42",
+        "4-clique",
+        "pr3-kcl4",
+    );
     eprintln!(
         "BENCH_pr1 smoke: set-centric speedup over scalar — tc {tc_speedup:.2}x, \
-         4-clique {cl_speedup:.2}x ({})",
+         4-clique {cl_speedup:.2}x; {} kernels over scalar kernels — tc {tc_simd:.2}x, \
+         4-clique {cl_simd:.2}x ({})",
+        setops::simd_level_name(),
         pr1_report_path().display()
     );
 }

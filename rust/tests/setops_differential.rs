@@ -6,7 +6,13 @@
 //! 2. the set-centric DFS frontier against the scalar probe path (with
 //!    and without MNC) across the pattern library on random RMAT graphs
 //!    — the end-to-end guarantee that the kernel rewrite changes wall
-//!    time only, never counts.
+//!    time only, never counts; and
+//! 3. the PR-3 SIMD surface: the adaptive dispatch (which may select
+//!    the SSE/AVX2 kernels) against the portable scalar references, on
+//!    the shapes vectorized code breaks first — bound edge cases,
+//!    lengths straddling the vector width, unaligned slice starts — a
+//!    seeded fuzz loop over every new kernel family, and engine counts
+//!    invariant under the process-global SIMD kill switch.
 
 use sandslash::engine::hooks::NoHooks;
 use sandslash::engine::{dfs, MinerConfig, OptFlags};
@@ -84,6 +90,180 @@ fn kernels_match_naive_references_randomized() {
         let mut rem = a.clone();
         setops::retain_not_in_bitset(&mut rem, &bits);
         assert_eq!(rem, naive_difference(&a, &b), "case {case}");
+    }
+}
+
+// ---------- PR-3: SIMD kernel edge cases and scalar differentials ----------
+
+#[test]
+fn bounded_kernels_at_zero_and_past_max() {
+    // long enough that the SIMD block merge is eligible when available
+    let a: Vec<u32> = (0..120).map(|x| x * 3).collect();
+    let b: Vec<u32> = (0..120).map(|x| x * 2).collect();
+    // bound == 0: nothing survives, and the kernels must not be entered
+    // with nonsense slices
+    assert_eq!(setops::intersect_count_below(&a, &b, 0), 0);
+    let mut out = Vec::new();
+    setops::intersect_into_below(&a, &b, 0, &mut out);
+    assert!(out.is_empty());
+    // bound past the max element: identical to the unbounded kernel
+    let all = naive_intersect(&a, &b);
+    assert_eq!(setops::intersect_count_below(&a, &b, u32::MAX), all.len());
+    out.clear();
+    setops::intersect_into_below(&a, &b, u32::MAX, &mut out);
+    assert_eq!(out, all);
+    // bound exactly one past the max element
+    let past = a.last().unwrap().max(b.last().unwrap()) + 1;
+    assert_eq!(setops::intersect_count_below(&a, &b, past), all.len());
+}
+
+#[test]
+fn lengths_straddling_vector_width_and_unaligned_starts() {
+    // every length 0..=35 on one side crosses the SSE (4) and AVX2 (8)
+    // block widths and the SIMD_MIN_LEN dispatch threshold; offset
+    // sub-slices exercise unaligned loads
+    for la in 0..=35usize {
+        for lb in [0usize, 1, 3, 4, 7, 8, 9, 15, 16, 17, 31, 32, 33, 35] {
+            let a: Vec<u32> = (0..la as u32).map(|x| x * 3).collect();
+            let b: Vec<u32> = (0..lb as u32).map(|x| x * 2).collect();
+            let want = naive_intersect(&a, &b);
+            assert_eq!(setops::intersect_count(&a, &b), want.len(), "la={la} lb={lb}");
+            let mut got = Vec::new();
+            setops::intersect_into(&a, &b, &mut got);
+            assert_eq!(got, want, "la={la} lb={lb}");
+            for off_a in 0..a.len().min(4) {
+                for off_b in 0..b.len().min(4) {
+                    let (sa, sb) = (&a[off_a..], &b[off_b..]);
+                    let want = naive_intersect(sa, sb);
+                    assert_eq!(
+                        setops::intersect_count(sa, sb),
+                        want.len(),
+                        "la={la} lb={lb} off_a={off_a} off_b={off_b}"
+                    );
+                    got.clear();
+                    setops::intersect_into(sa, sb, &mut got);
+                    assert_eq!(got, want, "la={la} lb={lb} off_a={off_a} off_b={off_b}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn simd_vs_scalar_kernel_fuzz() {
+    // fixed seed per the util/rng.rs convention; every family of the
+    // PR-3 kernel surface against its scalar reference
+    let mut rng = Rng::seeded(0x51D3);
+    for case in 0..300u64 {
+        let (la, lb) = match case % 5 {
+            0 => (8u64, 8u64),
+            1 => (35, 35),
+            2 => (300, 300),
+            3 => (64, 1024),
+            _ => (1 + rng.below(200), 1 + rng.below(200)),
+        };
+        let a = rand_sorted(&mut rng, 4096, la);
+        let b = rand_sorted(&mut rng, 4096, lb);
+        // adaptive dispatch (may pick SSE/AVX2) vs the scalar merge
+        assert_eq!(
+            setops::intersect_count(&a, &b),
+            setops::merge_count(&a, &b),
+            "case {case}"
+        );
+        let mut got = Vec::new();
+        let mut want = Vec::new();
+        setops::intersect_into(&a, &b, &mut got);
+        setops::merge_into(&a, &b, &mut want);
+        assert_eq!(got, want, "case {case}");
+        // bounded variants at a random bound
+        let bound = rng.below(4096) as u32;
+        let want_below: Vec<u32> = want.iter().copied().filter(|&x| x < bound).collect();
+        assert_eq!(
+            setops::intersect_count_below(&a, &b, bound),
+            want_below.len(),
+            "case {case} bound {bound}"
+        );
+        got.clear();
+        setops::intersect_into_below(&a, &b, bound, &mut got);
+        assert_eq!(got, want_below, "case {case} bound {bound}");
+        // word-parallel AND(+popcount) vs the list kernels
+        let mut x = BitSet::new(4096);
+        let mut y = BitSet::new(4096);
+        for &v in &a {
+            x.insert(v as usize);
+        }
+        for &v in &b {
+            y.insert(v as usize);
+        }
+        assert_eq!(
+            setops::intersect_words_count(x.words(), y.words()),
+            want.len(),
+            "case {case}"
+        );
+        got.clear();
+        setops::and_words_into(x.words(), y.words(), &mut got);
+        assert_eq!(got, want, "case {case}");
+        // mask-range scan vs the scalar loop
+        let masks: Vec<u32> =
+            (0..rng.below(80)).map(|_| rng.next_u64() as u32 & 0xFF).collect();
+        let want_bits = rng.next_u64() as u32 & 0x7;
+        let veto_bits = rng.next_u64() as u32 & 0x30;
+        got.clear();
+        setops::mask_filter_into(&masks, 1000, want_bits, veto_bits, &mut got);
+        let want_masks: Vec<u32> = masks
+            .iter()
+            .enumerate()
+            .filter(|(_, &m)| m & want_bits == want_bits && m & veto_bits == 0)
+            .map(|(k, _)| 1000 + k as u32)
+            .collect();
+        assert_eq!(got, want_masks, "case {case}");
+        // gathered code filter vs the scalar loop
+        let codes: Vec<u32> = (0..512).map(|_| rng.next_u64() as u32 & 0xFF).collect();
+        let keys: Vec<u32> = (0..rng.below(64)).map(|_| rng.below(512) as u32).collect();
+        got.clear();
+        setops::gather_mask_filter_into(&codes, &keys, want_bits, veto_bits, &mut got);
+        let want_keys: Vec<u32> = keys
+            .iter()
+            .copied()
+            .filter(|&u| {
+                let c = codes[u as usize];
+                c & want_bits == want_bits && c & veto_bits == 0
+            })
+            .collect();
+        assert_eq!(got, want_keys, "case {case}");
+    }
+}
+
+#[test]
+fn engine_counts_invariant_under_simd_toggle() {
+    // `set_simd_enabled` is process-global; concurrent tests in this
+    // binary stay correct at either level (every kernel is exact), so
+    // this test asserts only count equality, never dispatch selection
+    for seed in [11u64, 22, 33] {
+        let g = gen::rmat(9, 6, seed, &[]);
+        for (name, p) in patterns() {
+            for vertex_induced in [true, false] {
+                setops::set_simd_enabled(false);
+                let scalar_kernels = count_with(&g, &p, vertex_induced, true, true, 2);
+                setops::set_simd_enabled(true);
+                let simd_kernels = count_with(&g, &p, vertex_induced, true, true, 2);
+                assert_eq!(
+                    scalar_kernels, simd_kernels,
+                    "seed={seed} {name} induced={vertex_induced}"
+                );
+            }
+        }
+        // and through the LG stage, whose dense mode rides the mask
+        // kernels
+        for p in [library::diamond(), library::clique(5)] {
+            let pl = plan(&p, true, true);
+            let lo = MinerConfig { threads: 2, chunk: 16, opts: OptFlags::lo() };
+            setops::set_simd_enabled(false);
+            let a = dfs::count(&g, &pl, &lo, &NoHooks).0;
+            setops::set_simd_enabled(true);
+            let b = dfs::count(&g, &pl, &lo, &NoHooks).0;
+            assert_eq!(a, b, "LG stage, seed={seed}");
+        }
     }
 }
 
