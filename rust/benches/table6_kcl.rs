@@ -9,7 +9,7 @@ use sandslash::engine::hooks::NoHooks;
 use sandslash::engine::{dfs, MinerConfig, OptFlags};
 use sandslash::graph::gen;
 use sandslash::pattern::{library, plan};
-use sandslash::util::bench::{pr1_report_path, pr3_compare, print_table, Bench, Pr1Section};
+use sandslash::util::bench::{pr1_report_path, pr3_compare, pr4_compare, print_table, Bench, Pr1Section};
 
 fn main() {
     let rows = campaign::table6(&["lj-tiny", "or-tiny", "fr-tiny"], &[4, 5]);
@@ -101,5 +101,51 @@ fn main() {
         eprintln!("could not write BENCH_pr1.json: {e}");
     } else {
         println!("wrote `pr3-kcl4` section of {}", pr1_report_path().display());
+    }
+
+    // ---- PR-4: global-cursor oracle vs work-stealing scheduler, same
+    // input, same run (shared protocol: count equality on the timed and
+    // the skewed two-hub inputs, plus steal/split counter movement,
+    // asserted inside bench::pr4_compare) ----
+    let skew = gen::two_hub(1 << 13);
+    let skew_cfg = MinerConfig::custom(set_cfg.threads.max(4), 1, OptFlags::hi());
+    let mut nsamples4 = 0usize;
+    let mut pr4 = pr4_compare(
+        "rmat scale=14 ef=4 seed=42",
+        "4-clique",
+        1,
+        set_cfg.threads,
+        skew_cfg.threads,
+        || {
+            let (count, _) = dfs::count(&g, &pl, &set_cfg, &NoHooks);
+            let r = bench.run("kcl4-sched", || dfs::count(&g, &pl, &set_cfg, &NoHooks).0);
+            nsamples4 = r.samples.len();
+            (count, r.min())
+        },
+        || dfs::count(&skew, &pl, &skew_cfg, &NoHooks).0,
+    );
+    pr4.samples = nsamples4;
+    print_table(
+        "PR-4 4-CL scheduler: cursor vs stealing (rmat scale=14 ef=4 seed=42)",
+        &["min s"],
+        &[
+            ("global cursor (oracle)".to_string(), vec![format!("{:.4}", pr4.cursor_secs)]),
+            (
+                format!("stealing ({} shard(s))", pr4.shards),
+                vec![format!("{:.4}", pr4.steal_secs)],
+            ),
+        ],
+    );
+    println!(
+        "\nscheduler speedup (stealing over cursor) = {:.2}x; skewed input moved \
+         {} steal(s) + {} split(s)",
+        pr4.speedup(),
+        pr4.skew_steals,
+        pr4.skew_splits
+    );
+    if let Err(e) = pr4.write("pr4-sched-kcl4", set_cfg.threads) {
+        eprintln!("could not write BENCH_pr1.json: {e}");
+    } else {
+        println!("wrote `pr4-sched-kcl4` section of {}", pr1_report_path().display());
     }
 }

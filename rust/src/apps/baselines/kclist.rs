@@ -26,7 +26,7 @@ mod tests {
     #[test]
     fn kclist_is_exact() {
         let g = gen::erdos_renyi(35, 0.3, 2, &[]);
-        let cfg = MinerConfig { threads: 2, chunk: 8, opts: OptFlags::lo() };
+        let cfg = MinerConfig::custom(2, 8, OptFlags::lo());
         for k in 3..=5 {
             assert_eq!(kclist(&g, k, &cfg).0, clique_brute(&g, k));
         }

@@ -37,7 +37,7 @@ mod tests {
     #[test]
     fn dfs_and_bfs_find_same_frequent_patterns() {
         let g = gen::erdos_renyi(50, 0.1, 13, &[1, 2, 3]);
-        let cfg = MinerConfig { threads: 2, chunk: 8, opts: OptFlags::hi() };
+        let cfg = MinerConfig::custom(2, 8, OptFlags::hi());
         let a = fsm(&g, 3, 1, &cfg);
         let b = fsm_bfs(&g, 3, 1, &cfg);
         let sa: Vec<_> = a.frequent.iter().map(|f| (f.code.clone(), f.support)).collect();
@@ -48,7 +48,7 @@ mod tests {
     #[test]
     fn higher_support_means_fewer_patterns() {
         let g = gen::erdos_renyi(60, 0.1, 17, &[1, 2]);
-        let cfg = MinerConfig { threads: 2, chunk: 8, opts: OptFlags::hi() };
+        let cfg = MinerConfig::custom(2, 8, OptFlags::hi());
         let lo = fsm(&g, 3, 1, &cfg).frequent.len();
         let hi = fsm(&g, 3, 5, &cfg).frequent.len();
         assert!(hi <= lo);

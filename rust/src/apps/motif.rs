@@ -120,7 +120,7 @@ mod tests {
     use crate::graph::gen;
 
     fn cfg() -> MinerConfig {
-        MinerConfig { threads: 2, chunk: 16, opts: OptFlags::hi() }
+        MinerConfig::custom(2, 16, OptFlags::hi())
     }
 
     #[test]

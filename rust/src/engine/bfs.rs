@@ -143,7 +143,7 @@ mod tests {
     use crate::graph::gen;
 
     fn cfg() -> MinerConfig {
-        MinerConfig { threads: 2, chunk: 8, opts: OptFlags::pangolin_like() }
+        MinerConfig::custom(2, 8, OptFlags::pangolin_like())
     }
 
     #[test]

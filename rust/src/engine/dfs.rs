@@ -1,9 +1,18 @@
 //! Pattern-guided parallel DFS exploration (paper §4.1).
 //!
 //! Executes a [`MatchingPlan`] against the input graph. Each input
-//! vertex roots an independent task; tasks are claimed dynamically by
-//! worker threads (the paper's work-stealing strategy). Within a task a
-//! thread explores its subtree depth-first, maintaining:
+//! vertex roots an independent task; tasks flow through the
+//! work-stealing, locality-sharded scheduler ([`crate::exec::sched`],
+//! the paper's work-stealing strategy): workers drain their own shard's
+//! root ranges LIFO from per-worker deques, steal FIFO when empty, and
+//! — uniquely to this engine — answer starvation by *splitting the
+//! current root*: the untraversed suffix of the level-1 candidate set
+//! is published as a [`Task::Split`] and re-entered here with a
+//! candidate-position window, so one hub root no longer serializes a
+//! run's tail. `MinerConfig::with_steal(false)` or `SANDSLASH_NO_STEAL=1`
+//! pins the run to the seed global-cursor loop, the scheduling oracle.
+//! Within a task a thread explores its subtree depth-first,
+//! maintaining:
 //!
 //! * the embedding stack with MEC connectivity codes,
 //! * the extension state for the selected mode (below),
@@ -41,11 +50,11 @@
 //! per-thread accumulator, merged once at the end — no synchronization on
 //! the hot path.
 
+use crate::exec::sched::{self, Task, WorkerCtx};
 use crate::graph::{setops, CsrGraph, VertexId};
 use crate::pattern::matching_order::{LevelPlan, MatchingPlan};
 use crate::util::bitset::BitSet;
 use crate::util::metrics::SearchStats;
-use crate::util::pool::parallel_reduce;
 
 use super::hooks::LowLevelApi;
 use super::local_graph::PlanLocalGraph;
@@ -199,90 +208,134 @@ pub fn mine<A: Send, H: LowLevelApi>(
             (l.adj_mask | l.nonadj_mask) & 1 != 0
                 && (l.adj_mask.count_ones() > 1 || l.nonadj_mask != 0)
         });
-    let lvl0 = &plan.levels[0];
+    let pol = cfg.sched_policy();
+    let result = sched::reduce(
+        n,
+        &pol,
+        || ThreadState {
+            acc: init(),
+            stats: SearchStats::default(),
+            emb: Vec::with_capacity(k),
+            conn: Connectivity::new(),
+            front: Frontier::new(k),
+            lg: PlanLocalGraph::new(),
+        },
+        |st, ctx, task| match task {
+            Task::Roots { start, end } => {
+                for v in start..end {
+                    mine_root(
+                        g, plan, cfg, hooks, st, ctx, v as VertexId, None, use_sets, use_mnc,
+                        needs_root_bits, &leaf,
+                    );
+                }
+            }
+            Task::Split { root, lo, hi } => {
+                mine_root(
+                    g, plan, cfg, hooks, st, ctx, root as VertexId, Some((lo, hi)), use_sets,
+                    use_mnc, needs_root_bits, &leaf,
+                );
+            }
+        },
+        |a, b| {
+            let mut stats = a.stats;
+            stats.merge(&b.stats);
+            ThreadState {
+                acc: merge(a.acc, b.acc),
+                stats,
+                emb: a.emb,
+                conn: a.conn,
+                front: a.front,
+                lg: a.lg,
+            }
+        },
+    );
+    (result.acc, result.stats)
+}
 
-    let (acc, stats) = {
-        let result = parallel_reduce(
-            n,
-            cfg.threads,
-            cfg.chunk,
-            || ThreadState {
-                acc: init(),
-                stats: SearchStats::default(),
-                emb: Vec::with_capacity(k),
-                conn: Connectivity::new(),
-                front: Frontier::new(k),
-                lg: PlanLocalGraph::new(),
-            },
-            |st, v| {
-                let v = v as VertexId;
-                if cfg.opts.df && g.degree(v) < lvl0.degree {
-                    st.stats.pruned += cfg.opts.stats as u64;
-                    return;
-                }
-                if lvl0.label != 0 && g.label(v) != lvl0.label {
-                    return;
-                }
-                st.emb.clear();
-                st.emb.push(v);
-                if cfg.opts.stats {
-                    st.stats.enumerated += 1;
-                }
-                if k == 1 {
-                    leaf(&mut st.acc, &st.emb);
-                    return;
-                }
-                if use_mnc {
-                    st.conn.begin_root(n, g.degree(v));
-                    for &u in g.neighbors(v) {
-                        st.conn.or_insert(u, 1);
-                    }
-                }
-                let built_bits =
-                    needs_root_bits && g.degree(v) >= ROOT_BITSET_MIN_DEGREE;
-                if built_bits {
-                    st.front.ensure_bits(n);
-                    for &u in g.neighbors(v) {
-                        st.front.root_bits.insert(u as usize);
-                    }
-                    st.front.root_bits_built = true;
-                }
-                if use_sets {
-                    extend_set(g, plan, cfg, hooks, st, 1, &leaf);
-                } else {
-                    extend(g, plan, cfg, hooks, st, 1, use_mnc, &leaf);
-                }
-                if built_bits {
-                    st.front.root_bits.clear();
-                    st.front.root_bits_built = false;
-                }
-                if use_mnc {
-                    // symmetric pop: O(deg) instead of O(capacity) clear
-                    for &u in g.neighbors(v) {
-                        st.conn.and_remove(u, 1);
-                    }
-                }
-            },
-            |a, b| {
-                let mut stats = a.stats;
-                stats.merge(&b.stats);
-                ThreadState {
-                    acc: merge(a.acc, b.acc),
-                    stats,
-                    emb: a.emb,
-                    conn: a.conn,
-                    front: a.front,
-                    lg: a.lg,
-                }
-            },
-        );
-        (result.acc, result.stats)
-    };
-    (acc, stats)
+/// One root task — or, for a [`Task::Split`], one published level-1
+/// candidate window of it (set-centric runs only, the sole publisher).
+/// The level-0 setup (root bitmap, MNC seed) is worker-local and
+/// deterministic, so a split re-runs it and lands on exactly the
+/// candidate sequence its publisher was iterating.
+fn mine_root<A, H: LowLevelApi>(
+    g: &CsrGraph,
+    plan: &MatchingPlan,
+    cfg: &MinerConfig,
+    hooks: &H,
+    st: &mut ThreadState<A>,
+    ctx: &WorkerCtx<'_>,
+    v: VertexId,
+    window: Option<(usize, usize)>,
+    use_sets: bool,
+    use_mnc: bool,
+    needs_root_bits: bool,
+    leaf: &(impl Fn(&mut A, &[VertexId]) + Sync),
+) {
+    debug_assert!(window.is_none() || use_sets, "only set-centric roots publish splits");
+    let n = g.num_vertices();
+    let k = plan.size();
+    let lvl0 = &plan.levels[0];
+    if cfg.opts.df && g.degree(v) < lvl0.degree {
+        st.stats.pruned += cfg.opts.stats as u64;
+        return;
+    }
+    if lvl0.label != 0 && g.label(v) != lvl0.label {
+        return;
+    }
+    st.emb.clear();
+    st.emb.push(v);
+    // a split root was already counted by the task that published it
+    if cfg.opts.stats && window.is_none() {
+        st.stats.enumerated += 1;
+    }
+    if k == 1 {
+        leaf(&mut st.acc, &st.emb);
+        return;
+    }
+    if use_mnc {
+        st.conn.begin_root(n, g.degree(v));
+        for &u in g.neighbors(v) {
+            st.conn.or_insert(u, 1);
+        }
+    }
+    let built_bits = needs_root_bits && g.degree(v) >= ROOT_BITSET_MIN_DEGREE;
+    if built_bits {
+        st.front.ensure_bits(n);
+        for &u in g.neighbors(v) {
+            st.front.root_bits.insert(u as usize);
+        }
+        st.front.root_bits_built = true;
+    }
+    if use_sets {
+        let (w_lo, w_hi) = window.unwrap_or((0, usize::MAX));
+        extend_set(g, plan, cfg, hooks, st, 1, Some((ctx, w_lo, w_hi)), leaf);
+    } else {
+        extend(g, plan, cfg, hooks, st, 1, use_mnc, leaf);
+    }
+    if built_bits {
+        st.front.root_bits.clear();
+        st.front.root_bits_built = false;
+    }
+    if use_mnc {
+        // symmetric pop: O(deg) instead of O(capacity) clear
+        for &u in g.neighbors(v) {
+            st.conn.and_remove(u, 1);
+        }
+    }
 }
 
 /// Set-centric extension: materialize the candidate set for `level` with
 /// the adaptive kernels, then visit each survivor.
+///
+/// `l1` is present exactly at level 1 (the root's first extension): it
+/// carries the scheduler handle plus a candidate-*position* window
+/// `[lo, hi)` over this level's (deterministic) candidate sequence.
+/// Whole-root tasks run with the full window `(0, usize::MAX)`; a
+/// [`Task::Split`] re-enters with the published suffix. Between
+/// candidates the loop polls [`WorkerCtx::split_requested`] and, when a
+/// worker is starving, hands off its own remaining suffix — recursive
+/// splits included, so hub candidates fan out until the chain is
+/// bounded by single subtrees (`exec::split` module docs).
 fn extend_set<A, H: LowLevelApi>(
     g: &CsrGraph,
     plan: &MatchingPlan,
@@ -290,6 +343,7 @@ fn extend_set<A, H: LowLevelApi>(
     hooks: &H,
     st: &mut ThreadState<A>,
     level: usize,
+    l1: Option<(&WorkerCtx<'_>, usize, usize)>,
     leaf: &(impl Fn(&mut A, &[VertexId]) + Sync),
 ) {
     let lp = &plan.levels[level];
@@ -310,6 +364,12 @@ fn extend_set<A, H: LowLevelApi>(
             est += g.degree(st.emb[j]);
         }
         if est <= LG_UNIVERSE_CAP {
+            // The LG stage ignores `l1` safely: this branch is a
+            // deterministic function of (root, plan, cfg), so a split
+            // task's publisher — which by construction reached the
+            // candidate loops below instead — proves the executor
+            // cannot land here with a partial window; whole-root tasks
+            // carry the full window, which changes nothing.
             extend_lg_root(g, plan, cfg, hooks, st, level, leaf);
             return;
         }
@@ -333,10 +393,7 @@ fn extend_set<A, H: LowLevelApi>(
         let nbrs = g.neighbors(st.emb[lp.pivot]);
         let s = lo.map_or(0, |l| nbrs.partition_point(|&x| x <= l));
         let e = hi.map_or(nbrs.len(), |h| nbrs.partition_point(|&x| x < h));
-        for idx in s..e {
-            let cand = nbrs[idx];
-            visit_candidate(g, plan, cfg, hooks, st, level, cand, leaf);
-        }
+        visit_windowed(g, plan, cfg, hooks, st, level, l1, e - s, |pos| nbrs[s + pos], leaf);
         return;
     }
 
@@ -432,11 +489,51 @@ fn extend_set<A, H: LowLevelApi>(
     // scratch must be back in place before recursing (deeper levels
     // reuse it); bufs[level] stays checked out while we iterate
     st.front.scratch = tmp;
-    for idx in 0..cur.len() {
-        let cand = cur[idx];
-        visit_candidate(g, plan, cfg, hooks, st, level, cand, leaf);
-    }
+    visit_windowed(g, plan, cfg, hooks, st, level, l1, cur.len(), |pos| cur[pos], leaf);
     st.front.bufs[level] = cur;
+}
+
+/// Visit the candidate positions `0..len` of one set-centric level —
+/// clamped to the `l1` window and polling the split protocol between
+/// candidates when `l1` is present — through `get(pos)`, the path's
+/// candidate accessor. One implementation of the window + publish +
+/// truncate discipline for both the bounded in-place and the
+/// materialized-frontier level-1 loops, so the two paths cannot drift
+/// (same rationale as [`admit_candidate`]).
+#[inline]
+fn visit_windowed<A, H: LowLevelApi>(
+    g: &CsrGraph,
+    plan: &MatchingPlan,
+    cfg: &MinerConfig,
+    hooks: &H,
+    st: &mut ThreadState<A>,
+    level: usize,
+    l1: Option<(&WorkerCtx<'_>, usize, usize)>,
+    len: usize,
+    get: impl Fn(usize) -> VertexId,
+    leaf: &(impl Fn(&mut A, &[VertexId]) + Sync),
+) {
+    let mut pos = 0usize;
+    let mut end_pos = len;
+    if let Some((_, w_lo, w_hi)) = l1 {
+        pos = w_lo.min(end_pos);
+        end_pos = w_hi.min(end_pos);
+    }
+    while pos < end_pos {
+        if let Some((ctx, _, _)) = l1 {
+            // hand the untraversed suffix to a starving worker, keep
+            // only the current candidate's subtree for ourselves
+            if end_pos - pos > 1
+                && ctx.split_requested()
+                && ctx.publish_split(st.emb[0] as usize, pos + 1, end_pos)
+            {
+                end_pos = pos + 1;
+            }
+        }
+        let cand = get(pos);
+        visit_candidate(g, plan, cfg, hooks, st, level, cand, leaf);
+        pos += 1;
+    }
 }
 
 /// Residual per-candidate filters shared by the set-centric and
@@ -502,7 +599,7 @@ fn visit_candidate<A, H: LowLevelApi>(
     if cfg.opts.stats {
         st.stats.enumerated += 1;
     }
-    extend_set(g, plan, cfg, hooks, st, level + 1, leaf);
+    extend_set(g, plan, cfg, hooks, st, level + 1, None, leaf);
     st.emb.pop();
 }
 
@@ -814,7 +911,7 @@ mod tests {
     use crate::pattern::{library, plan};
 
     fn cfg(opts: OptFlags) -> MinerConfig {
-        MinerConfig { threads: 2, chunk: 8, opts }
+        MinerConfig::custom(2, 8, opts)
     }
 
     #[test]
@@ -923,8 +1020,8 @@ mod tests {
     fn thread_counts_equal() {
         let g = gen::rmat(8, 8, 31, &[]);
         let pl = plan(&library::clique(4), true, true);
-        let (c1, _) = count(&g, &pl, &MinerConfig { threads: 1, chunk: usize::MAX, opts: OptFlags::hi() }, &NoHooks);
-        let (c4, _) = count(&g, &pl, &MinerConfig { threads: 4, chunk: 16, opts: OptFlags::hi() }, &NoHooks);
+        let (c1, _) = count(&g, &pl, &MinerConfig::single_thread(OptFlags::hi()), &NoHooks);
+        let (c4, _) = count(&g, &pl, &MinerConfig::custom(4, 16, OptFlags::hi()), &NoHooks);
         assert_eq!(c1, c4);
     }
 
@@ -1000,8 +1097,8 @@ mod tests {
     fn lg_mode_thread_invariant() {
         let g = gen::rmat(9, 7, 23, &[]);
         let pl = plan(&library::diamond(), true, true);
-        let c1 = MinerConfig { threads: 1, chunk: usize::MAX, opts: OptFlags::lo() };
-        let c4 = MinerConfig { threads: 4, chunk: 16, opts: OptFlags::lo() };
+        let c1 = MinerConfig::single_thread(OptFlags::lo());
+        let c4 = MinerConfig::custom(4, 16, OptFlags::lo());
         let (a, _) = count(&g, &pl, &c1, &NoHooks);
         let (b, _) = count(&g, &pl, &c4, &NoHooks);
         assert_eq!(a, b);
@@ -1069,6 +1166,31 @@ mod tests {
             after.gather_filter > before.gather_filter,
             "dense-MNC gathered prefilter never dispatched"
         );
+    }
+
+    #[test]
+    fn stealing_and_cursor_oracle_agree_on_skewed_graphs() {
+        // counts must be invariant under the scheduler swap, including
+        // the hub graphs whose level-1 sets actually get split; counter
+        // assertions (splits really fire) live in
+        // tests/sched_invariance.rs where the binary controls timing
+        let g = crate::graph::gen::two_hub(1 << 10);
+        for pat in [library::triangle(), library::clique(4), library::cycle(4)] {
+            for vertex_induced in [true, false] {
+                let pl = plan(&pat, vertex_induced, true);
+                let oracle_cfg = MinerConfig::custom(4, 1, OptFlags::hi()).with_steal(false);
+                let (want, _) = count(&g, &pl, &oracle_cfg, &NoHooks);
+                for shards in [1usize, 2] {
+                    let steal_cfg =
+                        MinerConfig::custom(4, 1, OptFlags::hi()).with_shards(shards);
+                    let (got, _) = count(&g, &pl, &steal_cfg, &NoHooks);
+                    assert_eq!(
+                        got, want,
+                        "pattern {pat} induced={vertex_induced} shards={shards}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

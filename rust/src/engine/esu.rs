@@ -294,7 +294,7 @@ mod tests {
     use crate::graph::gen;
 
     fn cfg() -> MinerConfig {
-        MinerConfig { threads: 2, chunk: 8, opts: OptFlags::hi() }
+        MinerConfig::custom(2, 8, OptFlags::hi())
     }
 
     #[test]
@@ -387,7 +387,7 @@ mod tests {
         let c1 = count_motifs(
             &g,
             4,
-            &MinerConfig { threads: 1, chunk: usize::MAX, opts: OptFlags::hi() },
+            &MinerConfig::custom(1, usize::MAX, OptFlags::hi()),
             &NoHooks,
             &t,
         )
@@ -395,7 +395,7 @@ mod tests {
         let c4 = count_motifs(
             &g,
             4,
-            &MinerConfig { threads: 4, chunk: 32, opts: OptFlags::hi() },
+            &MinerConfig::custom(4, 32, OptFlags::hi()),
             &NoHooks,
             &t,
         )

@@ -22,6 +22,8 @@
 //! assert_ne!(ablated, OptFlags::hi());
 //! ```
 
+use crate::exec::sched;
+
 /// One switch per optimization of the paper's Table 3 (high-level:
 /// `sb`/`dag`/`mo`/`df`/`mnc`/`mec`/`sets`; low-level: `lc`/`lg`), plus
 /// the `stats` toggle for Fig.-10 style search-space counters. Presets
@@ -102,33 +104,89 @@ impl OptFlags {
     }
 }
 
-/// Execution configuration for one mining run: thread count, dynamic
-/// self-scheduling chunk size, and the optimization flags.
+/// Execution configuration for one mining run: thread count, root-task
+/// grain, scheduler selection (PR 4), and the optimization flags.
 #[derive(Clone, Copy, Debug)]
 pub struct MinerConfig {
     /// Worker thread count (root tasks are claimed dynamically).
     pub threads: usize,
-    /// Root-task chunk size for dynamic self-scheduling.
+    /// Root-task grain: roots processed per scheduler interaction
+    /// (default [`crate::util::pool::default_chunk`], overridable via
+    /// `SANDSLASH_CHUNK`).
     pub chunk: usize,
+    /// Scheduler selection: `true` (the default) runs the sharded
+    /// work-stealing executor in [`crate::exec`]; `false` pins the run
+    /// to the seed global-cursor loop — the *scheduling oracle* every
+    /// count must agree with. Honored by the engines that resolve
+    /// [`MinerConfig::sched_policy`] (the generic DFS engine, i.e. the
+    /// `sl`/generic-pattern paths); the hand-tuned apps and the
+    /// esu/bfs/fsm engines reach the scheduler through the fixed
+    /// `util::pool` adapter signatures, which cannot see this field —
+    /// pin those with the scoped
+    /// [`sched::with_overrides`](crate::exec::sched::with_overrides)
+    /// (what the CLI's `--no-steal` does around its whole dispatch) or
+    /// the process-wide `SANDSLASH_NO_STEAL=1` kill switch, which
+    /// force the oracle everywhere and outrank this flag.
+    pub steal: bool,
+    /// Locality shard override, same scope caveat as
+    /// [`MinerConfig::steal`]; `None` uses the detected topology
+    /// ([`crate::exec::topology`], `SANDSLASH_SHARDS`).
+    pub shards: Option<usize>,
     /// Optimization switches (paper Table 3).
     pub opts: OptFlags,
 }
 
 impl MinerConfig {
-    /// All available cores with the default chunk size.
+    /// All available cores with the default grain and the stealing
+    /// scheduler.
     pub fn new(opts: OptFlags) -> Self {
-        Self { threads: crate::util::pool::default_threads(), chunk: 64, opts }
+        Self {
+            threads: crate::util::pool::default_threads(),
+            chunk: crate::util::pool::default_chunk(),
+            steal: true,
+            shards: None,
+            opts,
+        }
     }
 
     /// One worker, one chunk — deterministic sequential execution.
     pub fn single_thread(opts: OptFlags) -> Self {
-        Self { threads: 1, chunk: usize::MAX, opts }
+        Self { threads: 1, chunk: usize::MAX, steal: true, shards: None, opts }
+    }
+
+    /// Explicit thread count and grain (tests and sweeps); scheduler
+    /// knobs stay at their defaults (stealing on, topology shards).
+    pub fn custom(threads: usize, chunk: usize, opts: OptFlags) -> Self {
+        Self { threads, chunk, steal: true, shards: None, opts }
     }
 
     /// This configuration with an explicit thread count.
     pub fn with_threads(mut self, t: usize) -> Self {
         self.threads = t;
         self
+    }
+
+    /// This configuration with the scheduler pinned (`false` = the
+    /// global-cursor oracle).
+    pub fn with_steal(mut self, steal: bool) -> Self {
+        self.steal = steal;
+        self
+    }
+
+    /// This configuration with an explicit locality shard count.
+    pub fn with_shards(mut self, shards: usize) -> Self {
+        self.shards = Some(shards);
+        self
+    }
+
+    /// Resolve this configuration into a scheduler policy: scoped
+    /// [`sched::with_overrides`] settings win over the per-run fields,
+    /// and the `SANDSLASH_NO_STEAL` kill switch wins over everything
+    /// (one shared resolver,
+    /// [`SchedPolicy::resolve`](sched::SchedPolicy::resolve), so this
+    /// path and the adapters cannot drift).
+    pub fn sched_policy(&self) -> sched::SchedPolicy {
+        sched::SchedPolicy::resolve(self.threads, self.chunk, self.steal, self.shards)
     }
 }
 
@@ -146,5 +204,23 @@ mod tests {
         // emulated systems stay on the scalar probe path
         assert!(!OptFlags::automine_like().sets && !OptFlags::pangolin_like().sets);
         assert!(!OptFlags::peregrine_like().sets && !OptFlags::none().sets);
+    }
+
+    #[test]
+    fn scheduler_knobs_default_on_and_pin() {
+        let cfg = MinerConfig::custom(4, 8, OptFlags::hi());
+        assert!(cfg.steal && cfg.shards.is_none());
+        let pinned = cfg.with_steal(false).with_shards(2);
+        assert!(!pinned.steal);
+        assert_eq!(pinned.shards, Some(2));
+        let pol = pinned.sched_policy();
+        assert!(!pol.steal);
+        assert_eq!(pol.shards, 2);
+        assert_eq!((pol.threads, pol.chunk), (4, 8));
+        // scoped overrides outrank the per-run fields
+        sched::with_overrides(
+            sched::Overrides { steal: None, shards: Some(5) },
+            || assert_eq!(pinned.sched_policy().shards, 5),
+        );
     }
 }

@@ -1,0 +1,20 @@
+//! Execution subsystem: the work-stealing, locality-sharded scheduler
+//! (PR 4) that every mining engine fans its root tasks through.
+//!
+//! * [`sched`] — per-worker bounded deques (LIFO local pops, FIFO
+//!   randomized-victim steals), lazy range halving, the cursor oracle,
+//!   and the `reduce`/`for_each` entry points.
+//! * [`topology`] — locality shard detection (`/sys/devices/system/node`,
+//!   `SANDSLASH_SHARDS` override) and the worker/task-space partition.
+//! * [`split`] — the demand-driven subtree-splitting protocol that
+//!   breaks hub-rooted level-1 candidate sets into stealable tasks.
+//!
+//! The legacy `util::pool` entry points survive as thin adapters over
+//! [`sched`], so engine and app call sites kept their signatures; new
+//! code that wants scheduling control (split publication, per-run
+//! policies) calls [`sched::reduce`] directly, as `engine::dfs` does.
+//! `SANDSLASH_NO_STEAL=1` pins the whole process to the cursor oracle.
+
+pub mod sched;
+pub mod split;
+pub mod topology;

@@ -1,0 +1,771 @@
+//! The work-stealing, locality-sharded scheduler.
+//!
+//! Replaces the single global chunk cursor of the seed `util::pool`
+//! substrate. That cursor gave dynamic load balance, but on skewed
+//! inputs a hub-rooted subtree serializes the tail of the run, and on
+//! multi-socket hosts every claim bounces one contended cache line
+//! across sockets. This module keeps the same execution model — `n`
+//! independent root tasks, per-worker accumulators, one merge at the
+//! end — and restructures *who claims what from where*:
+//!
+//! * **Per-worker bounded deques** (`DEQUE_CAP`). A worker that
+//!   acquires a block of roots lazily halves it into the deque
+//!   (`run_task`): it keeps the low half (ascending order ⇒ the CSR
+//!   prefetch pattern of the old cursor) and leaves the high half
+//!   stealable. Local pops are LIFO (back), steals are FIFO (front),
+//!   so the owner works on the cache-warm small ranges while thieves
+//!   take the biggest, oldest ranges — the classic deque discipline.
+//! * **Shard-local cursors** ([`crate::exec::topology`]). The root
+//!   space `0..n` is partitioned into one contiguous range per
+//!   locality shard, each with its own claim cursor; workers are
+//!   pinned to shards round-robin. A worker claims and steals inside
+//!   its shard until the *whole shard* drains, and only then crosses
+//!   shards (randomized order) — claim traffic stays on-socket for the
+//!   bulk of a run.
+//! * **Adaptive subtree splitting** ([`crate::exec::split`]). When
+//!   stealing finds nothing, starving workers raise a demand flag that
+//!   loaded workers answer by publishing the untraversed suffix of
+//!   their current root's level-1 candidate set ([`Task::Split`]) —
+//!   bounding the longest sequential chain on hub roots.
+//!
+//! The seed scheduler is **kept** as `cursor_reduce`, selected by
+//! `SchedPolicy { steal: false, .. }`, the `SANDSLASH_NO_STEAL=1`
+//! environment kill switch, or
+//! [`MinerConfig::with_steal`](crate::engine::MinerConfig::with_steal)`(false)`:
+//! it is the *scheduling oracle* — every count must be invariant under
+//! the scheduler swap (`rust/tests/sched_invariance.rs`), exactly as
+//! the scalar kernels referee the SIMD dispatch.
+//!
+//! Every scheduling event (block claim, steal, cross-shard claim,
+//! split publish) bumps a counter in [`crate::util::metrics::sched`],
+//! so tests and benches assert that stealing actually fires instead of
+//! trusting that it might.
+
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use crate::util::metrics::sched as counters;
+use crate::util::rng::Rng;
+
+use super::split::SplitGate;
+use super::topology;
+
+/// Cursor claims hand out `chunk * BLOCK_FACTOR` roots at a time: the
+/// deque (not the shared cursor) is the fine-grained balancing layer,
+/// so blocks can be coarse — one claim per 8 old-style chunks cuts
+/// cursor traffic 8× while lazy halving restores the old granularity
+/// locally (EXPERIMENTS.md §PR-4).
+const BLOCK_FACTOR: usize = 8;
+
+/// Bound on each worker deque. Lazy halving pushes O(log block) ranges
+/// and splits push one task at a time, so the bound exists only to keep
+/// a pathological caller from growing the deque without limit; at the
+/// cap, ranges are simply processed inline instead of published.
+const DEQUE_CAP: usize = 1024;
+
+/// Failed sweeps before an idle worker starts sleeping between sweeps
+/// instead of spinning — keeps the starving tail from burning cores
+/// while one long subtree finishes (splits usually resolve it first).
+const IDLE_SPINS: u32 = 64;
+
+/// Nap length for long-idle workers (termination and split latency
+/// stay far below any measurable task length).
+const IDLE_NAP: std::time::Duration = std::time::Duration::from_micros(50);
+
+/// Process-wide steal default: `false` only under `SANDSLASH_NO_STEAL`
+/// (any non-empty value other than `0`), the CI oracle job's kill
+/// switch — same contract as `SANDSLASH_NO_SIMD`. Cached for the
+/// process lifetime.
+pub fn steal_enabled_default() -> bool {
+    static CACHE: OnceLock<bool> = OnceLock::new();
+    *CACHE.get_or_init(|| {
+        !std::env::var("SANDSLASH_NO_STEAL")
+            .is_ok_and(|v| !v.trim().is_empty() && v.trim() != "0")
+    })
+}
+
+/// Scoped, thread-local scheduling overrides (see [`with_overrides`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Overrides {
+    /// `Some(false)` pins runs to the cursor oracle, `Some(true)` asks
+    /// for stealing (the `SANDSLASH_NO_STEAL` kill switch still wins).
+    pub steal: Option<bool>,
+    /// Explicit shard count for [`SchedPolicy::auto`] resolution.
+    pub shards: Option<usize>,
+}
+
+thread_local! {
+    static OVERRIDES: Cell<Overrides> = const { Cell::new(Overrides { steal: None, shards: None }) };
+}
+
+/// Run `f` with scheduling overrides active on *this thread*: every
+/// policy resolved inside (the `util::pool` adapters and
+/// [`MinerConfig::sched_policy`](crate::engine::MinerConfig::sched_policy))
+/// sees them. Thread-local and scoped (restored on return, nesting
+/// safe), so concurrent tests can sweep steal/shard settings without
+/// racing on process globals. The workers a run spawns inherit the
+/// policy resolved *at launch*, not the thread-local itself.
+pub fn with_overrides<T>(ov: Overrides, f: impl FnOnce() -> T) -> T {
+    let prev = OVERRIDES.with(|c| c.replace(ov));
+    struct Restore(Overrides);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            OVERRIDES.with(|c| c.set(self.0));
+        }
+    }
+    let _restore = Restore(prev);
+    f()
+}
+
+/// The overrides currently active on this thread.
+pub(crate) fn current_overrides() -> Overrides {
+    OVERRIDES.with(|c| c.get())
+}
+
+/// Resolved execution policy for one `reduce`/`for_each` run.
+#[derive(Clone, Copy, Debug)]
+pub struct SchedPolicy {
+    /// Worker thread count.
+    pub threads: usize,
+    /// Grain: roots processed per deque interaction (the old dynamic
+    /// self-scheduling chunk, same default — see
+    /// [`crate::util::pool::default_chunk`]).
+    pub chunk: usize,
+    /// `false` selects the global-cursor oracle (`cursor_reduce`).
+    pub steal: bool,
+    /// Locality shard count (clamped to `threads` at pool build).
+    pub shards: usize,
+}
+
+impl SchedPolicy {
+    /// The single policy resolver (one implementation so the adapter
+    /// and engine paths cannot drift): the `SANDSLASH_NO_STEAL` kill
+    /// switch wins over everything, a scoped thread-local override
+    /// wins over the caller's per-run defaults, and shards fall back
+    /// from override → per-run default → detected topology.
+    pub fn resolve(
+        threads: usize,
+        chunk: usize,
+        steal_default: bool,
+        shards_default: Option<usize>,
+    ) -> Self {
+        let ov = current_overrides();
+        Self {
+            threads,
+            chunk,
+            steal: steal_enabled_default() && ov.steal.unwrap_or(steal_default),
+            shards: ov.shards.or(shards_default).unwrap_or_else(topology::shards),
+        }
+    }
+
+    /// Default resolution for callers that only know `threads`/`chunk`
+    /// (the `util::pool` adapters): stealing on unless the
+    /// `SANDSLASH_NO_STEAL` kill switch or a thread-local override
+    /// says otherwise, shards from the override or detected topology.
+    pub fn auto(threads: usize, chunk: usize) -> Self {
+        Self::resolve(threads, chunk, true, None)
+    }
+}
+
+/// One unit of scheduled work.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Task {
+    /// A contiguous range `[start, end)` of root indices.
+    Roots {
+        /// First root index (inclusive).
+        start: usize,
+        /// One past the last root index.
+        end: usize,
+    },
+    /// A published suffix `[lo, hi)` of one root's level-1 candidate
+    /// positions (see [`crate::exec::split`]); only ever created by a
+    /// body that calls [`WorkerCtx::publish_split`], and delivered
+    /// back to the same body to execute.
+    Split {
+        /// The root vertex whose level-1 candidates were split.
+        root: usize,
+        /// First candidate position (inclusive) of the suffix.
+        lo: usize,
+        /// One past the last candidate position.
+        hi: usize,
+    },
+}
+
+/// Per-worker handle passed to the body: identifies the worker (for
+/// worker-indexed scratch) and carries the split-protocol endpoints.
+/// In sequential and cursor-oracle runs the handle is inert — splits
+/// are never requested and never publish.
+pub struct WorkerCtx<'p> {
+    /// Stable worker id in `0..threads`.
+    pub worker: usize,
+    pool: Option<&'p Pool>,
+}
+
+impl WorkerCtx<'_> {
+    /// Whether a starving worker is waiting for work *and* this
+    /// worker's own deque has nothing left to steal — the signal that
+    /// publishing a level-1 suffix would actually relieve someone
+    /// (one relaxed load each; safe to poll from a hot loop).
+    pub fn split_requested(&self) -> bool {
+        match self.pool {
+            Some(p) => {
+                p.gate.requests_pending()
+                    && p.queues[self.worker].len.load(Ordering::Relaxed) == 0
+            }
+            None => false,
+        }
+    }
+
+    /// Publish candidate positions `[lo, hi)` of `root`'s level-1 set
+    /// as a stealable [`Task::Split`]. Returns `false` (publish
+    /// nothing) when the demand signal has lapsed, the suffix is
+    /// empty, or the deque is at capacity — the caller keeps the
+    /// suffix and continues sequentially in that case.
+    pub fn publish_split(&self, root: usize, lo: usize, hi: usize) -> bool {
+        let Some(p) = self.pool else { return false };
+        if lo >= hi || !self.split_requested() {
+            return false;
+        }
+        // front = steal end: starving workers should see the split
+        // before the owner's own range backlog.
+        if p.push_front(self.worker, Task::Split { root, lo, hi }) {
+            counters::note_split();
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// One shard's claim cursor, alone on its cache line so cross-shard
+/// traffic never false-shares with a neighbor's claims.
+#[repr(align(64))]
+struct ShardCursor {
+    next: AtomicUsize,
+    end: usize,
+}
+
+struct WorkerQueue {
+    /// Deque length mirror, maintained under the lock, read lock-free
+    /// by thieves (skip empty victims) and by the split poll.
+    len: AtomicUsize,
+    deque: Mutex<VecDeque<Task>>,
+}
+
+struct Pool {
+    cursors: Vec<ShardCursor>,
+    queues: Vec<WorkerQueue>,
+    worker_shard: Vec<usize>,
+    shard_workers: Vec<Vec<usize>>,
+    gate: SplitGate,
+    /// Workers currently *sweeping for or executing* a task. Raised
+    /// before a sweep begins, so a task is never invisible (out of its
+    /// deque/cursor, holder uncounted): any task a peer's sweep misses
+    /// is held by a worker still counted here. Termination requires
+    /// observing `active == 0` *and* a subsequent thorough sweep
+    /// finding nothing — only a counted worker can hold or publish
+    /// work, so once both hold, no work exists and none can appear.
+    active: AtomicUsize,
+    grain: usize,
+    block: usize,
+}
+
+impl Pool {
+    fn new(n: usize, pol: &SchedPolicy) -> Self {
+        let threads = pol.threads.max(1);
+        let shards = pol.shards.clamp(1, threads);
+        let grain = pol.chunk.max(1);
+        let cursors = (0..shards)
+            .map(|s| {
+                let (lo, hi) = topology::shard_range(s, shards, n);
+                ShardCursor { next: AtomicUsize::new(lo), end: hi }
+            })
+            .collect();
+        let worker_shard: Vec<usize> =
+            (0..threads).map(|w| topology::shard_of(w, shards)).collect();
+        let mut shard_workers = vec![Vec::new(); shards];
+        for (w, &s) in worker_shard.iter().enumerate() {
+            shard_workers[s].push(w);
+        }
+        Self {
+            cursors,
+            queues: (0..threads)
+                .map(|_| WorkerQueue { len: AtomicUsize::new(0), deque: Mutex::new(VecDeque::new()) })
+                .collect(),
+            worker_shard,
+            shard_workers,
+            gate: SplitGate::new(),
+            active: AtomicUsize::new(0),
+            grain,
+            block: grain.saturating_mul(BLOCK_FACTOR),
+        }
+    }
+
+    /// LIFO pop from the worker's own deque.
+    fn pop_local(&self, w: usize) -> Option<Task> {
+        let q = &self.queues[w];
+        if q.len.load(Ordering::Relaxed) == 0 {
+            return None;
+        }
+        let mut d = q.deque.lock().unwrap();
+        let t = d.pop_back();
+        q.len.store(d.len(), Ordering::Relaxed);
+        t
+    }
+
+    /// Bounded push to the back (owner end) of `w`'s deque.
+    fn push_back(&self, w: usize, t: Task) -> bool {
+        let q = &self.queues[w];
+        let mut d = q.deque.lock().unwrap();
+        if d.len() >= DEQUE_CAP {
+            return false;
+        }
+        d.push_back(t);
+        q.len.store(d.len(), Ordering::Relaxed);
+        true
+    }
+
+    /// Bounded push to the front (steal end) of `w`'s deque.
+    fn push_front(&self, w: usize, t: Task) -> bool {
+        let q = &self.queues[w];
+        let mut d = q.deque.lock().unwrap();
+        if d.len() >= DEQUE_CAP {
+            return false;
+        }
+        d.push_front(t);
+        q.len.store(d.len(), Ordering::Relaxed);
+        true
+    }
+
+    /// Claim one block of roots from a shard cursor.
+    fn claim(&self, shard: usize, own: bool) -> Option<Task> {
+        let c = &self.cursors[shard];
+        // cheap pre-check keeps drained-cursor polling from growing the
+        // counter unboundedly; the fetch_add below stays the arbiter
+        if c.next.load(Ordering::Relaxed) >= c.end {
+            return None;
+        }
+        let start = c.next.fetch_add(self.block, Ordering::Relaxed);
+        if start >= c.end {
+            return None;
+        }
+        if own {
+            counters::note_claim();
+        } else {
+            counters::note_shard_claim();
+        }
+        Some(Task::Roots { start, end: (start + self.block).min(c.end) })
+    }
+
+    /// FIFO steal from one victim's deque. `thorough` skips the
+    /// lock-free emptiness shortcut (used by the termination sweep,
+    /// which must not trust a stale length mirror).
+    fn steal_from(&self, victim: usize, thief: usize, thorough: bool) -> Option<Task> {
+        if victim == thief {
+            return None;
+        }
+        let q = &self.queues[victim];
+        if !thorough && q.len.load(Ordering::Relaxed) == 0 {
+            return None;
+        }
+        let mut d = q.deque.lock().unwrap();
+        let t = d.pop_front();
+        q.len.store(d.len(), Ordering::Relaxed);
+        if t.is_some() {
+            counters::note_steal();
+        }
+        t
+    }
+
+    /// Randomized-order steal sweep over one shard's workers.
+    fn steal_in_shard(&self, shard: usize, thief: usize, rng: &mut Rng, thorough: bool) -> Option<Task> {
+        let ws = &self.shard_workers[shard];
+        if ws.is_empty() {
+            return None;
+        }
+        let k0 = rng.below(ws.len() as u64) as usize;
+        for i in 0..ws.len() {
+            if let Some(t) = self.steal_from(ws[(k0 + i) % ws.len()], thief, thorough) {
+                return Some(t);
+            }
+        }
+        None
+    }
+
+    /// Full acquisition order: own deque (LIFO) → own shard cursor →
+    /// steal inside own shard → foreign shards (randomized rotation),
+    /// cursor before deques within each. Steals leave a shard only
+    /// after that shard has fully drained.
+    fn find_work(&self, w: usize, rng: &mut Rng, thorough: bool) -> Option<Task> {
+        if let Some(t) = self.pop_local(w) {
+            return Some(t);
+        }
+        let my = self.worker_shard[w];
+        if let Some(t) = self.claim(my, true) {
+            return Some(t);
+        }
+        if let Some(t) = self.steal_in_shard(my, w, rng, thorough) {
+            return Some(t);
+        }
+        let ns = self.cursors.len();
+        if ns > 1 {
+            let s0 = rng.below(ns as u64) as usize;
+            for i in 0..ns {
+                let s = (s0 + i) % ns;
+                if s == my {
+                    continue;
+                }
+                if let Some(t) = self.claim(s, false) {
+                    return Some(t);
+                }
+                if let Some(t) = self.steal_in_shard(s, w, rng, thorough) {
+                    return Some(t);
+                }
+            }
+        }
+        None
+    }
+}
+
+/// Execute one task: splits go straight to the body; root ranges are
+/// lazily halved into the deque down to the grain, keeping the low half
+/// (ascending order) and leaving the high halves stealable.
+fn run_task<A>(
+    pool: &Pool,
+    task: Task,
+    acc: &mut A,
+    ctx: &WorkerCtx<'_>,
+    body: &(impl Fn(&mut A, &WorkerCtx<'_>, Task) + Sync),
+) {
+    match task {
+        Task::Split { .. } => body(acc, ctx, task),
+        Task::Roots { start, end } => {
+            let (s, mut e) = (start, end);
+            while e - s > pool.grain {
+                let mid = s + (e - s) / 2;
+                if pool.push_back(ctx.worker, Task::Roots { start: mid, end: e }) {
+                    e = mid;
+                } else {
+                    break; // deque at capacity: just run the rest inline
+                }
+            }
+            body(acc, ctx, Task::Roots { start: s, end: e });
+        }
+    }
+}
+
+fn worker_loop<A>(
+    pool: &Pool,
+    w: usize,
+    init: &(impl Fn() -> A + Sync),
+    body: &(impl Fn(&mut A, &WorkerCtx<'_>, Task) + Sync),
+) -> A {
+    let mut acc = init();
+    let ctx = WorkerCtx { worker: w, pool: Some(pool) };
+    // worker-seeded xoshiro: victim selection must differ per worker or
+    // thieves convoy on one victim's lock
+    let mut rng = Rng::seeded(0x9E37_79B9_7F4A_7C15 ^ (w as u64).wrapping_mul(0x0A07_61D6_478B_D642));
+    let mut hungry = false;
+    let mut idle = 0u32;
+    // Acquire-and-run under the `active` count: raised BEFORE the sweep
+    // so a claimed task is never invisible to peers' termination checks
+    // (see the `Pool::active` docs). Returns whether a task ran.
+    let mut try_work = |acc: &mut A, hungry: &mut bool, thorough: bool| -> bool {
+        pool.active.fetch_add(1, Ordering::SeqCst);
+        match pool.find_work(w, &mut rng, thorough) {
+            Some(task) => {
+                if *hungry {
+                    pool.gate.deregister();
+                    *hungry = false;
+                }
+                run_task(pool, task, acc, &ctx, body);
+                pool.active.fetch_sub(1, Ordering::SeqCst);
+                true
+            }
+            None => {
+                pool.active.fetch_sub(1, Ordering::SeqCst);
+                false
+            }
+        }
+    };
+    loop {
+        if try_work(&mut acc, &mut hungry, false) {
+            idle = 0;
+            continue;
+        }
+        if !hungry {
+            pool.gate.register();
+            hungry = true;
+        }
+        if pool.active.load(Ordering::SeqCst) == 0 {
+            // no counted worker ⇒ nothing is held or publishable from
+            // here on; one thorough sweep (locking every deque)
+            // separates a missed task from termination
+            if try_work(&mut acc, &mut hungry, true) {
+                idle = 0;
+                continue;
+            }
+            break;
+        }
+        idle += 1;
+        if idle < IDLE_SPINS {
+            std::thread::yield_now();
+        } else {
+            std::thread::sleep(IDLE_NAP);
+        }
+    }
+    if hungry {
+        pool.gate.deregister();
+    }
+    acc
+}
+
+/// The seed scheduler, kept verbatim as the scheduling oracle: one
+/// global cursor, fixed `chunk`-sized claims, workers exit when the
+/// cursor drains. No deques, no shards, no splits — every count must
+/// match it exactly under any stealing configuration.
+fn cursor_reduce<A: Send>(
+    n: usize,
+    threads: usize,
+    chunk: usize,
+    init: &(impl Fn() -> A + Sync),
+    body: &(impl Fn(&mut A, &WorkerCtx<'_>, Task) + Sync),
+    merge: impl FnMut(A, A) -> A,
+) -> A {
+    let cursor = AtomicUsize::new(0);
+    let results: Vec<A> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..threads)
+            .map(|tid| {
+                let cursor = &cursor;
+                scope.spawn(move || {
+                    let mut acc = init();
+                    let ctx = WorkerCtx { worker: tid, pool: None };
+                    loop {
+                        let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+                        if start >= n {
+                            break;
+                        }
+                        body(&mut acc, &ctx, Task::Roots { start, end: (start + chunk).min(n) });
+                    }
+                    acc
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    fold(results, merge)
+}
+
+fn fold<A>(results: Vec<A>, mut merge: impl FnMut(A, A) -> A) -> A {
+    let mut it = results.into_iter();
+    let first = it.next().expect("at least one worker");
+    it.fold(first, |a, b| merge(a, b))
+}
+
+/// Parallel map-reduce over root tasks `0..n` under `pol`: `init`
+/// builds one accumulator per worker, `body` executes one [`Task`]
+/// into it, `merge` combines the per-worker results once at the end
+/// (no synchronization on the mining path). Runs sequentially when
+/// `threads == 1` or `n <= chunk` (bit-for-bit the pre-PR-4 contract),
+/// on the cursor oracle when `pol.steal` is off, and on the sharded
+/// stealing pool otherwise.
+pub fn reduce<A: Send>(
+    n: usize,
+    pol: &SchedPolicy,
+    init: impl Fn() -> A + Sync,
+    body: impl Fn(&mut A, &WorkerCtx<'_>, Task) + Sync,
+    merge: impl FnMut(A, A) -> A,
+) -> A {
+    let threads = pol.threads.max(1);
+    let chunk = pol.chunk.max(1);
+    if threads == 1 || n <= chunk {
+        let mut acc = init();
+        if n > 0 {
+            let ctx = WorkerCtx { worker: 0, pool: None };
+            body(&mut acc, &ctx, Task::Roots { start: 0, end: n });
+        }
+        return acc;
+    }
+    if !pol.steal {
+        return cursor_reduce(n, threads, chunk, &init, &body, merge);
+    }
+    let pool = Pool::new(n, pol);
+    let results: Vec<A> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..threads)
+            .map(|w| {
+                let pool = &pool;
+                let init = &init;
+                let body = &body;
+                scope.spawn(move || worker_loop(pool, w, init, body))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    fold(results, merge)
+}
+
+/// Side-effect-only companion to [`reduce`]: run `f(worker, index)`
+/// for every index in `0..n` exactly once.
+pub fn for_each(n: usize, pol: &SchedPolicy, f: impl Fn(usize, usize) + Sync) {
+    reduce(
+        n,
+        pol,
+        || (),
+        |_, ctx, task| match task {
+            Task::Roots { start, end } => {
+                for i in start..end {
+                    f(ctx.worker, i);
+                }
+            }
+            Task::Split { .. } => {
+                unreachable!("index adapters never publish split tasks")
+            }
+        },
+        |(), ()| (),
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    fn sum_to(n: usize, pol: &SchedPolicy) -> u64 {
+        reduce(
+            n,
+            pol,
+            || 0u64,
+            |acc, _, task| match task {
+                Task::Roots { start, end } => {
+                    for i in start..end {
+                        *acc += i as u64;
+                    }
+                }
+                Task::Split { .. } => unreachable!("no splits published"),
+            },
+            |a, b| a + b,
+        )
+    }
+
+    #[test]
+    fn reduce_matches_closed_form_across_policies() {
+        let n = 10_000usize;
+        let want = (n as u64 - 1) * n as u64 / 2;
+        for threads in [1usize, 2, 3, 8] {
+            for steal in [false, true] {
+                for shards in [1usize, 2, 4, 16] {
+                    for chunk in [1usize, 7, 64, usize::MAX] {
+                        let pol = SchedPolicy { threads, chunk, steal, shards };
+                        assert_eq!(
+                            sum_to(n, &pol),
+                            want,
+                            "threads={threads} steal={steal} shards={shards} chunk={chunk}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn every_index_runs_exactly_once_under_stealing() {
+        let n = 4096usize;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        let pol = SchedPolicy { threads: 8, chunk: 4, steal: true, shards: 3 };
+        for_each(n, &pol, |_, i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn empty_and_tiny_ranges() {
+        let pol = SchedPolicy { threads: 4, chunk: 16, steal: true, shards: 2 };
+        assert_eq!(sum_to(0, &pol), 0);
+        assert_eq!(sum_to(1, &pol), 0);
+        assert_eq!(sum_to(3, &pol), 3);
+        // more shards than threads or tasks is clamped, not a panic
+        let wide = SchedPolicy { threads: 2, chunk: 1, steal: true, shards: 64 };
+        assert_eq!(sum_to(5, &wide), 10);
+    }
+
+    #[test]
+    fn split_protocol_is_inert_without_a_pool() {
+        let ctx = WorkerCtx { worker: 0, pool: None };
+        assert!(!ctx.split_requested());
+        assert!(!ctx.publish_split(0, 0, 10));
+    }
+
+    #[test]
+    fn published_splits_are_delivered_back_to_the_body() {
+        // Body protocol: each root contributes 1 per "candidate"; root 0
+        // has 64 candidates and publishes its suffix whenever the gate
+        // asks. Whether or not splits fire (timing-dependent), the total
+        // must equal the sequential answer — and split tasks, when they
+        // do arrive, must carry a sane window.
+        let n = 256usize;
+        let candidates = 64usize;
+        let pol = SchedPolicy { threads: 4, chunk: 1, steal: true, shards: 1 };
+        let total = reduce(
+            n,
+            &pol,
+            || 0u64,
+            |acc, ctx, task| {
+                let mut work = |root: usize, lo: usize, hi: usize| {
+                    if root != 0 {
+                        *acc += 1;
+                        return;
+                    }
+                    let mut pos = lo;
+                    let mut end = hi.min(candidates);
+                    while pos < end {
+                        if end - pos > 1 && ctx.split_requested() && ctx.publish_split(0, pos + 1, end)
+                        {
+                            end = pos + 1;
+                        }
+                        *acc += 1;
+                        // make the hub root slow enough to starve peers
+                        std::hint::black_box((0..500).sum::<u64>());
+                        pos += 1;
+                    }
+                };
+                match task {
+                    Task::Roots { start, end } => {
+                        for r in start..end {
+                            work(r, 0, usize::MAX);
+                        }
+                    }
+                    Task::Split { root, lo, hi } => {
+                        assert_eq!(root, 0, "only root 0 publishes");
+                        assert!(lo < hi && hi <= candidates);
+                        work(root, lo, hi);
+                    }
+                }
+            },
+            |a, b| a + b,
+        );
+        assert_eq!(total, (n as u64 - 1) + candidates as u64);
+    }
+
+    #[test]
+    fn overrides_are_scoped_and_nest() {
+        let base = SchedPolicy::auto(4, 8);
+        assert_eq!(base.steal, steal_enabled_default());
+        with_overrides(Overrides { steal: Some(false), shards: Some(3) }, || {
+            let p = SchedPolicy::auto(4, 8);
+            assert!(!p.steal);
+            assert_eq!(p.shards, 3);
+            with_overrides(Overrides { steal: None, shards: Some(5) }, || {
+                let q = SchedPolicy::auto(4, 8);
+                assert_eq!(q.steal, steal_enabled_default());
+                assert_eq!(q.shards, 5);
+            });
+            // inner scope restored
+            assert_eq!(SchedPolicy::auto(4, 8).shards, 3);
+        });
+        let after = SchedPolicy::auto(4, 8);
+        assert_eq!(after.shards, base.shards);
+    }
+}

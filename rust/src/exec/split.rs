@@ -1,0 +1,93 @@
+//! Adaptive subtree splitting — the demand signal between starving and
+//! loaded workers.
+//!
+//! Range stealing (deques of root ranges, [`crate::exec::sched`])
+//! balances load only down to the granularity of *one root task*. On
+//! power-law graphs that is not enough: a single hub root can carry a
+//! constant fraction of the whole search tree, so the worker that drew
+//! it serializes the tail of the run while every other worker idles.
+//! The paper's answer (and Peregrine's fine-grained matching tasks) is
+//! to split *inside* the root task: the untraversed suffix of the
+//! root's level-1 candidate set is itself a perfectly good task list.
+//!
+//! The protocol is demand-driven so the common case (no starvation)
+//! costs one relaxed load per level-1 candidate and nothing else:
+//!
+//! 1. A worker that finds no work anywhere **registers hunger** on the
+//!    pool's [`SplitGate`] and keeps sweeping.
+//! 2. A loaded worker polls [`SplitGate::requests_pending`] from its
+//!    level-1 loop (via
+//!    [`WorkerCtx::split_requested`](crate::exec::sched::WorkerCtx::split_requested)).
+//!    When hunger is pending *and its own deque is empty* — if the
+//!    deque still holds stealable ranges, thieves should take those
+//!    first — it publishes the candidate suffix `[pos+1, end)` as a
+//!    `Task::Split` on its own deque and truncates its own loop to the
+//!    current candidate. The empty-deque condition doubles as flow
+//!    control: at most one unstolen split per worker at a time.
+//! 3. The hungry worker steals the published task like any other, and
+//!    may split it again in turn — hub candidates fan out recursively,
+//!    bounding the longest sequential chain by the split grain instead
+//!    of the hub subtree.
+//!
+//! Hunger is a *level*, not an event: a worker deregisters only when it
+//! acquires work (or exits at termination), so a loaded worker never
+//! misses a request by polling late. Splits re-execute the root's
+//! level-0 setup (root bitmap, sb bounds) — that is deliberate: the
+//! setup is worker-local, deterministic, and orders of magnitude
+//! cheaper than the subtree being handed away.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Count of currently-starving workers, shared by one scheduler pool.
+///
+/// Writes are rare (hunger edges), reads are one relaxed load on a
+/// read-mostly line, so loaded workers can poll from the level-1 hot
+/// loop without cross-core traffic in the steady state.
+#[derive(Debug, Default)]
+pub struct SplitGate {
+    hungry: AtomicUsize,
+}
+
+impl SplitGate {
+    /// A gate with no pending hunger.
+    pub(crate) fn new() -> Self {
+        Self::default()
+    }
+
+    /// A worker found no work anywhere; raise the demand level.
+    pub(crate) fn register(&self) {
+        self.hungry.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A previously-hungry worker acquired work (or exited).
+    pub(crate) fn deregister(&self) {
+        let prev = self.hungry.fetch_sub(1, Ordering::Relaxed);
+        debug_assert!(prev > 0, "split-gate hunger underflow");
+    }
+
+    /// Whether any worker is currently starving. Loaded workers poll
+    /// this (cheap, read-mostly) to decide when publishing a split is
+    /// worth the task-setup replay.
+    pub fn requests_pending(&self) -> bool {
+        self.hungry.load(Ordering::Relaxed) > 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hunger_is_a_level_not_an_event() {
+        let gate = SplitGate::new();
+        assert!(!gate.requests_pending());
+        gate.register();
+        assert!(gate.requests_pending());
+        gate.register();
+        gate.deregister();
+        // one worker still hungry
+        assert!(gate.requests_pending());
+        gate.deregister();
+        assert!(!gate.requests_pending());
+    }
+}

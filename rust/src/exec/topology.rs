@@ -1,0 +1,166 @@
+//! Locality shard detection and task-space partitioning.
+//!
+//! On multi-socket hosts every cross-socket cache-line bounce costs an
+//! order of magnitude more than an on-socket transfer, so the scheduler
+//! partitions both the *workers* and the *root-task space* into
+//! **shards** — one per NUMA node when the host exposes them. Workers
+//! claim and steal inside their own shard first and cross the shard
+//! boundary only once a whole shard has drained
+//! ([`crate::exec::sched`] implements that policy; this module only
+//! answers "how many shards, and who owns what").
+//!
+//! Shard count resolution, in priority order:
+//!
+//! 1. `SANDSLASH_SHARDS` — explicit override, same loud-reject parse
+//!    contract as `SANDSLASH_THREADS` (an unusable value warns once on
+//!    stderr and falls through, it is never silently applied).
+//! 2. `/sys/devices/system/node/node<N>` directory count (Linux sysfs;
+//!    the same source `numactl --hardware` reads).
+//! 3. One shard — single-socket hosts and non-Linux platforms lose
+//!    nothing: one shard is exactly the pre-PR-4 flat task space.
+//!
+//! The detected value is cached for the process lifetime (`OnceLock`),
+//! so campaign loops never pay a sysfs walk per query. Per-run
+//! overrides go through [`crate::engine::MinerConfig::with_shards`] or
+//! [`crate::exec::sched::with_overrides`] instead of the environment.
+
+use std::sync::OnceLock;
+
+/// Where the process-wide shard count came from (recorded so bench
+/// metadata and doctor output can say *why* a run was sharded).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardSource {
+    /// `SANDSLASH_SHARDS` environment override.
+    Env,
+    /// Counted `node<N>` entries under `/sys/devices/system/node`.
+    Sysfs,
+    /// No usable signal — single flat shard.
+    Fallback,
+}
+
+/// Process-wide shard topology (cached; see module docs for the
+/// resolution order).
+#[derive(Clone, Copy, Debug)]
+pub struct Topology {
+    /// Number of locality shards (≥ 1).
+    pub shards: usize,
+    /// Which detection rule produced [`Topology::shards`].
+    pub source: ShardSource,
+}
+
+/// Resolve (once) and return the process-wide topology.
+pub fn detect() -> Topology {
+    static CACHE: OnceLock<Topology> = OnceLock::new();
+    *CACHE.get_or_init(|| {
+        if let Some(n) =
+            crate::util::pool::positive_usize_env("SANDSLASH_SHARDS", "the detected node count")
+        {
+            return Topology { shards: n, source: ShardSource::Env };
+        }
+        match sysfs_node_count() {
+            Some(n) if n > 0 => Topology { shards: n, source: ShardSource::Sysfs },
+            _ => Topology { shards: 1, source: ShardSource::Fallback },
+        }
+    })
+}
+
+/// The process-wide default shard count (cached detection).
+pub fn shards() -> usize {
+    detect().shards
+}
+
+/// Count NUMA nodes the way the kernel reports them: `node<N>`
+/// directories under `/sys/devices/system/node`.
+fn sysfs_node_count() -> Option<usize> {
+    let dir = std::fs::read_dir("/sys/devices/system/node").ok()?;
+    let names = dir
+        .flatten()
+        .filter_map(|e| e.file_name().into_string().ok());
+    Some(count_node_entries(names))
+}
+
+/// `node<digits>` name filter, split out of the sysfs walk so the parse
+/// rule is unit-testable without a fake filesystem.
+fn count_node_entries(names: impl Iterator<Item = String>) -> usize {
+    names
+        .filter(|name| {
+            name.strip_prefix("node")
+                .is_some_and(|rest| !rest.is_empty() && rest.bytes().all(|b| b.is_ascii_digit()))
+        })
+        .count()
+}
+
+/// Logical shard a worker is pinned to: round-robin, so every shard gets
+/// a worker before any shard gets two (callers clamp `shards` to the
+/// worker count first, which makes the pinning surjective).
+pub fn shard_of(worker: usize, shards: usize) -> usize {
+    worker % shards.max(1)
+}
+
+/// Contiguous slice of the root-task space `0..n` owned by `shard`:
+/// `[shard*n/shards, (shard+1)*n/shards)`. The slices are disjoint,
+/// cover `0..n` exactly, and differ in length by at most one task.
+pub fn shard_range(shard: usize, shards: usize, n: usize) -> (usize, usize) {
+    let shards = shards.max(1);
+    debug_assert!(shard < shards);
+    (shard * n / shards, (shard + 1) * n / shards)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_ranges_partition_exactly() {
+        for n in [0usize, 1, 7, 64, 1000, 1001] {
+            for shards in [1usize, 2, 3, 8, 13] {
+                let mut expect = 0usize;
+                for s in 0..shards {
+                    let (lo, hi) = shard_range(s, shards, n);
+                    assert_eq!(lo, expect, "n={n} shards={shards} s={s}");
+                    assert!(hi >= lo);
+                    // balanced to within one task
+                    assert!(hi - lo <= n / shards + 1);
+                    expect = hi;
+                }
+                assert_eq!(expect, n, "n={n} shards={shards}");
+            }
+        }
+    }
+
+    #[test]
+    fn shard_of_covers_every_shard() {
+        for shards in [1usize, 2, 4] {
+            let workers = shards * 3;
+            let mut seen = vec![false; shards];
+            for w in 0..workers {
+                let s = shard_of(w, shards);
+                assert!(s < shards);
+                seen[s] = true;
+            }
+            assert!(seen.iter().all(|&x| x), "shards={shards}");
+        }
+        // degenerate inputs never divide by zero
+        assert_eq!(shard_of(5, 0), 0);
+    }
+
+    #[test]
+    fn node_entry_filter_matches_kernel_layout() {
+        let names = [
+            "node0", "node1", "node12", // real nodes
+            "node", "nodex", "node1a", "cpumap", "has_cpu", "online",
+        ];
+        let n = count_node_entries(names.iter().map(|s| s.to_string()));
+        assert_eq!(n, 3);
+        assert_eq!(count_node_entries(std::iter::empty()), 0);
+    }
+
+    #[test]
+    fn detection_is_cached_and_positive() {
+        let a = detect();
+        let b = detect();
+        assert!(a.shards >= 1);
+        assert_eq!(a.shards, b.shards);
+        assert_eq!(a.source, b.source);
+    }
+}

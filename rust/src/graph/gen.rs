@@ -83,6 +83,28 @@ pub fn ring(n: usize) -> CsrGraph {
     b.build()
 }
 
+/// Adversarially skewed two-hub graph: vertices 0 and 1 are adjacent to
+/// everything (and to each other), the remaining `n - 2` leaves form a
+/// ring among themselves. Degrees are `n-1, n-1, 4, 4, ...` — the
+/// worst case for per-root load balance, which is exactly what the
+/// scheduler regression tests need: almost all mining work sits under
+/// two root tasks, so a run only finishes promptly if the level-1
+/// candidate sets of the hubs get split across workers
+/// (`rust/tests/sched_invariance.rs`, the `pr4-sched-*` bench
+/// sections). Requires `n >= 5` so the leaf ring is simple.
+pub fn two_hub(n: usize) -> CsrGraph {
+    assert!(n >= 5, "two_hub needs at least 3 ring leaves");
+    let mut b = GraphBuilder::new(n);
+    b.add_edge(0, 1);
+    for v in 2..n as VertexId {
+        b.add_edge(0, v);
+        b.add_edge(1, v);
+        let w = if (v as usize) + 1 < n { v + 1 } else { 2 };
+        b.add_edge(v, w);
+    }
+    b.build()
+}
+
 /// Complete graph K_n: C(n,3) triangles, C(n,k) k-cliques.
 pub fn complete(n: usize) -> CsrGraph {
     let mut b = GraphBuilder::new(n);
@@ -179,6 +201,17 @@ mod tests {
         let g = complete(6);
         assert_eq!(g.num_undirected_edges(), 15);
         assert!((0..6).all(|v| g.degree(v) == 5));
+    }
+
+    #[test]
+    fn two_hub_shape() {
+        let n = 64usize;
+        let g = two_hub(n);
+        assert_eq!(g.num_vertices(), n);
+        assert_eq!(g.degree(0), (n - 1) as usize);
+        assert_eq!(g.degree(1), (n - 1) as usize);
+        // leaves: both hubs + two ring neighbors
+        assert!((2..n as u32).all(|v| g.degree(v) == 4));
     }
 
     #[test]

@@ -40,6 +40,8 @@
 //! * [`pattern`] — pattern analysis: isomorphism, symmetry breaking,
 //!   matching orders, canonical codes
 //! * [`engine`] — the mining engines and the two-level API
+//! * [`exec`] — the work-stealing, locality-sharded scheduler the
+//!   engines fan their root tasks through (cursor oracle retained)
 //! * [`apps`] — the five paper applications + hand-optimized baselines
 //! * [`runtime`] — PJRT loader for the AOT-compiled Pallas counting path
 //! * [`coordinator`] — dataset registry and experiment campaign driver
@@ -62,6 +64,7 @@
 pub mod graph;
 pub mod pattern;
 pub mod engine;
+pub mod exec;
 pub mod apps;
 pub mod runtime;
 pub mod coordinator;

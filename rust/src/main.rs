@@ -13,11 +13,16 @@
 //!
 //! `--graph` accepts a registered dataset name (see coordinator::datasets)
 //! or a path to an edge-list / .csr snapshot file.
+//!
+//! Global scheduler flags (any subcommand): `--no-steal` pins the run
+//! to the global-cursor scheduling oracle, `--shards N` overrides the
+//! detected locality shard count (PR 4; see `sandslash::exec`).
 
 use sandslash::apps::baselines::emulation::{self, System};
 use sandslash::apps::{clique, fsm_app, motif, sl, tc};
 use sandslash::coordinator::{campaign, datasets};
 use sandslash::engine::{MinerConfig, OptFlags};
+use sandslash::exec::sched::{self, Overrides};
 use sandslash::graph::{gen, io, stats, CsrGraph};
 use sandslash::pattern::library;
 use sandslash::util::cli::Args;
@@ -30,7 +35,12 @@ fn main() {
 }
 
 fn run(args: &Args) -> i32 {
-    match args.subcommand.as_deref() {
+    // Scheduler flags apply through scoped overrides around the whole
+    // dispatch: the hand-tuned apps (tc_hi, clique DAG loops, motif
+    // formulas) reach the scheduler through the `util::pool` adapters,
+    // which never see `MinerConfig::steal`/`shards` — only the
+    // overrides (and the env kill switch) reach every path.
+    sched::with_overrides(sched_overrides(args), || match args.subcommand.as_deref() {
         Some("gen") => cmd_gen(args),
         Some("stats") => cmd_stats(args),
         Some("tc") => cmd_tc(args),
@@ -44,7 +54,26 @@ fn run(args: &Args) -> i32 {
             eprintln!("{}", USAGE);
             2
         }
-    }
+    })
+}
+
+/// Scheduler knobs (PR 4): `--no-steal` pins the run to the
+/// global-cursor oracle, `--shards N` overrides topology detection.
+/// An unusable `--shards` value is rejected *loudly*, matching the
+/// `SANDSLASH_SHARDS` contract — never silently applied or dropped.
+fn sched_overrides(args: &Args) -> Overrides {
+    let steal = args.flag("no-steal").then_some(false);
+    let shards = args.get("shards").and_then(|raw| match raw.trim().parse::<usize>() {
+        Ok(n) if n > 0 => Some(n),
+        _ => {
+            eprintln!(
+                "sandslash: ignoring --shards {raw:?} (must be a positive integer); \
+                 using the detected topology"
+            );
+            None
+        }
+    });
+    Overrides { steal, shards }
 }
 
 const USAGE: &str = "sandslash <gen|stats|tc|clique|motif|sl|fsm|accel|campaign> [options]\n\
@@ -79,6 +108,21 @@ fn config(args: &Args) -> MinerConfig {
     let mut cfg = MinerConfig::new(opts);
     if let Some(t) = args.get("threads") {
         cfg.threads = t.parse().unwrap_or(cfg.threads);
+    }
+    // mirror the scheduler flags into the per-run config too (the
+    // scoped overrides from `run` are what the adapter paths obey;
+    // keeping the config in sync makes Debug dumps tell the truth —
+    // invalid `--shards` values already warned loudly in
+    // `sched_overrides`, so the mirror stays quiet)
+    if args.flag("no-steal") {
+        cfg.steal = false;
+    }
+    if let Some(n) = args
+        .get("shards")
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&n| n > 0)
+    {
+        cfg.shards = Some(n);
     }
     cfg
 }

@@ -123,7 +123,7 @@ mod tests {
     fn tiled_trace_counts_triangles() {
         let g = gen::erdos_renyi(300, 0.05, 3, &[]);
         let tiled = TiledAdjacency::build(&g, true);
-        let cfg = MinerConfig { threads: 2, chunk: 16, opts: OptFlags::hi() };
+        let cfg = MinerConfig::custom(2, 16, OptFlags::hi());
         let want = tc_hi(&g, &cfg) as f64;
         assert_eq!(tiled.masked_trace_cpu(), want);
     }

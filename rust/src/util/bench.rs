@@ -25,7 +25,14 @@
 //! `setops::set_simd_enabled(false)` (portable scalar kernels) and
 //! once with runtime feature detection — so the rows differ only in
 //! kernel dispatch, which the writers verify through the
-//! [`crate::util::metrics::dispatch`] counters.
+//! [`crate::util::metrics::dispatch`] counters. The PR-4 sections
+//! (`pr4-sched-tc`, `pr4-sched-kcl4`, via [`Pr4Section::write`] and
+//! the shared [`pr4_compare`] protocol) apply the identical recipe to
+//! the *scheduler*: the same workload on the global-cursor oracle and
+//! on the work-stealing pool, counts asserted equal, and — on an
+//! adversarially skewed two-hub input — the
+//! [`crate::util::metrics::sched`] counters asserted to show that
+//! steals/splits actually fired.
 //!
 //! Writers must assert their differential check (scalar count ==
 //! set-centric count, scalar-kernel count == SIMD-kernel count)
@@ -272,7 +279,8 @@ pub fn pr1_meta(threads: usize) -> Json {
         .str(
             "regenerate",
             "cargo test -q (smoke) or cargo bench --bench table5_tc / table6_kcl (sampled); \
-             pr3-* sections compare the scalar vs SIMD kernel dispatch from the same run",
+             pr3-* sections compare the scalar vs SIMD kernel dispatch and pr4-sched-* \
+             sections the cursor vs work-stealing scheduler, each from the same run",
         )
 }
 
@@ -425,6 +433,143 @@ impl Pr3Section<'_> {
             .num("scalar_kernel_secs", self.scalar_secs)
             .num("simd_kernel_secs", self.simd_secs)
             .num("speedup_simd_over_scalar", self.speedup())
+            .int("samples", self.samples as u64);
+        upsert_bench_section(&pr1_report_path(), &pr1_meta(threads), section, &body)
+    }
+}
+
+/// One measured cursor-vs-stealing scheduler comparison (EXPERIMENTS.md
+/// §PR-4), as recorded in a `pr4-sched-*` report section: the same
+/// mining workload scheduled by the seed global-cursor oracle and by
+/// the work-stealing pool ([`crate::exec::sched`]), from the same
+/// process, so the rows differ only in scheduling. Shared by the
+/// benches and the tier-1 smoke test so the JSON schema cannot drift
+/// between writers.
+pub struct Pr4Section<'a> {
+    /// Input description (generator + parameters) of the timed rows.
+    pub graph: &'a str,
+    /// Pattern name.
+    pub pattern: &'a str,
+    /// Agreed embedding count (differential check across schedulers).
+    pub count: u64,
+    /// *Effective* locality shard count of the timed stealing row —
+    /// the detected topology clamped to the row's worker count,
+    /// exactly as the pool builds it (never more shards than workers).
+    pub shards: usize,
+    /// Wall time on the global-cursor oracle (seconds).
+    pub cursor_secs: f64,
+    /// Wall time on the work-stealing scheduler (seconds).
+    pub steal_secs: f64,
+    /// Deque steals observed on the skewed check input.
+    pub skew_steals: u64,
+    /// Split tasks published on the skewed check input.
+    pub skew_splits: u64,
+    /// Number of timing samples behind the figures.
+    pub samples: usize,
+}
+
+/// Run the §PR-4 cursor-vs-stealing measurement protocol once and
+/// return the section row — the single implementation shared by the
+/// tier-1 smoke test and the `table5_tc`/`table6_kcl` benches, exactly
+/// as [`pr3_compare`] is for the kernel dispatch:
+///
+/// 1. call `timed_run` (which must return the embedding count and the
+///    wall seconds to record) twice under scoped scheduler overrides —
+///    first pinned to the cursor oracle, then with stealing on — and
+///    assert both runs agree on the count;
+/// 2. call `skew_check` (one cheap pass over an adversarially skewed
+///    input, e.g. [`crate::graph::gen::two_hub`]; its wall time is
+///    never recorded) under the same two overrides, asserting the
+///    counts agree, that the oracle pass moved **no**
+///    [`crate::util::metrics::sched`] migration counter, and — when
+///    this process can actually run parallel (`skew_threads > 1`,
+///    more than one core, no `SANDSLASH_NO_STEAL`) — that the
+///    stealing pass fired at least one steal, split, or cross-shard
+///    claim.
+///
+/// `timed_threads` is the worker count of the configuration inside
+/// `timed_run` and `skew_threads` the one inside `skew_check` — the
+/// first determines the *effective* shard count recorded in the
+/// section, the second the migration-assertion guard. The closures
+/// should build their configs with default scheduler knobs (the
+/// scoped overrides outrank `MinerConfig::steal`); the previous
+/// override state is restored before returning.
+pub fn pr4_compare<'a>(
+    graph: &'a str,
+    pattern: &'a str,
+    samples: usize,
+    timed_threads: usize,
+    skew_threads: usize,
+    mut timed_run: impl FnMut() -> (u64, f64),
+    mut skew_check: impl FnMut() -> u64,
+) -> Pr4Section<'a> {
+    use crate::exec::sched::{self, Overrides};
+    use crate::util::metrics::sched as counters;
+    let oracle = Overrides { steal: Some(false), shards: None };
+    let stealing = Overrides { steal: Some(true), shards: None };
+    let (cursor_count, cursor_secs) = sched::with_overrides(oracle, &mut timed_run);
+    let (steal_count, steal_secs) = sched::with_overrides(stealing, &mut timed_run);
+    assert_eq!(
+        cursor_count, steal_count,
+        "cursor vs stealing scheduler disagree on {graph} / {pattern}"
+    );
+    let before = counters::snapshot();
+    let skew_cursor = sched::with_overrides(oracle, &mut skew_check);
+    let mid = counters::snapshot();
+    let skew_steal = sched::with_overrides(stealing, &mut skew_check);
+    let after = counters::snapshot();
+    assert_eq!(
+        skew_cursor, skew_steal,
+        "cursor vs stealing scheduler disagree on the skewed input for {pattern}"
+    );
+    assert_eq!(
+        mid.migrations(),
+        before.migrations(),
+        "the cursor oracle must never steal, split, or cross shards"
+    );
+    let skew_steals = after.steals - mid.steals;
+    let skew_splits = after.splits - mid.splits;
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    if sched::steal_enabled_default() && skew_threads > 1 && cores > 1 {
+        assert!(
+            after.migrations() > mid.migrations(),
+            "stealing enabled but no steal/split/shard migration fired on the skewed input \
+             for {pattern}"
+        );
+    }
+    Pr4Section {
+        graph,
+        pattern,
+        count: steal_count,
+        // the shard count the timed stealing row actually ran with
+        // (the pool clamps detection to the worker count)
+        shards: crate::exec::topology::shards().clamp(1, timed_threads.max(1)),
+        cursor_secs,
+        steal_secs,
+        skew_steals,
+        skew_splits,
+        samples,
+    }
+}
+
+impl Pr4Section<'_> {
+    /// Cursor-over-stealing speedup (> 1 means stealing won).
+    pub fn speedup(&self) -> f64 {
+        self.cursor_secs / self.steal_secs
+    }
+
+    /// Upsert this section into the shared report at the repo root.
+    pub fn write(&self, section: &str, threads: usize) -> std::io::Result<()> {
+        let body = Json::new()
+            .str("graph", self.graph)
+            .str("pattern", self.pattern)
+            .int("count", self.count)
+            .int("shards", self.shards as u64)
+            .num("cursor_secs", self.cursor_secs)
+            .num("steal_secs", self.steal_secs)
+            .num("speedup_steal_over_cursor", self.speedup())
+            .int("skew_steals", self.skew_steals)
+            .int("skew_splits", self.skew_splits)
             .int("samples", self.samples as u64);
         upsert_bench_section(&pr1_report_path(), &pr1_meta(threads), section, &body)
     }

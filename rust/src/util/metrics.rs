@@ -127,6 +127,91 @@ pub mod dispatch {
     }
 }
 
+/// Scheduling-event counters for the work-stealing executor
+/// ([`crate::exec::sched`]).
+///
+/// Unlike [`crate::util::metrics::dispatch`], these are **always on**:
+/// scheduling events happen once per *task* (a block of roots, a
+/// steal, a published split) — orders of magnitude rarer than kernel
+/// dispatches — so one relaxed increment on a padded line is noise
+/// next to the task body, and always-on counting lets the invariance
+/// suite and the `pr4-*` bench sections assert that stealing actually
+/// fired without a global enable handshake. Counters are
+/// process-global and monotone: attribute events to a code region via
+/// [`snapshot`](crate::util::metrics::sched::snapshot) deltas.
+pub mod sched {
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    /// A counter alone on its cache line (no false sharing between
+    /// event families).
+    #[repr(align(64))]
+    struct PaddedCounter(AtomicU64);
+
+    static CLAIMS: PaddedCounter = PaddedCounter(AtomicU64::new(0));
+    static STEALS: PaddedCounter = PaddedCounter(AtomicU64::new(0));
+    static SHARD_CLAIMS: PaddedCounter = PaddedCounter(AtomicU64::new(0));
+    static SPLITS: PaddedCounter = PaddedCounter(AtomicU64::new(0));
+
+    /// Point-in-time copy of every scheduler counter.
+    #[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+    pub struct SchedCounts {
+        /// Root blocks claimed from the worker's own shard cursor.
+        pub claims: u64,
+        /// Tasks stolen from another worker's deque (any shard).
+        pub steals: u64,
+        /// Root blocks claimed from a *foreign* shard's cursor (only
+        /// after the thief's own shard fully drained).
+        pub shard_claims: u64,
+        /// Level-1 candidate suffixes published as split tasks.
+        pub splits: u64,
+    }
+
+    impl SchedCounts {
+        /// Total tasks that moved off their home worker or shard — the
+        /// "did load balancing actually happen" aggregate the skewed
+        /// regression tests assert on.
+        pub fn migrations(&self) -> u64 {
+            self.steals + self.shard_claims + self.splits
+        }
+    }
+
+    /// Read all counters (relaxed loads: exact under quiescence,
+    /// monotone lower bounds under concurrency).
+    pub fn snapshot() -> SchedCounts {
+        SchedCounts {
+            claims: CLAIMS.0.load(Ordering::Relaxed),
+            steals: STEALS.0.load(Ordering::Relaxed),
+            shard_claims: SHARD_CLAIMS.0.load(Ordering::Relaxed),
+            splits: SPLITS.0.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Zero every counter. Racy against concurrent miners — inside a
+    /// shared test binary prefer [`snapshot`] deltas instead.
+    pub fn reset() {
+        for c in [&CLAIMS, &STEALS, &SHARD_CLAIMS, &SPLITS] {
+            c.0.store(0, Ordering::Relaxed);
+        }
+    }
+
+    #[inline]
+    pub(crate) fn note_claim() {
+        CLAIMS.0.fetch_add(1, Ordering::Relaxed);
+    }
+    #[inline]
+    pub(crate) fn note_steal() {
+        STEALS.0.fetch_add(1, Ordering::Relaxed);
+    }
+    #[inline]
+    pub(crate) fn note_shard_claim() {
+        SHARD_CLAIMS.0.fetch_add(1, Ordering::Relaxed);
+    }
+    #[inline]
+    pub(crate) fn note_split() {
+        SPLITS.0.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
 #[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
 /// Search-space counters (kept per thread, merged at the end).
 pub struct SearchStats {
@@ -223,6 +308,22 @@ mod tests {
         assert!(after.word_parallel > before.word_parallel);
         assert!(after.mask_filter > before.mask_filter);
         assert!(after.gather_filter > before.gather_filter);
+    }
+
+    #[test]
+    fn sched_counters_record_and_aggregate() {
+        let before = sched::snapshot();
+        sched::note_claim();
+        sched::note_steal();
+        sched::note_shard_claim();
+        sched::note_split();
+        let after = sched::snapshot();
+        assert!(after.claims > before.claims);
+        assert!(after.steals > before.steals);
+        assert!(after.shard_claims > before.shard_claims);
+        assert!(after.splits > before.splits);
+        // migrations counts everything except home-shard claims
+        assert!(after.migrations() >= before.migrations() + 3);
     }
 
     #[test]

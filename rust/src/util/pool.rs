@@ -1,13 +1,26 @@
-//! Parallel execution substrate.
+//! Parallel execution substrate — thin adapters over the scheduler.
 //!
 //! The paper parallelizes DFS mining with per-root-vertex tasks and
-//! work-stealing. We implement the equivalent with scoped threads plus
-//! *dynamic self-scheduling*: workers claim chunks of the task range from
-//! a shared atomic cursor, which gives the same dynamic load balance as a
-//! stealing deque for this workload shape (many independent root tasks of
-//! wildly varying cost) with no unsafe code and no external crates.
+//! work-stealing. Since PR 4 the real machinery lives in
+//! [`crate::exec::sched`]: per-worker stealing deques over shard-local
+//! cursors, with the seed global-cursor loop retained as the scheduling
+//! oracle. This module keeps the seed-era `parallel_for` /
+//! `parallel_reduce` signatures so the engine, app, and baseline call
+//! sites never changed — they resolve a default
+//! [`SchedPolicy`](crate::exec::sched::SchedPolicy) (stealing on unless
+//! `SANDSLASH_NO_STEAL=1` or a scoped
+//! [`with_overrides`](crate::exec::sched::with_overrides) says
+//! otherwise) and forward. It also owns the process-wide environment
+//! knobs: `SANDSLASH_THREADS` and `SANDSLASH_CHUNK`, both resolved
+//! once per process through the same loud-reject parse contract.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+use crate::exec::sched::{self, SchedPolicy, Task};
+
+/// Seed-era dynamic self-scheduling chunk size, now the stealing
+/// scheduler's grain (roots processed per deque interaction).
+pub const DEFAULT_CHUNK: usize = 64;
 
 /// Number of worker threads to use (overridable via `SANDSLASH_THREADS`).
 ///
@@ -15,34 +28,58 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 /// rejected *loudly* (one stderr warning per process) before falling
 /// back to all cores. Silently swallowing it made campaign runs report
 /// a thread count in BENCH metadata that was never actually applied.
+///
+/// The resolved value is cached for the process lifetime (`OnceLock`):
+/// campaign loops used to pay an env-var syscall on every
+/// `MinerConfig::new`, and the cache is also what guarantees the
+/// warning truly fires once. Consequently the variable is pinned at
+/// first use — set it before the process starts, not mid-run.
 pub fn default_threads() -> usize {
-    if let Ok(v) = std::env::var("SANDSLASH_THREADS") {
-        match parse_thread_override(&v) {
-            Ok(n) => return n,
-            Err(why) => {
-                static WARN_ONCE: std::sync::Once = std::sync::Once::new();
-                WARN_ONCE.call_once(|| {
-                    eprintln!(
-                        "sandslash: ignoring SANDSLASH_THREADS={v:?} ({why}); \
-                         using all available cores"
-                    );
-                });
-            }
-        }
-    }
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    static CACHE: OnceLock<usize> = OnceLock::new();
+    *CACHE.get_or_init(|| {
+        positive_usize_env("SANDSLASH_THREADS", "all available cores").unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        })
+    })
 }
 
-/// Parse a `SANDSLASH_THREADS` override: a positive integer,
-/// surrounding whitespace tolerated. The error names the reason for
-/// the one-shot stderr warning in [`default_threads`].
-fn parse_thread_override(raw: &str) -> Result<usize, &'static str> {
+/// Root-task grain (overridable via `SANDSLASH_CHUNK`, default
+/// [`DEFAULT_CHUNK`]) — same loud-reject parse contract and
+/// process-lifetime caching as [`default_threads`].
+pub fn default_chunk() -> usize {
+    static CACHE: OnceLock<usize> = OnceLock::new();
+    *CACHE.get_or_init(|| {
+        positive_usize_env("SANDSLASH_CHUNK", "the built-in chunk size").unwrap_or(DEFAULT_CHUNK)
+    })
+}
+
+/// Shared loud-reject env override: `Some(n)` for a usable positive
+/// integer, `None` when the variable is unset **or** unusable — the
+/// unusable case warns on stderr (naming the variable, the rejected
+/// value, the reason, and the `fallback` the caller will use) instead
+/// of being silently swallowed. Callers cache the result in a
+/// `OnceLock`, which is what bounds the warning to once per process.
+pub(crate) fn positive_usize_env(var: &str, fallback: &str) -> Option<usize> {
+    let raw = std::env::var(var).ok()?;
+    match parse_positive_usize(&raw) {
+        Ok(n) => Some(n),
+        Err(why) => {
+            eprintln!("sandslash: ignoring {var}={raw:?} ({why}); using {fallback}");
+            None
+        }
+    }
+}
+
+/// Parse one positive-integer override: surrounding whitespace
+/// tolerated, zero and garbage rejected with the reason that lands in
+/// the one-shot stderr warning of [`positive_usize_env`].
+fn parse_positive_usize(raw: &str) -> Result<usize, &'static str> {
     let trimmed = raw.trim();
     if trimmed.is_empty() {
         return Err("empty value");
     }
     match trimmed.parse::<usize>() {
-        Ok(0) => Err("thread count must be positive"),
+        Ok(0) => Err("value must be positive"),
         Ok(n) => Ok(n),
         Err(_) => Err("not an unsigned integer"),
     }
@@ -52,30 +89,7 @@ fn parse_thread_override(raw: &str) -> Result<usize, &'static str> {
 /// `f(worker_id, index)` must be safe to run concurrently for distinct
 /// indices.
 pub fn parallel_for(n: usize, threads: usize, chunk: usize, f: impl Fn(usize, usize) + Sync) {
-    let threads = threads.max(1);
-    if threads == 1 || n <= chunk {
-        for i in 0..n {
-            f(0, i);
-        }
-        return;
-    }
-    let cursor = AtomicUsize::new(0);
-    std::thread::scope(|scope| {
-        for tid in 0..threads {
-            let cursor = &cursor;
-            let f = &f;
-            scope.spawn(move || loop {
-                let start = cursor.fetch_add(chunk, Ordering::Relaxed);
-                if start >= n {
-                    break;
-                }
-                let end = (start + chunk).min(n);
-                for i in start..end {
-                    f(tid, i);
-                }
-            });
-        }
-    });
+    sched::for_each(n, &SchedPolicy::auto(threads, chunk), f);
 }
 
 /// Parallel map-reduce over `0..n` with per-worker accumulators.
@@ -83,73 +97,67 @@ pub fn parallel_for(n: usize, threads: usize, chunk: usize, f: impl Fn(usize, us
 /// `init` builds one accumulator per worker, `f` folds an index into it,
 /// and `merge` combines the per-worker results. This is the backbone of
 /// every counting app: accumulators are per-thread (no atomics in the hot
-/// loop), merged once at the end.
+/// loop), merged once at the end. Scheduling (stealing vs the cursor
+/// oracle, shard count) comes from the process defaults — callers that
+/// need per-run control use [`sched::reduce`] directly.
 pub fn parallel_reduce<A: Send>(
     n: usize,
     threads: usize,
     chunk: usize,
     init: impl Fn() -> A + Sync,
     f: impl Fn(&mut A, usize) + Sync,
-    mut merge: impl FnMut(A, A) -> A,
+    merge: impl FnMut(A, A) -> A,
 ) -> A {
-    let threads = threads.max(1);
-    if threads == 1 || n <= chunk {
-        let mut acc = init();
-        for i in 0..n {
-            f(&mut acc, i);
-        }
-        return acc;
-    }
-    let cursor = AtomicUsize::new(0);
-    let results: Vec<A> = std::thread::scope(|scope| {
-        let handles: Vec<_> = (0..threads)
-            .map(|_| {
-                let cursor = &cursor;
-                let f = &f;
-                let init = &init;
-                scope.spawn(move || {
-                    let mut acc = init();
-                    loop {
-                        let start = cursor.fetch_add(chunk, Ordering::Relaxed);
-                        if start >= n {
-                            break;
-                        }
-                        let end = (start + chunk).min(n);
-                        for i in start..end {
-                            f(&mut acc, i);
-                        }
-                    }
-                    acc
-                })
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().unwrap()).collect()
-    });
-    let mut it = results.into_iter();
-    let first = it.next().unwrap();
-    it.fold(first, |a, b| merge(a, b))
+    sched::reduce(
+        n,
+        &SchedPolicy::auto(threads, chunk),
+        init,
+        |acc, _, task| match task {
+            Task::Roots { start, end } => {
+                for i in start..end {
+                    f(acc, i);
+                }
+            }
+            Task::Split { .. } => {
+                unreachable!("index adapters never publish split tasks")
+            }
+        },
+        merge,
+    )
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::AtomicU64;
+    use std::sync::atomic::{AtomicU64, Ordering};
 
     #[test]
-    fn thread_override_parse_paths() {
+    fn positive_override_parse_paths() {
         // valid values, with and without surrounding whitespace
-        assert_eq!(parse_thread_override("1"), Ok(1));
-        assert_eq!(parse_thread_override("8"), Ok(8));
-        assert_eq!(parse_thread_override(" 16 "), Ok(16));
+        assert_eq!(parse_positive_usize("1"), Ok(1));
+        assert_eq!(parse_positive_usize("8"), Ok(8));
+        assert_eq!(parse_positive_usize(" 16 "), Ok(16));
         // rejected: zero, garbage, negatives, empties, fractions
-        assert_eq!(parse_thread_override("0"), Err("thread count must be positive"));
-        assert_eq!(parse_thread_override(" 0 "), Err("thread count must be positive"));
-        assert_eq!(parse_thread_override(""), Err("empty value"));
-        assert_eq!(parse_thread_override("   "), Err("empty value"));
-        assert_eq!(parse_thread_override("abc"), Err("not an unsigned integer"));
-        assert_eq!(parse_thread_override("-4"), Err("not an unsigned integer"));
-        assert_eq!(parse_thread_override("2.5"), Err("not an unsigned integer"));
-        assert_eq!(parse_thread_override("8 cores"), Err("not an unsigned integer"));
+        assert_eq!(parse_positive_usize("0"), Err("value must be positive"));
+        assert_eq!(parse_positive_usize(" 0 "), Err("value must be positive"));
+        assert_eq!(parse_positive_usize(""), Err("empty value"));
+        assert_eq!(parse_positive_usize("   "), Err("empty value"));
+        assert_eq!(parse_positive_usize("abc"), Err("not an unsigned integer"));
+        assert_eq!(parse_positive_usize("-4"), Err("not an unsigned integer"));
+        assert_eq!(parse_positive_usize("2.5"), Err("not an unsigned integer"));
+        assert_eq!(parse_positive_usize("8 cores"), Err("not an unsigned integer"));
+    }
+
+    #[test]
+    fn resolved_knobs_are_positive_and_cached() {
+        // Cannot assert exact values (environment-dependent), but the
+        // contract is: positive, and stable across calls in a process.
+        let t = default_threads();
+        assert!(t >= 1);
+        assert_eq!(default_threads(), t);
+        let c = default_chunk();
+        assert!(c >= 1);
+        assert_eq!(default_chunk(), c);
     }
 
     #[test]
@@ -182,5 +190,24 @@ mod tests {
         let a = parallel_reduce(100, 1, 16, || 0u64, |acc, i| *acc += i as u64, |a, b| a + b);
         let b = parallel_reduce(100, 8, 16, || 0u64, |acc, i| *acc += i as u64, |a, b| a + b);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn adapters_honor_scoped_overrides() {
+        // both the oracle and the stealing pool must produce the same
+        // reduction through the unchanged adapter signature
+        let want = 999 * 1000 / 2;
+        for steal in [false, true] {
+            for shards in [1usize, 2] {
+                let ov = crate::exec::sched::Overrides {
+                    steal: Some(steal),
+                    shards: Some(shards),
+                };
+                let got = crate::exec::sched::with_overrides(ov, || {
+                    parallel_reduce(1000, 4, 8, || 0u64, |acc, i| *acc += i as u64, |a, b| a + b)
+                });
+                assert_eq!(got, want, "steal={steal} shards={shards}");
+            }
+        }
     }
 }

@@ -1,21 +1,25 @@
-//! Tier-1 smoke benchmark for the PR-1 set-centric extension work and
-//! the PR-3 SIMD kernel dispatch: every `cargo test` run (a)
-//! differentially checks the scalar and set-centric paths on RMAT(2^14)
-//! inputs at full scale, (b) re-runs the set-centric configuration with
-//! the vectorized kernels force-disabled and re-enabled — asserting via
-//! the dispatch counters that the SIMD merge is actually *selected* on
-//! the TC and k-CL workloads when the host supports it — and (c)
-//! rewrites `BENCH_pr1.json` at the repo root with single-shot wall
-//! times. The `table5_tc` / `table6_kcl` benches overwrite the same
-//! sections with properly sampled release numbers — this test just
-//! keeps the artifact alive and honest on every tier-1 run.
+//! Tier-1 smoke benchmark for the PR-1 set-centric extension work, the
+//! PR-3 SIMD kernel dispatch, and the PR-4 scheduler swap: every
+//! `cargo test` run (a) differentially checks the scalar and
+//! set-centric paths on RMAT(2^14) inputs at full scale, (b) re-runs
+//! the set-centric configuration with the vectorized kernels
+//! force-disabled and re-enabled — asserting via the dispatch counters
+//! that the SIMD merge is actually *selected* on the TC and k-CL
+//! workloads when the host supports it — (c) re-runs the same
+//! workloads on the global-cursor oracle and the work-stealing
+//! scheduler, asserting equal counts everywhere and (on a skewed
+//! two-hub input) that steals/splits actually fire, and (d) rewrites
+//! `BENCH_pr1.json` at the repo root with single-shot wall times. The
+//! `table5_tc` / `table6_kcl` benches overwrite the same sections with
+//! properly sampled release numbers — this test just keeps the
+//! artifact alive and honest on every tier-1 run.
 
 use sandslash::engine::hooks::NoHooks;
 use sandslash::engine::{dfs, MinerConfig, OptFlags};
 use sandslash::graph::{gen, setops};
 use sandslash::graph::CsrGraph;
 use sandslash::pattern::{library, plan, Pattern};
-use sandslash::util::bench::{pr1_report_path, pr3_compare, Pr1Section};
+use sandslash::util::bench::{pr1_report_path, pr3_compare, pr4_compare, Pr1Section};
 use sandslash::util::timer::timed;
 
 fn measure_and_write(
@@ -83,6 +87,44 @@ fn measure_pr3(
     s.speedup()
 }
 
+/// PR-4 rows (§PR-4) through the shared protocol (`bench::pr4_compare`):
+/// the same set-centric run scheduled by the global-cursor oracle and
+/// by the work-stealing pool; count equality asserted on both the timed
+/// input and a skewed two-hub input, where the scheduler counters must
+/// also show steals/splits actually firing (when this host can run
+/// parallel at all).
+fn measure_pr4(
+    g: &CsrGraph,
+    p: &Pattern,
+    skew: &CsrGraph,
+    graph_desc: &str,
+    pname: &str,
+    section: &str,
+) -> f64 {
+    let pl = plan(p, true, true);
+    let cfg = MinerConfig::new(OptFlags::hi());
+    // small grain so the skewed run has enough tasks to starve workers
+    // into the split protocol
+    let skew_cfg = MinerConfig::custom(cfg.threads.max(4), 1, OptFlags::hi());
+    let s = pr4_compare(
+        graph_desc,
+        pname,
+        1,
+        cfg.threads,
+        skew_cfg.threads,
+        || {
+            let (count, _) = dfs::count(g, &pl, &cfg, &NoHooks); // warmup + count
+            let (_, secs) = timed(|| dfs::count(g, &pl, &cfg, &NoHooks).0);
+            (count, secs)
+        },
+        || dfs::count(skew, &pl, &skew_cfg, &NoHooks).0,
+    );
+    if let Err(e) = s.write(section, cfg.threads) {
+        eprintln!("skipping BENCH_pr1.json write: {e}");
+    }
+    s.speedup()
+}
+
 #[test]
 fn bench_pr1_smoke_regenerates_report() {
     let g_tc = gen::rmat(14, 8, 42, &[]);
@@ -116,10 +158,31 @@ fn bench_pr1_smoke_regenerates_report() {
         "4-clique",
         "pr3-kcl4",
     );
+    // PR-4: cursor vs work-stealing scheduler on the same two
+    // workloads; the skewed two-hub input inside the shared protocol
+    // asserts steals/splits actually fire
+    let skew = gen::two_hub(1 << 13);
+    let tc_sched = measure_pr4(
+        &g_tc,
+        &library::triangle(),
+        &skew,
+        "rmat scale=14 ef=8 seed=42",
+        "triangle",
+        "pr4-sched-tc",
+    );
+    let cl_sched = measure_pr4(
+        &g_cl,
+        &library::clique(4),
+        &skew,
+        "rmat scale=14 ef=4 seed=42",
+        "4-clique",
+        "pr4-sched-kcl4",
+    );
     eprintln!(
         "BENCH_pr1 smoke: set-centric speedup over scalar — tc {tc_speedup:.2}x, \
          4-clique {cl_speedup:.2}x; {} kernels over scalar kernels — tc {tc_simd:.2}x, \
-         4-clique {cl_simd:.2}x ({})",
+         4-clique {cl_simd:.2}x; stealing over cursor — tc {tc_sched:.2}x, \
+         4-clique {cl_sched:.2}x ({})",
         setops::simd_level_name(),
         pr1_report_path().display()
     );

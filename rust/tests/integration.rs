@@ -10,7 +10,7 @@ use sandslash::graph::gen;
 use sandslash::pattern::library;
 
 fn cfg() -> MinerConfig {
-    MinerConfig { threads: 4, chunk: 16, opts: OptFlags::hi() }
+    MinerConfig::custom(4, 16, OptFlags::hi())
 }
 
 const SYSTEMS: [System; 5] = [
@@ -96,7 +96,7 @@ fn fsm_three_engines_agree() {
 fn thread_scaling_preserves_all_results() {
     let g = gen::rmat(9, 8, 8, &[]);
     for threads in [1, 2, 8] {
-        let c = MinerConfig { threads, chunk: 8, opts: OptFlags::hi() };
+        let c = MinerConfig::custom(threads, 8, OptFlags::hi());
         assert_eq!(tc::tc_hi(&g, &c), tc::tc_hi(&g, &cfg()));
         assert_eq!(clique::clique_lo(&g, 5, &c).0, clique::clique_lo(&g, 5, &cfg()).0);
         assert_eq!(motif::motif4_lo(&g, &c), motif::motif4_lo(&g, &cfg()));

@@ -42,7 +42,7 @@ fn count_with(
     threads: usize,
 ) -> u64 {
     let pl = plan(p, vertex_induced, true);
-    let cfg = MinerConfig { threads, chunk: 16, opts };
+    let cfg = MinerConfig::custom(threads, 16, opts);
     dfs::count(g, &pl, &cfg, &NoHooks).0
 }
 

@@ -10,7 +10,7 @@ use sandslash::pattern::library;
 use sandslash::util::rng::Rng;
 
 fn cfg() -> MinerConfig {
-    MinerConfig { threads: 2, chunk: 16, opts: OptFlags::hi() }
+    MinerConfig::custom(2, 16, OptFlags::hi())
 }
 
 /// Random graph drawn from a seeded family mix.

@@ -10,7 +10,7 @@ use sandslash::runtime::accel::Accelerator;
 use sandslash::runtime::tiles::TiledAdjacency;
 
 fn cfg() -> MinerConfig {
-    MinerConfig { threads: 2, chunk: 16, opts: OptFlags::hi() }
+    MinerConfig::custom(2, 16, OptFlags::hi())
 }
 
 fn accel() -> Option<Accelerator> {

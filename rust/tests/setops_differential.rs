@@ -257,7 +257,7 @@ fn engine_counts_invariant_under_simd_toggle() {
         // kernels
         for p in [library::diamond(), library::clique(5)] {
             let pl = plan(&p, true, true);
-            let lo = MinerConfig { threads: 2, chunk: 16, opts: OptFlags::lo() };
+            let lo = MinerConfig::custom(2, 16, OptFlags::lo());
             setops::set_simd_enabled(false);
             let a = dfs::count(&g, &pl, &lo, &NoHooks).0;
             setops::set_simd_enabled(true);
@@ -292,7 +292,7 @@ fn count_with(
     let mut opts = OptFlags::hi();
     opts.sets = sets;
     opts.mnc = mnc;
-    let cfg = MinerConfig { threads, chunk: 16, opts };
+    let cfg = MinerConfig::custom(threads, 16, opts);
     dfs::count(g, &pl, &cfg, &NoHooks).0
 }
 
