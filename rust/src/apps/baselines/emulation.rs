@@ -165,7 +165,9 @@ pub fn motifs(g: &CsrGraph, k: usize, sys: System, cfg: &MinerConfig) -> Vec<u64
         },
         System::PangolinLike => {
             let table = MotifTable::new(k);
-            bfs_count_motifs(g, k, &cfg, &table).counts
+            bfs_count_motifs(g, k, &cfg, &table)
+                .unwrap_or_else(|e| panic!("pangolin-like BFS emulation aborted: {e}"))
+                .counts
         }
         // pattern-at-a-time: match each motif separately through the
         // pattern-guided engine (vertex-induced plans)

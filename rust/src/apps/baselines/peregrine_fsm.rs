@@ -174,7 +174,7 @@ mod tests {
     fn agrees_with_dfs_fsm_on_patterns_and_support() {
         let g = gen::erdos_renyi(40, 0.12, 3, &[1, 2]);
         let cfg = MinerConfig::custom(2, 8, OptFlags::hi());
-        let a = mine_fsm(&g, 3, 1, 2);
+        let a = mine_fsm(&g, 3, 1, &cfg);
         let b = peregrine_fsm(&g, 3, 1, &cfg);
         let sa: Vec<_> = a.frequent.iter().map(|f| (f.code.clone(), f.support)).collect();
         let sb: Vec<_> = b.frequent.iter().map(|f| (f.code.clone(), f.support)).collect();

@@ -6,26 +6,29 @@ use crate::engine::fsm::{mine_fsm, mine_fsm_bfs, FsmResult};
 use crate::engine::MinerConfig;
 use crate::graph::CsrGraph;
 
-/// Sandslash k-FSM (DFS on the sub-pattern tree).
+/// Sandslash k-FSM (DFS on the sub-pattern tree). The full `cfg` is
+/// forwarded (PR 5): thread count, scheduler knobs (fat root-pattern
+/// bins publish split tasks under starvation), and the extension-core
+/// toggle.
 pub fn fsm(g: &CsrGraph, max_edges: usize, min_support: u64, cfg: &MinerConfig) -> FsmResult {
-    mine_fsm(g, max_edges, min_support, cfg.threads)
+    mine_fsm(g, max_edges, min_support, cfg)
 }
 
 /// BFS variant (Pangolin-like / Peregrine-FSM-like level sync).
 pub fn fsm_bfs(g: &CsrGraph, max_edges: usize, min_support: u64, cfg: &MinerConfig) -> FsmResult {
-    mine_fsm_bfs(g, max_edges, min_support, cfg.threads)
+    mine_fsm_bfs(g, max_edges, min_support, cfg)
 }
 
 /// DistGraph-like: the same gSpan-style DFS with a single work queue
 /// (coarse tasks — DistGraph's dynamic splitting is approximated by our
-/// root-level task pool at chunk 1).
+/// root-level task pool at chunk 1, pinned to one worker).
 pub fn fsm_distgraph_like(
     g: &CsrGraph,
     max_edges: usize,
     min_support: u64,
-    _cfg: &MinerConfig,
+    cfg: &MinerConfig,
 ) -> FsmResult {
-    mine_fsm(g, max_edges, min_support, 1)
+    mine_fsm(g, max_edges, min_support, &cfg.with_threads(1))
 }
 
 #[cfg(test)]

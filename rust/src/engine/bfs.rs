@@ -5,14 +5,97 @@
 //! (Pangolin: 3.5 TB vs Sandslash 436 GB on Gsh). Used here as the
 //! faithful substrate for the Pangolin-like system emulation in the
 //! benchmark tables.
+//!
+//! # Extension paths (PR 5)
+//!
+//! Expansion runs on one of two paths:
+//!
+//! * **Extension core** (`opts.extcore`, the default): MEC codes for a
+//!   whole extension list come from one batched
+//!   [`ExtCore::codes_for`] pass (one adaptive intersection per
+//!   embedding position), and each child's exclusive-neighbor set from
+//!   the [`ExtCore::exclusive_chain_into`] anti-intersection chain —
+//!   no per-(candidate, position) `has_edge` probes, no per-neighbor
+//!   `contains`/`any` scans.
+//! * **Scalar oracle** (`opts.extcore` off or `SANDSLASH_NO_EXTCORE=1`):
+//!   the seed loops, kept verbatim. Level contents are identical
+//!   element-for-element, so counts *and* `peak_embeddings` agree
+//!   (`rust/tests/extcore_differential.rs`).
+//!
+//! # The level byte budget (PR 5)
+//!
+//! Because materialization is the whole point of this engine, a large
+//! input can OOM-kill the host before producing a row. Each level's
+//! estimated footprint is therefore held to a byte budget —
+//! [`MinerConfig::bfs_cap`], the `SANDSLASH_BFS_CAP` environment
+//! override, or [`DEFAULT_BFS_CAP_BYTES`] — enforced *while* the level
+//! materializes: workers add each expanded embedding's footprint to a
+//! shared running total and stop expanding as soon as it crosses the
+//! budget (slack is bounded by one parent embedding's children per
+//! worker, not by the level), and the run aborts with a
+//! [`BfsCapExceeded`] diagnosis instead of dying silently. A post-hoc
+//! check alone would defend nothing — the over-budget level would
+//! already be resident when it ran.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::OnceLock;
 
 use crate::graph::{CsrGraph, VertexId};
-use crate::util::metrics::SearchStats;
-use crate::util::pool::parallel_reduce;
+use crate::util::metrics::{tag, SearchStats};
+use crate::util::pool::{parallel_reduce, positive_usize_env};
 
 use super::embedding::pack_codes;
 use super::esu::MotifTable;
+use super::extend::ExtCore;
 use super::opts::MinerConfig;
+
+/// Built-in byte budget for one materialized BFS level (8 GiB): far
+/// above anything the test/bench inputs materialize, low enough that a
+/// runaway emulation fails with a diagnosis before the OOM killer gets
+/// involved. Override per run with [`MinerConfig::with_bfs_cap`] or
+/// process-wide with `SANDSLASH_BFS_CAP` (bytes).
+pub const DEFAULT_BFS_CAP_BYTES: usize = 8 << 30;
+
+/// Resolve the process-wide BFS level budget: `SANDSLASH_BFS_CAP`
+/// (loud-reject parse, like every `SANDSLASH_*` numeric knob) or the
+/// built-in default. Cached for the process lifetime.
+fn default_bfs_cap() -> usize {
+    static CACHE: OnceLock<usize> = OnceLock::new();
+    *CACHE.get_or_init(|| {
+        positive_usize_env("SANDSLASH_BFS_CAP", "the built-in 8 GiB BFS level budget")
+            .unwrap_or(DEFAULT_BFS_CAP_BYTES)
+    })
+}
+
+/// A materialized BFS level exceeded the byte budget. The message names
+/// both knobs so the fix is actionable from the error alone.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BfsCapExceeded {
+    /// 1-based level (embedding size) that blew the budget.
+    pub level: usize,
+    /// Embeddings materialized when the budget tripped (a partial
+    /// level: expansion stops as soon as the running total crosses the
+    /// budget).
+    pub embeddings: u64,
+    /// Estimated bytes materialized when the budget tripped.
+    pub bytes: u64,
+    /// The budget that was in force.
+    pub cap: u64,
+}
+
+impl std::fmt::Display for BfsCapExceeded {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "BFS level {} materialized {} embeddings (~{} bytes), over the {}-byte level \
+             budget; raise SANDSLASH_BFS_CAP (or MinerConfig::with_bfs_cap) to proceed, or \
+             use a DFS engine, which never materializes levels",
+            self.level, self.embeddings, self.bytes, self.cap
+        )
+    }
+}
+
+impl std::error::Error for BfsCapExceeded {}
 
 /// One BFS embedding: vertices, MEC codes, ESU extension set.
 #[derive(Clone, Debug)]
@@ -25,6 +108,7 @@ struct BfsEmb {
 /// Result of a BFS motif count: per-motif counts plus the peak number of
 /// materialized embeddings (the memory-pressure proxy reported in
 /// EXPERIMENTS.md).
+#[derive(Debug)]
 pub struct BfsOutcome {
     /// Per-motif counts (library order).
     pub counts: Vec<u64>,
@@ -34,15 +118,48 @@ pub struct BfsOutcome {
     pub peak_embeddings: u64,
 }
 
-/// Count k-motifs with level-synchronous ESU expansion.
+/// Estimated heap footprint of one materialized embedding: struct
+/// overhead plus the element storage of its three vectors (an
+/// under-estimate — it ignores allocator slack — which is fine for a
+/// budget meant to trip well before the OOM killer would).
+#[inline]
+fn emb_bytes(e: &BfsEmb) -> u64 {
+    let fixed = std::mem::size_of::<BfsEmb>() as u64;
+    let elem = std::mem::size_of::<VertexId>() as u64;
+    fixed + (e.verts.len() + e.codes.len() + e.ext.len()) as u64 * elem
+}
+
+/// Estimated heap footprint of one (possibly partial) level.
+fn level_bytes(level: &[BfsEmb]) -> u64 {
+    level.iter().map(emb_bytes).sum()
+}
+
+fn check_budget(level_no: usize, level: &[BfsEmb], cap: usize) -> Result<(), BfsCapExceeded> {
+    let bytes = level_bytes(level);
+    if bytes > cap as u64 {
+        return Err(BfsCapExceeded {
+            level: level_no,
+            embeddings: level.len() as u64,
+            bytes,
+            cap: cap as u64,
+        });
+    }
+    Ok(())
+}
+
+/// Count k-motifs with level-synchronous ESU expansion, or fail loudly
+/// when a materialized level would exceed the byte budget (module
+/// docs).
 pub fn bfs_count_motifs(
     g: &CsrGraph,
     k: usize,
     cfg: &MinerConfig,
     table: &MotifTable,
-) -> BfsOutcome {
+) -> Result<BfsOutcome, BfsCapExceeded> {
     assert!(k >= 3);
     let n = g.num_vertices();
+    let use_core = cfg.opts.extcore_active();
+    let cap = cfg.bfs_cap.unwrap_or_else(default_bfs_cap);
     // level 1: single-vertex embeddings with ext = {u in N(v) : u > v}
     let mut level: Vec<BfsEmb> = (0..n as VertexId)
         .map(|v| BfsEmb {
@@ -51,27 +168,63 @@ pub fn bfs_count_motifs(
             ext: g.neighbors(v).iter().copied().filter(|&u| u > v).collect(),
         })
         .collect();
+    check_budget(1, &level, cap)?;
     let mut peak = level.len() as u64;
     let mut stats = SearchStats::default();
     stats.enumerated += level.len() as u64;
 
     for depth in 1..(k - 1) {
+        // The budget is enforced *during* materialization: a shared
+        // running byte total, bumped per expanded parent, flips `over`
+        // as soon as the level crosses the cap, and every later parent
+        // is skipped — so the resident overshoot is bounded by one
+        // parent's children per worker, not by the level. (A post-hoc
+        // check alone would run only after the damage was resident.)
+        let spent = AtomicU64::new(0);
+        let over = AtomicBool::new(false);
         let next = parallel_reduce(
             level.len(),
             cfg.threads,
             cfg.chunk.max(1),
-            Vec::new,
-            |out: &mut Vec<BfsEmb>, i| {
+            || (Vec::new(), ExtCore::new(), Vec::new()),
+            |acc: &mut (Vec<BfsEmb>, ExtCore, Vec<u32>), i| {
+                if over.load(Ordering::Relaxed) {
+                    return;
+                }
+                let (out, core, codes_buf) = acc;
                 let e = &level[i];
-                expand(g, e, depth, out);
+                let start = out.len();
+                tag::with_engine(tag::Engine::Bfs, || {
+                    if use_core {
+                        expand_core(g, core, codes_buf, e, out);
+                    } else {
+                        expand(g, e, depth, out);
+                    }
+                });
+                let added: u64 = out[start..].iter().map(emb_bytes).sum();
+                if spent.fetch_add(added, Ordering::Relaxed) + added > cap as u64 {
+                    over.store(true, Ordering::Relaxed);
+                }
             },
             |mut a, b| {
-                a.extend(b);
+                a.0.extend(b.0);
                 a
             },
-        );
+        )
+        .0;
+        if over.load(Ordering::Relaxed) {
+            return Err(BfsCapExceeded {
+                level: depth + 1,
+                embeddings: next.len() as u64,
+                bytes: level_bytes(&next),
+                cap: cap as u64,
+            });
+        }
         stats.enumerated += next.len() as u64;
         peak = peak.max(next.len() as u64);
+        // belt over suspenders: the incremental total and the sealed
+        // level must agree on being under budget
+        check_budget(depth + 1, &next, cap)?;
         level = next;
     }
 
@@ -81,33 +234,61 @@ pub fn bfs_count_motifs(
         level.len(),
         cfg.threads,
         cfg.chunk.max(1),
-        || vec![0u64; nm],
-        |acc: &mut Vec<u64>, i| {
+        || (vec![0u64; nm], ExtCore::new(), Vec::new(), Vec::new()),
+        |acc: &mut (Vec<u64>, ExtCore, Vec<u32>, Vec<u32>), i| {
+            let (counts, core, codes_buf, code_stack) = acc;
             let e = &level[i];
-            for &w in &e.ext {
-                let code = e
-                    .verts
-                    .iter()
-                    .enumerate()
-                    .fold(0u32, |c, (j, &u)| c | ((g.has_edge(u, w) as u32) << j));
-                let mut codes = e.codes.clone();
-                codes.push(code);
-                let id = table.classify(pack_codes(&codes));
-                acc[id as usize] += 1;
-            }
+            tag::with_engine(tag::Engine::Bfs, || {
+                if use_core {
+                    // batched MEC codes: one adaptive intersection per
+                    // position instead of |ext| × |verts| edge probes;
+                    // the leaf code stack is a per-worker scratch with
+                    // only its last slot rewritten per candidate — no
+                    // allocation in the innermost loop
+                    core.codes_for(g, &e.verts, &e.ext, codes_buf);
+                    if e.ext.is_empty() {
+                        return;
+                    }
+                    code_stack.clear();
+                    code_stack.extend_from_slice(&e.codes);
+                    code_stack.push(0);
+                    for wi in 0..e.ext.len() {
+                        *code_stack.last_mut().unwrap() = codes_buf[wi];
+                        let id = table.classify(pack_codes(code_stack));
+                        counts[id as usize] += 1;
+                    }
+                } else {
+                    for &w in &e.ext {
+                        let code = e
+                            .verts
+                            .iter()
+                            .enumerate()
+                            .fold(0u32, |c, (j, &u)| c | ((g.has_edge(u, w) as u32) << j));
+                        let mut codes = e.codes.clone();
+                        codes.push(code);
+                        let id = table.classify(pack_codes(&codes));
+                        counts[id as usize] += 1;
+                    }
+                }
+            });
         },
         |mut a, b| {
-            for (x, y) in a.iter_mut().zip(b) {
+            for (x, y) in a.0.iter_mut().zip(b.0) {
                 *x += y;
             }
             a
         },
-    );
+    )
+    .0;
     stats.matches = counts.iter().sum();
     stats.enumerated += stats.matches;
-    BfsOutcome { counts, stats, peak_embeddings: peak }
+    Ok(BfsOutcome { counts, stats, peak_embeddings: peak })
 }
 
+/// Seed scalar expansion, kept verbatim as the differential oracle: one
+/// `has_edge` probe per (candidate, position) pair for the MEC code,
+/// one `contains` + `any(has_edge)` scan per neighbor for the child
+/// extension set.
 fn expand(g: &CsrGraph, e: &BfsEmb, _depth: usize, out: &mut Vec<BfsEmb>) {
     let root = e.verts[0];
     for (wi, &w) in e.ext.iter().enumerate() {
@@ -134,6 +315,30 @@ fn expand(g: &CsrGraph, e: &BfsEmb, _depth: usize, out: &mut Vec<BfsEmb>) {
     }
 }
 
+/// Extension-core twin of [`expand`]: batched codes, anti-intersection
+/// chains — identical child embeddings in identical order.
+fn expand_core(
+    g: &CsrGraph,
+    core: &mut ExtCore,
+    codes_buf: &mut Vec<u32>,
+    e: &BfsEmb,
+    out: &mut Vec<BfsEmb>,
+) {
+    let root = e.verts[0];
+    core.codes_for(g, &e.verts, &e.ext, codes_buf);
+    for (wi, &w) in e.ext.iter().enumerate() {
+        let mut verts = e.verts.clone();
+        verts.push(w);
+        let mut codes = e.codes.clone();
+        codes.push(codes_buf[wi]);
+        // child ext: remaining candidates + exclusive neighbors of w
+        // (the chain also removes embedding members — extend docs)
+        let mut ext: Vec<VertexId> = e.ext[wi + 1..].to_vec();
+        core.exclusive_chain_into(g, w, root, &e.verts, &mut ext);
+        out.push(BfsEmb { verts, codes, ext });
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -150,7 +355,7 @@ mod tests {
     fn bfs_matches_dfs_motif_counts_k3() {
         let g = gen::rmat(7, 6, 21, &[]);
         let t = MotifTable::new(3);
-        let bfs = bfs_count_motifs(&g, 3, &cfg(), &t);
+        let bfs = bfs_count_motifs(&g, 3, &cfg(), &t).unwrap();
         let (dfs, _) = count_motifs(&g, 3, &cfg(), &NoHooks, &t);
         assert_eq!(bfs.counts, dfs);
     }
@@ -159,18 +364,47 @@ mod tests {
     fn bfs_matches_dfs_motif_counts_k4() {
         let g = gen::erdos_renyi(60, 0.12, 9, &[]);
         let t = MotifTable::new(4);
-        let bfs = bfs_count_motifs(&g, 4, &cfg(), &t);
+        let bfs = bfs_count_motifs(&g, 4, &cfg(), &t).unwrap();
         let (dfs, _) = count_motifs(&g, 4, &cfg(), &NoHooks, &t);
         assert_eq!(bfs.counts, dfs);
+    }
+
+    #[test]
+    fn core_and_oracle_agree_on_counts_and_peak() {
+        let g = gen::rmat(7, 5, 33, &[]);
+        let t = MotifTable::new(4);
+        let core = bfs_count_motifs(&g, 4, &cfg(), &t).unwrap();
+        let mut oracle_cfg = cfg();
+        oracle_cfg.opts.extcore = false;
+        let oracle = bfs_count_motifs(&g, 4, &oracle_cfg, &t).unwrap();
+        assert_eq!(core.counts, oracle.counts);
+        // levels are identical element-for-element, not just count-equal
+        assert_eq!(core.peak_embeddings, oracle.peak_embeddings);
+        assert_eq!(core.stats.enumerated, oracle.stats.enumerated);
     }
 
     #[test]
     fn peak_embeddings_grows_with_level() {
         let g = gen::erdos_renyi(50, 0.2, 3, &[]);
         let t = MotifTable::new(4);
-        let out = bfs_count_motifs(&g, 4, &cfg(), &t);
+        let out = bfs_count_motifs(&g, 4, &cfg(), &t).unwrap();
         // BFS materialization must exceed the vertex count on any
         // non-trivial graph
         assert!(out.peak_embeddings > 50);
+    }
+
+    #[test]
+    fn byte_budget_trips_loudly_instead_of_materializing() {
+        let g = gen::erdos_renyi(60, 0.15, 5, &[]);
+        let t = MotifTable::new(4);
+        let starved = cfg().with_bfs_cap(1024);
+        let err = bfs_count_motifs(&g, 4, &starved, &t).expect_err("1 KiB cannot hold a level");
+        assert!(err.bytes > err.cap);
+        assert!(err.embeddings > 0);
+        let msg = format!("{err}");
+        assert!(msg.contains("SANDSLASH_BFS_CAP"), "diagnosis must name the knob: {msg}");
+        // a sane budget on the same input succeeds
+        let ok = bfs_count_motifs(&g, 4, &cfg().with_bfs_cap(64 << 20), &t).unwrap();
+        assert!(ok.counts.iter().sum::<u64>() > 0);
     }
 }

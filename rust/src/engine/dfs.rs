@@ -7,7 +7,8 @@
 //! root ranges LIFO from per-worker deques, steal FIFO when empty, and
 //! — uniquely to this engine — answer starvation by *splitting the
 //! current root*: the untraversed suffix of the level-1 candidate set
-//! is published as a [`Task::Split`] and re-entered here with a
+//! is published as a [`Task::Split`](crate::exec::sched::Task::Split)
+//! and re-entered here with a
 //! candidate-position window, so one hub root no longer serializes a
 //! run's tail. `MinerConfig::with_steal(false)` or `SANDSLASH_NO_STEAL=1`
 //! pins the run to the seed global-cursor loop, the scheduling oracle.
@@ -50,7 +51,8 @@
 //! per-thread accumulator, merged once at the end — no synchronization on
 //! the hot path.
 
-use crate::exec::sched::{self, Task, WorkerCtx};
+use crate::exec::sched::WorkerCtx;
+use crate::exec::split::{self, SplitDriver, Splittable};
 use crate::graph::{setops, CsrGraph, VertexId};
 use crate::pattern::matching_order::{LevelPlan, MatchingPlan};
 use crate::util::bitset::BitSet;
@@ -209,9 +211,21 @@ pub fn mine<A: Send, H: LowLevelApi>(
                 && (l.adj_mask.count_ones() > 1 || l.nonadj_mask != 0)
         });
     let pol = cfg.sched_policy();
-    let result = sched::reduce(
+    let engine = DfsEngine {
+        g,
+        plan,
+        cfg,
+        hooks,
+        leaf: &leaf,
+        use_sets,
+        use_mnc,
+        needs_root_bits,
+        _acc: std::marker::PhantomData,
+    };
+    let result = split::reduce(
         n,
         &pol,
+        &engine,
         || ThreadState {
             acc: init(),
             stats: SearchStats::default(),
@@ -219,22 +233,6 @@ pub fn mine<A: Send, H: LowLevelApi>(
             conn: Connectivity::new(),
             front: Frontier::new(k),
             lg: PlanLocalGraph::new(),
-        },
-        |st, ctx, task| match task {
-            Task::Roots { start, end } => {
-                for v in start..end {
-                    mine_root(
-                        g, plan, cfg, hooks, st, ctx, v as VertexId, None, use_sets, use_mnc,
-                        needs_root_bits, &leaf,
-                    );
-                }
-            }
-            Task::Split { root, lo, hi } => {
-                mine_root(
-                    g, plan, cfg, hooks, st, ctx, root as VertexId, Some((lo, hi)), use_sets,
-                    use_mnc, needs_root_bits, &leaf,
-                );
-            }
         },
         |a, b| {
             let mut stats = a.stats;
@@ -252,7 +250,56 @@ pub fn mine<A: Send, H: LowLevelApi>(
     (result.acc, result.stats)
 }
 
-/// One root task — or, for a [`Task::Split`], one published level-1
+/// The DFS engine as a [`Splittable`] root task: the level-1 sequence
+/// is the root's (deterministic) candidate-position order, exactly what
+/// [`visit_windowed`] walks. Whole roots arrive with `window = None`;
+/// published suffixes re-enter [`mine_root`] with a position window.
+struct DfsEngine<'e, A, H, L> {
+    g: &'e CsrGraph,
+    plan: &'e MatchingPlan,
+    cfg: &'e MinerConfig,
+    hooks: &'e H,
+    leaf: &'e L,
+    use_sets: bool,
+    use_mnc: bool,
+    needs_root_bits: bool,
+    _acc: std::marker::PhantomData<fn() -> A>,
+}
+
+impl<A, H, L> Splittable for DfsEngine<'_, A, H, L>
+where
+    A: Send,
+    H: LowLevelApi,
+    L: Fn(&mut A, &[VertexId]) + Sync,
+{
+    type Acc = ThreadState<A>;
+
+    fn mine_root(
+        &self,
+        st: &mut ThreadState<A>,
+        ctx: &WorkerCtx<'_>,
+        root: usize,
+        window: Option<(usize, usize)>,
+    ) {
+        mine_root(
+            self.g,
+            self.plan,
+            self.cfg,
+            self.hooks,
+            st,
+            ctx,
+            root as VertexId,
+            window,
+            self.use_sets,
+            self.use_mnc,
+            self.needs_root_bits,
+            self.leaf,
+        );
+    }
+}
+
+/// One root task — or, for a
+/// [`Task::Split`](crate::exec::sched::Task::Split), one published level-1
 /// candidate window of it (set-centric runs only, the sole publisher).
 /// The level-0 setup (root bitmap, MNC seed) is worker-local and
 /// deterministic, so a split re-runs it and lands on exactly the
@@ -307,8 +354,7 @@ fn mine_root<A, H: LowLevelApi>(
         st.front.root_bits_built = true;
     }
     if use_sets {
-        let (w_lo, w_hi) = window.unwrap_or((0, usize::MAX));
-        extend_set(g, plan, cfg, hooks, st, 1, Some((ctx, w_lo, w_hi)), leaf);
+        extend_set(g, plan, cfg, hooks, st, 1, Some((ctx, window)), leaf);
     } else {
         extend(g, plan, cfg, hooks, st, 1, use_mnc, leaf);
     }
@@ -328,14 +374,16 @@ fn mine_root<A, H: LowLevelApi>(
 /// the adaptive kernels, then visit each survivor.
 ///
 /// `l1` is present exactly at level 1 (the root's first extension): it
-/// carries the scheduler handle plus a candidate-*position* window
-/// `[lo, hi)` over this level's (deterministic) candidate sequence.
-/// Whole-root tasks run with the full window `(0, usize::MAX)`; a
-/// [`Task::Split`] re-enters with the published suffix. Between
-/// candidates the loop polls [`WorkerCtx::split_requested`] and, when a
-/// worker is starving, hands off its own remaining suffix — recursive
-/// splits included, so hub candidates fan out until the chain is
-/// bounded by single subtrees (`exec::split` module docs).
+/// carries the scheduler handle plus the optional candidate-*position*
+/// window over this level's (deterministic) candidate sequence.
+/// Whole-root tasks run with no window; a
+/// [`Task::Split`](crate::exec::sched::Task::Split) re-enters with the
+/// published suffix. Between candidates the loop (a
+/// [`SplitDriver`], shared with the ESU and FSM engines since PR 5)
+/// polls [`WorkerCtx::split_requested`] and, when a worker is starving,
+/// hands off its own remaining suffix — recursive splits included, so
+/// hub candidates fan out until the chain is bounded by single subtrees
+/// (`exec::split` module docs).
 fn extend_set<A, H: LowLevelApi>(
     g: &CsrGraph,
     plan: &MatchingPlan,
@@ -343,7 +391,7 @@ fn extend_set<A, H: LowLevelApi>(
     hooks: &H,
     st: &mut ThreadState<A>,
     level: usize,
-    l1: Option<(&WorkerCtx<'_>, usize, usize)>,
+    l1: Option<(&WorkerCtx<'_>, Option<(usize, usize)>)>,
     leaf: &(impl Fn(&mut A, &[VertexId]) + Sync),
 ) {
     let lp = &plan.levels[level];
@@ -496,10 +544,11 @@ fn extend_set<A, H: LowLevelApi>(
 /// Visit the candidate positions `0..len` of one set-centric level —
 /// clamped to the `l1` window and polling the split protocol between
 /// candidates when `l1` is present — through `get(pos)`, the path's
-/// candidate accessor. One implementation of the window + publish +
-/// truncate discipline for both the bounded in-place and the
-/// materialized-frontier level-1 loops, so the two paths cannot drift
-/// (same rationale as [`admit_candidate`]).
+/// candidate accessor. One implementation for both the bounded
+/// in-place and the materialized-frontier level-1 loops, so the two
+/// paths cannot drift (same rationale as [`admit_candidate`]); the
+/// window + publish + truncate discipline itself lives in the shared
+/// [`SplitDriver`] (PR 5), so it cannot drift across *engines* either.
 #[inline]
 fn visit_windowed<A, H: LowLevelApi>(
     g: &CsrGraph,
@@ -508,31 +557,23 @@ fn visit_windowed<A, H: LowLevelApi>(
     hooks: &H,
     st: &mut ThreadState<A>,
     level: usize,
-    l1: Option<(&WorkerCtx<'_>, usize, usize)>,
+    l1: Option<(&WorkerCtx<'_>, Option<(usize, usize)>)>,
     len: usize,
     get: impl Fn(usize) -> VertexId,
     leaf: &(impl Fn(&mut A, &[VertexId]) + Sync),
 ) {
-    let mut pos = 0usize;
-    let mut end_pos = len;
-    if let Some((_, w_lo, w_hi)) = l1 {
-        pos = w_lo.min(end_pos);
-        end_pos = w_hi.min(end_pos);
-    }
-    while pos < end_pos {
-        if let Some((ctx, _, _)) = l1 {
-            // hand the untraversed suffix to a starving worker, keep
-            // only the current candidate's subtree for ourselves
-            if end_pos - pos > 1
-                && ctx.split_requested()
-                && ctx.publish_split(st.emb[0] as usize, pos + 1, end_pos)
-            {
-                end_pos = pos + 1;
+    match l1 {
+        Some((ctx, window)) => {
+            let root = st.emb[0] as usize;
+            for pos in SplitDriver::new(ctx, root, len, window) {
+                visit_candidate(g, plan, cfg, hooks, st, level, get(pos), leaf);
             }
         }
-        let cand = get(pos);
-        visit_candidate(g, plan, cfg, hooks, st, level, cand, leaf);
-        pos += 1;
+        None => {
+            for pos in 0..len {
+                visit_candidate(g, plan, cfg, hooks, st, level, get(pos), leaf);
+            }
+        }
     }
 }
 

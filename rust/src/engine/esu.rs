@@ -7,13 +7,48 @@
 //! classified by their MEC connectivity codes through a precomputed
 //! code → motif-id table — the paper's CP optimization with MEC, no
 //! isomorphism tests at runtime.
+//!
+//! # Extension paths (PR 5)
+//!
+//! Candidate ("extension set") construction runs on one of two paths:
+//!
+//! * **Extension core** (`opts.extcore`, the default): the exclusive
+//!   neighbors of each chosen vertex come from
+//!   [`ExtCore::exclusive_into`] — the coverage bitmap
+//!   anti-intersected against the bounded neighbor tail, word-parallel
+//!   ([`crate::graph::setops::andnot_words_into`]) past the dense
+//!   crossover. Level-1 candidates additionally flow through the
+//!   shared [`SplitDriver`], so a starving worker can steal the
+//!   untraversed suffix of a hub root's subtree
+//!   ([`crate::exec::split`]) exactly as in the set-centric DFS
+//!   engine.
+//! * **Scalar oracle** (`opts.extcore` off or `SANDSLASH_NO_EXTCORE=1`):
+//!   the seed loop, kept verbatim — per-candidate probes of a
+//!   `visited[]` boolean array, whole roots only (the oracle never
+//!   publishes splits). Results must be bit-identical
+//!   (`rust/tests/extcore_differential.rs`).
+//!
+//! # The stats rule
+//!
+//! Every [`SearchStats`] counter describes the *search tree*, not the
+//! extension machinery, so stats are invariant across the MNC and
+//! extcore toggles: `enumerated`/`matches` count embeddings,
+//! `pruned` counts rejected candidates, and `intersections` counts one
+//! per *expanded* embedding (each embedding builds exactly one child
+//! extension set — the root's level-1 seed included). The seed code
+//! gated these inconsistently (the MNC-off fallback charged
+//! `emb.len()` probes per candidate while the MNC path charged
+//! nothing); the per-construction rule is tested by
+//! `stats_counters_invariant_across_mnc_and_core` below.
 
+use crate::exec::sched::WorkerCtx;
+use crate::exec::split::{self, SplitDriver, Splittable};
 use crate::graph::{CsrGraph, VertexId};
 use crate::pattern::{canonical_code, library};
-use crate::util::metrics::SearchStats;
-use crate::util::pool::parallel_reduce;
+use crate::util::metrics::{tag, SearchStats};
 
 use super::embedding::{pack_codes, pattern_from_packed};
+use super::extend::ExtCore;
 use super::hooks::LowLevelApi;
 use super::opts::MinerConfig;
 
@@ -68,11 +103,15 @@ struct EsuState<A> {
     /// Per-level start offsets into `ext`.
     ext_marks: Vec<usize>,
     /// visited[u] = true if u is in the embedding or its neighborhood
-    /// (the "exclusive neighborhood" test of ESU).
+    /// (the "exclusive neighborhood" test of ESU) — the scalar oracle's
+    /// marking array; the core path keeps the same set in `core`'s
+    /// coverage bitmap.
     visited: Vec<bool>,
     touched: Vec<VertexId>,
     /// MNC connectivity map (used when opts.mnc).
     map: super::mnc::ConnectivityMap,
+    /// Shared extension core (used when opts.extcore).
+    core: ExtCore,
 }
 
 /// Enumerate all connected vertex-induced k-subgraphs exactly once.
@@ -89,10 +128,21 @@ pub fn esu_mine<A: Send, H: LowLevelApi>(
 ) -> (A, SearchStats) {
     assert!(k >= 2);
     let n = g.num_vertices();
-    let result = parallel_reduce(
+    let pol = cfg.sched_policy();
+    let use_core = cfg.opts.extcore_active();
+    let engine = EsuEngine {
+        g,
+        k,
+        cfg,
+        hooks,
+        leaf: &leaf,
+        use_core,
+        _acc: std::marker::PhantomData,
+    };
+    let result = split::reduce(
         n,
-        cfg.threads,
-        cfg.chunk,
+        &pol,
+        &engine,
         || EsuState {
             acc: init(),
             stats: SearchStats::default(),
@@ -100,49 +150,13 @@ pub fn esu_mine<A: Send, H: LowLevelApi>(
             codes: Vec::with_capacity(k),
             ext: Vec::new(),
             ext_marks: Vec::new(),
-            visited: vec![false; n],
+            // the scalar oracle's marking array; the core path keeps
+            // the same set in its (lazily sized) coverage bitmap, so
+            // don't commit n bytes per worker it would never read
+            visited: if use_core { Vec::new() } else { vec![false; n] },
             touched: Vec::new(),
             map: super::mnc::ConnectivityMap::with_capacity(1024),
-        },
-        |st, root| {
-            let root = root as VertexId;
-            st.emb.clear();
-            st.codes.clear();
-            st.ext.clear();
-            st.ext_marks.clear();
-            st.emb.push(root);
-            st.codes.push(0);
-            if cfg.opts.stats {
-                st.stats.enumerated += 1;
-            }
-            // mark root + its neighborhood; seed ext with neighbors > root
-            st.visited[root as usize] = true;
-            st.touched.push(root);
-            let base = st.ext.len();
-            for &u in g.neighbors(root) {
-                st.visited[u as usize] = true;
-                st.touched.push(u);
-                if u > root {
-                    st.ext.push(u);
-                }
-            }
-            st.ext_marks.push(base);
-            if cfg.opts.mnc {
-                for &u in g.neighbors(root) {
-                    st.map.or_insert(u, 1);
-                }
-            }
-            esu_extend(g, k, cfg, hooks, st, &leaf);
-            if cfg.opts.mnc {
-                for &u in g.neighbors(root) {
-                    st.map.and_remove(u, 1);
-                }
-            }
-            // reset visited
-            for &u in &st.touched {
-                st.visited[u as usize] = false;
-            }
-            st.touched.clear();
+            core: ExtCore::new(),
         },
         |a, b| {
             let mut stats = a.stats;
@@ -157,10 +171,127 @@ pub fn esu_mine<A: Send, H: LowLevelApi>(
                 visited: a.visited,
                 touched: a.touched,
                 map: a.map,
+                core: a.core,
             }
         },
     );
     (result.acc, result.stats)
+}
+
+/// The ESU engine as a [`Splittable`] root task (PR 5): the level-1
+/// sequence is the root's extension-set positions — the `> root` tail
+/// of the root's neighbor list, a pure function of (graph, root) — so
+/// a replayed split lands on exactly the candidates its publisher was
+/// iterating. Only the extension-core path publishes; the scalar
+/// oracle runs whole roots.
+struct EsuEngine<'e, A, H, L> {
+    g: &'e CsrGraph,
+    k: usize,
+    cfg: &'e MinerConfig,
+    hooks: &'e H,
+    leaf: &'e L,
+    use_core: bool,
+    _acc: std::marker::PhantomData<fn() -> A>,
+}
+
+impl<A, H, L> Splittable for EsuEngine<'_, A, H, L>
+where
+    A: Send,
+    H: LowLevelApi,
+    L: Fn(&mut A, &[VertexId], u64) + Sync,
+{
+    type Acc = EsuState<A>;
+
+    fn mine_root(
+        &self,
+        st: &mut EsuState<A>,
+        ctx: &WorkerCtx<'_>,
+        root: usize,
+        window: Option<(usize, usize)>,
+    ) {
+        tag::with_engine(tag::Engine::Esu, || self.root_task(st, ctx, root, window));
+    }
+}
+
+impl<A, H, L> EsuEngine<'_, A, H, L>
+where
+    H: LowLevelApi,
+    L: Fn(&mut A, &[VertexId], u64) + Sync,
+{
+    /// One root task — or, for a split, one published level-1 window of
+    /// it. The setup (coverage marking, extension-set seed, MNC seed)
+    /// is worker-local and deterministic, so a split replays it; the
+    /// root's own accounting is done only by the `window = None` task.
+    fn root_task(
+        &self,
+        st: &mut EsuState<A>,
+        ctx: &WorkerCtx<'_>,
+        root_idx: usize,
+        window: Option<(usize, usize)>,
+    ) {
+        let (g, k, cfg) = (self.g, self.k, self.cfg);
+        debug_assert!(
+            window.is_none() || self.use_core,
+            "only the extension core publishes ESU splits"
+        );
+        let root = root_idx as VertexId;
+        st.emb.clear();
+        st.codes.clear();
+        st.ext.clear();
+        st.ext_marks.clear();
+        st.emb.push(root);
+        st.codes.push(0);
+        if cfg.opts.stats && window.is_none() {
+            st.stats.enumerated += 1;
+            // the root's level-1 extension-set seed (stats rule above)
+            st.stats.intersections += 1;
+        }
+        // mark root + its neighborhood; seed ext with neighbors > root
+        st.touched.push(root);
+        if self.use_core {
+            st.core.begin_root(g.num_vertices());
+            st.core.cover_mark(root as usize);
+            for &u in g.neighbors(root) {
+                st.core.cover_mark(u as usize);
+                st.touched.push(u);
+            }
+        } else {
+            st.visited[root as usize] = true;
+            for &u in g.neighbors(root) {
+                st.visited[u as usize] = true;
+                st.touched.push(u);
+            }
+        }
+        let nbrs = g.neighbors(root);
+        st.ext.extend_from_slice(&nbrs[nbrs.partition_point(|&x| x <= root)..]);
+        st.ext_marks.push(0);
+        if cfg.opts.mnc {
+            for &u in g.neighbors(root) {
+                st.map.or_insert(u, 1);
+            }
+        }
+        if self.use_core {
+            esu_extend_core(g, k, cfg, self.hooks, st, Some((ctx, root_idx, window)), self.leaf);
+        } else {
+            esu_extend(g, k, cfg, self.hooks, st, self.leaf);
+        }
+        if cfg.opts.mnc {
+            for &u in g.neighbors(root) {
+                st.map.and_remove(u, 1);
+            }
+        }
+        // reset the coverage marking (symmetric, O(touched))
+        if self.use_core {
+            for &u in &st.touched {
+                st.core.cover_unmark(u as usize);
+            }
+        } else {
+            for &u in &st.touched {
+                st.visited[u as usize] = false;
+            }
+        }
+        st.touched.clear();
+    }
 }
 
 fn esu_extend<A, H: LowLevelApi>(
@@ -189,9 +320,6 @@ fn esu_extend<A, H: LowLevelApi>(
         let code = if cfg.opts.mnc {
             st.map.get(w)
         } else {
-            if cfg.opts.stats {
-                st.stats.intersections += st.emb.len() as u64;
-            }
             st.emb
                 .iter()
                 .enumerate()
@@ -224,6 +352,12 @@ fn esu_extend<A, H: LowLevelApi>(
                 st.ext.push(u);
             }
         }
+        // one child extension-set construction (the stats rule: count
+        // the tree event, not the probes, so MNC/extcore toggles are
+        // stats-invariant)
+        if cfg.opts.stats {
+            st.stats.intersections += 1;
+        }
         // mark new exclusive neighbors as visited
         for i in (child_base + (ext_end - wi - 1))..st.ext.len() {
             let u = st.ext[i];
@@ -250,6 +384,112 @@ fn esu_extend<A, H: LowLevelApi>(
         }
         st.touched
             .truncate(st.touched.len() - (st.ext.len() - child_base - (ext_end - wi - 1)));
+        st.ext.truncate(child_base);
+        st.ext_marks.pop();
+        st.emb.pop();
+        st.codes.pop();
+    }
+}
+
+/// Extension-core twin of [`esu_extend`]: identical traversal (same
+/// candidate sequences, same pruning, same MEC codes — bit-identical
+/// leaves), with the exclusive-neighbor sets built by
+/// [`ExtCore::exclusive_into`] instead of per-candidate `visited[]`
+/// probes, and — at level 1 only (`l1` present) — the candidate loop
+/// driven by the shared [`SplitDriver`] so hub roots hand their
+/// untraversed suffixes to starving workers.
+fn esu_extend_core<A, H: LowLevelApi>(
+    g: &CsrGraph,
+    k: usize,
+    cfg: &MinerConfig,
+    hooks: &H,
+    st: &mut EsuState<A>,
+    l1: Option<(&WorkerCtx<'_>, usize, Option<(usize, usize)>)>,
+    leaf: &(impl Fn(&mut A, &[VertexId], u64) + Sync),
+) {
+    let level = st.emb.len();
+    let ext_start = *st.ext_marks.last().unwrap();
+    let ext_end = st.ext.len();
+    let len = ext_end - ext_start;
+    let mut driver =
+        l1.map(|(ctx, root, window)| SplitDriver::new(ctx, root, len, window));
+    let mut plain = 0..len;
+    loop {
+        let rel = match driver.as_mut() {
+            Some(d) => match d.next() {
+                Some(p) => p,
+                None => break,
+            },
+            None => match plain.next() {
+                Some(p) => p,
+                None => break,
+            },
+        };
+        let wi = ext_start + rel;
+        let w = st.ext[wi];
+        if !hooks.to_add(g, &st.emb, w, level) {
+            st.stats.pruned += cfg.opts.stats as u64;
+            continue;
+        }
+        let code = if cfg.opts.mnc {
+            st.map.get(w)
+        } else {
+            st.emb
+                .iter()
+                .enumerate()
+                .fold(0u32, |c, (i, &u)| c | ((g.has_edge(u, w) as u32) << i))
+        };
+        st.emb.push(w);
+        st.codes.push(code);
+        if cfg.opts.stats {
+            st.stats.enumerated += 1;
+        }
+        if st.emb.len() == k {
+            if cfg.opts.stats {
+                st.stats.matches += 1;
+            }
+            leaf(&mut st.acc, &st.emb, pack_codes(&st.codes));
+            st.emb.pop();
+            st.codes.pop();
+            continue;
+        }
+        // child extension set: remaining candidates at this level
+        // (after w) plus w's exclusive neighbors via the core kernels
+        let child_base = st.ext.len();
+        for u in (wi + 1)..ext_end {
+            let u = st.ext[u];
+            st.ext.push(u);
+        }
+        let root = st.emb[0];
+        let excl_base = st.ext.len();
+        st.core.exclusive_into(g, w, root, &mut st.ext);
+        if cfg.opts.stats {
+            st.stats.intersections += 1;
+        }
+        // mark the new exclusive neighbors as covered
+        for i in excl_base..st.ext.len() {
+            let u = st.ext[i];
+            st.core.cover_mark(u as usize);
+            st.touched.push(u);
+        }
+        st.ext_marks.push(child_base);
+        let bit = 1u32 << level;
+        if cfg.opts.mnc {
+            for &u in g.neighbors(w) {
+                st.map.or_insert(u, bit);
+            }
+        }
+        esu_extend_core(g, k, cfg, hooks, st, None, leaf);
+        if cfg.opts.mnc {
+            for &u in g.neighbors(w) {
+                st.map.and_remove(u, bit);
+            }
+        }
+        // unmark and truncate (symmetric pop)
+        for i in excl_base..st.ext.len() {
+            st.core.cover_unmark(st.ext[i] as usize);
+        }
+        st.touched.truncate(st.touched.len() - (st.ext.len() - excl_base));
         st.ext.truncate(child_base);
         st.ext_marks.pop();
         st.emb.pop();
@@ -378,6 +618,67 @@ mod tests {
             }
         }
         assert_eq!(counts, brute);
+    }
+
+    #[test]
+    fn extension_core_matches_scalar_oracle() {
+        let g = gen::rmat(8, 6, 37, &[]);
+        for k in [3usize, 4] {
+            let t = MotifTable::new(k);
+            let mut oracle = cfg();
+            oracle.opts.extcore = false;
+            let (want, _) = count_motifs(&g, k, &oracle, &NoHooks, &t);
+            let (got, _) = count_motifs(&g, k, &cfg(), &NoHooks, &t);
+            assert_eq!(got, want, "k={k}");
+            // and with MNC off on both paths
+            let mut o2 = oracle;
+            o2.opts.mnc = false;
+            let mut c2 = cfg();
+            c2.opts.mnc = false;
+            assert_eq!(
+                count_motifs(&g, k, &c2, &NoHooks, &t).0,
+                count_motifs(&g, k, &o2, &NoHooks, &t).0,
+                "k={k} mnc off"
+            );
+        }
+    }
+
+    #[test]
+    fn extension_core_respects_fp_hook() {
+        struct NoOdd;
+        impl crate::engine::hooks::LowLevelApi for NoOdd {
+            fn to_add(&self, _g: &CsrGraph, _e: &[VertexId], u: VertexId, _l: usize) -> bool {
+                u % 2 == 0
+            }
+        }
+        let g = gen::rmat(7, 5, 29, &[]);
+        let t = MotifTable::new(4);
+        let mut oracle = cfg();
+        oracle.opts.extcore = false;
+        let (want, _) = count_motifs(&g, 4, &oracle, &NoOdd, &t);
+        let (got, _) = count_motifs(&g, 4, &cfg(), &NoOdd, &t);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn stats_counters_invariant_across_mnc_and_core() {
+        // the PR-5 stats rule: counters describe the search tree, so
+        // every (mnc, extcore) combination reports identical stats
+        let g = gen::rmat(7, 5, 11, &[]);
+        let t = MotifTable::new(4);
+        let base = MinerConfig::single_thread(OptFlags::hi().with_stats());
+        let (c0, s0) = count_motifs(&g, 4, &base, &NoHooks, &t);
+        assert!(s0.enumerated > 0 && s0.matches > 0 && s0.intersections > 0);
+        // every expanded embedding builds exactly one child extension set
+        assert!(s0.intersections <= s0.enumerated);
+        for (mnc, extcore) in [(true, false), (false, true), (false, false)] {
+            let mut c = base;
+            c.opts.mnc = mnc;
+            c.opts.extcore = extcore;
+            let (counts, stats) = count_motifs(&g, 4, &c, &NoHooks, &t);
+            assert_eq!(counts, c0, "mnc={mnc} extcore={extcore}");
+            assert_eq!(stats, s0, "mnc={mnc} extcore={extcore}");
+        }
     }
 
     #[test]

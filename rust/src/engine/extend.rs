@@ -1,0 +1,469 @@
+//! The shared extension core (PR 5): sorted-candidate-set construction
+//! on the adaptive kernels in [`crate::graph::setops`], factored out of
+//! the per-engine scalar loops so the ESU, BFS and FSM engines extend
+//! embeddings through the same substrate as the set-centric DFS engine.
+//!
+//! The paper's central claim is that *one* framework serves every GPM
+//! workload from one efficient substrate. Before this module, only the
+//! pattern-guided DFS engine did: ESU probed a `visited[]` boolean
+//! array per candidate, BFS recomputed MEC codes with one `has_edge`
+//! binary search per (candidate, position) pair, and FSM scanned the
+//! whole embedding per neighbor to classify back vs forward edges. The
+//! core replaces those with:
+//!
+//! * **Exclusive-neighbor sets** ([`ExtCore::exclusive_into`], ESU): a
+//!   coverage bitmap (`emb ∪ N(emb)`, maintained with the same
+//!   mark/unmark discipline as the seed `visited[]`) anti-intersected
+//!   against the bounded candidate tail — O(1) bitset probes in the
+//!   sparse regime, the word-parallel
+//!   [`setops::andnot_words_into`] kernel past the dense crossover
+//!   ([`DENSE_EXCL_WORD_FACTOR`], the §PR-3 bitset×bitset shape).
+//! * **Exclusive-neighbor chains** ([`ExtCore::exclusive_chain_into`],
+//!   BFS): the same set expressed as a ping-pong
+//!   [`setops::difference_into`] chain over the matched prefix's
+//!   adjacency lists — BFS embeddings are independent, so there is no
+//!   incremental bitmap to consult.
+//! * **Batched MEC codes** ([`ExtCore::codes_for`]): the
+//!   positions-adjacency codes of a whole candidate list in one
+//!   adaptive intersection per embedding position, instead of one
+//!   `has_edge` probe per (candidate, position) pair.
+//! * **Member/fresh neighbor splits** ([`ExtCore::members_and_fresh`],
+//!   FSM): one intersection + one anti-intersection against the sorted
+//!   embedding classify every neighbor as a back-edge target (with its
+//!   position recovered by binary search) or a forward-edge target,
+//!   replacing the per-neighbor O(k) `position()` scan.
+//! * **The SoA embedding arena** ([`EmbArena`], FSM): each sub-pattern
+//!   bin stores its embeddings as one flat `Vec<VertexId>` with a
+//!   stride, so extension is a linear scan over contiguous rows instead
+//!   of pointer chasing through `Vec<Vec<VertexId>>`, and deduplication
+//!   is one deterministic sort instead of a `HashSet` per bin.
+//!
+//! Every engine keeps its seed scalar loop alive verbatim as the
+//! differential oracle, selected by `OptFlags::extcore = false` or the
+//! process-wide `SANDSLASH_NO_EXTCORE=1` kill switch — the same
+//! oracle-vs-fast-path contract as the SIMD kernels
+//! (`SANDSLASH_NO_SIMD`) and the scheduler (`SANDSLASH_NO_STEAL`).
+//! Results must be bit-identical; `rust/tests/extcore_differential.rs`
+//! holds the invariance matrix.
+
+use std::sync::OnceLock;
+
+use crate::graph::{setops, CsrGraph, VertexId};
+use crate::util::bitset::BitSet;
+
+/// Process-wide extension-core default: `false` only under
+/// `SANDSLASH_NO_EXTCORE` (any non-empty value other than `0`) — the CI
+/// oracle leg's kill switch, same contract as `SANDSLASH_NO_SIMD` and
+/// `SANDSLASH_NO_STEAL`. Cached for the process lifetime.
+pub fn extcore_enabled_default() -> bool {
+    static CACHE: OnceLock<bool> = OnceLock::new();
+    *CACHE.get_or_init(|| {
+        !std::env::var("SANDSLASH_NO_EXTCORE")
+            .is_ok_and(|v| !v.trim().is_empty() && v.trim() != "0")
+    })
+}
+
+/// Dense crossover for the exclusive-neighbor construction: once the
+/// bounded candidate tail reaches `(cover words) ×` this factor, the
+/// per-element bitset probes are replaced by publishing the tail as a
+/// second bitmap and sweeping `cand & !cover` word-parallel — the same
+/// break-even shape as the §PR-3 `DENSE_FRONTIER_WORD_FACTOR` (the
+/// AND-NOT costs one pass over the word array regardless of tail
+/// length, the probe filter one dependent load per element; 4 covers
+/// the tail-bitmap build on top of break-even).
+pub const DENSE_EXCL_WORD_FACTOR: usize = 4;
+
+/// Reusable per-thread buffers for the extension core. All storage is
+/// recycled across root tasks — zero allocation on the hot path once
+/// warm, exactly like the DFS engine's `Frontier`.
+#[derive(Default)]
+pub struct ExtCore {
+    /// Coverage bitmap: the embedding and its neighborhood (ESU's
+    /// `visited` set), maintained by the engine through
+    /// [`cover_mark`](Self::cover_mark)/[`cover_unmark`](Self::cover_unmark).
+    cover: BitSet,
+    /// Scratch bitmap for the dense anti-intersection path.
+    cand_bits: BitSet,
+    /// Sorted copy of an unsorted candidate list ([`codes_for`](Self::codes_for)).
+    sorted: Vec<VertexId>,
+    /// `order[i]` = original index of `sorted[i]`.
+    order: Vec<u32>,
+    /// Ping-pong scratch lists.
+    scratch_a: Vec<VertexId>,
+    scratch_b: Vec<VertexId>,
+}
+
+impl ExtCore {
+    /// Fresh core with empty buffers (they size lazily to the graph).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Size the coverage bitmap for a graph of `n` vertices. Must be
+    /// called before the first [`cover_mark`](Self::cover_mark) of a
+    /// root task; keeps existing capacity when already large enough.
+    pub fn begin_root(&mut self, n: usize) {
+        if self.cover.capacity() < n {
+            self.cover = BitSet::new(n);
+        }
+    }
+
+    /// Mark `u` as covered (in the embedding or its neighborhood). The
+    /// engine tracks what it marked and must
+    /// [`cover_unmark`](Self::cover_unmark) exactly that on backtrack —
+    /// the same symmetric discipline as the seed `visited[]` array.
+    #[inline]
+    pub fn cover_mark(&mut self, u: usize) {
+        self.cover.insert(u);
+    }
+
+    /// Unmark `u` (symmetric pop of [`cover_mark`](Self::cover_mark)).
+    #[inline]
+    pub fn cover_unmark(&mut self, u: usize) {
+        self.cover.remove(u);
+    }
+
+    /// Whether `u` is currently covered.
+    #[inline]
+    pub fn cover_contains(&self, u: usize) -> bool {
+        self.cover.contains(u)
+    }
+
+    fn ensure_cand_bits(&mut self, n: usize) {
+        if self.cand_bits.capacity() < n {
+            self.cand_bits = BitSet::new(n);
+        }
+    }
+
+    /// Exclusive neighbors of `w` for ESU: `{u ∈ N(w) : u > root}`
+    /// minus the coverage bitmap, appended to `out` in ascending order
+    /// (`out`'s prior content — the inherited remaining candidates — is
+    /// kept). Sparse tails probe the bitmap per element; past the
+    /// [`DENSE_EXCL_WORD_FACTOR`] crossover the tail is published as a
+    /// bitmap and swept with the word-parallel AND-NOT kernel.
+    pub fn exclusive_into(
+        &mut self,
+        g: &CsrGraph,
+        w: VertexId,
+        root: VertexId,
+        out: &mut Vec<VertexId>,
+    ) {
+        let nbrs = g.neighbors(w);
+        let tail = &nbrs[nbrs.partition_point(|&x| x <= root)..];
+        if tail.is_empty() {
+            return;
+        }
+        let words = self.cover.capacity() / 64;
+        if tail.len() >= words.saturating_mul(DENSE_EXCL_WORD_FACTOR).max(1) {
+            self.ensure_cand_bits(self.cover.capacity());
+            for &u in tail {
+                self.cand_bits.insert(u as usize);
+            }
+            setops::andnot_words_into(self.cand_bits.words(), self.cover.words(), out);
+            self.cand_bits.clear();
+        } else {
+            for &u in tail {
+                if !self.cover.contains(u as usize) {
+                    out.push(u);
+                }
+            }
+        }
+    }
+
+    /// Exclusive neighbors of `w` for BFS: the same set as
+    /// [`exclusive_into`](Self::exclusive_into) but computed without an
+    /// incremental bitmap — a ping-pong [`setops::difference_into`]
+    /// chain of the bounded tail against every matched vertex's
+    /// adjacency list. Sound because every non-root prefix vertex is a
+    /// neighbor of the (still-matched) vertex whose expansion added it,
+    /// so the chain removes embedding members along with their
+    /// neighborhoods; the root itself is excluded by the `> root`
+    /// bound. Appends to `out` in ascending order.
+    pub fn exclusive_chain_into(
+        &mut self,
+        g: &CsrGraph,
+        w: VertexId,
+        root: VertexId,
+        prefix: &[VertexId],
+        out: &mut Vec<VertexId>,
+    ) {
+        let nbrs = g.neighbors(w);
+        let tail = &nbrs[nbrs.partition_point(|&x| x <= root)..];
+        if tail.is_empty() {
+            return;
+        }
+        self.scratch_a.clear();
+        self.scratch_a.extend_from_slice(tail);
+        for &v in prefix {
+            if self.scratch_a.is_empty() {
+                break;
+            }
+            self.scratch_b.clear();
+            setops::difference_into(&self.scratch_a, g.neighbors(v), &mut self.scratch_b);
+            std::mem::swap(&mut self.scratch_a, &mut self.scratch_b);
+        }
+        out.extend_from_slice(&self.scratch_a);
+    }
+
+    /// Batched MEC codes: `codes[i]` receives the bitmask of positions
+    /// `j` with `cands[i] ∈ N(verts[j])`, computed with one adaptive
+    /// intersection per embedding position instead of one `has_edge`
+    /// probe per (candidate, position) pair. `cands` may be unsorted
+    /// but must be duplicate-free (ESU/BFS extension sets are).
+    pub fn codes_for(
+        &mut self,
+        g: &CsrGraph,
+        verts: &[VertexId],
+        cands: &[VertexId],
+        codes: &mut Vec<u32>,
+    ) {
+        codes.clear();
+        codes.resize(cands.len(), 0);
+        if cands.is_empty() || verts.is_empty() {
+            return;
+        }
+        self.order.clear();
+        self.order.extend(0..cands.len() as u32);
+        self.order.sort_unstable_by_key(|&i| cands[i as usize]);
+        self.sorted.clear();
+        self.sorted.extend(self.order.iter().map(|&i| cands[i as usize]));
+        for (j, &v) in verts.iter().enumerate() {
+            self.scratch_a.clear();
+            setops::intersect_into(&self.sorted, g.neighbors(v), &mut self.scratch_a);
+            // scratch ⊆ sorted and both ascend: one two-pointer walk
+            // scatters the hits back through `order`
+            let mut i = 0usize;
+            for &x in &self.scratch_a {
+                while self.sorted[i] != x {
+                    i += 1;
+                }
+                codes[self.order[i] as usize] |= 1 << j;
+                i += 1;
+            }
+        }
+    }
+
+    /// FSM neighbor classification: split `N(v)` into `members` (also
+    /// mapped by the embedding — back-edge targets) and `fresh` (not
+    /// mapped — forward-edge targets) with one adaptive intersection
+    /// plus one anti-intersection against the *sorted* embedding,
+    /// replacing the per-neighbor O(k) position scan. Both outputs are
+    /// cleared first and ascend.
+    pub fn members_and_fresh(
+        &mut self,
+        g: &CsrGraph,
+        sorted_emb: &[VertexId],
+        v: VertexId,
+        members: &mut Vec<VertexId>,
+        fresh: &mut Vec<VertexId>,
+    ) {
+        members.clear();
+        fresh.clear();
+        setops::intersect_into(sorted_emb, g.neighbors(v), members);
+        setops::difference_into(g.neighbors(v), sorted_emb, fresh);
+    }
+}
+
+/// Flat structure-of-arrays embedding storage for one FSM sub-pattern
+/// bin: `len() = data.len() / stride` rows of `stride` vertices each,
+/// contiguous in memory. Extension iterates [`rows`](Self::rows) — a
+/// linear scan — and deduplication ([`sort_dedup`](Self::sort_dedup))
+/// is one deterministic lexicographic sort, replacing the seed's
+/// `HashSet<Vec<VertexId>>` per bin (whose iteration order was also
+/// nondeterministic; arenas make every downstream order canonical).
+/// Deliberately no `Default`: a stride-0 arena would bypass the
+/// [`EmbArena::new`] invariant every accessor relies on.
+#[derive(Clone, Debug)]
+pub struct EmbArena {
+    data: Vec<VertexId>,
+    stride: usize,
+}
+
+impl EmbArena {
+    /// Empty arena for rows of `stride` vertices.
+    pub fn new(stride: usize) -> Self {
+        assert!(stride > 0, "embedding rows need at least one vertex");
+        Self { data: Vec::new(), stride }
+    }
+
+    /// Vertices per row.
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    /// Number of rows.
+    pub fn len(&self) -> usize {
+        self.data.len() / self.stride
+    }
+
+    /// Whether the arena holds no rows.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Append one row (must match the stride).
+    #[inline]
+    pub fn push_row(&mut self, row: &[VertexId]) {
+        debug_assert_eq!(row.len(), self.stride, "row width must match the arena stride");
+        self.data.extend_from_slice(row);
+    }
+
+    /// Row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[VertexId] {
+        &self.data[i * self.stride..(i + 1) * self.stride]
+    }
+
+    /// Iterate rows in storage order (the linear scan FSM extension
+    /// runs).
+    pub fn rows(&self) -> std::slice::ChunksExact<'_, VertexId> {
+        self.data.chunks_exact(self.stride)
+    }
+
+    /// Sort rows lexicographically and drop exact duplicates — the
+    /// arena equivalent of the seed's per-bin `HashSet`, but with a
+    /// canonical (deterministic) row order. Duplicates are held until
+    /// this seal step instead of being rejected on insert; callers seal
+    /// once per expansion, before support evaluation.
+    pub fn sort_dedup(&mut self) {
+        let k = self.stride;
+        if self.data.len() <= k {
+            return;
+        }
+        let rows = self.data.len() / k;
+        let mut idx: Vec<u32> = (0..rows as u32).collect();
+        let data = &self.data;
+        idx.sort_unstable_by(|&a, &b| {
+            data[a as usize * k..(a as usize + 1) * k]
+                .cmp(&data[b as usize * k..(b as usize + 1) * k])
+        });
+        let mut out = Vec::with_capacity(self.data.len());
+        for &i in &idx {
+            let row = &self.data[i as usize * k..(i as usize + 1) * k];
+            if out.len() < k || &out[out.len() - k..] != row {
+                out.extend_from_slice(row);
+            }
+        }
+        self.data = out;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    #[test]
+    fn exclusive_matches_scalar_probe_on_both_regimes() {
+        // two_hub: hub tails take the dense AND-NOT path, leaf tails
+        // the sparse probes; both must equal the seed visited[] filter
+        let g = gen::two_hub(300);
+        let mut core = ExtCore::new();
+        let n = g.num_vertices();
+        core.begin_root(n);
+        // a leaf root, so hub tails keep real survivors on both paths
+        let root: VertexId = 2;
+        let mut visited = vec![false; n];
+        visited[root as usize] = true;
+        core.cover_mark(root as usize);
+        for &u in g.neighbors(root) {
+            visited[u as usize] = true;
+            core.cover_mark(u as usize);
+        }
+        for w in [1u32, 5, 150] {
+            let mut got = Vec::new();
+            core.exclusive_into(&g, w, root, &mut got);
+            let want: Vec<VertexId> = g
+                .neighbors(w)
+                .iter()
+                .copied()
+                .filter(|&u| u > root && !visited[u as usize])
+                .collect();
+            assert_eq!(got, want, "w={w}");
+            if w == 1 {
+                // the hub tail must be a real dense-path workload
+                assert!(want.len() > 100, "degenerate dense case");
+            }
+            // the chain form (no bitmap) agrees on the same set
+            let mut chained = Vec::new();
+            core.exclusive_chain_into(&g, w, root, &[root], &mut chained);
+            assert_eq!(chained, want, "chain w={w}");
+        }
+        for &u in g.neighbors(root) {
+            core.cover_unmark(u as usize);
+        }
+        core.cover_unmark(root as usize);
+    }
+
+    #[test]
+    fn codes_match_per_pair_probes() {
+        let g = gen::erdos_renyi(60, 0.2, 7, &[]);
+        let mut core = ExtCore::new();
+        let verts: Vec<VertexId> = vec![3, 17, 41];
+        // unsorted, duplicate-free candidate list
+        let cands: Vec<VertexId> = vec![50, 2, 33, 4, 59, 18];
+        let mut codes = Vec::new();
+        core.codes_for(&g, &verts, &cands, &mut codes);
+        for (i, &c) in cands.iter().enumerate() {
+            let want = verts
+                .iter()
+                .enumerate()
+                .fold(0u32, |m, (j, &v)| m | ((g.has_edge(v, c) as u32) << j));
+            assert_eq!(codes[i], want, "candidate {c}");
+        }
+        // empty inputs produce empty/zero codes
+        core.codes_for(&g, &verts, &[], &mut codes);
+        assert!(codes.is_empty());
+        core.codes_for(&g, &[], &cands, &mut codes);
+        assert_eq!(codes, vec![0; cands.len()]);
+    }
+
+    #[test]
+    fn members_and_fresh_partition_the_neighborhood() {
+        let g = gen::erdos_renyi(50, 0.25, 9, &[]);
+        let mut core = ExtCore::new();
+        let mut emb: Vec<VertexId> = vec![4, 11, 30, 42];
+        emb.sort_unstable();
+        let (mut members, mut fresh) = (Vec::new(), Vec::new());
+        for v in [4u32, 11, 30] {
+            core.members_and_fresh(&g, &emb, v, &mut members, &mut fresh);
+            let want_members: Vec<VertexId> =
+                g.neighbors(v).iter().copied().filter(|u| emb.contains(u)).collect();
+            let want_fresh: Vec<VertexId> =
+                g.neighbors(v).iter().copied().filter(|u| !emb.contains(u)).collect();
+            assert_eq!(members, want_members, "v={v}");
+            assert_eq!(fresh, want_fresh, "v={v}");
+        }
+    }
+
+    #[test]
+    fn arena_rows_round_trip_and_dedup_deterministically() {
+        let mut a = EmbArena::new(3);
+        assert!(a.is_empty());
+        a.push_row(&[5, 1, 9]);
+        a.push_row(&[2, 2, 2]);
+        a.push_row(&[5, 1, 9]); // duplicate
+        a.push_row(&[2, 2, 1]);
+        assert_eq!(a.len(), 4);
+        assert_eq!(a.row(1), &[2, 2, 2]);
+        a.sort_dedup();
+        let rows: Vec<&[VertexId]> = a.rows().collect();
+        assert_eq!(rows, vec![&[2u32, 2, 1][..], &[2, 2, 2], &[5, 1, 9]]);
+        // idempotent
+        a.sort_dedup();
+        assert_eq!(a.len(), 3);
+        // single-row and empty arenas are fixpoints
+        let mut one = EmbArena::new(2);
+        one.push_row(&[7, 8]);
+        one.sort_dedup();
+        assert_eq!(one.row(0), &[7, 8]);
+    }
+
+    #[test]
+    fn kill_switch_resolution_is_cached_and_boolean() {
+        // cannot set the env here (OnceLock pins first resolution); the
+        // contract is stability across calls
+        let first = extcore_enabled_default();
+        assert_eq!(extcore_enabled_default(), first);
+    }
+}

@@ -10,14 +10,52 @@
 //! prunes infrequent sub-patterns before their embeddings are ever
 //! generated — the anti-monotone filtering that BFS systems do level by
 //! level, done here per-thread without synchronization.
+//!
+//! # Storage and extension paths (PR 5)
+//!
+//! Embedding bins are flat SoA arenas
+//! ([`EmbArena`]: one `Vec<VertexId>` + stride per bin), so extension
+//! is a linear scan over contiguous rows instead of pointer chasing
+//! through `HashMap<CanonCode, Vec<Vec<VertexId>>>`, and per-bin
+//! deduplication is one deterministic sort
+//! ([`EmbArena::sort_dedup`]) instead of a `HashSet` per bin. Within
+//! the scan, neighbor classification runs on one of two paths:
+//!
+//! * **Extension core** (`opts.extcore`, the default): one adaptive
+//!   intersection + one anti-intersection against the sorted embedding
+//!   ([`ExtCore::members_and_fresh`]) splits each mapped vertex's
+//!   neighbors into back-edge and forward-edge targets; back-edge
+//!   positions come from a binary search of the (vertex, position)
+//!   pairs.
+//! * **Scalar oracle** (`opts.extcore` off or `SANDSLASH_NO_EXTCORE=1`):
+//!   the seed loop, kept verbatim — a per-neighbor O(k) `position()`
+//!   scan of the whole embedding. Results must be bit-identical
+//!   (`rust/tests/extcore_differential.rs`).
+//!
+//! # Scheduling (PR 5)
+//!
+//! Root-pattern bins fan out through the same
+//! [`Splittable`]/[`SplitDriver`] machinery as the DFS and ESU engines:
+//! a root's level-1 sequence is its list of frequent canonical children
+//! (deterministic — bins sort by code, arenas sort rows), so when a fat
+//! root bin would serialize one worker, the untraversed child suffix is
+//! published to starving workers as a
+//! [`Task::Split`](crate::exec::sched::Task::Split); the split task
+//! replays the (worker-local, stats-quiet) child regeneration and
+//! recurses only into its window. `MinerConfig::{steal, shards}` and
+//! the scoped overrides are honored exactly as in `dfs::mine`.
 
-use std::collections::{HashMap, HashSet};
+use std::collections::HashMap;
 
+use crate::exec::sched::WorkerCtx;
+use crate::exec::split::{self, SplitDriver, Splittable};
 use crate::graph::{CsrGraph, VertexId};
 use crate::pattern::{canonical_code, CanonCode, Pattern};
-use crate::util::metrics::SearchStats;
+use crate::util::metrics::{tag, SearchStats};
 use crate::util::pool::parallel_reduce;
 
+use super::extend::{EmbArena, ExtCore};
+use super::opts::MinerConfig;
 use super::support::DomainSupport;
 
 #[derive(Clone, Debug)]
@@ -42,21 +80,18 @@ pub struct FsmResult {
     pub stats: SearchStats,
 }
 
-/// Mine all frequent edge-induced patterns with at most `max_edges`
-/// edges and MNI support > `min_support`.
-pub fn mine_fsm(
-    g: &CsrGraph,
-    max_edges: usize,
-    min_support: u64,
-    threads: usize,
-) -> FsmResult {
-    assert!(g.is_labeled(), "FSM requires a vertex-labeled graph");
-    // ---- roots: single-edge patterns, binned by labeled code ----
-    struct Root {
-        pattern: Pattern,
-        code: CanonCode,
-        embeddings: Vec<Vec<VertexId>>,
-    }
+/// One frequency-filtered root of the sub-pattern tree: a single-edge
+/// labeled pattern with its embedding arena.
+struct Root {
+    pattern: Pattern,
+    code: CanonCode,
+    embeddings: EmbArena,
+}
+
+/// Build the frequency-filtered single-edge roots, binned by canonical
+/// labeled code, in deterministic (code) order — shared by the DFS and
+/// BFS drivers so the two cannot drift on the seed level.
+fn build_roots(g: &CsrGraph, min_support: u64) -> Vec<Root> {
     let mut roots: HashMap<CanonCode, Root> = HashMap::new();
     for (u, v) in g.edges() {
         let (lu, lv) = (g.label(u), g.label(v));
@@ -69,66 +104,187 @@ pub fn mine_fsm(
         let entry = roots.entry(code.clone()).or_insert_with(|| Root {
             pattern: p,
             code,
-            embeddings: Vec::new(),
+            embeddings: EmbArena::new(2),
         });
-        entry.embeddings.push(vec![a, b]);
+        entry.embeddings.push_row(&[a, b]);
         // symmetric mapping also valid when labels equal (needed for
         // correct MNI domains)
         if g.label(a) == g.label(b) {
-            entry.embeddings.push(vec![b, a]);
+            entry.embeddings.push_row(&[b, a]);
         }
     }
     let mut root_list: Vec<Root> = roots.into_values().collect();
     // deterministic order for reproducibility
     root_list.sort_by(|a, b| a.code.cmp(&b.code));
+    for r in &mut root_list {
+        r.embeddings.sort_dedup();
+    }
     // frequency-filter roots
     root_list.retain(|r| {
         let mut d = DomainSupport::new(2);
-        for m in &r.embeddings {
+        for m in r.embeddings.rows() {
             d.add(m);
         }
         d.support() > min_support
     });
+    root_list
+}
 
-    // ---- parallel DFS over root sub-pattern trees ----
-    let out = parallel_reduce(
-        root_list.len(),
-        threads,
-        1,
-        FsmResult::default,
-        |acc, i| {
-            let r = &root_list[i];
+/// Mine all frequent edge-induced patterns with at most `max_edges`
+/// edges and MNI support > `min_support`. Thread count, scheduler
+/// knobs, and the extension-core toggle come from `cfg` (the root
+/// grain is pinned to 1: root-pattern tasks are coarse).
+pub fn mine_fsm(
+    g: &CsrGraph,
+    max_edges: usize,
+    min_support: u64,
+    cfg: &MinerConfig,
+) -> FsmResult {
+    assert!(g.is_labeled(), "FSM requires a vertex-labeled graph");
+    let root_list = build_roots(g, min_support);
+    let engine = FsmEngine {
+        g,
+        roots: &root_list,
+        max_edges,
+        min_support,
+        use_core: cfg.opts.extcore_active(),
+    };
+    let mut pol_cfg = *cfg;
+    pol_cfg.chunk = 1;
+    let pol = pol_cfg.sched_policy();
+    let state = split::reduce(root_list.len(), &pol, &engine, FsmState::default, |mut a, b| {
+        a.out.frequent.extend(b.out.frequent);
+        a.out.stats.merge(&b.out.stats);
+        a
+    });
+    let mut out = state.out;
+    // deterministic output order
+    out.frequent.sort_by(|a, b| a.code.cmp(&b.code));
+    out
+}
+
+/// Per-worker FSM state: the result accumulator plus the reusable
+/// extension-core buffers.
+#[derive(Default)]
+struct FsmState {
+    out: FsmResult,
+    core: ExtCore,
+}
+
+/// The FSM engine as a [`Splittable`] root task (module docs).
+struct FsmEngine<'e> {
+    g: &'e CsrGraph,
+    roots: &'e [Root],
+    max_edges: usize,
+    min_support: u64,
+    use_core: bool,
+}
+
+impl Splittable for FsmEngine<'_> {
+    type Acc = FsmState;
+
+    fn mine_root(
+        &self,
+        st: &mut FsmState,
+        ctx: &WorkerCtx<'_>,
+        root: usize,
+        window: Option<(usize, usize)>,
+    ) {
+        tag::with_engine(tag::Engine::Fsm, || self.root_task(st, ctx, root, window));
+    }
+}
+
+impl FsmEngine<'_> {
+    fn root_task(
+        &self,
+        st: &mut FsmState,
+        ctx: &WorkerCtx<'_>,
+        idx: usize,
+        window: Option<(usize, usize)>,
+    ) {
+        debug_assert!(
+            window.is_none() || self.use_core,
+            "only the extension core publishes FSM splits"
+        );
+        let r = &self.roots[idx];
+        let FsmState { out, core } = st;
+        if window.is_none() {
             let mut d = DomainSupport::new(2);
-            for m in &r.embeddings {
+            for m in r.embeddings.rows() {
                 d.add(m);
             }
-            acc.frequent.push(FrequentPattern {
+            out.frequent.push(FrequentPattern {
                 pattern: r.pattern.clone(),
                 code: r.code.clone(),
                 support: d.support(),
                 embeddings: r.embeddings.len() as u64,
             });
-            if max_edges > 1 {
-                extend_pattern(
-                    g,
-                    &r.pattern,
-                    &r.embeddings,
-                    max_edges,
-                    min_support,
-                    acc,
-                );
+        }
+        if self.max_edges <= 1 {
+            return;
+        }
+        // The root's level-1 sequence: its frequent canonical children,
+        // a pure function of (graph, root bin, sigma). A split task
+        // replays the construction with throwaway stats — the publisher
+        // already accounted it (exec::split docs).
+        let children = if window.is_none() {
+            expand_children(
+                self.g, &r.pattern, &r.embeddings, self.min_support, &mut out.stats, core,
+                self.use_core,
+            )
+        } else {
+            let mut scratch = SearchStats::default();
+            expand_children(
+                self.g, &r.pattern, &r.embeddings, self.min_support, &mut scratch, core,
+                self.use_core,
+            )
+        };
+        // Publish only when the children recurse (every child of one
+        // root has the same edge count, parent + 1): a thief must
+        // replay this root's expand_children — the dominant level-1
+        // cost here, unlike DFS/ESU's O(deg) setup — so handing away
+        // max-depth children (whose remaining work is one Vec push
+        // each) would cost strictly more than it parallelizes.
+        let deep = children
+            .first()
+            .is_some_and(|c| c.pattern.num_edges() < self.max_edges);
+        debug_assert!(
+            window.is_none() || deep,
+            "splits are only published for roots with recursing children"
+        );
+        if self.use_core && deep {
+            for pos in SplitDriver::new(ctx, idx, children.len(), window) {
+                self.emit_and_recurse(out, core, &children[pos]);
             }
-        },
-        |mut a, b| {
-            a.frequent.extend(b.frequent);
-            a.stats.merge(&b.stats);
-            a
-        },
-    );
-    let mut out = out;
-    // deterministic output order
-    out.frequent.sort_by(|a, b| a.code.cmp(&b.code));
-    out
+        } else {
+            // the scalar oracle (and the no-subtree case) runs whole
+            // roots and never publishes
+            for child in &children {
+                self.emit_and_recurse(out, core, child);
+            }
+        }
+    }
+
+    fn emit_and_recurse(&self, out: &mut FsmResult, core: &mut ExtCore, child: &ChildNode) {
+        out.frequent.push(FrequentPattern {
+            pattern: child.pattern.clone(),
+            code: child.code.clone(),
+            support: child.support,
+            embeddings: child.embeddings.len() as u64,
+        });
+        if child.pattern.num_edges() < self.max_edges {
+            extend_pattern(
+                self.g,
+                &child.pattern,
+                &child.embeddings,
+                self.max_edges,
+                self.min_support,
+                out,
+                core,
+                self.use_core,
+            );
+        }
+    }
 }
 
 /// One child of a sub-pattern-tree node, ready for support evaluation.
@@ -137,8 +293,8 @@ pub struct ChildNode {
     pub code: CanonCode,
     /// The pattern graph.
     pub pattern: Pattern,
-    /// Embeddings carried down the sub-pattern tree.
-    pub embeddings: Vec<Vec<VertexId>>,
+    /// Embeddings carried down the sub-pattern tree (sorted, deduped).
+    pub embeddings: EmbArena,
     /// Domain (MNI) support.
     pub support: u64,
 }
@@ -146,43 +302,61 @@ pub struct ChildNode {
 /// Expand one sub-pattern node: generate all one-edge child extensions of
 /// all embeddings, bin by child pattern code, keep frequent canonical
 /// children, recurse.
+#[allow(clippy::too_many_arguments)]
 fn extend_pattern(
     g: &CsrGraph,
     pattern: &Pattern,
-    embeddings: &[Vec<VertexId>],
+    embeddings: &EmbArena,
     max_edges: usize,
     min_support: u64,
     acc: &mut FsmResult,
+    core: &mut ExtCore,
+    use_core: bool,
 ) {
-    for child in expand_children(g, pattern, embeddings, min_support, &mut acc.stats) {
+    for child in expand_children(g, pattern, embeddings, min_support, &mut acc.stats, core, use_core)
+    {
         acc.frequent.push(FrequentPattern {
             pattern: child.pattern.clone(),
-            code: child.code,
+            code: child.code.clone(),
             support: child.support,
             embeddings: child.embeddings.len() as u64,
         });
         if child.pattern.num_edges() < max_edges {
-            extend_pattern(g, &child.pattern, &child.embeddings, max_edges, min_support, acc);
+            extend_pattern(
+                g,
+                &child.pattern,
+                &child.embeddings,
+                max_edges,
+                min_support,
+                acc,
+                core,
+                use_core,
+            );
         }
     }
 }
 
 /// One level of sub-pattern-tree expansion: all frequent canonical
-/// children of (`pattern`, `embeddings`). Shared by the DFS engine above
-/// and the BFS engine (`mine_fsm_bfs`) used for system emulation.
+/// children of (`pattern`, `embeddings`), in deterministic (code)
+/// order with deterministic (sorted) embedding arenas. Shared by the
+/// DFS engine above and the BFS engine (`mine_fsm_bfs`) used for
+/// system emulation. `use_core` selects the extension-core neighbor
+/// classification; the scalar per-neighbor scan is the oracle.
 pub fn expand_children(
     g: &CsrGraph,
     pattern: &Pattern,
-    embeddings: &[Vec<VertexId>],
+    embeddings: &EmbArena,
     min_support: u64,
     stats: &mut SearchStats,
+    core: &mut ExtCore,
+    use_core: bool,
 ) -> Vec<ChildNode> {
     let p_verts = pattern.num_vertices();
     let parent_code = canonical_code(pattern);
 
     struct ChildBin {
         pattern: Pattern,
-        embeddings: HashSet<Vec<VertexId>>,
+        embeddings: EmbArena,
     }
     let mut bins: HashMap<CanonCode, ChildBin> = HashMap::new();
 
@@ -193,43 +367,90 @@ pub fn expand_children(
     // pattern recurs once per parent embedding, so memoize it per
     // expansion (§Perf: 4x on FSM at low sigma).
     let mut canon_cache: HashMap<Pattern, (CanonCode, Vec<usize>)> = HashMap::new();
+    let mut canon_map: Vec<VertexId> = Vec::new();
     let mut insert = |bins: &mut HashMap<CanonCode, ChildBin>,
+                      canon_map: &mut Vec<VertexId>,
                       child: Pattern,
                       mapping: &[VertexId]| {
         let (code, perm) = canon_cache
             .entry(child.clone())
             .or_insert_with(|| crate::pattern::canonical::canonical_form(&child))
             .clone();
-        let mut canon_map = vec![0 as VertexId; mapping.len()];
+        canon_map.clear();
+        canon_map.resize(mapping.len(), 0);
         for (old, &v) in mapping.iter().enumerate() {
             canon_map[perm[old]] = v;
         }
         let bin = bins.entry(code).or_insert_with(|| ChildBin {
             pattern: child.permuted(&perm),
-            embeddings: HashSet::new(),
+            embeddings: EmbArena::new(mapping.len()),
         });
-        bin.embeddings.insert(canon_map);
+        bin.embeddings.push_row(canon_map);
     };
 
-    for m in embeddings {
+    // Reusable per-expansion buffers for the extension-core path.
+    let mut pairs: Vec<(VertexId, u32)> = Vec::new();
+    let mut sorted_emb: Vec<VertexId> = Vec::new();
+    let mut members: Vec<VertexId> = Vec::new();
+    let mut fresh: Vec<VertexId> = Vec::new();
+    let mut cm: Vec<VertexId> = Vec::new();
+
+    for m in embeddings.rows() {
         stats.enumerated += 1;
-        for i in 0..p_verts {
-            let vi = m[i];
-            for &x in g.neighbors(vi) {
-                if let Some(j) = m.iter().position(|&mv| mv == x) {
+        if use_core {
+            // Sorted (vertex, position) view of the mapping: one
+            // intersection + one anti-intersection per position then
+            // classify every neighbor, positions by binary search.
+            pairs.clear();
+            pairs.extend(m.iter().enumerate().map(|(i, &v)| (v, i as u32)));
+            pairs.sort_unstable();
+            sorted_emb.clear();
+            sorted_emb.extend(pairs.iter().map(|&(v, _)| v));
+            for i in 0..p_verts {
+                let vi = m[i];
+                core.members_and_fresh(g, &sorted_emb, vi, &mut members, &mut fresh);
+                for &x in &members {
+                    let j = pairs[pairs.binary_search_by_key(&x, |&(v, _)| v).unwrap()].1
+                        as usize;
                     // back edge (i, j): handle each unordered pair once
                     if j > i || pattern.has_edge(i, j) {
                         continue;
                     }
                     let mut child = pattern.clone();
                     child.add_edge(j, i);
-                    insert(&mut bins, child, m);
-                } else {
+                    insert(&mut bins, &mut canon_map, child, m);
+                }
+                for &x in &fresh {
                     // forward edge: new pattern vertex p_verts, label of x
                     let child = grow_pattern(pattern, i, g.label(x));
-                    let mut cm = m.clone();
+                    cm.clear();
+                    cm.extend_from_slice(m);
                     cm.push(x);
-                    insert(&mut bins, child, &cm);
+                    insert(&mut bins, &mut canon_map, child, &cm);
+                }
+            }
+        } else {
+            // the seed scalar loop, kept verbatim: per-neighbor O(k)
+            // position scan of the whole embedding
+            for i in 0..p_verts {
+                let vi = m[i];
+                for &x in g.neighbors(vi) {
+                    if let Some(j) = m.iter().position(|&mv| mv == x) {
+                        // back edge (i, j): handle each unordered pair once
+                        if j > i || pattern.has_edge(i, j) {
+                            continue;
+                        }
+                        let mut child = pattern.clone();
+                        child.add_edge(j, i);
+                        insert(&mut bins, &mut canon_map, child, m);
+                    } else {
+                        // forward edge: new pattern vertex p_verts, label of x
+                        let child = grow_pattern(pattern, i, g.label(x));
+                        cm.clear();
+                        cm.extend_from_slice(m);
+                        cm.push(x);
+                        insert(&mut bins, &mut canon_map, child, &cm);
+                    }
                 }
             }
         }
@@ -238,15 +459,18 @@ pub fn expand_children(
     let mut children: Vec<(CanonCode, ChildBin)> = bins.into_iter().collect();
     children.sort_by(|a, b| a.0.cmp(&b.0));
     let mut out = Vec::new();
-    for (code, bin) in children {
+    for (code, mut bin) in children {
         // duplicate pattern enumeration check: expand this child only
         // from its designated canonical parent
         if canonical_parent_code(&bin.pattern) != parent_code {
             continue;
         }
+        // seal the arena: canonical row order, duplicates dropped (the
+        // arena replacement for the seed's per-bin HashSet)
+        bin.embeddings.sort_dedup();
         let k = bin.pattern.num_vertices();
         let mut d = DomainSupport::new(k);
-        for m in &bin.embeddings {
+        for m in bin.embeddings.rows() {
             d.add(m);
         }
         let support = d.support();
@@ -254,12 +478,7 @@ pub fn expand_children(
             stats.pruned += 1;
             continue; // anti-monotone: no descendant can be frequent
         }
-        out.push(ChildNode {
-            code,
-            pattern: bin.pattern,
-            embeddings: bin.embeddings.into_iter().collect(),
-            support,
-        });
+        out.push(ChildNode { code, pattern: bin.pattern, embeddings: bin.embeddings, support });
     }
     out
 }
@@ -273,49 +492,37 @@ pub fn mine_fsm_bfs(
     g: &CsrGraph,
     max_edges: usize,
     min_support: u64,
-    threads: usize,
+    cfg: &MinerConfig,
 ) -> FsmResult {
-    let mut dfs_seed = mine_fsm(g, 1, min_support, threads); // roots only
-    let mut level: Vec<(Pattern, Vec<Vec<VertexId>>)> = Vec::new();
-    // regenerate root embeddings (mine_fsm doesn't return them)
-    {
-        let mut roots: HashMap<CanonCode, (Pattern, Vec<Vec<VertexId>>)> = HashMap::new();
-        for (u, v) in g.edges() {
-            let (a, b) = if g.label(u) <= g.label(v) { (u, v) } else { (v, u) };
-            let mut p = Pattern::from_edges(&[(0, 1)]);
-            p.set_label(0, g.label(a));
-            p.set_label(1, g.label(b));
-            let code = canonical_code(&p);
-            let e = roots.entry(code).or_insert_with(|| (p, Vec::new()));
-            e.1.push(vec![a, b]);
-            if g.label(a) == g.label(b) {
-                e.1.push(vec![b, a]);
-            }
+    assert!(g.is_labeled(), "FSM requires a vertex-labeled graph");
+    let use_core = cfg.opts.extcore_active();
+    let mut result = FsmResult::default();
+    let mut level: Vec<(Pattern, EmbArena)> = Vec::new();
+    for r in build_roots(g, min_support) {
+        let mut d = DomainSupport::new(2);
+        for m in r.embeddings.rows() {
+            d.add(m);
         }
-        for (_, (p, embs)) in roots {
-            let mut d = DomainSupport::new(2);
-            for m in &embs {
-                d.add(m);
-            }
-            if d.support() > min_support {
-                level.push((p, embs));
-            }
-        }
-        level.sort_by(|a, b| canonical_code(&a.0).cmp(&canonical_code(&b.0)));
+        result.frequent.push(FrequentPattern {
+            pattern: r.pattern.clone(),
+            code: r.code,
+            support: d.support(),
+            embeddings: r.embeddings.len() as u64,
+        });
+        level.push((r.pattern, r.embeddings));
     }
-    let mut result = FsmResult {
-        frequent: std::mem::take(&mut dfs_seed.frequent),
-        stats: dfs_seed.stats,
-    };
     for _edge_count in 1..max_edges {
         let expanded = parallel_reduce(
             level.len(),
-            threads,
+            cfg.threads,
             1,
-            || (Vec::new(), SearchStats::default()),
-            |(out, stats): &mut (Vec<ChildNode>, SearchStats), i| {
+            || (Vec::new(), SearchStats::default(), ExtCore::new()),
+            |acc: &mut (Vec<ChildNode>, SearchStats, ExtCore), i| {
+                let (out, stats, core) = acc;
                 let (p, embs) = &level[i];
-                out.extend(expand_children(g, p, embs, min_support, stats));
+                tag::with_engine(tag::Engine::Fsm, || {
+                    out.extend(expand_children(g, p, embs, min_support, stats, core, use_core));
+                });
             },
             |mut a, b| {
                 a.0.extend(b.0);
@@ -397,8 +604,13 @@ pub fn canonical_parent_code(p: &Pattern) -> CanonCode {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::opts::OptFlags;
     use crate::graph::builder::GraphBuilder;
     use crate::graph::gen;
+
+    fn cfg(threads: usize) -> MinerConfig {
+        MinerConfig::custom(threads, 1, OptFlags::hi())
+    }
 
     fn labeled_triangle_chain() -> CsrGraph {
         // two triangles sharing a vertex, labels: 1,2,3 around each
@@ -410,7 +622,7 @@ mod tests {
     #[test]
     fn single_edge_patterns_found() {
         let g = labeled_triangle_chain();
-        let r = mine_fsm(&g, 1, 0, 1);
+        let r = mine_fsm(&g, 1, 0, &cfg(1));
         // distinct labeled edges: (1,2),(2,3),(1,3),(3,1)... labels:
         // edges (0,1)=1-2,(1,2)=2-3,(2,0)=3-1,(2,3)=3-1,(3,4)=1-2,(4,2)=2-3
         // distinct: {1,2},{2,3},{1,3} -> 3 patterns
@@ -421,8 +633,8 @@ mod tests {
     #[test]
     fn min_support_filters() {
         let g = labeled_triangle_chain();
-        let all = mine_fsm(&g, 2, 0, 1);
-        let some = mine_fsm(&g, 2, 1, 1);
+        let all = mine_fsm(&g, 2, 0, &cfg(1));
+        let some = mine_fsm(&g, 2, 1, &cfg(1));
         assert!(some.frequent.len() < all.frequent.len());
         assert!(some.frequent.iter().all(|f| f.support > 1));
     }
@@ -430,7 +642,7 @@ mod tests {
     #[test]
     fn patterns_unique_by_code() {
         let g = gen::erdos_renyi(40, 0.15, 11, &[1, 2]);
-        let r = mine_fsm(&g, 3, 1, 2);
+        let r = mine_fsm(&g, 3, 1, &cfg(2));
         let mut codes: Vec<_> = r.frequent.iter().map(|f| f.code.clone()).collect();
         let before = codes.len();
         codes.sort();
@@ -441,11 +653,33 @@ mod tests {
     #[test]
     fn thread_count_invariant() {
         let g = gen::erdos_renyi(40, 0.12, 19, &[1, 2, 3]);
-        let a = mine_fsm(&g, 3, 1, 1);
-        let b = mine_fsm(&g, 3, 1, 4);
+        let a = mine_fsm(&g, 3, 1, &cfg(1));
+        let b = mine_fsm(&g, 3, 1, &cfg(4));
         let sa: Vec<_> = a.frequent.iter().map(|f| (f.code.clone(), f.support)).collect();
         let sb: Vec<_> = b.frequent.iter().map(|f| (f.code.clone(), f.support)).collect();
         assert_eq!(sa, sb);
+    }
+
+    #[test]
+    fn extension_core_matches_scalar_oracle() {
+        let g = gen::erdos_renyi(45, 0.12, 7, &[1, 2, 3]);
+        for sigma in [0u64, 1, 3] {
+            let core = mine_fsm(&g, 3, sigma, &cfg(2));
+            let mut oracle_cfg = cfg(2);
+            oracle_cfg.opts.extcore = false;
+            let oracle = mine_fsm(&g, 3, sigma, &oracle_cfg);
+            let sc: Vec<_> = core
+                .frequent
+                .iter()
+                .map(|f| (f.code.clone(), f.support, f.embeddings))
+                .collect();
+            let so: Vec<_> = oracle
+                .frequent
+                .iter()
+                .map(|f| (f.code.clone(), f.support, f.embeddings))
+                .collect();
+            assert_eq!(sc, so, "sigma={sigma}");
+        }
     }
 
     #[test]
@@ -477,7 +711,7 @@ mod tests {
             b.add_edge(0, v);
         }
         let g = b.with_labels(vec![9, 1, 1, 1, 1]).build();
-        let r = mine_fsm(&g, 2, 0, 1);
+        let r = mine_fsm(&g, 2, 0, &cfg(1));
         let wedge = r
             .frequent
             .iter()

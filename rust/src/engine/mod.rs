@@ -6,6 +6,9 @@
 //! * [`esu`] — pattern-oblivious exact-once vertex-induced enumeration
 //! * [`bfs`] — level-synchronous engine (Pangolin-like emulation)
 //! * [`fsm`] — sub-pattern-tree DFS for frequent subgraph mining
+//! * [`extend`] — the shared extension core (PR 5): sorted-candidate-set
+//!   construction on the adaptive kernels, used by ESU/BFS/FSM (the DFS
+//!   engine has its own set-centric frontier)
 //! * [`local_graph`] — kClist-style shrinking local graphs (LG)
 //! * [`embedding`], [`mnc`] — MEC codes and the MNC connectivity map
 //! * [`support`] — count and MNI/domain supports
@@ -15,6 +18,7 @@ pub mod bfs;
 pub mod dfs;
 pub mod embedding;
 pub mod esu;
+pub mod extend;
 pub mod fsm;
 pub mod hooks;
 pub mod local_graph;

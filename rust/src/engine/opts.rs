@@ -13,8 +13,13 @@
 //! assert!(lo.lc && lo.lg);
 //!
 //! // emulated systems stay on the scalar probe path so table
-//! // comparisons isolate the optimizations each system lacks
+//! // comparisons isolate the optimizations each system lacks...
 //! assert!(!OptFlags::peregrine_like().sets);
+//! // ...but every preset keeps the shared extension core (PR 5): like
+//! // the SIMD kernels and the scheduler, it is an execution substrate,
+//! // not a Table-3 optimization (disable via `extcore = false` or
+//! // `SANDSLASH_NO_EXTCORE=1` to pin the seed scalar oracles)
+//! assert!(OptFlags::pangolin_like().extcore && OptFlags::none().extcore);
 //!
 //! // flags compose freely for sweeps (e.g. Fig. 8's MNC ablation)
 //! let mut ablated = OptFlags::hi();
@@ -57,6 +62,17 @@ pub struct OptFlags {
     /// intersect degeneracy-bounded local lists instead of global CSR
     /// rows. The clique apps use the hand-tuned kClist form instead.
     pub lg: bool,
+    /// Shared extension core (PR 5): run the ESU, BFS and FSM engines
+    /// on the sorted-candidate-set machinery of
+    /// [`crate::engine::extend`] instead of their seed scalar loops
+    /// (visited-array probes, per-pair `has_edge` code folds,
+    /// per-neighbor embedding scans). On in every preset — like the
+    /// SIMD kernels and the work-stealing scheduler it is an execution
+    /// substrate, not a Table-3 optimization, so the system emulations
+    /// keep it too. `false` (or the process-wide
+    /// `SANDSLASH_NO_EXTCORE=1` kill switch, which outranks this flag)
+    /// pins the seed loops, the differential oracles.
+    pub extcore: bool,
     /// Collect search-space statistics (Fig. 10).
     pub stats: bool,
 }
@@ -65,7 +81,7 @@ impl OptFlags {
     /// Sandslash-Hi: all high-level optimizations (Table 3a left) plus
     /// the set-centric extension frontier.
     pub fn hi() -> Self {
-        Self { sb: true, dag: true, mo: true, df: true, mnc: true, mec: true, sets: true, lc: false, lg: false, stats: false }
+        Self { sb: true, dag: true, mo: true, df: true, mnc: true, mec: true, sets: true, lc: false, lg: false, extcore: true, stats: false }
     }
 
     /// Sandslash-Lo: Hi plus low-level optimizations.
@@ -75,7 +91,7 @@ impl OptFlags {
 
     /// Everything off (naive enumeration with only correctness checks).
     pub fn none() -> Self {
-        Self { sb: true, dag: false, mo: false, df: false, mnc: false, mec: false, sets: false, lc: false, lg: false, stats: false }
+        Self { sb: true, dag: false, mo: false, df: false, mnc: false, mec: false, sets: false, lc: false, lg: false, extcore: true, stats: false }
     }
 
     /// AutoMine-like: matching order but no symmetry breaking, no DAG —
@@ -83,24 +99,42 @@ impl OptFlags {
     /// Emulations stay on the scalar probe path so the table comparisons
     /// keep isolating the optimizations each system lacks.
     pub fn automine_like() -> Self {
-        Self { sb: false, dag: false, mo: true, df: false, mnc: false, mec: true, sets: false, lc: false, lg: false, stats: false }
+        Self { sb: false, dag: false, mo: true, df: false, mnc: false, mec: true, sets: false, lc: false, lg: false, extcore: true, stats: false }
     }
 
     /// Pangolin-like: BFS strategy (selected separately), SB + DAG but no
     /// MNC/MO/DF.
     pub fn pangolin_like() -> Self {
-        Self { sb: true, dag: true, mo: false, df: false, mnc: false, mec: true, sets: false, lc: false, lg: false, stats: false }
+        Self { sb: true, dag: true, mo: false, df: false, mnc: false, mec: true, sets: false, lc: false, lg: false, extcore: true, stats: false }
     }
 
     /// Peregrine-like: DFS, on-the-fly SB and MO, but no DAG orientation.
     pub fn peregrine_like() -> Self {
-        Self { sb: true, dag: false, mo: true, df: false, mnc: false, mec: true, sets: false, lc: false, lg: false, stats: false }
+        Self { sb: true, dag: false, mo: true, df: false, mnc: false, mec: true, sets: false, lc: false, lg: false, extcore: true, stats: false }
     }
 
     /// This preset with search-space statistics collection enabled.
     pub fn with_stats(mut self) -> Self {
         self.stats = true;
         self
+    }
+
+    /// This preset with the shared extension core switched on or off
+    /// (`false` pins the ESU/BFS/FSM engines to their seed scalar
+    /// oracles; sweeps and the differential tests use this).
+    pub fn with_extcore(mut self, on: bool) -> Self {
+        self.extcore = on;
+        self
+    }
+
+    /// Whether the shared extension core actually runs: the per-run
+    /// [`OptFlags::extcore`] flag gated by the process-wide
+    /// `SANDSLASH_NO_EXTCORE=1` kill switch
+    /// ([`crate::engine::extend::extcore_enabled_default`]), which
+    /// outranks it — exactly how `SANDSLASH_NO_STEAL` outranks
+    /// [`MinerConfig::steal`].
+    pub fn extcore_active(&self) -> bool {
+        self.extcore && crate::engine::extend::extcore_enabled_default()
     }
 }
 
@@ -118,11 +152,12 @@ pub struct MinerConfig {
     /// work-stealing executor in [`crate::exec`]; `false` pins the run
     /// to the seed global-cursor loop — the *scheduling oracle* every
     /// count must agree with. Honored by the engines that resolve
-    /// [`MinerConfig::sched_policy`] (the generic DFS engine, i.e. the
-    /// `sl`/generic-pattern paths); the hand-tuned apps and the
-    /// esu/bfs/fsm engines reach the scheduler through the fixed
-    /// `util::pool` adapter signatures, which cannot see this field —
-    /// pin those with the scoped
+    /// [`MinerConfig::sched_policy`]: the generic DFS engine and,
+    /// since PR 5, the ESU and FSM engines (all three fan roots
+    /// through [`crate::exec::split::reduce`] and publish split
+    /// tasks). The hand-tuned apps and the BFS engine still reach the
+    /// scheduler through the fixed `util::pool` adapter signatures,
+    /// which cannot see this field — pin those with the scoped
     /// [`sched::with_overrides`](crate::exec::sched::with_overrides)
     /// (what the CLI's `--no-steal` does around its whole dispatch) or
     /// the process-wide `SANDSLASH_NO_STEAL=1` kill switch, which
@@ -132,6 +167,14 @@ pub struct MinerConfig {
     /// [`MinerConfig::steal`]; `None` uses the detected topology
     /// ([`crate::exec::topology`], `SANDSLASH_SHARDS`).
     pub shards: Option<usize>,
+    /// Byte budget for one materialized BFS level
+    /// ([`crate::engine::bfs`], PR 5): the level-synchronous engine
+    /// refuses to build a level whose estimated footprint exceeds it,
+    /// returning a diagnosis instead of OOM-killing the host. `None`
+    /// resolves the `SANDSLASH_BFS_CAP` environment override and then
+    /// the built-in default
+    /// ([`crate::engine::bfs::DEFAULT_BFS_CAP_BYTES`]).
+    pub bfs_cap: Option<usize>,
     /// Optimization switches (paper Table 3).
     pub opts: OptFlags,
 }
@@ -145,19 +188,20 @@ impl MinerConfig {
             chunk: crate::util::pool::default_chunk(),
             steal: true,
             shards: None,
+            bfs_cap: None,
             opts,
         }
     }
 
     /// One worker, one chunk — deterministic sequential execution.
     pub fn single_thread(opts: OptFlags) -> Self {
-        Self { threads: 1, chunk: usize::MAX, steal: true, shards: None, opts }
+        Self { threads: 1, chunk: usize::MAX, steal: true, shards: None, bfs_cap: None, opts }
     }
 
     /// Explicit thread count and grain (tests and sweeps); scheduler
     /// knobs stay at their defaults (stealing on, topology shards).
     pub fn custom(threads: usize, chunk: usize, opts: OptFlags) -> Self {
-        Self { threads, chunk, steal: true, shards: None, opts }
+        Self { threads, chunk, steal: true, shards: None, bfs_cap: None, opts }
     }
 
     /// This configuration with an explicit thread count.
@@ -176,6 +220,13 @@ impl MinerConfig {
     /// This configuration with an explicit locality shard count.
     pub fn with_shards(mut self, shards: usize) -> Self {
         self.shards = Some(shards);
+        self
+    }
+
+    /// This configuration with an explicit BFS level byte budget
+    /// (overrides the `SANDSLASH_BFS_CAP` environment resolution).
+    pub fn with_bfs_cap(mut self, bytes: usize) -> Self {
+        self.bfs_cap = Some(bytes);
         self
     }
 
@@ -204,6 +255,29 @@ mod tests {
         // emulated systems stay on the scalar probe path
         assert!(!OptFlags::automine_like().sets && !OptFlags::pangolin_like().sets);
         assert!(!OptFlags::peregrine_like().sets && !OptFlags::none().sets);
+        // ... but every preset keeps the shared extension core (a
+        // substrate, not a Table-3 optimization)
+        for preset in [
+            OptFlags::hi(),
+            OptFlags::lo(),
+            OptFlags::none(),
+            OptFlags::automine_like(),
+            OptFlags::pangolin_like(),
+            OptFlags::peregrine_like(),
+        ] {
+            assert!(preset.extcore);
+        }
+        assert!(!OptFlags::hi().with_extcore(false).extcore);
+        // the kill switch can only ever pin the oracle, never force the
+        // core past an explicit opt-out
+        assert!(!OptFlags::hi().with_extcore(false).extcore_active());
+    }
+
+    #[test]
+    fn bfs_cap_knob_defaults_unset_and_builds() {
+        let cfg = MinerConfig::custom(2, 8, OptFlags::hi());
+        assert_eq!(cfg.bfs_cap, None);
+        assert_eq!(cfg.with_bfs_cap(1 << 20).bfs_cap, Some(1 << 20));
     }
 
     #[test]

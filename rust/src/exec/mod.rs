@@ -7,7 +7,10 @@
 //! * [`topology`] — locality shard detection (`/sys/devices/system/node`,
 //!   `SANDSLASH_SHARDS` override) and the worker/task-space partition.
 //! * [`split`] — the demand-driven subtree-splitting protocol that
-//!   breaks hub-rooted level-1 candidate sets into stealable tasks.
+//!   breaks hub-rooted level-1 candidate sets into stealable tasks,
+//!   plus (PR 5) the [`split::Splittable`] root-task contract and the
+//!   [`split::SplitDriver`] polling loop that the DFS, ESU and FSM
+//!   engines all publish through.
 //!
 //! The legacy `util::pool` entry points survive as thin adapters over
 //! [`sched`], so engine and app call sites kept their signatures; new

@@ -32,11 +32,37 @@
 //! Hunger is a *level*, not an event: a worker deregisters only when it
 //! acquires work (or exits at termination), so a loaded worker never
 //! misses a request by polling late. Splits re-execute the root's
-//! level-0 setup (root bitmap, sb bounds) — that is deliberate: the
-//! setup is worker-local, deterministic, and orders of magnitude
-//! cheaper than the subtree being handed away.
+//! level-0 setup (root bitmap, sb bounds, FSM child regeneration) —
+//! that is deliberate: the setup is worker-local, deterministic, and
+//! orders of magnitude cheaper than the subtree being handed away.
+//!
+//! # The `Splittable` root-task contract (PR 5)
+//!
+//! Originally the window + publish + truncate discipline was hard-coded
+//! into `dfs::mine_root`; it is now a reusable pair any engine adopts:
+//!
+//! * [`Splittable`] — an engine whose root task's level-1 work is a
+//!   *deterministic sequence of independent positions*. The engine
+//!   implements [`Splittable::mine_root`]; [`reduce`] maps scheduler
+//!   tasks onto it (whole roots get `window = None`, a [`Task::Split`]
+//!   re-enters with the published `[lo, hi)` position window).
+//! * [`SplitDriver`] — the level-1 polling loop: an iterator over the
+//!   windowed positions that, before yielding each one, checks
+//!   [`WorkerCtx::split_requested`] and hands the untraversed suffix to
+//!   a starving worker.
+//!
+//! Three engines ride this today: the set-centric DFS (level-1
+//! candidate positions), ESU (level-1 extension-set positions), and FSM
+//! (frequent-children positions of a root pattern bin). In every case
+//! the sequence must be a pure function of (root, input, config), so a
+//! replayed setup lands on exactly the positions the publisher was
+//! iterating — and any root-level accounting must be done only by the
+//! `window = None` task, which is the sole task guaranteed to run the
+//! setup exactly once per root across the whole run.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
+
+use super::sched::{self, SchedPolicy, Task, WorkerCtx};
 
 /// Count of currently-starving workers, shared by one scheduler pool.
 ///
@@ -73,6 +99,107 @@ impl SplitGate {
     }
 }
 
+/// A mining engine whose root tasks obey the split contract (module
+/// docs): the root's level-1 work is a deterministic sequence of
+/// independent positions, and `mine_root` can execute any window of it.
+pub trait Splittable: Sync {
+    /// Per-worker accumulator/state threaded through one run.
+    type Acc;
+
+    /// Execute root `root` restricted to `window` over its level-1
+    /// sequence. `None` is the whole root — the only call that runs
+    /// per-root accounting; `Some((lo, hi))` is a published suffix
+    /// re-entering the deterministic sequence (setup replayed, stats
+    /// quiet, positions `[lo, hi)` only).
+    fn mine_root(
+        &self,
+        acc: &mut Self::Acc,
+        ctx: &WorkerCtx<'_>,
+        root: usize,
+        window: Option<(usize, usize)>,
+    );
+}
+
+/// Parallel reduce over the roots `0..n` of a [`Splittable`] engine:
+/// the one `Task` match shared by every split-aware engine (previously
+/// hard-coded into `dfs::mine`). Whole-root ranges fan out position by
+/// position; published [`Task::Split`] windows are delivered back to
+/// the same engine body.
+pub fn reduce<S>(
+    n: usize,
+    pol: &SchedPolicy,
+    engine: &S,
+    init: impl Fn() -> S::Acc + Sync,
+    merge: impl FnMut(S::Acc, S::Acc) -> S::Acc,
+) -> S::Acc
+where
+    S: Splittable,
+    S::Acc: Send,
+{
+    sched::reduce(
+        n,
+        pol,
+        init,
+        |acc, ctx, task| match task {
+            Task::Roots { start, end } => {
+                for root in start..end {
+                    engine.mine_root(acc, ctx, root, None);
+                }
+            }
+            Task::Split { root, lo, hi } => engine.mine_root(acc, ctx, root, Some((lo, hi))),
+        },
+        merge,
+    )
+}
+
+/// The level-1 polling loop of the split protocol, shared by every
+/// publisher so the window + publish + truncate discipline cannot drift
+/// between engines: iterates the candidate positions of one root task
+/// clamped to its window, and before yielding each position — when a
+/// worker is starving and this worker's own deque is empty — publishes
+/// the untraversed suffix `[pos + 1, end)` as a [`Task::Split`] and
+/// keeps only the current position for itself.
+pub struct SplitDriver<'a, 'p> {
+    ctx: &'a WorkerCtx<'p>,
+    root: usize,
+    pos: usize,
+    end: usize,
+}
+
+impl<'a, 'p> SplitDriver<'a, 'p> {
+    /// Driver over the `len` level-1 positions of `root`, clamped to
+    /// `window` (a [`Task::Split`] suffix) when present.
+    pub fn new(
+        ctx: &'a WorkerCtx<'p>,
+        root: usize,
+        len: usize,
+        window: Option<(usize, usize)>,
+    ) -> Self {
+        let (lo, hi) = window.unwrap_or((0, usize::MAX));
+        Self { ctx, root, pos: lo.min(len), end: hi.min(len) }
+    }
+}
+
+impl Iterator for SplitDriver<'_, '_> {
+    type Item = usize;
+
+    #[inline]
+    fn next(&mut self) -> Option<usize> {
+        if self.pos >= self.end {
+            return None;
+        }
+        if self.end - self.pos > 1
+            && self.ctx.split_requested()
+            && self.ctx.publish_split(self.root, self.pos + 1, self.end)
+        {
+            self.end = self.pos + 1;
+        }
+        let p = self.pos;
+        self.pos += 1;
+        Some(p)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -89,5 +216,60 @@ mod tests {
         assert!(gate.requests_pending());
         gate.deregister();
         assert!(!gate.requests_pending());
+    }
+
+    /// Toy splittable engine: root 0 carries `hub` level-1 positions,
+    /// every other root exactly one; the accumulator counts positions.
+    struct Toy {
+        hub: usize,
+        spin: u64,
+    }
+
+    impl Splittable for Toy {
+        type Acc = u64;
+
+        fn mine_root(
+            &self,
+            acc: &mut u64,
+            ctx: &WorkerCtx<'_>,
+            root: usize,
+            window: Option<(usize, usize)>,
+        ) {
+            let len = if root == 0 { self.hub } else { 1 };
+            if let Some((lo, hi)) = window {
+                assert!(lo < hi && hi <= len, "split window out of range");
+            }
+            for _pos in SplitDriver::new(ctx, root, len, window) {
+                // make the hub grind long enough to starve peers
+                std::hint::black_box((0..self.spin).sum::<u64>());
+                *acc += 1;
+            }
+        }
+    }
+
+    #[test]
+    fn splittable_reduce_counts_each_position_once_across_policies() {
+        let n = 256usize;
+        let toy = Toy { hub: 64, spin: 500 };
+        let want = (n as u64 - 1) + 64;
+        for threads in [1usize, 4] {
+            for steal in [false, true] {
+                for shards in [1usize, 2] {
+                    let pol = SchedPolicy { threads, chunk: 1, steal, shards };
+                    let got = reduce(n, &pol, &toy, || 0u64, |a, b| a + b);
+                    assert_eq!(got, want, "threads={threads} steal={steal} shards={shards}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn driver_without_a_pool_walks_the_full_window_inline() {
+        // sequential runs hand the body an inert ctx: the driver must
+        // degrade to a plain loop and never publish
+        let toy = Toy { hub: 10, spin: 0 };
+        let pol = SchedPolicy { threads: 1, chunk: usize::MAX, steal: true, shards: 1 };
+        let got = reduce(3, &pol, &toy, || 0u64, |a, b| a + b);
+        assert_eq!(got, 12);
     }
 }

@@ -398,6 +398,26 @@ pub fn and_words_into(a: &[u64], b: &[u64], out: &mut Vec<VertexId>) {
     }
 }
 
+/// Word-parallel AND-NOT of two bit vectors with the set bits of
+/// `a & !b` decoded (ascending) onto `out` — the bitset×bitset dense
+/// *anti*-intersection kernel behind the extension core's
+/// exclusive-neighbor construction (ESU, PR 5): the candidate bitmap is
+/// swept against the coverage bitmap 64 memberships per instruction
+/// pair, and only survivors pay the bit-extraction cost. Words of `a`
+/// past the end of `b` are treated as uncovered (they survive whole).
+pub fn andnot_words_into(a: &[u64], b: &[u64], out: &mut Vec<VertexId>) {
+    dispatch::note_word_parallel();
+    for (wi, &x) in a.iter().enumerate() {
+        let y = b.get(wi).copied().unwrap_or(0);
+        let mut w = x & !y;
+        while w != 0 {
+            let bit = w.trailing_zeros() as usize;
+            out.push((wi * 64 + bit) as VertexId);
+            w &= w - 1;
+        }
+    }
+}
+
 /// Scan a contiguous range of 32-bit constraint masks, appending
 /// `base + index` for every mask `m` with `m & want == want` and
 /// `m & veto == 0` — the LG dense-mode candidate scan over the
@@ -931,6 +951,38 @@ mod tests {
         out.clear();
         difference_into(&a, &[2, 4], &mut out);
         assert_eq!(out, vec![1, 3]);
+    }
+
+    #[test]
+    fn andnot_words_decodes_survivors_ascending() {
+        use crate::util::bitset::BitSet;
+        let n = 200usize;
+        let mut a = BitSet::new(n);
+        let mut b = BitSet::new(n);
+        for i in (0..n).step_by(3) {
+            a.insert(i);
+        }
+        for i in (0..n).step_by(5) {
+            b.insert(i);
+        }
+        let mut got = Vec::new();
+        andnot_words_into(a.words(), b.words(), &mut got);
+        let want: Vec<u32> =
+            (0..n).step_by(3).filter(|i| i % 5 != 0).map(|i| i as u32).collect();
+        assert_eq!(got, want);
+        // a longer than b: the uncovered tail survives whole
+        let mut tail = Vec::new();
+        andnot_words_into(a.words(), &b.words()[..1], &mut tail);
+        let want_tail: Vec<u32> = (0..n)
+            .step_by(3)
+            .filter(|&i| i >= 64 || i % 5 != 0)
+            .map(|i| i as u32)
+            .collect();
+        assert_eq!(tail, want_tail);
+        // empty inputs are no-ops
+        let mut none = Vec::new();
+        andnot_words_into(&[], b.words(), &mut none);
+        assert!(none.is_empty());
     }
 
     #[test]

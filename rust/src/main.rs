@@ -16,7 +16,11 @@
 //!
 //! Global scheduler flags (any subcommand): `--no-steal` pins the run
 //! to the global-cursor scheduling oracle, `--shards N` overrides the
-//! detected locality shard count (PR 4; see `sandslash::exec`).
+//! detected locality shard count (PR 4; see `sandslash::exec`), and
+//! `--no-extcore` pins the ESU/BFS/FSM engines to their seed scalar
+//! extension oracles (PR 5; see `sandslash::engine::extend` — the
+//! process-wide equivalents are `SANDSLASH_NO_STEAL=1` /
+//! `SANDSLASH_NO_EXTCORE=1`).
 
 use sandslash::apps::baselines::emulation::{self, System};
 use sandslash::apps::{clique, fsm_app, motif, sl, tc};
@@ -123,6 +127,11 @@ fn config(args: &Args) -> MinerConfig {
         .filter(|&n| n > 0)
     {
         cfg.shards = Some(n);
+    }
+    // extension-core oracle pin (PR 5): unlike the scheduler flags this
+    // is a per-run OptFlags field, so the config edit is the whole story
+    if args.flag("no-extcore") {
+        cfg.opts.extcore = false;
     }
     cfg
 }

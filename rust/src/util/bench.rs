@@ -32,7 +32,12 @@
 //! on the work-stealing pool, counts asserted equal, and — on an
 //! adversarially skewed two-hub input — the
 //! [`crate::util::metrics::sched`] counters asserted to show that
-//! steals/splits actually fired.
+//! steals/splits actually fired. The PR-5 sections (`pr5-kmc`,
+//! `pr5-fsm`, via [`Pr5Section::write`] and the shared
+//! [`pr5_compare`] protocol) do it once more for the *extension
+//! core*: the same ESU / FSM workload on the seed scalar oracle
+//! (`OptFlags::extcore = false`) and on the shared extension core,
+//! counts asserted equal.
 //!
 //! Writers must assert their differential check (scalar count ==
 //! set-centric count, scalar-kernel count == SIMD-kernel count)
@@ -279,8 +284,9 @@ pub fn pr1_meta(threads: usize) -> Json {
         .str(
             "regenerate",
             "cargo test -q (smoke) or cargo bench --bench table5_tc / table6_kcl (sampled); \
-             pr3-* sections compare the scalar vs SIMD kernel dispatch and pr4-sched-* \
-             sections the cursor vs work-stealing scheduler, each from the same run",
+             pr3-* sections compare the scalar vs SIMD kernel dispatch, pr4-sched-* the \
+             cursor vs work-stealing scheduler, and pr5-* the scalar extension oracles vs \
+             the shared extension core, each from the same run",
         )
 }
 
@@ -570,6 +576,73 @@ impl Pr4Section<'_> {
             .num("speedup_steal_over_cursor", self.speedup())
             .int("skew_steals", self.skew_steals)
             .int("skew_splits", self.skew_splits)
+            .int("samples", self.samples as u64);
+        upsert_bench_section(&pr1_report_path(), &pr1_meta(threads), section, &body)
+    }
+}
+
+/// One measured scalar-oracle vs extension-core comparison
+/// (EXPERIMENTS.md §PR-5), as recorded in a `pr5-*` report section:
+/// the same ESU or FSM workload run with `OptFlags::extcore` off (the
+/// seed scalar loops) and on (the shared extension core of
+/// [`crate::engine::extend`]), from the same process, so the rows
+/// differ only in extension machinery. Shared by the benches and the
+/// tier-1 smoke test so the JSON schema cannot drift between writers.
+pub struct Pr5Section<'a> {
+    /// Input description (generator + parameters).
+    pub graph: &'a str,
+    /// Workload name (e.g. `4-motif-esu`, `fsm k<=3 sigma=2`).
+    pub workload: &'a str,
+    /// Agreed result fingerprint (differential check across paths).
+    pub count: u64,
+    /// Wall time on the seed scalar oracle (seconds).
+    pub oracle_secs: f64,
+    /// Wall time on the shared extension core (seconds).
+    pub core_secs: f64,
+    /// Number of timing samples behind the figures.
+    pub samples: usize,
+}
+
+/// Run the §PR-5 oracle-vs-core measurement protocol once and return
+/// the section row — the single implementation shared by the tier-1
+/// smoke test and the engine benches, exactly as [`pr3_compare`] is
+/// for the kernel dispatch and [`pr4_compare`] for the scheduler:
+/// `run(use_core)` executes the workload with the extension core off
+/// (`false`, the seed scalar oracle) then on (`true`), returning a
+/// deterministic result fingerprint and the wall seconds to record;
+/// the two fingerprints are asserted equal before anything is written.
+/// (Under `SANDSLASH_NO_EXTCORE=1` both runs resolve to the oracle and
+/// the check degenerates to self-agreement — the CI oracle leg.)
+pub fn pr5_compare<'a>(
+    graph: &'a str,
+    workload: &'a str,
+    samples: usize,
+    mut run: impl FnMut(bool) -> (u64, f64),
+) -> Pr5Section<'a> {
+    let (oracle_count, oracle_secs) = run(false);
+    let (core_count, core_secs) = run(true);
+    assert_eq!(
+        oracle_count, core_count,
+        "extension core vs scalar oracle disagree on {graph} / {workload}"
+    );
+    Pr5Section { graph, workload, count: core_count, oracle_secs, core_secs, samples }
+}
+
+impl Pr5Section<'_> {
+    /// Oracle-over-core speedup (> 1 means the extension core won).
+    pub fn speedup(&self) -> f64 {
+        self.oracle_secs / self.core_secs
+    }
+
+    /// Upsert this section into the shared report at the repo root.
+    pub fn write(&self, section: &str, threads: usize) -> std::io::Result<()> {
+        let body = Json::new()
+            .str("graph", self.graph)
+            .str("workload", self.workload)
+            .int("count", self.count)
+            .num("oracle_secs", self.oracle_secs)
+            .num("core_secs", self.core_secs)
+            .num("speedup_core_over_oracle", self.speedup())
             .int("samples", self.samples as u64);
         upsert_bench_section(&pr1_report_path(), &pr1_meta(threads), section, &body)
     }

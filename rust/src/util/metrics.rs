@@ -5,6 +5,74 @@
 //! figure. Counters are plain `u64` aggregated through the per-thread
 //! reduce path (no atomics in the hot loop).
 
+/// Engine attribution for the dispatch and scheduler counters (PR 5).
+///
+/// The kernel layer ([`crate::graph::setops`]) and the split protocol
+/// ([`crate::exec::split`]) are engine-agnostic, so their counters
+/// alone cannot prove that, say, the SIMD merge was selected *inside
+/// FSM extension* rather than by a concurrently running DFS test. Each
+/// engine therefore wraps its per-task body in [`tag::with_engine`],
+/// which sets a thread-local lane; every counted event lands in both
+/// the process-global counter and its lane's copy. The lane read costs
+/// one `Cell` load and only happens on paths that were already counting
+/// (dispatch counters are off by default; split publishes are rare), so
+/// the default hot loop is untouched.
+pub mod tag {
+    use std::cell::Cell;
+
+    /// Which mining engine the current worker task belongs to.
+    #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+    pub enum Engine {
+        /// The pattern-guided DFS engine — and any untagged caller
+        /// (tests, apps driving kernels directly).
+        Generic = 0,
+        /// Pattern-oblivious ESU enumeration ([`crate::engine::esu`]).
+        Esu = 1,
+        /// Level-synchronous BFS ([`crate::engine::bfs`]).
+        Bfs = 2,
+        /// Sub-pattern-tree FSM ([`crate::engine::fsm`]).
+        Fsm = 3,
+    }
+
+    /// Number of attribution lanes (the `Engine` variants).
+    pub const LANES: usize = 4;
+
+    thread_local! {
+        static CURRENT: Cell<usize> = const { Cell::new(0) };
+    }
+
+    /// Run `f` with every counted event on *this thread* attributed to
+    /// `e`. Scoped and nesting-safe (the previous lane is restored on
+    /// return, panic included); engines call this once per root task.
+    pub fn with_engine<T>(e: Engine, f: impl FnOnce() -> T) -> T {
+        let prev = CURRENT.with(|c| c.replace(e as usize));
+        struct Restore(usize);
+        impl Drop for Restore {
+            fn drop(&mut self) {
+                CURRENT.with(|c| c.set(self.0));
+            }
+        }
+        let _restore = Restore(prev);
+        f()
+    }
+
+    /// The lane currently active on this thread (0 = [`Engine::Generic`]).
+    #[inline]
+    pub(crate) fn current_lane() -> usize {
+        CURRENT.with(|c| c.get())
+    }
+
+    /// Human-readable lane name for diagnostics.
+    pub fn lane_name(lane: usize) -> &'static str {
+        match lane {
+            1 => "esu",
+            2 => "bfs",
+            3 => "fsm",
+            _ => "generic",
+        }
+    }
+}
+
 /// Kernel-dispatch counters for the adaptive set-operation layer
 /// ([`crate::graph::setops`]).
 ///
@@ -51,6 +119,27 @@ pub mod dispatch {
     static MASK_FILTER: PaddedCounter = PaddedCounter(AtomicU64::new(0));
     static GATHER_FILTER: PaddedCounter = PaddedCounter(AtomicU64::new(0));
 
+    // Per-engine attribution lanes (PR 5): the same six families, one
+    // copy per [`super::tag::Engine`] lane, bumped alongside the
+    // globals only while counting is enabled.
+    const FAMILIES: usize = 6;
+    const FAM_MERGE: usize = 0;
+    const FAM_GALLOP: usize = 1;
+    const FAM_SIMD_MERGE: usize = 2;
+    const FAM_WORD_PARALLEL: usize = 3;
+    const FAM_MASK_FILTER: usize = 4;
+    const FAM_GATHER_FILTER: usize = 5;
+    #[allow(clippy::declare_interior_mutable_const)] // array-init seed only
+    const ZERO_COUNTER: PaddedCounter = PaddedCounter(AtomicU64::new(0));
+    static TAGGED: [[PaddedCounter; FAMILIES]; super::tag::LANES] =
+        [[ZERO_COUNTER; FAMILIES]; super::tag::LANES];
+
+    #[inline]
+    fn note_family(global: &PaddedCounter, family: usize) {
+        global.0.fetch_add(1, Ordering::Relaxed);
+        TAGGED[super::tag::current_lane()][family].0.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Point-in-time copy of every dispatch counter.
     #[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
     pub struct DispatchCounts {
@@ -68,6 +157,19 @@ pub mod dispatch {
         pub gather_filter: u64,
     }
 
+    impl DispatchCounts {
+        /// Sum of the non-scalar kernel families (everything past the
+        /// lockstep merge) — what the PR-5 migration tests assert moved
+        /// inside a tagged engine lane.
+        pub fn beyond_scalar(&self) -> u64 {
+            self.gallop
+                + self.simd_merge
+                + self.word_parallel
+                + self.mask_filter
+                + self.gather_filter
+        }
+    }
+
     /// Read all counters (relaxed loads: exact under quiescence,
     /// monotone lower bounds under concurrency).
     pub fn snapshot() -> DispatchCounts {
@@ -81,48 +183,70 @@ pub mod dispatch {
         }
     }
 
-    /// Zero every counter. Racy against concurrent miners — inside a
-    /// shared test binary prefer [`snapshot`] deltas instead.
+    /// Read the counters attributed to one engine lane (PR 5): events
+    /// counted while that engine's [`super::tag::with_engine`] scope
+    /// was active on the executing thread. Same relaxed-load semantics
+    /// as [`snapshot`].
+    pub fn snapshot_for(e: super::tag::Engine) -> DispatchCounts {
+        let lane = &TAGGED[e as usize];
+        DispatchCounts {
+            merge: lane[FAM_MERGE].0.load(Ordering::Relaxed),
+            gallop: lane[FAM_GALLOP].0.load(Ordering::Relaxed),
+            simd_merge: lane[FAM_SIMD_MERGE].0.load(Ordering::Relaxed),
+            word_parallel: lane[FAM_WORD_PARALLEL].0.load(Ordering::Relaxed),
+            mask_filter: lane[FAM_MASK_FILTER].0.load(Ordering::Relaxed),
+            gather_filter: lane[FAM_GATHER_FILTER].0.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Zero every counter (global and per-lane). Racy against
+    /// concurrent miners — inside a shared test binary prefer
+    /// [`snapshot`] deltas instead.
     pub fn reset() {
         for c in [&MERGE, &GALLOP, &SIMD_MERGE, &WORD_PARALLEL, &MASK_FILTER, &GATHER_FILTER] {
             c.0.store(0, Ordering::Relaxed);
+        }
+        for lane in &TAGGED {
+            for c in lane {
+                c.0.store(0, Ordering::Relaxed);
+            }
         }
     }
 
     #[inline]
     pub(crate) fn note_merge() {
         if enabled() {
-            MERGE.0.fetch_add(1, Ordering::Relaxed);
+            note_family(&MERGE, FAM_MERGE);
         }
     }
     #[inline]
     pub(crate) fn note_gallop() {
         if enabled() {
-            GALLOP.0.fetch_add(1, Ordering::Relaxed);
+            note_family(&GALLOP, FAM_GALLOP);
         }
     }
     #[inline]
     pub(crate) fn note_simd_merge() {
         if enabled() {
-            SIMD_MERGE.0.fetch_add(1, Ordering::Relaxed);
+            note_family(&SIMD_MERGE, FAM_SIMD_MERGE);
         }
     }
     #[inline]
     pub(crate) fn note_word_parallel() {
         if enabled() {
-            WORD_PARALLEL.0.fetch_add(1, Ordering::Relaxed);
+            note_family(&WORD_PARALLEL, FAM_WORD_PARALLEL);
         }
     }
     #[inline]
     pub(crate) fn note_mask_filter() {
         if enabled() {
-            MASK_FILTER.0.fetch_add(1, Ordering::Relaxed);
+            note_family(&MASK_FILTER, FAM_MASK_FILTER);
         }
     }
     #[inline]
     pub(crate) fn note_gather_filter() {
         if enabled() {
-            GATHER_FILTER.0.fetch_add(1, Ordering::Relaxed);
+            note_family(&GATHER_FILTER, FAM_GATHER_FILTER);
         }
     }
 }
@@ -151,6 +275,17 @@ pub mod sched {
     static STEALS: PaddedCounter = PaddedCounter(AtomicU64::new(0));
     static SHARD_CLAIMS: PaddedCounter = PaddedCounter(AtomicU64::new(0));
     static SPLITS: PaddedCounter = PaddedCounter(AtomicU64::new(0));
+
+    // Split publishes attributed per engine lane (PR 5). Publishing
+    // happens inside the engine's task body (unlike claims/steals,
+    // which fire in the scheduler's acquisition loop where no engine
+    // scope is active), so the publisher's [`super::tag`] lane is
+    // meaningful: it is how tests prove a *non-DFS* engine actually
+    // published a split.
+    #[allow(clippy::declare_interior_mutable_const)] // array-init seed only
+    const ZERO_COUNTER: PaddedCounter = PaddedCounter(AtomicU64::new(0));
+    static SPLITS_BY_LANE: [PaddedCounter; super::tag::LANES] =
+        [ZERO_COUNTER; super::tag::LANES];
 
     /// Point-in-time copy of every scheduler counter.
     #[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
@@ -186,10 +321,21 @@ pub mod sched {
         }
     }
 
-    /// Zero every counter. Racy against concurrent miners — inside a
-    /// shared test binary prefer [`snapshot`] deltas instead.
+    /// Split publishes attributed to one engine lane (PR 5): the value
+    /// is monotone; attribute to a code region via before/after deltas
+    /// exactly like [`snapshot`].
+    pub fn splits_for(e: super::tag::Engine) -> u64 {
+        SPLITS_BY_LANE[e as usize].0.load(Ordering::Relaxed)
+    }
+
+    /// Zero every counter (global and per-lane). Racy against
+    /// concurrent miners — inside a shared test binary prefer
+    /// [`snapshot`] deltas instead.
     pub fn reset() {
         for c in [&CLAIMS, &STEALS, &SHARD_CLAIMS, &SPLITS] {
+            c.0.store(0, Ordering::Relaxed);
+        }
+        for c in &SPLITS_BY_LANE {
             c.0.store(0, Ordering::Relaxed);
         }
     }
@@ -209,6 +355,7 @@ pub mod sched {
     #[inline]
     pub(crate) fn note_split() {
         SPLITS.0.fetch_add(1, Ordering::Relaxed);
+        SPLITS_BY_LANE[super::tag::current_lane()].0.fetch_add(1, Ordering::Relaxed);
     }
 }
 
@@ -324,6 +471,43 @@ mod tests {
         assert!(after.splits > before.splits);
         // migrations counts everything except home-shard claims
         assert!(after.migrations() >= before.migrations() + 3);
+    }
+
+    #[test]
+    fn engine_tags_attribute_and_restore() {
+        dispatch::set_enabled(true);
+        let g_before = dispatch::snapshot_for(tag::Engine::Generic);
+        let e_before = dispatch::snapshot_for(tag::Engine::Esu);
+        let f_before = dispatch::snapshot_for(tag::Engine::Fsm);
+        dispatch::note_merge(); // untagged: generic lane
+        tag::with_engine(tag::Engine::Esu, || {
+            dispatch::note_word_parallel();
+            // nesting: inner scope wins, outer restored after
+            tag::with_engine(tag::Engine::Fsm, dispatch::note_gallop);
+            dispatch::note_gallop();
+        });
+        dispatch::note_simd_merge(); // back on the generic lane
+        let g_after = dispatch::snapshot_for(tag::Engine::Generic);
+        let e_after = dispatch::snapshot_for(tag::Engine::Esu);
+        let f_after = dispatch::snapshot_for(tag::Engine::Fsm);
+        assert!(g_after.merge > g_before.merge);
+        assert!(g_after.simd_merge > g_before.simd_merge);
+        assert!(e_after.word_parallel > e_before.word_parallel);
+        assert!(e_after.gallop > e_before.gallop);
+        assert!(f_after.gallop > f_before.gallop);
+        // the per-lane beyond-scalar aggregate moves with its parts
+        assert!(e_after.beyond_scalar() >= e_before.beyond_scalar() + 2);
+        assert_eq!(tag::lane_name(tag::Engine::Esu as usize), "esu");
+    }
+
+    #[test]
+    fn split_counts_attribute_to_publisher_lane() {
+        let before = sched::splits_for(tag::Engine::Fsm);
+        let g_before = sched::splits_for(tag::Engine::Generic);
+        tag::with_engine(tag::Engine::Fsm, sched::note_split);
+        sched::note_split();
+        assert!(sched::splits_for(tag::Engine::Fsm) > before);
+        assert!(sched::splits_for(tag::Engine::Generic) > g_before);
     }
 
     #[test]

@@ -8,18 +8,23 @@
 //! workloads when the host supports it — (c) re-runs the same
 //! workloads on the global-cursor oracle and the work-stealing
 //! scheduler, asserting equal counts everywhere and (on a skewed
-//! two-hub input) that steals/splits actually fire, and (d) rewrites
+//! two-hub input) that steals/splits actually fire, (d) runs the ESU
+//! k-MC and FSM workloads on their seed scalar extension oracles and
+//! on the shared extension core (`pr5-*` sections, counts asserted
+//! equal), and (e) rewrites
 //! `BENCH_pr1.json` at the repo root with single-shot wall times. The
 //! `table5_tc` / `table6_kcl` benches overwrite the same sections with
 //! properly sampled release numbers — this test just keeps the
 //! artifact alive and honest on every tier-1 run.
 
+use sandslash::engine::esu::{count_motifs, MotifTable};
+use sandslash::engine::fsm::mine_fsm;
 use sandslash::engine::hooks::NoHooks;
 use sandslash::engine::{dfs, MinerConfig, OptFlags};
 use sandslash::graph::{gen, setops};
 use sandslash::graph::CsrGraph;
 use sandslash::pattern::{library, plan, Pattern};
-use sandslash::util::bench::{pr1_report_path, pr3_compare, pr4_compare, Pr1Section};
+use sandslash::util::bench::{pr1_report_path, pr3_compare, pr4_compare, pr5_compare, Pr1Section};
 use sandslash::util::timer::timed;
 
 fn measure_and_write(
@@ -125,6 +130,42 @@ fn measure_pr4(
     s.speedup()
 }
 
+/// PR-5 rows (§PR-5) through the shared protocol (`bench::pr5_compare`):
+/// the same ESU k-MC / FSM workload with the extension core off (seed
+/// scalar oracles) and on, counts asserted equal inside the protocol.
+fn measure_pr5() -> (f64, f64) {
+    // k-MC on the pattern-oblivious ESU engine
+    let g_mc = gen::rmat(9, 6, 42, &[]);
+    let table = MotifTable::new(4);
+    let kmc = pr5_compare("rmat scale=9 ef=6 seed=42", "4-motif-esu", 1, |use_core| {
+        let cfg = MinerConfig::new(OptFlags::hi().with_extcore(use_core));
+        let (counts, _) = count_motifs(&g_mc, 4, &cfg, &NoHooks, &table); // warmup + check
+        let (_, secs) = timed(|| count_motifs(&g_mc, 4, &cfg, &NoHooks, &table).0);
+        (counts.iter().sum(), secs)
+    });
+    if let Err(e) = kmc.write("pr5-kmc", MinerConfig::new(OptFlags::hi()).threads) {
+        eprintln!("skipping BENCH_pr1.json write: {e}");
+    }
+    // FSM on the sub-pattern-tree engine (labeled input)
+    let g_fsm = gen::erdos_renyi(150, 0.06, 42, &[1, 2, 3]);
+    let fsm = pr5_compare("er n=150 p=0.06 seed=42 labels=3", "fsm k<=3 sigma=2", 1, |use_core| {
+        let cfg = MinerConfig::new(OptFlags::hi().with_extcore(use_core));
+        let r = mine_fsm(&g_fsm, 3, 2, &cfg); // warmup + check
+        let fp = r
+            .frequent
+            .iter()
+            .fold(r.frequent.len() as u64, |h, f| {
+                h.wrapping_mul(1_000_003).wrapping_add(f.support)
+            });
+        let (_, secs) = timed(|| mine_fsm(&g_fsm, 3, 2, &cfg).frequent.len());
+        (fp, secs)
+    });
+    if let Err(e) = fsm.write("pr5-fsm", MinerConfig::new(OptFlags::hi()).threads) {
+        eprintln!("skipping BENCH_pr1.json write: {e}");
+    }
+    (kmc.speedup(), fsm.speedup())
+}
+
 #[test]
 fn bench_pr1_smoke_regenerates_report() {
     let g_tc = gen::rmat(14, 8, 42, &[]);
@@ -178,11 +219,15 @@ fn bench_pr1_smoke_regenerates_report() {
         "4-clique",
         "pr4-sched-kcl4",
     );
+    // PR-5: scalar extension oracles vs the shared extension core on
+    // the ESU and FSM engines
+    let (kmc_core, fsm_core) = measure_pr5();
     eprintln!(
         "BENCH_pr1 smoke: set-centric speedup over scalar — tc {tc_speedup:.2}x, \
          4-clique {cl_speedup:.2}x; {} kernels over scalar kernels — tc {tc_simd:.2}x, \
          4-clique {cl_simd:.2}x; stealing over cursor — tc {tc_sched:.2}x, \
-         4-clique {cl_sched:.2}x ({})",
+         4-clique {cl_sched:.2}x; extension core over scalar oracles — \
+         4-MC {kmc_core:.2}x, FSM {fsm_core:.2}x ({})",
         setops::simd_level_name(),
         pr1_report_path().display()
     );

@@ -1,0 +1,314 @@
+//! Extension-core invariance suite (PR 5).
+//!
+//! The shared extension core (`sandslash::engine::extend`) must be
+//! *observationally invisible*: the ESU, BFS and FSM engines produce
+//! bit-identical results with the core on and off (their seed scalar
+//! loops are the retained oracles), across thread counts, the
+//! steal/cursor scheduler swap, and shard counts — the same
+//! oracle-referee contract as the SIMD kernels (`SANDSLASH_NO_SIMD`)
+//! and the scheduler (`SANDSLASH_NO_STEAL`). The two-hub regression
+//! then pins the other half of the claim: the migration is real on
+//! both axes, i.e. (1) the adaptive/bitset kernel families are
+//! *selected* inside ESU and FSM extension (per-engine dispatch
+//! lanes, `metrics::dispatch::snapshot_for`), and (2) a non-DFS
+//! engine actually *publishes* level-1 splits (per-engine split
+//! lanes, `metrics::sched::splits_for`) — otherwise the rebase would
+//! be a wrapper rename.
+//!
+//! Input sizing: the invariance matrix multiplies out to hundreds of
+//! runs, so the RMAT legs use scale-6 graphs (edge factor 4 for
+//! k ≤ 4, 2 for k = 5 — ESU's search space on a 64-vertex graph grows
+//! with deg^(k-1)); the adversarial two-hub legs use k = 3 and σ = 0
+//! (hub-centered FSM patterns have MNI support 1 — their center
+//! domain is one hub — so any positive σ would prune exactly the
+//! heavy subtrees the skew regression exists to exercise).
+//!
+//! Scheduler counters and dispatch counting are process-global, so the
+//! tests serialize on one lock (the `sched_invariance.rs` pattern).
+//! Under `SANDSLASH_NO_EXTCORE=1` (the CI oracle leg) the core never
+//! runs: the invariance checks degenerate to oracle-vs-oracle and the
+//! counter assertions are skipped, exactly like the `NO_STEAL` leg
+//! skips the steal assertions.
+
+use std::sync::Mutex;
+
+use sandslash::engine::bfs::bfs_count_motifs;
+use sandslash::engine::esu::{count_motifs, MotifTable};
+use sandslash::engine::extend;
+use sandslash::engine::fsm::mine_fsm;
+use sandslash::engine::hooks::NoHooks;
+use sandslash::engine::{MinerConfig, OptFlags};
+use sandslash::exec::sched::{self, Overrides};
+use sandslash::graph::builder::GraphBuilder;
+use sandslash::graph::{gen, CsrGraph};
+use sandslash::pattern::CanonCode;
+use sandslash::util::metrics::{dispatch, sched as sched_counters, tag};
+
+/// Serializes the tests in this binary (see module docs). A panicking
+/// test poisons the lock; later tests recover the guard and proceed.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// The PR-5 invariance matrix: threads {1, 8} × steal {off, on} ×
+/// shards {1, 2}, applied through both control planes (per-run config
+/// fields + scoped overrides for any adapter-bound path).
+fn for_matrix(mut check: impl FnMut(&MinerConfig, &str)) {
+    for threads in [1usize, 8] {
+        for steal in [false, true] {
+            for shards in [1usize, 2] {
+                let cfg = MinerConfig::custom(threads, 1, OptFlags::hi())
+                    .with_steal(steal)
+                    .with_shards(shards);
+                let label = format!("threads={threads} steal={steal} shards={shards}");
+                sched::with_overrides(
+                    Overrides { steal: Some(steal), shards: Some(shards) },
+                    || check(&cfg, &label),
+                );
+            }
+        }
+    }
+}
+
+/// Clone of `g` with labels assigned round-robin from `labels` (FSM
+/// needs labeled inputs; `gen::two_hub` is unlabeled).
+fn labeled_clone(g: &CsrGraph, labels: &[u32]) -> CsrGraph {
+    let n = g.num_vertices();
+    let edges: Vec<(u32, u32)> = g.edges().collect();
+    GraphBuilder::from_edges(n, &edges)
+        .with_labels((0..n).map(|v| labels[v % labels.len()]).collect())
+        .build()
+}
+
+/// Order-independent FSM fingerprint: (code, support, embeddings).
+fn fsm_fingerprint(
+    g: &CsrGraph,
+    max_edges: usize,
+    sigma: u64,
+    cfg: &MinerConfig,
+) -> Vec<(CanonCode, u64, u64)> {
+    mine_fsm(g, max_edges, sigma, cfg)
+        .frequent
+        .iter()
+        .map(|f| (f.code.clone(), f.support, f.embeddings))
+        .collect()
+}
+
+/// The RMAT input for one motif size: edge factor 4 for k ≤ 4, 2 for
+/// k = 5 (module docs).
+fn kmc_graph(k: usize, seed: u64) -> CsrGraph {
+    gen::rmat(6, if k == 5 { 2 } else { 4 }, seed, &[])
+}
+
+#[test]
+fn kmc_core_matches_oracle_across_seeds_k_and_matrix() {
+    let _guard = serial();
+    for seed in [5u64, 23, 71] {
+        for k in [3usize, 4, 5] {
+            let g = kmc_graph(k, seed);
+            let table = MotifTable::new(k);
+            let oracle_cfg =
+                MinerConfig::single_thread(OptFlags::hi().with_extcore(false)).with_steal(false);
+            let (want, _) = count_motifs(&g, k, &oracle_cfg, &NoHooks, &table);
+            assert!(want.iter().sum::<u64>() > 0, "degenerate input seed={seed} k={k}");
+            for_matrix(|cfg, label| {
+                let (got, _) = count_motifs(&g, k, cfg, &NoHooks, &table);
+                assert_eq!(&got, &want, "seed={seed} k={k} core {label}");
+                let mut oracle = *cfg;
+                oracle.opts.extcore = false;
+                let (got_o, _) = count_motifs(&g, k, &oracle, &NoHooks, &table);
+                assert_eq!(&got_o, &want, "seed={seed} k={k} oracle {label}");
+            });
+        }
+    }
+    // the adversarial graph (k = 3: a hub root's ESU subtree is every
+    // vertex pair above it, so k ≥ 4 cubes the leaf count)
+    let g = gen::two_hub(256);
+    let table = MotifTable::new(3);
+    let oracle_cfg =
+        MinerConfig::single_thread(OptFlags::hi().with_extcore(false)).with_steal(false);
+    let (want, _) = count_motifs(&g, 3, &oracle_cfg, &NoHooks, &table);
+    for_matrix(|cfg, label| {
+        let (got, _) = count_motifs(&g, 3, cfg, &NoHooks, &table);
+        assert_eq!(&got, &want, "two_hub core {label}");
+        let mut oracle = *cfg;
+        oracle.opts.extcore = false;
+        let (got_o, _) = count_motifs(&g, 3, &oracle, &NoHooks, &table);
+        assert_eq!(&got_o, &want, "two_hub oracle {label}");
+    });
+}
+
+#[test]
+fn bfs_core_matches_oracle_across_seeds_and_matrix() {
+    let _guard = serial();
+    for seed in [5u64, 23, 71] {
+        for k in [3usize, 4, 5] {
+            let g = kmc_graph(k, seed);
+            let table = MotifTable::new(k);
+            // ESU (core-vs-oracle checked above) referees BFS
+            let esu_cfg =
+                MinerConfig::single_thread(OptFlags::hi().with_extcore(false)).with_steal(false);
+            let (want, _) = count_motifs(&g, k, &esu_cfg, &NoHooks, &table);
+            for_matrix(|cfg, label| {
+                let core = bfs_count_motifs(&g, k, cfg, &table).unwrap();
+                assert_eq!(&core.counts, &want, "seed={seed} k={k} core {label}");
+                let mut oracle = *cfg;
+                oracle.opts.extcore = false;
+                let o = bfs_count_motifs(&g, k, &oracle, &table).unwrap();
+                assert_eq!(&o.counts, &want, "seed={seed} k={k} oracle {label}");
+                // levels are identical element-for-element, so the
+                // materialization footprint agrees too
+                assert_eq!(
+                    core.peak_embeddings, o.peak_embeddings,
+                    "seed={seed} k={k} peak {label}"
+                );
+            });
+        }
+    }
+    // the adversarial graph (k = 3: hub roots square the level size
+    // past that)
+    let g = gen::two_hub(256);
+    let table = MotifTable::new(3);
+    let esu_cfg =
+        MinerConfig::single_thread(OptFlags::hi().with_extcore(false)).with_steal(false);
+    let (want, _) = count_motifs(&g, 3, &esu_cfg, &NoHooks, &table);
+    for_matrix(|cfg, label| {
+        assert_eq!(
+            bfs_count_motifs(&g, 3, cfg, &table).unwrap().counts,
+            want,
+            "two_hub {label}"
+        );
+    });
+}
+
+#[test]
+fn fsm_core_matches_oracle_across_grid_and_matrix() {
+    let _guard = serial();
+    // support × max-edges grid, three seeds, core vs oracle
+    for seed in [7u64, 29, 83] {
+        let g = gen::erdos_renyi(55, 0.12, seed, &[1, 2, 3]);
+        for sigma in [0u64, 1, 3] {
+            for max_edges in [2usize, 3] {
+                let oracle_cfg = MinerConfig::custom(2, 1, OptFlags::hi().with_extcore(false));
+                let want = fsm_fingerprint(&g, max_edges, sigma, &oracle_cfg);
+                let got = fsm_fingerprint(
+                    &g,
+                    max_edges,
+                    sigma,
+                    &MinerConfig::custom(2, 1, OptFlags::hi()),
+                );
+                assert_eq!(got, want, "seed={seed} sigma={sigma} max_edges={max_edges}");
+            }
+        }
+    }
+    // thread/steal/shard matrix on one ER grid point plus the labeled
+    // adversarial graph (max_edges = 2 keeps the 8-config sweep cheap;
+    // σ = 0 keeps the hub bins alive — module docs)
+    let g = gen::erdos_renyi(55, 0.12, 7, &[1, 2, 3]);
+    let hub = labeled_clone(&gen::two_hub(64), &[1, 2, 3]);
+    let base = MinerConfig::single_thread(OptFlags::hi().with_extcore(false)).with_steal(false);
+    let want_g = fsm_fingerprint(&g, 3, 1, &base);
+    let want_hub = fsm_fingerprint(&hub, 2, 0, &base);
+    assert!(!want_g.is_empty() && !want_hub.is_empty(), "degenerate FSM inputs");
+    for_matrix(|cfg, label| {
+        assert_eq!(fsm_fingerprint(&g, 3, 1, cfg), want_g, "er {label}");
+        assert_eq!(fsm_fingerprint(&hub, 2, 0, cfg), want_hub, "two_hub {label}");
+        let mut oracle = *cfg;
+        oracle.opts.extcore = false;
+        assert_eq!(fsm_fingerprint(&g, 3, 1, &oracle), want_g, "er oracle {label}");
+        assert_eq!(fsm_fingerprint(&hub, 2, 0, &oracle), want_hub, "two_hub oracle {label}");
+    });
+    // one deep (max_edges = 3) pass over the adversarial graph,
+    // core vs oracle
+    let deep_core = fsm_fingerprint(&hub, 3, 0, &MinerConfig::custom(8, 1, OptFlags::hi()));
+    let deep_oracle = fsm_fingerprint(
+        &hub,
+        3,
+        0,
+        &MinerConfig::custom(8, 1, OptFlags::hi().with_extcore(false)),
+    );
+    assert_eq!(deep_core, deep_oracle, "two_hub max_edges=3");
+}
+
+#[test]
+fn two_hub_migration_is_real_on_kernel_and_scheduler_axes() {
+    let _guard = serial();
+    if !extend::extcore_enabled_default() {
+        eprintln!("skipping extcore counter assertions (SANDSLASH_NO_EXTCORE pins the oracles)");
+        return;
+    }
+
+    // ---- kernel axis: the adaptive/bitset families fire inside the
+    // tagged ESU and FSM lanes (any thread count — selection is
+    // workload-driven, not timing-driven) ----
+    dispatch::set_enabled(true);
+
+    let esu_graph = gen::two_hub(1 << 9);
+    let esu_table = MotifTable::new(3);
+    let esu_cfg = MinerConfig::custom(2, 1, OptFlags::hi());
+    let before = dispatch::snapshot_for(tag::Engine::Esu);
+    let (esu_counts, _) = count_motifs(&esu_graph, 3, &esu_cfg, &NoHooks, &esu_table);
+    let after = dispatch::snapshot_for(tag::Engine::Esu);
+    assert!(
+        after.word_parallel > before.word_parallel,
+        "ESU's dense anti-intersection (word-parallel AND-NOT) never fired on two_hub"
+    );
+
+    // hub degree 139 ≥ 32× the sorted-embedding length, so the member
+    // intersections inside FSM extension take the gallop family
+    let fsm_graph = labeled_clone(&gen::two_hub(140), &[1, 2, 3]);
+    let fsm_cfg = MinerConfig::custom(2, 1, OptFlags::hi());
+    let f_before = dispatch::snapshot_for(tag::Engine::Fsm);
+    let fsm_result = mine_fsm(&fsm_graph, 2, 0, &fsm_cfg);
+    let f_after = dispatch::snapshot_for(tag::Engine::Fsm);
+    assert!(!fsm_result.frequent.is_empty());
+    assert!(
+        f_after.beyond_scalar() > f_before.beyond_scalar(),
+        "no adaptive kernel family (gallop/SIMD/bitset) fired inside FSM extension on two_hub"
+    );
+
+    // ---- scheduler axis: a non-DFS engine publishes at least one
+    // split on the skewed input (needs real parallelism) ----
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    if cores < 2 || !sched::steal_enabled_default() {
+        eprintln!("skipping split assertions (cores={cores}, steal off)");
+        return;
+    }
+
+    // ESU: the two hub roots carry ~all the k=3 work; with grain 1 and
+    // 8 workers the cheap roots drain fast, workers starve, and the
+    // hub's level-1 extension suffix must be published. Bounded retry
+    // absorbs pathological OS scheduling (sched_invariance.rs pattern).
+    let steal_cfg = MinerConfig::custom(8, 1, OptFlags::hi()).with_shards(1);
+    let mut esu_split = false;
+    for _attempt in 0..5 {
+        let splits_before = sched_counters::splits_for(tag::Engine::Esu);
+        let (got, _) = count_motifs(&esu_graph, 3, &steal_cfg, &NoHooks, &esu_table);
+        assert_eq!(got, esu_counts, "ESU stealing run changed the counts");
+        if sched_counters::splits_for(tag::Engine::Esu) > splits_before {
+            esu_split = true;
+            break;
+        }
+    }
+    assert!(esu_split, "no ESU level-1 split fired on two_hub — hub roots ran sequentially");
+
+    // FSM: few root-pattern bins, heavy child subtrees (3-edge
+    // expansions over the hub wedge bins; σ = 0 keeps them alive) —
+    // starving workers must receive published child-suffix windows.
+    let fsm_hub = labeled_clone(&gen::two_hub(48), &[1, 2, 3]);
+    let fsm_steal_cfg = MinerConfig::custom(8, 1, OptFlags::hi()).with_shards(1);
+    let want = fsm_fingerprint(&fsm_hub, 3, 0, &MinerConfig::single_thread(OptFlags::hi()));
+    let mut fsm_split = false;
+    for _attempt in 0..5 {
+        let splits_before = sched_counters::splits_for(tag::Engine::Fsm);
+        let got = fsm_fingerprint(&fsm_hub, 3, 0, &fsm_steal_cfg);
+        assert_eq!(got, want, "FSM stealing run changed the result");
+        if sched_counters::splits_for(tag::Engine::Fsm) > splits_before {
+            fsm_split = true;
+            break;
+        }
+    }
+    assert!(fsm_split, "no FSM root-bin split fired on two_hub — fat bins ran sequentially");
+}

@@ -109,8 +109,8 @@ fn prop_fsm_antimonotone_and_label_permutation() {
             &[1, 2, 3],
         );
         // anti-monotonicity of result sets in sigma
-        let r1 = fsm::mine_fsm(&g, 3, 1, 2);
-        let r2 = fsm::mine_fsm(&g, 3, 3, 2);
+        let r1 = fsm::mine_fsm(&g, 3, 1, &cfg());
+        let r2 = fsm::mine_fsm(&g, 3, 3, &cfg());
         let codes1: Vec<_> = r1.frequent.iter().map(|f| f.code.clone()).collect();
         for f in &r2.frequent {
             assert!(codes1.contains(&f.code), "round {round}: sigma-up grew the set");
