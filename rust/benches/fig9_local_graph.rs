@@ -38,11 +38,11 @@ fn main() {
             pname,
             1,
             || {
-                let (count, _) = dfs::count(&g, &pl, &cfg, &NoHooks);
-                let r = bench.run("lg-kernels", || dfs::count(&g, &pl, &cfg, &NoHooks).0);
+                let (count, _) = dfs::count(&g, &pl, &cfg, &NoHooks).unwrap().into_parts();
+                let r = bench.run("lg-kernels", || dfs::count(&g, &pl, &cfg, &NoHooks).unwrap().value);
                 (count, r.min())
             },
-            || dfs::count(&g, &pl, &cfg, &NoHooks).0,
+            || dfs::count(&g, &pl, &cfg, &NoHooks).unwrap().value,
         );
         table.push((
             format!("{pname} scalar kernels"),

@@ -25,13 +25,13 @@ fn main() {
     let set_cfg = MinerConfig::new(OptFlags::hi());
     let mut scalar_cfg = set_cfg;
     scalar_cfg.opts.sets = false;
-    let (set_count, _) = dfs::count(&g, &pl, &set_cfg, &NoHooks);
-    let (scalar_count, _) = dfs::count(&g, &pl, &scalar_cfg, &NoHooks);
+    let (set_count, _) = dfs::count(&g, &pl, &set_cfg, &NoHooks).unwrap().into_parts();
+    let (scalar_count, _) = dfs::count(&g, &pl, &scalar_cfg, &NoHooks).unwrap().into_parts();
     assert_eq!(set_count, scalar_count, "scalar/set-centric differential failed");
 
     let bench = Bench::quick();
-    let r_scalar = bench.run("tc-scalar", || dfs::count(&g, &pl, &scalar_cfg, &NoHooks).0);
-    let r_set = bench.run("tc-set", || dfs::count(&g, &pl, &set_cfg, &NoHooks).0);
+    let r_scalar = bench.run("tc-scalar", || dfs::count(&g, &pl, &scalar_cfg, &NoHooks).unwrap().value);
+    let r_set = bench.run("tc-set", || dfs::count(&g, &pl, &set_cfg, &NoHooks).unwrap().value);
     let r_dag = bench.run("tc-dag", || sandslash::apps::tc::tc_hi(&g, &set_cfg));
     let fmt = |r: &sandslash::util::bench::BenchResult| {
         vec![
@@ -77,12 +77,12 @@ fn main() {
         "triangle",
         1,
         || {
-            let (count, _) = dfs::count(&g, &pl, &set_cfg, &NoHooks);
-            let r = bench.run("tc-set-kernels", || dfs::count(&g, &pl, &set_cfg, &NoHooks).0);
+            let (count, _) = dfs::count(&g, &pl, &set_cfg, &NoHooks).unwrap().into_parts();
+            let r = bench.run("tc-set-kernels", || dfs::count(&g, &pl, &set_cfg, &NoHooks).unwrap().value);
             nsamples = r.samples.len();
             (count, r.min())
         },
-        || dfs::count(&g, &pl, &set_cfg, &NoHooks).0,
+        || dfs::count(&g, &pl, &set_cfg, &NoHooks).unwrap().value,
     );
     pr3.samples = nsamples;
     print_table(
@@ -117,12 +117,12 @@ fn main() {
         set_cfg.threads,
         skew_cfg.threads,
         || {
-            let (count, _) = dfs::count(&g, &pl, &set_cfg, &NoHooks);
-            let r = bench.run("tc-sched", || dfs::count(&g, &pl, &set_cfg, &NoHooks).0);
+            let (count, _) = dfs::count(&g, &pl, &set_cfg, &NoHooks).unwrap().into_parts();
+            let r = bench.run("tc-sched", || dfs::count(&g, &pl, &set_cfg, &NoHooks).unwrap().value);
             nsamples4 = r.samples.len();
             (count, r.min())
         },
-        || dfs::count(&skew, &pl, &skew_cfg, &NoHooks).0,
+        || dfs::count(&skew, &pl, &skew_cfg, &NoHooks).unwrap().value,
     );
     pr4.samples = nsamples4;
     print_table(

@@ -5,6 +5,7 @@
 //! system.
 
 use crate::engine::bfs::bfs_count_motifs;
+use crate::engine::budget::{MineError, Outcome};
 use crate::engine::dfs;
 use crate::engine::esu::MotifTable;
 use crate::engine::hooks::NoHooks;
@@ -14,6 +15,7 @@ use crate::graph::orientation::{orient, OrientScheme};
 use crate::graph::CsrGraph;
 use crate::pattern::symmetry::automorphism_count;
 use crate::pattern::{library, plan, Pattern};
+use crate::util::metrics::SearchStats;
 use crate::util::pool::parallel_reduce;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -57,12 +59,16 @@ impl System {
     }
 }
 
-/// TC under each system model.
-pub fn tc(g: &CsrGraph, sys: System, cfg: &MinerConfig) -> u64 {
+/// TC under each system model. Governed (PR 6): engine-backed systems
+/// forward the [`Outcome`]/[`MineError`] contract; hand-tuned paths
+/// report a complete outcome.
+pub fn tc(g: &CsrGraph, sys: System, cfg: &MinerConfig) -> Result<Outcome<u64>, MineError> {
     let cfg = MinerConfig { opts: sys.flags(), ..*cfg };
     match sys {
         // Hi/Lo and Pangolin use DAG + intersections (Table 3)
-        System::SandslashHi | System::SandslashLo => crate::apps::tc::tc_hi(g, &cfg),
+        System::SandslashHi | System::SandslashLo => {
+            Ok(Outcome::complete(crate::apps::tc::tc_hi(g, &cfg), SearchStats::default()))
+        }
         System::PangolinLike => {
             // BFS: materialize the level-1 frontier (all DAG edges), then
             // a level-2 sweep — same arithmetic, BFS storage behaviour.
@@ -70,7 +76,7 @@ pub fn tc(g: &CsrGraph, sys: System, cfg: &MinerConfig) -> u64 {
             let frontier: Vec<(u32, u32)> = (0..dag.num_vertices() as u32)
                 .flat_map(|v| dag.out_neighbors(v).iter().map(move |&u| (v, u)))
                 .collect();
-            parallel_reduce(
+            let c = parallel_reduce(
                 frontier.len(),
                 cfg.threads,
                 cfg.chunk,
@@ -80,30 +86,43 @@ pub fn tc(g: &CsrGraph, sys: System, cfg: &MinerConfig) -> u64 {
                     *acc += intersect_count(dag.out_neighbors(v), dag.out_neighbors(u)) as u64;
                 },
                 |a, b| a + b,
-            )
+            );
+            Ok(Outcome::complete(c, SearchStats::default()))
         }
         // Peregrine: on-the-fly SB, no DAG; AutoMine: no SB, divide
-        System::AutomineLike | System::PeregrineLike => {
-            crate::apps::tc::tc_generic(g, &cfg).0
-        }
+        System::AutomineLike | System::PeregrineLike => crate::apps::tc::tc_generic(g, &cfg),
     }
 }
 
-/// k-CL under each system model.
-pub fn clique(g: &CsrGraph, k: usize, sys: System, cfg: &MinerConfig) -> u64 {
+/// k-CL under each system model. Governed (PR 6) like [`tc`].
+pub fn clique(
+    g: &CsrGraph,
+    k: usize,
+    sys: System,
+    cfg: &MinerConfig,
+) -> Result<Outcome<u64>, MineError> {
     let cfg = MinerConfig { opts: sys.flags(), ..*cfg };
     match sys {
-        System::SandslashHi => crate::apps::clique::clique_hi(g, k, &cfg).0,
-        System::SandslashLo => crate::apps::clique::clique_lo(g, k, &cfg).0,
-        System::PangolinLike => bfs_cliques(g, k, &cfg),
+        System::SandslashHi => {
+            let (c, stats) = crate::apps::clique::clique_hi(g, k, &cfg);
+            Ok(Outcome::complete(c, stats))
+        }
+        System::SandslashLo => {
+            let (c, stats) = crate::apps::clique::clique_lo(g, k, &cfg);
+            Ok(Outcome::complete(c, stats))
+        }
+        System::PangolinLike => {
+            Ok(Outcome::complete(bfs_cliques(g, k, &cfg), SearchStats::default()))
+        }
         System::AutomineLike => {
             let pl = plan(&library::clique(k), true, false);
-            let (c, _) = dfs::count(g, &pl, &cfg, &NoHooks);
-            c / automorphism_count(&library::clique(k))
+            let mut out = dfs::count(g, &pl, &cfg, &NoHooks)?;
+            out.value /= automorphism_count(&library::clique(k));
+            Ok(out)
         }
         System::PeregrineLike => {
             let pl = plan(&library::clique(k), true, true);
-            dfs::count(g, &pl, &cfg, &NoHooks).0
+            dfs::count(g, &pl, &cfg, &NoHooks)
         }
     }
 }
@@ -150,61 +169,70 @@ pub fn bfs_cliques(g: &CsrGraph, k: usize, cfg: &MinerConfig) -> u64 {
 }
 
 /// k-MC under each system model; returns counts in all_motifs(k) order.
-pub fn motifs(g: &CsrGraph, k: usize, sys: System, cfg: &MinerConfig) -> Vec<u64> {
+/// Governed (PR 6) like [`tc`].
+pub fn motifs(
+    g: &CsrGraph,
+    k: usize,
+    sys: System,
+    cfg: &MinerConfig,
+) -> Result<Outcome<Vec<u64>>, MineError> {
     let cfg = MinerConfig { opts: sys.flags(), ..*cfg };
     match sys {
         System::SandslashHi => match k {
-            3 => crate::apps::motif::motif3_hi(g, &cfg).0,
-            4 => crate::apps::motif::motif4_hi(g, &cfg).0,
+            3 => crate::apps::motif::motif3_hi(g, &cfg),
+            4 => crate::apps::motif::motif4_hi(g, &cfg),
             _ => panic!("k-MC supports k in 3..=4"),
         },
         System::SandslashLo => match k {
-            3 => crate::apps::motif::motif3_lo(g, &cfg),
-            4 => crate::apps::motif::motif4_lo(g, &cfg),
+            3 => Ok(Outcome::complete(crate::apps::motif::motif3_lo(g, &cfg), SearchStats::default())),
+            4 => Ok(Outcome::complete(crate::apps::motif::motif4_lo(g, &cfg)?, SearchStats::default())),
             _ => panic!("k-MC supports k in 3..=4"),
         },
         System::PangolinLike => {
             let table = MotifTable::new(k);
-            bfs_count_motifs(g, k, &cfg, &table)
-                .unwrap_or_else(|e| panic!("pangolin-like BFS emulation aborted: {e}"))
-                .counts
+            Ok(bfs_count_motifs(g, k, &cfg, &table)?.map(|o| o.counts))
         }
         // pattern-at-a-time: match each motif separately through the
         // pattern-guided engine (vertex-induced plans)
         System::AutomineLike | System::PeregrineLike => {
             let sb = sys == System::PeregrineLike;
-            library::all_motifs(k)
-                .iter()
-                .map(|p| {
-                    let pl = plan(p, true, sb);
-                    let (c, _) = dfs::count(g, &pl, &cfg, &NoHooks);
-                    if sb {
-                        c
-                    } else {
-                        c / automorphism_count(p)
-                    }
-                })
-                .collect()
+            let mut counts = Vec::new();
+            let mut stats = SearchStats::default();
+            let mut tripped = None;
+            for p in library::all_motifs(k).iter() {
+                let pl = plan(p, true, sb);
+                let out = dfs::count(g, &pl, &cfg, &NoHooks)?;
+                stats.merge(&out.stats);
+                if tripped.is_none() {
+                    tripped = out.tripped;
+                }
+                counts.push(if sb { out.value } else { out.value / automorphism_count(p) });
+            }
+            Ok(match tripped {
+                Some(reason) => Outcome::partial(counts, stats, reason),
+                None => Outcome::complete(counts, stats),
+            })
         }
     }
 }
 
-/// SL under each system model.
-pub fn sl(g: &CsrGraph, p: &Pattern, sys: System, cfg: &MinerConfig) -> u64 {
+/// SL under each system model. Governed (PR 6) like [`tc`].
+pub fn sl(
+    g: &CsrGraph,
+    p: &Pattern,
+    sys: System,
+    cfg: &MinerConfig,
+) -> Result<Outcome<u64>, MineError> {
     let mut cfg = MinerConfig { opts: sys.flags(), ..*cfg };
     match sys {
-        System::PangolinLike => {
-            // Pangolin lacks MNC (Table 3b) — pay per-candidate has_edge
+        // Pangolin lacks MNC (Table 3b) — pay per-candidate has_edge;
+        // Peregrine uses VSB instead of MNC: emulate as MNC off
+        // (per-level recomputation of vertex sets).
+        System::PangolinLike | System::PeregrineLike => {
             cfg.opts.mnc = false;
-            crate::apps::sl::sl_count(g, p, &cfg).0
+            crate::apps::sl::sl_count(g, p, &cfg)
         }
-        System::PeregrineLike => {
-            // VSB instead of MNC: emulate as MNC off (per-level
-            // recomputation of vertex sets)
-            cfg.opts.mnc = false;
-            crate::apps::sl::sl_count(g, p, &cfg).0
-        }
-        _ => crate::apps::sl::sl_count(g, p, &cfg).0,
+        _ => crate::apps::sl::sl_count(g, p, &cfg),
     }
 }
 
@@ -230,7 +258,7 @@ mod tests {
         let g = gen::rmat(8, 6, 4, &[]);
         let want = crate::apps::tc::tc_hi(&g, &cfg());
         for s in ALL {
-            assert_eq!(tc(&g, s, &cfg()), want, "{}", s.name());
+            assert_eq!(tc(&g, s, &cfg()).unwrap().value, want, "{}", s.name());
         }
     }
 
@@ -240,7 +268,7 @@ mod tests {
         for k in [3, 4] {
             let want = crate::apps::clique::clique_brute(&g, k);
             for s in ALL {
-                assert_eq!(clique(&g, k, s, &cfg()), want, "{} k={k}", s.name());
+                assert_eq!(clique(&g, k, s, &cfg()).unwrap().value, want, "{} k={k}", s.name());
             }
         }
     }
@@ -248,9 +276,9 @@ mod tests {
     #[test]
     fn all_systems_agree_on_motifs() {
         let g = gen::erdos_renyi(35, 0.2, 8, &[]);
-        let want = motifs(&g, 4, System::SandslashHi, &cfg());
+        let want = motifs(&g, 4, System::SandslashHi, &cfg()).unwrap().value;
         for s in ALL {
-            assert_eq!(motifs(&g, 4, s, &cfg()), want, "{}", s.name());
+            assert_eq!(motifs(&g, 4, s, &cfg()).unwrap().value, want, "{}", s.name());
         }
     }
 
@@ -258,9 +286,9 @@ mod tests {
     fn all_systems_agree_on_sl() {
         let g = gen::erdos_renyi(35, 0.2, 10, &[]);
         let p = crate::pattern::library::diamond();
-        let want = sl(&g, &p, System::SandslashHi, &cfg());
+        let want = sl(&g, &p, System::SandslashHi, &cfg()).unwrap().value;
         for s in [System::SandslashHi, System::PangolinLike, System::PeregrineLike] {
-            assert_eq!(sl(&g, &p, s, &cfg()), want, "{}", s.name());
+            assert_eq!(sl(&g, &p, s, &cfg()).unwrap().value, want, "{}", s.name());
         }
     }
 }

@@ -12,6 +12,7 @@
 
 use std::collections::HashSet;
 
+use crate::engine::budget::MineError;
 use crate::engine::dfs;
 use crate::engine::hooks::NoHooks;
 use crate::engine::fsm::{canonical_parent_code, FrequentPattern, FsmResult};
@@ -20,13 +21,16 @@ use crate::engine::MinerConfig;
 use crate::graph::CsrGraph;
 use crate::pattern::{canonical_code, plan, CanonCode, Pattern};
 
-/// Mine frequent patterns pattern-at-a-time.
+/// Mine frequent patterns pattern-at-a-time. Governed (PR 6): every
+/// candidate match runs through the governed DFS engine, so deadline or
+/// budget trips surface as fewer embeddings folded into the MNI domains
+/// (a support lower bound) and worker panics as [`MineError`].
 pub fn peregrine_fsm(
     g: &CsrGraph,
     max_edges: usize,
     min_support: u64,
     cfg: &MinerConfig,
-) -> FsmResult {
+) -> Result<FsmResult, MineError> {
     let labels: Vec<u32> = {
         let mut l: Vec<u32> = g.labels.iter().copied().collect();
         l.sort_unstable();
@@ -48,7 +52,7 @@ pub fn peregrine_fsm(
             p.set_label(0, la);
             p.set_label(1, lb);
             if seen.insert(canonical_code(&p)) {
-                if let Some(support) = match_support(g, &p, min_support, cfg) {
+                if let Some(support) = match_support(g, &p, min_support, cfg)? {
                     result.frequent.push(FrequentPattern {
                         code: canonical_code(&p),
                         pattern: p.clone(),
@@ -77,7 +81,7 @@ pub fn peregrine_fsm(
                     continue;
                 }
                 result.stats.enumerated += 1;
-                if let Some(support) = match_support(g, &child, min_support, cfg) {
+                if let Some(support) = match_support(g, &child, min_support, cfg)? {
                     result.frequent.push(FrequentPattern {
                         code,
                         pattern: child.clone(),
@@ -96,7 +100,7 @@ pub fn peregrine_fsm(
         level = next;
     }
     result.frequent.sort_by(|a, b| a.code.cmp(&b.code));
-    result
+    Ok(result)
 }
 
 /// All one-edge syntactic extensions of `p`: forward edges with every
@@ -136,7 +140,7 @@ fn match_support(
     p: &Pattern,
     min_support: u64,
     cfg: &MinerConfig,
-) -> Option<u64> {
+) -> Result<Option<u64>, MineError> {
     let pl = plan(p, false, false);
     let order: Vec<usize> = pl.levels.iter().map(|l| l.pattern_vertex).collect();
     let k = p.num_vertices();
@@ -158,9 +162,10 @@ fn match_support(
             a.merge(&b);
             a
         },
-    );
+    )?
+    .into_parts();
     let s = domains.support();
-    (s > min_support).then_some(s)
+    Ok((s > min_support).then_some(s))
 }
 
 #[cfg(test)]
@@ -174,9 +179,9 @@ mod tests {
     fn agrees_with_dfs_fsm_on_patterns_and_support() {
         let g = gen::erdos_renyi(40, 0.12, 3, &[1, 2]);
         let cfg = MinerConfig::custom(2, 8, OptFlags::hi());
-        let a = mine_fsm(&g, 3, 1, &cfg);
-        let b = peregrine_fsm(&g, 3, 1, &cfg);
-        let sa: Vec<_> = a.frequent.iter().map(|f| (f.code.clone(), f.support)).collect();
+        let a = mine_fsm(&g, 3, 1, &cfg).unwrap().value;
+        let b = peregrine_fsm(&g, 3, 1, &cfg).unwrap();
+        let sa: Vec<_> = a.iter().map(|f| (f.code.clone(), f.support)).collect();
         let sb: Vec<_> = b.frequent.iter().map(|f| (f.code.clone(), f.support)).collect();
         assert_eq!(sa, sb);
     }

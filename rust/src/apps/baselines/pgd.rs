@@ -5,6 +5,7 @@
 //! anchor patterns (4-cliques, 4-cycles) *without* symmetry breaking,
 //! dividing by the automorphism count afterwards.
 
+use crate::engine::budget::MineError;
 use crate::engine::dfs;
 use crate::engine::hooks::NoHooks;
 use crate::engine::MinerConfig;
@@ -14,11 +15,12 @@ use crate::pattern::{library, plan};
 use crate::apps::motif::edge_raw_counts;
 use crate::util::pool::parallel_reduce;
 
-/// PGD-style 3-motif counts: [wedge, triangle].
-pub fn pgd_motif3(g: &CsrGraph, cfg: &MinerConfig) -> Vec<u64> {
+/// PGD-style 3-motif counts: [wedge, triangle]. Governed (PR 6): the
+/// anchor enumeration runs through the governed DFS engine.
+pub fn pgd_motif3(g: &CsrGraph, cfg: &MinerConfig) -> Result<Vec<u64>, MineError> {
     // triangles enumerated without SB (6 automorphic copies each)
     let tri_plan = plan(&library::triangle(), true, false);
-    let (t6, _) = dfs::count(g, &tri_plan, cfg, &NoHooks);
+    let (t6, _) = dfs::count(g, &tri_plan, cfg, &NoHooks)?.into_parts();
     let t = t6 / 6;
     let paths2: u64 = parallel_reduce(
         g.num_vertices(),
@@ -31,17 +33,18 @@ pub fn pgd_motif3(g: &CsrGraph, cfg: &MinerConfig) -> Vec<u64> {
         },
         |a, b| a + b,
     );
-    vec![paths2 - 3 * t, t]
+    Ok(vec![paths2 - 3 * t, t])
 }
 
-/// PGD-style 4-motif counts (all_motifs(4) order).
-pub fn pgd_motif4(g: &CsrGraph, cfg: &MinerConfig) -> Vec<u64> {
+/// PGD-style 4-motif counts (all_motifs(4) order). Governed (PR 6) like
+/// [`pgd_motif3`].
+pub fn pgd_motif4(g: &CsrGraph, cfg: &MinerConfig) -> Result<Vec<u64>, MineError> {
     // anchors enumerated without symmetry breaking
     let k4_plan = plan(&library::clique(4), true, false);
-    let (c4_raw, _) = dfs::count(g, &k4_plan, cfg, &NoHooks);
+    let (c4_raw, _) = dfs::count(g, &k4_plan, cfg, &NoHooks)?.into_parts();
     let c4 = c4_raw / 24;
     let cyc_plan = plan(&library::cycle(4), true, false);
-    let (cy_raw, _) = dfs::count(g, &cyc_plan, cfg, &NoHooks);
+    let (cy_raw, _) = dfs::count(g, &cyc_plan, cfg, &NoHooks)?.into_parts();
     let cy = cy_raw / 8;
     let (raw_d, raw_tt, raw_p4) = edge_raw_counts(g, cfg);
     let raw_s3: u64 = parallel_reduce(
@@ -61,7 +64,7 @@ pub fn pgd_motif4(g: &CsrGraph, cfg: &MinerConfig) -> Vec<u64> {
     let tt = (raw_tt - 4 * d) / 2;
     let p4 = raw_p4 - 4 * cy;
     let s3 = raw_s3 - tt - 2 * d - 4 * c4;
-    vec![s3, p4, tt, cy, d, c4]
+    Ok(vec![s3, p4, tt, cy, d, c4])
 }
 
 #[cfg(test)]
@@ -78,7 +81,7 @@ mod tests {
     #[test]
     fn pgd_matches_sandslash_lo() {
         let g = gen::erdos_renyi(50, 0.15, 7, &[]);
-        assert_eq!(pgd_motif3(&g, &cfg()), motif3_lo(&g, &cfg()));
-        assert_eq!(pgd_motif4(&g, &cfg()), motif4_lo(&g, &cfg()));
+        assert_eq!(pgd_motif3(&g, &cfg()).unwrap(), motif3_lo(&g, &cfg()));
+        assert_eq!(pgd_motif4(&g, &cfg()).unwrap(), motif4_lo(&g, &cfg()).unwrap());
     }
 }

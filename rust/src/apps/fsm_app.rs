@@ -2,32 +2,46 @@
 //! realized — edge-induced, implicit patterns, MNI domain support with
 //! anti-monotone filtering on the sub-pattern tree.
 
-use crate::engine::fsm::{mine_fsm, mine_fsm_bfs, FsmResult};
+use crate::engine::budget::{MineError, Outcome};
+use crate::engine::fsm::{mine_fsm, mine_fsm_bfs, FrequentPattern};
 use crate::engine::MinerConfig;
 use crate::graph::CsrGraph;
 
 /// Sandslash k-FSM (DFS on the sub-pattern tree). The full `cfg` is
 /// forwarded (PR 5): thread count, scheduler knobs (fat root-pattern
 /// bins publish split tasks under starvation), and the extension-core
-/// toggle.
-pub fn fsm(g: &CsrGraph, max_edges: usize, min_support: u64, cfg: &MinerConfig) -> FsmResult {
+/// toggle. Governed (PR 6): forwards the engine's
+/// [`Outcome`]/[`MineError`] contract.
+pub fn fsm(
+    g: &CsrGraph,
+    max_edges: usize,
+    min_support: u64,
+    cfg: &MinerConfig,
+) -> Result<Outcome<Vec<FrequentPattern>>, MineError> {
     mine_fsm(g, max_edges, min_support, cfg)
 }
 
 /// BFS variant (Pangolin-like / Peregrine-FSM-like level sync).
-pub fn fsm_bfs(g: &CsrGraph, max_edges: usize, min_support: u64, cfg: &MinerConfig) -> FsmResult {
+/// Governed (PR 6) like [`fsm`].
+pub fn fsm_bfs(
+    g: &CsrGraph,
+    max_edges: usize,
+    min_support: u64,
+    cfg: &MinerConfig,
+) -> Result<Outcome<Vec<FrequentPattern>>, MineError> {
     mine_fsm_bfs(g, max_edges, min_support, cfg)
 }
 
 /// DistGraph-like: the same gSpan-style DFS with a single work queue
 /// (coarse tasks — DistGraph's dynamic splitting is approximated by our
 /// root-level task pool at chunk 1, pinned to one worker).
+/// Governed (PR 6) like [`fsm`].
 pub fn fsm_distgraph_like(
     g: &CsrGraph,
     max_edges: usize,
     min_support: u64,
     cfg: &MinerConfig,
-) -> FsmResult {
+) -> Result<Outcome<Vec<FrequentPattern>>, MineError> {
     mine_fsm(g, max_edges, min_support, &cfg.with_threads(1))
 }
 
@@ -41,10 +55,10 @@ mod tests {
     fn dfs_and_bfs_find_same_frequent_patterns() {
         let g = gen::erdos_renyi(50, 0.1, 13, &[1, 2, 3]);
         let cfg = MinerConfig::custom(2, 8, OptFlags::hi());
-        let a = fsm(&g, 3, 1, &cfg);
-        let b = fsm_bfs(&g, 3, 1, &cfg);
-        let sa: Vec<_> = a.frequent.iter().map(|f| (f.code.clone(), f.support)).collect();
-        let sb: Vec<_> = b.frequent.iter().map(|f| (f.code.clone(), f.support)).collect();
+        let a = fsm(&g, 3, 1, &cfg).unwrap().value;
+        let b = fsm_bfs(&g, 3, 1, &cfg).unwrap().value;
+        let sa: Vec<_> = a.iter().map(|f| (f.code.clone(), f.support)).collect();
+        let sb: Vec<_> = b.iter().map(|f| (f.code.clone(), f.support)).collect();
         assert_eq!(sa, sb);
     }
 
@@ -52,8 +66,8 @@ mod tests {
     fn higher_support_means_fewer_patterns() {
         let g = gen::erdos_renyi(60, 0.1, 17, &[1, 2]);
         let cfg = MinerConfig::custom(2, 8, OptFlags::hi());
-        let lo = fsm(&g, 3, 1, &cfg).frequent.len();
-        let hi = fsm(&g, 3, 5, &cfg).frequent.len();
+        let lo = fsm(&g, 3, 1, &cfg).unwrap().value.len();
+        let hi = fsm(&g, 3, 5, &cfg).unwrap().value.len();
         assert!(hi <= lo);
     }
 }

@@ -9,9 +9,11 @@ pub mod motif;
 pub mod sl;
 pub mod tc;
 
+use crate::engine::budget::{MineError, Outcome};
 use crate::engine::{MinerConfig, ProblemSpec};
 use crate::graph::CsrGraph;
 use crate::pattern::library;
+use crate::util::metrics::SearchStats;
 
 /// What a solved GPM problem returns.
 #[derive(Debug)]
@@ -29,22 +31,29 @@ pub enum MiningOutput {
 /// High-level entry point: analyze the spec and run the right engine
 /// with the right optimizations (the automation the paper's high-level
 /// API promises).
-pub fn solve(g: &CsrGraph, spec: &ProblemSpec, cfg: &MinerConfig) -> MiningOutput {
+///
+/// Governed (PR 6): engine-backed paths forward the engines'
+/// [`Outcome`]/[`MineError`] contract; hand-tuned paths that never
+/// enter a governed engine (TC-Hi, k-CL) report a complete outcome.
+pub fn solve(
+    g: &CsrGraph,
+    spec: &ProblemSpec,
+    cfg: &MinerConfig,
+) -> Result<Outcome<MiningOutput>, MineError> {
     if let Some(sigma) = spec.min_support {
         // implicit-pattern, edge-induced, anti-monotonic support: FSM
-        let r = fsm_app::fsm(g, spec.k, sigma, cfg);
-        return MiningOutput::Frequent(
-            r.frequent
-                .into_iter()
-                .map(|f| (format!("{}", f.pattern), f.support))
-                .collect(),
-        );
+        let r = fsm_app::fsm(g, spec.k, sigma, cfg)?;
+        return Ok(r.map(|pats| {
+            MiningOutput::Frequent(
+                pats.into_iter().map(|f| (format!("{}", f.pattern), f.support)).collect(),
+            )
+        }));
     }
     if !spec.explicit {
         // implicit vertex-induced: motif counting
         let counts = match spec.k {
-            3 => motif::motif3_hi(g, cfg).0,
-            4 => motif::motif4_hi(g, cfg).0,
+            3 => motif::motif3_hi(g, cfg)?,
+            4 => motif::motif4_hi(g, cfg)?,
             k => {
                 let table = crate::engine::esu::MotifTable::new(k);
                 crate::engine::esu::count_motifs(
@@ -53,57 +62,61 @@ pub fn solve(g: &CsrGraph, spec: &ProblemSpec, cfg: &MinerConfig) -> MiningOutpu
                     cfg,
                     &crate::engine::hooks::NoHooks,
                     &table,
-                )
-                .0
+                )?
             }
         };
         let names: Vec<String> = match spec.k {
             3 => library::MOTIF3_NAMES.iter().map(|s| s.to_string()).collect(),
             4 => library::MOTIF4_NAMES.iter().map(|s| s.to_string()).collect(),
-            k => (0..counts.len()).map(|i| format!("motif{k}-{i}")).collect(),
+            k => (0..counts.value.len()).map(|i| format!("motif{k}-{i}")).collect(),
         };
-        return MiningOutput::PerPattern(names.into_iter().zip(counts).collect());
+        return Ok(counts.map(|c| MiningOutput::PerPattern(names.into_iter().zip(c).collect())));
     }
     // explicit pattern(s)
     if spec.patterns.len() == 1 {
         let p = &spec.patterns[0];
         if p.is_clique() && spec.vertex_induced {
             if p.num_vertices() == 3 {
-                return MiningOutput::Count(tc::tc_hi(g, cfg));
+                let c = tc::tc_hi(g, cfg);
+                return Ok(Outcome::complete(MiningOutput::Count(c), SearchStats::default()));
             }
             // DAG decision (§4.3): cliques get orientation; LG when Lo
-            let (c, _) = if cfg.opts.lg {
+            let (c, stats) = if cfg.opts.lg {
                 clique::clique_lo(g, p.num_vertices(), cfg)
             } else {
                 clique::clique_hi(g, p.num_vertices(), cfg)
             };
-            return MiningOutput::Count(c);
+            return Ok(Outcome::complete(MiningOutput::Count(c), stats));
         }
         if spec.listing && !spec.vertex_induced {
-            let (c, _) = sl::sl_count(g, p, cfg);
-            return MiningOutput::Count(c);
+            return Ok(sl::sl_count(g, p, cfg)?.map(MiningOutput::Count));
         }
         let pl = crate::pattern::plan(p, spec.vertex_induced, cfg.opts.sb);
-        let (c, _) = crate::engine::dfs::count(g, &pl, cfg, &crate::engine::hooks::NoHooks);
-        let c = if cfg.opts.sb {
-            c
-        } else {
-            c / crate::pattern::symmetry::automorphism_count(p)
-        };
-        return MiningOutput::Count(c);
+        let mut out = crate::engine::dfs::count(g, &pl, cfg, &crate::engine::hooks::NoHooks)?;
+        if !cfg.opts.sb {
+            out.value /= crate::pattern::symmetry::automorphism_count(p);
+        }
+        return Ok(out.map(MiningOutput::Count));
     }
-    // multiple explicit patterns: count each
-    MiningOutput::PerPattern(
-        spec.patterns
-            .iter()
-            .map(|p| {
-                let pl = crate::pattern::plan(p, spec.vertex_induced, true);
-                let (c, _) =
-                    crate::engine::dfs::count(g, &pl, cfg, &crate::engine::hooks::NoHooks);
-                (format!("{p}"), c)
-            })
-            .collect(),
-    )
+    // multiple explicit patterns: count each; the first trip carries
+    // through (later patterns still run to completion, so a partial
+    // outcome means "at least one row is a lower bound")
+    let mut rows = Vec::with_capacity(spec.patterns.len());
+    let mut stats = SearchStats::default();
+    let mut tripped = None;
+    for p in &spec.patterns {
+        let pl = crate::pattern::plan(p, spec.vertex_induced, true);
+        let out = crate::engine::dfs::count(g, &pl, cfg, &crate::engine::hooks::NoHooks)?;
+        stats.merge(&out.stats);
+        if tripped.is_none() {
+            tripped = out.tripped;
+        }
+        rows.push((format!("{p}"), out.value));
+    }
+    Ok(match tripped {
+        Some(reason) => Outcome::partial(MiningOutput::PerPattern(rows), stats, reason),
+        None => Outcome::complete(MiningOutput::PerPattern(rows), stats),
+    })
 }
 
 #[cfg(test)]
@@ -119,7 +132,7 @@ mod tests {
     #[test]
     fn solve_tc_spec() {
         let g = gen::complete(5);
-        match solve(&g, &ProblemSpec::tc(), &cfg()) {
+        match solve(&g, &ProblemSpec::tc(), &cfg()).unwrap().value {
             MiningOutput::Count(c) => assert_eq!(c, 10),
             other => panic!("unexpected output {other:?}"),
         }
@@ -131,7 +144,7 @@ mod tests {
         let want = clique::clique_brute(&g, 4);
         for opts in [OptFlags::hi(), OptFlags::lo()] {
             let c = MinerConfig { opts, ..cfg() };
-            match solve(&g, &ProblemSpec::clique_listing(4), &c) {
+            match solve(&g, &ProblemSpec::clique_listing(4), &c).unwrap().value {
                 MiningOutput::Count(got) => assert_eq!(got, want),
                 other => panic!("unexpected output {other:?}"),
             }
@@ -141,7 +154,7 @@ mod tests {
     #[test]
     fn solve_motif_spec() {
         let g = gen::ring(8);
-        match solve(&g, &ProblemSpec::motif_counting(3), &cfg()) {
+        match solve(&g, &ProblemSpec::motif_counting(3), &cfg()).unwrap().value {
             MiningOutput::PerPattern(rows) => {
                 assert_eq!(rows[0], ("wedge".to_string(), 8));
                 assert_eq!(rows[1], ("triangle".to_string(), 0));
@@ -154,7 +167,7 @@ mod tests {
     fn solve_sl_spec() {
         let g = gen::complete(4);
         let spec = ProblemSpec::subgraph_listing(crate::pattern::library::diamond());
-        match solve(&g, &spec, &cfg()) {
+        match solve(&g, &spec, &cfg()).unwrap().value {
             MiningOutput::Count(c) => assert_eq!(c, 6),
             other => panic!("unexpected output {other:?}"),
         }
@@ -163,7 +176,7 @@ mod tests {
     #[test]
     fn solve_fsm_spec() {
         let g = gen::erdos_renyi(40, 0.15, 21, &[1, 2]);
-        match solve(&g, &ProblemSpec::fsm(2, 2), &cfg()) {
+        match solve(&g, &ProblemSpec::fsm(2, 2), &cfg()).unwrap().value {
             MiningOutput::Frequent(rows) => {
                 assert!(!rows.is_empty());
                 assert!(rows.iter().all(|(_, s)| *s > 2));

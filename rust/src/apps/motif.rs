@@ -8,26 +8,28 @@
 //!   else from per-edge/per-vertex local counts, then convert raw counts
 //!   to induced counts with the standard correction identities.
 
+use crate::engine::budget::{MineError, Outcome};
 use crate::engine::esu::{count_motifs, MotifTable};
 use crate::engine::hooks::NoHooks;
 use crate::engine::MinerConfig;
 use crate::graph::CsrGraph;
 use crate::pattern::{library, plan};
-use crate::util::metrics::SearchStats;
 use crate::util::pool::parallel_reduce;
 
 use super::clique::clique_hi;
 use super::tc::tc_hi;
 
 /// 3-motif counts, Hi path: [wedge, triangle] (all_motifs(3) order).
-pub fn motif3_hi(g: &CsrGraph, cfg: &MinerConfig) -> (Vec<u64>, SearchStats) {
+/// Governed (PR 6): forwards the ESU engine's [`Outcome`] contract.
+pub fn motif3_hi(g: &CsrGraph, cfg: &MinerConfig) -> Result<Outcome<Vec<u64>>, MineError> {
     let table = MotifTable::new(3);
     count_motifs(g, 3, cfg, &NoHooks, &table)
 }
 
 /// 4-motif counts, Hi path (all_motifs(4) order:
 /// [3-star, 4-path, tailed-triangle, 4-cycle, diamond, 4-clique]).
-pub fn motif4_hi(g: &CsrGraph, cfg: &MinerConfig) -> (Vec<u64>, SearchStats) {
+/// Governed (PR 6): forwards the ESU engine's [`Outcome`] contract.
+pub fn motif4_hi(g: &CsrGraph, cfg: &MinerConfig) -> Result<Outcome<Vec<u64>>, MineError> {
     let table = MotifTable::new(4);
     count_motifs(g, 4, cfg, &NoHooks, &table)
 }
@@ -85,11 +87,15 @@ pub fn edge_raw_counts(g: &CsrGraph, cfg: &MinerConfig) -> (u64, u64, u64) {
 /// P4 = Σ_e s_u·s_v − 4·Cy
 /// S3 = Σ_v C(deg v,3) − TT − 2·D − 4·C4
 /// ```
-pub fn motif4_lo(g: &CsrGraph, cfg: &MinerConfig) -> Vec<u64> {
+///
+/// The 4-cycle anchor rides the governed DFS engine, so this returns
+/// its [`MineError`] on a worker panic (a budget trip would make the
+/// formulas unsound, hence the whole-result `Result`).
+pub fn motif4_lo(g: &CsrGraph, cfg: &MinerConfig) -> Result<Vec<u64>, MineError> {
     // anchors: the two enumerated patterns of Listing 3
     let (c4, _) = clique_hi(g, 4, cfg);
     let cyc_plan = plan(&library::cycle(4), true, true);
-    let (cy, _) = crate::engine::dfs::count(g, &cyc_plan, cfg, &NoHooks);
+    let (cy, _) = crate::engine::dfs::count(g, &cyc_plan, cfg, &NoHooks)?.into_parts();
     // local counts
     let (raw_d, raw_tt, raw_p4) = edge_raw_counts(g, cfg);
     let raw_s3: u64 = parallel_reduce(
@@ -110,7 +116,7 @@ pub fn motif4_lo(g: &CsrGraph, cfg: &MinerConfig) -> Vec<u64> {
     let tt = (raw_tt - 4 * d) / 2;
     let p4 = raw_p4 - 4 * cy;
     let s3 = raw_s3 - tt - 2 * d - 4 * c4;
-    vec![s3, p4, tt, cy, d, c4]
+    Ok(vec![s3, p4, tt, cy, d, c4])
 }
 
 #[cfg(test)]
@@ -127,7 +133,7 @@ mod tests {
     fn lo3_matches_hi3() {
         for seed in [1, 2] {
             let g = gen::erdos_renyi(80, 0.1, seed, &[]);
-            let (hi, _) = motif3_hi(&g, &cfg());
+            let (hi, _) = motif3_hi(&g, &cfg()).unwrap().into_parts();
             let lo = motif3_lo(&g, &cfg());
             assert_eq!(hi, lo, "seed {seed}");
         }
@@ -137,8 +143,8 @@ mod tests {
     fn lo4_matches_hi4_er() {
         for seed in [3, 4] {
             let g = gen::erdos_renyi(50, 0.15, seed, &[]);
-            let (hi, _) = motif4_hi(&g, &cfg());
-            let lo = motif4_lo(&g, &cfg());
+            let (hi, _) = motif4_hi(&g, &cfg()).unwrap().into_parts();
+            let lo = motif4_lo(&g, &cfg()).unwrap();
             assert_eq!(hi, lo, "seed {seed}");
         }
     }
@@ -146,8 +152,8 @@ mod tests {
     #[test]
     fn lo4_matches_hi4_rmat() {
         let g = gen::rmat(8, 5, 6, &[]);
-        let (hi, _) = motif4_hi(&g, &cfg());
-        let lo = motif4_lo(&g, &cfg());
+        let (hi, _) = motif4_hi(&g, &cfg()).unwrap().into_parts();
+        let lo = motif4_lo(&g, &cfg()).unwrap();
         assert_eq!(hi, lo);
     }
 
@@ -156,24 +162,24 @@ mod tests {
         // the 4-cycle anchor rides the generic engine: with the full Lo
         // preset it takes the local-graph stage and must not change
         let g = gen::rmat(8, 5, 9, &[]);
-        let (hi, _) = motif4_hi(&g, &cfg());
+        let (hi, _) = motif4_hi(&g, &cfg()).unwrap().into_parts();
         let mut c = cfg();
         c.opts = OptFlags::lo();
-        let lo = motif4_lo(&g, &c);
+        let lo = motif4_lo(&g, &c).unwrap();
         assert_eq!(hi, lo);
     }
 
     #[test]
     fn complete_graph_4motifs() {
         let g = gen::complete(6);
-        let lo = motif4_lo(&g, &cfg());
+        let lo = motif4_lo(&g, &cfg()).unwrap();
         assert_eq!(lo, vec![0, 0, 0, 0, 0, 15]);
     }
 
     #[test]
     fn ring_4motifs() {
         let g = gen::ring(12);
-        let lo = motif4_lo(&g, &cfg());
+        let lo = motif4_lo(&g, &cfg()).unwrap();
         // 12 paths, nothing else
         assert_eq!(lo, vec![0, 12, 0, 0, 0, 0]);
     }
@@ -181,7 +187,7 @@ mod tests {
     #[test]
     fn motif3_total_is_connected_triples() {
         let g = gen::erdos_renyi(40, 0.2, 8, &[]);
-        let (hi, _) = motif3_hi(&g, &cfg());
+        let (hi, _) = motif3_hi(&g, &cfg()).unwrap().into_parts();
         let lo = motif3_lo(&g, &cfg());
         assert_eq!(hi.iter().sum::<u64>(), lo.iter().sum::<u64>());
     }

@@ -11,29 +11,36 @@
 //! stage with no changes here because it rides the same plan
 //! interpreter.
 
+use crate::engine::budget::{MineError, Outcome};
 use crate::engine::dfs;
 use crate::engine::hooks::NoHooks;
 use crate::engine::MinerConfig;
 use crate::graph::{CsrGraph, VertexId};
 use crate::pattern::{plan, Pattern};
-use crate::util::metrics::SearchStats;
 
-/// Count edge-induced embeddings of `p`.
-pub fn sl_count(g: &CsrGraph, p: &Pattern, cfg: &MinerConfig) -> (u64, SearchStats) {
+/// Count edge-induced embeddings of `p`. Governed (PR 6): forwards the
+/// DFS engine's [`Outcome`]/[`MineError`] contract.
+pub fn sl_count(g: &CsrGraph, p: &Pattern, cfg: &MinerConfig) -> Result<Outcome<u64>, MineError> {
     let pl = plan(p, false, cfg.opts.sb);
-    let (c, stats) = dfs::count(g, &pl, cfg, &NoHooks);
-    if cfg.opts.sb {
-        (c, stats)
-    } else {
-        (c / crate::pattern::symmetry::automorphism_count(p), stats)
+    let mut out = dfs::count(g, &pl, cfg, &NoHooks)?;
+    if !cfg.opts.sb {
+        out.value /= crate::pattern::symmetry::automorphism_count(p);
     }
+    Ok(out)
 }
 
 /// List embeddings (materialized; for modest result sizes / the listing
-/// API demo). Each row is in matching-plan order.
-pub fn sl_list(g: &CsrGraph, p: &Pattern, cfg: &MinerConfig) -> Vec<Vec<VertexId>> {
+/// API demo). Each row is in matching-plan order. Governed (PR 6): a
+/// budget trip would silently truncate the listing, so only the full
+/// rows of a complete run are returned; partial runs surface through
+/// the [`Outcome`] the caller can inspect.
+pub fn sl_list(
+    g: &CsrGraph,
+    p: &Pattern,
+    cfg: &MinerConfig,
+) -> Result<Outcome<Vec<Vec<VertexId>>>, MineError> {
     let pl = plan(p, false, true);
-    let (rows, _) = dfs::mine(
+    dfs::mine(
         g,
         &pl,
         cfg,
@@ -44,8 +51,7 @@ pub fn sl_list(g: &CsrGraph, p: &Pattern, cfg: &MinerConfig) -> Vec<Vec<VertexId
             a.extend(b);
             a
         },
-    );
-    rows
+    )
 }
 
 /// Brute-force oracle: count edge-induced embeddings (vertex sets where
@@ -134,24 +140,24 @@ mod tests {
         // without K4s for exact match.
         let g = gen::erdos_renyi(25, 0.15, 42, &[]);
         if super::super::clique::clique_brute(&g, 4) == 0 {
-            let (c, _) = sl_count(&g, &library::diamond(), &cfg());
+            let (c, _) = sl_count(&g, &library::diamond(), &cfg()).unwrap().into_parts();
             assert_eq!(c, sl_brute(&g, &library::diamond()));
         }
     }
 
     #[test]
     fn cycle4_in_ring_and_k4() {
-        let (c, _) = sl_count(&gen::ring(4), &library::cycle(4), &cfg());
+        let (c, _) = sl_count(&gen::ring(4), &library::cycle(4), &cfg()).unwrap().into_parts();
         assert_eq!(c, 1);
         // K4 contains 3 distinct 4-cycles (pairs of perfect matchings)
-        let (k, _) = sl_count(&gen::complete(4), &library::cycle(4), &cfg());
+        let (k, _) = sl_count(&gen::complete(4), &library::cycle(4), &cfg()).unwrap().into_parts();
         assert_eq!(k, 3);
     }
 
     #[test]
     fn diamond_in_k4() {
         // K4 has 6 edge-induced diamonds (choose the missing edge)
-        let (c, _) = sl_count(&gen::complete(4), &library::diamond(), &cfg());
+        let (c, _) = sl_count(&gen::complete(4), &library::diamond(), &cfg()).unwrap().into_parts();
         assert_eq!(c, 6);
     }
 
@@ -159,8 +165,8 @@ mod tests {
     fn listing_agrees_with_count() {
         let g = gen::erdos_renyi(30, 0.2, 5, &[]);
         let p = library::cycle(4);
-        let (c, _) = sl_count(&g, &p, &cfg());
-        let rows = sl_list(&g, &p, &cfg());
+        let (c, _) = sl_count(&g, &p, &cfg()).unwrap().into_parts();
+        let rows = sl_list(&g, &p, &cfg()).unwrap().value;
         assert_eq!(rows.len() as u64, c);
         // all listed embeddings are genuinely cycles
         for r in rows.iter().take(50) {
@@ -172,10 +178,10 @@ mod tests {
     fn lg_stage_matches_hi_on_sl_patterns() {
         let g = gen::rmat(8, 6, 17, &[]);
         for p in [library::diamond(), library::cycle(4)] {
-            let (hi, _) = sl_count(&g, &p, &cfg());
+            let (hi, _) = sl_count(&g, &p, &cfg()).unwrap().into_parts();
             let mut c = cfg();
             c.opts = OptFlags::lo();
-            let (lo, _) = sl_count(&g, &p, &c);
+            let (lo, _) = sl_count(&g, &p, &c).unwrap().into_parts();
             assert_eq!(hi, lo, "{p}");
         }
     }
@@ -184,10 +190,10 @@ mod tests {
     fn sb_on_off_agree() {
         let g = gen::rmat(7, 5, 9, &[]);
         let p = library::cycle(4);
-        let (on, _) = sl_count(&g, &p, &cfg());
+        let (on, _) = sl_count(&g, &p, &cfg()).unwrap().into_parts();
         let mut c = cfg();
         c.opts.sb = false;
-        let (off, _) = sl_count(&g, &p, &c);
+        let (off, _) = sl_count(&g, &p, &c).unwrap().into_parts();
         assert_eq!(on, off);
     }
 }

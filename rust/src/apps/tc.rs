@@ -6,6 +6,7 @@
 //! appears exactly once as (v, u, w) with rank(v) < rank(u) < rank(w), so
 //! the count is Σ_v Σ_{u ∈ out(v)} |out(v) ∩ out(u)| with no correction.
 
+use crate::engine::budget::{MineError, Outcome};
 use crate::engine::dfs;
 use crate::engine::hooks::NoHooks;
 use crate::engine::{MinerConfig, OptFlags};
@@ -13,7 +14,6 @@ use crate::graph::setops::intersect_count;
 use crate::graph::orientation::{orient, Dag, OrientScheme};
 use crate::graph::CsrGraph;
 use crate::pattern::{library, plan};
-use crate::util::metrics::SearchStats;
 use crate::util::pool::parallel_reduce;
 
 /// Sandslash-Hi TC: DAG + intersection.
@@ -42,16 +42,16 @@ pub fn tc_on_dag(dag: &Dag, cfg: &MinerConfig) -> u64 {
 
 /// TC through the generic pattern-guided engine (used by the system
 /// emulations: Peregrine-like = SB without DAG; AutoMine-like = no SB,
-/// divide by |Aut| = 6 at the end).
-pub fn tc_generic(g: &CsrGraph, cfg: &MinerConfig) -> (u64, SearchStats) {
+/// divide by |Aut| = 6 at the end). Governed (PR 6): forwards the
+/// engine's [`Outcome`]/[`MineError`] contract.
+pub fn tc_generic(g: &CsrGraph, cfg: &MinerConfig) -> Result<Outcome<u64>, MineError> {
     let tri = library::triangle();
     let pl = plan(&tri, true, cfg.opts.sb);
-    let (c, stats) = dfs::count(g, &pl, cfg, &NoHooks);
-    if cfg.opts.sb {
-        (c, stats)
-    } else {
-        (c / 6, stats)
+    let mut out = dfs::count(g, &pl, cfg, &NoHooks)?;
+    if !cfg.opts.sb {
+        out.value /= 6;
     }
+    Ok(out)
 }
 
 /// Reference: brute-force over vertex triples (test oracle; small n only).
@@ -121,11 +121,11 @@ mod tests {
     fn generic_engine_agrees_with_and_without_sb() {
         let g = gen::rmat(8, 6, 7, &[]);
         let expect = tc_hi(&g, &cfg());
-        let (sb, _) = tc_generic(&g, &cfg());
+        let (sb, _) = tc_generic(&g, &cfg()).unwrap().into_parts();
         assert_eq!(sb, expect);
         let mut no_sb = cfg();
         no_sb.opts = OptFlags::automine_like();
-        let (div, _) = tc_generic(&g, &no_sb);
+        let (div, _) = tc_generic(&g, &no_sb).unwrap().into_parts();
         assert_eq!(div, expect);
     }
 

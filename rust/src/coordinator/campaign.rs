@@ -42,7 +42,8 @@ pub fn table5(graphs: &[&str]) -> Vec<ResultRow> {
     for name in graphs {
         let g = datasets::load(name).expect("dataset");
         for sys in TABLE_SYSTEMS {
-            let (c, t) = timed(|| emulation::tc(&g, sys, &cfg()));
+            // campaigns run with budgets unset — governed runs complete
+            let (c, t) = timed(|| emulation::tc(&g, sys, &cfg()).unwrap().value);
             rows.push(row("table5-tc", sys.name(), name, "", t, c));
         }
         let (c, t) = timed(|| gap_tc::gap_tc(&g, &cfg()));
@@ -59,7 +60,7 @@ pub fn table6(graphs: &[&str], ks: &[usize]) -> Vec<ResultRow> {
         for &k in ks {
             let kp = format!("k={k}");
             for sys in TABLE_SYSTEMS {
-                let (c, t) = timed(|| emulation::clique(&g, k, sys, &cfg()));
+                let (c, t) = timed(|| emulation::clique(&g, k, sys, &cfg()).unwrap().value);
                 rows.push(row("table6-kcl", sys.name(), name, &kp, t, c));
             }
             let (c, t) = timed(|| kclist::kclist(&g, k, &cfg()).0);
@@ -79,17 +80,17 @@ pub fn table7(graphs: &[&str], ks: &[usize]) -> Vec<ResultRow> {
         for &k in ks {
             let kp = format!("k={k}");
             for sys in TABLE_SYSTEMS {
-                let (c, t) = timed(|| emulation::motifs(&g, k, sys, &cfg()));
+                let (c, t) = timed(|| emulation::motifs(&g, k, sys, &cfg()).unwrap().value);
                 rows.push(row("table7-kmc", sys.name(), name, &kp, t, total(&c)));
             }
             let (c, t) = timed(|| match k {
-                3 => pgd::pgd_motif3(&g, &cfg()),
-                _ => pgd::pgd_motif4(&g, &cfg()),
+                3 => pgd::pgd_motif3(&g, &cfg()).unwrap(),
+                _ => pgd::pgd_motif4(&g, &cfg()).unwrap(),
             });
             rows.push(row("table7-kmc", "pgd", name, &kp, t, total(&c)));
             let (c, t) = timed(|| match k {
                 3 => motif::motif3_lo(&g, &cfg()),
-                _ => motif::motif4_lo(&g, &cfg()),
+                _ => motif::motif4_lo(&g, &cfg()).unwrap(),
             });
             rows.push(row("table7-kmc", "sandslash-lo", name, &kp, t, total(&c)));
         }
@@ -109,7 +110,7 @@ pub fn table8(graphs: &[&str]) -> Vec<ResultRow> {
         let g = datasets::load(name).expect("dataset");
         for (pname, p) in &pats {
             for sys in [System::PangolinLike, System::PeregrineLike, System::SandslashHi] {
-                let (c, t) = timed(|| emulation::sl(&g, p, sys, &cfg()));
+                let (c, t) = timed(|| emulation::sl(&g, p, sys, &cfg()).unwrap().value);
                 rows.push(row("table8-sl", sys.name(), name, pname, t, c));
             }
         }
@@ -124,15 +125,16 @@ pub fn table9(graphs: &[&str], max_edges: usize, sigmas: &[u64]) -> Vec<ResultRo
         let g = datasets::load(name).expect("dataset");
         for &sigma in sigmas {
             let sp = format!("k={max_edges} sigma={sigma}");
-            let (r, t) = timed(|| fsm_app::fsm_bfs(&g, max_edges, sigma, &cfg()));
-            rows.push(row("table9-fsm", "pangolin-like", name, &sp, t, r.frequent.len()));
+            let (r, t) = timed(|| fsm_app::fsm_bfs(&g, max_edges, sigma, &cfg()).unwrap().value);
+            rows.push(row("table9-fsm", "pangolin-like", name, &sp, t, r.len()));
             let (r, t) =
-                timed(|| peregrine_fsm::peregrine_fsm(&g, max_edges, sigma, &cfg()));
+                timed(|| peregrine_fsm::peregrine_fsm(&g, max_edges, sigma, &cfg()).unwrap());
             rows.push(row("table9-fsm", "peregrine-like", name, &sp, t, r.frequent.len()));
-            let (r, t) = timed(|| fsm_app::fsm_distgraph_like(&g, max_edges, sigma, &cfg()));
-            rows.push(row("table9-fsm", "distgraph-like", name, &sp, t, r.frequent.len()));
-            let (r, t) = timed(|| fsm_app::fsm(&g, max_edges, sigma, &cfg()));
-            rows.push(row("table9-fsm", "sandslash", name, &sp, t, r.frequent.len()));
+            let (r, t) =
+                timed(|| fsm_app::fsm_distgraph_like(&g, max_edges, sigma, &cfg()).unwrap().value);
+            rows.push(row("table9-fsm", "distgraph-like", name, &sp, t, r.len()));
+            let (r, t) = timed(|| fsm_app::fsm(&g, max_edges, sigma, &cfg()).unwrap().value);
+            rows.push(row("table9-fsm", "sandslash", name, &sp, t, r.len()));
         }
     }
     rows
@@ -146,8 +148,8 @@ pub fn fig8(graphs: &[&str], k: usize) -> Vec<ResultRow> {
     let mut rows = Vec::new();
     let run = |g: &CsrGraph, c: &MinerConfig| -> Vec<u64> {
         match k {
-            3 => motif::motif3_hi(g, c).0,
-            4 => motif::motif4_hi(g, c).0,
+            3 => motif::motif3_hi(g, c).unwrap().value,
+            4 => motif::motif4_hi(g, c).unwrap().value,
             _ => panic!("fig8 supports k in 3..=4"),
         }
     };
@@ -194,9 +196,9 @@ pub fn fig9(graphs: &[&str], max_k: usize) -> Vec<ResultRow> {
             let pl = plan(p, true, true);
             let mut lo_cfg = cfg();
             lo_cfg.opts = OptFlags::lo();
-            let (a, t_hi) = timed(|| dfs::count(&g, &pl, &cfg(), &NoHooks).0);
+            let (a, t_hi) = timed(|| dfs::count(&g, &pl, &cfg(), &NoHooks).unwrap().value);
             rows.push(row("fig9-lg", "sandslash-hi", name, pname, t_hi, a));
-            let (b, t_lo) = timed(|| dfs::count(&g, &pl, &lo_cfg, &NoHooks).0);
+            let (b, t_lo) = timed(|| dfs::count(&g, &pl, &lo_cfg, &NoHooks).unwrap().value);
             rows.push(row("fig9-lg", "sandslash-lo(LG)", name, pname, t_lo, b));
             assert_eq!(a, b);
         }
@@ -220,8 +222,8 @@ pub fn fig10(graphs: &[&str]) -> Vec<ResultRow> {
         let (r, t) = timed(|| clique::clique_lo(&g, 5, &cl));
         rows.push(row("fig10-space", "lo", name, "5-cl", t, r.1.enumerated));
         // 4-MC: Hi enumerates all induced 4-subgraphs; Lo only anchors
-        let (r, t) = timed(|| motif::motif4_hi(&g, &c));
-        rows.push(row("fig10-space", "hi", name, "4-mc", t, r.1.enumerated));
+        let (r, t) = timed(|| motif::motif4_hi(&g, &c).unwrap());
+        rows.push(row("fig10-space", "hi", name, "4-mc", t, r.stats.enumerated));
         let (r4, t) = timed(|| {
             let mut cc = cl;
             cc.opts.stats = true;
@@ -248,7 +250,7 @@ pub fn fig11(graph: &str, ks: std::ops::RangeInclusive<usize>) -> Vec<ResultRow>
                 rows.push(row("fig11-largek", sys.name(), graph, &kp, f64::NAN, "TO"));
                 continue;
             }
-            let (c, t) = timed(|| emulation::clique(&g, k, sys, &cfg()));
+            let (c, t) = timed(|| emulation::clique(&g, k, sys, &cfg()).unwrap().value);
             rows.push(row("fig11-largek", sys.name(), graph, &kp, t, c));
         }
         let (c, t) = timed(|| kclist::kclist(&g, k, &cfg()).0);
@@ -271,7 +273,7 @@ pub fn scaling(graph: &str, max_threads: usize) -> Vec<ResultRow> {
         rows.push(row("scaling", "tc", graph, &tp, s, ""));
         let (_, s) = timed(|| clique::clique_hi(&g, 4, &c).0);
         rows.push(row("scaling", "4-cl", graph, &tp, s, ""));
-        let (_, s) = timed(|| motif::motif3_hi(&g, &c).0);
+        let (_, s) = timed(|| motif::motif3_hi(&g, &c).unwrap().value);
         rows.push(row("scaling", "3-mc", graph, &tp, s, ""));
         t *= 2;
     }

@@ -27,7 +27,8 @@
 //! Because materialization is the whole point of this engine, a large
 //! input can OOM-kill the host before producing a row. Each level's
 //! estimated footprint is therefore held to a byte budget —
-//! [`MinerConfig::bfs_cap`], the `SANDSLASH_BFS_CAP` environment
+//! [`Budget::bfs_bytes`] (set via [`MinerConfig::with_bfs_cap`]), the
+//! `SANDSLASH_BFS_CAP` environment
 //! override, or [`DEFAULT_BFS_CAP_BYTES`] — enforced *while* the level
 //! materializes: workers add each expanded embedding's footprint to a
 //! shared running total and stop expanding as soon as it crosses the
@@ -36,14 +37,28 @@
 //! [`BfsCapExceeded`] diagnosis instead of dying silently. A post-hoc
 //! check alone would defend nothing — the over-budget level would
 //! already be resident when it ran.
+//!
+//! # Governance (PR 6)
+//!
+//! The engine is governed like its DFS siblings: each delivered
+//! scheduler task is charged against the run's [`Budget`], the cancel
+//! token is polled per expanded parent (the BFS analogue of the
+//! level-1 candidate poll), and a trip drains the remaining tasks and
+//! returns a partial [`Outcome`] — zero counts when the trip lands
+//! before the final classify level, a prefix of the counts when it
+//! lands inside it. Worker panics surface as
+//! [`MineError::WorkerPanicked`] with the process intact.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::OnceLock;
 
+use crate::exec::sched::{self, SchedPolicy, Task};
 use crate::graph::{CsrGraph, VertexId};
+use crate::util::fault;
 use crate::util::metrics::{tag, SearchStats};
-use crate::util::pool::{parallel_reduce, positive_usize_env};
+use crate::util::pool::positive_usize_env;
 
+use super::budget::{self, Budget, Governor, MineError, Outcome};
 use super::embedding::pack_codes;
 use super::esu::MotifTable;
 use super::extend::ExtCore;
@@ -112,8 +127,6 @@ struct BfsEmb {
 pub struct BfsOutcome {
     /// Per-motif counts (library order).
     pub counts: Vec<u64>,
-    /// Search counters.
-    pub stats: SearchStats,
     /// Peak number of simultaneously materialized embeddings.
     pub peak_embeddings: u64,
 }
@@ -149,17 +162,19 @@ fn check_budget(level_no: usize, level: &[BfsEmb], cap: usize) -> Result<(), Bfs
 
 /// Count k-motifs with level-synchronous ESU expansion, or fail loudly
 /// when a materialized level would exceed the byte budget (module
-/// docs).
+/// docs). Governed (PR 6): see the module-level governance section.
 pub fn bfs_count_motifs(
     g: &CsrGraph,
     k: usize,
     cfg: &MinerConfig,
     table: &MotifTable,
-) -> Result<BfsOutcome, BfsCapExceeded> {
+) -> Result<Outcome<BfsOutcome>, MineError> {
     assert!(k >= 3);
     let n = g.num_vertices();
     let use_core = cfg.opts.extcore_active();
-    let cap = cfg.bfs_cap.unwrap_or_else(default_bfs_cap);
+    let cap = cfg.budget.bfs_bytes.unwrap_or_else(default_bfs_cap);
+    let pol = SchedPolicy::auto(cfg.threads, cfg.chunk.max(1));
+    let gov = budget::governance_enabled().then(|| Governor::new(&cfg.budget));
     // level 1: single-vertex embeddings with ext = {u in N(v) : u > v}
     let mut level: Vec<BfsEmb> = (0..n as VertexId)
         .map(|v| BfsEmb {
@@ -182,28 +197,35 @@ pub fn bfs_count_motifs(
         // check alone would run only after the damage was resident.)
         let spent = AtomicU64::new(0);
         let over = AtomicBool::new(false);
-        let next = parallel_reduce(
+        let next = sched::reduce_governed(
             level.len(),
-            cfg.threads,
-            cfg.chunk.max(1),
+            &pol,
+            gov.as_ref(),
             || (Vec::new(), ExtCore::new(), Vec::new()),
-            |acc: &mut (Vec<BfsEmb>, ExtCore, Vec<u32>), i| {
-                if over.load(Ordering::Relaxed) {
-                    return;
-                }
-                let (out, core, codes_buf) = acc;
-                let e = &level[i];
-                let start = out.len();
-                tag::with_engine(tag::Engine::Bfs, || {
-                    if use_core {
-                        expand_core(g, core, codes_buf, e, out);
-                    } else {
-                        expand(g, e, depth, out);
+            |acc: &mut (Vec<BfsEmb>, ExtCore, Vec<u32>), ctx, task| {
+                let Task::Roots { start: lo, end: hi } = task else {
+                    unreachable!("the BFS engine never publishes split tasks")
+                };
+                for i in lo..hi {
+                    if over.load(Ordering::Relaxed) || ctx.cancelled() {
+                        return;
                     }
-                });
-                let added: u64 = out[start..].iter().map(emb_bytes).sum();
-                if spent.fetch_add(added, Ordering::Relaxed) + added > cap as u64 {
-                    over.store(true, Ordering::Relaxed);
+                    // one crossing per expanded parent (PR 6 fault grammar)
+                    fault::point(fault::Stage::BfsLevel);
+                    let (out, core, codes_buf) = acc;
+                    let e = &level[i];
+                    let start = out.len();
+                    tag::with_engine(tag::Engine::Bfs, || {
+                        if use_core {
+                            expand_core(g, core, codes_buf, e, out);
+                        } else {
+                            expand(g, e, depth, out);
+                        }
+                    });
+                    let added: u64 = out[start..].iter().map(emb_bytes).sum();
+                    if spent.fetch_add(added, Ordering::Relaxed) + added > cap as u64 {
+                        over.store(true, Ordering::Relaxed);
+                    }
                 }
             },
             |mut a, b| {
@@ -218,7 +240,8 @@ pub fn bfs_count_motifs(
                 embeddings: next.len() as u64,
                 bytes: level_bytes(&next),
                 cap: cap as u64,
-            });
+            }
+            .into());
         }
         stats.enumerated += next.len() as u64;
         peak = peak.max(next.len() as u64);
@@ -230,15 +253,24 @@ pub fn bfs_count_motifs(
 
     // final level: classify instead of materializing
     let nm = table.num_motifs;
-    let counts = parallel_reduce(
+    let counts = sched::reduce_governed(
         level.len(),
-        cfg.threads,
-        cfg.chunk.max(1),
+        &pol,
+        gov.as_ref(),
         || (vec![0u64; nm], ExtCore::new(), Vec::new(), Vec::new()),
-        |acc: &mut (Vec<u64>, ExtCore, Vec<u32>, Vec<u32>), i| {
-            let (counts, core, codes_buf, code_stack) = acc;
-            let e = &level[i];
-            tag::with_engine(tag::Engine::Bfs, || {
+        |acc: &mut (Vec<u64>, ExtCore, Vec<u32>, Vec<u32>), ctx, task| {
+            let Task::Roots { start: lo, end: hi } = task else {
+                unreachable!("the BFS engine never publishes split tasks")
+            };
+            for i in lo..hi {
+                if ctx.cancelled() {
+                    return;
+                }
+                // one crossing per classified parent (PR 6 fault grammar)
+                fault::point(fault::Stage::BfsLevel);
+                let (counts, core, codes_buf, code_stack) = acc;
+                let e = &level[i];
+                tag::with_engine(tag::Engine::Bfs, || {
                 if use_core {
                     // batched MEC codes: one adaptive intersection per
                     // position instead of |ext| × |verts| edge probes;
@@ -270,7 +302,8 @@ pub fn bfs_count_motifs(
                         counts[id as usize] += 1;
                     }
                 }
-            });
+                });
+            }
         },
         |mut a, b| {
             for (x, y) in a.0.iter_mut().zip(b.0) {
@@ -282,7 +315,11 @@ pub fn bfs_count_motifs(
     .0;
     stats.matches = counts.iter().sum();
     stats.enumerated += stats.matches;
-    Ok(BfsOutcome { counts, stats, peak_embeddings: peak })
+    let outcome = BfsOutcome { counts, peak_embeddings: peak };
+    match gov {
+        Some(gv) => gv.finish(outcome, stats, "bfs"),
+        None => Ok(Outcome::complete(outcome, stats)),
+    }
 }
 
 /// Seed scalar expansion, kept verbatim as the differential oracle: one
@@ -356,8 +393,9 @@ mod tests {
         let g = gen::rmat(7, 6, 21, &[]);
         let t = MotifTable::new(3);
         let bfs = bfs_count_motifs(&g, 3, &cfg(), &t).unwrap();
-        let (dfs, _) = count_motifs(&g, 3, &cfg(), &NoHooks, &t);
-        assert_eq!(bfs.counts, dfs);
+        assert!(bfs.complete);
+        let (dfs, _) = count_motifs(&g, 3, &cfg(), &NoHooks, &t).unwrap().into_parts();
+        assert_eq!(bfs.value.counts, dfs);
     }
 
     #[test]
@@ -365,8 +403,8 @@ mod tests {
         let g = gen::erdos_renyi(60, 0.12, 9, &[]);
         let t = MotifTable::new(4);
         let bfs = bfs_count_motifs(&g, 4, &cfg(), &t).unwrap();
-        let (dfs, _) = count_motifs(&g, 4, &cfg(), &NoHooks, &t);
-        assert_eq!(bfs.counts, dfs);
+        let (dfs, _) = count_motifs(&g, 4, &cfg(), &NoHooks, &t).unwrap().into_parts();
+        assert_eq!(bfs.value.counts, dfs);
     }
 
     #[test]
@@ -377,9 +415,9 @@ mod tests {
         let mut oracle_cfg = cfg();
         oracle_cfg.opts.extcore = false;
         let oracle = bfs_count_motifs(&g, 4, &oracle_cfg, &t).unwrap();
-        assert_eq!(core.counts, oracle.counts);
+        assert_eq!(core.value.counts, oracle.value.counts);
         // levels are identical element-for-element, not just count-equal
-        assert_eq!(core.peak_embeddings, oracle.peak_embeddings);
+        assert_eq!(core.value.peak_embeddings, oracle.value.peak_embeddings);
         assert_eq!(core.stats.enumerated, oracle.stats.enumerated);
     }
 
@@ -387,7 +425,7 @@ mod tests {
     fn peak_embeddings_grows_with_level() {
         let g = gen::erdos_renyi(50, 0.2, 3, &[]);
         let t = MotifTable::new(4);
-        let out = bfs_count_motifs(&g, 4, &cfg(), &t).unwrap();
+        let out = bfs_count_motifs(&g, 4, &cfg(), &t).unwrap().value;
         // BFS materialization must exceed the vertex count on any
         // non-trivial graph
         assert!(out.peak_embeddings > 50);
@@ -398,13 +436,16 @@ mod tests {
         let g = gen::erdos_renyi(60, 0.15, 5, &[]);
         let t = MotifTable::new(4);
         let starved = cfg().with_bfs_cap(1024);
-        let err = bfs_count_motifs(&g, 4, &starved, &t).expect_err("1 KiB cannot hold a level");
+        let err = match bfs_count_motifs(&g, 4, &starved, &t) {
+            Err(crate::engine::budget::MineError::BfsCapExceeded(e)) => e,
+            other => panic!("1 KiB cannot hold a level: {other:?}"),
+        };
         assert!(err.bytes > err.cap);
         assert!(err.embeddings > 0);
         let msg = format!("{err}");
         assert!(msg.contains("SANDSLASH_BFS_CAP"), "diagnosis must name the knob: {msg}");
         // a sane budget on the same input succeeds
-        let ok = bfs_count_motifs(&g, 4, &cfg().with_bfs_cap(64 << 20), &t).unwrap();
+        let ok = bfs_count_motifs(&g, 4, &cfg().with_bfs_cap(64 << 20), &t).unwrap().value;
         assert!(ok.counts.iter().sum::<u64>() > 0);
     }
 }

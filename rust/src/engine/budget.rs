@@ -1,0 +1,644 @@
+//! Query governance (PR 6): per-run budgets, cooperative cancellation,
+//! and the unified mining error surface.
+//!
+//! The ROADMAP's resident multi-tenant service needs every mining run
+//! to be *boundable*: a clique query on a hub-heavy graph can cost
+//! 1000× what the same query costs on a uniform graph, so a process
+//! serving many users must be able to limit, cancel, and survive any
+//! single run. This module generalizes the PR-5 BFS byte budget
+//! ([`crate::engine::bfs::BfsCapExceeded`]) into one governance layer:
+//!
+//! * [`Budget`] — the per-run limits (`deadline`, `max_tasks`,
+//!   `bfs_bytes`), carried on [`MinerConfig`](super::MinerConfig) and
+//!   seeded from `SANDSLASH_DEADLINE_MS` / `SANDSLASH_MAX_TASKS`.
+//! * [`CancelToken`] — one atomic byte encoding *whether* and *why* a
+//!   run was cancelled ([`CancelReason`]); first trip wins. Callers
+//!   install their own token with [`with_cancel`] to cancel a run
+//!   asynchronously.
+//! * [`Governor`] — the per-run referee the scheduler polls: one
+//!   relaxed load on the hot path ([`Governor::is_cancelled`]), one
+//!   [`Governor::admit`] charge per claimed root block (the same
+//!   granularity the PR-4 deques already lock at), deadline checks
+//!   only when a deadline is set.
+//! * [`Outcome`] / [`MineError`] — every engine entry point returns
+//!   `Result<Outcome<T>, MineError>`: a budget trip is **not** an
+//!   error — the partial counts accumulated before the trip come back
+//!   with `complete == false` (graceful degradation; a future
+//!   approximate mode reads straight off this) — while a worker panic
+//!   ([`MineError::WorkerPanicked`]) or the BFS byte budget
+//!   ([`MineError::BfsCapExceeded`]) is.
+//!
+//! Cancellation is cooperative and near-free: the token is polled at
+//! exactly the points the PR-4/PR-5 split protocol already polls (per
+//! level-1 candidate, per claimed block, per BFS level), so the
+//! steady-state cost is one additional relaxed load at an existing
+//! poll site. `SANDSLASH_NO_GOV=1` (or the scoped
+//! [`with_governance_disabled`], which the benches use to time the
+//! ungoverned path) removes even that load by running the engines with
+//! no governor at all — the same kill-switch contract as
+//! `SANDSLASH_NO_STEAL` / `SANDSLASH_NO_SIMD`.
+
+use std::cell::{Cell, RefCell};
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+use crate::engine::bfs::BfsCapExceeded;
+use crate::util::metrics::{gov, SearchStats};
+
+/// Per-run resource limits. All fields default to `None` (unlimited):
+/// with every limit unset and no caller token installed, the governed
+/// path degenerates to one relaxed load per claimed block and the
+/// engines' counts are bit-identical to ungoverned runs.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Budget {
+    /// Wall-clock deadline for the run, measured from
+    /// [`Governor::new`]. Checked once per claimed root block (and per
+    /// BFS level), so the trip granularity is one block, not one root.
+    pub deadline: Option<Duration>,
+    /// Maximum number of scheduler tasks (claimed blocks, split tasks,
+    /// BFS expansion blocks) the run may consume. Honored within one
+    /// block grain: the task that crosses the limit is refused, tasks
+    /// already running finish.
+    pub max_tasks: Option<u64>,
+    /// Byte budget for one materialized BFS level (the PR-5 cap,
+    /// absorbed here). `None` resolves `SANDSLASH_BFS_CAP` and then
+    /// [`crate::engine::bfs::DEFAULT_BFS_CAP_BYTES`].
+    pub bfs_bytes: Option<usize>,
+}
+
+impl Budget {
+    /// The process-default budget: `SANDSLASH_DEADLINE_MS` and
+    /// `SANDSLASH_MAX_TASKS` (loud-reject parse like every
+    /// `SANDSLASH_*` numeric knob, resolved once per process),
+    /// `bfs_bytes` unset.
+    pub fn from_env() -> Self {
+        static CACHE: OnceLock<(Option<u64>, Option<u64>)> = OnceLock::new();
+        let &(ms, tasks) = CACHE.get_or_init(|| {
+            (
+                crate::util::pool::positive_usize_env("SANDSLASH_DEADLINE_MS", "no deadline")
+                    .map(|n| n as u64),
+                crate::util::pool::positive_usize_env("SANDSLASH_MAX_TASKS", "no task budget")
+                    .map(|n| n as u64),
+            )
+        });
+        Self {
+            deadline: ms.map(Duration::from_millis),
+            max_tasks: tasks,
+            bfs_bytes: None,
+        }
+    }
+
+    /// Whether any limit is set (callers with no limits and no caller
+    /// token skip the per-block accounting entirely).
+    pub fn is_limited(&self) -> bool {
+        self.deadline.is_some() || self.max_tasks.is_some()
+    }
+}
+
+/// Why a run was cancelled. Encoded in one atomic byte on the
+/// [`CancelToken`]; the first reason to trip wins and later trips are
+/// ignored, so a run reports the *original* cause even when (say) a
+/// deadline also expires while a panic drains.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CancelReason {
+    /// The [`Budget::deadline`] expired.
+    Deadline,
+    /// The [`Budget::max_tasks`] task budget was exhausted.
+    TaskBudget,
+    /// The caller cancelled via a [`CancelToken`] installed with
+    /// [`with_cancel`] (or [`CancelToken::cancel`]).
+    Caller,
+    /// A worker panicked; the run terminated through the normal
+    /// protocol instead of poisoning scheduler locks. Surfaced to the
+    /// caller as [`MineError::WorkerPanicked`], never as a partial
+    /// [`Outcome`] — a panicking hook may have lost counts.
+    WorkerPanic,
+}
+
+impl CancelReason {
+    const CODES: [CancelReason; 4] = [
+        CancelReason::Deadline,
+        CancelReason::TaskBudget,
+        CancelReason::Caller,
+        CancelReason::WorkerPanic,
+    ];
+
+    fn as_u8(self) -> u8 {
+        match self {
+            CancelReason::Deadline => 1,
+            CancelReason::TaskBudget => 2,
+            CancelReason::Caller => 3,
+            CancelReason::WorkerPanic => 4,
+        }
+    }
+
+    fn from_u8(code: u8) -> Option<Self> {
+        if code == 0 {
+            None
+        } else {
+            Some(Self::CODES[(code - 1) as usize])
+        }
+    }
+
+    /// Distinct process exit code for CLI runs that end on this trip
+    /// (see `main.rs`; 0 = complete, 1 = load/internal error, 2 =
+    /// usage, 3 = BFS cap, 4 = worker panic).
+    pub fn exit_code(self) -> i32 {
+        match self {
+            CancelReason::Deadline => 5,
+            CancelReason::TaskBudget => 6,
+            CancelReason::Caller => 7,
+            CancelReason::WorkerPanic => 4,
+        }
+    }
+
+    /// One-line diagnosis naming the knob to raise, following the
+    /// `BfsCapExceeded` message pattern.
+    pub fn diagnosis(self) -> &'static str {
+        match self {
+            CancelReason::Deadline => {
+                "deadline exceeded: counts below are partial; raise --deadline-ms \
+                 (or SANDSLASH_DEADLINE_MS) or narrow the query to finish"
+            }
+            CancelReason::TaskBudget => {
+                "task budget exhausted: counts below are partial; raise --max-tasks \
+                 (or SANDSLASH_MAX_TASKS) or narrow the query to finish"
+            }
+            CancelReason::Caller => {
+                "cancelled by caller: counts below are partial up to the cancellation point"
+            }
+            CancelReason::WorkerPanic => {
+                "a worker panicked mid-run: results were discarded, not returned partial"
+            }
+        }
+    }
+}
+
+/// Shared cancellation flag: one atomic byte holding the first
+/// [`CancelReason`] to trip (0 = not cancelled). Clone the `Arc` it is
+/// usually wrapped in, hand one side to [`with_cancel`], and call
+/// [`CancelToken::cancel`] from any thread to stop the governed run at
+/// its next poll site.
+#[derive(Debug, Default)]
+pub struct CancelToken {
+    state: AtomicU8,
+}
+
+impl CancelToken {
+    /// A fresh, untripped token.
+    pub const fn new() -> Self {
+        Self { state: AtomicU8::new(0) }
+    }
+
+    /// Cancel on behalf of the caller (trips with
+    /// [`CancelReason::Caller`]).
+    pub fn cancel(&self) {
+        self.trip(CancelReason::Caller);
+    }
+
+    /// Trip with an explicit reason. First trip wins; returns whether
+    /// this call was the one that tripped it.
+    pub fn trip(&self, reason: CancelReason) -> bool {
+        self.state
+            .compare_exchange(0, reason.as_u8(), Ordering::AcqRel, Ordering::Relaxed)
+            .is_ok()
+    }
+
+    /// The reason this token tripped, if it has (one relaxed load —
+    /// the hot-path poll).
+    pub fn cancelled(&self) -> Option<CancelReason> {
+        CancelReason::from_u8(self.state.load(Ordering::Relaxed))
+    }
+
+    /// Whether the token has tripped (one relaxed load).
+    pub fn is_cancelled(&self) -> bool {
+        self.state.load(Ordering::Relaxed) != 0
+    }
+}
+
+thread_local! {
+    /// Ambient caller token, installed by [`with_cancel`] and picked up
+    /// by [`Governor::new`] — the same scoped-override shape as
+    /// [`crate::exec::sched::with_overrides`], so callers can cancel
+    /// runs that reach the engines through fixed app signatures.
+    static CALLER_TOKEN: RefCell<Option<Arc<CancelToken>>> = const { RefCell::new(None) };
+    /// Scoped governance kill switch (see [`with_governance_disabled`]).
+    static GOV_DISABLED: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Run `f` with `token` installed as the ambient caller-cancellation
+/// token: every [`Governor`] created inside the scope (on this thread)
+/// polls it once per claimed block and trips [`CancelReason::Caller`]
+/// when it is cancelled. Restores the previous token on exit.
+pub fn with_cancel<R>(token: Arc<CancelToken>, f: impl FnOnce() -> R) -> R {
+    let prev = CALLER_TOKEN.with(|t| t.replace(Some(token)));
+    struct Restore(Option<Arc<CancelToken>>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            CALLER_TOKEN.with(|t| *t.borrow_mut() = self.0.take());
+        }
+    }
+    let _restore = Restore(prev);
+    f()
+}
+
+/// The ambient caller token installed by [`with_cancel`], if any.
+fn current_cancel() -> Option<Arc<CancelToken>> {
+    CALLER_TOKEN.with(|t| t.borrow().clone())
+}
+
+/// Process-wide governance kill switch: `SANDSLASH_NO_GOV` set to any
+/// non-empty value other than `0` runs every engine with no governor
+/// at all — no token, no polls, no panic catching — the exact pre-PR-6
+/// hot path. Same contract as the other `SANDSLASH_NO_*` switches.
+fn no_gov_env() -> bool {
+    static CACHE: OnceLock<bool> = OnceLock::new();
+    *CACHE.get_or_init(|| match std::env::var("SANDSLASH_NO_GOV") {
+        Ok(v) => !v.is_empty() && v != "0",
+        Err(_) => false,
+    })
+}
+
+/// Run `f` with governance disabled on this thread (engines entered
+/// inside the scope run ungoverned, as if `SANDSLASH_NO_GOV=1`). The
+/// `pr6-governance` bench uses this to time the governance-off path
+/// from the same process.
+pub fn with_governance_disabled<R>(f: impl FnOnce() -> R) -> R {
+    let prev = GOV_DISABLED.with(|d| d.replace(true));
+    struct Restore(bool);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            GOV_DISABLED.with(|d| d.set(self.0));
+        }
+    }
+    let _restore = Restore(prev);
+    f()
+}
+
+/// Whether engines entered on this thread should create a governor:
+/// `false` under `SANDSLASH_NO_GOV=1` or inside
+/// [`with_governance_disabled`].
+pub fn governance_enabled() -> bool {
+    !no_gov_env() && !GOV_DISABLED.with(|d| d.get())
+}
+
+/// Per-run governance state: the deadline clock, the task counter, the
+/// run's own [`CancelToken`], the optional caller token, and the
+/// first-caught panic payload. Engines create one per entry
+/// ([`Governor::new`]), thread `Option<&Governor>` down to the
+/// scheduler, and convert the end state with [`Governor::finish`].
+pub struct Governor {
+    deadline: Option<Instant>,
+    max_tasks: u64,
+    tasks: AtomicU64,
+    token: CancelToken,
+    external: Option<Arc<CancelToken>>,
+    panic_note: Mutex<Option<String>>,
+    limited: bool,
+}
+
+impl Governor {
+    /// Start governing one run under `budget` (the deadline clock
+    /// starts now). Picks up the ambient [`with_cancel`] token and arms
+    /// the fault-injection harness from `SANDSLASH_FAULT` (once per
+    /// process).
+    pub fn new(budget: &Budget) -> Self {
+        crate::util::fault::init_from_env();
+        let external = current_cancel();
+        let limited = budget.is_limited() || external.is_some();
+        Self {
+            deadline: budget.deadline.map(|d| Instant::now() + d),
+            max_tasks: budget.max_tasks.unwrap_or(u64::MAX),
+            tasks: AtomicU64::new(0),
+            token: CancelToken::new(),
+            external,
+            panic_note: Mutex::new(None),
+            limited,
+        }
+    }
+
+    /// Hot-path poll: has this run been cancelled? One relaxed load —
+    /// placed at exactly the sites the split gate already polls.
+    #[inline]
+    pub fn is_cancelled(&self) -> bool {
+        self.token.is_cancelled()
+    }
+
+    /// The reason this run tripped, if it has.
+    pub fn cancelled(&self) -> Option<CancelReason> {
+        self.token.cancelled()
+    }
+
+    /// Whether any limit (deadline, task budget, caller token) is
+    /// armed. Unlimited governors skip the per-block charge and only
+    /// pay the relaxed cancellation load (which can still trip — a
+    /// worker panic cancels even an unlimited run).
+    pub fn limited(&self) -> bool {
+        self.limited
+    }
+
+    /// Charge one scheduler task against the budget. Called once per
+    /// claimed block / split task / BFS expansion block — never per
+    /// root. Returns `false` once the run is cancelled (by this charge
+    /// or earlier); the refusing worker drops the task and proceeds to
+    /// termination.
+    pub fn admit(&self) -> bool {
+        if self.token.is_cancelled() {
+            return false;
+        }
+        if !self.limited {
+            return true;
+        }
+        if let Some(ext) = &self.external {
+            if ext.is_cancelled() {
+                self.trip(CancelReason::Caller);
+                return false;
+            }
+        }
+        if let Some(deadline) = self.deadline {
+            if Instant::now() >= deadline {
+                self.trip(CancelReason::Deadline);
+                return false;
+            }
+        }
+        if self.max_tasks != u64::MAX
+            && self.tasks.fetch_add(1, Ordering::Relaxed) >= self.max_tasks
+        {
+            self.trip(CancelReason::TaskBudget);
+            return false;
+        }
+        true
+    }
+
+    /// Trip the run's token (first reason wins) and count it.
+    pub fn trip(&self, reason: CancelReason) {
+        if self.token.trip(reason) {
+            gov::note_trip(reason);
+        }
+    }
+
+    /// Record a caught worker panic: keep the first payload, trip
+    /// [`CancelReason::WorkerPanic`]. The scheduler calls this from the
+    /// worker that caught the unwind; [`Governor::finish`] turns it
+    /// into [`MineError::WorkerPanicked`].
+    pub fn note_panic(&self, payload: String) {
+        let mut slot = self.panic_note.lock().unwrap_or_else(|e| e.into_inner());
+        if slot.is_none() {
+            *slot = Some(payload);
+        }
+        drop(slot);
+        gov::note_panic_caught();
+        self.trip(CancelReason::WorkerPanic);
+    }
+
+    /// Convert the end-of-run state: a recorded panic is
+    /// `Err(WorkerPanicked)`, a tripped budget is a partial
+    /// [`Outcome`], anything else is complete.
+    pub fn finish<T>(
+        &self,
+        value: T,
+        stats: SearchStats,
+        engine: &'static str,
+    ) -> Result<Outcome<T>, MineError> {
+        let note = self.panic_note.lock().unwrap_or_else(|e| e.into_inner()).take();
+        if let Some(payload) = note {
+            return Err(MineError::WorkerPanicked { engine, payload });
+        }
+        match self.token.cancelled() {
+            Some(CancelReason::WorkerPanic) => Err(MineError::WorkerPanicked {
+                engine,
+                payload: "worker panicked (payload lost)".to_string(),
+            }),
+            Some(reason) => Ok(Outcome::partial(value, stats, reason)),
+            None => Ok(Outcome::complete(value, stats)),
+        }
+    }
+}
+
+/// The result of a governed mining run: the value (counts, listings,
+/// frequent patterns), the merged search counters, and whether the run
+/// saw its whole search space. A tripped budget yields
+/// `complete == false` with the counts accumulated *before* the trip —
+/// always a lower bound on the true count, never garbage.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Outcome<T> {
+    /// The (possibly partial) mining result.
+    pub value: T,
+    /// Merged per-worker search counters.
+    pub stats: SearchStats,
+    /// `true` iff the run explored its entire search space.
+    pub complete: bool,
+    /// Why the run stopped early (`None` iff `complete`).
+    pub tripped: Option<CancelReason>,
+}
+
+impl<T> Outcome<T> {
+    /// A run that explored everything.
+    pub fn complete(value: T, stats: SearchStats) -> Self {
+        Self { value, stats, complete: true, tripped: None }
+    }
+
+    /// A run that tripped a budget after accumulating `value`.
+    pub fn partial(value: T, stats: SearchStats, reason: CancelReason) -> Self {
+        Self { value, stats, complete: false, tripped: Some(reason) }
+    }
+
+    /// Split into `(value, stats)` — the seed-era tuple shape, for
+    /// call sites that only want the numbers.
+    pub fn into_parts(self) -> (T, SearchStats) {
+        (self.value, self.stats)
+    }
+
+    /// Transform the carried value, preserving stats and trip state —
+    /// for facades (e.g. [`crate::apps::solve`]) that re-shape engine
+    /// results without touching governance semantics.
+    pub fn map<U>(self, f: impl FnOnce(T) -> U) -> Outcome<U> {
+        Outcome { value: f(self.value), stats: self.stats, complete: self.complete, tripped: self.tripped }
+    }
+}
+
+/// The unified mining error. Budget trips are *not* errors (they come
+/// back as partial [`Outcome`]s); this enum covers the cases where no
+/// trustworthy partial result exists.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum MineError {
+    /// A materialized BFS level exceeded its byte budget (the PR-5
+    /// error, absorbed; [`Budget::bfs_bytes`] / `SANDSLASH_BFS_CAP`).
+    BfsCapExceeded(BfsCapExceeded),
+    /// A worker panicked mid-run. The run terminated through the normal
+    /// active==0 protocol (no poisoned scheduler locks, no process
+    /// abort) and the first panic payload was captured.
+    WorkerPanicked {
+        /// Which engine was running (`"dfs"`, `"esu"`, `"bfs"`,
+        /// `"fsm"`).
+        engine: &'static str,
+        /// The stringified panic payload.
+        payload: String,
+    },
+}
+
+impl MineError {
+    /// Distinct nonzero process exit code for CLI runs (see the map on
+    /// [`CancelReason::exit_code`]).
+    pub fn exit_code(&self) -> i32 {
+        match self {
+            MineError::BfsCapExceeded(_) => 3,
+            MineError::WorkerPanicked { .. } => 4,
+        }
+    }
+}
+
+impl std::fmt::Display for MineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MineError::BfsCapExceeded(e) => e.fmt(f),
+            MineError::WorkerPanicked { engine, payload } => write!(
+                f,
+                "a {engine} worker panicked mid-run: {payload}; the run was drained cleanly \
+                 (no results) — rerun, or fix the panicking hook"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for MineError {}
+
+impl From<BfsCapExceeded> for MineError {
+    fn from(e: BfsCapExceeded) -> Self {
+        MineError::BfsCapExceeded(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_first_trip_wins() {
+        let t = CancelToken::new();
+        assert_eq!(t.cancelled(), None);
+        assert!(!t.is_cancelled());
+        assert!(t.trip(CancelReason::Deadline));
+        assert!(!t.trip(CancelReason::TaskBudget), "second trip must lose");
+        assert_eq!(t.cancelled(), Some(CancelReason::Deadline));
+        assert!(t.is_cancelled());
+    }
+
+    #[test]
+    fn reason_codes_round_trip() {
+        for r in CancelReason::CODES {
+            assert_eq!(CancelReason::from_u8(r.as_u8()), Some(r));
+        }
+        assert_eq!(CancelReason::from_u8(0), None);
+    }
+
+    #[test]
+    fn exit_codes_are_distinct_and_nonzero() {
+        let mut codes = vec![
+            MineError::BfsCapExceeded(BfsCapExceeded {
+                level: 2,
+                embeddings: 1,
+                bytes: 2,
+                cap: 1,
+            })
+            .exit_code(),
+            MineError::WorkerPanicked { engine: "dfs", payload: String::new() }.exit_code(),
+            CancelReason::Deadline.exit_code(),
+            CancelReason::TaskBudget.exit_code(),
+            CancelReason::Caller.exit_code(),
+        ];
+        codes.sort_unstable();
+        let len = codes.len();
+        codes.dedup();
+        assert_eq!(codes.len(), len, "exit codes must be distinct");
+        assert!(codes.iter().all(|&c| c > 2), "0/1/2 are reserved for ok/load/usage");
+    }
+
+    #[test]
+    fn unlimited_governor_admits_forever_until_tripped() {
+        let gov = Governor::new(&Budget::default());
+        assert!(!gov.limited());
+        for _ in 0..1000 {
+            assert!(gov.admit());
+        }
+        gov.trip(CancelReason::Caller);
+        assert!(!gov.admit());
+        assert_eq!(gov.cancelled(), Some(CancelReason::Caller));
+    }
+
+    #[test]
+    fn task_budget_admits_exactly_max_tasks() {
+        let budget = Budget { max_tasks: Some(5), ..Budget::default() };
+        let gov = Governor::new(&budget);
+        assert!(gov.limited());
+        for i in 0..5 {
+            assert!(gov.admit(), "task {i} is within budget");
+        }
+        assert!(!gov.admit(), "task 5 crosses the budget");
+        assert_eq!(gov.cancelled(), Some(CancelReason::TaskBudget));
+    }
+
+    #[test]
+    fn elapsed_deadline_refuses_admission() {
+        let budget = Budget { deadline: Some(Duration::ZERO), ..Budget::default() };
+        let gov = Governor::new(&budget);
+        assert!(!gov.admit());
+        assert_eq!(gov.cancelled(), Some(CancelReason::Deadline));
+        let out = gov.finish(7u64, SearchStats::default(), "dfs").unwrap();
+        assert!(!out.complete);
+        assert_eq!(out.tripped, Some(CancelReason::Deadline));
+        assert_eq!(out.value, 7);
+    }
+
+    #[test]
+    fn ambient_caller_token_trips_caller() {
+        let token = Arc::new(CancelToken::new());
+        token.cancel();
+        let out = with_cancel(token, || {
+            let gov = Governor::new(&Budget::default());
+            assert!(!gov.admit());
+            gov.finish(3u64, SearchStats::default(), "esu").unwrap()
+        });
+        assert_eq!(out.tripped, Some(CancelReason::Caller));
+        // the scope restored the previous (absent) token
+        assert!(current_cancel().is_none());
+    }
+
+    #[test]
+    fn panic_note_beats_partial_outcome() {
+        let gov = Governor::new(&Budget { max_tasks: Some(1), ..Budget::default() });
+        gov.note_panic("boom".to_string());
+        match gov.finish(0u64, SearchStats::default(), "fsm") {
+            Err(MineError::WorkerPanicked { engine, payload }) => {
+                assert_eq!(engine, "fsm");
+                assert_eq!(payload, "boom");
+            }
+            other => panic!("expected WorkerPanicked, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn governance_scoped_disable_restores() {
+        assert!(governance_enabled());
+        with_governance_disabled(|| assert!(!governance_enabled()));
+        assert!(governance_enabled());
+    }
+
+    #[test]
+    fn diagnosis_names_the_knob() {
+        assert!(CancelReason::Deadline.diagnosis().contains("SANDSLASH_DEADLINE_MS"));
+        assert!(CancelReason::Deadline.diagnosis().contains("--deadline-ms"));
+        assert!(CancelReason::TaskBudget.diagnosis().contains("SANDSLASH_MAX_TASKS"));
+        assert!(CancelReason::TaskBudget.diagnosis().contains("--max-tasks"));
+    }
+
+    #[test]
+    fn mine_error_display_is_actionable() {
+        let e = MineError::WorkerPanicked { engine: "bfs", payload: "hook failed".into() };
+        let msg = format!("{e}");
+        assert!(msg.contains("bfs") && msg.contains("hook failed"));
+        let cap: MineError = BfsCapExceeded { level: 3, embeddings: 9, bytes: 10, cap: 5 }.into();
+        assert!(format!("{cap}").contains("SANDSLASH_BFS_CAP"));
+    }
+}

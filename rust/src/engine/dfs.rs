@@ -58,6 +58,7 @@ use crate::pattern::matching_order::{LevelPlan, MatchingPlan};
 use crate::util::bitset::BitSet;
 use crate::util::metrics::SearchStats;
 
+use super::budget::{self, Governor, MineError, Outcome};
 use super::hooks::LowLevelApi;
 use super::local_graph::PlanLocalGraph;
 use super::mnc::Connectivity;
@@ -188,7 +189,11 @@ fn sb_range(lp: &LevelPlan, emb: &[VertexId]) -> (Option<VertexId>, Option<Verte
 
 /// Mine all embeddings of `plan` in `g`; `leaf` is invoked with the
 /// matched vertex tuple (in plan order). Returns the merged accumulator
-/// and search statistics.
+/// and search statistics as a governed [`Outcome`] (PR 6): a run that
+/// trips its [`Budget`](super::Budget) comes back with
+/// `complete == false` and the counts accumulated before the trip; a
+/// worker panic comes back as [`MineError::WorkerPanicked`] with the
+/// process intact.
 pub fn mine<A: Send, H: LowLevelApi>(
     g: &CsrGraph,
     plan: &MatchingPlan,
@@ -197,7 +202,7 @@ pub fn mine<A: Send, H: LowLevelApi>(
     init: impl Fn() -> A + Sync,
     leaf: impl Fn(&mut A, &[VertexId]) + Sync,
     mut merge: impl FnMut(A, A) -> A,
-) -> (A, SearchStats) {
+) -> Result<Outcome<A>, MineError> {
     let n = g.num_vertices();
     let k = plan.size();
     let use_sets = cfg.opts.sets && k > 2;
@@ -222,10 +227,12 @@ pub fn mine<A: Send, H: LowLevelApi>(
         needs_root_bits,
         _acc: std::marker::PhantomData,
     };
+    let gov = budget::governance_enabled().then(|| Governor::new(&cfg.budget));
     let result = split::reduce(
         n,
         &pol,
         &engine,
+        gov.as_ref(),
         || ThreadState {
             acc: init(),
             stats: SearchStats::default(),
@@ -247,7 +254,10 @@ pub fn mine<A: Send, H: LowLevelApi>(
             }
         },
     );
-    (result.acc, result.stats)
+    match gov {
+        Some(g) => g.finish(result.acc, result.stats, "dfs"),
+        None => Ok(Outcome::complete(result.acc, result.stats)),
+    }
 }
 
 /// The DFS engine as a [`Splittable`] root task: the level-1 sequence
@@ -925,13 +935,14 @@ fn extend<A, H: LowLevelApi>(
     }
 }
 
-/// Count embeddings of a plan (the common case).
+/// Count embeddings of a plan (the common case). Same governed return
+/// contract as [`mine`].
 pub fn count<H: LowLevelApi>(
     g: &CsrGraph,
     plan: &MatchingPlan,
     cfg: &MinerConfig,
     hooks: &H,
-) -> (u64, SearchStats) {
+) -> Result<Outcome<u64>, MineError> {
     mine(
         g,
         plan,
@@ -959,7 +970,7 @@ mod tests {
     fn triangles_in_k4() {
         let g = gen::complete(4);
         let pl = plan(&library::triangle(), true, true);
-        let (c, _) = count(&g, &pl, &cfg(OptFlags::hi()), &NoHooks);
+        let (c, _) = count(&g, &pl, &cfg(OptFlags::hi()), &NoHooks).unwrap().into_parts();
         assert_eq!(c, 4); // C(4,3)
     }
 
@@ -972,7 +983,7 @@ mod tests {
         }
         let g = b.build();
         let pl = plan(&library::wedge(), true, true);
-        let (c, _) = count(&g, &pl, &cfg(OptFlags::hi()), &NoHooks);
+        let (c, _) = count(&g, &pl, &cfg(OptFlags::hi()), &NoHooks).unwrap().into_parts();
         assert_eq!(c, 6);
     }
 
@@ -981,28 +992,28 @@ mod tests {
         // triangle graph: 0 induced wedges, 3 non-induced wedge embeddings
         let g = gen::complete(3);
         let induced = plan(&library::wedge(), true, true);
-        let (ci, _) = count(&g, &induced, &cfg(OptFlags::hi()), &NoHooks);
+        let (ci, _) = count(&g, &induced, &cfg(OptFlags::hi()), &NoHooks).unwrap().into_parts();
         assert_eq!(ci, 0);
         let noninduced = plan(&library::wedge(), false, true);
-        let (cn, _) = count(&g, &noninduced, &cfg(OptFlags::hi()), &NoHooks);
+        let (cn, _) = count(&g, &noninduced, &cfg(OptFlags::hi()), &NoHooks).unwrap().into_parts();
         assert_eq!(cn, 3);
     }
 
     #[test]
     fn diamonds_in_k4_and_ring() {
         let pl = plan(&library::diamond(), false, true); // edge-induced (SL)
-        let (c, _) = count(&gen::complete(4), &pl, &cfg(OptFlags::hi()), &NoHooks);
+        let (c, _) = count(&gen::complete(4), &pl, &cfg(OptFlags::hi()), &NoHooks).unwrap().into_parts();
         assert_eq!(c, 6); // K4 contains 6 non-induced diamonds
-        let (r, _) = count(&gen::ring(8), &pl, &cfg(OptFlags::hi()), &NoHooks);
+        let (r, _) = count(&gen::ring(8), &pl, &cfg(OptFlags::hi()), &NoHooks).unwrap().into_parts();
         assert_eq!(r, 0);
     }
 
     #[test]
     fn four_cycles_in_ring() {
         let pl = plan(&library::cycle(4), false, true);
-        let (c, _) = count(&gen::ring(4), &pl, &cfg(OptFlags::hi()), &NoHooks);
+        let (c, _) = count(&gen::ring(4), &pl, &cfg(OptFlags::hi()), &NoHooks).unwrap().into_parts();
         assert_eq!(c, 1);
-        let (c8, _) = count(&gen::ring(8), &pl, &cfg(OptFlags::hi()), &NoHooks);
+        let (c8, _) = count(&gen::ring(8), &pl, &cfg(OptFlags::hi()), &NoHooks).unwrap().into_parts();
         assert_eq!(c8, 0);
     }
 
@@ -1016,11 +1027,11 @@ mod tests {
             with.opts.sets = false;
             let mut without = with;
             without.opts.mnc = false;
-            let (a, _) = count(&g, &pl, &with, &NoHooks);
-            let (b, _) = count(&g, &pl, &without, &NoHooks);
+            let (a, _) = count(&g, &pl, &with, &NoHooks).unwrap().into_parts();
+            let (b, _) = count(&g, &pl, &without, &NoHooks).unwrap().into_parts();
             assert_eq!(a, b, "pattern {pat}");
             // and the default set-centric path must match both
-            let (s, _) = count(&g, &pl, &cfg(OptFlags::hi()), &NoHooks);
+            let (s, _) = count(&g, &pl, &cfg(OptFlags::hi()), &NoHooks).unwrap().into_parts();
             assert_eq!(s, a, "set-centric vs scalar, pattern {pat}");
         }
     }
@@ -1037,10 +1048,10 @@ mod tests {
                 library::clique(4),
             ] {
                 let pl = plan(&pat, vertex_induced, true);
-                let (s, _) = count(&g, &pl, &cfg(OptFlags::hi()), &NoHooks);
+                let (s, _) = count(&g, &pl, &cfg(OptFlags::hi()), &NoHooks).unwrap().into_parts();
                 let mut scalar = cfg(OptFlags::hi());
                 scalar.opts.sets = false;
-                let (c, _) = count(&g, &pl, &scalar, &NoHooks);
+                let (c, _) = count(&g, &pl, &scalar, &NoHooks).unwrap().into_parts();
                 assert_eq!(s, c, "pattern {pat} induced={vertex_induced}");
             }
         }
@@ -1052,8 +1063,8 @@ mod tests {
         let tri = library::triangle();
         let with_sb = plan(&tri, true, true);
         let without_sb = plan(&tri, true, false);
-        let (a, _) = count(&g, &with_sb, &cfg(OptFlags::hi()), &NoHooks);
-        let (b, _) = count(&g, &without_sb, &cfg(OptFlags::automine_like()), &NoHooks);
+        let (a, _) = count(&g, &with_sb, &cfg(OptFlags::hi()), &NoHooks).unwrap().into_parts();
+        let (b, _) = count(&g, &without_sb, &cfg(OptFlags::automine_like()), &NoHooks).unwrap().into_parts();
         assert_eq!(b, a * 6, "no-SB must count every automorphism");
     }
 
@@ -1061,8 +1072,8 @@ mod tests {
     fn thread_counts_equal() {
         let g = gen::rmat(8, 8, 31, &[]);
         let pl = plan(&library::clique(4), true, true);
-        let (c1, _) = count(&g, &pl, &MinerConfig::single_thread(OptFlags::hi()), &NoHooks);
-        let (c4, _) = count(&g, &pl, &MinerConfig::custom(4, 16, OptFlags::hi()), &NoHooks);
+        let (c1, _) = count(&g, &pl, &MinerConfig::single_thread(OptFlags::hi()), &NoHooks).unwrap().into_parts();
+        let (c4, _) = count(&g, &pl, &MinerConfig::custom(4, 16, OptFlags::hi()), &NoHooks).unwrap().into_parts();
         assert_eq!(c1, c4);
     }
 
@@ -1072,7 +1083,7 @@ mod tests {
         let pl = plan(&library::triangle(), true, true);
         let mut c = cfg(OptFlags::hi().with_stats());
         c.threads = 1;
-        let (count_, stats) = count(&g, &pl, &c, &NoHooks);
+        let (count_, stats) = count(&g, &pl, &c, &NoHooks).unwrap().into_parts();
         assert_eq!(count_, stats.matches);
         assert!(stats.enumerated >= stats.matches);
     }
@@ -1087,8 +1098,8 @@ mod tests {
         }
         let g = gen::complete(6);
         let pl = plan(&library::triangle(), true, true);
-        let (all, _) = count(&g, &pl, &cfg(OptFlags::hi()), &NoHooks);
-        let (even, _) = count(&g, &pl, &cfg(OptFlags::hi()), &NoOdd);
+        let (all, _) = count(&g, &pl, &cfg(OptFlags::hi()), &NoHooks).unwrap().into_parts();
+        let (even, _) = count(&g, &pl, &cfg(OptFlags::hi()), &NoOdd).unwrap().into_parts();
         assert_eq!(all, 20); // C(6,3)
         // triangles whose level-1 and level-2 vertices are even; root free:
         // still fewer than all
@@ -1110,8 +1121,8 @@ mod tests {
                 library::tailed_triangle(),
             ] {
                 let pl = plan(&pat, vertex_induced, true);
-                let (s, _) = count(&g, &pl, &cfg(OptFlags::hi()), &NoHooks);
-                let (l, _) = count(&g, &pl, &cfg(OptFlags::lo()), &NoHooks);
+                let (s, _) = count(&g, &pl, &cfg(OptFlags::hi()), &NoHooks).unwrap().into_parts();
+                let (l, _) = count(&g, &pl, &cfg(OptFlags::lo()), &NoHooks).unwrap().into_parts();
                 assert_eq!(s, l, "pattern {pat} induced={vertex_induced}");
             }
         }
@@ -1128,8 +1139,8 @@ mod tests {
         let g = gen::rmat(7, 6, 19, &[]);
         for pat in [library::diamond(), library::cycle(4)] {
             let pl = plan(&pat, true, true);
-            let (s, _) = count(&g, &pl, &cfg(OptFlags::hi()), &NoOdd);
-            let (l, _) = count(&g, &pl, &cfg(OptFlags::lo()), &NoOdd);
+            let (s, _) = count(&g, &pl, &cfg(OptFlags::hi()), &NoOdd).unwrap().into_parts();
+            let (l, _) = count(&g, &pl, &cfg(OptFlags::lo()), &NoOdd).unwrap().into_parts();
             assert_eq!(s, l, "pattern {pat}");
         }
     }
@@ -1140,8 +1151,8 @@ mod tests {
         let pl = plan(&library::diamond(), true, true);
         let c1 = MinerConfig::single_thread(OptFlags::lo());
         let c4 = MinerConfig::custom(4, 16, OptFlags::lo());
-        let (a, _) = count(&g, &pl, &c1, &NoHooks);
-        let (b, _) = count(&g, &pl, &c4, &NoHooks);
+        let (a, _) = count(&g, &pl, &c1, &NoHooks).unwrap().into_parts();
+        let (b, _) = count(&g, &pl, &c4, &NoHooks).unwrap().into_parts();
         assert_eq!(a, b);
     }
 
@@ -1151,8 +1162,8 @@ mod tests {
         let pl = plan(&library::clique(4), true, true);
         let mut c = cfg(OptFlags::lo().with_stats());
         c.threads = 1;
-        let (hi_count, _) = count(&g, &pl, &cfg(OptFlags::hi()), &NoHooks);
-        let (lo_count, stats) = count(&g, &pl, &c, &NoHooks);
+        let (hi_count, _) = count(&g, &pl, &cfg(OptFlags::hi()), &NoHooks).unwrap().into_parts();
+        let (lo_count, stats) = count(&g, &pl, &c, &NoHooks).unwrap().into_parts();
         assert_eq!(hi_count, lo_count);
         // cliques pass the coverage level at 1, so LG fires on this
         // small graph and the universe counter moves
@@ -1186,14 +1197,14 @@ mod tests {
         ] {
             for vertex_induced in [true, false] {
                 let pl = plan(&pat, vertex_induced, true);
-                let (s, _) = count(&g, &pl, &cfg(OptFlags::hi()), &NoHooks);
+                let (s, _) = count(&g, &pl, &cfg(OptFlags::hi()), &NoHooks).unwrap().into_parts();
                 let mut scalar = cfg(OptFlags::hi());
                 scalar.opts.sets = false;
-                let (c, _) = count(&g, &pl, &scalar, &NoHooks);
+                let (c, _) = count(&g, &pl, &scalar, &NoHooks).unwrap().into_parts();
                 assert_eq!(s, c, "pattern {pat} induced={vertex_induced}");
                 let mut probe = scalar;
                 probe.opts.mnc = false;
-                let (p, _) = count(&g, &pl, &probe, &NoHooks);
+                let (p, _) = count(&g, &pl, &probe, &NoHooks).unwrap().into_parts();
                 assert_eq!(s, p, "probe path, pattern {pat} induced={vertex_induced}");
             }
         }
@@ -1220,11 +1231,11 @@ mod tests {
             for vertex_induced in [true, false] {
                 let pl = plan(&pat, vertex_induced, true);
                 let oracle_cfg = MinerConfig::custom(4, 1, OptFlags::hi()).with_steal(false);
-                let (want, _) = count(&g, &pl, &oracle_cfg, &NoHooks);
+                let (want, _) = count(&g, &pl, &oracle_cfg, &NoHooks).unwrap().into_parts();
                 for shards in [1usize, 2] {
                     let steal_cfg =
                         MinerConfig::custom(4, 1, OptFlags::hi()).with_shards(shards);
-                    let (got, _) = count(&g, &pl, &steal_cfg, &NoHooks);
+                    let (got, _) = count(&g, &pl, &steal_cfg, &NoHooks).unwrap().into_parts();
                     assert_eq!(
                         got, want,
                         "pattern {pat} induced={vertex_induced} shards={shards}"
@@ -1248,10 +1259,10 @@ mod tests {
         let g = b.build();
         for pat in [library::triangle(), library::cycle(4), library::diamond()] {
             let pl = plan(&pat, true, true);
-            let (s, _) = count(&g, &pl, &cfg(OptFlags::hi()), &NoHooks);
+            let (s, _) = count(&g, &pl, &cfg(OptFlags::hi()), &NoHooks).unwrap().into_parts();
             let mut scalar = cfg(OptFlags::hi());
             scalar.opts.sets = false;
-            let (c, _) = count(&g, &pl, &scalar, &NoHooks);
+            let (c, _) = count(&g, &pl, &scalar, &NoHooks).unwrap().into_parts();
             assert_eq!(s, c, "pattern {pat}");
         }
     }

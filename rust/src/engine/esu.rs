@@ -47,6 +47,7 @@ use crate::graph::{CsrGraph, VertexId};
 use crate::pattern::{canonical_code, library};
 use crate::util::metrics::{tag, SearchStats};
 
+use super::budget::{self, Governor, MineError, Outcome};
 use super::embedding::{pack_codes, pattern_from_packed};
 use super::extend::ExtCore;
 use super::hooks::LowLevelApi;
@@ -117,6 +118,8 @@ struct EsuState<A> {
 /// Enumerate all connected vertex-induced k-subgraphs exactly once.
 /// `leaf(acc, verts, packed_codes)` receives the embedding and its packed
 /// MEC codes (structure is fully recoverable from them — Fig. 13).
+/// Governed (PR 6): budget trips return a partial [`Outcome`], worker
+/// panics return [`MineError::WorkerPanicked`].
 pub fn esu_mine<A: Send, H: LowLevelApi>(
     g: &CsrGraph,
     k: usize,
@@ -125,10 +128,11 @@ pub fn esu_mine<A: Send, H: LowLevelApi>(
     init: impl Fn() -> A + Sync,
     leaf: impl Fn(&mut A, &[VertexId], u64) + Sync,
     mut merge: impl FnMut(A, A) -> A,
-) -> (A, SearchStats) {
+) -> Result<Outcome<A>, MineError> {
     assert!(k >= 2);
     let n = g.num_vertices();
     let pol = cfg.sched_policy();
+    let gov = budget::governance_enabled().then(|| Governor::new(&cfg.budget));
     let use_core = cfg.opts.extcore_active();
     let engine = EsuEngine {
         g,
@@ -143,6 +147,7 @@ pub fn esu_mine<A: Send, H: LowLevelApi>(
         n,
         &pol,
         &engine,
+        gov.as_ref(),
         || EsuState {
             acc: init(),
             stats: SearchStats::default(),
@@ -175,7 +180,10 @@ pub fn esu_mine<A: Send, H: LowLevelApi>(
             }
         },
     );
-    (result.acc, result.stats)
+    match gov {
+        Some(g) => g.finish(result.acc, result.stats, "esu"),
+        None => Ok(Outcome::complete(result.acc, result.stats)),
+    }
 }
 
 /// The ESU engine as a [`Splittable`] root task (PR 5): the level-1
@@ -498,13 +506,14 @@ fn esu_extend_core<A, H: LowLevelApi>(
 }
 
 /// Count all k-motifs: returns counts indexed like `all_motifs(k)`.
+/// Same governed return contract as [`esu_mine`].
 pub fn count_motifs<H: LowLevelApi>(
     g: &CsrGraph,
     k: usize,
     cfg: &MinerConfig,
     hooks: &H,
     table: &MotifTable,
-) -> (Vec<u64>, SearchStats) {
+) -> Result<Outcome<Vec<u64>>, MineError> {
     let nm = table.num_motifs;
     esu_mine(
         g,
@@ -551,7 +560,7 @@ mod tests {
     fn k3_counts_on_complete_graph() {
         let g = gen::complete(5);
         let t = MotifTable::new(3);
-        let (counts, _) = count_motifs(&g, 3, &cfg(), &NoHooks, &t);
+        let (counts, _) = count_motifs(&g, 3, &cfg(), &NoHooks, &t).unwrap().into_parts();
         assert_eq!(counts[1], 10); // C(5,3) triangles
         assert_eq!(counts[0], 0); // no induced wedges
     }
@@ -560,7 +569,7 @@ mod tests {
     fn k3_counts_on_ring() {
         let g = gen::ring(10);
         let t = MotifTable::new(3);
-        let (counts, _) = count_motifs(&g, 3, &cfg(), &NoHooks, &t);
+        let (counts, _) = count_motifs(&g, 3, &cfg(), &NoHooks, &t).unwrap().into_parts();
         assert_eq!(counts[0], 10); // one wedge per vertex
         assert_eq!(counts[1], 0);
     }
@@ -569,7 +578,7 @@ mod tests {
     fn k4_counts_on_complete_graph() {
         let g = gen::complete(6);
         let t = MotifTable::new(4);
-        let (counts, _) = count_motifs(&g, 4, &cfg(), &NoHooks, &t);
+        let (counts, _) = count_motifs(&g, 4, &cfg(), &NoHooks, &t).unwrap().into_parts();
         assert_eq!(counts[5], 15); // C(6,4) 4-cliques, everything else 0
         assert_eq!(counts[..5].iter().sum::<u64>(), 0);
     }
@@ -578,7 +587,7 @@ mod tests {
     fn k4_counts_on_ring() {
         let g = gen::ring(12);
         let t = MotifTable::new(4);
-        let (counts, _) = count_motifs(&g, 4, &cfg(), &NoHooks, &t);
+        let (counts, _) = count_motifs(&g, 4, &cfg(), &NoHooks, &t).unwrap().into_parts();
         assert_eq!(counts[1], 12); // 4-paths
         assert_eq!(counts[3], 0); // no 4-cycles in a 12-ring
         assert_eq!(counts[0], 0); // no 3-stars (max degree 2)
@@ -588,7 +597,7 @@ mod tests {
     fn total_equals_brute_force_on_random_graph() {
         let g = gen::erdos_renyi(30, 0.25, 5, &[]);
         let t = MotifTable::new(4);
-        let (counts, _) = count_motifs(&g, 4, &cfg(), &NoHooks, &t);
+        let (counts, _) = count_motifs(&g, 4, &cfg(), &NoHooks, &t).unwrap().into_parts();
         // brute force: all C(30,4) vertex subsets, keep connected induced
         let mut brute = vec![0u64; 6];
         let n = 30u32;
@@ -627,8 +636,8 @@ mod tests {
             let t = MotifTable::new(k);
             let mut oracle = cfg();
             oracle.opts.extcore = false;
-            let (want, _) = count_motifs(&g, k, &oracle, &NoHooks, &t);
-            let (got, _) = count_motifs(&g, k, &cfg(), &NoHooks, &t);
+            let (want, _) = count_motifs(&g, k, &oracle, &NoHooks, &t).unwrap().into_parts();
+            let (got, _) = count_motifs(&g, k, &cfg(), &NoHooks, &t).unwrap().into_parts();
             assert_eq!(got, want, "k={k}");
             // and with MNC off on both paths
             let mut o2 = oracle;
@@ -636,8 +645,8 @@ mod tests {
             let mut c2 = cfg();
             c2.opts.mnc = false;
             assert_eq!(
-                count_motifs(&g, k, &c2, &NoHooks, &t).0,
-                count_motifs(&g, k, &o2, &NoHooks, &t).0,
+                count_motifs(&g, k, &c2, &NoHooks, &t).unwrap().value,
+                count_motifs(&g, k, &o2, &NoHooks, &t).unwrap().value,
                 "k={k} mnc off"
             );
         }
@@ -655,8 +664,8 @@ mod tests {
         let t = MotifTable::new(4);
         let mut oracle = cfg();
         oracle.opts.extcore = false;
-        let (want, _) = count_motifs(&g, 4, &oracle, &NoOdd, &t);
-        let (got, _) = count_motifs(&g, 4, &cfg(), &NoOdd, &t);
+        let (want, _) = count_motifs(&g, 4, &oracle, &NoOdd, &t).unwrap().into_parts();
+        let (got, _) = count_motifs(&g, 4, &cfg(), &NoOdd, &t).unwrap().into_parts();
         assert_eq!(got, want);
     }
 
@@ -667,7 +676,7 @@ mod tests {
         let g = gen::rmat(7, 5, 11, &[]);
         let t = MotifTable::new(4);
         let base = MinerConfig::single_thread(OptFlags::hi().with_stats());
-        let (c0, s0) = count_motifs(&g, 4, &base, &NoHooks, &t);
+        let (c0, s0) = count_motifs(&g, 4, &base, &NoHooks, &t).unwrap().into_parts();
         assert!(s0.enumerated > 0 && s0.matches > 0 && s0.intersections > 0);
         // every expanded embedding builds exactly one child extension set
         assert!(s0.intersections <= s0.enumerated);
@@ -675,7 +684,7 @@ mod tests {
             let mut c = base;
             c.opts.mnc = mnc;
             c.opts.extcore = extcore;
-            let (counts, stats) = count_motifs(&g, 4, &c, &NoHooks, &t);
+            let (counts, stats) = count_motifs(&g, 4, &c, &NoHooks, &t).unwrap().into_parts();
             assert_eq!(counts, c0, "mnc={mnc} extcore={extcore}");
             assert_eq!(stats, s0, "mnc={mnc} extcore={extcore}");
         }
@@ -692,7 +701,8 @@ mod tests {
             &NoHooks,
             &t,
         )
-        .0;
+        .unwrap()
+        .value;
         let c4 = count_motifs(
             &g,
             4,
@@ -700,7 +710,8 @@ mod tests {
             &NoHooks,
             &t,
         )
-        .0;
+        .unwrap()
+        .value;
         assert_eq!(c1, c4);
     }
 }

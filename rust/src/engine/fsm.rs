@@ -47,13 +47,14 @@
 
 use std::collections::HashMap;
 
-use crate::exec::sched::WorkerCtx;
+use crate::exec::sched::{self, Task, WorkerCtx};
 use crate::exec::split::{self, SplitDriver, Splittable};
 use crate::graph::{CsrGraph, VertexId};
 use crate::pattern::{canonical_code, CanonCode, Pattern};
+use crate::util::fault;
 use crate::util::metrics::{tag, SearchStats};
-use crate::util::pool::parallel_reduce;
 
+use super::budget::{self, Governor, MineError, Outcome};
 use super::extend::{EmbArena, ExtCore};
 use super::opts::MinerConfig;
 use super::support::DomainSupport;
@@ -134,12 +135,15 @@ fn build_roots(g: &CsrGraph, min_support: u64) -> Vec<Root> {
 /// edges and MNI support > `min_support`. Thread count, scheduler
 /// knobs, and the extension-core toggle come from `cfg` (the root
 /// grain is pinned to 1: root-pattern tasks are coarse).
+/// Governed (PR 6): budget trips return a partial [`Outcome`] (the
+/// frequent patterns found so far), worker panics return
+/// [`MineError::WorkerPanicked`].
 pub fn mine_fsm(
     g: &CsrGraph,
     max_edges: usize,
     min_support: u64,
     cfg: &MinerConfig,
-) -> FsmResult {
+) -> Result<Outcome<Vec<FrequentPattern>>, MineError> {
     assert!(g.is_labeled(), "FSM requires a vertex-labeled graph");
     let root_list = build_roots(g, min_support);
     let engine = FsmEngine {
@@ -152,15 +156,26 @@ pub fn mine_fsm(
     let mut pol_cfg = *cfg;
     pol_cfg.chunk = 1;
     let pol = pol_cfg.sched_policy();
-    let state = split::reduce(root_list.len(), &pol, &engine, FsmState::default, |mut a, b| {
-        a.out.frequent.extend(b.out.frequent);
-        a.out.stats.merge(&b.out.stats);
-        a
-    });
+    let gov = budget::governance_enabled().then(|| Governor::new(&cfg.budget));
+    let state = split::reduce(
+        root_list.len(),
+        &pol,
+        &engine,
+        gov.as_ref(),
+        FsmState::default,
+        |mut a, b| {
+            a.out.frequent.extend(b.out.frequent);
+            a.out.stats.merge(&b.out.stats);
+            a
+        },
+    );
     let mut out = state.out;
     // deterministic output order
     out.frequent.sort_by(|a, b| a.code.cmp(&b.code));
-    out
+    match gov {
+        Some(g) => g.finish(out.frequent, out.stats, "fsm"),
+        None => Ok(Outcome::complete(out.frequent, out.stats)),
+    }
 }
 
 /// Per-worker FSM state: the result accumulator plus the reusable
@@ -258,8 +273,11 @@ impl FsmEngine<'_> {
             }
         } else {
             // the scalar oracle (and the no-subtree case) runs whole
-            // roots and never publishes
+            // roots and never publishes; poll per child like the driver
             for child in &children {
+                if ctx.cancelled() {
+                    break;
+                }
                 self.emit_and_recurse(out, core, child);
             }
         }
@@ -351,6 +369,10 @@ pub fn expand_children(
     core: &mut ExtCore,
     use_core: bool,
 ) -> Vec<ChildNode> {
+    // the FSM fault-injection point (PR 6): one crossing per
+    // sub-pattern expansion, covering root regeneration on split
+    // re-entry as well as ordinary tree descent
+    fault::point(fault::Stage::FsmRegen);
     let p_verts = pattern.num_vertices();
     let parent_code = canonical_code(pattern);
 
@@ -488,14 +510,22 @@ pub fn expand_children(
 /// for each DFS iteration ... essentially BFS-like", §6.2). All
 /// sub-patterns of one edge count are expanded before any of the next —
 /// maximal parallelism, full materialization of every level.
+/// Governed (PR 6) like [`mine_fsm`]: the budget is checked once per
+/// delivered task and once per expanded parent; a trip finishes the
+/// current level's fan-out and returns the patterns emitted so far as
+/// a partial [`Outcome`].
 pub fn mine_fsm_bfs(
     g: &CsrGraph,
     max_edges: usize,
     min_support: u64,
     cfg: &MinerConfig,
-) -> FsmResult {
+) -> Result<Outcome<Vec<FrequentPattern>>, MineError> {
     assert!(g.is_labeled(), "FSM requires a vertex-labeled graph");
     let use_core = cfg.opts.extcore_active();
+    let mut pol_cfg = *cfg;
+    pol_cfg.chunk = 1;
+    let pol = pol_cfg.sched_policy();
+    let gov = budget::governance_enabled().then(|| Governor::new(&cfg.budget));
     let mut result = FsmResult::default();
     let mut level: Vec<(Pattern, EmbArena)> = Vec::new();
     for r in build_roots(g, min_support) {
@@ -512,17 +542,35 @@ pub fn mine_fsm_bfs(
         level.push((r.pattern, r.embeddings));
     }
     for _edge_count in 1..max_edges {
-        let expanded = parallel_reduce(
+        if gov.as_ref().is_some_and(|g| g.is_cancelled()) {
+            break;
+        }
+        let expanded = sched::reduce_governed(
             level.len(),
-            cfg.threads,
-            1,
+            &pol,
+            gov.as_ref(),
             || (Vec::new(), SearchStats::default(), ExtCore::new()),
-            |acc: &mut (Vec<ChildNode>, SearchStats, ExtCore), i| {
-                let (out, stats, core) = acc;
-                let (p, embs) = &level[i];
-                tag::with_engine(tag::Engine::Fsm, || {
-                    out.extend(expand_children(g, p, embs, min_support, stats, core, use_core));
-                });
+            |acc: &mut (Vec<ChildNode>, SearchStats, ExtCore), ctx, task| {
+                if let Task::Roots { start, end } = task {
+                    let (out, stats, core) = acc;
+                    for i in start..end {
+                        if ctx.cancelled() {
+                            break;
+                        }
+                        let (p, embs) = &level[i];
+                        tag::with_engine(tag::Engine::Fsm, || {
+                            out.extend(expand_children(
+                                g,
+                                p,
+                                embs,
+                                min_support,
+                                stats,
+                                core,
+                                use_core,
+                            ));
+                        });
+                    }
+                }
             },
             |mut a, b| {
                 a.0.extend(b.0);
@@ -547,7 +595,10 @@ pub fn mine_fsm_bfs(
         level = next;
     }
     result.frequent.sort_by(|a, b| a.code.cmp(&b.code));
-    result
+    match gov {
+        Some(g) => g.finish(result.frequent, result.stats, "fsm"),
+        None => Ok(Outcome::complete(result.frequent, result.stats)),
+    }
 }
 
 fn grow_pattern(p: &Pattern, attach: usize, label: u32) -> Pattern {
@@ -622,28 +673,28 @@ mod tests {
     #[test]
     fn single_edge_patterns_found() {
         let g = labeled_triangle_chain();
-        let r = mine_fsm(&g, 1, 0, &cfg(1));
+        let r = mine_fsm(&g, 1, 0, &cfg(1)).unwrap().value;
         // distinct labeled edges: (1,2),(2,3),(1,3),(3,1)... labels:
         // edges (0,1)=1-2,(1,2)=2-3,(2,0)=3-1,(2,3)=3-1,(3,4)=1-2,(4,2)=2-3
         // distinct: {1,2},{2,3},{1,3} -> 3 patterns
-        assert_eq!(r.frequent.len(), 3);
-        assert!(r.frequent.iter().all(|f| f.support >= 1));
+        assert_eq!(r.len(), 3);
+        assert!(r.iter().all(|f| f.support >= 1));
     }
 
     #[test]
     fn min_support_filters() {
         let g = labeled_triangle_chain();
-        let all = mine_fsm(&g, 2, 0, &cfg(1));
-        let some = mine_fsm(&g, 2, 1, &cfg(1));
-        assert!(some.frequent.len() < all.frequent.len());
-        assert!(some.frequent.iter().all(|f| f.support > 1));
+        let all = mine_fsm(&g, 2, 0, &cfg(1)).unwrap().value;
+        let some = mine_fsm(&g, 2, 1, &cfg(1)).unwrap().value;
+        assert!(some.len() < all.len());
+        assert!(some.iter().all(|f| f.support > 1));
     }
 
     #[test]
     fn patterns_unique_by_code() {
         let g = gen::erdos_renyi(40, 0.15, 11, &[1, 2]);
-        let r = mine_fsm(&g, 3, 1, &cfg(2));
-        let mut codes: Vec<_> = r.frequent.iter().map(|f| f.code.clone()).collect();
+        let r = mine_fsm(&g, 3, 1, &cfg(2)).unwrap().value;
+        let mut codes: Vec<_> = r.iter().map(|f| f.code.clone()).collect();
         let before = codes.len();
         codes.sort();
         codes.dedup();
@@ -653,10 +704,10 @@ mod tests {
     #[test]
     fn thread_count_invariant() {
         let g = gen::erdos_renyi(40, 0.12, 19, &[1, 2, 3]);
-        let a = mine_fsm(&g, 3, 1, &cfg(1));
-        let b = mine_fsm(&g, 3, 1, &cfg(4));
-        let sa: Vec<_> = a.frequent.iter().map(|f| (f.code.clone(), f.support)).collect();
-        let sb: Vec<_> = b.frequent.iter().map(|f| (f.code.clone(), f.support)).collect();
+        let a = mine_fsm(&g, 3, 1, &cfg(1)).unwrap().value;
+        let b = mine_fsm(&g, 3, 1, &cfg(4)).unwrap().value;
+        let sa: Vec<_> = a.iter().map(|f| (f.code.clone(), f.support)).collect();
+        let sb: Vec<_> = b.iter().map(|f| (f.code.clone(), f.support)).collect();
         assert_eq!(sa, sb);
     }
 
@@ -664,17 +715,17 @@ mod tests {
     fn extension_core_matches_scalar_oracle() {
         let g = gen::erdos_renyi(45, 0.12, 7, &[1, 2, 3]);
         for sigma in [0u64, 1, 3] {
-            let core = mine_fsm(&g, 3, sigma, &cfg(2));
+            let core = mine_fsm(&g, 3, sigma, &cfg(2)).unwrap().value;
             let mut oracle_cfg = cfg(2);
             oracle_cfg.opts.extcore = false;
-            let oracle = mine_fsm(&g, 3, sigma, &oracle_cfg);
+            let oracle = mine_fsm(&g, 3, sigma, &oracle_cfg).unwrap().value;
             let sc: Vec<_> = core
-                .frequent
+                
                 .iter()
                 .map(|f| (f.code.clone(), f.support, f.embeddings))
                 .collect();
             let so: Vec<_> = oracle
-                .frequent
+                
                 .iter()
                 .map(|f| (f.code.clone(), f.support, f.embeddings))
                 .collect();
@@ -711,9 +762,9 @@ mod tests {
             b.add_edge(0, v);
         }
         let g = b.with_labels(vec![9, 1, 1, 1, 1]).build();
-        let r = mine_fsm(&g, 2, 0, &cfg(1));
+        let r = mine_fsm(&g, 2, 0, &cfg(1)).unwrap().value;
         let wedge = r
-            .frequent
+            
             .iter()
             .find(|f| f.pattern.num_vertices() == 3)
             .expect("wedge pattern found");

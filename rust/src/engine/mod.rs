@@ -13,8 +13,12 @@
 //! * [`embedding`], [`mnc`] — MEC codes and the MNC connectivity map
 //! * [`support`] — count and MNI/domain supports
 //! * [`opts`] — optimization flags and presets (paper Table 3)
+//! * [`budget`] — query governance (PR 6): per-run budgets, cooperative
+//!   cancellation, worker panic isolation, and the unified
+//!   [`MineError`] surface every engine entry point returns
 
 pub mod bfs;
+pub mod budget;
 pub mod dfs;
 pub mod embedding;
 pub mod esu;
@@ -27,5 +31,6 @@ pub mod opts;
 pub mod spec;
 pub mod support;
 
+pub use budget::{Budget, CancelReason, CancelToken, MineError, Outcome};
 pub use opts::{MinerConfig, OptFlags};
 pub use spec::ProblemSpec;

@@ -27,6 +27,9 @@
 //! assert_ne!(ablated, OptFlags::hi());
 //! ```
 
+use std::time::Duration;
+
+use crate::engine::budget::Budget;
 use crate::exec::sched;
 
 /// One switch per optimization of the paper's Table 3 (high-level:
@@ -167,14 +170,12 @@ pub struct MinerConfig {
     /// [`MinerConfig::steal`]; `None` uses the detected topology
     /// ([`crate::exec::topology`], `SANDSLASH_SHARDS`).
     pub shards: Option<usize>,
-    /// Byte budget for one materialized BFS level
-    /// ([`crate::engine::bfs`], PR 5): the level-synchronous engine
-    /// refuses to build a level whose estimated footprint exceeds it,
-    /// returning a diagnosis instead of OOM-killing the host. `None`
-    /// resolves the `SANDSLASH_BFS_CAP` environment override and then
-    /// the built-in default
-    /// ([`crate::engine::bfs::DEFAULT_BFS_CAP_BYTES`]).
-    pub bfs_cap: Option<usize>,
+    /// Per-run resource limits (PR 6): wall-clock deadline, scheduler
+    /// task budget, and the BFS level byte budget (the PR-5 `bfs_cap`,
+    /// absorbed into [`Budget::bfs_bytes`]). Constructors seed it from
+    /// `SANDSLASH_DEADLINE_MS` / `SANDSLASH_MAX_TASKS`; all limits
+    /// default to unlimited.
+    pub budget: Budget,
     /// Optimization switches (paper Table 3).
     pub opts: OptFlags,
 }
@@ -188,20 +189,27 @@ impl MinerConfig {
             chunk: crate::util::pool::default_chunk(),
             steal: true,
             shards: None,
-            bfs_cap: None,
+            budget: Budget::from_env(),
             opts,
         }
     }
 
     /// One worker, one chunk — deterministic sequential execution.
     pub fn single_thread(opts: OptFlags) -> Self {
-        Self { threads: 1, chunk: usize::MAX, steal: true, shards: None, bfs_cap: None, opts }
+        Self {
+            threads: 1,
+            chunk: usize::MAX,
+            steal: true,
+            shards: None,
+            budget: Budget::from_env(),
+            opts,
+        }
     }
 
     /// Explicit thread count and grain (tests and sweeps); scheduler
     /// knobs stay at their defaults (stealing on, topology shards).
     pub fn custom(threads: usize, chunk: usize, opts: OptFlags) -> Self {
-        Self { threads, chunk, steal: true, shards: None, bfs_cap: None, opts }
+        Self { threads, chunk, steal: true, shards: None, budget: Budget::from_env(), opts }
     }
 
     /// This configuration with an explicit thread count.
@@ -226,7 +234,28 @@ impl MinerConfig {
     /// This configuration with an explicit BFS level byte budget
     /// (overrides the `SANDSLASH_BFS_CAP` environment resolution).
     pub fn with_bfs_cap(mut self, bytes: usize) -> Self {
-        self.bfs_cap = Some(bytes);
+        self.budget.bfs_bytes = Some(bytes);
+        self
+    }
+
+    /// This configuration under an explicit [`Budget`] (replaces every
+    /// limit at once).
+    pub fn with_budget(mut self, budget: Budget) -> Self {
+        self.budget = budget;
+        self
+    }
+
+    /// This configuration with a wall-clock deadline (the clock starts
+    /// when the engine entry point builds its governor).
+    pub fn with_deadline(mut self, deadline: Duration) -> Self {
+        self.budget.deadline = Some(deadline);
+        self
+    }
+
+    /// This configuration with a scheduler task budget (claimed
+    /// blocks + split tasks + BFS expansion blocks).
+    pub fn with_max_tasks(mut self, max_tasks: u64) -> Self {
+        self.budget.max_tasks = Some(max_tasks);
         self
     }
 
@@ -274,10 +303,20 @@ mod tests {
     }
 
     #[test]
-    fn bfs_cap_knob_defaults_unset_and_builds() {
+    fn budget_knobs_default_unset_and_build() {
         let cfg = MinerConfig::custom(2, 8, OptFlags::hi());
-        assert_eq!(cfg.bfs_cap, None);
-        assert_eq!(cfg.with_bfs_cap(1 << 20).bfs_cap, Some(1 << 20));
+        // SANDSLASH_DEADLINE_MS / SANDSLASH_MAX_TASKS are unset in the
+        // test environment, so the default budget is unlimited
+        assert_eq!(cfg.budget.bfs_bytes, None);
+        assert_eq!(cfg.with_bfs_cap(1 << 20).budget.bfs_bytes, Some(1 << 20));
+        let limited = cfg
+            .with_deadline(Duration::from_millis(250))
+            .with_max_tasks(64);
+        assert_eq!(limited.budget.deadline, Some(Duration::from_millis(250)));
+        assert_eq!(limited.budget.max_tasks, Some(64));
+        assert!(limited.budget.is_limited());
+        let replaced = limited.with_budget(Budget::default());
+        assert!(!replaced.budget.is_limited());
     }
 
     #[test]

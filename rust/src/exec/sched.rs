@@ -40,12 +40,28 @@
 //! split publish) bumps a counter in [`crate::util::metrics::sched`],
 //! so tests and benches assert that stealing actually fires instead of
 //! trusting that it might.
+//!
+//! **Query governance (PR 6).** [`reduce_governed`] threads an optional
+//! [`Governor`] through every execution path (sequential, cursor
+//! oracle, stealing pool): each delivered task is charged against the
+//! run's deadline/task budget before the body runs, and worker bodies
+//! execute under `catch_unwind`, so a panicking hook records its
+//! payload (first panic wins), flips the shared cancel token, drains
+//! the panicking worker's own deque, and lets the run terminate through
+//! the normal `active == 0` protocol instead of poisoning the deque
+//! mutexes and hanging the idle sweep. Ungoverned pool runs keep the
+//! propagate-to-caller contract by re-raising the captured payload with
+//! `resume_unwind` after the scope joins; with no governor present the
+//! hot path is bit-identical to PR 5 ([`reduce`] forwards `gov: None`).
 
+use std::any::Any;
 use std::cell::Cell;
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Mutex, OnceLock};
 
+use crate::engine::budget::Governor;
 use crate::util::metrics::sched as counters;
 use crate::util::rng::Rng;
 
@@ -201,9 +217,20 @@ pub struct WorkerCtx<'p> {
     /// Stable worker id in `0..threads`.
     pub worker: usize,
     pool: Option<&'p Pool>,
+    gov: Option<&'p Governor>,
 }
 
 impl WorkerCtx<'_> {
+    /// Whether the run's governor has tripped (deadline, task budget,
+    /// caller token, or a caught worker panic). One relaxed load —
+    /// engine bodies poll this at the sites the split gate already
+    /// polls (per level-1 candidate, per claimed block, per BFS level)
+    /// and bail out early. Always `false` in ungoverned runs.
+    #[inline]
+    pub fn cancelled(&self) -> bool {
+        self.gov.is_some_and(|g| g.is_cancelled())
+    }
+
     /// Whether a starving worker is waiting for work *and* this
     /// worker's own deque has nothing left to steal — the signal that
     /// publishing a level-1 suffix would actually relieve someone
@@ -268,6 +295,17 @@ struct Pool {
     /// finding nothing — only a counted worker can hold or publish
     /// work, so once both hold, no work exists and none can appear.
     active: AtomicUsize,
+    /// First panic payload caught from a worker body in an *ungoverned*
+    /// run, re-raised on the caller thread after the scope joins — the
+    /// pre-PR-6 propagate contract, minus the poisoned deque mutexes
+    /// and the `active`-count hang a mid-task unwind used to cause.
+    /// Governed runs stringify the payload into the [`Governor`]
+    /// instead.
+    panic_payload: Mutex<Option<Box<dyn Any + Send>>>,
+    /// Raised when any worker body panics, so every worker (governed or
+    /// not) stops claiming at its next loop check instead of draining
+    /// the remaining root space for a run whose result is already lost.
+    stop: AtomicBool,
     grain: usize,
     block: usize,
 }
@@ -298,6 +336,8 @@ impl Pool {
             shard_workers,
             gate: SplitGate::new(),
             active: AtomicUsize::new(0),
+            panic_payload: Mutex::new(None),
+            stop: AtomicBool::new(false),
             grain,
             block: grain.saturating_mul(BLOCK_FACTOR),
         }
@@ -427,6 +467,42 @@ impl Pool {
         }
         None
     }
+
+    /// Record a caught worker-body panic: drain the panicking worker's
+    /// own deque (its queued sub-ranges belong to an abandoned run),
+    /// keep the first payload — stringified into the governor when one
+    /// is present, boxed for `resume_unwind` otherwise — and raise the
+    /// pool stop flag. The worker then decrements `active` and exits
+    /// through the normal termination protocol.
+    fn note_worker_panic(&self, w: usize, payload: Box<dyn Any + Send>, gov: Option<&Governor>) {
+        {
+            let mut d = self.queues[w].deque.lock().unwrap_or_else(|e| e.into_inner());
+            d.clear();
+            self.queues[w].len.store(0, Ordering::Relaxed);
+        }
+        match gov {
+            Some(g) => g.note_panic(panic_message(payload.as_ref())),
+            None => {
+                let mut slot = self.panic_payload.lock().unwrap_or_else(|e| e.into_inner());
+                if slot.is_none() {
+                    *slot = Some(payload);
+                }
+            }
+        }
+        self.stop.store(true, Ordering::SeqCst);
+    }
+}
+
+/// Best-effort human-readable form of a panic payload: the `&str` and
+/// `String` payloads `panic!` produces, a marker for anything else.
+fn panic_message(payload: &(dyn Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
 }
 
 /// Execute one task: splits go straight to the body; root ranges are
@@ -459,11 +535,12 @@ fn run_task<A>(
 fn worker_loop<A>(
     pool: &Pool,
     w: usize,
+    gov: Option<&Governor>,
     init: &(impl Fn() -> A + Sync),
     body: &(impl Fn(&mut A, &WorkerCtx<'_>, Task) + Sync),
 ) -> A {
     let mut acc = init();
-    let ctx = WorkerCtx { worker: w, pool: Some(pool) };
+    let ctx = WorkerCtx { worker: w, pool: Some(pool), gov };
     // worker-seeded xoshiro: victim selection must differ per worker or
     // thieves convoy on one victim's lock
     let mut rng = Rng::seeded(0x9E37_79B9_7F4A_7C15 ^ (w as u64).wrapping_mul(0x0A07_61D6_478B_D642));
@@ -471,7 +548,10 @@ fn worker_loop<A>(
     let mut idle = 0u32;
     // Acquire-and-run under the `active` count: raised BEFORE the sweep
     // so a claimed task is never invisible to peers' termination checks
-    // (see the `Pool::active` docs). Returns whether a task ran.
+    // (see the `Pool::active` docs). Returns whether a task ran. The
+    // body runs under `catch_unwind`: an unwinding hook must not skip
+    // the `active` decrement, or every peer spins forever waiting for
+    // `active == 0` (the pre-PR-6 failure mode).
     let mut try_work = |acc: &mut A, hungry: &mut bool, thorough: bool| -> bool {
         pool.active.fetch_add(1, Ordering::SeqCst);
         match pool.find_work(w, &mut rng, thorough) {
@@ -480,7 +560,10 @@ fn worker_loop<A>(
                     pool.gate.deregister();
                     *hungry = false;
                 }
-                run_task(pool, task, acc, &ctx, body);
+                let run = catch_unwind(AssertUnwindSafe(|| run_task(pool, task, acc, &ctx, body)));
+                if let Err(payload) = run {
+                    pool.note_worker_panic(w, payload, gov);
+                }
                 pool.active.fetch_sub(1, Ordering::SeqCst);
                 true
             }
@@ -491,6 +574,12 @@ fn worker_loop<A>(
         }
     };
     loop {
+        // a caught panic (any run) or a tripped governor (deadline,
+        // budget, caller) stops claiming; tasks still queued are
+        // abandoned — the run's result is partial or lost either way
+        if pool.stop.load(Ordering::Relaxed) || ctx.cancelled() {
+            break;
+        }
         if try_work(&mut acc, &mut hungry, false) {
             idle = 0;
             continue;
@@ -522,32 +611,57 @@ fn worker_loop<A>(
     acc
 }
 
-/// The seed scheduler, kept verbatim as the scheduling oracle: one
-/// global cursor, fixed `chunk`-sized claims, workers exit when the
-/// cursor drains. No deques, no shards, no splits — every count must
-/// match it exactly under any stealing configuration.
+/// The seed scheduler, kept as the scheduling oracle: one global
+/// cursor, fixed `chunk`-sized claims, workers exit when the cursor
+/// drains. No deques, no shards, no splits — every count must match it
+/// exactly under any stealing configuration. Governed runs honor the
+/// same token/budget as the stealing pool (so core-vs-oracle
+/// differential tests compare like with like) via a separate loop
+/// body; the ungoverned loop is the seed path verbatim.
 fn cursor_reduce<A: Send>(
     n: usize,
     threads: usize,
     chunk: usize,
+    gov: Option<&Governor>,
     init: &(impl Fn() -> A + Sync),
     body: &(impl Fn(&mut A, &WorkerCtx<'_>, Task) + Sync),
     merge: impl FnMut(A, A) -> A,
 ) -> A {
     let cursor = AtomicUsize::new(0);
+    let stop = AtomicBool::new(false);
     let results: Vec<A> = std::thread::scope(|scope| {
         let handles: Vec<_> = (0..threads)
             .map(|tid| {
                 let cursor = &cursor;
+                let stop = &stop;
                 scope.spawn(move || {
                     let mut acc = init();
-                    let ctx = WorkerCtx { worker: tid, pool: None };
-                    loop {
-                        let start = cursor.fetch_add(chunk, Ordering::Relaxed);
-                        if start >= n {
-                            break;
-                        }
-                        body(&mut acc, &ctx, Task::Roots { start, end: (start + chunk).min(n) });
+                    let ctx = WorkerCtx { worker: tid, pool: None, gov };
+                    match gov {
+                        None => loop {
+                            let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+                            if start >= n {
+                                break;
+                            }
+                            body(&mut acc, &ctx, Task::Roots { start, end: (start + chunk).min(n) });
+                        },
+                        Some(g) => loop {
+                            if stop.load(Ordering::Relaxed) || g.is_cancelled() {
+                                break;
+                            }
+                            let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+                            if start >= n {
+                                break;
+                            }
+                            let task = Task::Roots { start, end: (start + chunk).min(n) };
+                            let run =
+                                catch_unwind(AssertUnwindSafe(|| body(&mut acc, &ctx, task)));
+                            if let Err(payload) = run {
+                                g.note_panic(panic_message(payload.as_ref()));
+                                stop.store(true, Ordering::SeqCst);
+                                break;
+                            }
+                        },
                     }
                     acc
                 })
@@ -570,7 +684,8 @@ fn fold<A>(results: Vec<A>, mut merge: impl FnMut(A, A) -> A) -> A {
 /// (no synchronization on the mining path). Runs sequentially when
 /// `threads == 1` or `n <= chunk` (bit-for-bit the pre-PR-4 contract),
 /// on the cursor oracle when `pol.steal` is off, and on the sharded
-/// stealing pool otherwise.
+/// stealing pool otherwise. Ungoverned: forwards to
+/// [`reduce_governed`] with no [`Governor`].
 pub fn reduce<A: Send>(
     n: usize,
     pol: &SchedPolicy,
@@ -578,18 +693,74 @@ pub fn reduce<A: Send>(
     body: impl Fn(&mut A, &WorkerCtx<'_>, Task) + Sync,
     merge: impl FnMut(A, A) -> A,
 ) -> A {
+    reduce_governed(n, pol, None, init, body, merge)
+}
+
+/// [`reduce`] under an optional [`Governor`] (PR 6): every delivered
+/// task — a grain-sized root range, a published split, a BFS expansion
+/// block — is charged with [`Governor::admit`] before the body runs,
+/// and worker bodies execute under `catch_unwind` so a panicking hook
+/// becomes a recorded cancellation instead of a poisoned pool. With
+/// `gov: None` this is exactly [`reduce`]: no charges, no catching
+/// (pool runs still catch, then re-raise after the scope joins — the
+/// propagate contract with the hang fixed), no per-task branches
+/// beyond one `Option` test.
+///
+/// Accumulators of tasks whose body unwound are still merged: the
+/// governed caller discards the merged value via
+/// [`Governor::finish`](crate::engine::budget::Governor::finish)
+/// returning `Err`, so a half-updated accumulator is never observable.
+pub fn reduce_governed<A: Send>(
+    n: usize,
+    pol: &SchedPolicy,
+    gov: Option<&Governor>,
+    init: impl Fn() -> A + Sync,
+    body: impl Fn(&mut A, &WorkerCtx<'_>, Task) + Sync,
+    merge: impl FnMut(A, A) -> A,
+) -> A {
     let threads = pol.threads.max(1);
     let chunk = pol.chunk.max(1);
+    // one admission charge per delivered task, on every path below
+    let body = |acc: &mut A, ctx: &WorkerCtx<'_>, task: Task| {
+        if let Some(g) = ctx.gov {
+            if !g.admit() {
+                return;
+            }
+        }
+        body(acc, ctx, task);
+    };
     if threads == 1 || n <= chunk {
         let mut acc = init();
         if n > 0 {
-            let ctx = WorkerCtx { worker: 0, pool: None };
-            body(&mut acc, &ctx, Task::Roots { start: 0, end: n });
+            let ctx = WorkerCtx { worker: 0, pool: None, gov };
+            match gov {
+                None => body(&mut acc, &ctx, Task::Roots { start: 0, end: n }),
+                Some(g) => {
+                    // chunked so deadlines/budgets trip mid-run even on
+                    // one thread; panic isolation must hold at
+                    // `threads == 1` too (the governance suite sweeps
+                    // the full thread matrix)
+                    let run = catch_unwind(AssertUnwindSafe(|| {
+                        let mut start = 0usize;
+                        while start < n {
+                            if g.is_cancelled() {
+                                break;
+                            }
+                            let end = start.saturating_add(chunk).min(n);
+                            body(&mut acc, &ctx, Task::Roots { start, end });
+                            start = end;
+                        }
+                    }));
+                    if let Err(payload) = run {
+                        g.note_panic(panic_message(payload.as_ref()));
+                    }
+                }
+            }
         }
         return acc;
     }
     if !pol.steal {
-        return cursor_reduce(n, threads, chunk, &init, &body, merge);
+        return cursor_reduce(n, threads, chunk, gov, &init, &body, merge);
     }
     let pool = Pool::new(n, pol);
     let results: Vec<A> = std::thread::scope(|scope| {
@@ -598,12 +769,17 @@ pub fn reduce<A: Send>(
                 let pool = &pool;
                 let init = &init;
                 let body = &body;
-                scope.spawn(move || worker_loop(pool, w, init, body))
+                scope.spawn(move || worker_loop(pool, w, gov, init, body))
             })
             .collect();
         handles.into_iter().map(|h| h.join().unwrap()).collect()
     });
-    fold(results, merge)
+    let result = fold(results, merge);
+    let payload = pool.panic_payload.lock().unwrap_or_else(|e| e.into_inner()).take();
+    if let Some(payload) = payload {
+        resume_unwind(payload);
+    }
+    result
 }
 
 /// Side-effect-only companion to [`reduce`]: run `f(worker, index)`
@@ -693,9 +869,120 @@ mod tests {
 
     #[test]
     fn split_protocol_is_inert_without_a_pool() {
-        let ctx = WorkerCtx { worker: 0, pool: None };
+        let ctx = WorkerCtx { worker: 0, pool: None, gov: None };
         assert!(!ctx.split_requested());
         assert!(!ctx.publish_split(0, 0, 10));
+        assert!(!ctx.cancelled());
+    }
+
+    #[test]
+    fn ungoverned_pool_panic_propagates_after_clean_join() {
+        // pre-PR-6 this hung: the unwinding worker never decremented
+        // `active`, so peers spun forever in the idle sweep. Now the
+        // payload is caught, the pool joins, and the panic re-raises on
+        // the caller thread.
+        let pol = SchedPolicy { threads: 4, chunk: 1, steal: true, shards: 2 };
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            reduce(
+                1024,
+                &pol,
+                || 0u64,
+                |acc, _, task| {
+                    if let Task::Roots { start, end } = task {
+                        for i in start..end {
+                            if i == 500 {
+                                panic!("hook failure at root 500");
+                            }
+                            *acc += 1;
+                        }
+                    }
+                },
+                |a, b| a + b,
+            )
+        }));
+        let payload = caught.expect_err("worker panic must propagate to the caller");
+        assert_eq!(panic_message(payload.as_ref()), "hook failure at root 500");
+    }
+
+    #[test]
+    fn governed_panic_is_recorded_not_propagated() {
+        use crate::engine::budget::{Budget, CancelReason, Governor};
+        for (threads, steal) in [(1usize, true), (4, true), (4, false)] {
+            let gov = Governor::new(&Budget::default());
+            let pol = SchedPolicy { threads, chunk: 1, steal, shards: 2 };
+            let total = reduce_governed(
+                512,
+                &pol,
+                Some(&gov),
+                || 0u64,
+                |acc, _, task| {
+                    if let Task::Roots { start, end } = task {
+                        for i in start..end {
+                            if i == 100 {
+                                panic!("governed hook failure");
+                            }
+                            *acc += 1;
+                        }
+                    }
+                },
+                |a, b| a + b,
+            );
+            // the run survives and merges; the governor holds the cause
+            assert!(total < 512, "threads={threads} steal={steal}");
+            assert_eq!(gov.cancelled(), Some(CancelReason::WorkerPanic));
+        }
+    }
+
+    #[test]
+    fn task_budget_bounds_delivered_tasks_on_every_path() {
+        use crate::engine::budget::{Budget, CancelReason, Governor};
+        for (threads, steal) in [(1usize, true), (4, true), (4, false)] {
+            let budget = Budget { max_tasks: Some(8), ..Budget::default() };
+            let gov = Governor::new(&budget);
+            let pol = SchedPolicy { threads, chunk: 4, steal, shards: 1 };
+            let total = reduce_governed(
+                100_000,
+                &pol,
+                Some(&gov),
+                || 0u64,
+                |acc, _, task| {
+                    if let Task::Roots { start, end } = task {
+                        *acc += (end - start) as u64;
+                    }
+                },
+                |a, b| a + b,
+            );
+            // ≤ 8 admitted tasks × ≤ block-grain roots each, far below n
+            assert!(total < 100_000, "threads={threads} steal={steal} total={total}");
+            assert_eq!(gov.cancelled(), Some(CancelReason::TaskBudget));
+        }
+    }
+
+    #[test]
+    fn unlimited_governor_changes_nothing() {
+        use crate::engine::budget::{Budget, Governor};
+        let n = 10_000usize;
+        let want = (n as u64 - 1) * n as u64 / 2;
+        for steal in [false, true] {
+            let gov = Governor::new(&Budget::default());
+            let pol = SchedPolicy { threads: 4, chunk: 16, steal, shards: 2 };
+            let got = reduce_governed(
+                n,
+                &pol,
+                Some(&gov),
+                || 0u64,
+                |acc, _, task| {
+                    if let Task::Roots { start, end } = task {
+                        for i in start..end {
+                            *acc += i as u64;
+                        }
+                    }
+                },
+                |a, b| a + b,
+            );
+            assert_eq!(got, want, "steal={steal}");
+            assert_eq!(gov.cancelled(), None);
+        }
     }
 
     #[test]

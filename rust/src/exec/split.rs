@@ -62,6 +62,9 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
+use crate::engine::budget::Governor;
+use crate::util::fault;
+
 use super::sched::{self, SchedPolicy, Task, WorkerCtx};
 
 /// Count of currently-starving workers, shared by one scheduler pool.
@@ -125,10 +128,19 @@ pub trait Splittable: Sync {
 /// hard-coded into `dfs::mine`). Whole-root ranges fan out position by
 /// position; published [`Task::Split`] windows are delivered back to
 /// the same engine body.
+///
+/// The optional [`Governor`] (PR 6) is threaded to
+/// [`sched::reduce_governed`], which charges each delivered task
+/// against the run's budget; between roots of one range the body polls
+/// [`WorkerCtx::cancelled`] (one relaxed load) so a trip stops the run
+/// within one root, not one block. Both task arms carry a named
+/// fault-injection point ([`fault::Stage::RootClaim`] /
+/// [`fault::Stage::SplitTask`]) for the governance suite.
 pub fn reduce<S>(
     n: usize,
     pol: &SchedPolicy,
     engine: &S,
+    gov: Option<&Governor>,
     init: impl Fn() -> S::Acc + Sync,
     merge: impl FnMut(S::Acc, S::Acc) -> S::Acc,
 ) -> S::Acc
@@ -136,17 +148,25 @@ where
     S: Splittable,
     S::Acc: Send,
 {
-    sched::reduce(
+    sched::reduce_governed(
         n,
         pol,
+        gov,
         init,
         |acc, ctx, task| match task {
             Task::Roots { start, end } => {
+                fault::point(fault::Stage::RootClaim);
                 for root in start..end {
+                    if ctx.cancelled() {
+                        break;
+                    }
                     engine.mine_root(acc, ctx, root, None);
                 }
             }
-            Task::Split { root, lo, hi } => engine.mine_root(acc, ctx, root, Some((lo, hi))),
+            Task::Split { root, lo, hi } => {
+                fault::point(fault::Stage::SplitTask);
+                engine.mine_root(acc, ctx, root, Some((lo, hi)));
+            }
         },
         merge,
     )
@@ -186,6 +206,12 @@ impl Iterator for SplitDriver<'_, '_> {
     #[inline]
     fn next(&mut self) -> Option<usize> {
         if self.pos >= self.end {
+            return None;
+        }
+        // the governance poll site: one relaxed load per level-1
+        // candidate, exactly where the split gate already polls
+        if self.ctx.cancelled() {
+            self.pos = self.end;
             return None;
         }
         if self.end - self.pos > 1
@@ -256,7 +282,7 @@ mod tests {
             for steal in [false, true] {
                 for shards in [1usize, 2] {
                     let pol = SchedPolicy { threads, chunk: 1, steal, shards };
-                    let got = reduce(n, &pol, &toy, || 0u64, |a, b| a + b);
+                    let got = reduce(n, &pol, &toy, None, || 0u64, |a, b| a + b);
                     assert_eq!(got, want, "threads={threads} steal={steal} shards={shards}");
                 }
             }
@@ -269,7 +295,7 @@ mod tests {
         // degrade to a plain loop and never publish
         let toy = Toy { hub: 10, spin: 0 };
         let pol = SchedPolicy { threads: 1, chunk: usize::MAX, steal: true, shards: 1 };
-        let got = reduce(3, &pol, &toy, || 0u64, |a, b| a + b);
+        let got = reduce(3, &pol, &toy, None, || 0u64, |a, b| a + b);
         assert_eq!(got, 12);
     }
 }

@@ -7,8 +7,17 @@ use std::path::Path;
 use super::builder::GraphBuilder;
 use super::csr::{CsrGraph, VertexId};
 
+/// Largest vertex id an edge list may name. The loader allocates dense
+/// id space up to the maximum id it sees, so one corrupt token (a
+/// timestamp column, a hash, a stray weight) would otherwise turn into
+/// a multi-gigabyte allocation; 2^28 vertices is far above every
+/// dataset this repo handles.
+pub const MAX_EDGE_LIST_VERTEX: VertexId = (1 << 28) - 1;
+
 /// Load a whitespace-separated edge list: `u v` per line, `#` comments.
-/// Vertex ids are assigned densely from the raw ids encountered.
+/// Vertex ids are assigned densely from the raw ids encountered; ids
+/// above [`MAX_EDGE_LIST_VERTEX`] are rejected with a named
+/// `InvalidData` error instead of driving an absurd allocation.
 pub fn load_edge_list(path: &Path) -> std::io::Result<CsrGraph> {
     let f = std::fs::File::open(path)?;
     let mut edges: Vec<(VertexId, VertexId)> = Vec::new();
@@ -24,7 +33,15 @@ pub fn load_edge_list(path: &Path) -> std::io::Result<CsrGraph> {
             parse_id(it.next(), path)?,
             parse_id(it.next(), path)?,
         );
-        max_v = max_v.max(u).max(v);
+        let hi = u.max(v);
+        if hi > MAX_EDGE_LIST_VERTEX {
+            return Err(bad_data(format!(
+                "{path:?}: vertex id {hi} exceeds the edge-list limit \
+                 {MAX_EDGE_LIST_VERTEX} (ids are allocated densely — is this \
+                 column really a vertex id?)"
+            )));
+        }
+        max_v = max_v.max(hi);
         edges.push((u, v));
     }
     Ok(GraphBuilder::from_edges(max_v as usize + 1, &edges).build())
@@ -89,16 +106,54 @@ pub fn save_snapshot(g: &CsrGraph, path: &Path) -> std::io::Result<()> {
     Ok(())
 }
 
+/// Exact byte length a snapshot with this header must have: 4 header
+/// words + (n+1) u64 offsets + m u32 neighbors + n u32 labels.
+/// `None` when the header sizes overflow — such a header is corrupt by
+/// construction.
+fn snapshot_byte_len(n: u64, m: u64, has_labels: bool) -> Option<u64> {
+    let mut total = 32u64; // magic, n, m, has_labels
+    total = total.checked_add(n.checked_add(1)?.checked_mul(8)?)?;
+    total = total.checked_add(m.checked_mul(4)?)?;
+    if has_labels {
+        total = total.checked_add(n.checked_mul(4)?)?;
+    }
+    Some(total)
+}
+
 /// Load a binary CSR snapshot produced by the save path.
+///
+/// The header is validated against the file length *before* any
+/// allocation (a corrupt `n`/`m` must not drive `Vec::with_capacity`),
+/// and the decoded arrays are checked against the CSR invariants —
+/// `offsets[0] == 0`, offsets monotone, `offsets[n] == m`, every
+/// neighbor `< n` — so a truncated or bit-flipped snapshot fails here
+/// with a named error instead of panicking deep inside an engine.
 pub fn load_snapshot(path: &Path) -> std::io::Result<CsrGraph> {
+    let file_len = std::fs::metadata(path)?.len();
     let mut r = BufReader::new(std::fs::File::open(path)?);
     let magic = read_u64(&mut r)?;
     if magic != SNAPSHOT_MAGIC {
         return Err(bad_data("not a sandslash CSR snapshot"));
     }
-    let n = read_u64(&mut r)? as usize;
-    let m = read_u64(&mut r)? as usize;
+    let n64 = read_u64(&mut r)?;
+    let m64 = read_u64(&mut r)?;
     let has_labels = read_u64(&mut r)? != 0;
+    match snapshot_byte_len(n64, m64, has_labels) {
+        Some(expect) if expect == file_len => {}
+        Some(expect) => {
+            return Err(bad_data(format!(
+                "{path:?}: snapshot header (n={n64}, m={m64}, labels={has_labels}) \
+                 implies {expect} bytes but the file holds {file_len} — truncated \
+                 or corrupt snapshot"
+            )));
+        }
+        None => {
+            return Err(bad_data(format!(
+                "{path:?}: snapshot header sizes overflow (n={n64}, m={m64})"
+            )));
+        }
+    }
+    let (n, m) = (n64 as usize, m64 as usize);
     let mut offsets = Vec::with_capacity(n + 1);
     for _ in 0..=n {
         offsets.push(read_u64(&mut r)?);
@@ -113,6 +168,35 @@ pub fn load_snapshot(path: &Path) -> std::io::Result<CsrGraph> {
         for _ in 0..n {
             labels.push(read_u32(&mut r)?);
         }
+    }
+    // CSR invariants
+    if offsets[0] != 0 {
+        return Err(bad_data(format!(
+            "{path:?}: corrupt snapshot: offsets[0] = {} (must be 0)",
+            offsets[0]
+        )));
+    }
+    if let Some(v) = offsets.windows(2).position(|w| w[0] > w[1]) {
+        return Err(bad_data(format!(
+            "{path:?}: corrupt snapshot: offsets not monotone at vertex {v} \
+             ({} > {})",
+            offsets[v],
+            offsets[v + 1]
+        )));
+    }
+    if offsets[n] != m64 {
+        return Err(bad_data(format!(
+            "{path:?}: corrupt snapshot: offsets[{n}] = {} but the header \
+             declares m = {m64}",
+            offsets[n]
+        )));
+    }
+    if let Some(i) = neighbors.iter().position(|&v| v as u64 >= n64) {
+        return Err(bad_data(format!(
+            "{path:?}: corrupt snapshot: neighbors[{i}] = {} out of range \
+             (n = {n64})",
+            neighbors[i]
+        )));
     }
     Ok(CsrGraph { offsets, neighbors, labels })
 }
@@ -170,6 +254,58 @@ mod tests {
         let path = tmp("bad.bin");
         std::fs::write(&path, [0u8; 64]).unwrap();
         assert!(load_snapshot(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_truncated_snapshot() {
+        let g = gen::erdos_renyi(30, 0.2, 11, &[]);
+        let path = tmp("trunc.bin");
+        save_snapshot(&g, &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.truncate(bytes.len() - 5);
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load_snapshot(&path).expect_err("truncated snapshot must fail");
+        assert!(err.to_string().contains("truncated or corrupt"), "{err}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_corrupt_offsets() {
+        let g = gen::erdos_renyi(30, 0.2, 12, &[]);
+        let path = tmp("badoff.bin");
+        save_snapshot(&g, &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // offsets[1] lives at byte 40; make it huge so monotonicity (or
+        // the offsets[n] == m check) trips while the length stays right
+        bytes[40..48].copy_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load_snapshot(&path).expect_err("corrupt offsets must fail");
+        assert!(err.to_string().contains("corrupt snapshot"), "{err}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_out_of_range_neighbor() {
+        let g = gen::ring(8);
+        let path = tmp("badnbr.bin");
+        save_snapshot(&g, &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // first neighbor word sits right after the header + 9 offsets
+        let pos = 32 + 9 * 8;
+        bytes[pos..pos + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load_snapshot(&path).expect_err("out-of-range neighbor must fail");
+        assert!(err.to_string().contains("out of range"), "{err}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_absurd_edge_list_ids() {
+        let path = tmp("absurd.el");
+        std::fs::write(&path, "0 1\n2 999999999\n").unwrap();
+        let err = load_edge_list(&path).expect_err("absurd vertex id must fail");
+        assert!(err.to_string().contains("edge-list limit"), "{err}");
         std::fs::remove_file(path).ok();
     }
 

@@ -21,15 +21,24 @@
 //! extension oracles (PR 5; see `sandslash::engine::extend` — the
 //! process-wide equivalents are `SANDSLASH_NO_STEAL=1` /
 //! `SANDSLASH_NO_EXTCORE=1`).
+//!
+//! Governance flags (PR 6, any mining subcommand): `--deadline-ms N`
+//! bounds the run's wall clock, `--max-tasks N` bounds its scheduler
+//! task count (env equivalents `SANDSLASH_DEADLINE_MS` /
+//! `SANDSLASH_MAX_TASKS`). A tripped budget still prints the partial
+//! counts, then exits nonzero. Exit codes: 0 complete, 1 load/internal
+//! error, 2 usage, 3 BFS level cap, 4 worker panic, 5 deadline,
+//! 6 task budget, 7 caller cancel.
 
 use sandslash::apps::baselines::emulation::{self, System};
 use sandslash::apps::{clique, fsm_app, motif, sl, tc};
 use sandslash::coordinator::{campaign, datasets};
-use sandslash::engine::{MinerConfig, OptFlags};
+use sandslash::engine::{MineError, MinerConfig, OptFlags, Outcome};
 use sandslash::exec::sched::{self, Overrides};
 use sandslash::graph::{gen, io, stats, CsrGraph};
 use sandslash::pattern::library;
 use sandslash::util::cli::Args;
+use sandslash::util::metrics::SearchStats;
 use sandslash::util::timer::{fmt_secs, timed};
 
 fn main() {
@@ -133,7 +142,57 @@ fn config(args: &Args) -> MinerConfig {
     if args.flag("no-extcore") {
         cfg.opts.extcore = false;
     }
+    // governance budgets (PR 6): CLI flags override the env defaults
+    // already resolved by Budget::from_env; unusable values are
+    // rejected loudly, matching the --shards contract
+    if let Some(raw) = args.get("deadline-ms") {
+        match raw.trim().parse::<u64>() {
+            Ok(n) if n > 0 => {
+                cfg.budget.deadline = Some(std::time::Duration::from_millis(n));
+            }
+            _ => eprintln!(
+                "sandslash: ignoring --deadline-ms {raw:?} (must be a positive integer); \
+                 running without a deadline"
+            ),
+        }
+    }
+    if let Some(raw) = args.get("max-tasks") {
+        match raw.trim().parse::<u64>() {
+            Ok(n) if n > 0 => cfg.budget.max_tasks = Some(n),
+            _ => eprintln!(
+                "sandslash: ignoring --max-tasks {raw:?} (must be a positive integer); \
+                 running without a task budget"
+            ),
+        }
+    }
     cfg
+}
+
+/// Unwrap a governed mining result for the CLI: an engine error prints
+/// its one-line diagnosis and yields its distinct exit code
+/// (`Err(code)`); a budget trip prints the [`CancelReason::diagnosis`]
+/// naming the knob to raise and hands the partial value back with the
+/// trip's nonzero exit code — the caller still prints the partial
+/// answer before exiting.
+///
+/// [`CancelReason::diagnosis`]: sandslash::engine::CancelReason::diagnosis
+fn governed<T>(res: Result<Outcome<T>, MineError>) -> Result<(T, i32), i32> {
+    match res {
+        Err(e) => {
+            eprintln!("sandslash: {e}");
+            Err(e.exit_code())
+        }
+        Ok(out) => {
+            let code = match out.tripped {
+                Some(reason) => {
+                    eprintln!("sandslash: {}", reason.diagnosis());
+                    reason.exit_code()
+                }
+                None => 0,
+            };
+            Ok((out.value, code))
+        }
+    }
 }
 
 fn system(args: &Args) -> System {
@@ -188,22 +247,31 @@ fn cmd_stats(args: &Args) -> i32 {
 fn cmd_tc(args: &Args) -> i32 {
     let Some(g) = load_graph(args) else { return 1 };
     let cfg = config(args);
-    let (c, t) = timed(|| emulation::tc(&g, system(args), &cfg));
+    let (res, t) = timed(|| emulation::tc(&g, system(args), &cfg));
+    let (c, code) = match governed(res) {
+        Ok(v) => v,
+        Err(code) => return code,
+    };
     println!("triangles = {c}  [{}]  system={}", fmt_secs(t), system(args).name());
-    0
+    code
 }
 
 fn cmd_clique(args: &Args) -> i32 {
     let Some(g) = load_graph(args) else { return 1 };
     let cfg = config(args);
     let k = args.get_usize("k", 4);
-    let (c, t) = if args.flag("lo") {
-        timed(|| clique::clique_lo(&g, k, &cfg).0)
+    let (res, t) = if args.flag("lo") {
+        // hand-tuned kClist-style path: not engine-backed, ungoverned
+        timed(|| Ok(Outcome::complete(clique::clique_lo(&g, k, &cfg).0, SearchStats::default())))
     } else {
         timed(|| emulation::clique(&g, k, system(args), &cfg))
     };
+    let (c, code) = match governed(res) {
+        Ok(v) => v,
+        Err(code) => return code,
+    };
     println!("{k}-cliques = {c}  [{}]", fmt_secs(t));
-    0
+    code
 }
 
 fn cmd_motif(args: &Args) -> i32 {
@@ -211,7 +279,11 @@ fn cmd_motif(args: &Args) -> i32 {
     let cfg = config(args);
     let k = args.get_usize("k", 3);
     let sys = if args.flag("lo") { System::SandslashLo } else { system(args) };
-    let (counts, t) = timed(|| emulation::motifs(&g, k, sys, &cfg));
+    let (res, t) = timed(|| emulation::motifs(&g, k, sys, &cfg));
+    let (counts, code) = match governed(res) {
+        Ok(v) => v,
+        Err(code) => return code,
+    };
     let names: &[&str] = match k {
         3 => &library::MOTIF3_NAMES,
         4 => &library::MOTIF4_NAMES,
@@ -222,7 +294,7 @@ fn cmd_motif(args: &Args) -> i32 {
         let name = names.get(i).copied().unwrap_or("motif");
         println!("  {name:>16}: {c}");
     }
-    0
+    code
 }
 
 fn cmd_sl(args: &Args) -> i32 {
@@ -237,9 +309,13 @@ fn cmd_sl(args: &Args) -> i32 {
             return 2;
         }
     };
-    let (c, t) = timed(|| sl::sl_count(&g, &p, &cfg).0);
+    let (res, t) = timed(|| sl::sl_count(&g, &p, &cfg));
+    let (c, code) = match governed(res) {
+        Ok(v) => v,
+        Err(code) => return code,
+    };
     println!("embeddings = {c}  [{}]", fmt_secs(t));
-    0
+    code
 }
 
 fn cmd_fsm(args: &Args) -> i32 {
@@ -251,18 +327,25 @@ fn cmd_fsm(args: &Args) -> i32 {
     let cfg = config(args);
     let k = args.get_usize("k", 3);
     let sigma = args.get_u64("sigma", 100);
-    let (r, t) = if args.flag("bfs") {
+    let (res, t) = if args.flag("bfs") {
         timed(|| fsm_app::fsm_bfs(&g, k, sigma, &cfg))
     } else if args.flag("peregrine") {
-        timed(|| sandslash::apps::baselines::peregrine_fsm::peregrine_fsm(&g, k, sigma, &cfg))
+        timed(|| {
+            sandslash::apps::baselines::peregrine_fsm::peregrine_fsm(&g, k, sigma, &cfg)
+                .map(|r| Outcome::complete(r.frequent, SearchStats::default()))
+        })
     } else {
         timed(|| fsm_app::fsm(&g, k, sigma, &cfg))
     };
-    println!("{} frequent patterns (k<={k}, sigma>{sigma})  [{}]", r.frequent.len(), fmt_secs(t));
-    for f in r.frequent.iter().take(args.get_usize("show", 10)) {
+    let (frequent, code) = match governed(res) {
+        Ok(v) => v,
+        Err(code) => return code,
+    };
+    println!("{} frequent patterns (k<={k}, sigma>{sigma})  [{}]", frequent.len(), fmt_secs(t));
+    for f in frequent.iter().take(args.get_usize("show", 10)) {
         println!("  {}  support={}", f.pattern, f.support);
     }
-    0
+    code
 }
 
 fn cmd_accel(args: &Args) -> i32 {
@@ -297,7 +380,15 @@ fn cmd_accel(args: &Args) -> i32 {
         }
     }
     if args.flag("motif4") {
-        let (hi, t_hi) = timed(|| motif::motif4_hi(&g, &cfg).0);
+        let (hi_res, t_hi) = timed(|| motif::motif4_hi(&g, &cfg));
+        let (hi, code) = match governed(hi_res) {
+            Ok(v) => v,
+            Err(code) => return code,
+        };
+        if code != 0 {
+            // a partial reference count cannot validate the accelerator
+            return code;
+        }
         let (acc4, t_acc) = timed(|| accel.motif4(&g, &cfg));
         match acc4 {
             Ok(acc4) => {

@@ -160,10 +160,12 @@ impl Accelerator {
         let (tri, du, dv) = per_edge_stats_via_kernels(self, g)?;
         let raw = self.motif_raw_sums(&tri, &du, &dv)?;
         let (raw_d, raw_tt, raw_p4) = (raw[0] as u64, raw[1] as u64, raw[2] as u64);
-        // anchors via the combinatorial engine
+        // anchors via the combinatorial engine (governed: budget trips or
+        // worker panics in the anchor mine surface as errors here)
         let (c4, _) = crate::apps::clique::clique_hi(g, 4, cfg);
         let pl = crate::pattern::plan(&crate::pattern::library::cycle(4), true, true);
-        let (cy, _) = crate::engine::dfs::count(g, &pl, cfg, &crate::engine::hooks::NoHooks);
+        let (cy, _) = crate::engine::dfs::count(g, &pl, cfg, &crate::engine::hooks::NoHooks)?
+            .into_parts();
         let raw_s3: u64 = (0..g.num_vertices() as u32)
             .map(|v| {
                 let d = g.degree(v) as u64;

@@ -37,7 +37,14 @@
 //! [`pr5_compare`] protocol) do it once more for the *extension
 //! core*: the same ESU / FSM workload on the seed scalar oracle
 //! (`OptFlags::extcore = false`) and on the shared extension core,
-//! counts asserted equal.
+//! counts asserted equal. The PR-6 section (`pr6-governance`, via
+//! [`Pr6Section::write`] and the shared [`pr6_compare`] protocol)
+//! closes the sequence for the *governance layer*: the same workload
+//! with governance scoped off
+//! ([`crate::engine::budget::with_governance_disabled`]) and back on
+//! with every budget unset, counts asserted bit-identical and the
+//! [`crate::util::metrics::gov`] trip counters asserted silent — the
+//! recorded ratio is the whole cost of the admission poll sites.
 //!
 //! Writers must assert their differential check (scalar count ==
 //! set-centric count, scalar-kernel count == SIMD-kernel count)
@@ -285,8 +292,9 @@ pub fn pr1_meta(threads: usize) -> Json {
             "regenerate",
             "cargo test -q (smoke) or cargo bench --bench table5_tc / table6_kcl (sampled); \
              pr3-* sections compare the scalar vs SIMD kernel dispatch, pr4-sched-* the \
-             cursor vs work-stealing scheduler, and pr5-* the scalar extension oracles vs \
-             the shared extension core, each from the same run",
+             cursor vs work-stealing scheduler, pr5-* the scalar extension oracles vs \
+             the shared extension core, and pr6-governance the governed vs \
+             governance-disabled run with budgets unset, each from the same run",
         )
 }
 
@@ -643,6 +651,93 @@ impl Pr5Section<'_> {
             .num("oracle_secs", self.oracle_secs)
             .num("core_secs", self.core_secs)
             .num("speedup_core_over_oracle", self.speedup())
+            .int("samples", self.samples as u64);
+        upsert_bench_section(&pr1_report_path(), &pr1_meta(threads), section, &body)
+    }
+}
+
+/// One measured governance-off vs governance-on comparison
+/// (EXPERIMENTS.md §PR-6), as recorded in the `pr6-governance` report
+/// section: the same mining workload run with the governance layer
+/// scoped off ([`crate::engine::budget::with_governance_disabled`])
+/// and back on with every budget unset, from the same process, so the
+/// rows differ only in whether the admission poll sites execute.
+/// Shared by the benches and the tier-1 smoke test so the JSON schema
+/// cannot drift between writers.
+pub struct Pr6Section<'a> {
+    /// Input description (generator + parameters).
+    pub graph: &'a str,
+    /// Pattern name.
+    pub pattern: &'a str,
+    /// Agreed embedding count (differential check across the toggle).
+    pub count: u64,
+    /// Wall time with governance scoped off (seconds).
+    pub gov_off_secs: f64,
+    /// Wall time with governance on, budgets unset (seconds).
+    pub gov_on_secs: f64,
+    /// Number of timing samples behind the figures.
+    pub samples: usize,
+}
+
+/// Run the §PR-6 governance-off vs governance-on measurement protocol
+/// once and return the section row — the single implementation shared
+/// by the tier-1 smoke test and the benches, exactly as
+/// [`pr3_compare`] is for the kernel dispatch, [`pr4_compare`] for the
+/// scheduler, and [`pr5_compare`] for the extension core:
+///
+/// 1. call `run` (which must execute the workload with **every budget
+///    unset** and return the embedding count and the wall seconds to
+///    record) under [`crate::engine::budget::with_governance_disabled`]
+///    — the kill switch that makes every engine skip its `Governor`
+///    entirely — then again with governance live;
+/// 2. assert both runs agree on the count (the budgets-unset
+///    bit-identical contract of EXPERIMENTS.md §PR-6);
+/// 3. assert the [`crate::util::metrics::gov`] trip counters did not
+///    move across the governed run — with no budget set, admission
+///    must never refuse.
+///
+/// The recorded `gov_on_secs / gov_off_secs` ratio is therefore the
+/// entire cost of the poll sites, expected ≈ 1.
+pub fn pr6_compare<'a>(
+    graph: &'a str,
+    pattern: &'a str,
+    samples: usize,
+    mut run: impl FnMut() -> (u64, f64),
+) -> Pr6Section<'a> {
+    use crate::engine::budget;
+    use crate::util::metrics::gov;
+    let (off_count, gov_off_secs) = budget::with_governance_disabled(&mut run);
+    let before = gov::snapshot();
+    let (on_count, gov_on_secs) = run();
+    let after = gov::snapshot();
+    assert_eq!(
+        off_count, on_count,
+        "governed vs governance-disabled runs disagree on {graph} / {pattern}"
+    );
+    assert_eq!(
+        after.trips(),
+        before.trips(),
+        "budgets unset but a governance trip fired on {graph} / {pattern}"
+    );
+    Pr6Section { graph, pattern, count: on_count, gov_off_secs, gov_on_secs, samples }
+}
+
+impl Pr6Section<'_> {
+    /// Governed-over-ungoverned overhead ratio (≈ 1 means the poll
+    /// sites are free).
+    pub fn overhead(&self) -> f64 {
+        self.gov_on_secs / self.gov_off_secs
+    }
+
+    /// Upsert this section into the shared report at the repo root.
+    pub fn write(&self, section: &str, threads: usize) -> std::io::Result<()> {
+        let body = Json::new()
+            .str("graph", self.graph)
+            .str("pattern", self.pattern)
+            .int("count", self.count)
+            .num("gov_off_secs", self.gov_off_secs)
+            .num("gov_on_secs", self.gov_on_secs)
+            .num("overhead_on_over_off", self.overhead())
             .int("samples", self.samples as u64);
         upsert_bench_section(&pr1_report_path(), &pr1_meta(threads), section, &body)
     }

@@ -66,19 +66,54 @@ impl Args {
         self.get(name).unwrap_or(default)
     }
 
-    /// Option parsed as `usize`, or `default`.
+    /// Option parsed as `usize`, or `default`. An unparsable value is
+    /// rejected *loudly* (once per option name) instead of silently
+    /// becoming the default — the `SANDSLASH_*` env contract
+    /// (see `util::pool::positive_usize_env`), applied to flags.
     pub fn get_usize(&self, name: &str, default: usize) -> usize {
-        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+        self.parsed_or_warn(name, default, "an unsigned integer")
     }
 
-    /// Option parsed as `u64`, or `default`.
+    /// Option parsed as `u64`, or `default`; loud-reject like
+    /// [`Args::get_usize`].
     pub fn get_u64(&self, name: &str, default: u64) -> u64 {
-        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+        self.parsed_or_warn(name, default, "an unsigned integer")
     }
 
-    /// Option parsed as `f64`, or `default`.
+    /// Option parsed as `f64`, or `default`; loud-reject like
+    /// [`Args::get_usize`].
     pub fn get_f64(&self, name: &str, default: f64) -> f64 {
-        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+        self.parsed_or_warn(name, default, "a number")
+    }
+
+    fn parsed_or_warn<T: std::str::FromStr + std::fmt::Display>(
+        &self,
+        name: &str,
+        default: T,
+        what: &str,
+    ) -> T {
+        let Some(raw) = self.get(name) else { return default };
+        match raw.trim().parse::<T>() {
+            Ok(v) => v,
+            Err(_) => {
+                warn_once(name, raw, what, &default);
+                default
+            }
+        }
+    }
+}
+
+/// One stderr warning per option name per process: repeated getters on
+/// the same flag (campaign loops re-read `--k` per table) must not spam.
+fn warn_once(name: &str, raw: &str, what: &str, default: &dyn std::fmt::Display) {
+    use std::sync::{Mutex, OnceLock};
+    static WARNED: OnceLock<Mutex<std::collections::HashSet<String>>> = OnceLock::new();
+    let mut warned = WARNED
+        .get_or_init(|| Mutex::new(std::collections::HashSet::new()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner());
+    if warned.insert(name.to_string()) {
+        eprintln!("sandslash: ignoring --{name} {raw:?} (not {what}); using {default}");
     }
 }
 
@@ -119,5 +154,26 @@ mod tests {
         let a = parse("tc");
         assert_eq!(a.get_or("graph", "er-small"), "er-small");
         assert_eq!(a.get_f64("density", 0.5), 0.5);
+    }
+
+    #[test]
+    fn unparsable_values_fall_back_loudly() {
+        // garbage falls back to the default (and warns on stderr once
+        // per option name — not assertable here, but the fallback is)
+        let a = parse("clique --k banana --sigma 1e3x --p nan-ish");
+        assert_eq!(a.get_usize("k", 4), 4);
+        assert_eq!(a.get_u64("sigma", 100), 100);
+        assert_eq!(a.get_f64("p", 0.25), 0.25);
+        // repeated reads stay on the fallback and do not panic
+        assert_eq!(a.get_usize("k", 4), 4);
+    }
+
+    #[test]
+    fn surrounding_whitespace_tolerated() {
+        let a = parse("clique --k=4");
+        assert_eq!(a.get_usize("k", 0), 4);
+        let mut b = parse("clique");
+        b.options.insert("k".into(), " 7 ".into());
+        assert_eq!(b.get_usize("k", 0), 7);
     }
 }

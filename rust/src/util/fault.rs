@@ -1,0 +1,228 @@
+//! Deterministic fault injection (PR 6) — compiled in, default-off.
+//!
+//! The governance suite (`rust/tests/governance.rs`) must prove that a
+//! panic at *any* engine stage surfaces as
+//! [`MineError::WorkerPanicked`](crate::engine::budget::MineError)
+//! with the process alive, and that deadlines trip mid-run. Both need
+//! a way to make a specific worker task misbehave on demand, so the
+//! engines carry named fault points ([`point`]) at their interesting
+//! stages ([`Stage`]): root-block claims and split re-entries (the
+//! `exec::split` task match), FSM child regeneration, and BFS level
+//! expansion. Each crossing costs one relaxed load when no plan is
+//! installed — the same always-on-but-cheap shape as the scheduler
+//! counters.
+//!
+//! A plan fires at the `at_task`-th matching crossing (process-wide
+//! counter, reset by [`install`]): `Panic` raises a recognizable
+//! payload (caught by the scheduler's governance layer), `Delay`
+//! sleeps — the lever deadline tests use to make a block reliably
+//! outlast a short deadline.
+//!
+//! Environment grammar (`SANDSLASH_FAULT`, parsed once per process by
+//! [`init_from_env`], loud-reject like every `SANDSLASH_*` knob):
+//!
+//! ```text
+//! SANDSLASH_FAULT=panic@<task-n>          # panic at the n-th crossing
+//! SANDSLASH_FAULT=delay@<task-n>:<ms>     # sleep <ms> at the n-th crossing
+//! ```
+//!
+//! The env form matches every stage; tests install stage-filtered
+//! plans programmatically.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Duration;
+
+/// Engine stages carrying a fault point. All points sit inside
+/// *worker* task bodies (never on the coordinator), so an injected
+/// panic exercises the worker catch/drain path — the thing the
+/// governance suite exists to prove.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// A claimed root-range task, before its roots are mined
+    /// (`exec::split::reduce`, `Task::Roots` arm).
+    RootClaim,
+    /// A split task re-entering a published level-1 suffix
+    /// (`exec::split::reduce`, `Task::Split` arm).
+    SplitTask,
+    /// FSM child-pattern regeneration inside a root-bin task.
+    FsmRegen,
+    /// BFS per-parent expansion inside a level task.
+    BfsLevel,
+}
+
+/// What to do when the planned crossing is reached.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Panic with a recognizable `"injected fault"` payload.
+    Panic,
+    /// Sleep for the given duration (deadline tests).
+    Delay(Duration),
+}
+
+/// One armed fault: fire `action` at the `at_task`-th crossing of a
+/// matching fault point (counting from 0; `stage: None` matches every
+/// stage).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// What to do at the matched crossing.
+    pub action: FaultAction,
+    /// Which matching crossing fires (0-based).
+    pub at_task: u64,
+    /// Restrict matching to one stage (`None` = any).
+    pub stage: Option<Stage>,
+}
+
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+static CROSSINGS: AtomicU64 = AtomicU64::new(0);
+static PLAN: Mutex<Option<FaultPlan>> = Mutex::new(None);
+
+/// Arm `plan` process-wide and reset the crossing counter. Tests
+/// serialize on their own lock (the harness state is process-global).
+pub fn install(plan: FaultPlan) {
+    let mut slot = PLAN.lock().unwrap_or_else(|e| e.into_inner());
+    *slot = Some(plan);
+    CROSSINGS.store(0, Ordering::SeqCst);
+    ACTIVE.store(true, Ordering::SeqCst);
+}
+
+/// Disarm the harness (crossings stop counting and cost one relaxed
+/// load again).
+pub fn clear() {
+    ACTIVE.store(false, Ordering::SeqCst);
+    let mut slot = PLAN.lock().unwrap_or_else(|e| e.into_inner());
+    *slot = None;
+}
+
+/// A fault point: named crossing in an engine worker body. One relaxed
+/// load when the harness is off.
+#[inline]
+pub fn point(stage: Stage) {
+    if ACTIVE.load(Ordering::Relaxed) {
+        crossed(stage);
+    }
+}
+
+/// Slow path of [`point`]: count the crossing and fire if it is the
+/// planned one. The plan is copied out before any panic so the
+/// `PLAN` mutex is never poisoned by the injection itself.
+#[cold]
+fn crossed(stage: Stage) {
+    let plan = {
+        let slot = PLAN.lock().unwrap_or_else(|e| e.into_inner());
+        match *slot {
+            Some(p) => p,
+            None => return,
+        }
+    };
+    if let Some(want) = plan.stage {
+        if want != stage {
+            return;
+        }
+    }
+    let n = CROSSINGS.fetch_add(1, Ordering::Relaxed);
+    if n == plan.at_task {
+        match plan.action {
+            FaultAction::Delay(d) => std::thread::sleep(d),
+            FaultAction::Panic => {
+                crate::util::metrics::gov::note_fault_injected();
+                panic!("injected fault: panic at {stage:?} crossing {n}");
+            }
+        }
+    }
+}
+
+/// Arm the harness from `SANDSLASH_FAULT` (module docs for the
+/// grammar), once per process; an unusable spec warns on stderr and
+/// leaves injection off. Called from `Governor::new`, so headless runs
+/// pick the plan up before the first governed task.
+pub fn init_from_env() {
+    static INIT: OnceLock<()> = OnceLock::new();
+    INIT.get_or_init(|| {
+        if let Ok(raw) = std::env::var("SANDSLASH_FAULT") {
+            match parse_spec(&raw) {
+                Ok(plan) => install(plan),
+                Err(why) => eprintln!(
+                    "sandslash: ignoring SANDSLASH_FAULT={raw:?} ({why}); fault injection off"
+                ),
+            }
+        }
+    });
+}
+
+/// Parse one `SANDSLASH_FAULT` spec (env plans match every stage).
+fn parse_spec(raw: &str) -> Result<FaultPlan, &'static str> {
+    let spec = raw.trim();
+    if let Some(rest) = spec.strip_prefix("panic@") {
+        let at_task = rest.trim().parse::<u64>().map_err(|_| "task index not an integer")?;
+        return Ok(FaultPlan { action: FaultAction::Panic, at_task, stage: None });
+    }
+    if let Some(rest) = spec.strip_prefix("delay@") {
+        let (task, ms) = rest.split_once(':').ok_or("delay needs <task-n>:<ms>")?;
+        let at_task = task.trim().parse::<u64>().map_err(|_| "task index not an integer")?;
+        let millis = ms.trim().parse::<u64>().map_err(|_| "delay not an integer (ms)")?;
+        return Ok(FaultPlan {
+            action: FaultAction::Delay(Duration::from_millis(millis)),
+            at_task,
+            stage: None,
+        });
+    }
+    Err("expected panic@<task-n> or delay@<task-n>:<ms>")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_grammar_parses_and_rejects() {
+        assert_eq!(
+            parse_spec("panic@3"),
+            Ok(FaultPlan { action: FaultAction::Panic, at_task: 3, stage: None })
+        );
+        assert_eq!(
+            parse_spec(" delay@0:250 "),
+            Ok(FaultPlan {
+                action: FaultAction::Delay(Duration::from_millis(250)),
+                at_task: 0,
+                stage: None
+            })
+        );
+        assert!(parse_spec("").is_err());
+        assert!(parse_spec("panic").is_err());
+        assert!(parse_spec("panic@x").is_err());
+        assert!(parse_spec("delay@1").is_err());
+        assert!(parse_spec("delay@1:abc").is_err());
+        assert!(parse_spec("explode@1").is_err());
+    }
+
+    #[test]
+    fn stage_filter_counts_only_matching_crossings() {
+        // process-global harness: restore the off state when done
+        install(FaultPlan {
+            action: FaultAction::Delay(Duration::ZERO),
+            at_task: 1,
+            stage: Some(Stage::FsmRegen),
+        });
+        point(Stage::RootClaim); // filtered out, must not count
+        point(Stage::FsmRegen); // crossing 0
+        point(Stage::FsmRegen); // crossing 1 -> fires (zero delay)
+        assert_eq!(CROSSINGS.load(Ordering::SeqCst), 2);
+        clear();
+        point(Stage::FsmRegen); // disarmed, must not count
+        assert_eq!(CROSSINGS.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn injected_panic_payload_is_recognizable() {
+        install(FaultPlan { action: FaultAction::Panic, at_task: 0, stage: Some(Stage::RootClaim) });
+        let caught = std::panic::catch_unwind(|| point(Stage::RootClaim));
+        clear();
+        let payload = caught.expect_err("the planned crossing must panic");
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("injected fault"), "payload: {msg}");
+    }
+}

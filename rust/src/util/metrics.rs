@@ -359,6 +359,91 @@ pub mod sched {
     }
 }
 
+/// Governance-event counters (PR 6): budget trips, caught worker
+/// panics, injected faults ([`crate::engine::budget`],
+/// [`crate::util::fault`]).
+///
+/// Always on, like [`sched`]: each event fires at most once per *run*
+/// (a trip latches the cancel token; a panic drains a worker), so one
+/// relaxed increment on a padded line is free, and the governance
+/// suite gets to assert trips without an enable handshake.
+pub mod gov {
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    use crate::engine::budget::CancelReason;
+
+    /// A counter alone on its cache line (no false sharing between
+    /// event families).
+    #[repr(align(64))]
+    struct PaddedCounter(AtomicU64);
+
+    static DEADLINE_TRIPS: PaddedCounter = PaddedCounter(AtomicU64::new(0));
+    static TASK_BUDGET_TRIPS: PaddedCounter = PaddedCounter(AtomicU64::new(0));
+    static CALLER_TRIPS: PaddedCounter = PaddedCounter(AtomicU64::new(0));
+    static PANIC_TRIPS: PaddedCounter = PaddedCounter(AtomicU64::new(0));
+    static PANICS_CAUGHT: PaddedCounter = PaddedCounter(AtomicU64::new(0));
+    static FAULTS_INJECTED: PaddedCounter = PaddedCounter(AtomicU64::new(0));
+
+    /// Point-in-time copy of every governance counter.
+    #[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+    pub struct GovCounts {
+        /// Runs tripped by an expired deadline.
+        pub deadline_trips: u64,
+        /// Runs tripped by an exhausted task budget.
+        pub task_budget_trips: u64,
+        /// Runs cancelled by a caller token.
+        pub caller_trips: u64,
+        /// Runs tripped by a worker panic.
+        pub panic_trips: u64,
+        /// Worker panics caught (may exceed `panic_trips`: only the
+        /// first panic per run trips the token).
+        pub panics_caught: u64,
+        /// Faults fired by the injection harness.
+        pub faults_injected: u64,
+    }
+
+    impl GovCounts {
+        /// Total budget trips of any kind.
+        pub fn trips(&self) -> u64 {
+            self.deadline_trips + self.task_budget_trips + self.caller_trips + self.panic_trips
+        }
+    }
+
+    /// Read all counters (relaxed loads: exact under quiescence,
+    /// monotone lower bounds under concurrency).
+    pub fn snapshot() -> GovCounts {
+        GovCounts {
+            deadline_trips: DEADLINE_TRIPS.0.load(Ordering::Relaxed),
+            task_budget_trips: TASK_BUDGET_TRIPS.0.load(Ordering::Relaxed),
+            caller_trips: CALLER_TRIPS.0.load(Ordering::Relaxed),
+            panic_trips: PANIC_TRIPS.0.load(Ordering::Relaxed),
+            panics_caught: PANICS_CAUGHT.0.load(Ordering::Relaxed),
+            faults_injected: FAULTS_INJECTED.0.load(Ordering::Relaxed),
+        }
+    }
+
+    #[inline]
+    pub(crate) fn note_trip(reason: CancelReason) {
+        let c = match reason {
+            CancelReason::Deadline => &DEADLINE_TRIPS,
+            CancelReason::TaskBudget => &TASK_BUDGET_TRIPS,
+            CancelReason::Caller => &CALLER_TRIPS,
+            CancelReason::WorkerPanic => &PANIC_TRIPS,
+        };
+        c.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub(crate) fn note_panic_caught() {
+        PANICS_CAUGHT.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub(crate) fn note_fault_injected() {
+        FAULTS_INJECTED.0.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
 #[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
 /// Search-space counters (kept per thread, merged at the end).
 pub struct SearchStats {
@@ -508,6 +593,26 @@ mod tests {
         sched::note_split();
         assert!(sched::splits_for(tag::Engine::Fsm) > before);
         assert!(sched::splits_for(tag::Engine::Generic) > g_before);
+    }
+
+    #[test]
+    fn gov_counters_record_per_reason() {
+        use crate::engine::budget::CancelReason;
+        let before = gov::snapshot();
+        gov::note_trip(CancelReason::Deadline);
+        gov::note_trip(CancelReason::TaskBudget);
+        gov::note_trip(CancelReason::Caller);
+        gov::note_trip(CancelReason::WorkerPanic);
+        gov::note_panic_caught();
+        gov::note_fault_injected();
+        let after = gov::snapshot();
+        assert!(after.deadline_trips > before.deadline_trips);
+        assert!(after.task_budget_trips > before.task_budget_trips);
+        assert!(after.caller_trips > before.caller_trips);
+        assert!(after.panic_trips > before.panic_trips);
+        assert!(after.panics_caught > before.panics_caught);
+        assert!(after.faults_injected > before.faults_injected);
+        assert!(after.trips() >= before.trips() + 4);
     }
 
     #[test]

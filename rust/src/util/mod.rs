@@ -6,6 +6,7 @@ pub mod bench;
 pub mod bitset;
 pub mod cli;
 pub mod config;
+pub mod fault;
 pub mod metrics;
 pub mod pool;
 pub mod rng;

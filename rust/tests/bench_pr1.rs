@@ -24,7 +24,9 @@ use sandslash::engine::{dfs, MinerConfig, OptFlags};
 use sandslash::graph::{gen, setops};
 use sandslash::graph::CsrGraph;
 use sandslash::pattern::{library, plan, Pattern};
-use sandslash::util::bench::{pr1_report_path, pr3_compare, pr4_compare, pr5_compare, Pr1Section};
+use sandslash::util::bench::{
+    pr1_report_path, pr3_compare, pr4_compare, pr5_compare, pr6_compare, Pr1Section,
+};
 use sandslash::util::timer::timed;
 
 fn measure_and_write(
@@ -39,14 +41,15 @@ fn measure_and_write(
     let mut scalar_cfg = set_cfg;
     scalar_cfg.opts.sets = false;
     // first runs double as warmup and as the differential check
-    let (set_count, _) = dfs::count(g, &pl, &set_cfg, &NoHooks);
-    let (scalar_count, _) = dfs::count(g, &pl, &scalar_cfg, &NoHooks);
+    // (budgets unset here, so governed runs always complete — unwrap)
+    let (set_count, _) = dfs::count(g, &pl, &set_cfg, &NoHooks).unwrap().into_parts();
+    let (scalar_count, _) = dfs::count(g, &pl, &scalar_cfg, &NoHooks).unwrap().into_parts();
     assert_eq!(
         set_count, scalar_count,
         "scalar vs set-centric disagree on {graph_desc} / {pname}"
     );
-    let (_, scalar_secs) = timed(|| dfs::count(g, &pl, &scalar_cfg, &NoHooks).0);
-    let (_, set_secs) = timed(|| dfs::count(g, &pl, &set_cfg, &NoHooks).0);
+    let (_, scalar_secs) = timed(|| dfs::count(g, &pl, &scalar_cfg, &NoHooks).unwrap().value);
+    let (_, set_secs) = timed(|| dfs::count(g, &pl, &set_cfg, &NoHooks).unwrap().value);
     let s = Pr1Section {
         graph: graph_desc,
         pattern: pname,
@@ -80,11 +83,12 @@ fn measure_pr3(
         pname,
         1,
         || {
-            let (count, _) = dfs::count(g, &pl, &cfg, &NoHooks); // warmup + count
-            let (_, secs) = timed(|| dfs::count(g, &pl, &cfg, &NoHooks).0);
+            // warmup + count
+            let (count, _) = dfs::count(g, &pl, &cfg, &NoHooks).unwrap().into_parts();
+            let (_, secs) = timed(|| dfs::count(g, &pl, &cfg, &NoHooks).unwrap().value);
             (count, secs)
         },
-        || dfs::count(g, &pl, &cfg, &NoHooks).0,
+        || dfs::count(g, &pl, &cfg, &NoHooks).unwrap().value,
     );
     if let Err(e) = s.write(section, cfg.threads) {
         eprintln!("skipping BENCH_pr1.json write: {e}");
@@ -118,11 +122,12 @@ fn measure_pr4(
         cfg.threads,
         skew_cfg.threads,
         || {
-            let (count, _) = dfs::count(g, &pl, &cfg, &NoHooks); // warmup + count
-            let (_, secs) = timed(|| dfs::count(g, &pl, &cfg, &NoHooks).0);
+            // warmup + count
+            let (count, _) = dfs::count(g, &pl, &cfg, &NoHooks).unwrap().into_parts();
+            let (_, secs) = timed(|| dfs::count(g, &pl, &cfg, &NoHooks).unwrap().value);
             (count, secs)
         },
-        || dfs::count(skew, &pl, &skew_cfg, &NoHooks).0,
+        || dfs::count(skew, &pl, &skew_cfg, &NoHooks).unwrap().value,
     );
     if let Err(e) = s.write(section, cfg.threads) {
         eprintln!("skipping BENCH_pr1.json write: {e}");
@@ -139,8 +144,10 @@ fn measure_pr5() -> (f64, f64) {
     let table = MotifTable::new(4);
     let kmc = pr5_compare("rmat scale=9 ef=6 seed=42", "4-motif-esu", 1, |use_core| {
         let cfg = MinerConfig::new(OptFlags::hi().with_extcore(use_core));
-        let (counts, _) = count_motifs(&g_mc, 4, &cfg, &NoHooks, &table); // warmup + check
-        let (_, secs) = timed(|| count_motifs(&g_mc, 4, &cfg, &NoHooks, &table).0);
+        // warmup + check
+        let (counts, _) = count_motifs(&g_mc, 4, &cfg, &NoHooks, &table).unwrap().into_parts();
+        let (_, secs) =
+            timed(|| count_motifs(&g_mc, 4, &cfg, &NoHooks, &table).unwrap().value);
         (counts.iter().sum(), secs)
     });
     if let Err(e) = kmc.write("pr5-kmc", MinerConfig::new(OptFlags::hi()).threads) {
@@ -150,20 +157,37 @@ fn measure_pr5() -> (f64, f64) {
     let g_fsm = gen::erdos_renyi(150, 0.06, 42, &[1, 2, 3]);
     let fsm = pr5_compare("er n=150 p=0.06 seed=42 labels=3", "fsm k<=3 sigma=2", 1, |use_core| {
         let cfg = MinerConfig::new(OptFlags::hi().with_extcore(use_core));
-        let r = mine_fsm(&g_fsm, 3, 2, &cfg); // warmup + check
-        let fp = r
-            .frequent
-            .iter()
-            .fold(r.frequent.len() as u64, |h, f| {
-                h.wrapping_mul(1_000_003).wrapping_add(f.support)
-            });
-        let (_, secs) = timed(|| mine_fsm(&g_fsm, 3, 2, &cfg).frequent.len());
+        let r = mine_fsm(&g_fsm, 3, 2, &cfg).unwrap().value; // warmup + check
+        let fp = r.iter().fold(r.len() as u64, |h, f| {
+            h.wrapping_mul(1_000_003).wrapping_add(f.support)
+        });
+        let (_, secs) = timed(|| mine_fsm(&g_fsm, 3, 2, &cfg).unwrap().value.len());
         (fp, secs)
     });
     if let Err(e) = fsm.write("pr5-fsm", MinerConfig::new(OptFlags::hi()).threads) {
         eprintln!("skipping BENCH_pr1.json write: {e}");
     }
     (kmc.speedup(), fsm.speedup())
+}
+
+/// PR-6 row (§PR-6) through the shared protocol (`bench::pr6_compare`):
+/// the same governed TC workload with the governance layer scoped off
+/// and back on, budgets unset — counts asserted bit-identical and the
+/// trip counters asserted silent inside the protocol. The recorded
+/// ratio is the whole cost of the admission poll sites (expected ≈ 1).
+fn measure_pr6(g: &CsrGraph, graph_desc: &str) -> f64 {
+    let pl = plan(&library::triangle(), true, true);
+    let cfg = MinerConfig::new(OptFlags::hi());
+    let s = pr6_compare(graph_desc, "triangle", 1, || {
+        // warmup + count (budgets unset, so governed runs always complete)
+        let (count, _) = dfs::count(g, &pl, &cfg, &NoHooks).unwrap().into_parts();
+        let (_, secs) = timed(|| dfs::count(g, &pl, &cfg, &NoHooks).unwrap().value);
+        (count, secs)
+    });
+    if let Err(e) = s.write("pr6-governance", cfg.threads) {
+        eprintln!("skipping BENCH_pr1.json write: {e}");
+    }
+    s.overhead()
 }
 
 #[test]
@@ -222,12 +246,15 @@ fn bench_pr1_smoke_regenerates_report() {
     // PR-5: scalar extension oracles vs the shared extension core on
     // the ESU and FSM engines
     let (kmc_core, fsm_core) = measure_pr5();
+    // PR-6: governance on vs scoped off, budgets unset (poll-site cost)
+    let gov_overhead = measure_pr6(&g_tc, "rmat scale=14 ef=8 seed=42");
     eprintln!(
         "BENCH_pr1 smoke: set-centric speedup over scalar — tc {tc_speedup:.2}x, \
          4-clique {cl_speedup:.2}x; {} kernels over scalar kernels — tc {tc_simd:.2}x, \
          4-clique {cl_simd:.2}x; stealing over cursor — tc {tc_sched:.2}x, \
          4-clique {cl_sched:.2}x; extension core over scalar oracles — \
-         4-MC {kmc_core:.2}x, FSM {fsm_core:.2}x ({})",
+         4-MC {kmc_core:.2}x, FSM {fsm_core:.2}x; governance-on over off — \
+         tc {gov_overhead:.2}x ({})",
         setops::simd_level_name(),
         pr1_report_path().display()
     );

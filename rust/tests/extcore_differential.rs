@@ -90,7 +90,8 @@ fn fsm_fingerprint(
     cfg: &MinerConfig,
 ) -> Vec<(CanonCode, u64, u64)> {
     mine_fsm(g, max_edges, sigma, cfg)
-        .frequent
+        .unwrap()
+        .value
         .iter()
         .map(|f| (f.code.clone(), f.support, f.embeddings))
         .collect()
@@ -111,14 +112,18 @@ fn kmc_core_matches_oracle_across_seeds_k_and_matrix() {
             let table = MotifTable::new(k);
             let oracle_cfg =
                 MinerConfig::single_thread(OptFlags::hi().with_extcore(false)).with_steal(false);
-            let (want, _) = count_motifs(&g, k, &oracle_cfg, &NoHooks, &table);
+            let (want, _) = count_motifs(&g, k, &oracle_cfg, &NoHooks, &table)
+                .unwrap()
+                .into_parts();
             assert!(want.iter().sum::<u64>() > 0, "degenerate input seed={seed} k={k}");
             for_matrix(|cfg, label| {
-                let (got, _) = count_motifs(&g, k, cfg, &NoHooks, &table);
+                let (got, _) =
+                    count_motifs(&g, k, cfg, &NoHooks, &table).unwrap().into_parts();
                 assert_eq!(&got, &want, "seed={seed} k={k} core {label}");
                 let mut oracle = *cfg;
                 oracle.opts.extcore = false;
-                let (got_o, _) = count_motifs(&g, k, &oracle, &NoHooks, &table);
+                let (got_o, _) =
+                    count_motifs(&g, k, &oracle, &NoHooks, &table).unwrap().into_parts();
                 assert_eq!(&got_o, &want, "seed={seed} k={k} oracle {label}");
             });
         }
@@ -129,13 +134,13 @@ fn kmc_core_matches_oracle_across_seeds_k_and_matrix() {
     let table = MotifTable::new(3);
     let oracle_cfg =
         MinerConfig::single_thread(OptFlags::hi().with_extcore(false)).with_steal(false);
-    let (want, _) = count_motifs(&g, 3, &oracle_cfg, &NoHooks, &table);
+    let (want, _) = count_motifs(&g, 3, &oracle_cfg, &NoHooks, &table).unwrap().into_parts();
     for_matrix(|cfg, label| {
-        let (got, _) = count_motifs(&g, 3, cfg, &NoHooks, &table);
+        let (got, _) = count_motifs(&g, 3, cfg, &NoHooks, &table).unwrap().into_parts();
         assert_eq!(&got, &want, "two_hub core {label}");
         let mut oracle = *cfg;
         oracle.opts.extcore = false;
-        let (got_o, _) = count_motifs(&g, 3, &oracle, &NoHooks, &table);
+        let (got_o, _) = count_motifs(&g, 3, &oracle, &NoHooks, &table).unwrap().into_parts();
         assert_eq!(&got_o, &want, "two_hub oracle {label}");
     });
 }
@@ -150,13 +155,14 @@ fn bfs_core_matches_oracle_across_seeds_and_matrix() {
             // ESU (core-vs-oracle checked above) referees BFS
             let esu_cfg =
                 MinerConfig::single_thread(OptFlags::hi().with_extcore(false)).with_steal(false);
-            let (want, _) = count_motifs(&g, k, &esu_cfg, &NoHooks, &table);
+            let (want, _) =
+                count_motifs(&g, k, &esu_cfg, &NoHooks, &table).unwrap().into_parts();
             for_matrix(|cfg, label| {
-                let core = bfs_count_motifs(&g, k, cfg, &table).unwrap();
+                let core = bfs_count_motifs(&g, k, cfg, &table).unwrap().value;
                 assert_eq!(&core.counts, &want, "seed={seed} k={k} core {label}");
                 let mut oracle = *cfg;
                 oracle.opts.extcore = false;
-                let o = bfs_count_motifs(&g, k, &oracle, &table).unwrap();
+                let o = bfs_count_motifs(&g, k, &oracle, &table).unwrap().value;
                 assert_eq!(&o.counts, &want, "seed={seed} k={k} oracle {label}");
                 // levels are identical element-for-element, so the
                 // materialization footprint agrees too
@@ -173,10 +179,10 @@ fn bfs_core_matches_oracle_across_seeds_and_matrix() {
     let table = MotifTable::new(3);
     let esu_cfg =
         MinerConfig::single_thread(OptFlags::hi().with_extcore(false)).with_steal(false);
-    let (want, _) = count_motifs(&g, 3, &esu_cfg, &NoHooks, &table);
+    let (want, _) = count_motifs(&g, 3, &esu_cfg, &NoHooks, &table).unwrap().into_parts();
     for_matrix(|cfg, label| {
         assert_eq!(
-            bfs_count_motifs(&g, 3, cfg, &table).unwrap().counts,
+            bfs_count_motifs(&g, 3, cfg, &table).unwrap().value.counts,
             want,
             "two_hub {label}"
         );
@@ -249,7 +255,8 @@ fn two_hub_migration_is_real_on_kernel_and_scheduler_axes() {
     let esu_table = MotifTable::new(3);
     let esu_cfg = MinerConfig::custom(2, 1, OptFlags::hi());
     let before = dispatch::snapshot_for(tag::Engine::Esu);
-    let (esu_counts, _) = count_motifs(&esu_graph, 3, &esu_cfg, &NoHooks, &esu_table);
+    let (esu_counts, _) =
+        count_motifs(&esu_graph, 3, &esu_cfg, &NoHooks, &esu_table).unwrap().into_parts();
     let after = dispatch::snapshot_for(tag::Engine::Esu);
     assert!(
         after.word_parallel > before.word_parallel,
@@ -261,9 +268,9 @@ fn two_hub_migration_is_real_on_kernel_and_scheduler_axes() {
     let fsm_graph = labeled_clone(&gen::two_hub(140), &[1, 2, 3]);
     let fsm_cfg = MinerConfig::custom(2, 1, OptFlags::hi());
     let f_before = dispatch::snapshot_for(tag::Engine::Fsm);
-    let fsm_result = mine_fsm(&fsm_graph, 2, 0, &fsm_cfg);
+    let fsm_result = mine_fsm(&fsm_graph, 2, 0, &fsm_cfg).unwrap().value;
     let f_after = dispatch::snapshot_for(tag::Engine::Fsm);
-    assert!(!fsm_result.frequent.is_empty());
+    assert!(!fsm_result.is_empty());
     assert!(
         f_after.beyond_scalar() > f_before.beyond_scalar(),
         "no adaptive kernel family (gallop/SIMD/bitset) fired inside FSM extension on two_hub"
@@ -285,7 +292,8 @@ fn two_hub_migration_is_real_on_kernel_and_scheduler_axes() {
     let mut esu_split = false;
     for _attempt in 0..5 {
         let splits_before = sched_counters::splits_for(tag::Engine::Esu);
-        let (got, _) = count_motifs(&esu_graph, 3, &steal_cfg, &NoHooks, &esu_table);
+        let (got, _) =
+            count_motifs(&esu_graph, 3, &steal_cfg, &NoHooks, &esu_table).unwrap().into_parts();
         assert_eq!(got, esu_counts, "ESU stealing run changed the counts");
         if sched_counters::splits_for(tag::Engine::Esu) > splits_before {
             esu_split = true;

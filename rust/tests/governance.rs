@@ -1,0 +1,425 @@
+//! Query-governance suite (PR 6): deadlines, task budgets, caller
+//! cancellation, and worker panic isolation across every engine.
+//!
+//! What must hold (ISSUE 6 acceptance):
+//!
+//! * A tripped budget is **not** an error: the engine returns a partial
+//!   [`Outcome`] whose value is a lower bound on the true count, with
+//!   `complete == false` and the tripping [`CancelReason`].
+//! * Task budgets are honored within one block grain; a budget wide
+//!   enough for the whole root space completes bit-identically.
+//! * An injected panic at any engine stage ([`Stage`]) surfaces as
+//!   [`MineError::WorkerPanicked`] with the process alive and the pool
+//!   unpoisoned — the same engine completes cleanly immediately after —
+//!   across the full threads × steal × shards matrix.
+//! * With budgets unset, governed counts are bit-identical to runs with
+//!   governance disabled outright (the differential-oracle discipline
+//!   every PR in this repo follows).
+//! * The CLI maps every governance ending to a distinct exit code and a
+//!   one-line diagnosis naming the knob to raise, while still printing
+//!   the partial answer.
+//!
+//! The fault harness ([`sandslash::util::fault`]) and the governance
+//! counters are process-global, so the tests serialize on one lock —
+//! the `sched_invariance.rs` pattern.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use sandslash::engine::bfs::bfs_count_motifs;
+use sandslash::engine::budget::{self, Budget};
+use sandslash::engine::esu::{count_motifs, MotifTable};
+use sandslash::engine::fsm::mine_fsm;
+use sandslash::engine::hooks::NoHooks;
+use sandslash::engine::{dfs, CancelReason, CancelToken, MineError, MinerConfig, OptFlags};
+use sandslash::exec::sched::{self, Overrides};
+use sandslash::graph::gen;
+use sandslash::pattern::{library, plan};
+use sandslash::util::fault::{self, FaultAction, FaultPlan, Stage};
+use sandslash::util::metrics;
+
+/// Serializes the tests in this binary (module docs). A panicking test
+/// poisons the lock; later tests recover the guard and proceed.
+static SERIAL: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn serial() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn tri_plan() -> sandslash::pattern::MatchingPlan {
+    plan(&library::triangle(), true, true)
+}
+
+#[test]
+fn golden_diagnosis_strings_and_exit_codes() {
+    // Satellite 3: the messages are part of the CLI contract — golden,
+    // not just substring-matched.
+    assert_eq!(
+        CancelReason::Deadline.diagnosis(),
+        "deadline exceeded: counts below are partial; raise --deadline-ms \
+         (or SANDSLASH_DEADLINE_MS) or narrow the query to finish"
+    );
+    assert_eq!(
+        CancelReason::TaskBudget.diagnosis(),
+        "task budget exhausted: counts below are partial; raise --max-tasks \
+         (or SANDSLASH_MAX_TASKS) or narrow the query to finish"
+    );
+    assert_eq!(
+        CancelReason::Caller.diagnosis(),
+        "cancelled by caller: counts below are partial up to the cancellation point"
+    );
+    assert_eq!(
+        CancelReason::WorkerPanic.diagnosis(),
+        "a worker panicked mid-run: results were discarded, not returned partial"
+    );
+    assert_eq!(
+        format!("{}", MineError::WorkerPanicked { engine: "dfs", payload: "boom".into() }),
+        "a dfs worker panicked mid-run: boom; the run was drained cleanly (no results) \
+         — rerun, or fix the panicking hook"
+    );
+    // code map: 0 complete, 1 load, 2 usage, then the governance codes
+    assert_eq!(
+        [
+            MineError::WorkerPanicked { engine: "dfs", payload: String::new() }.exit_code(),
+            CancelReason::Deadline.exit_code(),
+            CancelReason::TaskBudget.exit_code(),
+            CancelReason::Caller.exit_code(),
+        ],
+        [4, 5, 6, 7]
+    );
+}
+
+#[test]
+fn deadline_trips_mid_run_and_returns_a_partial_lower_bound() {
+    let _guard = serial();
+    let g = gen::rmat(10, 8, 11, &[]);
+    let pl = tri_plan();
+    let want = dfs::count(&g, &pl, &MinerConfig::custom(2, 8, OptFlags::hi()), &NoHooks)
+        .unwrap()
+        .value;
+    assert!(want > 0, "degenerate input");
+    // a delay fault makes the first claimed block reliably outlast a
+    // short deadline; one thread, grain 1, so the remaining blocks are
+    // refused one by one after the trip
+    fault::install(FaultPlan {
+        action: FaultAction::Delay(Duration::from_millis(80)),
+        at_task: 0,
+        stage: Some(Stage::RootClaim),
+    });
+    let cfg = MinerConfig::custom(1, 1, OptFlags::hi())
+        .with_deadline(Duration::from_millis(20));
+    let before = metrics::gov::snapshot();
+    let out = dfs::count(&g, &pl, &cfg, &NoHooks).unwrap();
+    let after = metrics::gov::snapshot();
+    fault::clear();
+    assert!(!out.complete, "an outlasted deadline must not report complete");
+    assert_eq!(out.tripped, Some(CancelReason::Deadline));
+    assert!(out.value <= want, "partial {} exceeds true count {want}", out.value);
+    assert_eq!(after.deadline_trips, before.deadline_trips + 1);
+}
+
+#[test]
+fn expired_deadline_yields_partial_outcomes_on_every_engine() {
+    let _guard = serial();
+    let g = gen::rmat(8, 6, 7, &[]);
+    let lg = gen::erdos_renyi(50, 0.12, 9, &[1, 2]);
+    let cfg = MinerConfig::custom(2, 8, OptFlags::hi()).with_deadline(Duration::ZERO);
+    let table = MotifTable::new(3);
+    let d = dfs::count(&g, &tri_plan(), &cfg, &NoHooks).unwrap();
+    assert!(!d.complete && d.tripped == Some(CancelReason::Deadline));
+    assert_eq!(d.value, 0, "no block may run under an already-expired deadline");
+    let e = count_motifs(&g, 3, &cfg, &NoHooks, &table).unwrap();
+    assert!(!e.complete && e.tripped == Some(CancelReason::Deadline));
+    assert!(e.value.iter().all(|&c| c == 0));
+    let f = mine_fsm(&lg, 2, 1, &cfg).unwrap();
+    assert!(!f.complete && f.tripped == Some(CancelReason::Deadline));
+    let b = bfs_count_motifs(&g, 3, &cfg, &table).unwrap();
+    assert!(!b.complete && b.tripped == Some(CancelReason::Deadline));
+}
+
+#[test]
+fn task_budget_honored_within_one_block_grain() {
+    let _guard = serial();
+    let g = gen::rmat(10, 8, 11, &[]);
+    let pl = tri_plan();
+    let want = dfs::count(&g, &pl, &MinerConfig::custom(2, 8, OptFlags::hi()), &NoHooks)
+        .unwrap()
+        .value;
+    // one thread, grain 1: each admitted task is exactly one root, so a
+    // budget of 4 mines at most 4 roots before refusing
+    let cfg = MinerConfig::custom(1, 1, OptFlags::hi()).with_max_tasks(4);
+    let before = metrics::gov::snapshot();
+    let out = dfs::count(&g, &pl, &cfg, &NoHooks).unwrap();
+    let after = metrics::gov::snapshot();
+    assert!(!out.complete);
+    assert_eq!(out.tripped, Some(CancelReason::TaskBudget));
+    assert!(out.value <= want);
+    assert!(
+        out.stats.enumerated <= 4 * g.num_vertices() as u64,
+        "4 grain-1 tasks cannot enumerate more than 4 roots' candidates"
+    );
+    assert_eq!(after.task_budget_trips, before.task_budget_trips + 1);
+    // a budget covering every block completes bit-identically
+    let n = g.num_vertices() as u64;
+    let wide = MinerConfig::custom(1, 1, OptFlags::hi()).with_max_tasks(n + 8);
+    let ok = dfs::count(&g, &pl, &wide, &NoHooks).unwrap();
+    assert!(ok.complete && ok.tripped.is_none());
+    assert_eq!(ok.value, want);
+}
+
+#[test]
+fn caller_cancellation_stops_the_run_at_its_first_poll() {
+    let _guard = serial();
+    let g = gen::rmat(9, 8, 3, &[]);
+    let pl = tri_plan();
+    let token = Arc::new(CancelToken::new());
+    token.cancel(); // pre-tripped: no block may be admitted
+    let out = budget::with_cancel(token, || {
+        dfs::count(&g, &pl, &MinerConfig::custom(2, 8, OptFlags::hi()), &NoHooks)
+    })
+    .unwrap();
+    assert!(!out.complete);
+    assert_eq!(out.tripped, Some(CancelReason::Caller));
+    assert_eq!(out.value, 0);
+    // outside the scope, the same run completes — the token was scoped
+    let clean = dfs::count(&g, &pl, &MinerConfig::custom(2, 8, OptFlags::hi()), &NoHooks)
+        .unwrap();
+    assert!(clean.complete);
+    assert!(clean.value > 0);
+}
+
+#[test]
+fn budgets_unset_counts_bit_identical_to_governance_disabled() {
+    let _guard = serial();
+    let g = gen::rmat(9, 8, 5, &[]);
+    let lg = gen::erdos_renyi(60, 0.12, 9, &[1, 2, 3]);
+    let cfg = MinerConfig::custom(4, 8, OptFlags::hi());
+    assert_eq!(cfg.budget, Budget::default(), "test premise: no limits set");
+    let pl = tri_plan();
+    let t3 = MotifTable::new(3);
+    let fp = |r: &[sandslash::engine::fsm::FrequentPattern]| {
+        r.iter().map(|f| (f.code.clone(), f.support)).collect::<Vec<_>>()
+    };
+    let (raw_dfs, raw_esu, raw_bfs, raw_fsm) = budget::with_governance_disabled(|| {
+        (
+            dfs::count(&g, &pl, &cfg, &NoHooks).unwrap().value,
+            count_motifs(&g, 3, &cfg, &NoHooks, &t3).unwrap().value,
+            bfs_count_motifs(&g, 3, &cfg, &t3).unwrap().value.counts,
+            mine_fsm(&lg, 3, 1, &cfg).unwrap().value,
+        )
+    });
+    let gov_dfs = dfs::count(&g, &pl, &cfg, &NoHooks).unwrap();
+    assert!(gov_dfs.complete && gov_dfs.tripped.is_none());
+    assert_eq!(gov_dfs.value, raw_dfs);
+    assert_eq!(count_motifs(&g, 3, &cfg, &NoHooks, &t3).unwrap().value, raw_esu);
+    assert_eq!(bfs_count_motifs(&g, 3, &cfg, &t3).unwrap().value.counts, raw_bfs);
+    assert_eq!(fp(&mine_fsm(&lg, 3, 1, &cfg).unwrap().value), fp(&raw_fsm));
+}
+
+#[test]
+fn injected_root_claim_panic_is_isolated_across_the_matrix() {
+    let _guard = serial();
+    let g = gen::rmat(8, 6, 7, &[]);
+    let pl = tri_plan();
+    let want = dfs::count(&g, &pl, &MinerConfig::single_thread(OptFlags::hi()), &NoHooks)
+        .unwrap()
+        .value;
+    for threads in [1usize, 8] {
+        for steal in [false, true] {
+            for shards in [1usize, 2] {
+                let label = format!("threads={threads} steal={steal} shards={shards}");
+                let cfg = MinerConfig::custom(threads, 1, OptFlags::hi())
+                    .with_steal(steal)
+                    .with_shards(shards);
+                sched::with_overrides(
+                    Overrides { steal: Some(steal), shards: Some(shards) },
+                    || {
+                        fault::install(FaultPlan {
+                            action: FaultAction::Panic,
+                            at_task: 0,
+                            stage: Some(Stage::RootClaim),
+                        });
+                        let res = dfs::count(&g, &pl, &cfg, &NoHooks);
+                        fault::clear();
+                        match res {
+                            Err(MineError::WorkerPanicked { engine, payload }) => {
+                                assert_eq!(engine, "dfs", "{label}");
+                                assert!(
+                                    payload.contains("injected fault"),
+                                    "{label}: payload {payload:?}"
+                                );
+                            }
+                            other => {
+                                panic!("{label}: expected WorkerPanicked, got {other:?}")
+                            }
+                        }
+                        // process alive, pool unpoisoned: the very next
+                        // run on the same configuration completes exactly
+                        let again = dfs::count(&g, &pl, &cfg, &NoHooks).unwrap();
+                        assert!(again.complete, "{label}");
+                        assert_eq!(again.value, want, "{label}");
+                    },
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn every_engine_surfaces_injected_panics_with_the_process_alive() {
+    let _guard = serial();
+    let g = gen::rmat(8, 6, 7, &[]);
+    let lg = gen::erdos_renyi(60, 0.12, 9, &[1, 2, 3]);
+    let cfg = MinerConfig::custom(4, 4, OptFlags::hi());
+    let t3 = MotifTable::new(3);
+
+    // ESU: panic in a claimed root task
+    fault::install(FaultPlan {
+        action: FaultAction::Panic,
+        at_task: 0,
+        stage: Some(Stage::RootClaim),
+    });
+    let esu = count_motifs(&g, 3, &cfg, &NoHooks, &t3);
+    fault::clear();
+    assert!(
+        matches!(&esu, Err(MineError::WorkerPanicked { engine: "esu", .. })),
+        "esu: {esu:?}"
+    );
+
+    // FSM: panic inside child-pattern regeneration
+    fault::install(FaultPlan {
+        action: FaultAction::Panic,
+        at_task: 0,
+        stage: Some(Stage::FsmRegen),
+    });
+    let fsm = mine_fsm(&lg, 3, 1, &cfg);
+    fault::clear();
+    assert!(
+        matches!(&fsm, Err(MineError::WorkerPanicked { engine: "fsm", .. })),
+        "fsm: {fsm:?}"
+    );
+
+    // BFS: panic inside a level-expansion block
+    fault::install(FaultPlan {
+        action: FaultAction::Panic,
+        at_task: 0,
+        stage: Some(Stage::BfsLevel),
+    });
+    let bfs = bfs_count_motifs(&g, 3, &cfg, &t3);
+    fault::clear();
+    assert!(
+        matches!(&bfs, Err(MineError::WorkerPanicked { engine: "bfs", .. })),
+        "bfs: {bfs:?}"
+    );
+
+    // harness disarmed: every engine completes cleanly in this process
+    assert!(count_motifs(&g, 3, &cfg, &NoHooks, &t3).unwrap().complete);
+    assert!(mine_fsm(&lg, 3, 1, &cfg).unwrap().complete);
+    assert!(bfs_count_motifs(&g, 3, &cfg, &t3).unwrap().complete);
+}
+
+#[test]
+fn split_task_panic_is_isolated_when_splits_fire() {
+    let _guard = serial();
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    if cores < 2 || !sched::steal_enabled_default() {
+        eprintln!("skipping split-task fault injection (cores={cores}, steal off)");
+        return;
+    }
+    // two hub roots carry ~all the work; grain 1 and 8 workers starve
+    // the cheap tail into the split protocol (the PR-4 regression
+    // input), so a SplitTask crossing fires on some bounded attempt
+    let g = gen::two_hub(1 << 13);
+    let pl = tri_plan();
+    let cfg = MinerConfig::custom(8, 1, OptFlags::hi()).with_shards(1);
+    let want = dfs::count(&g, &pl, &MinerConfig::single_thread(OptFlags::hi()), &NoHooks)
+        .unwrap()
+        .value;
+    let mut fired = false;
+    for _attempt in 0..5 {
+        fault::install(FaultPlan {
+            action: FaultAction::Panic,
+            at_task: 0,
+            stage: Some(Stage::SplitTask),
+        });
+        let res = dfs::count(&g, &pl, &cfg, &NoHooks);
+        fault::clear();
+        match res {
+            Err(MineError::WorkerPanicked { engine, payload }) => {
+                assert_eq!(engine, "dfs");
+                assert!(payload.contains("injected fault"), "payload {payload:?}");
+                fired = true;
+                break;
+            }
+            // no split happened on this attempt (timing): the run must
+            // then be complete and exact, never silently partial
+            Ok(out) => {
+                assert!(out.complete);
+                assert_eq!(out.value, want);
+            }
+            Err(other) => panic!("unexpected error: {other}"),
+        }
+    }
+    assert!(fired, "no split task fired across 5 attempts on the two-hub graph");
+}
+
+#[test]
+fn cli_maps_governance_endings_to_distinct_exit_codes() {
+    // Satellite 3, end to end: spawn the real binary. `--system
+    // peregrine` routes tc through the governed generic engine (the
+    // default `hi` system is the hand-tuned ungoverned kernel).
+    let bin = env!("CARGO_BIN_EXE_sandslash");
+    let run = |args: &[&str], envs: &[(&str, &str)]| {
+        let mut cmd = std::process::Command::new(bin);
+        cmd.args(args);
+        for (k, v) in envs {
+            cmd.env(k, v);
+        }
+        let out = cmd.output().expect("spawn sandslash");
+        (
+            out.status.code(),
+            String::from_utf8_lossy(&out.stdout).into_owned(),
+            String::from_utf8_lossy(&out.stderr).into_owned(),
+        )
+    };
+    let tc: &[&str] =
+        &["tc", "--graph", "er-small", "--system", "peregrine", "--threads", "1"];
+
+    // worker panic -> exit 4, diagnosis on stderr, no partial answer
+    let (code, _, err) = run(tc, &[("SANDSLASH_FAULT", "panic@0")]);
+    assert_eq!(code, Some(4), "stderr: {err}");
+    assert!(err.contains("worker panicked mid-run"), "{err}");
+    assert!(err.contains("injected fault"), "{err}");
+
+    // task budget -> exit 6, knob named, partial answer still printed
+    let (code, outp, err) = run(&[tc, &["--max-tasks", "1"]].concat(), &[]);
+    assert_eq!(code, Some(6), "stderr: {err}");
+    assert!(err.contains("raise --max-tasks"), "{err}");
+    assert!(outp.contains("triangles = "), "partial answer must still print: {outp}");
+
+    // deadline (first block delayed past it) -> exit 5, knob named
+    let (code, outp, err) = run(
+        &[tc, &["--deadline-ms", "10"]].concat(),
+        &[("SANDSLASH_FAULT", "delay@0:200")],
+    );
+    assert_eq!(code, Some(5), "stderr: {err}");
+    assert!(err.contains("raise --deadline-ms"), "{err}");
+    assert!(outp.contains("triangles = "), "{outp}");
+
+    // SANDSLASH_NO_GOV disables budgets outright -> complete, exit 0
+    let (code, outp, err) =
+        run(&[tc, &["--max-tasks", "1"]].concat(), &[("SANDSLASH_NO_GOV", "1")]);
+    assert_eq!(code, Some(0), "stderr: {err}");
+    assert!(outp.contains("triangles = "), "{outp}");
+
+    // unusable budget flags are rejected loudly and the run completes
+    let (code, _, err) = run(&[tc, &["--max-tasks", "banana"]].concat(), &[]);
+    assert_eq!(code, Some(0), "stderr: {err}");
+    assert!(err.contains("ignoring --max-tasks"), "{err}");
+
+    // usage and load failures keep their reserved codes
+    let (code, _, _) = run(&["frobnicate"], &[]);
+    assert_eq!(code, Some(2));
+    let (code, _, _) = run(&["tc", "--graph", "no-such-graph"], &[]);
+    assert_eq!(code, Some(1));
+}

@@ -31,7 +31,7 @@ fn tc_all_paths_agree_across_families() {
         let want = tc::tc_hi(&g, &cfg());
         assert_eq!(gap_tc::gap_tc(&g, &cfg()), want);
         for s in SYSTEMS {
-            assert_eq!(emulation::tc(&g, s, &cfg()), want, "{}", s.name());
+            assert_eq!(emulation::tc(&g, s, &cfg()).unwrap().value, want, "{}", s.name());
         }
     }
 }
@@ -44,7 +44,7 @@ fn cliques_all_paths_agree() {
         assert_eq!(clique::clique_lo(&g, k, &cfg()).0, want, "lo k={k}");
         assert_eq!(kclist::kclist(&g, k, &cfg()).0, want, "kclist k={k}");
         for s in SYSTEMS {
-            assert_eq!(emulation::clique(&g, k, s, &cfg()), want, "{} k={k}", s.name());
+            assert_eq!(emulation::clique(&g, k, s, &cfg()).unwrap().value, want, "{} k={k}", s.name());
         }
     }
 }
@@ -53,13 +53,13 @@ fn cliques_all_paths_agree() {
 fn motifs_all_paths_agree() {
     let g = gen::rmat(8, 6, 5, &[]);
     for k in [3, 4] {
-        let want = emulation::motifs(&g, k, System::SandslashHi, &cfg());
+        let want = emulation::motifs(&g, k, System::SandslashHi, &cfg()).unwrap().value;
         for s in SYSTEMS {
-            assert_eq!(emulation::motifs(&g, k, s, &cfg()), want, "{} k={k}", s.name());
+            assert_eq!(emulation::motifs(&g, k, s, &cfg()).unwrap().value, want, "{} k={k}", s.name());
         }
         let pgd_counts = match k {
-            3 => pgd::pgd_motif3(&g, &cfg()),
-            _ => pgd::pgd_motif4(&g, &cfg()),
+            3 => pgd::pgd_motif3(&g, &cfg()).unwrap(),
+            _ => pgd::pgd_motif4(&g, &cfg()).unwrap(),
         };
         assert_eq!(pgd_counts, want, "pgd k={k}");
     }
@@ -69,9 +69,9 @@ fn motifs_all_paths_agree() {
 fn sl_systems_agree_on_both_patterns() {
     let g = gen::rmat(8, 7, 6, &[]);
     for p in [library::diamond(), library::cycle(4)] {
-        let want = sl::sl_count(&g, &p, &cfg()).0;
+        let want = sl::sl_count(&g, &p, &cfg()).unwrap().value;
         for s in [System::SandslashHi, System::PangolinLike, System::PeregrineLike] {
-            assert_eq!(emulation::sl(&g, &p, s, &cfg()), want, "{}", s.name());
+            assert_eq!(emulation::sl(&g, &p, s, &cfg()).unwrap().value, want, "{}", s.name());
         }
     }
 }
@@ -79,12 +79,11 @@ fn sl_systems_agree_on_both_patterns() {
 #[test]
 fn fsm_three_engines_agree() {
     let g = gen::erdos_renyi(60, 0.08, 7, &[1, 2, 3]);
-    let a = fsm_app::fsm(&g, 3, 1, &cfg());
-    let b = fsm_app::fsm_bfs(&g, 3, 1, &cfg());
-    let c = peregrine_fsm::peregrine_fsm(&g, 3, 1, &cfg());
-    let key = |r: &sandslash::engine::fsm::FsmResult| {
-        r.frequent
-            .iter()
+    let a = fsm_app::fsm(&g, 3, 1, &cfg()).unwrap().value;
+    let b = fsm_app::fsm_bfs(&g, 3, 1, &cfg()).unwrap().value;
+    let c = peregrine_fsm::peregrine_fsm(&g, 3, 1, &cfg()).unwrap().frequent;
+    let key = |r: &[sandslash::engine::fsm::FrequentPattern]| {
+        r.iter()
             .map(|f| (f.code.clone(), f.support))
             .collect::<Vec<_>>()
     };
@@ -99,7 +98,7 @@ fn thread_scaling_preserves_all_results() {
         let c = MinerConfig::custom(threads, 8, OptFlags::hi());
         assert_eq!(tc::tc_hi(&g, &c), tc::tc_hi(&g, &cfg()));
         assert_eq!(clique::clique_lo(&g, 5, &c).0, clique::clique_lo(&g, 5, &cfg()).0);
-        assert_eq!(motif::motif4_lo(&g, &c), motif::motif4_lo(&g, &cfg()));
+        assert_eq!(motif::motif4_lo(&g, &c).unwrap(), motif::motif4_lo(&g, &cfg()).unwrap());
     }
 }
 
@@ -107,28 +106,30 @@ fn thread_scaling_preserves_all_results() {
 fn solve_facade_covers_all_five_apps() {
     let g = gen::rmat(8, 8, 9, &[]);
     let lg = gen::erdos_renyi(80, 0.08, 10, &[1, 2]);
-    match solve(&g, &ProblemSpec::tc(), &cfg()) {
+    match solve(&g, &ProblemSpec::tc(), &cfg()).unwrap().value {
         MiningOutput::Count(c) => assert_eq!(c, tc::tc_hi(&g, &cfg())),
         o => panic!("{o:?}"),
     }
-    match solve(&g, &ProblemSpec::clique_listing(4), &cfg()) {
+    match solve(&g, &ProblemSpec::clique_listing(4), &cfg()).unwrap().value {
         MiningOutput::Count(c) => assert_eq!(c, clique::clique_hi(&g, 4, &cfg()).0),
         o => panic!("{o:?}"),
     }
-    match solve(&g, &ProblemSpec::motif_counting(4), &cfg()) {
+    match solve(&g, &ProblemSpec::motif_counting(4), &cfg()).unwrap().value {
         MiningOutput::PerPattern(rows) => {
             let got: Vec<u64> = rows.iter().map(|(_, c)| *c).collect();
-            assert_eq!(got, motif::motif4_hi(&g, &cfg()).0);
+            assert_eq!(got, motif::motif4_hi(&g, &cfg()).unwrap().value);
         }
         o => panic!("{o:?}"),
     }
-    match solve(&g, &ProblemSpec::subgraph_listing(library::diamond()), &cfg()) {
-        MiningOutput::Count(c) => assert_eq!(c, sl::sl_count(&g, &library::diamond(), &cfg()).0),
+    match solve(&g, &ProblemSpec::subgraph_listing(library::diamond()), &cfg()).unwrap().value {
+        MiningOutput::Count(c) => {
+            assert_eq!(c, sl::sl_count(&g, &library::diamond(), &cfg()).unwrap().value)
+        }
         o => panic!("{o:?}"),
     }
-    match solve(&lg, &ProblemSpec::fsm(2, 2), &cfg()) {
+    match solve(&lg, &ProblemSpec::fsm(2, 2), &cfg()).unwrap().value {
         MiningOutput::Frequent(rows) => {
-            assert_eq!(rows.len(), fsm_app::fsm(&lg, 2, 2, &cfg()).frequent.len());
+            assert_eq!(rows.len(), fsm_app::fsm(&lg, 2, 2, &cfg()).unwrap().value.len());
         }
         o => panic!("{o:?}"),
     }
@@ -140,6 +141,6 @@ fn dataset_registry_consistency() {
     // tiny datasets must load and produce consistent counts across systems
     let g = datasets::load("lj-tiny").unwrap();
     let want = tc::tc_hi(&g, &cfg());
-    assert_eq!(emulation::tc(&g, System::PeregrineLike, &cfg()), want);
-    assert_eq!(emulation::tc(&g, System::PangolinLike, &cfg()), want);
+    assert_eq!(emulation::tc(&g, System::PeregrineLike, &cfg()).unwrap().value, want);
+    assert_eq!(emulation::tc(&g, System::PangolinLike, &cfg()).unwrap().value, want);
 }

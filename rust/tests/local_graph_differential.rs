@@ -43,7 +43,7 @@ fn count_with(
 ) -> u64 {
     let pl = plan(p, vertex_induced, true);
     let cfg = MinerConfig::custom(threads, 16, opts);
-    dfs::count(g, &pl, &cfg, &NoHooks).0
+    dfs::count(g, &pl, &cfg, &NoHooks).unwrap().value
 }
 
 #[test]

@@ -46,7 +46,7 @@ fn xla_triangle_count_matches_engine() {
 fn xla_motif4_matches_engine() {
     let Some(a) = accel() else { return };
     let g = gen::erdos_renyi(400, 0.02, 3, &[]);
-    let want = motif4_hi(&g, &cfg()).0;
+    let want = motif4_hi(&g, &cfg()).unwrap().value;
     let got = a.motif4(&g, &cfg()).expect("xla motif4");
     assert_eq!(got, want);
 }

@@ -36,9 +36,9 @@ fn serial() -> std::sync::MutexGuard<'static, ()> {
 
 /// Order-independent FSM result: (rendered pattern, support), sorted.
 fn fsm_fingerprint(g: &CsrGraph, cfg: &MinerConfig) -> Vec<(String, u64)> {
-    let r = fsm_app::fsm(g, 2, 2, cfg);
+    let r = fsm_app::fsm(g, 2, 2, cfg).unwrap().value;
     let mut rows: Vec<(String, u64)> =
-        r.frequent.iter().map(|f| (format!("{}", f.pattern), f.support)).collect();
+        r.iter().map(|f| (format!("{}", f.pattern), f.support)).collect();
     rows.sort();
     rows
 }
@@ -53,8 +53,8 @@ fn all_apps_invariant_across_threads_steal_shards() {
     let tc_ref = tc::tc_hi(&g, &base);
     let cl4_ref = clique::clique_hi(&g, 4, &base).0;
     let cl5_ref = clique::clique_hi(&g, 5, &base).0;
-    let m3_ref = motif::motif3_hi(&g, &base).0;
-    let sl_ref = sl::sl_count(&g, &library::diamond(), &base).0;
+    let m3_ref = motif::motif3_hi(&g, &base).unwrap().value;
+    let sl_ref = sl::sl_count(&g, &library::diamond(), &base).unwrap().value;
     let fsm_ref = fsm_fingerprint(&gl, &base);
     assert!(tc_ref > 0 && cl4_ref > 0, "degenerate reference input");
     for threads in [1usize, 2, 8] {
@@ -70,9 +70,13 @@ fn all_apps_invariant_across_threads_steal_shards() {
                         assert_eq!(tc::tc_hi(&g, &cfg), tc_ref, "tc {label}");
                         assert_eq!(clique::clique_hi(&g, 4, &cfg).0, cl4_ref, "clique-4 {label}");
                         assert_eq!(clique::clique_hi(&g, 5, &cfg).0, cl5_ref, "clique-5 {label}");
-                        assert_eq!(motif::motif3_hi(&g, &cfg).0, m3_ref, "motif-3 {label}");
                         assert_eq!(
-                            sl::sl_count(&g, &library::diamond(), &cfg).0,
+                            motif::motif3_hi(&g, &cfg).unwrap().value,
+                            m3_ref,
+                            "motif-3 {label}"
+                        );
+                        assert_eq!(
+                            sl::sl_count(&g, &library::diamond(), &cfg).unwrap().value,
                             sl_ref,
                             "sl {label}"
                         );
@@ -94,14 +98,14 @@ fn generic_dfs_invariant_on_skewed_input_across_full_matrix() {
         for pat in [library::triangle(), library::clique(4), library::cycle(4)] {
             let pl = plan(&pat, true, true);
             let base = MinerConfig::single_thread(opts).with_steal(false);
-            let (want, _) = dfs::count(&g, &pl, &base, &NoHooks);
+            let (want, _) = dfs::count(&g, &pl, &base, &NoHooks).unwrap().into_parts();
             for threads in [2usize, 8] {
                 for steal in [false, true] {
                     for shards in [1usize, 2] {
                         let cfg = MinerConfig::custom(threads, 1, opts)
                             .with_steal(steal)
                             .with_shards(shards);
-                        let (got, _) = dfs::count(&g, &pl, &cfg, &NoHooks);
+                        let (got, _) = dfs::count(&g, &pl, &cfg, &NoHooks).unwrap().into_parts();
                         assert_eq!(
                             got, want,
                             "pattern {pat} threads={threads} steal={steal} shards={shards}"
@@ -134,7 +138,7 @@ fn skewed_two_hub_graph_actually_steals_and_splits() {
     let pl = plan(&library::triangle(), true, true);
     let oracle_cfg =
         MinerConfig::custom(8, 1, OptFlags::hi()).with_steal(false).with_shards(1);
-    let (want, _) = dfs::count(&g, &pl, &oracle_cfg, &NoHooks);
+    let (want, _) = dfs::count(&g, &pl, &oracle_cfg, &NoHooks).unwrap().into_parts();
     assert!(want > 0, "degenerate skewed input");
 
     // The hub grind dominates the cheap tail by >10x, so starvation —
@@ -146,7 +150,7 @@ fn skewed_two_hub_graph_actually_steals_and_splits() {
     let (mut claims_fired, mut steals_fired, mut splits_fired) = (false, false, false);
     for _attempt in 0..3 {
         let before = metrics::sched::snapshot();
-        let (got, _) = dfs::count(&g, &pl, &steal_cfg, &NoHooks);
+        let (got, _) = dfs::count(&g, &pl, &steal_cfg, &NoHooks).unwrap().into_parts();
         let after = metrics::sched::snapshot();
         assert_eq!(got, want, "stealing run disagrees with the cursor oracle");
         claims_fired |= after.claims > before.claims;
@@ -167,7 +171,7 @@ fn skewed_two_hub_graph_actually_steals_and_splits() {
     // migrate (foreign-shard claims or steals) to finish the run
     let sharded_cfg = MinerConfig::custom(8, 1, OptFlags::hi()).with_shards(2);
     let b2 = metrics::sched::snapshot();
-    let (got2, _) = dfs::count(&g, &pl, &sharded_cfg, &NoHooks);
+    let (got2, _) = dfs::count(&g, &pl, &sharded_cfg, &NoHooks).unwrap().into_parts();
     let a2 = metrics::sched::snapshot();
     assert_eq!(got2, want, "sharded stealing run disagrees with the cursor oracle");
     assert!(

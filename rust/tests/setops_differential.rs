@@ -259,9 +259,9 @@ fn engine_counts_invariant_under_simd_toggle() {
             let pl = plan(&p, true, true);
             let lo = MinerConfig::custom(2, 16, OptFlags::lo());
             setops::set_simd_enabled(false);
-            let a = dfs::count(&g, &pl, &lo, &NoHooks).0;
+            let a = dfs::count(&g, &pl, &lo, &NoHooks).unwrap().value;
             setops::set_simd_enabled(true);
-            let b = dfs::count(&g, &pl, &lo, &NoHooks).0;
+            let b = dfs::count(&g, &pl, &lo, &NoHooks).unwrap().value;
             assert_eq!(a, b, "LG stage, seed={seed}");
         }
     }
@@ -293,7 +293,7 @@ fn count_with(
     opts.sets = sets;
     opts.mnc = mnc;
     let cfg = MinerConfig::custom(threads, 16, opts);
-    dfs::count(g, &pl, &cfg, &NoHooks).0
+    dfs::count(g, &pl, &cfg, &NoHooks).unwrap().value
 }
 
 #[test]
