@@ -231,6 +231,16 @@ thread_local! {
 /// token: every [`Governor`] created inside the scope (on this thread)
 /// polls it once per claimed block and trips [`CancelReason::Caller`]
 /// when it is cancelled. Restores the previous token on exit.
+///
+/// **Reentrancy (PR 7)**: the install is thread-local and scoped —
+/// never process-global — which is what makes the resident service
+/// sound. Each query installs its own token around its own engine run;
+/// concurrent queries on other threads see their own tokens (or none),
+/// and when the scope exits the previous token is restored, so a
+/// thread that goes on to serve another query cannot carry a stale
+/// cancel across. A pre-cancelled token therefore trips exactly one
+/// query; the same thread's next run completes untouched (asserted by
+/// `tests/service_concurrency.rs::scoped_thread_locals_do_not_leak`).
 pub fn with_cancel<R>(token: Arc<CancelToken>, f: impl FnOnce() -> R) -> R {
     let prev = CALLER_TOKEN.with(|t| t.replace(Some(token)));
     struct Restore(Option<Arc<CancelToken>>);

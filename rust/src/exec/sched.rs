@@ -123,6 +123,17 @@ thread_local! {
 /// safe), so concurrent tests can sweep steal/shard settings without
 /// racing on process globals. The workers a run spawns inherit the
 /// policy resolved *at launch*, not the thread-local itself.
+///
+/// **Reentrancy (PR 7)**: this scoping is what lets the resident
+/// service multiplex queries. Each [`reduce`] call builds its own pool
+/// over its own root set, so any number of root sets can be in flight
+/// at once — overrides installed on one query's thread are invisible
+/// to every other query's, and the restore-on-exit guard means a pool
+/// thread that later serves a different query starts from that
+/// query's own ambient state, never a leaked one (same contract as
+/// [`budget::with_cancel`](crate::engine::budget::with_cancel);
+/// asserted by `tests/service_concurrency.rs` and the
+/// `simultaneous_root_sets_are_isolated` test below).
 pub fn with_overrides<T>(ov: Overrides, f: impl FnOnce() -> T) -> T {
     let prev = OVERRIDES.with(|c| c.replace(ov));
     struct Restore(Overrides);
@@ -1054,5 +1065,48 @@ mod tests {
         });
         let after = SchedPolicy::auto(4, 8);
         assert_eq!(after.shards, base.shards);
+    }
+
+    #[test]
+    fn simultaneous_root_sets_are_isolated() {
+        // the resident-service shape: several threads run reduce() at
+        // once, each over its own root set with its own overrides; every
+        // sum must be exact and no thread may observe a peer's overrides
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                std::thread::spawn(move || {
+                    let ov = Overrides { steal: Some(i % 2 == 0), shards: Some(i + 1) };
+                    with_overrides(ov, || {
+                        let pol = SchedPolicy::auto(2, 3);
+                        match ov.steal {
+                            Some(false) => assert!(!pol.steal),
+                            _ => assert_eq!(pol.steal, steal_enabled_default()),
+                        }
+                        assert_eq!(pol.shards, i + 1);
+                        let n = 64 + i * 17;
+                        let total = reduce(
+                            n,
+                            &pol,
+                            || 0u64,
+                            |acc, _, task| {
+                                if let Task::Roots { start, end } = task {
+                                    *acc += (start..end).map(|r| r as u64 + 1).sum::<u64>();
+                                }
+                            },
+                            |a, b| a + b,
+                        );
+                        assert_eq!(total, (n as u64) * (n as u64 + 1) / 2);
+                        // the run must not have perturbed this thread's
+                        // own ambient overrides
+                        assert_eq!(current_overrides(), ov);
+                    });
+                    // and the scope restores the default on the way out
+                    assert_eq!(current_overrides(), Overrides::default());
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
     }
 }

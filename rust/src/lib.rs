@@ -43,6 +43,9 @@
 //! * [`exec`] — the work-stealing, locality-sharded scheduler the
 //!   engines fan their root tasks through (cursor oracle retained)
 //! * [`apps`] — the five paper applications + hand-optimized baselines
+//! * [`service`] — the resident multi-tenant query service: load-once
+//!   graphs, line-JSON protocol, admission control, canonical-pattern
+//!   result cache (`sandslash serve`)
 //! * [`runtime`] — PJRT loader for the AOT-compiled Pallas counting path
 //! * [`coordinator`] — dataset registry and experiment campaign driver
 //! * [`util`] — substrates (RNG, bitset, pool, CLI, config, bench)
@@ -66,6 +69,7 @@ pub mod pattern;
 pub mod engine;
 pub mod exec;
 pub mod apps;
+pub mod service;
 pub mod runtime;
 pub mod coordinator;
 pub mod util;

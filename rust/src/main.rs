@@ -10,6 +10,11 @@
 //!   fsm     --graph <name|file> --k K --sigma S [--bfs|--peregrine]
 //!   accel   --graph <name|file> [--artifacts DIR] [--motif4]
 //!   campaign <table5|table6|table7|table8|table9|fig8|fig9|fig10|fig11|scaling|all>
+//!   serve   [--addr A] [--port-file F] [--max-inflight N] [--cache-bytes N]
+//!           [--threads N] [--preload g1,g2]
+//!   query   --addr A|--port-file F [--id I] [--op OP] [--graph G]
+//!           [--pattern P] [--induced] [--deadline-ms N] [--max-tasks N]
+//!           [--threads N] [--high] [--no-cache] [--target ID] [--line JSON]
 //!
 //! `--graph` accepts a registered dataset name (see coordinator::datasets)
 //! or a path to an edge-list / .csr snapshot file.
@@ -29,6 +34,11 @@
 //! counts, then exits nonzero. Exit codes: 0 complete, 1 load/internal
 //! error, 2 usage, 3 BFS level cap, 4 worker panic, 5 deadline,
 //! 6 task budget, 7 caller cancel.
+//!
+//! Resident service (PR 7): `serve` starts the long-lived multi-tenant
+//! query process (see `sandslash::service`); `query` is the one-shot
+//! line client, exiting with the response's structured `code` — the
+//! same table as above, plus 8 = admission rejected (overloaded).
 
 use sandslash::apps::baselines::emulation::{self, System};
 use sandslash::apps::{clique, fsm_app, motif, sl, tc};
@@ -63,6 +73,8 @@ fn run(args: &Args) -> i32 {
         Some("fsm") => cmd_fsm(args),
         Some("accel") => cmd_accel(args),
         Some("campaign") => cmd_campaign(args),
+        Some("serve") => cmd_serve(args),
+        Some("query") => cmd_query(args),
         _ => {
             eprintln!("{}", USAGE);
             2
@@ -89,7 +101,7 @@ fn sched_overrides(args: &Args) -> Overrides {
     Overrides { steal, shards }
 }
 
-const USAGE: &str = "sandslash <gen|stats|tc|clique|motif|sl|fsm|accel|campaign> [options]\n\
+const USAGE: &str = "sandslash <gen|stats|tc|clique|motif|sl|fsm|accel|campaign|serve|query> [options]\n\
     see rust/src/main.rs header for per-command options";
 
 fn load_graph(args: &Args) -> Option<CsrGraph> {
@@ -408,6 +420,129 @@ fn cmd_accel(args: &Args) -> i32 {
         }
     }
     0
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    use sandslash::service::{Server, Service, ServiceConfig};
+    let mut cfg = ServiceConfig::from_env();
+    cfg.max_inflight = args.get_usize("max-inflight", cfg.max_inflight);
+    cfg.max_queued = 2 * cfg.max_inflight;
+    cfg.cache_bytes = args.get_usize("cache-bytes", cfg.cache_bytes);
+    cfg.default_threads = args.get_usize("threads", cfg.default_threads);
+    let service = match Service::new(cfg) {
+        Ok(s) => std::sync::Arc::new(s),
+        Err(e) => {
+            eprintln!("sandslash: {e}");
+            return 1;
+        }
+    };
+    if let Some(list) = args.get("preload") {
+        for name in list.split(',').filter(|s| !s.is_empty()) {
+            match service.preload(name) {
+                Ok((vertices, edges)) => {
+                    eprintln!("sandslash: preloaded {name} ({vertices} vertices, {edges} edges)")
+                }
+                Err(e) => {
+                    eprintln!("sandslash: preload {name}: {e:?}");
+                    return 1;
+                }
+            }
+        }
+    }
+    let server = match Server::bind(service, args.get_or("addr", "127.0.0.1:0")) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("sandslash: bind failed: {e}");
+            return 1;
+        }
+    };
+    let addr = server.local_addr();
+    if let Some(path) = args.get("port-file") {
+        // the CI smoke (and any supervisor) reads the ephemeral port here
+        if let Err(e) = std::fs::write(path, addr.to_string()) {
+            eprintln!("sandslash: write {path}: {e}");
+            return 1;
+        }
+    }
+    println!("sandslash: serving on {addr}");
+    match server.serve() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("sandslash: serve failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_query(args: &Args) -> i32 {
+    use sandslash::service::{request_over_socket, response_code, Op, PatternSpec, Request};
+    let addr = match args.get("addr") {
+        Some(a) => a.to_string(),
+        None => match args.get("port-file") {
+            Some(path) => match std::fs::read_to_string(path) {
+                Ok(s) => s.trim().to_string(),
+                Err(e) => {
+                    eprintln!("sandslash: read {path}: {e}");
+                    return 1;
+                }
+            },
+            None => {
+                eprintln!("sandslash: query needs --addr or --port-file");
+                return 2;
+            }
+        },
+    };
+    let line = match args.get("line") {
+        // raw passthrough: the caller authors the JSON line itself
+        Some(raw) => raw.to_string(),
+        None => {
+            let mut req = Request::query(
+                args.get_or("id", "cli"),
+                args.get_or("graph", "er-small"),
+                PatternSpec::Named(args.get_or("pattern", "triangle").to_string()),
+            );
+            match args.get_or("op", "query") {
+                "query" => {}
+                "cancel" => req.op = Op::Cancel,
+                "invalidate" => req.op = Op::Invalidate,
+                "graphs" => req.op = Op::Graphs,
+                "stats" => req.op = Op::Stats,
+                "ping" => req.op = Op::Ping,
+                "shutdown" => req.op = Op::Shutdown,
+                other => {
+                    eprintln!("sandslash: unknown --op {other:?}");
+                    return 2;
+                }
+            }
+            if req.op != Op::Query {
+                // bare ops carry no query payload on the wire
+                req.graph = args.get("graph").map(|s| s.to_string());
+                req.pattern = None;
+            }
+            req.vertex_induced = args.flag("induced");
+            req.deadline_ms = args.get("deadline-ms").and_then(|s| s.trim().parse().ok());
+            req.max_tasks = args.get("max-tasks").and_then(|s| s.trim().parse().ok());
+            req.threads = args.get("threads").and_then(|s| s.trim().parse().ok());
+            if args.flag("high") {
+                req.priority = sandslash::service::Priority::High;
+            }
+            req.no_cache = args.flag("no-cache");
+            req.target = args.get("target").map(|s| s.to_string());
+            req.render()
+        }
+    };
+    match request_over_socket(&addr, &line) {
+        Ok(response) => {
+            println!("{response}");
+            // the structured response code doubles as the exit code,
+            // mirroring the one-shot commands' table
+            response_code(&response).unwrap_or(1)
+        }
+        Err(e) => {
+            eprintln!("sandslash: request failed: {e}");
+            1
+        }
+    }
 }
 
 fn cmd_campaign(args: &Args) -> i32 {

@@ -205,4 +205,85 @@ mod tests {
         let code = canonical_code(&k4);
         assert_eq!(code.bits, 0b111111);
     }
+
+    /// The library patterns the property tests below sweep: every 3- and
+    /// 4-vertex motif class, plus 5-vertex shapes at both density
+    /// extremes. This is the pattern population the PR-7 result cache
+    /// keys on, so the two properties below are exactly its soundness
+    /// (isomorphic ⇒ one key) and precision (non-isomorphic ⇒ distinct
+    /// keys) obligations.
+    fn cache_key_population() -> Vec<Pattern> {
+        let mut pop = super::super::library::all_motifs(3);
+        pop.extend(super::super::library::all_motifs(4));
+        pop.push(super::super::library::clique(5));
+        pop.push(super::super::library::cycle(5));
+        pop.push(super::super::library::path(5));
+        pop.push(super::super::library::star(4));
+        pop
+    }
+
+    fn random_perm(rng: &mut crate::util::rng::Rng, n: usize) -> Vec<usize> {
+        let mut perm: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut perm);
+        perm
+    }
+
+    #[test]
+    fn property_random_relabelings_share_one_code() {
+        let mut rng = crate::util::rng::Rng::seeded(0x7c4);
+        for (i, p) in cache_key_population().iter().enumerate() {
+            let code = canonical_code(p);
+            for round in 0..24 {
+                let perm = random_perm(&mut rng, p.num_vertices());
+                let q = p.permuted(&perm);
+                assert_eq!(
+                    canonical_code(&q),
+                    code,
+                    "pattern {i} round {round}: relabeling {perm:?} changed the code"
+                );
+                assert!(isomorphic(p, &q));
+            }
+        }
+    }
+
+    #[test]
+    fn property_non_isomorphic_patterns_never_collide() {
+        let pop = cache_key_population();
+        let codes: Vec<CanonCode> = pop.iter().map(canonical_code).collect();
+        for i in 0..pop.len() {
+            for j in (i + 1)..pop.len() {
+                assert_ne!(
+                    codes[i], codes[j],
+                    "patterns {i} and {j} collided: {} vs {}",
+                    pop[i], pop[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn property_labeled_relabelings_share_one_code_and_labels_split_classes() {
+        // label each population pattern two ways: uniformly (still one
+        // class per shape) and with a distinguished vertex (which must
+        // split the class from the uniform one)
+        let mut rng = crate::util::rng::Rng::seeded(0x51a5);
+        for p in cache_key_population() {
+            let n = p.num_vertices();
+            let mut uniform = p.clone();
+            for v in 0..n {
+                uniform.set_label(v, 7);
+            }
+            let mut marked = uniform.clone();
+            marked.set_label(0, 9);
+            let (u_code, m_code) = (canonical_code(&uniform), canonical_code(&marked));
+            assert_ne!(u_code, m_code, "a distinguished label must split the class");
+            for _ in 0..12 {
+                let perm = random_perm(&mut rng, n);
+                assert_eq!(canonical_code(&uniform.permuted(&perm)), u_code);
+                // permuting relocates the mark with its vertex — still
+                // the same labeled isomorphism class
+                assert_eq!(canonical_code(&marked.permuted(&perm)), m_code);
+            }
+        }
+    }
 }

@@ -1,0 +1,502 @@
+//! Canonical-pattern result cache with single-flight coalescing.
+//!
+//! Peregrine's observation (PAPERS.md, arXiv 2004.02369) is that
+//! pattern-aware canonicalization makes semantically equal queries
+//! *syntactically* equal — which is exactly what makes a cross-tenant
+//! result cache sound. The key is
+//! ([`graph`, `epoch`](CacheKey::graph), [`CanonCode`], induced mode,
+//! [`HookKind`]): two tenants asking for "diamond on livej" — one by
+//! name, one as an explicit relabeled edge list — hash to the same
+//! entry, while a graph mutation (epoch bump via the `invalidate` op)
+//! orphans every stale entry by construction.
+//!
+//! Three load-bearing properties, each unit-tested below:
+//!
+//! * **Single-flight**: concurrent misses for one key run the compute
+//!   once — the first caller becomes the leader, the rest block and
+//!   replay the leader's bytes ([`CacheStats::coalesced`]).
+//! * **Partial results are never cached**: the leader reports whether
+//!   its value is cacheable (budget-tripped [`Outcome`]s are not); a
+//!   non-cacheable fill wakes the waiters to run for themselves rather
+//!   than poisoning the cache with a lower bound.
+//! * **LRU byte cap**: entries are charged key + value bytes against
+//!   [`ResultCache::cap_bytes`] (`SANDSLASH_CACHE_BYTES`); inserting
+//!   past the cap evicts least-recently-used entries first.
+//!
+//! Values are `Arc<String>` — the pre-rendered result fragment of
+//! [`crate::service::protocol::count_result`] — so a cache hit is
+//! byte-identical to its miss-path original by construction (the
+//! concurrency suite asserts this end to end).
+//!
+//! [`Outcome`]: crate::engine::Outcome
+
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::pattern::CanonCode;
+
+/// Which low-level hook surface produced the cached value. Today the
+/// service serves counting queries only ([`HookKind::Count`]); the
+/// field exists so listing or per-pattern hooks can share the cache
+/// without colliding with counts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum HookKind {
+    /// Plain embedding count ([`crate::engine::dfs::count`] + `NoHooks`).
+    Count,
+}
+
+/// The cache key (see the module docs).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    /// Graph name in the registry.
+    pub graph: String,
+    /// Graph epoch the result was computed against.
+    pub epoch: u64,
+    /// Canonical form of the query pattern.
+    pub pattern: CanonCode,
+    /// Vertex-induced vs edge-induced matching.
+    pub vertex_induced: bool,
+    /// Hook surface.
+    pub hook: HookKind,
+}
+
+impl CacheKey {
+    /// Approximate heap footprint charged against the byte cap.
+    fn bytes(&self) -> usize {
+        self.graph.len() + self.pattern.labels.len() * 4 + 48
+    }
+}
+
+/// Monotonic cache counters (the `stats` op and the test assertions).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Probes answered from a ready entry.
+    pub hits: u64,
+    /// Probes that found nothing and became the computing leader.
+    pub misses: u64,
+    /// Probes that blocked on an in-flight leader and replayed its
+    /// bytes (single-flight coalescing).
+    pub coalesced: u64,
+    /// Complete results inserted.
+    pub fills: u64,
+    /// Results refused (budget-tripped partials, errors).
+    pub rejected: u64,
+    /// Entries evicted by the LRU byte cap.
+    pub evictions: u64,
+    /// Entries dropped by graph invalidation.
+    pub invalidated: u64,
+}
+
+enum Slot {
+    Ready { value: Arc<String>, bytes: usize, last_used: u64 },
+    /// A leader is computing; `generation` bumps on every resolution
+    /// so waiters can tell "resolved" from spurious wakeups. The owner
+    /// token keeps a slow leader's resolution from clobbering a newer
+    /// leader's pending slot (possible after a rejected fill re-opens
+    /// the key while the old leader is still unwinding).
+    Pending { owner: u64 },
+}
+
+#[derive(Default)]
+struct Inner {
+    map: HashMap<CacheKey, Slot>,
+    bytes: usize,
+    tick: u64,
+    generation: u64,
+    next_owner: u64,
+    stats: CacheStats,
+}
+
+/// The cache (see the module docs). One `Mutex` + `Condvar` guards the
+/// whole table — probes are two hash lookups, computes run unlocked.
+pub struct ResultCache {
+    cap_bytes: usize,
+    inner: Mutex<Inner>,
+    resolved: Condvar,
+}
+
+impl ResultCache {
+    /// A cache bounded at `cap_bytes` of charged key + value bytes.
+    pub fn new(cap_bytes: usize) -> Self {
+        Self { cap_bytes, inner: Mutex::new(Inner::default()), resolved: Condvar::new() }
+    }
+
+    /// The configured byte cap.
+    pub fn cap_bytes(&self) -> usize {
+        self.cap_bytes
+    }
+
+    /// Probe for `key`, computing on miss with single-flight
+    /// coalescing. `compute` returns the value and whether it is
+    /// cacheable (complete); it is called at most once per
+    /// `get_or_compute` call, and — across all concurrent callers of
+    /// one key — once per cacheable resolution. Returns the value and
+    /// whether it came from the cache (a ready entry or a coalesced
+    /// leader fill).
+    pub fn get_or_compute(
+        &self,
+        key: &CacheKey,
+        compute: impl FnOnce() -> (Arc<String>, bool),
+    ) -> (Arc<String>, bool) {
+        enum Probe {
+            Hit,
+            Wait,
+            Lead,
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let owner;
+        loop {
+            let probe = match inner.map.get(key) {
+                Some(Slot::Ready { .. }) => Probe::Hit,
+                Some(Slot::Pending { .. }) => Probe::Wait,
+                None => Probe::Lead,
+            };
+            match probe {
+                Probe::Hit => {
+                    inner.tick += 1;
+                    let tick = inner.tick;
+                    let value = match inner.map.get_mut(key) {
+                        Some(Slot::Ready { value, last_used, .. }) => {
+                            *last_used = tick;
+                            value.clone()
+                        }
+                        _ => unreachable!(),
+                    };
+                    inner.stats.hits += 1;
+                    return (value, true);
+                }
+                Probe::Wait => {
+                    let gen_seen = inner.generation;
+                    while inner.generation == gen_seen {
+                        inner = self.resolved.wait(inner).unwrap();
+                    }
+                    // a resolution happened somewhere: if this key's
+                    // leader filled a ready entry, the next loop turn
+                    // replays it (counted as a coalesced hit); if the
+                    // fill was rejected, the slot is gone and this
+                    // caller races to become the next leader.
+                    if matches!(inner.map.get(key), Some(Slot::Ready { .. })) {
+                        inner.stats.coalesced += 1;
+                    }
+                }
+                Probe::Lead => {
+                    owner = inner.next_owner;
+                    inner.next_owner += 1;
+                    inner.map.insert(key.clone(), Slot::Pending { owner });
+                    inner.stats.misses += 1;
+                    break;
+                }
+            }
+        }
+        drop(inner);
+        // leader: compute unlocked, resolve under the lock. The guard
+        // un-wedges waiters even if `compute` panics (engine panics are
+        // caught by the governor, but the cache must not rely on it).
+        let guard = PendingGuard { cache: self, key, owner };
+        let (value, cacheable) = compute();
+        guard.resolve(value.clone(), cacheable);
+        (value, false)
+    }
+
+    fn resolve_slot(&self, key: &CacheKey, owner: u64, fill: Option<(Arc<String>, usize)>) {
+        let mut inner = self.inner.lock().unwrap();
+        if matches!(inner.map.get(key), Some(Slot::Pending { owner: o }) if *o == owner) {
+            inner.map.remove(key);
+        }
+        match fill {
+            // complete results for one key are deterministic, so if a
+            // racing leader already filled the entry, keeping theirs is
+            // equivalent — only the bytes accounting must stay exact
+            Some((value, bytes)) if bytes <= self.cap_bytes => {
+                if inner.map.contains_key(key) {
+                    inner.stats.rejected += 1;
+                } else {
+                    inner.tick += 1;
+                    let tick = inner.tick;
+                    inner.bytes += bytes;
+                    inner
+                        .map
+                        .insert(key.clone(), Slot::Ready { value, bytes, last_used: tick });
+                    inner.stats.fills += 1;
+                    while inner.bytes > self.cap_bytes {
+                        let victim = inner
+                            .map
+                            .iter()
+                            .filter_map(|(k, s)| match s {
+                                Slot::Ready { last_used, .. } => Some((*last_used, k.clone())),
+                                Slot::Pending { .. } => None,
+                            })
+                            .min_by_key(|(t, _)| *t)
+                            .map(|(_, k)| k);
+                        match victim {
+                            Some(k) => {
+                                if let Some(Slot::Ready { bytes, .. }) = inner.map.remove(&k) {
+                                    inner.bytes -= bytes;
+                                    inner.stats.evictions += 1;
+                                }
+                            }
+                            None => break,
+                        }
+                    }
+                }
+            }
+            Some(_) | None => inner.stats.rejected += 1,
+        }
+        inner.generation += 1;
+        drop(inner);
+        self.resolved.notify_all();
+    }
+
+    /// Drop every entry of `graph` (any epoch). The registry bumps the
+    /// epoch too, so even a racing fill against the old epoch can never
+    /// be probed again — this purge just frees its bytes early.
+    pub fn purge_graph(&self, graph: &str) -> usize {
+        let mut inner = self.inner.lock().unwrap();
+        let stale: Vec<CacheKey> = inner
+            .map
+            .iter()
+            .filter(|(k, s)| k.graph == graph && matches!(s, Slot::Ready { .. }))
+            .map(|(k, _)| k.clone())
+            .collect();
+        for k in &stale {
+            if let Some(Slot::Ready { bytes, .. }) = inner.map.remove(k) {
+                inner.bytes -= bytes;
+                inner.stats.invalidated += 1;
+            }
+        }
+        stale.len()
+    }
+
+    /// Current counters.
+    pub fn stats(&self) -> CacheStats {
+        self.inner.lock().unwrap().stats
+    }
+
+    /// Charged bytes resident right now.
+    pub fn bytes(&self) -> usize {
+        self.inner.lock().unwrap().bytes
+    }
+
+    /// Ready entries resident right now.
+    pub fn len(&self) -> usize {
+        let inner = self.inner.lock().unwrap();
+        inner.map.values().filter(|s| matches!(s, Slot::Ready { .. })).count()
+    }
+
+    /// Whether no ready entry is resident.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Removes a wedged `Pending` slot if the leader's compute panics.
+struct PendingGuard<'a> {
+    cache: &'a ResultCache,
+    key: &'a CacheKey,
+    owner: u64,
+}
+
+impl PendingGuard<'_> {
+    fn resolve(self, value: Arc<String>, cacheable: bool) {
+        let fill = cacheable.then(|| {
+            let bytes = self.key.bytes() + value.len();
+            (value, bytes)
+        });
+        self.cache.resolve_slot(self.key, self.owner, fill);
+        std::mem::forget(self);
+    }
+}
+
+impl Drop for PendingGuard<'_> {
+    fn drop(&mut self) {
+        self.cache.resolve_slot(self.key, self.owner, None);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Barrier;
+
+    fn key(graph: &str, epoch: u64, bits: u64) -> CacheKey {
+        CacheKey {
+            graph: graph.to_string(),
+            epoch,
+            pattern: CanonCode { n: 3, labels: vec![0, 0, 0], bits },
+            vertex_induced: false,
+            hook: HookKind::Count,
+        }
+    }
+
+    fn val(s: &str) -> Arc<String> {
+        Arc::new(s.to_string())
+    }
+
+    #[test]
+    fn hit_replays_the_exact_miss_bytes() {
+        let cache = ResultCache::new(1 << 16);
+        let k = key("g", 0, 0b11);
+        let (first, hit) = cache.get_or_compute(&k, || (val("{\"count\":7}"), true));
+        assert!(!hit);
+        let (second, hit) = cache.get_or_compute(&k, || unreachable!("must not recompute"));
+        assert!(hit);
+        assert!(Arc::ptr_eq(&first, &second), "hits must replay the original bytes");
+        assert_eq!(cache.stats().hits, 1);
+        assert_eq!(cache.stats().misses, 1);
+    }
+
+    #[test]
+    fn single_flight_coalesces_concurrent_misses() {
+        // a blocking hook: the leader's compute parks on a barrier until
+        // every other client is provably waiting on the pending slot
+        let cache = Arc::new(ResultCache::new(1 << 16));
+        let k = key("g", 0, 0b11);
+        let computes = Arc::new(AtomicUsize::new(0));
+        let release = Arc::new(Barrier::new(2)); // leader's compute + the coordinator
+        let n_waiters = 7;
+        let mut handles = Vec::new();
+        // leader
+        {
+            let (cache, k, computes, release) =
+                (cache.clone(), k.clone(), computes.clone(), release.clone());
+            handles.push(std::thread::spawn(move || {
+                cache.get_or_compute(&k, || {
+                    computes.fetch_add(1, Ordering::SeqCst);
+                    release.wait(); // block until waiters have piled up
+                    (val("{\"count\":7}"), true)
+                })
+            }));
+        }
+        // wait until the pending slot exists, then pile on waiters
+        while computes.load(Ordering::SeqCst) == 0 {
+            std::thread::yield_now();
+        }
+        for _ in 0..n_waiters {
+            let (cache, k, computes) = (cache.clone(), k.clone(), computes.clone());
+            handles.push(std::thread::spawn(move || {
+                cache.get_or_compute(&k, || {
+                    computes.fetch_add(1, Ordering::SeqCst);
+                    (val("never"), true)
+                })
+            }));
+        }
+        // give the waiters time to reach the condvar, then release the
+        // leader (a late waiter still coalesces — it finds the ready
+        // entry — so the count assertions hold either way)
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        release.wait();
+        let results: Vec<(Arc<String>, bool)> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(computes.load(Ordering::SeqCst), 1, "compute must run exactly once");
+        let leader = results.iter().find(|(_, cached)| !cached).unwrap().0.clone();
+        for (v, _) in &results {
+            assert!(Arc::ptr_eq(v, &leader), "coalesced waiters replay the leader's bytes");
+        }
+        assert_eq!(results.iter().filter(|(_, cached)| *cached).count(), n_waiters);
+        let stats = cache.stats();
+        assert_eq!((stats.misses, stats.fills), (1, 1));
+        assert_eq!(stats.hits, n_waiters as u64);
+    }
+
+    #[test]
+    fn partial_results_are_never_cached_and_waiters_rerun() {
+        let cache = Arc::new(ResultCache::new(1 << 16));
+        let k = key("g", 0, 0b11);
+        // leader resolves non-cacheable (budget-tripped partial)
+        let (v, cached) = cache.get_or_compute(&k, || (val("partial"), false));
+        assert_eq!((v.as_str(), cached), ("partial", false));
+        assert_eq!(cache.stats().rejected, 1);
+        assert_eq!(cache.len(), 0, "partials must not be cached");
+        // the next probe is a fresh miss, not a hit on the partial
+        let (v, cached) = cache.get_or_compute(&k, || (val("complete"), true));
+        assert_eq!((v.as_str(), cached), ("complete", false));
+        assert_eq!(cache.stats().misses, 2);
+    }
+
+    #[test]
+    fn waiters_on_a_rejected_fill_run_for_themselves() {
+        let cache = Arc::new(ResultCache::new(1 << 16));
+        let k = key("g", 0, 0b11);
+        let in_compute = Arc::new(Barrier::new(2));
+        let leader = {
+            let (cache, k, in_compute) = (cache.clone(), k.clone(), in_compute.clone());
+            std::thread::spawn(move || {
+                cache.get_or_compute(&k, || {
+                    in_compute.wait();
+                    // simulate a deadline trip: not cacheable
+                    std::thread::sleep(std::time::Duration::from_millis(20));
+                    (val("partial"), false)
+                })
+            })
+        };
+        in_compute.wait(); // leader is computing; this probe coalesces
+        let (v, cached) = cache.get_or_compute(&k, || (val("mine"), true));
+        // the waiter was woken by a rejected fill and ran its own
+        // compute (its budget may differ from the leader's)
+        assert_eq!((v.as_str(), cached), ("mine", false));
+        assert_eq!(leader.join().unwrap().0.as_str(), "partial");
+        assert_eq!(cache.stats().rejected, 1);
+        assert_eq!(cache.stats().fills, 1);
+    }
+
+    #[test]
+    fn lru_byte_cap_evicts_least_recently_used_first() {
+        // room for two ~100-byte entries, not three
+        let k1 = key("g", 0, 1);
+        let per_entry = k1.bytes() + 40;
+        let cache = ResultCache::new(2 * per_entry);
+        let big = "x".repeat(40);
+        let (k2, k3) = (key("g", 0, 2), key("g", 0, 3));
+        cache.get_or_compute(&k1, || (val(&big), true));
+        cache.get_or_compute(&k2, || (val(&big), true));
+        assert_eq!((cache.len(), cache.stats().evictions), (2, 0));
+        // touch k1 so k2 is the LRU victim
+        cache.get_or_compute(&k1, || unreachable!());
+        cache.get_or_compute(&k3, || (val(&big), true));
+        assert_eq!(cache.stats().evictions, 1);
+        assert_eq!(cache.len(), 2);
+        // k2 was evicted; k1 and k3 still hit
+        cache.get_or_compute(&k1, || unreachable!());
+        cache.get_or_compute(&k3, || unreachable!());
+        let recomputed = std::cell::Cell::new(false);
+        cache.get_or_compute(&k2, || {
+            recomputed.set(true);
+            (val(&big), true)
+        });
+        assert!(recomputed.get(), "the LRU victim must have been k2");
+        // an entry bigger than the whole cap is refused outright
+        let huge = "y".repeat(3 * per_entry);
+        let (_, cached) = cache.get_or_compute(&key("g", 0, 4), || (val(&huge), true));
+        assert!(!cached);
+        let evictions_before = cache.stats().evictions;
+        let (_, cached) = cache.get_or_compute(&key("g", 0, 4), || (val(&huge), true));
+        assert!(!cached, "an over-cap value must never displace the working set");
+        assert_eq!(cache.stats().evictions, evictions_before);
+    }
+
+    #[test]
+    fn epoch_bump_orphans_old_entries_and_purge_frees_bytes() {
+        let cache = ResultCache::new(1 << 16);
+        let old = key("livej", 0, 0b11);
+        cache.get_or_compute(&old, || (val("{\"count\":9}"), true));
+        assert_eq!(cache.len(), 1);
+        // an epoch bump changes the key: same query, fresh compute
+        let new = CacheKey { epoch: 1, ..old.clone() };
+        let ran = std::cell::Cell::new(false);
+        cache.get_or_compute(&new, || {
+            ran.set(true);
+            (val("{\"count\":10}"), true)
+        });
+        assert!(ran.get(), "epoch bump must miss");
+        // purge drops both epochs' entries for the graph, not others
+        let other = key("orkut", 0, 0b11);
+        cache.get_or_compute(&other, || (val("{\"count\":1}"), true));
+        let bytes_before = cache.bytes();
+        assert_eq!(cache.purge_graph("livej"), 2);
+        assert_eq!(cache.stats().invalidated, 2);
+        assert!(cache.bytes() < bytes_before);
+        assert_eq!(cache.len(), 1);
+        cache.get_or_compute(&other, || unreachable!("other graphs must survive the purge"));
+    }
+}

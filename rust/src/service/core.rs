@@ -1,0 +1,424 @@
+//! The resident service: admission → cache probe → governed run →
+//! cache fill.
+//!
+//! [`Service`] owns the four shared structures of the resident process
+//! — the [`GraphRegistry`], the [`ResultCache`], the [`Admission`]
+//! gate, and the in-flight token table (`cancel` op) — and exposes one
+//! transport-free entry point, [`Service::handle`], that both the TCP
+//! listener ([`super::net`]) and the in-process test harness call. A
+//! query's life:
+//!
+//! 1. **Admission**: claim a slot from the bounded gate, or fail with
+//!    `overloaded` ([`CODE_OVERLOADED`]) when the wait queue is full.
+//! 2. **Cache probe**: canonicalize the pattern
+//!    ([`crate::pattern::canonical_code`]) and probe the result cache
+//!    under (graph, epoch, canonical form, induced mode, hook kind).
+//!    A hit replays the miss-path bytes; a concurrent miss coalesces
+//!    onto the in-flight leader.
+//! 3. **Governed run**: on a true miss, build a per-query
+//!    [`MinerConfig`] (request budget over the service default), install
+//!    the query's [`CancelToken`] via the scoped
+//!    [`budget::with_cancel`], and run the DFS engine on the shared
+//!    stealing scheduler. Each run builds its own worker pool, so
+//!    concurrent queries are structurally independent — the PR-6 worker
+//!    panic isolation makes a poisoned query a code-4 *response*, never
+//!    a process death.
+//! 4. **Cache fill**: complete results (code 0) are inserted; tripped
+//!    partials and errors are rejected (waiters rerun for themselves,
+//!    because *their* budget may well afford the full answer).
+//!
+//! The service **refuses to start ungoverned**
+//! ([`ServiceError::Ungoverned`]): with `SANDSLASH_NO_GOV=1` there are
+//! no deadline polls, no task budgets, and no panic containment — every
+//! multi-tenant guarantee above would be silently void.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use super::admission::{AdmitError, Admission};
+use super::cache::{CacheKey, CacheStats, HookKind, ResultCache};
+use super::protocol::{
+    count_result, mine_error_code, mine_error_name, parse_request, resolve_pattern, Op,
+    ProtoError, Request, Response, CODE_OVERLOADED,
+};
+use super::registry::{GraphRegistry, RegistryError};
+use crate::engine::budget::{self, CancelToken};
+use crate::engine::dfs;
+use crate::engine::hooks::NoHooks;
+use crate::engine::{MinerConfig, OptFlags};
+use crate::graph::CsrGraph;
+use crate::pattern::{canonical_code, plan, Pattern};
+use crate::util::pool;
+
+/// Service-level tunables; [`ServiceConfig::from_env`] reads the
+/// `SANDSLASH_*` knobs, tests construct explicit values.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// Queries running at once (`SANDSLASH_MAX_INFLIGHT`, default 4).
+    pub max_inflight: usize,
+    /// Queries allowed to wait (default `2 × max_inflight`).
+    pub max_queued: usize,
+    /// Result-cache byte cap (`SANDSLASH_CACHE_BYTES`, default 64 MiB).
+    pub cache_bytes: usize,
+    /// Worker threads per query when the request doesn't override.
+    pub default_threads: usize,
+    /// Budget applied when the request doesn't override
+    /// (seeded from the PR-6 env knobs like every one-shot run).
+    pub default_budget: crate::engine::Budget,
+}
+
+impl ServiceConfig {
+    /// Read the service knobs from the environment (loud-reject parses,
+    /// like every `SANDSLASH_*` numeric knob).
+    pub fn from_env() -> Self {
+        let max_inflight = pool::positive_usize_env("SANDSLASH_MAX_INFLIGHT", 4);
+        Self {
+            max_inflight,
+            max_queued: 2 * max_inflight,
+            cache_bytes: pool::positive_usize_env("SANDSLASH_CACHE_BYTES", 64 << 20),
+            default_threads: pool::default_threads(),
+            default_budget: crate::engine::Budget::from_env(),
+        }
+    }
+}
+
+/// Why the service refused to start.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServiceError {
+    /// Governance is disabled (`SANDSLASH_NO_GOV=1` or a scoped
+    /// [`budget::with_governance_disabled`]): no deadlines, no budgets,
+    /// no panic isolation — unacceptable for a multi-tenant resident
+    /// process, so the refusal is loud, not a degraded start.
+    Ungoverned,
+}
+
+impl std::fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServiceError::Ungoverned => write!(
+                f,
+                "refusing to serve ungoverned: SANDSLASH_NO_GOV disables the deadline, \
+                 task-budget, and worker-panic containment every tenant depends on; \
+                 unset it to start the service"
+            ),
+        }
+    }
+}
+
+/// The resident service (see the module docs).
+pub struct Service {
+    cfg: ServiceConfig,
+    registry: GraphRegistry,
+    cache: ResultCache,
+    admission: Admission,
+    /// Cancel tokens of in-flight queries, keyed by request id (the
+    /// `cancel` op's target namespace). Entries live exactly as long as
+    /// the query; a finished id is free for reuse.
+    inflight: Mutex<HashMap<String, Arc<CancelToken>>>,
+    shutdown: AtomicBool,
+    queries: AtomicU64,
+}
+
+impl Service {
+    /// A fresh service, or [`ServiceError::Ungoverned`] when governance
+    /// is off (the service never starts without its safety substrate).
+    pub fn new(cfg: ServiceConfig) -> Result<Self, ServiceError> {
+        if !budget::governance_enabled() {
+            return Err(ServiceError::Ungoverned);
+        }
+        let admission = Admission::new(cfg.max_inflight, cfg.max_queued);
+        let cache = ResultCache::new(cfg.cache_bytes);
+        Ok(Self {
+            cfg,
+            registry: GraphRegistry::new(),
+            cache,
+            admission,
+            inflight: Mutex::new(HashMap::new()),
+            shutdown: AtomicBool::new(false),
+            queries: AtomicU64::new(0),
+        })
+    }
+
+    /// Handle one wire line: parse, dispatch, render. Parse failures
+    /// respond with id `"?"` (the line never yielded one).
+    pub fn handle_line(&self, line: &str) -> String {
+        match parse_request(line) {
+            Ok(req) => self.handle(&req).render(),
+            Err(e) => Response::error("?", e).render(),
+        }
+    }
+
+    /// Handle one parsed request (the transport-free entry point the
+    /// in-process suites drive directly).
+    pub fn handle(&self, req: &Request) -> Response {
+        match req.op {
+            Op::Query => self.run_query(req),
+            Op::Cancel => self.cancel(req),
+            Op::Invalidate => self.invalidate(req),
+            Op::Graphs => self.graphs(req),
+            Op::Stats => self.stats_op(req),
+            Op::Ping => ok_fragment(req, "{\"pong\":true}"),
+            Op::Shutdown => {
+                self.shutdown.store(true, Ordering::SeqCst);
+                ok_fragment(req, "{\"shutdown\":true}")
+            }
+        }
+    }
+
+    /// Whether a `shutdown` op has been handled (polled by the
+    /// listener's accept loop).
+    pub fn shutdown_requested(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Current cache counters (test and `stats` surface).
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    /// Materialize a graph before the first query asks for it (the
+    /// `serve --preload` flag). Returns `(vertices, undirected edges)`.
+    pub fn preload(&self, name: &str) -> Result<(usize, usize), RegistryError> {
+        let (g, _) = self.registry.get(name)?;
+        Ok((g.num_vertices(), g.num_undirected_edges()))
+    }
+
+    /// The service configuration in effect.
+    pub fn config(&self) -> &ServiceConfig {
+        &self.cfg
+    }
+
+    fn run_query(&self, req: &Request) -> Response {
+        let Some(graph_name) = req.graph.as_deref() else {
+            return Response::error(
+                &req.id,
+                ProtoError::usage("missing-field", "query requires \"graph\""),
+            );
+        };
+        let Some(spec) = req.pattern.as_ref() else {
+            return Response::error(
+                &req.id,
+                ProtoError::usage("missing-field", "query requires \"pattern\" or \"edges\""),
+            );
+        };
+        let pattern = match resolve_pattern(spec) {
+            Ok(p) => p,
+            Err(e) => return Response::error(&req.id, e),
+        };
+        // admission before loading: an overloaded service must shed
+        // work before materializing graphs for it
+        let permit = match self.admission.admit(req.priority) {
+            Ok(p) => p,
+            Err(AdmitError::Overloaded { inflight, queued }) => {
+                return Response::error(
+                    &req.id,
+                    ProtoError {
+                        name: "overloaded",
+                        detail: format!(
+                            "{inflight} in flight, {queued} queued; retry later or raise \
+                             SANDSLASH_MAX_INFLIGHT"
+                        ),
+                        code: CODE_OVERLOADED,
+                    },
+                )
+            }
+        };
+        let (g, epoch) = match self.registry.get(graph_name) {
+            Ok(pair) => pair,
+            Err(RegistryError::UnknownGraph(name)) => {
+                return Response::error(
+                    &req.id,
+                    ProtoError {
+                        name: "unknown-graph",
+                        detail: format!("no dataset named {name:?} in the registry"),
+                        code: 1,
+                    },
+                )
+            }
+        };
+        self.queries.fetch_add(1, Ordering::Relaxed);
+        // register the cancel token under the request id for the
+        // lifetime of the run (the `cancel` op's lookup)
+        let token = Arc::new(CancelToken::new());
+        {
+            let mut inflight = self.inflight.lock().unwrap();
+            if inflight.contains_key(&req.id) {
+                return Response::error(
+                    &req.id,
+                    ProtoError::usage(
+                        "duplicate-id",
+                        "a query with this id is already in flight",
+                    ),
+                );
+            }
+            inflight.insert(req.id.clone(), token.clone());
+        }
+        let _unregister = Unregister { service: self, id: &req.id };
+        let key = CacheKey {
+            graph: graph_name.to_string(),
+            epoch,
+            pattern: canonical_code(&pattern),
+            vertex_induced: req.vertex_induced,
+            hook: HookKind::Count,
+        };
+        // the compute closure smuggles its code/error past the cache's
+        // (value, cacheable) signature; a cache hit leaves them at the
+        // defaults, which is exact — only code-0 results are ever cached
+        let code = std::cell::Cell::new(0i32);
+        let err: std::cell::RefCell<Option<ProtoError>> = std::cell::RefCell::new(None);
+        let compute = || match self.execute(&g, &pattern, req, &token) {
+            Ok((fragment, c)) => {
+                code.set(c);
+                (Arc::new(fragment), c == 0)
+            }
+            Err(e) => {
+                code.set(e.code);
+                *err.borrow_mut() = Some(e);
+                (Arc::new(String::new()), false)
+            }
+        };
+        let (value, cached) = if req.no_cache {
+            (compute().0, false)
+        } else {
+            self.cache.get_or_compute(&key, compute)
+        };
+        drop(permit);
+        match err.into_inner() {
+            Some(e) => Response::error(&req.id, e),
+            None => Response::ok(&req.id, value, cached, code.get(), Some(epoch)),
+        }
+    }
+
+    /// The governed engine run of one true cache miss.
+    fn execute(
+        &self,
+        g: &CsrGraph,
+        p: &Pattern,
+        req: &Request,
+        token: &Arc<CancelToken>,
+    ) -> Result<(String, i32), ProtoError> {
+        let mut cfg = MinerConfig::custom(
+            req.threads.unwrap_or(self.cfg.default_threads),
+            pool::default_chunk(),
+            OptFlags::hi(),
+        );
+        cfg.budget = self.cfg.default_budget;
+        if let Some(ms) = req.deadline_ms {
+            cfg.budget.deadline = Some(Duration::from_millis(ms));
+        }
+        if let Some(n) = req.max_tasks {
+            cfg.budget.max_tasks = Some(n);
+        }
+        let pl = plan(p, req.vertex_induced, true);
+        // the scoped token install is what makes `cancel` reach this
+        // run — and it is scoped: it restores on exit, never leaking
+        // into whatever query this pool thread serves next
+        let run = budget::with_cancel(token.clone(), || dfs::count(g, &pl, &cfg, &NoHooks));
+        match run {
+            Ok(out) => {
+                let code = out.tripped.map(|r| r.exit_code()).unwrap_or(0);
+                Ok((count_result(out.value, out.tripped), code))
+            }
+            Err(e) => Err(ProtoError {
+                name: mine_error_name(&e),
+                detail: e.to_string(),
+                code: mine_error_code(&e),
+            }),
+        }
+    }
+
+    fn cancel(&self, req: &Request) -> Response {
+        let Some(target) = req.target.as_deref() else {
+            return Response::error(
+                &req.id,
+                ProtoError::usage("missing-field", "cancel requires \"target\""),
+            );
+        };
+        // idempotent: a finished (or never-seen) target is not an error,
+        // the caller just learns nothing was in flight to cancel
+        let hit = match self.inflight.lock().unwrap().get(target) {
+            Some(token) => {
+                token.cancel();
+                true
+            }
+            None => false,
+        };
+        ok_rendered(req, format!("{{\"cancelled\":{hit}}}"))
+    }
+
+    fn invalidate(&self, req: &Request) -> Response {
+        let Some(graph) = req.graph.as_deref() else {
+            return Response::error(
+                &req.id,
+                ProtoError::usage("missing-field", "invalidate requires \"graph\""),
+            );
+        };
+        let epoch = self.registry.bump_epoch(graph);
+        let purged = self.cache.purge_graph(graph);
+        let epoch_json =
+            epoch.map(|e| e.to_string()).unwrap_or_else(|| "null".to_string());
+        ok_rendered(req, format!("{{\"epoch\":{epoch_json},\"purged\":{purged}}}"))
+    }
+
+    fn graphs(&self, req: &Request) -> Response {
+        let rows: Vec<String> = self
+            .registry
+            .resident()
+            .into_iter()
+            .map(|(name, epoch, vertices, edges)| {
+                format!(
+                    "{{\"name\":\"{}\",\"epoch\":{epoch},\"vertices\":{vertices},\"edges\":{edges}}}",
+                    super::json::escape(&name),
+                )
+            })
+            .collect();
+        ok_rendered(req, format!("{{\"graphs\":[{}]}}", rows.join(",")))
+    }
+
+    fn stats_op(&self, req: &Request) -> Response {
+        let s = self.cache.stats();
+        let (inflight, queued) = self.admission.snapshot();
+        ok_rendered(
+            req,
+            format!(
+                "{{\"queries\":{},\"inflight\":{inflight},\"queued\":{queued},\
+                 \"cache\":{{\"hits\":{},\"misses\":{},\"coalesced\":{},\"fills\":{},\
+                 \"rejected\":{},\"evictions\":{},\"invalidated\":{},\"bytes\":{},\
+                 \"entries\":{}}}}}",
+                self.queries.load(Ordering::Relaxed),
+                s.hits,
+                s.misses,
+                s.coalesced,
+                s.fills,
+                s.rejected,
+                s.evictions,
+                s.invalidated,
+                self.cache.bytes(),
+                self.cache.len(),
+            ),
+        )
+    }
+}
+
+fn ok_fragment(req: &Request, fragment: &str) -> Response {
+    Response::ok(&req.id, Arc::new(fragment.to_string()), false, 0, None)
+}
+
+fn ok_rendered(req: &Request, fragment: String) -> Response {
+    Response::ok(&req.id, Arc::new(fragment), false, 0, None)
+}
+
+/// Removes the in-flight token entry when the query ends, however it
+/// ends.
+struct Unregister<'a> {
+    service: &'a Service,
+    id: &'a str,
+}
+
+impl Drop for Unregister<'_> {
+    fn drop(&mut self) {
+        self.service.inflight.lock().unwrap().remove(self.id);
+    }
+}

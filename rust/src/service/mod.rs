@@ -1,0 +1,54 @@
+//! The resident mining service (PR 7): `sandslash serve`.
+//!
+//! The one-shot CLI pays graph loading, plan construction, and pool
+//! spin-up per invocation — the Pangolin-shaped cost model this module
+//! leaves behind. The service loads each graph **once** into an
+//! `Arc`-shared immutable CSR ([`registry`]), accepts concurrent
+//! pattern queries over a line-delimited JSON protocol ([`protocol`],
+//! [`net`]), and multiplexes them onto the PR-4 stealing scheduler with
+//! per-query PR-6 [`Budget`]s, priorities, and bounded admission
+//! ([`admission`]). In front of execution sits a canonical-pattern
+//! result cache ([`cache`]): Peregrine-style canonicalization makes
+//! semantically equal queries syntactically equal, so two tenants
+//! asking for "diamond on livej" share one computation — with
+//! single-flight coalescing, and budget-tripped partials never cached.
+//!
+//! Layer map:
+//!
+//! * [`json`] — minimal RFC 8259 parser/escaper (std-only, no serde)
+//! * [`protocol`] — request/response grammar, named errors, the
+//!   structured-code table (PR-6 CLI exit codes as response fields)
+//! * [`admission`] — bounded in-flight + queue-or-reject gate
+//! * [`registry`] — load-once `Arc` graph sharing with epochs
+//! * [`cache`] — canonical-key result cache, single-flight, LRU bytes
+//! * [`core`] — [`Service`]: admission → cache probe → governed run →
+//!   cache fill
+//! * [`net`] — thin TCP line transport (`serve`/`query` subcommands)
+//!
+//! Reentrancy contract: everything ambient the engines consult is
+//! *scoped* — [`sched::with_overrides`] and [`budget::with_cancel`]
+//! are restore-on-exit thread-locals installed around one run, so
+//! queries sharing the process never leak scheduler pinning or cancel
+//! tokens into each other (asserted by the concurrency suite).
+//!
+//! [`Budget`]: crate::engine::Budget
+//! [`sched::with_overrides`]: crate::exec::sched::with_overrides
+//! [`budget::with_cancel`]: crate::engine::budget::with_cancel
+
+pub mod admission;
+pub mod cache;
+pub mod core;
+pub mod json;
+pub mod net;
+pub mod protocol;
+pub mod registry;
+
+pub use admission::{AdmitError, Admission, Permit, Priority};
+pub use cache::{CacheKey, CacheStats, HookKind, ResultCache};
+pub use self::core::{Service, ServiceConfig, ServiceError};
+pub use net::{request_over_socket, Server};
+pub use protocol::{
+    count_result, parse_request, resolve_pattern, response_code, Body, Op, PatternSpec,
+    ProtoError, Request, Response, CODE_OVERLOADED,
+};
+pub use registry::{GraphRegistry, RegistryError};

@@ -1,0 +1,151 @@
+//! TCP transport for the resident service: line in, line out.
+//!
+//! Std-only (`std::net`), loopback-oriented. One thread per connection
+//! reads newline-delimited requests and writes one response line per
+//! request — all the concurrency, admission, and governance lives in
+//! [`Service`], so this file is deliberately thin plumbing. The
+//! `shutdown` op flips the service flag; the connection that carried it
+//! then pokes the listener with a loopback connect so the blocking
+//! `accept` observes the flag (std has no portable non-blocking accept
+//! without polling).
+//!
+//! A Unix-socket transport would be this same file with
+//! `UnixListener`; TCP on `127.0.0.1` was chosen because it also works
+//! in the CI smoke test without a filesystem rendezvous.
+
+use std::io::{self, BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::Arc;
+
+use super::core::Service;
+
+/// A bound, not-yet-serving listener (bind first so the caller can
+/// learn the ephemeral port before the accept loop starts).
+pub struct Server {
+    service: Arc<Service>,
+    listener: TcpListener,
+    addr: SocketAddr,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port).
+    pub fn bind(service: Arc<Service>, addr: &str) -> io::Result<Self> {
+        let listener = TcpListener::bind(addr)?;
+        let addr = listener.local_addr()?;
+        Ok(Self { service, listener, addr })
+    }
+
+    /// The bound address (the ephemeral port, for `--port-file` and the
+    /// in-test client).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Accept connections until a `shutdown` op lands; joins every
+    /// connection thread before returning.
+    pub fn serve(self) -> io::Result<()> {
+        let mut handles = Vec::new();
+        for stream in self.listener.incoming() {
+            if self.service.shutdown_requested() {
+                break;
+            }
+            let stream = match stream {
+                Ok(s) => s,
+                // transient accept errors (aborted handshake) are not
+                // service-fatal
+                Err(_) => continue,
+            };
+            let service = self.service.clone();
+            let addr = self.addr;
+            handles.push(std::thread::spawn(move || serve_connection(service, stream, addr)));
+            if self.service.shutdown_requested() {
+                break;
+            }
+        }
+        for h in handles {
+            let _ = h.join();
+        }
+        Ok(())
+    }
+}
+
+fn serve_connection(service: Arc<Service>, stream: TcpStream, addr: SocketAddr) {
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let response = service.handle_line(&line);
+        if writer.write_all(response.as_bytes()).is_err()
+            || writer.write_all(b"\n").is_err()
+            || writer.flush().is_err()
+        {
+            break;
+        }
+        if service.shutdown_requested() {
+            // unblock the accept loop so Server::serve can wind down
+            let _ = TcpStream::connect(addr);
+            break;
+        }
+    }
+}
+
+/// One-shot client: send one request line, read one response line (the
+/// `sandslash query` subcommand and the socket smoke test).
+pub fn request_over_socket(addr: &str, line: &str) -> io::Result<String> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.write_all(line.as_bytes())?;
+    stream.write_all(b"\n")?;
+    stream.flush()?;
+    let mut response = String::new();
+    BufReader::new(stream).read_line(&mut response)?;
+    Ok(response.trim_end().to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::core::ServiceConfig;
+    use crate::service::protocol::response_code;
+
+    fn test_config() -> ServiceConfig {
+        ServiceConfig {
+            max_inflight: 2,
+            max_queued: 8,
+            cache_bytes: 1 << 20,
+            default_threads: 2,
+            default_budget: crate::engine::Budget::default(),
+        }
+    }
+
+    #[test]
+    fn socket_round_trip_and_shutdown() {
+        if !crate::engine::budget::governance_enabled() {
+            return; // the service refuses to start ungoverned
+        }
+        let service = Arc::new(Service::new(test_config()).unwrap());
+        let server = Server::bind(service, "127.0.0.1:0").unwrap();
+        let addr = server.local_addr().to_string();
+        let serving = std::thread::spawn(move || server.serve().unwrap());
+        let pong =
+            request_over_socket(&addr, "{\"id\":\"p\",\"op\":\"ping\"}").unwrap();
+        assert!(pong.contains("\"pong\":true"), "{pong}");
+        assert_eq!(response_code(&pong), Some(0));
+        let q = request_over_socket(
+            &addr,
+            "{\"id\":\"q\",\"graph\":\"er-small\",\"pattern\":\"triangle\"}",
+        )
+        .unwrap();
+        assert!(q.contains("\"count\":"), "{q}");
+        assert!(q.contains("\"complete\":true"), "{q}");
+        let bye =
+            request_over_socket(&addr, "{\"id\":\"x\",\"op\":\"shutdown\"}").unwrap();
+        assert!(bye.contains("\"shutdown\":true"), "{bye}");
+        serving.join().unwrap();
+    }
+}

@@ -1,0 +1,537 @@
+//! The line-delimited JSON protocol of the resident service.
+//!
+//! One request per line, one response line per request, over any byte
+//! stream (the TCP listener in [`super::net`], or no transport at all —
+//! the in-process test harness calls [`crate::service::Service::handle`]
+//! with parsed [`Request`]s directly).
+//!
+//! # Request grammar
+//!
+//! ```json
+//! {"id":"q1","op":"query","graph":"er-small","pattern":"diamond",
+//!  "induced":false,"deadline_ms":50,"max_tasks":100,"threads":2,
+//!  "priority":"high","no_cache":false}
+//! ```
+//!
+//! * `id` (required): caller-chosen correlation token, echoed back.
+//! * `op` (default `"query"`): `query`, `cancel` (with `target` naming
+//!   the in-flight query id), `invalidate` (with `graph`; bumps the
+//!   graph epoch), `graphs`, `stats`, `ping`, `shutdown`.
+//! * `pattern` names a library pattern (see [`resolve_pattern`]), or
+//!   `edges` gives an explicit list `[[0,1],[1,2],...]` (≤ 8 vertices,
+//!   simple, connected). Both forms canonicalize to the same cache key.
+//! * `induced` selects vertex-induced matching (default `false` =
+//!   edge-induced, the SL semantics).
+//! * `deadline_ms` / `max_tasks` set the per-query [`Budget`]
+//!   (`deadline_ms: 0` is accepted and trips at the first poll site —
+//!   useful for testing the partial-result path deterministically).
+//! * Unknown fields are **rejected** (`unknown-field`), not ignored: a
+//!   typo'd budget knob silently ignored would be an unbounded query.
+//!
+//! # Response grammar
+//!
+//! ```json
+//! {"id":"q1","ok":true,"code":0,"cached":false,"epoch":0,
+//!  "result":{"count":1136,"complete":true,"tripped":null}}
+//! {"id":"q1","ok":false,"code":2,"error":"bad-field","detail":"..."}
+//! ```
+//!
+//! `code` carries the PR-6 CLI exit-code table as a *structured field*
+//! (the process never exits): 0 complete, 1 load/internal, 2 malformed
+//! request, 3 BFS cap, 4 worker panic, 5 deadline, 6 task budget,
+//! 7 caller cancel — the numbers are delegated to
+//! [`CancelReason::exit_code`] / [`MineError::exit_code`] so the two
+//! tables cannot drift — plus the service-only 8 (admission rejected
+//! the query: queue full).
+//!
+//! [`Budget`]: crate::engine::Budget
+//! [`MineError::exit_code`]: crate::engine::MineError::exit_code
+
+use std::sync::Arc;
+
+use super::admission::Priority;
+use super::json::{self, JsonValue};
+use crate::engine::{CancelReason, MineError};
+use crate::pattern::{library, Pattern};
+
+/// Admission rejected the query (bounded queue full) — the only
+/// response code not in the PR-6 CLI exit table, which stops at 7.
+pub const CODE_OVERLOADED: i32 = 8;
+
+/// Largest pattern the service accepts: the canonical-code domain
+/// ([`crate::pattern::canonical_code`] covers ≤ 8 vertices), which the
+/// result-cache key is built on.
+pub const MAX_SERVICE_PATTERN_VERTICES: usize = 8;
+
+/// A named protocol error: the stable `name` is the machine-readable
+/// contract (asserted by the golden tests), `detail` is for humans,
+/// `code` is the structured response code.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ProtoError {
+    /// Stable machine-readable error name (e.g. `"bad-field"`).
+    pub name: &'static str,
+    /// Human-readable detail; never load-bearing.
+    pub detail: String,
+    /// Structured response code (the PR-6 exit-code table, plus
+    /// [`CODE_OVERLOADED`]).
+    pub code: i32,
+}
+
+impl ProtoError {
+    /// A malformed-request error (code 2, the CLI usage code).
+    pub fn usage(name: &'static str, detail: impl Into<String>) -> Self {
+        Self { name, detail: detail.into(), code: 2 }
+    }
+}
+
+/// Request operation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    /// Run a pattern query (the default).
+    Query,
+    /// Cancel the in-flight query named by `target`.
+    Cancel,
+    /// Bump the named graph's epoch, invalidating its cache entries.
+    Invalidate,
+    /// List resident graphs and their epochs.
+    Graphs,
+    /// Service counters: cache stats, admission state, queries served.
+    Stats,
+    /// Liveness probe.
+    Ping,
+    /// Ask the listener to stop accepting connections.
+    Shutdown,
+}
+
+impl Op {
+    fn name(self) -> &'static str {
+        match self {
+            Op::Query => "query",
+            Op::Cancel => "cancel",
+            Op::Invalidate => "invalidate",
+            Op::Graphs => "graphs",
+            Op::Stats => "stats",
+            Op::Ping => "ping",
+            Op::Shutdown => "shutdown",
+        }
+    }
+}
+
+/// How the query names its pattern.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PatternSpec {
+    /// A library pattern by name (see [`resolve_pattern`]).
+    Named(String),
+    /// An explicit edge list (validated in [`resolve_pattern`]).
+    Edges(Vec<(usize, usize)>),
+}
+
+/// One parsed request line. Constructed by [`parse_request`] (the wire
+/// path) or directly (the in-process test harness); [`Request::render`]
+/// and [`parse_request`] round-trip.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Request {
+    /// Caller-chosen correlation id, echoed in the response.
+    pub id: String,
+    /// Operation (default `query`).
+    pub op: Op,
+    /// Graph name (`query`, `invalidate`).
+    pub graph: Option<String>,
+    /// Pattern (`query`).
+    pub pattern: Option<PatternSpec>,
+    /// Vertex-induced matching (default edge-induced).
+    pub vertex_induced: bool,
+    /// Per-query deadline override (`0` trips at the first poll).
+    pub deadline_ms: Option<u64>,
+    /// Per-query task-budget override.
+    pub max_tasks: Option<u64>,
+    /// Per-query worker-thread override.
+    pub threads: Option<usize>,
+    /// Admission priority (default [`Priority::Normal`]).
+    pub priority: Priority,
+    /// Bypass the result cache for this query.
+    pub no_cache: bool,
+    /// Target query id (`cancel`).
+    pub target: Option<String>,
+}
+
+impl Request {
+    /// A plain query for `pattern` on `graph`, defaults elsewhere.
+    pub fn query(id: &str, graph: &str, pattern: PatternSpec) -> Self {
+        Self {
+            id: id.to_string(),
+            op: Op::Query,
+            graph: Some(graph.to_string()),
+            pattern: Some(pattern),
+            vertex_induced: false,
+            deadline_ms: None,
+            max_tasks: None,
+            threads: None,
+            priority: Priority::Normal,
+            no_cache: false,
+            target: None,
+        }
+    }
+
+    /// A bare non-query operation.
+    pub fn bare(id: &str, op: Op) -> Self {
+        Self { op, graph: None, pattern: None, ..Self::query(id, "", PatternSpec::Named(String::new())) }
+    }
+
+    /// Render as one protocol line (no trailing newline). Fields at
+    /// their defaults are omitted, so `parse_request(render(r)) == r`.
+    pub fn render(&self) -> String {
+        let mut out = format!("{{\"id\":\"{}\"", json::escape(&self.id));
+        out.push_str(&format!(",\"op\":\"{}\"", self.op.name()));
+        if let Some(g) = &self.graph {
+            out.push_str(&format!(",\"graph\":\"{}\"", json::escape(g)));
+        }
+        match &self.pattern {
+            Some(PatternSpec::Named(name)) => {
+                out.push_str(&format!(",\"pattern\":\"{}\"", json::escape(name)));
+            }
+            Some(PatternSpec::Edges(edges)) => {
+                let body: Vec<String> =
+                    edges.iter().map(|&(u, v)| format!("[{u},{v}]")).collect();
+                out.push_str(&format!(",\"edges\":[{}]", body.join(",")));
+            }
+            None => {}
+        }
+        if self.vertex_induced {
+            out.push_str(",\"induced\":true");
+        }
+        if let Some(ms) = self.deadline_ms {
+            out.push_str(&format!(",\"deadline_ms\":{ms}"));
+        }
+        if let Some(n) = self.max_tasks {
+            out.push_str(&format!(",\"max_tasks\":{n}"));
+        }
+        if let Some(t) = self.threads {
+            out.push_str(&format!(",\"threads\":{t}"));
+        }
+        if self.priority == Priority::High {
+            out.push_str(",\"priority\":\"high\"");
+        }
+        if self.no_cache {
+            out.push_str(",\"no_cache\":true");
+        }
+        if let Some(t) = &self.target {
+            out.push_str(&format!(",\"target\":\"{}\"", json::escape(t)));
+        }
+        out.push('}');
+        out
+    }
+}
+
+/// Parse one request line. Every rejection carries a stable error name
+/// (`malformed-json`, `not-an-object`, `missing-field`, `bad-field`,
+/// `unknown-field`, `unknown-op`) and code 2.
+pub fn parse_request(line: &str) -> Result<Request, ProtoError> {
+    let v = json::parse(line)
+        .map_err(|e| ProtoError::usage("malformed-json", e.to_string()))?;
+    let JsonValue::Obj(pairs) = &v else {
+        return Err(ProtoError::usage("not-an-object", "request must be a JSON object"));
+    };
+    let id = match v.get("id").and_then(|x| x.as_str()) {
+        Some(s) if !s.is_empty() && s.len() <= 128 => s.to_string(),
+        Some(_) => {
+            return Err(ProtoError::usage("bad-field", "id must be 1..=128 characters"))
+        }
+        None => return Err(ProtoError::usage("missing-field", "id (string) is required")),
+    };
+    let op = match v.get("op").map(|x| x.as_str()) {
+        None => Op::Query,
+        Some(Some("query")) => Op::Query,
+        Some(Some("cancel")) => Op::Cancel,
+        Some(Some("invalidate")) => Op::Invalidate,
+        Some(Some("graphs")) => Op::Graphs,
+        Some(Some("stats")) => Op::Stats,
+        Some(Some("ping")) => Op::Ping,
+        Some(Some("shutdown")) => Op::Shutdown,
+        Some(Some(other)) => {
+            return Err(ProtoError::usage("unknown-op", format!("op {other:?}")))
+        }
+        Some(None) => return Err(ProtoError::usage("bad-field", "op must be a string")),
+    };
+    let mut req = Request {
+        id,
+        op,
+        graph: None,
+        pattern: None,
+        vertex_induced: false,
+        deadline_ms: None,
+        max_tasks: None,
+        threads: None,
+        priority: Priority::Normal,
+        no_cache: false,
+        target: None,
+    };
+    for (key, val) in pairs {
+        match key.as_str() {
+            "id" | "op" => {}
+            "graph" => match val.as_str() {
+                Some(s) if !s.is_empty() => req.graph = Some(s.to_string()),
+                _ => {
+                    return Err(ProtoError::usage("bad-field", "graph must be a non-empty string"))
+                }
+            },
+            "pattern" => match val.as_str() {
+                Some(s) => req.pattern = Some(PatternSpec::Named(s.to_string())),
+                None => {
+                    return Err(ProtoError::usage("bad-field", "pattern must be a string"))
+                }
+            },
+            "edges" => req.pattern = Some(PatternSpec::Edges(parse_edges(val)?)),
+            "induced" => match val.as_bool() {
+                Some(b) => req.vertex_induced = b,
+                None => {
+                    return Err(ProtoError::usage("bad-field", "induced must be a boolean"))
+                }
+            },
+            "deadline_ms" => match val.as_u64() {
+                Some(ms) => req.deadline_ms = Some(ms),
+                None => {
+                    return Err(ProtoError::usage(
+                        "bad-field",
+                        "deadline_ms must be a non-negative integer",
+                    ))
+                }
+            },
+            "max_tasks" => match val.as_u64() {
+                Some(n) if n > 0 => req.max_tasks = Some(n),
+                _ => {
+                    return Err(ProtoError::usage(
+                        "bad-field",
+                        "max_tasks must be a positive integer",
+                    ))
+                }
+            },
+            "threads" => match val.as_u64() {
+                Some(t) if (1..=256).contains(&t) => req.threads = Some(t as usize),
+                _ => {
+                    return Err(ProtoError::usage("bad-field", "threads must be in 1..=256"))
+                }
+            },
+            "priority" => match val.as_str() {
+                Some("normal") => req.priority = Priority::Normal,
+                Some("high") => req.priority = Priority::High,
+                _ => {
+                    return Err(ProtoError::usage(
+                        "bad-field",
+                        "priority must be \"normal\" or \"high\"",
+                    ))
+                }
+            },
+            "no_cache" => match val.as_bool() {
+                Some(b) => req.no_cache = b,
+                None => {
+                    return Err(ProtoError::usage("bad-field", "no_cache must be a boolean"))
+                }
+            },
+            "target" => match val.as_str() {
+                Some(s) if !s.is_empty() => req.target = Some(s.to_string()),
+                _ => {
+                    return Err(ProtoError::usage("bad-field", "target must be a non-empty string"))
+                }
+            },
+            other => {
+                return Err(ProtoError::usage(
+                    "unknown-field",
+                    format!("unknown field {other:?} (rejected, not ignored)"),
+                ))
+            }
+        }
+    }
+    Ok(req)
+}
+
+fn parse_edges(val: &JsonValue) -> Result<Vec<(usize, usize)>, ProtoError> {
+    let bad = || ProtoError::usage("bad-edges", "edges must be [[u,v],...] of integers");
+    let rows = val.as_array().ok_or_else(bad)?;
+    let mut edges = Vec::with_capacity(rows.len());
+    for row in rows {
+        let pair = row.as_array().ok_or_else(bad)?;
+        if pair.len() != 2 {
+            return Err(bad());
+        }
+        let u = pair[0].as_u64().ok_or_else(bad)?;
+        let v = pair[1].as_u64().ok_or_else(bad)?;
+        edges.push((u as usize, v as usize));
+    }
+    Ok(edges)
+}
+
+/// Resolve a [`PatternSpec`] to a validated [`Pattern`].
+///
+/// Named patterns: `triangle`, `wedge`, `diamond`, `tailed-triangle`,
+/// `4path`, `4star`, `4cycle`, `5cycle`, `4clique`, `5clique`.
+/// Explicit edge lists must be simple (no self-loops or duplicates),
+/// connected, and span ≤ [`MAX_SERVICE_PATTERN_VERTICES`] vertices —
+/// the canonical-code domain the cache key lives in.
+pub fn resolve_pattern(spec: &PatternSpec) -> Result<Pattern, ProtoError> {
+    match spec {
+        PatternSpec::Named(name) => match name.as_str() {
+            "triangle" => Ok(library::triangle()),
+            "wedge" => Ok(library::wedge()),
+            "diamond" => Ok(library::diamond()),
+            "tailed-triangle" => Ok(library::tailed_triangle()),
+            "4path" => Ok(library::path(4)),
+            "4star" => Ok(library::star(3)),
+            "4cycle" => Ok(library::cycle(4)),
+            "5cycle" => Ok(library::cycle(5)),
+            "4clique" => Ok(library::clique(4)),
+            "5clique" => Ok(library::clique(5)),
+            other => Err(ProtoError::usage(
+                "unknown-pattern",
+                format!(
+                    "pattern {other:?}; known: triangle wedge diamond tailed-triangle \
+                     4path 4star 4cycle 5cycle 4clique 5clique (or explicit \"edges\")"
+                ),
+            )),
+        },
+        PatternSpec::Edges(edges) => {
+            let bad = |detail: String| ProtoError::usage("bad-edges", detail);
+            if edges.is_empty() {
+                return Err(bad("edge list is empty".into()));
+            }
+            let n = edges.iter().map(|&(u, v)| u.max(v) + 1).max().unwrap();
+            if n > MAX_SERVICE_PATTERN_VERTICES {
+                return Err(bad(format!(
+                    "pattern spans {n} vertices; the service caps at \
+                     {MAX_SERVICE_PATTERN_VERTICES} (canonical-code domain)"
+                )));
+            }
+            let mut seen = std::collections::HashSet::new();
+            for &(u, v) in edges {
+                if u == v {
+                    return Err(bad(format!("self-loop ({u},{v})")));
+                }
+                if !seen.insert((u.min(v), u.max(v))) {
+                    return Err(bad(format!("duplicate edge ({u},{v})")));
+                }
+            }
+            let p = Pattern::from_edges(edges);
+            if !p.is_connected() {
+                return Err(bad("pattern must be connected".into()));
+            }
+            Ok(p)
+        }
+    }
+}
+
+/// The stable wire name of a budget trip (`result.tripped`), matching
+/// the knob vocabulary of [`CancelReason::diagnosis`].
+pub fn trip_name(reason: CancelReason) -> &'static str {
+    match reason {
+        CancelReason::Deadline => "deadline",
+        CancelReason::TaskBudget => "task-budget",
+        CancelReason::Caller => "caller",
+        CancelReason::WorkerPanic => "worker-panic",
+    }
+}
+
+/// Render the cacheable result fragment of a count query. This exact
+/// string is what the result cache stores and what cache hits replay —
+/// the byte-equality contract of the concurrency suite.
+pub fn count_result(count: u64, tripped: Option<CancelReason>) -> String {
+    match tripped {
+        None => format!("{{\"count\":{count},\"complete\":true,\"tripped\":null}}"),
+        Some(r) => format!(
+            "{{\"count\":{count},\"complete\":false,\"tripped\":\"{}\"}}",
+            trip_name(r)
+        ),
+    }
+}
+
+/// The structured response code of an engine error — delegated to
+/// [`MineError::exit_code`] so the wire table and the PR-6 CLI exit
+/// table are the same table.
+pub fn mine_error_code(e: &MineError) -> i32 {
+    e.exit_code()
+}
+
+/// The stable wire name of an engine error.
+pub fn mine_error_name(e: &MineError) -> &'static str {
+    match e {
+        MineError::BfsCapExceeded(_) => "bfs-cap",
+        MineError::WorkerPanicked { .. } => "worker-panic",
+    }
+}
+
+/// One response line.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Response {
+    /// Echo of the request id (`"?"` when the request had none).
+    pub id: String,
+    /// Success or named failure.
+    pub body: Body,
+}
+
+/// Response payload.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Body {
+    /// A successful operation. `result` is the pre-rendered fragment
+    /// (shared with the cache — an `Arc` so hits are the same bytes).
+    Ok {
+        /// Pre-rendered result object fragment.
+        result: Arc<String>,
+        /// Whether the fragment came from the result cache.
+        cached: bool,
+        /// Structured code (0 complete; 5/6/7 = tripped partial).
+        code: i32,
+        /// Graph epoch the result was computed against (queries only).
+        epoch: Option<u64>,
+    },
+    /// A named failure.
+    Err(ProtoError),
+}
+
+impl Response {
+    /// A successful response.
+    pub fn ok(id: &str, result: Arc<String>, cached: bool, code: i32, epoch: Option<u64>) -> Self {
+        Self { id: id.to_string(), body: Body::Ok { result, cached, code, epoch } }
+    }
+
+    /// A named-error response.
+    pub fn error(id: &str, e: ProtoError) -> Self {
+        Self { id: id.to_string(), body: Body::Err(e) }
+    }
+
+    /// The structured response code.
+    pub fn code(&self) -> i32 {
+        match &self.body {
+            Body::Ok { code, .. } => *code,
+            Body::Err(e) => e.code,
+        }
+    }
+
+    /// Render as one protocol line (no trailing newline).
+    pub fn render(&self) -> String {
+        match &self.body {
+            Body::Ok { result, cached, code, epoch } => {
+                let epoch_part = match epoch {
+                    Some(e) => format!(",\"epoch\":{e}"),
+                    None => String::new(),
+                };
+                format!(
+                    "{{\"id\":\"{}\",\"ok\":true,\"code\":{code},\"cached\":{cached}{epoch_part},\"result\":{result}}}",
+                    json::escape(&self.id),
+                )
+            }
+            Body::Err(e) => format!(
+                "{{\"id\":\"{}\",\"ok\":false,\"code\":{},\"error\":\"{}\",\"detail\":\"{}\"}}",
+                json::escape(&self.id),
+                e.code,
+                e.name,
+                json::escape(&e.detail),
+            ),
+        }
+    }
+}
+
+/// Pull the structured `code` field out of a rendered response line
+/// (the CLI client exits with it, mirroring the one-shot commands).
+pub fn response_code(line: &str) -> Option<i32> {
+    let v = json::parse(line).ok()?;
+    v.get("code")?.as_u64().map(|c| c as i32)
+}

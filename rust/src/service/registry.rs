@@ -1,0 +1,171 @@
+//! Graph registry: load once, share via `Arc`, version with epochs.
+//!
+//! The resident process loads each graph exactly once into an immutable
+//! [`CsrGraph`] behind an `Arc`; every concurrent query of that graph
+//! clones the `Arc` (refcount bump, no copy) and runs against the same
+//! CSR arrays. Loading is single-flight: when two tenants race to be
+//! the first user of `livej`, one loads while the other blocks on the
+//! registry condvar — never two materializations of one dataset.
+//!
+//! Every graph carries an **epoch**, the cache-coherence token of the
+//! service: [`crate::service::cache::CacheKey`] embeds it, so bumping
+//! the epoch (the `invalidate` protocol op) orphans every cached result
+//! of the old version by construction — no cache scan races. Today's
+//! datasets are deterministic generators
+//! ([`crate::coordinator::datasets`]), so a bump keeps the same `Arc`;
+//! an incremental-update path (ROADMAP) would swap in a new snapshot
+//! under the same lock and inherit the coherence story unchanged.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::coordinator::datasets;
+use crate::graph::CsrGraph;
+
+/// Why a graph lookup failed.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RegistryError {
+    /// The name is not in the dataset registry.
+    UnknownGraph(String),
+}
+
+enum Entry {
+    /// Another thread is materializing the graph.
+    Loading,
+    Ready { graph: Arc<CsrGraph>, epoch: u64 },
+}
+
+/// The registry (see the module docs).
+#[derive(Default)]
+pub struct GraphRegistry {
+    inner: Mutex<HashMap<String, Entry>>,
+    loaded: Condvar,
+}
+
+impl GraphRegistry {
+    /// An empty registry; graphs materialize on first use.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The shared graph and its current epoch, loading on first use
+    /// (single-flight — concurrent first users block, not double-load).
+    pub fn get(&self, name: &str) -> Result<(Arc<CsrGraph>, u64), RegistryError> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            match inner.get(name) {
+                Some(Entry::Ready { graph, epoch }) => return Ok((graph.clone(), *epoch)),
+                Some(Entry::Loading) => inner = self.loaded.wait(inner).unwrap(),
+                None => break,
+            }
+        }
+        inner.insert(name.to_string(), Entry::Loading);
+        drop(inner);
+        // materialize unlocked — generator datasets take real time
+        let loaded = datasets::load(name).map(Arc::new);
+        let mut inner = self.inner.lock().unwrap();
+        let out = match loaded {
+            Some(graph) => {
+                inner.insert(
+                    name.to_string(),
+                    Entry::Ready { graph: graph.clone(), epoch: 0 },
+                );
+                Ok((graph, 0))
+            }
+            None => {
+                inner.remove(name);
+                Err(RegistryError::UnknownGraph(name.to_string()))
+            }
+        };
+        drop(inner);
+        self.loaded.notify_all();
+        out
+    }
+
+    /// Bump the epoch of a loaded graph (the `invalidate` op), orphaning
+    /// every cached result keyed to the old epoch. Returns the new epoch,
+    /// or `None` if the graph was never loaded (nothing to invalidate).
+    pub fn bump_epoch(&self, name: &str) -> Option<u64> {
+        let mut inner = self.inner.lock().unwrap();
+        match inner.get_mut(name) {
+            Some(Entry::Ready { epoch, .. }) => {
+                *epoch += 1;
+                Some(*epoch)
+            }
+            _ => None,
+        }
+    }
+
+    /// `(name, epoch, vertices, undirected edges)` of every resident
+    /// graph, name-sorted (the `graphs` op).
+    pub fn resident(&self) -> Vec<(String, u64, usize, usize)> {
+        let inner = self.inner.lock().unwrap();
+        let mut out: Vec<_> = inner
+            .iter()
+            .filter_map(|(name, e)| match e {
+                Entry::Ready { graph, epoch } => Some((
+                    name.clone(),
+                    *epoch,
+                    graph.num_vertices(),
+                    graph.num_undirected_edges(),
+                )),
+                Entry::Loading => None,
+            })
+            .collect();
+        out.sort();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn loads_once_and_shares_the_arc() {
+        let reg = GraphRegistry::new();
+        let (a, e0) = reg.get("er-small").unwrap();
+        let (b, e1) = reg.get("er-small").unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "second get must share, not reload");
+        assert_eq!((e0, e1), (0, 0));
+        assert_eq!(
+            reg.get("no-such-graph"),
+            Err(RegistryError::UnknownGraph("no-such-graph".into()))
+        );
+    }
+
+    #[test]
+    fn concurrent_first_users_single_flight() {
+        let reg = Arc::new(GraphRegistry::new());
+        let loaded = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let (reg, loaded) = (reg.clone(), loaded.clone());
+                std::thread::spawn(move || {
+                    let (g, _) = reg.get("er-small").unwrap();
+                    loaded.fetch_add(1, Ordering::SeqCst);
+                    g.num_vertices()
+                })
+            })
+            .collect();
+        let sizes: Vec<usize> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert!(sizes.windows(2).all(|w| w[0] == w[1]));
+        assert_eq!(loaded.load(Ordering::SeqCst), 8);
+        assert_eq!(reg.resident().len(), 1);
+    }
+
+    #[test]
+    fn epoch_bumps_are_per_graph_and_need_a_resident_graph() {
+        let reg = GraphRegistry::new();
+        assert_eq!(reg.bump_epoch("er-small"), None, "nothing resident yet");
+        reg.get("er-small").unwrap();
+        reg.get("ba-small").unwrap();
+        assert_eq!(reg.bump_epoch("er-small"), Some(1));
+        assert_eq!(reg.bump_epoch("er-small"), Some(2));
+        let (_, e) = reg.get("er-small").unwrap();
+        assert_eq!(e, 2, "get must observe the bumped epoch");
+        let (_, other) = reg.get("ba-small").unwrap();
+        assert_eq!(other, 0, "bumps must not leak across graphs");
+    }
+}

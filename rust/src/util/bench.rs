@@ -44,7 +44,12 @@
 //! ([`crate::engine::budget::with_governance_disabled`]) and back on
 //! with every budget unset, counts asserted bit-identical and the
 //! [`crate::util::metrics::gov`] trip counters asserted silent — the
-//! recorded ratio is the whole cost of the admission poll sites.
+//! recorded ratio is the whole cost of the admission poll sites. The
+//! PR-7 section (`pr7-service`, via [`Pr7Section::write`] and the
+//! shared [`pr7_compare`] protocol) measures the resident service
+//! ([`crate::service`]): one query submitted cold (admission +
+//! governed run + cache fill) and again cached (byte replay), counts
+//! asserted equal across the cache boundary.
 //!
 //! Writers must assert their differential check (scalar count ==
 //! set-centric count, scalar-kernel count == SIMD-kernel count)
@@ -293,8 +298,9 @@ pub fn pr1_meta(threads: usize) -> Json {
             "cargo test -q (smoke) or cargo bench --bench table5_tc / table6_kcl (sampled); \
              pr3-* sections compare the scalar vs SIMD kernel dispatch, pr4-sched-* the \
              cursor vs work-stealing scheduler, pr5-* the scalar extension oracles vs \
-             the shared extension core, and pr6-governance the governed vs \
-             governance-disabled run with budgets unset, each from the same run",
+             the shared extension core, pr6-governance the governed vs \
+             governance-disabled run with budgets unset, and pr7-service the resident \
+             service's cold vs cached query latency, each from the same run",
         )
 }
 
@@ -738,6 +744,77 @@ impl Pr6Section<'_> {
             .num("gov_off_secs", self.gov_off_secs)
             .num("gov_on_secs", self.gov_on_secs)
             .num("overhead_on_over_off", self.overhead())
+            .int("samples", self.samples as u64);
+        upsert_bench_section(&pr1_report_path(), &pr1_meta(threads), section, &body)
+    }
+}
+
+/// One measured cold-vs-cached resident-service comparison
+/// (EXPERIMENTS.md §PR-7), as recorded in the `pr7-service` report
+/// section: the same query submitted twice to one in-process
+/// [`crate::service::Service`] — the first paying admission + governed
+/// engine run + cache fill, the second replaying the cached bytes —
+/// with the two counts asserted equal before anything is written.
+/// Shared by the benches and the tier-1 smoke test so the JSON schema
+/// cannot drift between writers.
+pub struct Pr7Section<'a> {
+    /// Input description (generator + parameters).
+    pub graph: &'a str,
+    /// Pattern name.
+    pub pattern: &'a str,
+    /// Agreed embedding count (differential check across the cache).
+    pub count: u64,
+    /// Wall time of the cold (miss-path) query (seconds).
+    pub cold_secs: f64,
+    /// Wall time of the cached query (seconds).
+    pub cached_secs: f64,
+    /// Number of timing samples behind the figures.
+    pub samples: usize,
+}
+
+/// Run the §PR-7 cold-vs-cached measurement protocol once and return
+/// the section row — the single implementation shared by the tier-1
+/// smoke test and the benches, completing the sequence of
+/// [`pr3_compare`] (kernels), [`pr4_compare`] (scheduler),
+/// [`pr5_compare`] (extension core), and [`pr6_compare`] (governance):
+/// `run()` submits the query and must return the embedding count, the
+/// wall seconds, and whether the response was served from the cache.
+/// The first call must miss (`cached == false`), the second must hit
+/// (`cached == true`), and the two counts are asserted equal — the
+/// byte-replay contract means a disagreeing pair is a cache-soundness
+/// bug, not noise.
+pub fn pr7_compare<'a>(
+    graph: &'a str,
+    pattern: &'a str,
+    samples: usize,
+    mut run: impl FnMut() -> (u64, f64, bool),
+) -> Pr7Section<'a> {
+    let (cold_count, cold_secs, cold_cached) = run();
+    assert!(!cold_cached, "first query of {graph} / {pattern} must be a cache miss");
+    let (cached_count, cached_secs, hot_cached) = run();
+    assert!(hot_cached, "second query of {graph} / {pattern} must be a cache hit");
+    assert_eq!(
+        cold_count, cached_count,
+        "cached result disagrees with its miss-path original on {graph} / {pattern}"
+    );
+    Pr7Section { graph, pattern, count: cached_count, cold_secs, cached_secs, samples }
+}
+
+impl Pr7Section<'_> {
+    /// Cold-over-cached speedup (how much the resident cache saves).
+    pub fn speedup(&self) -> f64 {
+        self.cold_secs / self.cached_secs
+    }
+
+    /// Upsert this section into the shared report at the repo root.
+    pub fn write(&self, section: &str, threads: usize) -> std::io::Result<()> {
+        let body = Json::new()
+            .str("graph", self.graph)
+            .str("pattern", self.pattern)
+            .int("count", self.count)
+            .num("cold_secs", self.cold_secs)
+            .num("cached_secs", self.cached_secs)
+            .num("speedup_cold_over_cached", self.speedup())
             .int("samples", self.samples as u64);
         upsert_bench_section(&pr1_report_path(), &pr1_meta(threads), section, &body)
     }

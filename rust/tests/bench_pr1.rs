@@ -25,7 +25,8 @@ use sandslash::graph::{gen, setops};
 use sandslash::graph::CsrGraph;
 use sandslash::pattern::{library, plan, Pattern};
 use sandslash::util::bench::{
-    pr1_report_path, pr3_compare, pr4_compare, pr5_compare, pr6_compare, Pr1Section,
+    pr1_report_path, pr3_compare, pr4_compare, pr5_compare, pr6_compare, pr7_compare,
+    Pr1Section,
 };
 use sandslash::util::timer::timed;
 
@@ -190,6 +191,55 @@ fn measure_pr6(g: &CsrGraph, graph_desc: &str) -> f64 {
     s.overhead()
 }
 
+/// PR-7 row (§PR-7) through the shared protocol (`bench::pr7_compare`):
+/// one triangle query against an in-process resident service, cold
+/// (admission + governed run + cache fill; the graph is preloaded so
+/// load time is not conflated into the query) and again cached (byte
+/// replay), counts asserted equal across the cache inside the
+/// protocol. Returns `None` under `SANDSLASH_NO_GOV` — the service
+/// refuses to start ungoverned, so there is nothing to measure.
+fn measure_pr7() -> Option<f64> {
+    use sandslash::service::{json, Body, PatternSpec, Request, Service, ServiceConfig};
+    if !sandslash::engine::budget::governance_enabled() {
+        return None;
+    }
+    let threads = MinerConfig::new(OptFlags::hi()).threads;
+    let service = Service::new(ServiceConfig {
+        max_inflight: 2,
+        max_queued: 4,
+        cache_bytes: 1 << 20,
+        default_threads: threads,
+        default_budget: sandslash::engine::Budget::default(),
+    })
+    .unwrap();
+    service.preload("er-small").unwrap();
+    let mut runs = 0u32;
+    let s = pr7_compare("er n=2000 p=0.005 seed=7 (er-small)", "triangle", 1, || {
+        runs += 1;
+        let req = Request::query(
+            &format!("bench-{runs}"),
+            "er-small",
+            PatternSpec::Named("triangle".to_string()),
+        );
+        let (resp, secs) = timed(|| service.handle(&req));
+        match &resp.body {
+            Body::Ok { result, cached, code, .. } => {
+                assert_eq!(*code, 0, "bench query must complete");
+                let count = json::parse(result)
+                    .ok()
+                    .and_then(|v| v.get("count").and_then(|c| c.as_u64()))
+                    .expect("count field in the result fragment");
+                (count, secs, *cached)
+            }
+            Body::Err(e) => panic!("bench query failed: {e:?}"),
+        }
+    });
+    if let Err(e) = s.write("pr7-service", threads) {
+        eprintln!("skipping BENCH_pr1.json write: {e}");
+    }
+    Some(s.speedup())
+}
+
 #[test]
 fn bench_pr1_smoke_regenerates_report() {
     let g_tc = gen::rmat(14, 8, 42, &[]);
@@ -248,13 +298,19 @@ fn bench_pr1_smoke_regenerates_report() {
     let (kmc_core, fsm_core) = measure_pr5();
     // PR-6: governance on vs scoped off, budgets unset (poll-site cost)
     let gov_overhead = measure_pr6(&g_tc, "rmat scale=14 ef=8 seed=42");
+    // PR-7: the resident service's cold vs cached query latency
+    let service_speedup = measure_pr7();
+    let service_note = match service_speedup {
+        Some(x) => format!("cold over cached — tc {x:.2}x"),
+        None => "service skipped (ungoverned)".to_string(),
+    };
     eprintln!(
         "BENCH_pr1 smoke: set-centric speedup over scalar — tc {tc_speedup:.2}x, \
          4-clique {cl_speedup:.2}x; {} kernels over scalar kernels — tc {tc_simd:.2}x, \
          4-clique {cl_simd:.2}x; stealing over cursor — tc {tc_sched:.2}x, \
          4-clique {cl_sched:.2}x; extension core over scalar oracles — \
          4-MC {kmc_core:.2}x, FSM {fsm_core:.2}x; governance-on over off — \
-         tc {gov_overhead:.2}x ({})",
+         tc {gov_overhead:.2}x; resident service {service_note} ({})",
         setops::simd_level_name(),
         pr1_report_path().display()
     );

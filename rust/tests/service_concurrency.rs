@@ -1,0 +1,454 @@
+//! Resident-service concurrency suite (PR 7).
+//!
+//! One in-process `Service` (no real socket — `tests` in
+//! `service/net.rs` cover the TCP path) is shared by many client
+//! threads submitting a randomized mix of patterns and budgets. The
+//! invariants under test are the tentpole's whole value proposition:
+//!
+//! * every **completed** answer is bit-identical to a fresh one-shot
+//!   engine run of the same query — multi-tenancy never changes counts;
+//! * cache **hits replay the exact bytes** of the miss that filled them
+//!   (same `Arc`, same rendered fragment);
+//! * a **poisoned** query (injected worker panic) fails alone: every
+//!   concurrent tenant still completes exactly, and the service stays up;
+//! * a **deadline-tripped** query returns a marked partial while its
+//!   neighbors complete exactly, and the partial is never cached;
+//! * the scoped thread-locals (`budget::with_cancel`,
+//!   `sched::with_overrides`) that make the engine reentrant do **not
+//!   leak** across queries sharing a thread.
+//!
+//! Engine-running tests skip under `SANDSLASH_NO_GOV=1` (the service
+//! refuses to start ungoverned — asserted by the last test, which runs
+//! in every configuration), so the CI no-governance leg stays green.
+
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+use sandslash::coordinator::datasets;
+use sandslash::engine::budget::{self, Budget};
+use sandslash::engine::hooks::NoHooks;
+use sandslash::engine::{dfs, CancelToken, MinerConfig, OptFlags};
+use sandslash::graph::CsrGraph;
+use sandslash::pattern::{plan, Pattern};
+use sandslash::service::{
+    count_result, resolve_pattern, Body, Op, PatternSpec, Priority, Request, Response, Service,
+    ServiceConfig, CODE_OVERLOADED,
+};
+use sandslash::util::fault::{self, FaultAction, FaultPlan, Stage};
+use sandslash::util::pool;
+use sandslash::util::rng::Rng;
+
+/// Fault installation and the governance thread-locals are process
+/// globals; serialize every test in this binary, recovering the lock
+/// if a previous test's assertion poisoned it.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+const GRAPH: &str = "er-small";
+
+/// The pattern population the randomized tenants draw from. All are
+/// cheap on `er-small` so the suite stays fast even single-threaded.
+const PATTERNS: &[&str] =
+    &["triangle", "wedge", "diamond", "tailed-triangle", "4path", "4star", "4cycle", "4clique"];
+
+fn test_service() -> Arc<Service> {
+    let svc = Service::new(ServiceConfig {
+        max_inflight: 8,
+        max_queued: 64,
+        cache_bytes: 1 << 20,
+        default_threads: 2,
+        default_budget: Budget::default(),
+    })
+    .expect("governed test environment");
+    svc.preload(GRAPH).expect("test dataset resident");
+    Arc::new(svc)
+}
+
+fn named(name: &str) -> Pattern {
+    resolve_pattern(&PatternSpec::Named(name.to_string())).expect("known library pattern")
+}
+
+/// A fresh one-shot run of the same query the service executes:
+/// identical plan, identical config shape. This is the ground truth the
+/// resident answers must match byte-for-byte.
+fn one_shot(g: &CsrGraph, name: &str, induced: bool) -> String {
+    let p = named(name);
+    let pl = plan(&p, induced, true);
+    let cfg = MinerConfig::custom(2, pool::default_chunk(), OptFlags::hi());
+    let out = dfs::count(g, &pl, &cfg, &NoHooks).expect("unbudgeted run cannot fail");
+    assert!(out.complete, "unbudgeted one-shot must complete");
+    count_result(out.value, None)
+}
+
+fn query(id: &str, name: &str) -> Request {
+    let mut req = Request::query(id, GRAPH, PatternSpec::Named(name.to_string()));
+    req.threads = Some(2);
+    req
+}
+
+/// Unpack a successful body; panics (with the error) on a named failure.
+fn ok_body(resp: &Response) -> (Arc<String>, bool, i32, Option<u64>) {
+    match &resp.body {
+        Body::Ok { result, cached, code, epoch } => (result.clone(), *cached, *code, *epoch),
+        Body::Err(e) => panic!("query {} failed: {} ({})", resp.id, e.name, e.detail),
+    }
+}
+
+#[test]
+fn randomized_tenants_get_bit_identical_answers() {
+    if !budget::governance_enabled() {
+        return;
+    }
+    let _guard = serial();
+    let svc = test_service();
+    let g = datasets::load(GRAPH).unwrap();
+
+    // ground truth for every (pattern, induced) cell, computed up front
+    // so worker threads only compare.
+    let mut expected = std::collections::HashMap::new();
+    for &name in PATTERNS {
+        for induced in [false, true] {
+            expected.insert((name, induced), one_shot(&g, name, induced));
+        }
+    }
+    let expected = Arc::new(expected);
+
+    let clients: Vec<_> = (0..8)
+        .map(|t| {
+            let svc = Arc::clone(&svc);
+            let expected = Arc::clone(&expected);
+            std::thread::spawn(move || {
+                let mut rng = Rng::seeded(0xbeef + t as u64);
+                for q in 0..6 {
+                    let name = PATTERNS[rng.below(PATTERNS.len() as u64) as usize];
+                    let induced = rng.chance(0.3);
+                    let mut req = query(&format!("t{t}-q{q}"), name);
+                    req.vertex_induced = induced;
+                    if rng.chance(0.25) {
+                        // a budget far below the root-block count: this
+                        // tenant must come back a marked partial.
+                        req.max_tasks = Some(1 + rng.below(3));
+                    }
+                    if rng.chance(0.2) {
+                        req.priority = Priority::High;
+                    }
+                    let (result, _cached, code, epoch) = ok_body(&svc.handle(&req));
+                    assert_eq!(epoch, Some(0));
+                    if code == 0 {
+                        assert_eq!(
+                            *result,
+                            expected[&(name, induced)],
+                            "tenant t{t} query {q} ({name}, induced={induced}) diverged \
+                             from its one-shot ground truth"
+                        );
+                    } else {
+                        assert_eq!(code, 6, "only the task budget can trip these tenants");
+                        assert!(result.contains("\"complete\":false"));
+                        assert!(result.contains("\"tripped\":\"task-budget\""));
+                    }
+                }
+            })
+        })
+        .collect();
+    for c in clients {
+        c.join().expect("client thread must not panic");
+    }
+
+    // after the storm every cell answers exactly — tripped partials from
+    // budgeted tenants must not have leaked into the cache.
+    for (&(name, induced), want) in expected.iter() {
+        let mut req = query(&format!("post-{name}-{induced}"), name);
+        req.vertex_induced = induced;
+        let (result, _cached, code, _) = ok_body(&svc.handle(&req));
+        assert_eq!(code, 0);
+        assert_eq!(*result, *want, "post-storm {name} induced={induced}");
+    }
+}
+
+#[test]
+fn cache_hits_replay_the_exact_miss_bytes() {
+    if !budget::governance_enabled() {
+        return;
+    }
+    let _guard = serial();
+    let svc = test_service();
+
+    let (miss, cached, code, _) = ok_body(&svc.handle(&query("m1", "triangle")));
+    assert!(!cached, "first query must be a miss");
+    assert_eq!(code, 0);
+
+    let (hit, cached, code, _) = ok_body(&svc.handle(&query("m2", "triangle")));
+    assert!(cached, "second identical query must hit");
+    assert_eq!(code, 0);
+    assert!(Arc::ptr_eq(&miss, &hit), "a hit shares the miss's allocation");
+    assert_eq!(*hit, *miss);
+
+    // no_cache bypasses the probe but recomputes the same bytes.
+    let mut req = query("m3", "triangle");
+    req.no_cache = true;
+    let (fresh, cached, code, _) = ok_body(&svc.handle(&req));
+    assert!(!cached, "no_cache queries never report a hit");
+    assert_eq!(code, 0);
+    assert_eq!(*fresh, *miss);
+    assert!(!Arc::ptr_eq(&fresh, &miss), "no_cache recomputes rather than replays");
+
+    let stats = svc.cache_stats();
+    assert_eq!((stats.hits, stats.misses, stats.fills), (1, 1, 1));
+}
+
+#[test]
+fn deadline_tripped_query_is_partial_while_neighbors_complete_exactly() {
+    if !budget::governance_enabled() {
+        return;
+    }
+    let _guard = serial();
+    let svc = test_service();
+    let g = datasets::load(GRAPH).unwrap();
+
+    let neighbors = ["triangle", "wedge", "diamond", "4path"];
+    let victim = {
+        let svc = Arc::clone(&svc);
+        std::thread::spawn(move || {
+            let mut req = query("victim", "4clique");
+            // an already-expired deadline trips at the first poll; no_cache
+            // keeps the victim off the single-flight path so it cannot
+            // coalesce onto (or poison) a neighbor's complete answer.
+            req.deadline_ms = Some(0);
+            req.no_cache = true;
+            svc.handle(&req)
+        })
+    };
+    let others: Vec<_> = neighbors
+        .iter()
+        .map(|&name| {
+            let svc = Arc::clone(&svc);
+            std::thread::spawn(move || svc.handle(&query(&format!("n-{name}"), name)))
+        })
+        .collect();
+
+    let (partial, cached, code, _) = ok_body(&victim.join().unwrap());
+    assert_eq!(code, 5, "deadline partials carry the PR-6 deadline code");
+    assert!(!cached);
+    assert!(partial.contains("\"complete\":false"));
+    assert!(partial.contains("\"tripped\":\"deadline\""));
+    assert_eq!(*partial, count_result(0, Some(sandslash::engine::CancelReason::Deadline)));
+
+    for (resp, &name) in others.into_iter().map(|h| h.join().unwrap()).zip(neighbors.iter()) {
+        let (result, _cached, code, _) = ok_body(&resp);
+        assert_eq!(code, 0, "neighbor {name} must be untouched by the victim's deadline");
+        assert_eq!(*result, one_shot(&g, name, false), "neighbor {name}");
+    }
+
+    // the partial was never cached: the next 4clique query recomputes
+    // (miss) and completes exactly.
+    let (full, cached, code, _) = ok_body(&svc.handle(&query("post", "4clique")));
+    assert!(!cached, "a tripped partial must not fill the cache");
+    assert_eq!(code, 0);
+    assert_eq!(*full, one_shot(&g, "4clique", false));
+}
+
+#[test]
+fn poisoned_query_does_not_affect_concurrent_tenants() {
+    if !budget::governance_enabled() {
+        return;
+    }
+    let _guard = serial();
+    let svc = test_service();
+    let g = datasets::load(GRAPH).unwrap();
+
+    // crossing 0 is the first root-block claim anywhere in the process:
+    // exactly one of the concurrent tenants draws the poison.
+    fault::install(FaultPlan {
+        action: FaultAction::Panic,
+        at_task: 0,
+        stage: Some(Stage::RootClaim),
+    });
+    let names = ["triangle", "wedge", "diamond", "4path", "4star", "4cycle"];
+    let tenants: Vec<_> = names
+        .iter()
+        .map(|&name| {
+            let svc = Arc::clone(&svc);
+            std::thread::spawn(move || (name, svc.handle(&query(&format!("p-{name}"), name))))
+        })
+        .collect();
+    let results: Vec<_> = tenants.into_iter().map(|h| h.join().unwrap()).collect();
+    fault::clear();
+
+    let mut poisoned = 0;
+    for (name, resp) in &results {
+        match &resp.body {
+            Body::Err(e) => {
+                poisoned += 1;
+                assert_eq!(e.name, "worker-panic", "tenant {name}");
+                assert_eq!(e.code, 4, "worker panics surface the PR-6 panic code");
+                assert!(e.detail.contains("injected fault"));
+            }
+            Body::Ok { result, code, .. } => {
+                assert_eq!(*code, 0, "tenant {name}");
+                assert_eq!(**result, one_shot(&g, name, false), "tenant {name}");
+            }
+        }
+    }
+    assert_eq!(poisoned, 1, "exactly one tenant draws the single armed fault");
+
+    // the service survived: the poisoned pattern now answers exactly
+    // (the panicked fill was rejected, not cached), and ping works.
+    for (name, _) in &results {
+        let (result, _, code, _) = ok_body(&svc.handle(&query(&format!("r-{name}"), name)));
+        assert_eq!(code, 0);
+        assert_eq!(*result, one_shot(&g, name, false), "rerun {name}");
+    }
+    let (pong, _, code, _) = ok_body(&svc.handle(&Request::bare("ping", Op::Ping)));
+    assert_eq!(code, 0);
+    assert!(pong.contains("\"pong\":true"));
+}
+
+#[test]
+fn admission_rejects_with_the_overloaded_code_when_saturated() {
+    if !budget::governance_enabled() {
+        return;
+    }
+    let _guard = serial();
+    let svc = Arc::new(
+        Service::new(ServiceConfig {
+            max_inflight: 1,
+            max_queued: 1,
+            cache_bytes: 1 << 20,
+            default_threads: 2,
+            default_budget: Budget::default(),
+        })
+        .expect("governed test environment"),
+    );
+    svc.preload(GRAPH).expect("test dataset resident");
+
+    // hold the only inflight slot for a while via an injected delay at
+    // the first root-block claim.
+    fault::install(FaultPlan {
+        action: FaultAction::Delay(Duration::from_millis(400)),
+        at_task: 0,
+        stage: Some(Stage::RootClaim),
+    });
+    let slow = {
+        let svc = Arc::clone(&svc);
+        let mut req = query("slow", "triangle");
+        req.no_cache = true;
+        std::thread::spawn(move || svc.handle(&req))
+    };
+    std::thread::sleep(Duration::from_millis(100));
+    let waiter = {
+        let svc = Arc::clone(&svc);
+        let mut req = query("queued", "wedge");
+        req.no_cache = true;
+        std::thread::spawn(move || svc.handle(&req))
+    };
+    std::thread::sleep(Duration::from_millis(100));
+
+    // inflight full, queue full: the third tenant is refused, not hung.
+    let resp = svc.handle(&query("refused", "diamond"));
+    match &resp.body {
+        Body::Err(e) => {
+            assert_eq!(e.name, "overloaded");
+            assert_eq!(e.code, CODE_OVERLOADED);
+        }
+        Body::Ok { .. } => panic!("a saturated service must refuse the third tenant"),
+    }
+
+    let (_, _, code, _) = ok_body(&slow.join().unwrap());
+    assert_eq!(code, 0, "the delayed tenant still completes");
+    let (_, _, code, _) = ok_body(&waiter.join().unwrap());
+    assert_eq!(code, 0, "the queued tenant runs once the slot frees");
+    fault::clear();
+}
+
+#[test]
+fn invalidate_bumps_the_epoch_and_forces_recompute() {
+    if !budget::governance_enabled() {
+        return;
+    }
+    let _guard = serial();
+    let svc = test_service();
+
+    let (first, cached, _, epoch) = ok_body(&svc.handle(&query("e1", "triangle")));
+    assert!(!cached);
+    assert_eq!(epoch, Some(0));
+    let (_, cached, _, _) = ok_body(&svc.handle(&query("e2", "triangle")));
+    assert!(cached);
+
+    let mut inv = Request::bare("inv", Op::Invalidate);
+    inv.graph = Some(GRAPH.to_string());
+    let (body, _, code, _) = ok_body(&svc.handle(&inv));
+    assert_eq!(code, 0);
+    assert!(body.contains("\"epoch\":1"), "invalidate reports the new epoch: {body}");
+    assert!(body.contains("\"purged\":1"), "one resident entry purged: {body}");
+
+    // same query, new epoch: a miss that recomputes the same bytes.
+    let (again, cached, code, epoch) = ok_body(&svc.handle(&query("e3", "triangle")));
+    assert!(!cached, "an epoch bump must orphan the old entry");
+    assert_eq!(code, 0);
+    assert_eq!(epoch, Some(1));
+    assert_eq!(*again, *first, "the graph did not change, only the epoch");
+    let (_, cached, _, _) = ok_body(&svc.handle(&query("e4", "triangle")));
+    assert!(cached, "the recompute refilled the cache under the new key");
+}
+
+#[test]
+fn scoped_thread_locals_do_not_leak() {
+    if !budget::governance_enabled() {
+        return;
+    }
+    let _guard = serial();
+    let svc = test_service();
+    let g = datasets::load(GRAPH).unwrap();
+    let pl = plan(&named("triangle"), false, true);
+    let cfg = MinerConfig::custom(2, pool::default_chunk(), OptFlags::hi());
+
+    // an ambient pre-cancelled token trips a direct engine run...
+    let cancelled = Arc::new(CancelToken::new());
+    cancelled.cancel();
+    let inside = budget::with_cancel(Arc::clone(&cancelled), || {
+        let out = dfs::count(&g, &pl, &cfg, &NoHooks).unwrap();
+        assert!(!out.complete, "a pre-cancelled ambient token must trip the run");
+
+        // ...but a service query inside the same scope installs its own
+        // per-query token, shadowing the ambient one: it completes.
+        let (result, _, code, _) = ok_body(&svc.handle(&query("shadow", "wedge")));
+        assert_eq!(code, 0, "the service's per-query token shadows the ambient cancel");
+        (*result).clone()
+    });
+    assert_eq!(inside, one_shot(&g, "wedge", false));
+
+    // after the scope the same thread is clean: nothing leaked.
+    let out = dfs::count(&g, &pl, &cfg, &NoHooks).unwrap();
+    assert!(out.complete, "the cancelled token must not outlive its scope");
+    let (result, _, code, _) = ok_body(&svc.handle(&query("after", "triangle")));
+    assert_eq!(code, 0);
+    assert_eq!(*result, one_shot(&g, "triangle", false));
+}
+
+#[test]
+fn ungoverned_environments_refuse_to_start_a_service() {
+    let _guard = serial();
+    let cfg = ServiceConfig {
+        max_inflight: 2,
+        max_queued: 4,
+        cache_bytes: 1 << 20,
+        default_threads: 2,
+        default_budget: Budget::default(),
+    };
+    if budget::governance_enabled() {
+        // scoped disable (unit-test hook) must refuse...
+        budget::with_governance_disabled(|| {
+            assert!(Service::new(cfg.clone()).is_err(), "ungoverned Service::new must refuse");
+        });
+        // ...and a governed environment must accept.
+        assert!(Service::new(cfg).is_ok());
+    } else {
+        // the SANDSLASH_NO_GOV=1 CI leg lands here: refusal is the whole
+        // contract — a resident process without deadlines or cancellation
+        // cannot protect its tenants.
+        assert!(Service::new(cfg).is_err(), "SANDSLASH_NO_GOV must refuse a resident service");
+    }
+}

@@ -1,0 +1,348 @@
+//! Wire-protocol golden suite (PR 7).
+//!
+//! The resident service speaks line-delimited JSON; this file pins the
+//! grammar down: requests round-trip through `render`/`parse_request`,
+//! every malformed line is rejected with a **stable named error** (not
+//! ignored, not guessed at), and the structured `code` field carries
+//! exactly the PR-6 CLI exit-code table — `deadline`=5, `task-budget`=6,
+//! `caller`=7 — so a client can switch on codes without caring whether
+//! it ran `sandslash dfs` or asked the resident process.
+//!
+//! Engine-backed code-parity tests skip under `SANDSLASH_NO_GOV=1`
+//! (the service refuses to start there; `service_concurrency.rs`
+//! asserts the refusal).
+
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+use sandslash::engine::bfs::BfsCapExceeded;
+use sandslash::engine::budget::{self, Budget};
+use sandslash::engine::{CancelReason, MineError};
+use sandslash::service::protocol::{mine_error_code, mine_error_name, trip_name};
+use sandslash::service::{
+    count_result, parse_request, resolve_pattern, response_code, Body, Op, PatternSpec, Priority,
+    Request, Response, Service, ServiceConfig, CODE_OVERLOADED,
+};
+use sandslash::util::fault::{self, FaultAction, FaultPlan, Stage};
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[test]
+fn requests_round_trip_through_render_and_parse() {
+    let mut battery = vec![
+        Request::query("q1", "er-small", PatternSpec::Named("triangle".into())),
+        Request::query("q2", "lj-mini", PatternSpec::Edges(vec![(0, 1), (1, 2), (2, 0)])),
+        Request::bare("p1", Op::Ping),
+        Request::bare("s1", Op::Stats),
+        Request::bare("g1", Op::Graphs),
+        Request::bare("x1", Op::Shutdown),
+    ];
+    // every optional knob at a non-default value
+    let mut loaded = Request::query("q3", "ba-small", PatternSpec::Named("4clique".into()));
+    loaded.vertex_induced = true;
+    loaded.deadline_ms = Some(250);
+    loaded.max_tasks = Some(1000);
+    loaded.threads = Some(4);
+    loaded.priority = Priority::High;
+    loaded.no_cache = true;
+    battery.push(loaded);
+    let mut cancel = Request::bare("c1", Op::Cancel);
+    cancel.target = Some("q3".into());
+    battery.push(cancel);
+    let mut inv = Request::bare("i1", Op::Invalidate);
+    inv.graph = Some("er-small".into());
+    battery.push(inv);
+    // ids carrying JSON-significant characters must survive escaping
+    battery.push(Request::query("q\"4\\", "er-small", PatternSpec::Named("wedge".into())));
+
+    for req in battery {
+        let line = req.render();
+        let back = parse_request(&line)
+            .unwrap_or_else(|e| panic!("round-trip of {line} rejected: {} ({})", e.name, e.detail));
+        assert_eq!(back, req, "round-trip of {line}");
+        // a second bounce is bit-stable
+        assert_eq!(back.render(), line);
+    }
+}
+
+#[test]
+fn malformed_lines_are_rejected_with_stable_names() {
+    let long_id = "x".repeat(129);
+    let cases: Vec<(String, &str)> = vec![
+        ("not json{".into(), "malformed-json"),
+        ("".into(), "malformed-json"),
+        ("[1,2]".into(), "not-an-object"),
+        ("\"just a string\"".into(), "not-an-object"),
+        ("{}".into(), "missing-field"),
+        ("{\"op\":\"query\"}".into(), "missing-field"),
+        ("{\"id\":\"\"}".into(), "bad-field"),
+        (format!("{{\"id\":\"{long_id}\"}}"), "bad-field"),
+        ("{\"id\":7}".into(), "missing-field"), // a non-string id is no id at all
+        ("{\"id\":\"x\",\"op\":\"frobnicate\"}".into(), "unknown-op"),
+        ("{\"id\":\"x\",\"op\":7}".into(), "bad-field"),
+        ("{\"id\":\"x\",\"wat\":1}".into(), "unknown-field"),
+        ("{\"id\":\"x\",\"graph\":\"\"}".into(), "bad-field"),
+        ("{\"id\":\"x\",\"pattern\":3}".into(), "bad-field"),
+        ("{\"id\":\"x\",\"induced\":\"yes\"}".into(), "bad-field"),
+        ("{\"id\":\"x\",\"deadline_ms\":-1}".into(), "bad-field"),
+        ("{\"id\":\"x\",\"deadline_ms\":\"soon\"}".into(), "bad-field"),
+        ("{\"id\":\"x\",\"max_tasks\":0}".into(), "bad-field"),
+        ("{\"id\":\"x\",\"threads\":0}".into(), "bad-field"),
+        ("{\"id\":\"x\",\"threads\":257}".into(), "bad-field"),
+        ("{\"id\":\"x\",\"priority\":\"urgent\"}".into(), "bad-field"),
+        ("{\"id\":\"x\",\"no_cache\":1}".into(), "bad-field"),
+        ("{\"id\":\"x\",\"target\":\"\"}".into(), "bad-field"),
+        ("{\"id\":\"x\",\"edges\":\"zigzag\"}".into(), "bad-edges"),
+        ("{\"id\":\"x\",\"edges\":[[0]]}".into(), "bad-edges"),
+        ("{\"id\":\"x\",\"edges\":[[0,1,2]]}".into(), "bad-edges"),
+        ("{\"id\":\"x\",\"edges\":[[0,\"a\"]]}".into(), "bad-edges"),
+    ];
+    for (line, want) in cases {
+        let e = parse_request(&line)
+            .err()
+            .unwrap_or_else(|| panic!("line {line:?} must be rejected"));
+        assert_eq!(e.name, want, "line {line:?} rejected under the wrong name: {}", e.detail);
+        assert_eq!(e.code, 2, "protocol rejections reuse the PR-6 usage code");
+    }
+}
+
+#[test]
+fn pattern_resolution_accepts_the_library_and_rejects_junk() {
+    // the named catalogue, pinned by (vertices, edges)
+    let catalogue = [
+        ("triangle", 3, 3),
+        ("wedge", 3, 2),
+        ("diamond", 4, 5),
+        ("tailed-triangle", 4, 4),
+        ("4path", 4, 3),
+        ("4star", 4, 3),
+        ("4cycle", 4, 4),
+        ("5cycle", 5, 5),
+        ("4clique", 4, 6),
+        ("5clique", 5, 10),
+    ];
+    for (name, nv, ne) in catalogue {
+        let p = resolve_pattern(&PatternSpec::Named(name.into()))
+            .unwrap_or_else(|e| panic!("{name} must resolve: {}", e.detail));
+        assert_eq!((p.num_vertices(), p.num_edges()), (nv, ne), "{name}");
+    }
+    assert_eq!(
+        resolve_pattern(&PatternSpec::Named("heptagram".into())).unwrap_err().name,
+        "unknown-pattern"
+    );
+
+    // explicit edge lists: the cache key's canonical-code domain is
+    // guarded at the door
+    let bad_edges = [
+        vec![],                                               // empty
+        vec![(0, 0)],                                         // self-loop
+        vec![(0, 1), (1, 0)],                                 // duplicate (undirected)
+        vec![(0, 1), (2, 3)],                                 // disconnected
+        vec![(0, 1), (1, 2), (2, 3), (3, 4), (4, 5), (5, 6), (6, 7), (7, 8)], // 9 vertices
+    ];
+    for edges in bad_edges {
+        let e = resolve_pattern(&PatternSpec::Edges(edges.clone())).unwrap_err();
+        assert_eq!(e.name, "bad-edges", "edges {edges:?}: {}", e.detail);
+    }
+    let tri = resolve_pattern(&PatternSpec::Edges(vec![(0, 1), (1, 2), (2, 0)])).unwrap();
+    assert_eq!((tri.num_vertices(), tri.num_edges()), (3, 3));
+}
+
+#[test]
+fn responses_render_golden_lines() {
+    // success, with every structural field populated
+    let ok = Response::ok("q1", Arc::new(count_result(7, None)), true, 0, Some(3));
+    let line = ok.render();
+    assert_eq!(
+        line,
+        "{\"id\":\"q1\",\"ok\":true,\"code\":0,\"cached\":true,\"epoch\":3,\
+         \"result\":{\"count\":7,\"complete\":true,\"tripped\":null}}"
+    );
+    assert_eq!(response_code(&line), Some(0));
+
+    // a tripped partial is still ok:true (an answer, just a lower
+    // bound) — the nonzero code is what flags it
+    let partial =
+        Response::ok("q2", Arc::new(count_result(41, Some(CancelReason::Deadline))), false, 5, Some(0));
+    let line = partial.render();
+    assert_eq!(
+        line,
+        "{\"id\":\"q2\",\"ok\":true,\"code\":5,\"cached\":false,\"epoch\":0,\
+         \"result\":{\"count\":41,\"complete\":false,\"tripped\":\"deadline\"}}"
+    );
+    assert_eq!(response_code(&line), Some(5));
+
+    // named errors
+    let err = Response::error("z", sandslash::service::ProtoError::usage("unknown-op", "boom"));
+    let line = err.render();
+    assert_eq!(line, "{\"id\":\"z\",\"ok\":false,\"code\":2,\"error\":\"unknown-op\",\"detail\":\"boom\"}");
+    assert_eq!(response_code(&line), Some(2));
+
+    // non-responses yield no code at all
+    assert_eq!(response_code("gibberish"), None);
+    assert_eq!(response_code("{\"id\":\"x\"}"), None);
+}
+
+/// The wire vocabulary and the PR-6 exit-code table are the same table.
+#[test]
+fn code_and_name_tables_match_pr6() {
+    assert_eq!(
+        [
+            CancelReason::WorkerPanic.exit_code(),
+            CancelReason::Deadline.exit_code(),
+            CancelReason::TaskBudget.exit_code(),
+            CancelReason::Caller.exit_code(),
+        ],
+        [4, 5, 6, 7]
+    );
+    assert_eq!(trip_name(CancelReason::Deadline), "deadline");
+    assert_eq!(trip_name(CancelReason::TaskBudget), "task-budget");
+    assert_eq!(trip_name(CancelReason::Caller), "caller");
+    assert_eq!(trip_name(CancelReason::WorkerPanic), "worker-panic");
+
+    let panic = MineError::WorkerPanicked { engine: "dfs", payload: "boom".into() };
+    assert_eq!(mine_error_code(&panic), 4);
+    assert_eq!(mine_error_name(&panic), "worker-panic");
+    let cap: MineError =
+        BfsCapExceeded { level: 3, embeddings: 9, bytes: 10, cap: 5 }.into();
+    assert_eq!(mine_error_code(&cap), 3);
+    assert_eq!(mine_error_name(&cap), "bfs-cap");
+
+    // the one service-only code extends the table without colliding
+    assert_eq!(CODE_OVERLOADED, 8);
+
+    // tripped fragments are renderable for every reason
+    for reason in [CancelReason::Deadline, CancelReason::TaskBudget, CancelReason::Caller] {
+        let frag = count_result(11, Some(reason));
+        assert!(frag.contains("\"complete\":false"));
+        assert!(frag.contains(&format!("\"tripped\":\"{}\"", trip_name(reason))));
+    }
+}
+
+fn test_service() -> Arc<Service> {
+    let svc = Service::new(ServiceConfig {
+        max_inflight: 4,
+        max_queued: 8,
+        cache_bytes: 1 << 20,
+        default_threads: 2,
+        default_budget: Budget::default(),
+    })
+    .expect("governed test environment");
+    svc.preload("er-small").expect("test dataset resident");
+    Arc::new(svc)
+}
+
+fn ok_parts(resp: &Response) -> (Arc<String>, i32) {
+    match &resp.body {
+        Body::Ok { result, code, .. } => (result.clone(), *code),
+        Body::Err(e) => panic!("query {} failed: {} ({})", resp.id, e.name, e.detail),
+    }
+}
+
+/// Live end-to-end parity: a resident query tripped by each governance
+/// knob answers with exactly the PR-6 code for that knob.
+#[test]
+fn governed_trips_surface_their_pr6_codes_on_the_wire() {
+    if !budget::governance_enabled() {
+        return;
+    }
+    let _guard = serial();
+    let svc = test_service();
+
+    // deadline = 5: an already-expired deadline trips at the first poll
+    let mut req = Request::query("d", "er-small", PatternSpec::Named("triangle".into()));
+    req.deadline_ms = Some(0);
+    req.no_cache = true;
+    let (frag, code) = ok_parts(&svc.handle(&req));
+    assert_eq!(code, CancelReason::Deadline.exit_code());
+    assert_eq!(*frag, count_result(0, Some(CancelReason::Deadline)));
+
+    // task-budget = 6: one task against a multi-block root space
+    // (er-small spans several claim blocks at the default grain) must
+    // trip
+    let mut req = Request::query("t", "er-small", PatternSpec::Named("triangle".into()));
+    req.max_tasks = Some(1);
+    req.no_cache = true;
+    let (frag, code) = ok_parts(&svc.handle(&req));
+    assert_eq!(code, CancelReason::TaskBudget.exit_code());
+    assert!(frag.contains("\"tripped\":\"task-budget\""));
+
+    // caller = 7: slow the victim with an injected delay at its first
+    // root claim (threads=1 so no second worker can drain the roots
+    // while it sleeps), then land a cancel op mid-run
+    fault::install(FaultPlan {
+        action: FaultAction::Delay(Duration::from_millis(400)),
+        at_task: 0,
+        stage: Some(Stage::RootClaim),
+    });
+    let victim = {
+        let svc = Arc::clone(&svc);
+        std::thread::spawn(move || {
+            let mut req = Request::query("victim", "er-small", PatternSpec::Named("wedge".into()));
+            req.threads = Some(1);
+            req.no_cache = true;
+            svc.handle(&req)
+        })
+    };
+    let mut cancel = Request::bare("c", Op::Cancel);
+    cancel.target = Some("victim".into());
+    let mut landed = false;
+    for _ in 0..200 {
+        let (frag, code) = ok_parts(&svc.handle(&cancel));
+        assert_eq!(code, 0, "cancel is an op, not a query; it has no trip code of its own");
+        if frag.contains("\"cancelled\":true") {
+            landed = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let resp = victim.join().unwrap();
+    fault::clear();
+    assert!(landed, "the cancel op must find the delayed victim in flight");
+    let (frag, code) = ok_parts(&resp);
+    assert_eq!(code, CancelReason::Caller.exit_code());
+    assert!(frag.contains("\"complete\":false"));
+    assert!(frag.contains("\"tripped\":\"caller\""));
+
+    // cancelling a finished id is idempotent, not an error
+    let (frag, code) = ok_parts(&svc.handle(&cancel));
+    assert_eq!(code, 0);
+    assert!(frag.contains("\"cancelled\":false"));
+}
+
+/// `handle_line` is the wire loop's whole contract: parse errors come
+/// back as renderable lines with id `"?"`, good lines dispatch.
+#[test]
+fn handle_line_round_trips_the_wire_shapes() {
+    if !budget::governance_enabled() {
+        return;
+    }
+    let _guard = serial();
+    let svc = test_service();
+
+    let pong = svc.handle_line("{\"id\":\"p\",\"op\":\"ping\"}");
+    assert_eq!(pong, "{\"id\":\"p\",\"ok\":true,\"code\":0,\"cached\":false,\"result\":{\"pong\":true}}");
+    assert_eq!(response_code(&pong), Some(0));
+
+    let rejected = svc.handle_line("][");
+    assert!(rejected.starts_with("{\"id\":\"?\",\"ok\":false,\"code\":2,\"error\":\"malformed-json\""));
+    assert_eq!(response_code(&rejected), Some(2));
+
+    let unknown = svc.handle_line("{\"id\":\"u\",\"graph\":\"atlantis\",\"pattern\":\"triangle\"}");
+    assert!(unknown.contains("\"error\":\"unknown-graph\""));
+    assert_eq!(response_code(&unknown), Some(1));
+
+    let answered = svc.handle_line("{\"id\":\"q\",\"graph\":\"er-small\",\"pattern\":\"triangle\"}");
+    assert!(answered.contains("\"ok\":true"));
+    assert!(answered.contains("\"complete\":true"));
+    assert_eq!(response_code(&answered), Some(0));
+
+    // the stats op reflects the traffic this test just generated
+    let stats = svc.handle_line("{\"id\":\"s\",\"op\":\"stats\"}");
+    assert!(stats.contains("\"queries\":1"), "one engine query ran: {stats}");
+    assert!(stats.contains("\"entries\":1"), "its fill is resident: {stats}");
+}
