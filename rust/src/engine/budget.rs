@@ -39,9 +39,16 @@
 //! `SANDSLASH_NO_STEAL` / `SANDSLASH_NO_SIMD`.
 
 use std::cell::{Cell, RefCell};
-use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::{Arc, OnceLock};
 use std::time::{Duration, Instant};
+
+// PR-8: the CancelToken byte and the governor's task counter and
+// panic-note mutex go through the sync facade so the loom suite can
+// model-check first-trip-wins under racing cancels
+// (tests/loom/budget.rs). Arc/OnceLock/Instant stay std — they are
+// plumbing around the protocol, not the protocol.
+use crate::util::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use crate::util::sync::Mutex;
 
 use crate::engine::bfs::BfsCapExceeded;
 use crate::util::metrics::{gov, SearchStats};

@@ -58,12 +58,19 @@ use std::any::Any;
 use std::cell::Cell;
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Mutex, OnceLock};
+use std::sync::OnceLock;
 
 use crate::engine::budget::Governor;
 use crate::util::metrics::sched as counters;
 use crate::util::rng::Rng;
+// PR-8: the protocol state (deque mutexes + length mirrors, the
+// active-count termination protocol, the stop flag) and the worker
+// threads themselves go through the sync facade so the loom suite can
+// model-check them (tests/loom/sched.rs proves no task is lost at
+// termination). OnceLock stays std: process-lifetime env caching is
+// not part of the protocol under test.
+use crate::util::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use crate::util::sync::{thread as sthread, Mutex};
 
 use super::split::SplitGate;
 use super::topology;
@@ -611,9 +618,9 @@ fn worker_loop<A>(
         }
         idle += 1;
         if idle < IDLE_SPINS {
-            std::thread::yield_now();
+            sthread::yield_now();
         } else {
-            std::thread::sleep(IDLE_NAP);
+            sthread::sleep(IDLE_NAP);
         }
     }
     if hungry {
@@ -640,7 +647,7 @@ fn cursor_reduce<A: Send>(
 ) -> A {
     let cursor = AtomicUsize::new(0);
     let stop = AtomicBool::new(false);
-    let results: Vec<A> = std::thread::scope(|scope| {
+    let results: Vec<A> = sthread::scope(|scope| {
         let handles: Vec<_> = (0..threads)
             .map(|tid| {
                 let cursor = &cursor;
@@ -774,7 +781,7 @@ pub fn reduce_governed<A: Send>(
         return cursor_reduce(n, threads, chunk, gov, &init, &body, merge);
     }
     let pool = Pool::new(n, pol);
-    let results: Vec<A> = std::thread::scope(|scope| {
+    let results: Vec<A> = sthread::scope(|scope| {
         let handles: Vec<_> = (0..threads)
             .map(|w| {
                 let pool = &pool;

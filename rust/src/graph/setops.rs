@@ -133,6 +133,14 @@ fn detect_simd_mode() -> u8 {
 
 #[cfg(target_arch = "x86_64")]
 fn compute_simd_mode() -> u8 {
+    // Miri interprets MIR and has no CPUID or `std::arch` vector
+    // intrinsics; pin the interpreter to the portable scalar kernels so
+    // `cargo miri test` exercises the pointer arithmetic it *can* check
+    // (the scalar merges, the bitset words) instead of aborting on an
+    // unsupported intrinsic.
+    if cfg!(miri) {
+        return MODE_SCALAR;
+    }
     let disabled = std::env::var("SANDSLASH_NO_SIMD")
         .is_ok_and(|v| !v.trim().is_empty() && v.trim() != "0");
     if disabled {
@@ -294,6 +302,7 @@ pub fn intersect_into_below(
 /// longer than `a`, each element of `a` is binary-searched in a
 /// shrinking window of `b` instead of merging.
 pub fn difference_into(a: &[VertexId], b: &[VertexId], out: &mut Vec<VertexId>) {
+    dispatch::note_difference();
     if skewed(a.len(), b.len()) {
         let mut lo = 0usize;
         for (i, &x) in a.iter().enumerate() {
@@ -625,6 +634,11 @@ mod x86 {
 
     /// Bitmask of `va` lanes equal to any lane of `vb` (4-lane blocks;
     /// three 32-bit rotations cover all pairs).
+    ///
+    /// # Safety
+    /// The CPU must support SSSE3 (every caller is itself an
+    /// SSSE3 `#[target_feature]` kernel reached only through the
+    /// runtime-detecting dispatcher).
     #[inline]
     #[target_feature(enable = "ssse3")]
     unsafe fn sse_match_mask(va: __m128i, vb: __m128i) -> u32 {
@@ -690,6 +704,11 @@ mod x86 {
 
     /// Bitmask of `va` lanes equal to any lane of `vb` (8-lane blocks;
     /// seven cross-lane rotations cover all pairs).
+    ///
+    /// # Safety
+    /// The CPU must support AVX2 (every caller is itself an
+    /// AVX2 `#[target_feature]` kernel reached only through the
+    /// runtime-detecting dispatcher).
     #[inline]
     #[target_feature(enable = "avx2")]
     unsafe fn avx2_match_mask(va: __m256i, vb: __m256i) -> u32 {

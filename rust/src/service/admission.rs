@@ -22,7 +22,11 @@
 //! `2 × max_inflight`, matching the classic "one running, one
 //! waiting" provisioning rule.
 
-use std::sync::{Condvar, Mutex};
+// PR-8: the state mutex + slot condvar go through the sync facade so
+// the loom suite can model-check the bounded-in-flight protocol
+// (tests/loom/admission.rs proves inflight never exceeds
+// max_inflight and permits are never lost).
+use crate::util::sync::{Condvar, Mutex};
 
 /// Admission priority class of one query.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]

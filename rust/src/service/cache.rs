@@ -31,9 +31,14 @@
 //! [`Outcome`]: crate::engine::Outcome
 
 use std::collections::HashMap;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 
 use crate::pattern::CanonCode;
+// PR-8: the table mutex + resolution condvar go through the sync
+// facade so the loom suite can model-check the owner-tokened
+// single-flight protocol (tests/loom/cache.rs proves a slow failed
+// leader never clobbers a newer fill).
+use crate::util::sync::{Condvar, Mutex};
 
 /// Which low-level hook surface produced the cached value. Today the
 /// service serves counting queries only ([`HookKind::Count`]); the

@@ -118,17 +118,19 @@ pub mod dispatch {
     static WORD_PARALLEL: PaddedCounter = PaddedCounter(AtomicU64::new(0));
     static MASK_FILTER: PaddedCounter = PaddedCounter(AtomicU64::new(0));
     static GATHER_FILTER: PaddedCounter = PaddedCounter(AtomicU64::new(0));
+    static DIFFERENCE: PaddedCounter = PaddedCounter(AtomicU64::new(0));
 
-    // Per-engine attribution lanes (PR 5): the same six families, one
+    // Per-engine attribution lanes (PR 5): the same families, one
     // copy per [`super::tag::Engine`] lane, bumped alongside the
     // globals only while counting is enabled.
-    const FAMILIES: usize = 6;
+    const FAMILIES: usize = 7;
     const FAM_MERGE: usize = 0;
     const FAM_GALLOP: usize = 1;
     const FAM_SIMD_MERGE: usize = 2;
     const FAM_WORD_PARALLEL: usize = 3;
     const FAM_MASK_FILTER: usize = 4;
     const FAM_GATHER_FILTER: usize = 5;
+    const FAM_DIFFERENCE: usize = 6;
     #[allow(clippy::declare_interior_mutable_const)] // array-init seed only
     const ZERO_COUNTER: PaddedCounter = PaddedCounter(AtomicU64::new(0));
     static TAGGED: [[PaddedCounter; FAMILIES]; super::tag::LANES] =
@@ -155,12 +157,20 @@ pub mod dispatch {
         pub mask_filter: u64,
         /// Gathered connectivity-code filters (MNC dense mode).
         pub gather_filter: u64,
+        /// Sorted anti-intersections (`difference_into`) — the PR-8
+        /// fix for the carried-forward counter gap: the BFS exclusion
+        /// chain and the FSM fresh-candidate split were invisible to
+        /// the dispatch counters before this family existed.
+        pub difference: u64,
     }
 
     impl DispatchCounts {
         /// Sum of the non-scalar kernel families (everything past the
         /// lockstep merge) — what the PR-5 migration tests assert moved
-        /// inside a tagged engine lane.
+        /// inside a tagged engine lane. `difference` is excluded: like
+        /// `merge` it is a scalar lockstep kernel, so counting it here
+        /// would let a run with zero adaptive-kernel selections pass
+        /// the "beyond scalar" assertions.
         pub fn beyond_scalar(&self) -> u64 {
             self.gallop
                 + self.simd_merge
@@ -180,6 +190,7 @@ pub mod dispatch {
             word_parallel: WORD_PARALLEL.0.load(Ordering::Relaxed),
             mask_filter: MASK_FILTER.0.load(Ordering::Relaxed),
             gather_filter: GATHER_FILTER.0.load(Ordering::Relaxed),
+            difference: DIFFERENCE.0.load(Ordering::Relaxed),
         }
     }
 
@@ -196,6 +207,7 @@ pub mod dispatch {
             word_parallel: lane[FAM_WORD_PARALLEL].0.load(Ordering::Relaxed),
             mask_filter: lane[FAM_MASK_FILTER].0.load(Ordering::Relaxed),
             gather_filter: lane[FAM_GATHER_FILTER].0.load(Ordering::Relaxed),
+            difference: lane[FAM_DIFFERENCE].0.load(Ordering::Relaxed),
         }
     }
 
@@ -203,7 +215,7 @@ pub mod dispatch {
     /// concurrent miners — inside a shared test binary prefer
     /// [`snapshot`] deltas instead.
     pub fn reset() {
-        for c in [&MERGE, &GALLOP, &SIMD_MERGE, &WORD_PARALLEL, &MASK_FILTER, &GATHER_FILTER] {
+        for c in [&MERGE, &GALLOP, &SIMD_MERGE, &WORD_PARALLEL, &MASK_FILTER, &GATHER_FILTER, &DIFFERENCE] {
             c.0.store(0, Ordering::Relaxed);
         }
         for lane in &TAGGED {
@@ -247,6 +259,12 @@ pub mod dispatch {
     pub(crate) fn note_gather_filter() {
         if enabled() {
             note_family(&GATHER_FILTER, FAM_GATHER_FILTER);
+        }
+    }
+    #[inline]
+    pub(crate) fn note_difference() {
+        if enabled() {
+            note_family(&DIFFERENCE, FAM_DIFFERENCE);
         }
     }
 }
@@ -533,6 +551,7 @@ mod tests {
         dispatch::note_word_parallel();
         dispatch::note_mask_filter();
         dispatch::note_gather_filter();
+        dispatch::note_difference();
         let after = dispatch::snapshot();
         assert!(after.merge > before.merge);
         assert!(after.gallop > before.gallop);
@@ -540,6 +559,13 @@ mod tests {
         assert!(after.word_parallel > before.word_parallel);
         assert!(after.mask_filter > before.mask_filter);
         assert!(after.gather_filter > before.gather_filter);
+        assert!(after.difference > before.difference);
+        // difference is a scalar family: beyond_scalar must exclude it
+        // (structural check on a zeroed value — counter deltas are racy
+        // against sibling tests in the shared lib-test binary)
+        let only_scalar =
+            DispatchCounts { merge: 3, difference: 7, ..DispatchCounts::default() };
+        assert_eq!(only_scalar.beyond_scalar(), 0);
     }
 
     #[test]

@@ -8,6 +8,8 @@ pub mod cli;
 pub mod config;
 pub mod fault;
 pub mod metrics;
+pub mod model;
 pub mod pool;
 pub mod rng;
+pub mod sync;
 pub mod timer;

@@ -1,0 +1,1246 @@
+//! In-tree deterministic schedule-exploration model checker — the
+//! `loom` substitute behind the [`crate::util::sync`] facade.
+//!
+//! The offline build environment has no crate registry (Cargo.toml:
+//! zero dependencies by design), so the PR-8 concurrency verification
+//! layer ships its own systematic concurrency tester the same way
+//! `util::bench` stands in for criterion. Under `--cfg loom` the
+//! [`crate::util::sync`] facade routes the synchronization of
+//! `exec/sched.rs`, `engine/budget.rs`, `service/cache.rs` and
+//! `service/admission.rs` onto the modeled types in this module, and
+//! the `rust/tests/loom/` suite re-runs each protocol under every
+//! explored interleaving.
+//!
+//! # How it works
+//!
+//! [`check`] runs a closure repeatedly, once per *schedule*. Modeled
+//! threads are real OS threads serialized by a token: exactly one
+//! modeled thread executes at a time, and every modeled operation
+//! (atomic access, mutex lock/unlock, condvar wait/notify, spawn,
+//! yield) is a *schedule point* where the token may move. The sequence
+//! of decisions forms a trail; after each schedule the last
+//! not-yet-exhausted decision is advanced and the closure replays —
+//! depth-first systematic exploration, CHESS-style:
+//!
+//! * **Preemption bounding**: involuntary switches (taking the token
+//!   away from a thread that could keep running, at an atomic or lock
+//!   operation) are the branching decisions, bounded per schedule by
+//!   [`Model::preemption_bound`] (most concurrency bugs need very few
+//!   preemptions). Voluntary switches — blocking, `yield_now`,
+//!   `sleep`, thread exit — round-robin deterministically and do not
+//!   branch, which keeps idle-spin loops fair and finite.
+//! * **Bounded exploration**: [`Model::max_schedules`] caps the number
+//!   of schedules (exploration order is deterministic, so a truncated
+//!   run is a reproducible prefix). `SANDSLASH_MODEL_ITERS` and
+//!   `SANDSLASH_MODEL_PREEMPTIONS` override the defaults process-wide.
+//! * **Deadlock detection**: a schedule where every live thread is
+//!   blocked aborts the run and reports each thread's state.
+//! * **Failure reporting**: a panic in any modeled thread (assertion
+//!   failures included) aborts the schedule, unwinds every other
+//!   thread, and [`check`] re-panics with the schedule count — the
+//!   failing interleaving is the deterministic n-th schedule, so it
+//!   can be replayed under a debugger by re-running the test.
+//!
+//! # What it does *not* model
+//!
+//! Memory is sequentially consistent: because only one modeled thread
+//! runs at a time (with a happens-before edge through the token
+//! hand-off), every explored execution is an interleaving of whole
+//! operations. Loom's C11 weak-memory reorderings (a `Relaxed` store
+//! seen out of order, unsynchronized-data races) are *not* explored —
+//! those are covered by the textual `Relaxed` audit in `cargo xtask
+//! lint` and the ThreadSanitizer leg of the `rust-analysis` workflow.
+//! Spurious condvar wakeups are not injected either (every migrated
+//! wait site is a while-loop, so this only loses coverage, never
+//! soundness of a pass). See EXPERIMENTS.md §PR-8.
+
+use std::cell::RefCell;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar as OsCondvar, Mutex as OsMutex};
+
+/// Default involuntary-switch budget per schedule (the CHESS
+/// observation: almost all real interleaving bugs manifest with two or
+/// fewer preemptions).
+pub const DEFAULT_PREEMPTION_BOUND: usize = 2;
+
+/// Default cap on explored schedules per [`check`] call.
+pub const DEFAULT_MAX_SCHEDULES: usize = 4096;
+
+/// Hard per-schedule step cap — a backstop against user code that
+/// fails to terminate even under the fair round-robin fallback.
+const STEP_CAP: usize = 1 << 20;
+
+/// Marker payload for the internal unwind that tears a modeled thread
+/// down when the schedule aborts; never observed by user code.
+struct ModelAbort;
+
+/// One modeled thread's scheduling state.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Run {
+    /// Runnable (may or may not hold the token).
+    Ready,
+    /// Waiting for the mutex whose cell address is given.
+    BlockedLock(usize),
+    /// Waiting on the condvar whose address is given.
+    BlockedCv(usize),
+    /// Waiting for the thread with the given id to finish.
+    BlockedJoin(usize),
+    /// Body returned (or unwound); never runs again this schedule.
+    Finished,
+}
+
+/// One recorded branching decision: which of `options` successor
+/// choices was taken at a preemptible point.
+#[derive(Clone, Copy, Debug)]
+struct Branch {
+    taken: usize,
+    options: usize,
+}
+
+/// Why a schedule aborted.
+enum Failure {
+    /// A modeled thread panicked; the message is a rendering of the
+    /// payload (the payload itself unwinds out of the OS thread).
+    Panic(String),
+    /// Every live thread was blocked.
+    Deadlock(String),
+    /// The step backstop tripped.
+    StepCap,
+}
+
+impl std::fmt::Display for Failure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Failure::Panic(m) => write!(f, "thread panicked: {m}"),
+            Failure::Deadlock(m) => write!(f, "deadlock: {m}"),
+            Failure::StepCap => write!(f, "schedule exceeded {STEP_CAP} steps"),
+        }
+    }
+}
+
+/// Scheduler state shared by every modeled thread of one schedule.
+struct SchedInner {
+    threads: Vec<Run>,
+    /// Id of the thread holding the token.
+    current: usize,
+    /// Branch decisions: replayed up to `pos`, extended past it.
+    trail: Vec<Branch>,
+    pos: usize,
+    preemptions: usize,
+    bound: usize,
+    steps: usize,
+    /// Set on the first failure (or external abort); every thread
+    /// unwinds via [`ModelAbort`] at its next schedule point.
+    abort: bool,
+    failure: Option<Failure>,
+}
+
+/// One schedule's coordinator: the token, the trail, and the condvar
+/// modeled threads park on.
+struct Exec {
+    inner: OsMutex<SchedInner>,
+    cv: OsCondvar,
+}
+
+thread_local! {
+    /// (executor, thread id) binding of the current OS thread, set for
+    /// the duration of a schedule. `None` means "off-model": the model
+    /// primitives then degrade to plain single-threaded storage.
+    static CTX: RefCell<Option<(Arc<Exec>, usize)>> = const { RefCell::new(None) };
+}
+
+fn ctx() -> Option<(Arc<Exec>, usize)> {
+    CTX.with(|c| c.borrow().clone())
+}
+
+/// Binds the current OS thread to `(exec, tid)` until the guard drops.
+struct CtxGuard {
+    prev: Option<(Arc<Exec>, usize)>,
+}
+
+fn bind(exec: Arc<Exec>, tid: usize) -> CtxGuard {
+    let prev = CTX.with(|c| c.borrow_mut().replace((exec, tid)));
+    CtxGuard { prev }
+}
+
+impl Drop for CtxGuard {
+    fn drop(&mut self) {
+        CTX.with(|c| *c.borrow_mut() = self.prev.take());
+    }
+}
+
+/// The kind of schedule point, deciding whether the switch branches.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Point {
+    /// The running thread could continue (atomic/lock op): switching
+    /// away costs a preemption and is a recorded branch decision.
+    Preemptible,
+    /// The running thread volunteers the token (`yield_now`, `sleep`):
+    /// deterministic round-robin, no branch.
+    Yield,
+    /// The running thread just blocked: the token must move.
+    Blocked,
+}
+
+fn render_payload(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic payload>".to_string()
+    }
+}
+
+impl Exec {
+    fn new(trail: Vec<Branch>, bound: usize) -> Self {
+        Exec {
+            inner: OsMutex::new(SchedInner {
+                threads: vec![Run::Ready],
+                current: 0,
+                trail,
+                pos: 0,
+                preemptions: 0,
+                bound,
+                steps: 0,
+                abort: false,
+                failure: None,
+            }),
+            cv: OsCondvar::new(),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, SchedInner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// First Ready thread strictly after `from` in cyclic id order,
+    /// falling back to `from` itself if it is the only one enabled.
+    fn round_robin(threads: &[Run], from: usize) -> Option<usize> {
+        let n = threads.len();
+        (1..=n).map(|d| (from + d) % n).find(|&t| threads[t] == Run::Ready)
+    }
+
+    /// The heart of the checker: consume one schedule point on the
+    /// calling modeled thread, possibly moving the token. Returns with
+    /// the token re-held; unwinds with [`ModelAbort`] if the schedule
+    /// aborted while parked.
+    fn schedule(&self, me: usize, point: Point) {
+        // A guard Drop running during a panic (mutex release on
+        // unwind) must not re-enter the scheduler: the thread is
+        // already on its way out, and a second panic would abort the
+        // process. State updates done by the caller stand on their own.
+        if std::thread::panicking() {
+            return;
+        }
+        let mut g = self.lock();
+        if g.abort {
+            drop(g);
+            std::panic::panic_any(ModelAbort);
+        }
+        g.steps += 1;
+        if g.steps > STEP_CAP {
+            g.abort = true;
+            g.failure.get_or_insert(Failure::StepCap);
+            self.cv.notify_all();
+            drop(g);
+            std::panic::panic_any(ModelAbort);
+        }
+        let enabled: Vec<usize> = g
+            .threads
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| **r == Run::Ready)
+            .map(|(t, _)| t)
+            .collect();
+        if enabled.is_empty() {
+            let desc = g
+                .threads
+                .iter()
+                .enumerate()
+                .filter(|(_, r)| **r != Run::Finished)
+                .map(|(t, r)| format!("thread {t}: {r:?}"))
+                .collect::<Vec<_>>()
+                .join(", ");
+            g.abort = true;
+            g.failure.get_or_insert(Failure::Deadlock(desc));
+            self.cv.notify_all();
+            drop(g);
+            std::panic::panic_any(ModelAbort);
+        }
+        let next = match point {
+            Point::Blocked | Point::Yield => {
+                Self::round_robin(&g.threads, me).expect("enabled set non-empty")
+            }
+            Point::Preemptible => {
+                debug_assert_eq!(g.threads[me], Run::Ready, "preemptible point off a ready thread");
+                let others: Vec<usize> = enabled.iter().copied().filter(|&t| t != me).collect();
+                let options =
+                    if g.preemptions < g.bound { 1 + others.len() } else { 1 };
+                let choice = if g.pos < g.trail.len() {
+                    // Replay: user code is deterministic given the
+                    // schedule, so the recorded decision is in range;
+                    // clamp defensively rather than corrupt the DFS.
+                    g.trail[g.pos].taken.min(options.saturating_sub(1))
+                } else {
+                    g.trail.push(Branch { taken: 0, options });
+                    0
+                };
+                g.pos += 1;
+                if choice == 0 {
+                    me
+                } else {
+                    g.preemptions += 1;
+                    others[choice - 1]
+                }
+            }
+        };
+        if next == me && g.threads[me] == Run::Ready {
+            return;
+        }
+        g.current = next;
+        self.cv.notify_all();
+        while g.current != me {
+            if g.abort {
+                drop(g);
+                std::panic::panic_any(ModelAbort);
+            }
+            g = self.cv.wait(g).unwrap_or_else(|e| e.into_inner());
+        }
+        if g.abort {
+            drop(g);
+            std::panic::panic_any(ModelAbort);
+        }
+    }
+
+    /// Register a new modeled thread (caller holds the token).
+    fn register_thread(&self) -> usize {
+        let mut g = self.lock();
+        g.threads.push(Run::Ready);
+        g.threads.len() - 1
+    }
+
+    /// Entry protocol of a freshly spawned modeled thread: park until
+    /// the scheduler hands it the token for the first time.
+    fn wait_for_token(&self, me: usize) {
+        let mut g = self.lock();
+        while g.current != me {
+            if g.abort {
+                drop(g);
+                std::panic::panic_any(ModelAbort);
+            }
+            g = self.cv.wait(g).unwrap_or_else(|e| e.into_inner());
+        }
+        if g.abort {
+            drop(g);
+            std::panic::panic_any(ModelAbort);
+        }
+    }
+
+    /// Mark the calling thread blocked on the lock at `addr`.
+    fn block_on_lock(&self, me: usize, addr: usize) {
+        self.lock().threads[me] = Run::BlockedLock(addr);
+    }
+
+    /// Mark the calling thread blocked on the condvar at `addr`.
+    fn block_on_cv(&self, me: usize, addr: usize) {
+        self.lock().threads[me] = Run::BlockedCv(addr);
+    }
+
+    /// Make every thread blocked on the lock at `addr` runnable again.
+    fn wake_lock_waiters(&self, addr: usize) {
+        let mut g = self.lock();
+        for r in g.threads.iter_mut() {
+            if *r == Run::BlockedLock(addr) {
+                *r = Run::Ready;
+            }
+        }
+    }
+
+    /// Wake condvar waiters at `addr` (`all`, or the lowest id).
+    fn wake_cv_waiters(&self, addr: usize, all: bool) {
+        let mut g = self.lock();
+        for r in g.threads.iter_mut() {
+            if *r == Run::BlockedCv(addr) {
+                *r = Run::Ready;
+                if !all {
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Model-level join: block until thread `target` finishes.
+    fn model_join(&self, me: usize, target: usize) {
+        loop {
+            {
+                let mut g = self.lock();
+                if g.threads[target] == Run::Finished {
+                    return;
+                }
+                g.threads[me] = Run::BlockedJoin(target);
+            }
+            self.schedule(me, Point::Blocked);
+        }
+    }
+
+    /// Thread-exit protocol: record the outcome, wake joiners, and
+    /// hand the token onward (or detect termination/deadlock).
+    fn finish(&self, me: usize, panic_desc: Option<String>) {
+        let mut g = self.lock();
+        g.threads[me] = Run::Finished;
+        if let Some(d) = panic_desc {
+            g.abort = true;
+            g.failure.get_or_insert(Failure::Panic(d));
+        }
+        for r in g.threads.iter_mut() {
+            if *r == Run::BlockedJoin(me) {
+                *r = Run::Ready;
+            }
+        }
+        if !g.abort {
+            if let Some(next) = Self::round_robin(&g.threads, me) {
+                g.current = next;
+            } else if g.threads.iter().any(|r| *r != Run::Finished) {
+                let desc = g
+                    .threads
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, r)| **r != Run::Finished)
+                    .map(|(t, r)| format!("thread {t}: {r:?}"))
+                    .collect::<Vec<_>>()
+                    .join(", ");
+                g.abort = true;
+                g.failure.get_or_insert(Failure::Deadlock(desc));
+            }
+        }
+        self.cv.notify_all();
+    }
+
+    /// Abort the schedule from outside a modeled thread (scope
+    /// teardown on unwind): wake everything so OS threads can exit.
+    fn abort_now(&self) {
+        let mut g = self.lock();
+        g.abort = true;
+        self.cv.notify_all();
+    }
+
+    /// Park the coordinating (off-model) thread until every modeled
+    /// thread has finished.
+    fn wait_all_finished(&self) {
+        let mut g = self.lock();
+        while g.threads.iter().any(|r| *r != Run::Finished) {
+            g = self.cv.wait(g).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+}
+
+fn env_usize(name: &str, default: usize) -> usize {
+    match std::env::var(name) {
+        Ok(v) => match v.trim().parse::<usize>() {
+            Ok(n) if n > 0 => n,
+            _ => {
+                eprintln!("warning: unusable {name}={v:?}; using {default}");
+                default
+            }
+        },
+        Err(_) => default,
+    }
+}
+
+/// Exploration configuration. [`Model::default`] reads the
+/// `SANDSLASH_MODEL_PREEMPTIONS` / `SANDSLASH_MODEL_ITERS` knobs;
+/// tests with large state spaces pin explicit smaller values.
+#[derive(Clone, Copy, Debug)]
+pub struct Model {
+    /// Involuntary-switch budget per schedule.
+    pub preemption_bound: usize,
+    /// Cap on explored schedules (deterministic prefix when hit).
+    pub max_schedules: usize,
+}
+
+impl Default for Model {
+    fn default() -> Self {
+        Model {
+            preemption_bound: env_usize(
+                "SANDSLASH_MODEL_PREEMPTIONS",
+                DEFAULT_PREEMPTION_BOUND,
+            ),
+            max_schedules: env_usize("SANDSLASH_MODEL_ITERS", DEFAULT_MAX_SCHEDULES),
+        }
+    }
+}
+
+/// Advance the trail to the next unexplored schedule (depth-first).
+/// Returns `false` when the space (under the preemption bound) is
+/// exhausted.
+fn advance(trail: &mut Vec<Branch>) -> bool {
+    while let Some(last) = trail.last_mut() {
+        if last.taken + 1 < last.options {
+            last.taken += 1;
+            return true;
+        }
+        trail.pop();
+    }
+    false
+}
+
+impl Model {
+    /// Run `f` under every explored schedule. Panics (with the
+    /// schedule count) on the first failing interleaving: a panic in
+    /// any modeled thread, a deadlock, or the step backstop.
+    pub fn check<F: FnMut()>(&self, mut f: F) {
+        assert!(
+            ctx().is_none(),
+            "model::check does not nest: already inside a modeled thread"
+        );
+        let mut trail: Vec<Branch> = Vec::new();
+        let mut schedules = 0usize;
+        loop {
+            schedules += 1;
+            let exec = Arc::new(Exec::new(std::mem::take(&mut trail), self.preemption_bound));
+            // The calling thread doubles as modeled thread 0 and holds
+            // the token from the start.
+            let outcome = {
+                let _bound = bind(exec.clone(), 0);
+                catch_unwind(AssertUnwindSafe(&mut f))
+            };
+            let desc = match &outcome {
+                Ok(()) => None,
+                Err(p) if p.is::<ModelAbort>() => None,
+                Err(p) => Some(render_payload(p.as_ref())),
+            };
+            exec.finish(0, desc);
+            exec.wait_all_finished();
+            let mut g = exec.lock();
+            if let Some(fail) = g.failure.take() {
+                let taken: Vec<usize> = g.trail.iter().map(|b| b.taken).collect();
+                drop(g);
+                panic!(
+                    "model check failed on schedule {schedules} \
+                     (preemption bound {}): {fail}\n  branch trail: {taken:?}",
+                    self.preemption_bound
+                );
+            }
+            trail = std::mem::take(&mut g.trail);
+            drop(g);
+            if schedules >= self.max_schedules || !advance(&mut trail) {
+                break;
+            }
+        }
+    }
+}
+
+/// Explore `f` with the default [`Model`] — the loom `model()`
+/// equivalent used by the `rust/tests/loom/` suite.
+pub fn check<F: FnMut()>(f: F) {
+    Model::default().check(f);
+}
+
+/// Modeled `std::sync` types: mutual exclusion and condition
+/// variables whose blocking is visible to the exploration scheduler.
+pub mod sync {
+    use super::{ctx, Point};
+    use std::cell::UnsafeCell;
+    use std::ops::{Deref, DerefMut};
+    use std::sync::LockResult;
+
+    /// Modeled mutex: same lock/guard surface as [`std::sync::Mutex`]
+    /// (never poisoned — a modeled panic aborts the whole schedule).
+    pub struct Mutex<T> {
+        locked: UnsafeCell<bool>,
+        data: UnsafeCell<T>,
+    }
+
+    // SAFETY: all access to the cells happens either while the owning
+    // modeled thread holds the scheduler token (exactly one modeled
+    // thread runs at a time, with a happens-before edge through the
+    // token hand-off mutex), or off-model on a single thread.
+    unsafe impl<T: Send> Send for Mutex<T> {}
+    // SAFETY: as above — token serialization substitutes for the lock
+    // a `std::sync::Mutex` would take.
+    unsafe impl<T: Send> Sync for Mutex<T> {}
+
+    impl<T> Mutex<T> {
+        /// New unlocked mutex holding `t`.
+        pub const fn new(t: T) -> Self {
+            Mutex { locked: UnsafeCell::new(false), data: UnsafeCell::new(t) }
+        }
+
+        fn addr(&self) -> usize {
+            self.locked.get() as usize
+        }
+
+        /// Acquire, blocking the modeled thread while contended.
+        pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+            if let Some((exec, me)) = ctx() {
+                exec.schedule(me, Point::Preemptible);
+                loop {
+                    // SAFETY: this thread holds the scheduler token, so
+                    // no other modeled thread touches the cell.
+                    let locked = unsafe { &mut *self.locked.get() };
+                    if !*locked {
+                        *locked = true;
+                        break;
+                    }
+                    exec.block_on_lock(me, self.addr());
+                    exec.schedule(me, Point::Blocked);
+                }
+            } else {
+                // SAFETY: off-model there is no concurrency; plain
+                // single-threaded storage.
+                let locked = unsafe { &mut *self.locked.get() };
+                assert!(!*locked, "off-model deadlock: model Mutex re-locked");
+                *locked = true;
+            }
+            Ok(MutexGuard { lock: self })
+        }
+    }
+
+    impl<T: std::fmt::Debug> std::fmt::Debug for Mutex<T> {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.debug_struct("Mutex").finish_non_exhaustive()
+        }
+    }
+
+    /// RAII guard for [`Mutex`]; releases and wakes waiters on drop.
+    pub struct MutexGuard<'a, T> {
+        lock: &'a Mutex<T>,
+    }
+
+    impl<T> Deref for MutexGuard<'_, T> {
+        type Target = T;
+        fn deref(&self) -> &T {
+            // SAFETY: the guard holds the modeled lock, and only the
+            // token-holding thread can be executing this.
+            unsafe { &*self.lock.data.get() }
+        }
+    }
+
+    impl<T> DerefMut for MutexGuard<'_, T> {
+        fn deref_mut(&mut self) -> &mut T {
+            // SAFETY: as in `deref` — modeled lock held, token-serial.
+            unsafe { &mut *self.lock.data.get() }
+        }
+    }
+
+    impl<T> Drop for MutexGuard<'_, T> {
+        fn drop(&mut self) {
+            // SAFETY: releasing the flag this guard set; token-serial.
+            unsafe {
+                *self.lock.locked.get() = false;
+            }
+            if let Some((exec, me)) = ctx() {
+                exec.wake_lock_waiters(self.lock.addr());
+                // A release is a visible operation other threads can
+                // race with (no-op during unwind, see `schedule`).
+                exec.schedule(me, Point::Preemptible);
+            }
+        }
+    }
+
+    /// Modeled condition variable (no spurious wakeups; every migrated
+    /// wait site is a while-loop, so this only loses coverage).
+    pub struct Condvar {
+        /// Occupies one byte so distinct condvars have distinct
+        /// addresses to key waiter lists on.
+        _addr: UnsafeCell<u8>,
+    }
+
+    // SAFETY: the cell is never read or written — it exists only for
+    // its address — so sharing across threads is trivially sound.
+    unsafe impl Send for Condvar {}
+    // SAFETY: as above; the address is the only thing used.
+    unsafe impl Sync for Condvar {}
+
+    impl Condvar {
+        /// New condvar with no waiters.
+        pub const fn new() -> Self {
+            Condvar { _addr: UnsafeCell::new(0) }
+        }
+
+        fn addr(&self) -> usize {
+            self._addr.get() as usize
+        }
+
+        /// Atomically release `guard` and wait for a notification,
+        /// re-acquiring before returning. Registration happens before
+        /// the mutex is released, so there is no lost-wakeup window.
+        pub fn wait<'a, T>(&self, guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+            let (exec, me) = ctx().expect("model Condvar::wait outside a model run");
+            let lock = guard.lock;
+            exec.block_on_cv(me, self.addr());
+            // Manual release: the guard's Drop must not run (it would
+            // schedule and double-release).
+            // SAFETY: this thread holds the modeled lock and the token.
+            unsafe {
+                *lock.locked.get() = false;
+            }
+            exec.wake_lock_waiters(lock.addr());
+            std::mem::forget(guard);
+            exec.schedule(me, Point::Blocked);
+            // Notified: re-acquire.
+            loop {
+                // SAFETY: token-serial access, as in `Mutex::lock`.
+                let locked = unsafe { &mut *lock.locked.get() };
+                if !*locked {
+                    *locked = true;
+                    break;
+                }
+                exec.block_on_lock(me, lock.addr());
+                exec.schedule(me, Point::Blocked);
+            }
+            Ok(MutexGuard { lock })
+        }
+
+        /// Wake every waiter.
+        pub fn notify_all(&self) {
+            if let Some((exec, me)) = ctx() {
+                exec.wake_cv_waiters(self.addr(), true);
+                exec.schedule(me, Point::Preemptible);
+            }
+        }
+
+        /// Wake one waiter (lowest thread id — deterministic).
+        pub fn notify_one(&self) {
+            if let Some((exec, me)) = ctx() {
+                exec.wake_cv_waiters(self.addr(), false);
+                exec.schedule(me, Point::Preemptible);
+            }
+        }
+    }
+
+    impl Default for Condvar {
+        fn default() -> Self {
+            Self::new()
+        }
+    }
+
+    impl std::fmt::Debug for Condvar {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.write_str("Condvar")
+        }
+    }
+}
+
+/// Modeled `std::sync::atomic` types: every access is a preemptible
+/// schedule point, so the exploration interleaves threads at exactly
+/// the operations the real types would race on.
+pub mod atomic {
+    use super::{ctx, Point};
+    use std::cell::UnsafeCell;
+    pub use std::sync::atomic::Ordering;
+
+    macro_rules! model_atomic_common {
+        ($name:ident, $ty:ty) => {
+            /// Modeled atomic: plain storage serialized by the
+            /// exploration scheduler's token (sequentially consistent
+            /// regardless of the `Ordering` argument — see the module
+            /// docs on what the model does not cover).
+            pub struct $name {
+                v: UnsafeCell<$ty>,
+            }
+
+            // SAFETY: the cell is only accessed while the owning
+            // modeled thread holds the scheduler token (one modeled
+            // thread at a time, happens-before through the hand-off),
+            // or off-model on a single thread.
+            unsafe impl Sync for $name {}
+
+            impl $name {
+                /// New atomic holding `v`.
+                pub const fn new(v: $ty) -> Self {
+                    Self { v: UnsafeCell::new(v) }
+                }
+
+                fn op<R>(&self, f: impl FnOnce(&mut $ty) -> R) -> R {
+                    if let Some((exec, me)) = ctx() {
+                        exec.schedule(me, Point::Preemptible);
+                    }
+                    // SAFETY: token-exclusive (or single-threaded
+                    // off-model) — see the `Sync` impl above.
+                    f(unsafe { &mut *self.v.get() })
+                }
+
+                /// Load the value (`Ordering` accepted for API parity).
+                pub fn load(&self, _: Ordering) -> $ty {
+                    self.op(|v| *v)
+                }
+
+                /// Store `val`.
+                pub fn store(&self, val: $ty, _: Ordering) {
+                    self.op(|v| *v = val);
+                }
+
+                /// Replace the value, returning the previous one.
+                pub fn swap(&self, val: $ty, _: Ordering) -> $ty {
+                    self.op(|v| std::mem::replace(v, val))
+                }
+
+                /// Compare-and-exchange, as [`std::sync::atomic`].
+                pub fn compare_exchange(
+                    &self,
+                    current: $ty,
+                    new: $ty,
+                    _: Ordering,
+                    _: Ordering,
+                ) -> Result<$ty, $ty> {
+                    self.op(|v| {
+                        if *v == current {
+                            *v = new;
+                            Ok(current)
+                        } else {
+                            Err(*v)
+                        }
+                    })
+                }
+            }
+
+            impl std::fmt::Debug for $name {
+                fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                    f.write_str(stringify!($name))
+                }
+            }
+
+            impl Default for $name {
+                fn default() -> Self {
+                    Self::new(<$ty as Default>::default())
+                }
+            }
+        };
+    }
+
+    macro_rules! model_atomic_int {
+        ($name:ident, $ty:ty) => {
+            model_atomic_common!($name, $ty);
+
+            impl $name {
+                /// Wrapping add, returning the previous value.
+                pub fn fetch_add(&self, val: $ty, _: Ordering) -> $ty {
+                    self.op(|v| {
+                        let prev = *v;
+                        *v = prev.wrapping_add(val);
+                        prev
+                    })
+                }
+
+                /// Wrapping subtract, returning the previous value.
+                pub fn fetch_sub(&self, val: $ty, _: Ordering) -> $ty {
+                    self.op(|v| {
+                        let prev = *v;
+                        *v = prev.wrapping_sub(val);
+                        prev
+                    })
+                }
+
+                /// Bitwise-or, returning the previous value.
+                pub fn fetch_or(&self, val: $ty, _: Ordering) -> $ty {
+                    self.op(|v| {
+                        let prev = *v;
+                        *v = prev | val;
+                        prev
+                    })
+                }
+
+                /// Bitwise-and, returning the previous value.
+                pub fn fetch_and(&self, val: $ty, _: Ordering) -> $ty {
+                    self.op(|v| {
+                        let prev = *v;
+                        *v = prev & val;
+                        prev
+                    })
+                }
+
+                /// Maximum, returning the previous value.
+                pub fn fetch_max(&self, val: $ty, _: Ordering) -> $ty {
+                    self.op(|v| {
+                        let prev = *v;
+                        *v = prev.max(val);
+                        prev
+                    })
+                }
+            }
+        };
+    }
+
+    model_atomic_common!(AtomicBool, bool);
+
+    impl AtomicBool {
+        /// Bitwise-or, returning the previous value.
+        pub fn fetch_or(&self, val: bool, _: Ordering) -> bool {
+            self.op(|v| {
+                let prev = *v;
+                *v = prev | val;
+                prev
+            })
+        }
+    }
+
+    model_atomic_int!(AtomicU8, u8);
+    model_atomic_int!(AtomicU64, u64);
+    model_atomic_int!(AtomicUsize, usize);
+}
+
+/// Modeled `std::thread` routines: spawn/join and scoped threads whose
+/// blocking and hand-offs are schedule points.
+pub mod thread {
+    use super::{bind, catch_unwind, ctx, render_payload, resume_unwind, AssertUnwindSafe};
+    use super::{Arc, ModelAbort, OsMutex, Point};
+    use std::marker::PhantomData;
+    use std::time::Duration;
+
+    /// Handle to a modeled (non-scoped) thread.
+    pub struct JoinHandle<T> {
+        tid: usize,
+        inner: std::thread::JoinHandle<T>,
+    }
+
+    impl<T> JoinHandle<T> {
+        /// Model-join (the blocking is visible to the exploration),
+        /// then reap the OS thread.
+        pub fn join(self) -> std::thread::Result<T> {
+            let (exec, me) = ctx().expect("model join outside a model run");
+            exec.model_join(me, self.tid);
+            self.inner.join()
+        }
+    }
+
+    /// Spawn a modeled thread. The closure runs only when the
+    /// exploration scheduler hands it the token.
+    pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        let (exec, me) = ctx().expect("model spawn outside a model run");
+        let tid = exec.register_thread();
+        let exec2 = exec.clone();
+        let inner = std::thread::Builder::new()
+            .name(format!("model-{tid}"))
+            .spawn(move || {
+                let _bound = bind(exec2.clone(), tid);
+                let r = catch_unwind(AssertUnwindSafe(|| {
+                    exec2.wait_for_token(tid);
+                    f()
+                }));
+                match r {
+                    Ok(v) => {
+                        exec2.finish(tid, None);
+                        v
+                    }
+                    Err(p) => {
+                        let desc = if p.is::<ModelAbort>() {
+                            None
+                        } else {
+                            Some(render_payload(p.as_ref()))
+                        };
+                        exec2.finish(tid, desc);
+                        resume_unwind(p)
+                    }
+                }
+            })
+            .expect("model thread spawn");
+        // The spawn itself is a race: the child may run before the
+        // parent's next step.
+        exec.schedule(me, Point::Preemptible);
+        JoinHandle { tid, inner }
+    }
+
+    /// Yield the token round-robin — a voluntary, non-branching switch
+    /// (keeps modeled spin loops fair and finite).
+    pub fn yield_now() {
+        if let Some((exec, me)) = ctx() {
+            exec.schedule(me, Point::Yield);
+        }
+    }
+
+    /// Modeled as a plain [`yield_now`]: exploration has no clock.
+    pub fn sleep(_: Duration) {
+        yield_now();
+    }
+
+    /// Scoped-thread environment, mirroring [`std::thread::scope`].
+    ///
+    /// Implemented without `std::thread::scope` (whose implicit
+    /// OS-level join at scope exit would block while holding the
+    /// token): spawned closures are lifetime-erased, every spawned
+    /// thread is model-joined before `scope` returns — on the panic
+    /// path too — and only then are the OS threads reaped, which is
+    /// what makes the erasure sound.
+    pub struct Scope<'scope, 'env: 'scope> {
+        exec: Arc<super::Exec>,
+        /// `(tid, OS handle)` per spawned thread.
+        spawned: OsMutex<Vec<(usize, std::thread::JoinHandle<()>)>>,
+        /// Invariance over both lifetimes, as in `std::thread::Scope`.
+        _marker: PhantomData<&'scope mut &'env mut ()>,
+    }
+
+    /// Handle to a modeled scoped thread.
+    pub struct ScopedJoinHandle<'scope, T> {
+        tid: usize,
+        result: Arc<OsMutex<Option<std::thread::Result<T>>>>,
+        _marker: PhantomData<&'scope ()>,
+    }
+
+    impl<T> ScopedJoinHandle<'_, T> {
+        /// Model-join and take the closure's result (or its panic
+        /// payload, matching [`std::thread::ScopedJoinHandle::join`]).
+        pub fn join(self) -> std::thread::Result<T> {
+            let (exec, me) = ctx().expect("model scoped join outside a model run");
+            exec.model_join(me, self.tid);
+            self.result
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .take()
+                .expect("scoped thread finished without storing a result")
+        }
+    }
+
+    impl<'scope, 'env> Scope<'scope, 'env> {
+        /// Spawn a modeled thread borrowing from the enclosing scope.
+        pub fn spawn<F, T>(&'scope self, f: F) -> ScopedJoinHandle<'scope, T>
+        where
+            F: FnOnce() -> T + Send + 'scope,
+            T: Send + 'scope,
+        {
+            let (exec, me) = ctx().expect("model scoped spawn outside a model run");
+            let tid = exec.register_thread();
+            let result: Arc<OsMutex<Option<std::thread::Result<T>>>> =
+                Arc::new(OsMutex::new(None));
+            let exec2 = exec.clone();
+            let slot = result.clone();
+            let body: Box<dyn FnOnce() + Send + 'scope> = Box::new(move || {
+                let _bound = bind(exec2.clone(), tid);
+                let r = catch_unwind(AssertUnwindSafe(|| {
+                    exec2.wait_for_token(tid);
+                    f()
+                }));
+                let desc = match &r {
+                    Ok(_) => None,
+                    Err(p) if p.is::<ModelAbort>() => None,
+                    Err(p) => Some(render_payload(p.as_ref())),
+                };
+                // Store before `finish`: once the token moves on, a
+                // joiner may immediately take the slot.
+                *slot.lock().unwrap_or_else(|e| e.into_inner()) = Some(r);
+                exec2.finish(tid, desc);
+            });
+            // SAFETY: the closure borrows only for 'scope; `scope`
+            // model-joins then OS-joins every spawned thread before it
+            // returns (including on unwind), so the thread never runs
+            // after 'scope data is gone. This is the crossbeam/std
+            // scoped-thread argument, enforced by `run_scope` below.
+            let body: Box<dyn FnOnce() + Send + 'static> = unsafe { std::mem::transmute(body) };
+            let inner = std::thread::Builder::new()
+                .name(format!("model-{tid}"))
+                .spawn(body)
+                .expect("model thread spawn");
+            self.spawned.lock().unwrap_or_else(|e| e.into_inner()).push((tid, inner));
+            exec.schedule(me, Point::Preemptible);
+            ScopedJoinHandle { tid, result, _marker: PhantomData }
+        }
+    }
+
+    /// Modeled [`std::thread::scope`]: every thread spawned on the
+    /// scope is joined (model- and OS-level) before this returns.
+    pub fn scope<'env, F, T>(f: F) -> T
+    where
+        F: for<'scope> FnOnce(&'scope Scope<'scope, 'env>) -> T,
+    {
+        let (exec, me) = ctx().expect("model scope outside a model run");
+        let scope = Scope {
+            exec: exec.clone(),
+            spawned: OsMutex::new(Vec::new()),
+            _marker: PhantomData,
+        };
+        let r = catch_unwind(AssertUnwindSafe(|| f(&scope)));
+        let handles = std::mem::take(
+            &mut *scope.spawned.lock().unwrap_or_else(|e| e.into_inner()),
+        );
+        if r.is_err() {
+            // Unwinding out of the scope body: wake every thread so
+            // the OS joins below cannot hang, then re-raise.
+            scope.exec.abort_now();
+        } else {
+            // Normal exit: any thread not explicitly joined gets the
+            // implicit scope-exit join, modeled so it cannot deadlock.
+            for (tid, _) in &handles {
+                exec.model_join(me, *tid);
+            }
+        }
+        for (_, h) in handles {
+            // Reaping finished threads — this is what licenses the
+            // lifetime erasure in `spawn`.
+            let _ = h.join();
+        }
+        match r {
+            Ok(v) => v,
+            Err(p) => resume_unwind(p),
+        }
+    }
+}
+
+// Always compiled (not just under `--cfg loom`) so the checker's own
+// unit tests run in tier-1 and keep it honest even when the loom CI
+// leg is not exercised.
+#[cfg(test)]
+mod tests {
+    use super::atomic::{AtomicUsize, Ordering};
+    use super::sync::{Condvar, Mutex};
+    use super::{check, thread, Model};
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::sync::Arc;
+
+    #[test]
+    fn finds_the_lost_update_in_a_naive_counter() {
+        // Non-atomic read-modify-write: some interleaving must lose an
+        // update, and the checker must find it (this is the smoke test
+        // that exploration actually explores).
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            Model { preemption_bound: 2, max_schedules: 1000 }.check(|| {
+                let c = Arc::new(AtomicUsize::new(0));
+                let handles: Vec<_> = (0..2)
+                    .map(|_| {
+                        let c = c.clone();
+                        thread::spawn(move || {
+                            let v = c.load(Ordering::SeqCst);
+                            c.store(v + 1, Ordering::SeqCst);
+                        })
+                    })
+                    .collect();
+                for h in handles {
+                    h.join().unwrap();
+                }
+                assert_eq!(c.load(Ordering::SeqCst), 2, "lost update");
+            });
+        }));
+        let msg = format!("{:?}", r.expect_err("the race must be found"));
+        assert!(msg.contains("lost update"), "wrong failure: {msg}");
+    }
+
+    #[test]
+    fn fetch_add_counter_survives_every_schedule() {
+        check(|| {
+            let c = Arc::new(AtomicUsize::new(0));
+            let handles: Vec<_> = (0..2)
+                .map(|_| {
+                    let c = c.clone();
+                    thread::spawn(move || {
+                        c.fetch_add(1, Ordering::SeqCst);
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+            assert_eq!(c.load(Ordering::SeqCst), 2);
+        });
+    }
+
+    #[test]
+    fn mutex_provides_mutual_exclusion() {
+        check(|| {
+            let m = Arc::new(Mutex::new((0usize, 0usize)));
+            let handles: Vec<_> = (0..2)
+                .map(|_| {
+                    let m = m.clone();
+                    thread::spawn(move || {
+                        let mut g = m.lock().unwrap();
+                        // Two fields updated non-atomically under the
+                        // lock: any interleaving inside would desync.
+                        g.0 += 1;
+                        thread::yield_now();
+                        g.1 += 1;
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+            let g = m.lock().unwrap();
+            assert_eq!((g.0, g.1), (2, 2));
+        });
+    }
+
+    #[test]
+    fn condvar_handoff_has_no_lost_wakeup() {
+        check(|| {
+            let pair = Arc::new((Mutex::new(false), Condvar::new()));
+            let p2 = pair.clone();
+            let h = thread::spawn(move || {
+                let (m, cv) = &*p2;
+                let mut ready = m.lock().unwrap();
+                while !*ready {
+                    ready = cv.wait(ready).unwrap();
+                }
+            });
+            let (m, cv) = &*pair;
+            *m.lock().unwrap() = true;
+            cv.notify_all();
+            h.join().unwrap();
+        });
+    }
+
+    #[test]
+    fn deadlock_is_detected_and_reported() {
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            Model { preemption_bound: 2, max_schedules: 1000 }.check(|| {
+                let a = Arc::new(Mutex::new(0u8));
+                let b = Arc::new(Mutex::new(0u8));
+                let (a2, b2) = (a.clone(), b.clone());
+                let h = thread::spawn(move || {
+                    let _ga = a2.lock().unwrap();
+                    thread::yield_now();
+                    let _gb = b2.lock().unwrap();
+                });
+                {
+                    let _gb = b.lock().unwrap();
+                    thread::yield_now();
+                    let _ga = a.lock().unwrap();
+                }
+                h.join().unwrap();
+            });
+        }));
+        let msg = format!("{:?}", r.expect_err("the lock cycle must be found"));
+        assert!(msg.contains("deadlock"), "wrong failure: {msg}");
+    }
+
+    #[test]
+    fn scoped_threads_borrow_and_join() {
+        check(|| {
+            let data = [1usize, 2, 3];
+            let total = thread::scope(|s| {
+                let hs: Vec<_> = data
+                    .iter()
+                    .map(|&x| s.spawn(move || x * 10))
+                    .collect();
+                hs.into_iter().map(|h| h.join().unwrap()).sum::<usize>()
+            });
+            assert_eq!(total, 60);
+        });
+    }
+
+    #[test]
+    fn exploration_is_bounded_and_terminates() {
+        // A workload with many schedule points under a tiny schedule
+        // cap must still return (deterministic truncated prefix).
+        Model { preemption_bound: 1, max_schedules: 8 }.check(|| {
+            let c = Arc::new(AtomicUsize::new(0));
+            let hs: Vec<_> = (0..3)
+                .map(|_| {
+                    let c = c.clone();
+                    thread::spawn(move || {
+                        for _ in 0..4 {
+                            c.fetch_add(1, Ordering::SeqCst);
+                            thread::yield_now();
+                        }
+                    })
+                })
+                .collect();
+            for h in hs {
+                h.join().unwrap();
+            }
+            assert_eq!(c.load(Ordering::SeqCst), 12);
+        });
+    }
+}

@@ -1,0 +1,55 @@
+//! Synchronization facade for the PR-8 verification layer.
+//!
+//! Protocol code (`exec/sched.rs`, `engine/budget.rs`,
+//! `service/cache.rs`, `service/admission.rs`) imports its mutexes,
+//! condvars, atomics and thread routines from here instead of `std`.
+//! Normally the re-exports *are* the `std` types — zero cost, zero
+//! behavior change. Under `--cfg loom` they swap to the in-tree
+//! schedule-exploration model in [`crate::util::model`], and the
+//! `rust/tests/loom/` suite re-runs each protocol under every explored
+//! interleaving (see the model docs for what is and is not covered).
+//!
+//! Only the types that *are* the protocol are routed: `Arc`,
+//! `OnceLock`, `Instant` and the metrics counters stay `std`
+//! everywhere (they are infrastructure around the protocols, not the
+//! thing under test), and `service/registry.rs` keeps `std` directly —
+//! its single-flight is a clone of the cache's, which is modeled.
+//!
+//! CI note: the loom test target is the *only* thing that may build
+//! under `--cfg loom` with threads — running the ordinary suites that
+//! way would put real OS threads on the modeled (token-serialized)
+//! primitives outside any `model::check`, where they degrade to
+//! single-thread storage.
+
+#[cfg(not(loom))]
+pub use std::sync::{Condvar, Mutex, MutexGuard};
+
+#[cfg(loom)]
+pub use crate::util::model::sync::{Condvar, Mutex, MutexGuard};
+
+/// Atomic types routed through the facade; `Ordering` is always the
+/// `std` enum (the model accepts and ignores it — it is sequentially
+/// consistent by construction).
+pub mod atomic {
+    pub use std::sync::atomic::Ordering;
+
+    #[cfg(not(loom))]
+    pub use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize};
+
+    #[cfg(loom)]
+    pub use crate::util::model::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize};
+}
+
+/// Thread routines routed through the facade (spawn/scope/yield/sleep
+/// are all schedule points under the model).
+pub mod thread {
+    #[cfg(not(loom))]
+    pub use std::thread::{
+        scope, sleep, spawn, yield_now, JoinHandle, Scope, ScopedJoinHandle,
+    };
+
+    #[cfg(loom)]
+    pub use crate::util::model::thread::{
+        scope, sleep, spawn, yield_now, JoinHandle, Scope, ScopedJoinHandle,
+    };
+}

@@ -275,6 +275,14 @@ fn two_hub_migration_is_real_on_kernel_and_scheduler_axes() {
         f_after.beyond_scalar() > f_before.beyond_scalar(),
         "no adaptive kernel family (gallop/SIMD/bitset) fired inside FSM extension on two_hub"
     );
+    // PR 8 closes the counter gap: the sorted anti-intersection
+    // (`difference_into`, FSM's fresh-candidate split against the
+    // embedding members) now has its own dispatch family, and it must
+    // actually fire in the tagged FSM lane on this workload
+    assert!(
+        f_after.difference > f_before.difference,
+        "FSM's difference_into (fresh-candidate anti-intersection) never fired on two_hub"
+    );
 
     // ---- scheduler axis: a non-DFS engine publishes at least one
     // split on the skewed input (needs real parallelism) ----

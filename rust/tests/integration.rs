@@ -136,6 +136,89 @@ fn solve_facade_covers_all_five_apps() {
 }
 
 #[test]
+fn every_opt_flag_is_a_live_kill_switch() {
+    // Companion to `cargo xtask lint` rule 3: every `OptFlags` field
+    // must have a grep-able `.field` differential toggle proving the
+    // flag can be flipped without changing a count. Starting from the
+    // Sandslash-Lo preset (all optimizations on, `stats` off), flip
+    // each field singly — every optimization is count-preserving and
+    // `stats` only adds instrumentation, so the diamond count must not
+    // move.
+    let g = gen::rmat(8, 7, 6, &[]);
+    let p = library::diamond();
+    let base = OptFlags::lo();
+    let count = |opts: OptFlags| {
+        sl::sl_count(&g, &p, &MinerConfig::custom(4, 16, opts)).unwrap().value
+    };
+    let want = count(base);
+    assert!(want > 0, "degenerate input: no diamonds in the test graph");
+    let mut flips: Vec<(&str, OptFlags)> = Vec::new();
+    {
+        let mut f = base;
+        f.sb = !f.sb;
+        flips.push(("sb", f));
+    }
+    {
+        let mut f = base;
+        f.dag = !f.dag;
+        flips.push(("dag", f));
+    }
+    {
+        let mut f = base;
+        f.mo = !f.mo;
+        flips.push(("mo", f));
+    }
+    {
+        let mut f = base;
+        f.df = !f.df;
+        flips.push(("df", f));
+    }
+    {
+        let mut f = base;
+        f.mnc = !f.mnc;
+        flips.push(("mnc", f));
+    }
+    {
+        let mut f = base;
+        f.mec = !f.mec;
+        flips.push(("mec", f));
+    }
+    {
+        let mut f = base;
+        f.sets = !f.sets;
+        flips.push(("sets", f));
+    }
+    {
+        let mut f = base;
+        f.lc = !f.lc;
+        flips.push(("lc", f));
+    }
+    {
+        let mut f = base;
+        f.lg = !f.lg;
+        flips.push(("lg", f));
+    }
+    {
+        let mut f = base;
+        f.extcore = !f.extcore;
+        flips.push(("extcore", f));
+    }
+    {
+        let mut f = base;
+        f.stats = !f.stats;
+        flips.push(("stats", f));
+    }
+    for (name, flipped) in flips {
+        assert_ne!(flipped, base, "the `{name}` flip must actually change the flags");
+        assert_eq!(
+            count(flipped),
+            want,
+            "flipping `{name}` changed the diamond count — a kill switch must be count-preserving"
+        );
+    }
+}
+
+#[test]
 fn dataset_registry_consistency() {
     use sandslash::coordinator::datasets;
     // tiny datasets must load and produce consistent counts across systems

@@ -1,0 +1,75 @@
+//! Admission gate under the model: `inflight` never exceeds
+//! `max_inflight` in any interleaving, permits are never lost (every
+//! queued waiter is eventually admitted), and the high-priority class
+//! claims freed slots first.
+
+use sandslash::service::admission::{Admission, Priority};
+use sandslash::util::model;
+use sandslash::util::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+#[test]
+fn inflight_never_exceeds_the_bound() {
+    model::check(|| {
+        let gate = Arc::new(Admission::new(1, 4));
+        // under loom this is the model atomic, so the increment, the
+        // peak check, and the decrement interleave with the gate's own
+        // lock/condvar traffic at every explorable point
+        let concurrent = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<_> = (0..2)
+            .map(|_| {
+                let (gate, concurrent) = (gate.clone(), concurrent.clone());
+                model::thread::spawn(move || {
+                    let permit = gate.admit(Priority::Normal).expect("queue depth 4 never rejects 2 clients");
+                    let inside = concurrent.fetch_add(1, Ordering::SeqCst) + 1;
+                    assert!(inside <= 1, "two permits live under max_inflight=1");
+                    model::thread::yield_now();
+                    concurrent.fetch_sub(1, Ordering::SeqCst);
+                    drop(permit);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        // no permit leaked: the gate is fully drained
+        assert_eq!(gate.snapshot(), (0, 0));
+    });
+}
+
+#[test]
+fn freed_slot_prefers_the_high_priority_waiter() {
+    model::check(|| {
+        let gate = Arc::new(Admission::new(1, 4));
+        let order = Arc::new(AtomicUsize::new(0));
+        let holder = gate.admit(Priority::Normal).expect("empty gate admits");
+        let normal = {
+            let (gate, order) = (gate.clone(), order.clone());
+            model::thread::spawn(move || {
+                let _p = gate.admit(Priority::Normal).unwrap();
+                order.fetch_add(1, Ordering::SeqCst)
+            })
+        };
+        let high = {
+            let (gate, order) = (gate.clone(), order.clone());
+            model::thread::spawn(move || {
+                let _p = gate.admit(Priority::High).unwrap();
+                order.fetch_add(1, Ordering::SeqCst)
+            })
+        };
+        // make sure the high waiter is actually queued before the slot
+        // frees — otherwise "preference" is vacuous for this schedule
+        while gate.snapshot().1 < 2 {
+            model::thread::yield_now();
+        }
+        drop(holder);
+        let normal_rank = normal.join().unwrap();
+        let high_rank = high.join().unwrap();
+        assert!(
+            high_rank < normal_rank,
+            "queued high-priority waiter must be admitted before the queued normal \
+             (high ran {high_rank}, normal ran {normal_rank})"
+        );
+        assert_eq!(gate.snapshot(), (0, 0));
+    });
+}

@@ -1,0 +1,53 @@
+//! CancelToken under the model: exactly one trip reason wins on a
+//! racing cancel, and every observer agrees on the winner.
+
+use sandslash::engine::budget::{CancelReason, CancelToken};
+use sandslash::util::model;
+use std::sync::Arc;
+
+#[test]
+fn racing_trips_elect_exactly_one_reason() {
+    model::check(|| {
+        let token = Arc::new(CancelToken::new());
+        let t1 = {
+            let token = token.clone();
+            model::thread::spawn(move || token.trip(CancelReason::Deadline))
+        };
+        let t2 = {
+            let token = token.clone();
+            model::thread::spawn(move || token.trip(CancelReason::Caller))
+        };
+        let won1 = t1.join().unwrap();
+        let won2 = t2.join().unwrap();
+        assert!(
+            won1 ^ won2,
+            "exactly one racing trip must win (got {won1}/{won2})"
+        );
+        let reason = token.cancelled().expect("a tripped token reports a reason");
+        let expected = if won1 { CancelReason::Deadline } else { CancelReason::Caller };
+        assert_eq!(reason, expected, "the reported reason must be the winner's");
+        assert!(token.is_cancelled());
+        // later trips are ignored — the original cause survives
+        assert!(!token.trip(CancelReason::TaskBudget));
+        assert_eq!(token.cancelled(), Some(expected));
+    });
+}
+
+#[test]
+fn cancel_is_visible_to_a_concurrent_poller() {
+    model::check(|| {
+        let token = Arc::new(CancelToken::new());
+        let poller = {
+            let token = token.clone();
+            model::thread::spawn(move || {
+                // a cooperative worker: poll until the trip lands
+                while !token.is_cancelled() {
+                    model::thread::yield_now();
+                }
+                token.cancelled()
+            })
+        };
+        token.cancel();
+        assert_eq!(poller.join().unwrap(), Some(CancelReason::Caller));
+    });
+}

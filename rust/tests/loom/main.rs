@@ -1,0 +1,18 @@
+//! PR-8 loom suite: the four migrated protocols re-run under every
+//! interleaving the in-tree model checker explores.
+//!
+//! Build and run with
+//! `RUSTFLAGS="--cfg loom" cargo test -p rust_pallas --test loom`
+//! — and ONLY `--test loom`: under `--cfg loom` the library's sync
+//! facade routes onto the token-serialized model primitives, which are
+//! sound only inside `model::check`; the ordinary suites would put
+//! real concurrency on them. Knobs: `SANDSLASH_MODEL_ITERS` (schedule
+//! cap) and `SANDSLASH_MODEL_PREEMPTIONS` (preemption bound) override
+//! the per-test bounds' defaults. Without `--cfg loom` this target
+//! compiles to an empty test binary.
+#![cfg(loom)]
+
+mod admission;
+mod budget;
+mod cache;
+mod sched;

@@ -1,0 +1,874 @@
+//! Repo-invariant lint for the Sandslash workspace: `cargo xtask lint`.
+//!
+//! Pure text analysis over the checked-in sources — no `syn`, no
+//! `rustc` internals, no dependencies at all, so it runs on the same
+//! zero-dependency toolchain as the crate itself (PR 8). Four
+//! invariants:
+//!
+//! 1. **`unsafe` is documented** (`unsafe-safety`): every line of code
+//!    containing the `unsafe` keyword needs a `// SAFETY:` comment on
+//!    the same line or in the contiguous comment/attribute block
+//!    directly above it (a `/// # Safety` doc section counts).
+//! 2. **Env knobs are documented** (`env-knob`): every `SANDSLASH_*`
+//!    string literal under `rust/src` must appear in the
+//!    "## Environment knobs" table of ARCHITECTURE.md.
+//! 3. **`OptFlags` fields are live kill switches** (`optflags-doc` /
+//!    `optflags-test`): every `pub` field of `OptFlags` must be listed
+//!    in ARCHITECTURE.md's "## Where `OptFlags` branch" table and be
+//!    toggled by name (`.field`) somewhere under `rust/tests`.
+//! 4. **No cross-module Relaxed writes** (`relaxed-ordering`): an
+//!    atomic store/RMW with `Ordering::Relaxed` whose target atomic is
+//!    declared in a *different* file is flagged unless the write site
+//!    is recorded in `rust/RELAXED_ALLOWLIST.txt`. A Relaxed *failure*
+//!    ordering on `compare_exchange` is fine (the success ordering is
+//!    what publishes), and same-file writes are the declaring module's
+//!    own business. Stale allowlist entries are flagged too
+//!    (`relaxed-allowlist`), so the audit record cannot rot.
+//!
+//! The scanner underneath splits each source line into three
+//! column-aligned channels — code, string-literal contents, comment
+//! text — so `unsafe` in a doc comment or `SANDSLASH_FOO` in a plain
+//! comment never miscounts. It understands line comments, nested block
+//! comments, escapes, raw strings, and the char-literal-vs-lifetime
+//! ambiguity of `'`.
+
+#![forbid(unsafe_code)]
+#![warn(missing_docs)]
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// One lint violation, pointing at a repo-relative file and 1-based line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Short rule identifier, e.g. `unsafe-safety`.
+    pub rule: &'static str,
+    /// Repo-relative path (forward slashes) of the offending file.
+    pub file: String,
+    /// 1-based line number the finding anchors to.
+    pub line: usize,
+    /// Human-readable explanation with the suggested fix.
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}] {}:{}: {}", self.rule, self.file, self.line, self.message)
+    }
+}
+
+/// A source file split into per-line code / string / comment channels.
+pub struct SourceFile {
+    /// Repo-relative path (forward slashes).
+    pub path: String,
+    /// The channel-separated text.
+    pub sc: Scanned,
+}
+
+impl SourceFile {
+    /// Scan `source` and tag it with `path` for findings.
+    pub fn new(path: impl Into<String>, source: &str) -> Self {
+        Self { path: path.into(), sc: scan(source) }
+    }
+}
+
+/// Per-line channel separation of one Rust source file. The three
+/// vectors are parallel (one entry per line) and column-aligned: a
+/// character appears in exactly one channel, space-padded in the other
+/// two, so byte offsets are comparable across channels.
+pub struct Scanned {
+    /// Everything outside strings and comments (keywords, idents, punctuation).
+    pub code: Vec<String>,
+    /// String- and char-literal contents (delimiters stay in `code`).
+    pub strings: Vec<String>,
+    /// Line- and block-comment text, including the comment markers.
+    pub comments: Vec<String>,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum St {
+    Code,
+    Line,
+    Block(usize),
+    Str,
+    RawStr(usize),
+}
+
+#[derive(Clone, Copy)]
+enum Chan {
+    Code,
+    Str,
+    Com,
+}
+
+#[derive(Default)]
+struct LineBufs {
+    code: String,
+    strings: String,
+    comments: String,
+}
+
+impl LineBufs {
+    fn put(&mut self, chan: Chan, c: char) {
+        let (code, strings, comments) = match chan {
+            Chan::Code => (c, ' ', ' '),
+            Chan::Str => (' ', c, ' '),
+            Chan::Com => (' ', ' ', c),
+        };
+        self.code.push(code);
+        self.strings.push(strings);
+        self.comments.push(comments);
+    }
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b == b'_' || b.is_ascii_alphanumeric()
+}
+
+fn is_ident_char_at(cs: &[char], j: usize) -> bool {
+    cs.get(j).is_some_and(|&c| c == '_' || c.is_alphanumeric())
+}
+
+/// Split Rust source into code / string / comment channels.
+pub fn scan(src: &str) -> Scanned {
+    let cs: Vec<char> = src.chars().collect();
+    let mut sc = Scanned { code: Vec::new(), strings: Vec::new(), comments: Vec::new() };
+    let mut cur = LineBufs::default();
+    let mut st = St::Code;
+    let mut i = 0usize;
+    while i < cs.len() {
+        let c = cs[i];
+        if c == '\n' {
+            sc.code.push(std::mem::take(&mut cur.code));
+            sc.strings.push(std::mem::take(&mut cur.strings));
+            sc.comments.push(std::mem::take(&mut cur.comments));
+            if st == St::Line {
+                st = St::Code;
+            }
+            i += 1;
+            continue;
+        }
+        match st {
+            St::Code => {
+                if c == '/' && cs.get(i + 1) == Some(&'/') {
+                    cur.put(Chan::Com, '/');
+                    cur.put(Chan::Com, '/');
+                    st = St::Line;
+                    i += 2;
+                } else if c == '/' && cs.get(i + 1) == Some(&'*') {
+                    cur.put(Chan::Com, '/');
+                    cur.put(Chan::Com, '*');
+                    st = St::Block(1);
+                    i += 2;
+                } else if c == '"' {
+                    cur.put(Chan::Code, '"');
+                    st = St::Str;
+                    i += 1;
+                } else if (c == 'r' || c == 'b') && !is_ident_char_at(&cs, i.wrapping_sub(1)) {
+                    // Possible raw (or raw byte) string: `r"`, `r#"`, `br##"`...
+                    let mut j = i;
+                    if cs[j] == 'b' {
+                        j += 1;
+                    }
+                    let mut started = false;
+                    if cs.get(j) == Some(&'r') {
+                        let mut k = j + 1;
+                        let mut hashes = 0usize;
+                        while cs.get(k) == Some(&'#') {
+                            hashes += 1;
+                            k += 1;
+                        }
+                        if cs.get(k) == Some(&'"') {
+                            for &d in &cs[i..=k] {
+                                cur.put(Chan::Code, d);
+                            }
+                            st = St::RawStr(hashes);
+                            i = k + 1;
+                            started = true;
+                        }
+                    }
+                    if !started {
+                        cur.put(Chan::Code, c);
+                        i += 1;
+                    }
+                } else if c == '\'' && (cs.get(i + 1) == Some(&'\\') || cs.get(i + 2) == Some(&'\''))
+                {
+                    // Char literal (an escape, or `'x'`); otherwise `'` is a lifetime.
+                    i = consume_char_literal(&cs, i, &mut cur);
+                } else {
+                    cur.put(Chan::Code, c);
+                    i += 1;
+                }
+            }
+            St::Line => {
+                cur.put(Chan::Com, c);
+                i += 1;
+            }
+            St::Block(d) => {
+                if c == '*' && cs.get(i + 1) == Some(&'/') {
+                    cur.put(Chan::Com, '*');
+                    cur.put(Chan::Com, '/');
+                    st = if d == 1 { St::Code } else { St::Block(d - 1) };
+                    i += 2;
+                } else if c == '/' && cs.get(i + 1) == Some(&'*') {
+                    cur.put(Chan::Com, '/');
+                    cur.put(Chan::Com, '*');
+                    st = St::Block(d + 1);
+                    i += 2;
+                } else {
+                    cur.put(Chan::Com, c);
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if c == '\\' {
+                    cur.put(Chan::Str, '\\');
+                    match cs.get(i + 1) {
+                        Some(&'\n') | None => i += 1,
+                        Some(&e) => {
+                            cur.put(Chan::Str, e);
+                            i += 2;
+                        }
+                    }
+                } else if c == '"' {
+                    cur.put(Chan::Code, '"');
+                    st = St::Code;
+                    i += 1;
+                } else {
+                    cur.put(Chan::Str, c);
+                    i += 1;
+                }
+            }
+            St::RawStr(h) => {
+                let closes = c == '"' && (1..=h).all(|k| cs.get(i + k) == Some(&'#'));
+                if closes {
+                    cur.put(Chan::Code, '"');
+                    for _ in 0..h {
+                        cur.put(Chan::Code, '#');
+                    }
+                    i += 1 + h;
+                    st = St::Code;
+                } else {
+                    cur.put(Chan::Str, c);
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !cur.code.is_empty() {
+        sc.code.push(cur.code);
+        sc.strings.push(cur.strings);
+        sc.comments.push(cur.comments);
+    }
+    sc
+}
+
+fn consume_char_literal(cs: &[char], start: usize, cur: &mut LineBufs) -> usize {
+    cur.put(Chan::Code, '\'');
+    let mut i = start + 1;
+    let mut budget = 12usize; // longest is '\u{10FFFF}'
+    while i < cs.len() && budget > 0 {
+        match cs[i] {
+            '\'' => {
+                cur.put(Chan::Code, '\'');
+                return i + 1;
+            }
+            '\n' => return i, // malformed; let the caller flush the line
+            '\\' => {
+                cur.put(Chan::Str, '\\');
+                if let Some(&e) = cs.get(i + 1) {
+                    if e == '\n' {
+                        return i + 1;
+                    }
+                    cur.put(Chan::Str, e);
+                }
+                i += 2;
+                budget = budget.saturating_sub(2);
+            }
+            d => {
+                cur.put(Chan::Str, d);
+                i += 1;
+                budget -= 1;
+            }
+        }
+    }
+    i
+}
+
+/// Whole-word (identifier-boundary) search.
+pub fn has_word(hay: &str, word: &str) -> bool {
+    let b = hay.as_bytes();
+    let mut from = 0;
+    while let Some(p) = hay[from..].find(word) {
+        let s = from + p;
+        let e = s + word.len();
+        from = e;
+        let pre_ok = s == 0 || !is_ident_byte(b[s - 1]);
+        let post_ok = !b.get(e).copied().is_some_and(is_ident_byte);
+        if pre_ok && post_ok {
+            return true;
+        }
+    }
+    false
+}
+
+/// Extract the text of a `## <header>` markdown section (up to the
+/// next `## ` header, or end of document). Empty if the header is
+/// absent.
+fn section<'a>(md: &'a str, header: &str) -> &'a str {
+    let Some(p) = md.find(header) else { return "" };
+    let rest = &md[p + header.len()..];
+    match rest.find("\n## ") {
+        Some(q) => &rest[..q],
+        None => rest,
+    }
+}
+
+// ---------------------------------------------------------------- rule 1
+
+/// Rule 1: every `unsafe` in the code channel needs a `// SAFETY:`
+/// comment on the same line or in the contiguous comment/attribute
+/// block directly above (a `# Safety` doc section counts).
+pub fn check_unsafe_safety(f: &SourceFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for (i, code) in f.sc.code.iter().enumerate() {
+        if !has_word(code, "unsafe") {
+            continue;
+        }
+        if f.sc.comments[i].contains("SAFETY:") {
+            continue;
+        }
+        // Walk the contiguous run of comment-only and attribute lines
+        // directly above; a blank or plain code line ends the run.
+        let mut run = String::new();
+        let mut j = i;
+        while j > 0 {
+            j -= 1;
+            let code_t = f.sc.code[j].trim();
+            let com_t = f.sc.comments[j].trim();
+            let is_attr = code_t.starts_with('#');
+            let comment_only = code_t.is_empty() && !com_t.is_empty();
+            if is_attr || comment_only {
+                run.push_str(com_t);
+                run.push('\n');
+            } else {
+                break;
+            }
+        }
+        if run.contains("SAFETY:") || run.contains("# Safety") {
+            continue;
+        }
+        out.push(Finding {
+            rule: "unsafe-safety",
+            file: f.path.clone(),
+            line: i + 1,
+            message: "`unsafe` without a `// SAFETY:` comment (same line or the comment \
+                      block directly above) or a `# Safety` doc section"
+                .to_string(),
+        });
+    }
+    out
+}
+
+// ---------------------------------------------------------------- rule 2
+
+/// Rule 2: every `SANDSLASH_*` name appearing in a string literal must
+/// be documented in ARCHITECTURE.md's "## Environment knobs" section.
+pub fn check_env_knobs(src_files: &[SourceFile], architecture_md: &str) -> Vec<Finding> {
+    let knobs = section(architecture_md, "## Environment knobs");
+    let mut out = Vec::new();
+    let mut seen: BTreeSet<(String, String)> = BTreeSet::new();
+    for f in src_files {
+        for (ln, s) in f.sc.strings.iter().enumerate() {
+            for name in env_names(s) {
+                if knobs.contains(&name) {
+                    continue;
+                }
+                if seen.insert((f.path.clone(), name.clone())) {
+                    out.push(Finding {
+                        rule: "env-knob",
+                        file: f.path.clone(),
+                        line: ln + 1,
+                        message: format!(
+                            "`{name}` is read here but missing from the \
+                             \"## Environment knobs\" table in ARCHITECTURE.md"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+fn env_names(s: &str) -> Vec<String> {
+    const PREFIX: &str = "SANDSLASH_";
+    let b = s.as_bytes();
+    let mut v = Vec::new();
+    let mut from = 0;
+    while let Some(p) = s[from..].find(PREFIX) {
+        let start = from + p;
+        let pre_ok = start == 0 || !is_ident_byte(b[start - 1]);
+        let mut e = start + PREFIX.len();
+        while b.get(e).is_some_and(|&c| c == b'_' || c.is_ascii_uppercase() || c.is_ascii_digit()) {
+            e += 1;
+        }
+        if pre_ok && e > start + PREFIX.len() {
+            v.push(s[start..e].to_string());
+        }
+        from = e;
+    }
+    v
+}
+
+// ---------------------------------------------------------------- rule 3
+
+/// Rule 3: every `pub` field of `OptFlags` must be (a) named in
+/// ARCHITECTURE.md's "## Where `OptFlags` branch" table and (b)
+/// toggled by name (`.field`, not a method call) in some test file, so
+/// a grep-able differential test proves the kill switch is live.
+pub fn check_optflags(
+    opts: &SourceFile,
+    architecture_md: &str,
+    test_files: &[SourceFile],
+) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let fields = optflags_fields(opts);
+    if fields.is_empty() {
+        out.push(Finding {
+            rule: "optflags",
+            file: opts.path.clone(),
+            line: 1,
+            message: "could not parse any `pub` field out of `struct OptFlags` — \
+                      if the struct moved, update xtask's lint"
+                .to_string(),
+        });
+        return out;
+    }
+    let table = section(architecture_md, "## Where `OptFlags` branch");
+    for (name, line) in &fields {
+        if !table.contains(&format!("`{name}`")) {
+            out.push(Finding {
+                rule: "optflags-doc",
+                file: opts.path.clone(),
+                line: *line,
+                message: format!(
+                    "`OptFlags::{name}` is not documented in ARCHITECTURE.md's \
+                     \"## Where `OptFlags` branch\" table"
+                ),
+            });
+        }
+        let referenced = test_files
+            .iter()
+            .any(|tf| tf.sc.code.iter().any(|l| has_field_ref(l, name)));
+        if !referenced {
+            out.push(Finding {
+                rule: "optflags-test",
+                file: opts.path.clone(),
+                line: *line,
+                message: format!(
+                    "`OptFlags::{name}` is never toggled as `.{name}` in rust/tests — \
+                     add a differential test flipping it"
+                ),
+            });
+        }
+    }
+    out
+}
+
+fn optflags_fields(sf: &SourceFile) -> Vec<(String, usize)> {
+    let mut v = Vec::new();
+    let mut inside = false;
+    for (i, l) in sf.sc.code.iter().enumerate() {
+        let t = l.trim();
+        if !inside {
+            if t.contains("pub struct OptFlags") {
+                inside = true;
+            }
+            continue;
+        }
+        if t == "}" {
+            break;
+        }
+        if let Some(rest) = t.strip_prefix("pub ") {
+            if let Some(colon) = rest.find(':') {
+                let name = rest[..colon].trim();
+                if !name.is_empty() && name.bytes().all(is_ident_byte) {
+                    v.push((name.to_string(), i + 1));
+                }
+            }
+        }
+    }
+    v
+}
+
+fn has_field_ref(line: &str, name: &str) -> bool {
+    let pat = format!(".{name}");
+    let b = line.as_bytes();
+    let mut from = 0;
+    while let Some(p) = line[from..].find(&pat) {
+        let s = from + p;
+        let e = s + pat.len();
+        from = e;
+        // `.field(` is a method call, `.fieldx` a longer name — skip both.
+        let bad = b.get(e).copied().is_some_and(|c| c == b'(' || is_ident_byte(c));
+        if !bad {
+            return true;
+        }
+    }
+    false
+}
+
+// ---------------------------------------------------------------- rule 4
+
+const ATOMIC_TYPES: &[&str] = &[
+    "AtomicBool",
+    "AtomicU8",
+    "AtomicU16",
+    "AtomicU32",
+    "AtomicU64",
+    "AtomicUsize",
+    "AtomicI8",
+    "AtomicI16",
+    "AtomicI32",
+    "AtomicI64",
+    "AtomicIsize",
+];
+
+const WRITE_METHODS: &[&str] = &[
+    "store",
+    "swap",
+    "compare_exchange",
+    "fetch_update",
+    "fetch_add",
+    "fetch_sub",
+    "fetch_and",
+    "fetch_nand",
+    "fetch_or",
+    "fetch_xor",
+    "fetch_max",
+    "fetch_min",
+];
+
+/// Map every `name: AtomicXxx` declaration (static, field, or struct
+/// literal) to the set of files that declare it. References
+/// (`&AtomicU64`), generics (`Vec<AtomicU64>`) and paths
+/// (`atomic::AtomicU64`) are not declarations and are skipped.
+pub fn atomic_declarations(files: &[SourceFile]) -> BTreeMap<String, BTreeSet<String>> {
+    let mut map: BTreeMap<String, BTreeSet<String>> = BTreeMap::new();
+    for f in files {
+        for l in &f.sc.code {
+            for ty in ATOMIC_TYPES {
+                let b = l.as_bytes();
+                let mut from = 0;
+                while let Some(p) = l[from..].find(ty) {
+                    let s = from + p;
+                    from = s + ty.len();
+                    let pre_ok = s == 0 || !is_ident_byte(b[s - 1]);
+                    let post_ok = !b.get(s + ty.len()).copied().is_some_and(is_ident_byte);
+                    if !pre_ok || !post_ok {
+                        continue;
+                    }
+                    if let Some(name) = decl_name_before(l, s) {
+                        map.entry(name).or_default().insert(f.path.clone());
+                    }
+                }
+            }
+        }
+    }
+    map
+}
+
+fn decl_name_before(l: &str, ty_start: usize) -> Option<String> {
+    let b = l.as_bytes();
+    let mut i = ty_start;
+    while i > 0 && b[i - 1].is_ascii_whitespace() {
+        i -= 1;
+    }
+    if i == 0 || b[i - 1] != b':' {
+        return None;
+    }
+    if i >= 2 && b[i - 2] == b':' {
+        return None; // `path::AtomicU64`, not a declaration
+    }
+    i -= 1;
+    while i > 0 && b[i - 1].is_ascii_whitespace() {
+        i -= 1;
+    }
+    let e = i;
+    while i > 0 && is_ident_byte(b[i - 1]) {
+        i -= 1;
+    }
+    if i == e || b[i].is_ascii_digit() {
+        return None;
+    }
+    Some(l[i..e].to_string())
+}
+
+fn trailing_ident(s: &str) -> Option<String> {
+    let t = s.trim_end();
+    let b = t.as_bytes();
+    let mut i = t.len();
+    while i > 0 && is_ident_byte(b[i - 1]) {
+        i -= 1;
+    }
+    if i == t.len() {
+        return None;
+    }
+    let name = &t[i..];
+    if name.bytes().all(|c| c.is_ascii_digit()) {
+        return None; // tuple index like `.0`
+    }
+    Some(name.to_string())
+}
+
+fn balanced_end(s: &str, open: usize) -> Option<usize> {
+    let mut depth = 0i32;
+    for (idx, c) in s[open..].char_indices() {
+        match c {
+            '(' => depth += 1,
+            ')' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(open + idx);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+fn split_top(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0i32;
+    let mut start = 0usize;
+    for (idx, c) in s.char_indices() {
+        match c {
+            '(' | '[' | '{' => depth += 1,
+            ')' | ']' | '}' => depth -= 1,
+            ',' if depth == 0 => {
+                out.push(s[start..idx].trim());
+                start = idx + 1;
+            }
+            _ => {}
+        }
+    }
+    let tail = s[start..].trim();
+    if !tail.is_empty() || !out.is_empty() {
+        out.push(tail);
+    }
+    out
+}
+
+/// `name` used as an atomic (`name.`) somewhere in `ctx`, at an
+/// identifier boundary. `name(` method calls do not count.
+fn names_dotted(ctx: &str, name: &str) -> bool {
+    let b = ctx.as_bytes();
+    let mut from = 0;
+    while let Some(p) = ctx[from..].find(name) {
+        let s = from + p;
+        let e = s + name.len();
+        from = e;
+        let pre_ok = s == 0 || !is_ident_byte(b[s - 1]);
+        if pre_ok && b.get(e) == Some(&b'.') {
+            return true;
+        }
+    }
+    false
+}
+
+fn fallback_culprit(
+    decls: &BTreeMap<String, BTreeSet<String>>,
+    f: &SourceFile,
+    lines: &[String],
+    i: usize,
+    joined: &str,
+) -> Option<String> {
+    let mut ctx = String::new();
+    for l in &lines[i.saturating_sub(2)..i] {
+        ctx.push_str(l);
+        ctx.push(' ');
+    }
+    ctx.push_str(joined);
+    let mut foreign = None;
+    for (name, homes) in decls {
+        if names_dotted(&ctx, name) {
+            if homes.contains(&f.path) {
+                return None; // a same-file atomic is in play — benign
+            }
+            if foreign.is_none() {
+                foreign = Some(name.clone());
+            }
+        }
+    }
+    foreign
+}
+
+/// Rule 4: flag `Ordering::Relaxed` on atomic writes whose target is
+/// declared in a different file, unless allowlisted. The allowlist
+/// format is one `path:name` entry per line (`#` comments allowed);
+/// entries that match no flagged site are themselves findings.
+pub fn check_relaxed(files: &[SourceFile], allowlist_text: &str) -> Vec<Finding> {
+    let decls = atomic_declarations(files);
+    let allow: BTreeSet<String> = allowlist_text
+        .lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .map(String::from)
+        .collect();
+    let pats: Vec<String> = WRITE_METHODS.iter().map(|m| format!(".{m}")).collect();
+    let mut used: BTreeSet<String> = BTreeSet::new();
+    let mut out = Vec::new();
+    for f in files {
+        let lines = &f.sc.code;
+        for (i, line) in lines.iter().enumerate() {
+            if !line.contains('.') {
+                continue;
+            }
+            // A call statement may wrap; analyse a small joined window
+            // but only accept matches that start on this line.
+            let end = (i + 6).min(lines.len());
+            let joined = lines[i..end].join(" ");
+            let first_len = line.len();
+            for (m, pat) in WRITE_METHODS.iter().zip(&pats) {
+                let mut from = 0;
+                while let Some(p) = joined[from..].find(pat.as_str()) {
+                    let dot = from + p;
+                    from = dot + pat.len();
+                    if dot >= first_len {
+                        break;
+                    }
+                    let mut call = dot + pat.len();
+                    if *m == "compare_exchange" && joined[call..].starts_with("_weak") {
+                        call += "_weak".len();
+                    }
+                    if joined.as_bytes().get(call) != Some(&b'(') {
+                        continue;
+                    }
+                    let Some(close) = balanced_end(&joined, call) else { continue };
+                    let argv = split_top(&joined[call + 1..close]);
+                    // The ordering that *publishes*: the success ordering
+                    // for compare_exchange*, the set ordering for
+                    // fetch_update, the last argument otherwise.
+                    let ord = match *m {
+                        "compare_exchange" => argv.get(2).copied(),
+                        "fetch_update" => argv.first().copied(),
+                        _ => argv.last().copied(),
+                    };
+                    let Some(ord) = ord else { continue };
+                    if !has_word(ord, "Relaxed") {
+                        continue;
+                    }
+                    let culprit = match trailing_ident(&joined[..dot]) {
+                        Some(recv) => match decls.get(&recv) {
+                            Some(homes) if homes.contains(&f.path) => None,
+                            Some(_) => Some(recv),
+                            None => fallback_culprit(&decls, f, lines, i, &joined),
+                        },
+                        None => fallback_culprit(&decls, f, lines, i, &joined),
+                    };
+                    let Some(name) = culprit else { continue };
+                    let key = format!("{}:{name}", f.path);
+                    if allow.contains(&key) {
+                        used.insert(key);
+                        continue;
+                    }
+                    let home = decls[&name].iter().next().cloned().unwrap_or_default();
+                    out.push(Finding {
+                        rule: "relaxed-ordering",
+                        file: f.path.clone(),
+                        line: i + 1,
+                        message: format!(
+                            "`.{m}` with `Ordering::Relaxed` on atomic `{name}` declared in \
+                             {home} — a cross-module Relaxed write; use Release/AcqRel, or \
+                             audit it and add `{key}` to rust/RELAXED_ALLOWLIST.txt"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    for entry in allow.difference(&used) {
+        out.push(Finding {
+            rule: "relaxed-allowlist",
+            file: "rust/RELAXED_ALLOWLIST.txt".to_string(),
+            line: 1,
+            message: format!("stale allowlist entry `{entry}` matches no flagged write site"),
+        });
+    }
+    out
+}
+
+// ------------------------------------------------------------- repo walk
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let p = entry?.path();
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+fn load_tree(root: &Path, rel: &str) -> Result<Vec<SourceFile>, String> {
+    let dir = root.join(rel);
+    if !dir.exists() {
+        return Ok(Vec::new());
+    }
+    let mut paths = Vec::new();
+    collect_rs(&dir, &mut paths).map_err(|e| format!("walk {}: {e}", dir.display()))?;
+    paths.sort();
+    let mut v = Vec::new();
+    for p in paths {
+        let text = fs::read_to_string(&p).map_err(|e| format!("read {}: {e}", p.display()))?;
+        let rp = p.strip_prefix(root).unwrap_or(&p).to_string_lossy().replace('\\', "/");
+        v.push(SourceFile::new(rp, &text));
+    }
+    Ok(v)
+}
+
+/// Run every lint rule over the repository rooted at `root`. Returns
+/// findings sorted by (file, line, rule); empty means the repo is
+/// clean. Errors only on unreadable inputs (missing ARCHITECTURE.md,
+/// unreadable source tree), never on findings.
+pub fn lint_repo(root: &Path) -> Result<Vec<Finding>, String> {
+    let arch_path = root.join("ARCHITECTURE.md");
+    let architecture = fs::read_to_string(&arch_path)
+        .map_err(|e| format!("read {}: {e} (is --root the repo root?)", arch_path.display()))?;
+    let allow = fs::read_to_string(root.join("rust").join("RELAXED_ALLOWLIST.txt"))
+        .unwrap_or_default();
+
+    let src = load_tree(root, "rust/src")?;
+    if src.is_empty() {
+        return Err(format!("no Rust sources under {}/rust/src", root.display()));
+    }
+    let tests = load_tree(root, "rust/tests")?;
+    let benches = load_tree(root, "rust/benches")?;
+    let xtask_src = load_tree(root, "rust/xtask/src")?;
+
+    let mut findings = Vec::new();
+    for f in src.iter().chain(&tests).chain(&benches).chain(&xtask_src) {
+        findings.extend(check_unsafe_safety(f));
+    }
+    findings.extend(check_env_knobs(&src, &architecture));
+    match src.iter().find(|f| f.path.ends_with("engine/opts.rs")) {
+        Some(opts) => findings.extend(check_optflags(opts, &architecture, &tests)),
+        None => findings.push(Finding {
+            rule: "optflags",
+            file: "rust/src/engine/opts.rs".to_string(),
+            line: 1,
+            message: "file not found — did `OptFlags` move? update xtask's lint".to_string(),
+        }),
+    }
+    findings.extend(check_relaxed(&src, &allow));
+    findings.sort_by(|a, b| {
+        a.file.cmp(&b.file).then(a.line.cmp(&b.line)).then(a.rule.cmp(b.rule))
+    });
+    Ok(findings)
+}

@@ -1,0 +1,52 @@
+//! `cargo xtask lint` — run the repo-invariant lint and exit non-zero
+//! on findings. See the library crate docs for the rules.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+const USAGE: &str = "usage: cargo xtask lint [--root <repo-root>]";
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("lint") => {
+            let root = match root_arg(&args[1..]) {
+                Ok(r) => r,
+                Err(e) => {
+                    eprintln!("{e}");
+                    return ExitCode::from(2);
+                }
+            };
+            match xtask::lint_repo(&root) {
+                Ok(findings) if findings.is_empty() => {
+                    println!("xtask lint: clean");
+                    ExitCode::SUCCESS
+                }
+                Ok(findings) => {
+                    for f in &findings {
+                        eprintln!("{f}");
+                    }
+                    eprintln!("xtask lint: {} finding(s)", findings.len());
+                    ExitCode::FAILURE
+                }
+                Err(e) => {
+                    eprintln!("xtask lint: {e}");
+                    ExitCode::from(2)
+                }
+            }
+        }
+        _ => {
+            eprintln!("{USAGE}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn root_arg(rest: &[String]) -> Result<PathBuf, String> {
+    match rest {
+        // xtask lives at <repo>/rust/xtask, so the default root is two up.
+        [] => Ok(PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join("..")),
+        [flag, path] if flag == "--root" => Ok(PathBuf::from(path)),
+        _ => Err(USAGE.to_string()),
+    }
+}

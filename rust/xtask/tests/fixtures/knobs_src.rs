@@ -1,0 +1,8 @@
+//! Fixture: two env-knob reads, one documented, one not.
+
+pub fn knobs() -> (Option<String>, Option<String>) {
+    let a = std::env::var("SANDSLASH_FIXTURE_DOCUMENTED").ok();
+    // mentions of SANDSLASH_FIXTURE_COMMENTED in comments must not count
+    let b = std::env::var("SANDSLASH_FIXTURE_MISSING").ok();
+    (a, b)
+}

@@ -1,0 +1,11 @@
+//! Fixture `OptFlags` with three fields exercising both sub-rules.
+
+/// Fixture flags.
+pub struct OptFlags {
+    /// documented and tested: clean
+    pub alpha: bool,
+    /// tested but undocumented: `optflags-doc`
+    pub beta: bool,
+    /// documented but untested: `optflags-test`
+    pub gamma: bool,
+}

@@ -1,0 +1,8 @@
+//! Fixture differential test file.
+
+fn toggles() {
+    let mut f = base();
+    f.alpha = !f.alpha;
+    f.beta = !f.beta;
+    let _ = probe.gamma(); // method call: must NOT count as a field toggle
+}

@@ -1,0 +1,14 @@
+//! Fixture: the module that owns the atomic.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub struct Gauge {
+    pub level: AtomicU64,
+}
+
+impl Gauge {
+    pub fn bump(&self) {
+        // same-file Relaxed write: the declaring module owns the protocol
+        self.level.fetch_add(1, Ordering::Relaxed);
+    }
+}

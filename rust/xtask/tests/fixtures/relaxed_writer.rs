@@ -1,0 +1,23 @@
+//! Fixture: a foreign module writing someone else's atomic.
+
+use crate::Gauge;
+use std::sync::atomic::Ordering;
+
+pub fn read(g: &Gauge) -> u64 {
+    g.level.load(Ordering::Relaxed) // loads are never flagged
+}
+
+pub fn publish(g: &Gauge) {
+    g.level.store(7, Ordering::Release); // Release is fine cross-module
+}
+
+pub fn try_claim(g: &Gauge) -> bool {
+    // Relaxed *failure* ordering is fine: success ordering publishes.
+    g.level
+        .compare_exchange(0, 1, Ordering::AcqRel, Ordering::Relaxed)
+        .is_ok()
+}
+
+pub fn poke(g: &Gauge) {
+    g.level.store(9, Ordering::Relaxed); // the one true violation
+}

@@ -1,0 +1,8 @@
+//! Negative fixture: one undocumented `unsafe` block.
+
+pub fn dispatch(p: *const u32) -> u32 {
+    let _msg = "unsafe in a string literal must not count";
+    // unsafe in a plain comment must not count either
+    let _lambda = || 0;
+    unsafe { *p }
+}

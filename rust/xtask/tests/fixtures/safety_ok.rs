@@ -1,0 +1,26 @@
+//! Positive fixture: every `unsafe` site is documented.
+
+/// Reads through the pointer.
+///
+/// # Safety
+/// `p` must be valid for reads.
+#[inline]
+pub unsafe fn read_raw(p: *const u32) -> u32 {
+    // SAFETY: the caller upholds the contract documented above.
+    unsafe { *p }
+}
+
+pub fn dispatch(p: *const u32) -> u32 {
+    // SAFETY: fixture pointer is always valid where this is called.
+    // (two-line comment runs must be walked in full)
+    unsafe { read_raw(p) }
+}
+
+// SAFETY: fixture type has no interior state.
+unsafe impl Send for Token {}
+
+pub struct Token;
+
+fn same_line(p: *const u32) -> u32 {
+    unsafe { *p } // SAFETY: same-line comments count too
+}

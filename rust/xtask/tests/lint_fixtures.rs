@@ -1,0 +1,131 @@
+//! Fixture tests for `cargo xtask lint`: each rule has a passing and a
+//! failing fixture under `tests/fixtures/` (deliberately outside the
+//! crate's compile targets, so they may violate the invariants), plus
+//! one integration test that runs the full lint over the real repo and
+//! requires zero findings — the same gate CI runs.
+
+use std::path::Path;
+use xtask::{
+    check_env_knobs, check_optflags, check_relaxed, check_unsafe_safety, lint_repo, scan,
+    SourceFile,
+};
+
+#[test]
+fn scanner_separates_channels() {
+    let src = "let s = \"// SAFETY: in a string\"; // real comment\n";
+    let sc = scan(src);
+    assert!(sc.code[0].contains("let s ="));
+    assert!(sc.strings[0].contains("// SAFETY: in a string"));
+    assert!(!sc.code[0].contains("SAFETY"));
+    assert!(sc.comments[0].contains("real comment"));
+    // channels are column-aligned
+    assert_eq!(sc.code[0].chars().count(), sc.strings[0].chars().count());
+    assert_eq!(sc.code[0].chars().count(), sc.comments[0].chars().count());
+}
+
+#[test]
+fn scanner_handles_raw_strings_lifetimes_and_chars() {
+    let src = "fn f<'a>(x: &'a u32) -> char {\n    let _r = r#\"unsafe \"quoted\" inside\"#;\n    let _c = '\"';\n    '{'\n}\n";
+    let sc = scan(src);
+    // the raw string's `unsafe` must land in the strings channel
+    assert!(!sc.code.iter().any(|l| l.contains("unsafe")));
+    assert!(sc.strings[1].contains("unsafe \"quoted\" inside"));
+    // lifetimes stay code; the quote and brace char literals do not
+    // open a string (the `{` on line 4 would otherwise swallow line 5)
+    assert!(sc.code[0].contains("'a u32"));
+    assert!(sc.strings[2].contains('"'));
+    assert_eq!(sc.code[4].trim(), "}");
+}
+
+#[test]
+fn scanner_handles_nested_block_comments() {
+    let src = "/* outer /* inner */ still comment */ let x = 1;\n";
+    let sc = scan(src);
+    assert!(sc.comments[0].contains("still comment"));
+    assert!(sc.code[0].contains("let x = 1;"));
+    assert!(!sc.code[0].contains("outer"));
+}
+
+#[test]
+fn unsafe_rule_passes_on_documented_sites() {
+    let f = SourceFile::new("src/ok.rs", include_str!("fixtures/safety_ok.rs"));
+    let findings = check_unsafe_safety(&f);
+    assert!(findings.is_empty(), "{findings:?}");
+}
+
+#[test]
+fn unsafe_rule_flags_missing_safety_comment() {
+    let f = SourceFile::new("src/bad.rs", include_str!("fixtures/safety_missing.rs"));
+    let findings = check_unsafe_safety(&f);
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert_eq!(findings[0].rule, "unsafe-safety");
+    assert_eq!(findings[0].line, 7);
+}
+
+#[test]
+fn env_knob_rule_flags_undocumented_reads() {
+    let src = [SourceFile::new("src/knobs.rs", include_str!("fixtures/knobs_src.rs"))];
+    let findings = check_env_knobs(&src, include_str!("fixtures/knobs_arch.md"));
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert_eq!(findings[0].rule, "env-knob");
+    assert!(findings[0].message.contains("SANDSLASH_FIXTURE_MISSING"));
+    assert_eq!(findings[0].line, 6);
+}
+
+#[test]
+fn optflags_rule_requires_doc_row_and_test_toggle() {
+    let opts = SourceFile::new("src/engine/opts.rs", include_str!("fixtures/optflags_src.rs"));
+    let tests = [SourceFile::new("tests/diff.rs", include_str!("fixtures/optflags_tests.rs"))];
+    let findings = check_optflags(&opts, include_str!("fixtures/optflags_arch.md"), &tests);
+    assert_eq!(findings.len(), 2, "{findings:?}");
+    assert!(findings
+        .iter()
+        .any(|f| f.rule == "optflags-doc" && f.message.contains("beta")));
+    assert!(findings
+        .iter()
+        .any(|f| f.rule == "optflags-test" && f.message.contains("gamma")));
+}
+
+#[test]
+fn relaxed_rule_flags_only_the_cross_module_write() {
+    let files = [
+        SourceFile::new("src/gauge.rs", include_str!("fixtures/relaxed_decl.rs")),
+        SourceFile::new("src/writer.rs", include_str!("fixtures/relaxed_writer.rs")),
+    ];
+    let findings = check_relaxed(&files, "");
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert_eq!(findings[0].rule, "relaxed-ordering");
+    assert_eq!(findings[0].file, "src/writer.rs");
+    assert!(findings[0].message.contains("`level`"));
+}
+
+#[test]
+fn relaxed_allowlist_clears_audited_sites_and_flags_stale_entries() {
+    let files = [
+        SourceFile::new("src/gauge.rs", include_str!("fixtures/relaxed_decl.rs")),
+        SourceFile::new("src/writer.rs", include_str!("fixtures/relaxed_writer.rs")),
+    ];
+    let cleared = check_relaxed(&files, "# audited\nsrc/writer.rs:level\n");
+    assert!(cleared.is_empty(), "{cleared:?}");
+    let stale = check_relaxed(&files, "src/writer.rs:level\nsrc/nowhere.rs:ghost\n");
+    assert_eq!(stale.len(), 1, "{stale:?}");
+    assert_eq!(stale[0].rule, "relaxed-allowlist");
+    assert!(stale[0].message.contains("src/nowhere.rs:ghost"));
+}
+
+#[test]
+fn missing_root_is_an_error_not_a_pass() {
+    assert!(lint_repo(Path::new("/nonexistent/fixture/root")).is_err());
+}
+
+/// The gate CI runs: the repository itself must be lint-clean.
+#[test]
+fn the_repo_itself_is_lint_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("..");
+    let findings = lint_repo(&root).expect("lint must run on the repo");
+    assert!(
+        findings.is_empty(),
+        "repo lint findings:\n{}",
+        findings.iter().map(ToString::to_string).collect::<Vec<_>>().join("\n")
+    );
+}
