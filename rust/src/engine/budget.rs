@@ -322,6 +322,7 @@ impl Governor {
     /// process).
     pub fn new(budget: &Budget) -> Self {
         crate::util::fault::init_from_env();
+        crate::obs::flight::note_query_start();
         let external = current_cancel();
         let limited = budget.is_limited() || external.is_some();
         Self {
@@ -365,6 +366,7 @@ impl Governor {
             return false;
         }
         if !self.limited {
+            crate::obs::trace::on_budget_charge();
             return true;
         }
         if let Some(ext) = &self.external {
@@ -385,13 +387,23 @@ impl Governor {
             self.trip(CancelReason::TaskBudget);
             return false;
         }
+        crate::obs::trace::on_budget_charge();
         true
     }
 
-    /// Trip the run's token (first reason wins) and count it.
+    /// Trip the run's token (first reason wins), count it, record it
+    /// in the active query trace (if any), and dump the flight
+    /// recorder for post-mortem (PR 9).
     pub fn trip(&self, reason: CancelReason) {
         if self.token.trip(reason) {
             gov::note_trip(reason);
+            crate::obs::trace::on_trip(reason);
+            crate::obs::flight::note_trip(reason.exit_code() as u64);
+            let why = match reason {
+                CancelReason::WorkerPanic => "worker-panic",
+                _ => "budget-trip",
+            };
+            crate::obs::flight::dump_to_stderr(why);
         }
     }
 
@@ -406,6 +418,9 @@ impl Governor {
         }
         drop(slot);
         gov::note_panic_caught();
+        // the flight event carries the last fault stage this thread
+        // crossed — what names the faulted stage in the dump
+        crate::obs::flight::note_panic();
         self.trip(CancelReason::WorkerPanic);
     }
 
@@ -418,6 +433,7 @@ impl Governor {
         stats: SearchStats,
         engine: &'static str,
     ) -> Result<Outcome<T>, MineError> {
+        crate::obs::flight::note_query_end();
         let note = self.panic_note.lock().unwrap_or_else(|e| e.into_inner()).take();
         if let Some(payload) = note {
             return Err(MineError::WorkerPanicked { engine, payload });

@@ -58,6 +58,8 @@ use crate::pattern::matching_order::{LevelPlan, MatchingPlan};
 use crate::util::bitset::BitSet;
 use crate::util::metrics::SearchStats;
 
+use crate::obs::trace as qtrace;
+
 use super::budget::{self, Governor, MineError, Outcome};
 use super::hooks::LowLevelApi;
 use super::local_graph::PlanLocalGraph;
@@ -404,6 +406,7 @@ fn extend_set<A, H: LowLevelApi>(
     l1: Option<(&WorkerCtx<'_>, Option<(usize, usize)>)>,
     leaf: &(impl Fn(&mut A, &[VertexId]) + Sync),
 ) {
+    let _span = qtrace::LevelSpan::enter(level);
     let lp = &plan.levels[level];
     // Local-graph stage (opts.lg): from the plan's coverage level on,
     // the neighborhoods of the matched prefix contain every future
@@ -428,6 +431,7 @@ fn extend_set<A, H: LowLevelApi>(
             // candidate loops below instead — proves the executor
             // cannot land here with a partial window; whole-root tasks
             // carry the full window, which changes nothing.
+            qtrace::on_lg_root();
             extend_lg_root(g, plan, cfg, hooks, st, level, leaf);
             return;
         }
@@ -691,6 +695,7 @@ fn extend_lg<A, H: LowLevelApi>(
     level: usize,
     leaf: &(impl Fn(&mut A, &[VertexId]) + Sync),
 ) {
+    let _span = qtrace::LevelSpan::enter(level);
     let k = plan.size();
     let lp = &plan.levels[level];
     if !hooks.to_extend(&st.emb, lp.pivot) {
@@ -787,6 +792,7 @@ fn extend<A, H: LowLevelApi>(
     use_mnc: bool,
     leaf: &(impl Fn(&mut A, &[VertexId]) + Sync),
 ) {
+    let _span = qtrace::LevelSpan::enter(level);
     let k = plan.size();
     let lp = &plan.levels[level];
     let pivot_v = st.emb[lp.pivot];

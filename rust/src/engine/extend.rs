@@ -155,6 +155,7 @@ impl ExtCore {
         }
         let words = self.cover.capacity() / 64;
         if tail.len() >= words.saturating_mul(DENSE_EXCL_WORD_FACTOR).max(1) {
+            crate::obs::trace::on_excl_dense();
             self.ensure_cand_bits(self.cover.capacity());
             for &u in tail {
                 self.cand_bits.insert(u as usize);
@@ -162,6 +163,7 @@ impl ExtCore {
             setops::andnot_words_into(self.cand_bits.words(), self.cover.words(), out);
             self.cand_bits.clear();
         } else {
+            crate::obs::trace::on_excl_sparse();
             for &u in tail {
                 if !self.cover.contains(u as usize) {
                     out.push(u);

@@ -61,6 +61,7 @@ use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::OnceLock;
 
 use crate::engine::budget::Governor;
+use crate::obs::{flight, trace as qtrace};
 use crate::util::metrics::sched as counters;
 use crate::util::rng::Rng;
 // PR-8: the protocol state (deque mutexes + length mirrors, the
@@ -277,6 +278,8 @@ impl WorkerCtx<'_> {
         // before the owner's own range backlog.
         if p.push_front(self.worker, Task::Split { root, lo, hi }) {
             counters::note_split();
+            qtrace::on_split();
+            flight::note_split();
             true
         } else {
             false
@@ -411,8 +414,10 @@ impl Pool {
         }
         if own {
             counters::note_claim();
+            qtrace::on_claim();
         } else {
             counters::note_shard_claim();
+            qtrace::on_shard_claim();
         }
         Some(Task::Roots { start, end: (start + self.block).min(c.end) })
     }
@@ -433,6 +438,8 @@ impl Pool {
         q.len.store(d.len(), Ordering::Relaxed);
         if t.is_some() {
             counters::note_steal();
+            qtrace::on_steal();
+            flight::note_steal(victim);
         }
         t
     }
@@ -499,8 +506,12 @@ impl Pool {
             self.queues[w].len.store(0, Ordering::Relaxed);
         }
         match gov {
+            // the governor records the flight-recorder panic event and
+            // dumps the trail when its token trips
             Some(g) => g.note_panic(panic_message(payload.as_ref())),
             None => {
+                flight::note_panic();
+                flight::dump_to_stderr("worker-panic");
                 let mut slot = self.panic_payload.lock().unwrap_or_else(|e| e.into_inner());
                 if slot.is_none() {
                     *slot = Some(payload);
@@ -647,41 +658,53 @@ fn cursor_reduce<A: Send>(
 ) -> A {
     let cursor = AtomicUsize::new(0);
     let stop = AtomicBool::new(false);
+    // Thread-locals do not cross the scope boundary: capture the
+    // caller's trace (if one is installed) and re-install it inside
+    // every worker, so a traced query's events land in its own
+    // profile no matter which thread mines them (PR 9).
+    let trace = qtrace::current();
     let results: Vec<A> = sthread::scope(|scope| {
         let handles: Vec<_> = (0..threads)
             .map(|tid| {
                 let cursor = &cursor;
                 let stop = &stop;
+                let trace = trace.clone();
                 scope.spawn(move || {
-                    let mut acc = init();
-                    let ctx = WorkerCtx { worker: tid, pool: None, gov };
-                    match gov {
-                        None => loop {
-                            let start = cursor.fetch_add(chunk, Ordering::Relaxed);
-                            if start >= n {
-                                break;
-                            }
-                            body(&mut acc, &ctx, Task::Roots { start, end: (start + chunk).min(n) });
-                        },
-                        Some(g) => loop {
-                            if stop.load(Ordering::Relaxed) || g.is_cancelled() {
-                                break;
-                            }
-                            let start = cursor.fetch_add(chunk, Ordering::Relaxed);
-                            if start >= n {
-                                break;
-                            }
-                            let task = Task::Roots { start, end: (start + chunk).min(n) };
-                            let run =
-                                catch_unwind(AssertUnwindSafe(|| body(&mut acc, &ctx, task)));
-                            if let Err(payload) = run {
-                                g.note_panic(panic_message(payload.as_ref()));
-                                stop.store(true, Ordering::SeqCst);
-                                break;
-                            }
-                        },
-                    }
-                    acc
+                    qtrace::with_optional(trace, || {
+                        let mut acc = init();
+                        let ctx = WorkerCtx { worker: tid, pool: None, gov };
+                        match gov {
+                            None => loop {
+                                let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+                                if start >= n {
+                                    break;
+                                }
+                                body(
+                                    &mut acc,
+                                    &ctx,
+                                    Task::Roots { start, end: (start + chunk).min(n) },
+                                );
+                            },
+                            Some(g) => loop {
+                                if stop.load(Ordering::Relaxed) || g.is_cancelled() {
+                                    break;
+                                }
+                                let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+                                if start >= n {
+                                    break;
+                                }
+                                let task = Task::Roots { start, end: (start + chunk).min(n) };
+                                let run =
+                                    catch_unwind(AssertUnwindSafe(|| body(&mut acc, &ctx, task)));
+                                if let Err(payload) = run {
+                                    g.note_panic(panic_message(payload.as_ref()));
+                                    stop.store(true, Ordering::SeqCst);
+                                    break;
+                                }
+                            },
+                        }
+                        acc
+                    })
                 })
             })
             .collect();
@@ -781,13 +804,19 @@ pub fn reduce_governed<A: Send>(
         return cursor_reduce(n, threads, chunk, gov, &init, &body, merge);
     }
     let pool = Pool::new(n, pol);
+    // capture the caller's trace for re-install inside each worker
+    // (thread-locals do not cross the scope boundary — PR 9)
+    let trace = qtrace::current();
     let results: Vec<A> = sthread::scope(|scope| {
         let handles: Vec<_> = (0..threads)
             .map(|w| {
                 let pool = &pool;
                 let init = &init;
                 let body = &body;
-                scope.spawn(move || worker_loop(pool, w, gov, init, body))
+                let trace = trace.clone();
+                scope.spawn(move || {
+                    qtrace::with_optional(trace, || worker_loop(pool, w, gov, init, body))
+                })
             })
             .collect();
         handles.into_iter().map(|h| h.join().unwrap()).collect()

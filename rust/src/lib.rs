@@ -46,6 +46,9 @@
 //! * [`service`] — the resident multi-tenant query service: load-once
 //!   graphs, line-JSON protocol, admission control, canonical-pattern
 //!   result cache (`sandslash serve`)
+//! * [`obs`] — observability: scoped per-query traces, the unified
+//!   metrics registry behind the `stats` op, and the post-mortem
+//!   flight recorder
 //! * [`runtime`] — PJRT loader for the AOT-compiled Pallas counting path
 //! * [`coordinator`] — dataset registry and experiment campaign driver
 //! * [`util`] — substrates (RNG, bitset, pool, CLI, config, bench)
@@ -69,6 +72,7 @@ pub mod pattern;
 pub mod engine;
 pub mod exec;
 pub mod apps;
+pub mod obs;
 pub mod service;
 pub mod runtime;
 pub mod coordinator;

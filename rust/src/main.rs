@@ -14,7 +14,8 @@
 //!           [--threads N] [--preload g1,g2]
 //!   query   --addr A|--port-file F [--id I] [--op OP] [--graph G]
 //!           [--pattern P] [--induced] [--deadline-ms N] [--max-tasks N]
-//!           [--threads N] [--high] [--no-cache] [--target ID] [--line JSON]
+//!           [--threads N] [--high] [--no-cache] [--trace] [--stats]
+//!           [--target ID] [--line JSON]
 //!
 //! `--graph` accepts a registered dataset name (see coordinator::datasets)
 //! or a path to an edge-list / .csr snapshot file.
@@ -39,6 +40,13 @@
 //! query process (see `sandslash::service`); `query` is the one-shot
 //! line client, exiting with the response's structured `code` — the
 //! same table as above, plus 8 = admission rejected (overloaded).
+//!
+//! Observability (PR 9): `--profile <path>` on any subcommand wraps the
+//! whole run in a [`QueryTrace`](sandslash::obs::trace::QueryTrace) and
+//! writes the JSON profile to `<path>`; `query --trace` asks the
+//! service to attach the same profile to its response, and
+//! `query --stats` fetches the `stats` op and prints the unified
+//! registry's Prometheus-style exposition.
 
 use sandslash::apps::baselines::emulation::{self, System};
 use sandslash::apps::{clique, fsm_app, motif, sl, tc};
@@ -63,23 +71,44 @@ fn run(args: &Args) -> i32 {
     // formulas) reach the scheduler through the `util::pool` adapters,
     // which never see `MinerConfig::steal`/`shards` — only the
     // overrides (and the env kill switch) reach every path.
-    sched::with_overrides(sched_overrides(args), || match args.subcommand.as_deref() {
-        Some("gen") => cmd_gen(args),
-        Some("stats") => cmd_stats(args),
-        Some("tc") => cmd_tc(args),
-        Some("clique") => cmd_clique(args),
-        Some("motif") => cmd_motif(args),
-        Some("sl") => cmd_sl(args),
-        Some("fsm") => cmd_fsm(args),
-        Some("accel") => cmd_accel(args),
-        Some("campaign") => cmd_campaign(args),
-        Some("serve") => cmd_serve(args),
-        Some("query") => cmd_query(args),
-        _ => {
-            eprintln!("{}", USAGE);
-            2
+    let dispatch = || {
+        sched::with_overrides(sched_overrides(args), || match args.subcommand.as_deref() {
+            Some("gen") => cmd_gen(args),
+            Some("stats") => cmd_stats(args),
+            Some("tc") => cmd_tc(args),
+            Some("clique") => cmd_clique(args),
+            Some("motif") => cmd_motif(args),
+            Some("sl") => cmd_sl(args),
+            Some("fsm") => cmd_fsm(args),
+            Some("accel") => cmd_accel(args),
+            Some("campaign") => cmd_campaign(args),
+            Some("serve") => cmd_serve(args),
+            Some("query") => cmd_query(args),
+            _ => {
+                eprintln!("{}", USAGE);
+                2
+            }
+        })
+    };
+    // --profile <path> (PR 9): trace the whole one-shot run and write
+    // the JSON profile; recording is observational, counts unchanged
+    let Some(path) = args.get("profile") else { return dispatch() };
+    let trace = std::sync::Arc::new(sandslash::obs::trace::QueryTrace::new());
+    let code = sandslash::obs::trace::with_trace(trace.clone(), dispatch);
+    match std::fs::write(path, format!("{}\n", trace.render())) {
+        Ok(()) => {
+            eprintln!("sandslash: wrote profile to {path}");
+            code
         }
-    })
+        Err(e) => {
+            eprintln!("sandslash: write profile {path}: {e}");
+            if code == 0 {
+                1
+            } else {
+                code
+            }
+        }
+    }
 }
 
 /// Scheduler knobs (PR 4): `--no-steal` pins the run to the
@@ -501,7 +530,9 @@ fn cmd_query(args: &Args) -> i32 {
                 args.get_or("graph", "er-small"),
                 PatternSpec::Named(args.get_or("pattern", "triangle").to_string()),
             );
-            match args.get_or("op", "query") {
+            // --stats is sugar for --op stats (plus the exposition
+            // print-out below)
+            match if args.flag("stats") { "stats" } else { args.get_or("op", "query") } {
                 "query" => {}
                 "cancel" => req.op = Op::Cancel,
                 "invalidate" => req.op = Op::Invalidate,
@@ -527,6 +558,7 @@ fn cmd_query(args: &Args) -> i32 {
                 req.priority = sandslash::service::Priority::High;
             }
             req.no_cache = args.flag("no-cache");
+            req.trace = args.flag("trace");
             req.target = args.get("target").map(|s| s.to_string());
             req.render()
         }
@@ -534,6 +566,21 @@ fn cmd_query(args: &Args) -> i32 {
     match request_over_socket(&addr, &line) {
         Ok(response) => {
             println!("{response}");
+            if args.flag("stats") {
+                // convenience surface: unescape and print the registry
+                // exposition carried inside the stats result
+                let text = sandslash::service::json::parse(&response)
+                    .ok()
+                    .and_then(|v| {
+                        v.get("result")
+                            .and_then(|r| r.get("exposition"))
+                            .and_then(|e| e.as_str().map(|s| s.to_string()))
+                    });
+                match text {
+                    Some(text) => print!("{text}"),
+                    None => eprintln!("sandslash: response carried no exposition"),
+                }
+            }
             // the structured response code doubles as the exit code,
             // mirroring the one-shot commands' table
             response_code(&response).unwrap_or(1)

@@ -1,0 +1,294 @@
+//! Flight recorder (PR 9): fixed-size lock-free per-worker event
+//! rings for post-mortem diagnosis.
+//!
+//! When a worker panics or a budget trips, the interesting question
+//! is *what was the process doing just before* — which stage was
+//! crossing, who stole what, which query was in flight. Logs are too
+//! expensive for always-on recording, so this keeps a bounded ring of
+//! recent events per worker thread: recording is a few relaxed atomic
+//! stores into a pre-allocated slot (no locks, no allocation), and
+//! the rings are only ever read when something already went wrong.
+//!
+//! Events recorded: query start/end (governed runs), budget trips,
+//! steals, splits, fault-stage crossings ([`crate::util::fault`]),
+//! and caught worker panics (stamped with the last stage the thread
+//! crossed — what "names the faulted stage" in the dump). On a worker
+//! panic or a trip the full recorder is dumped to stderr as line-JSON
+//! prefixed `sandslash-flight:`; [`render`] exposes the same text for
+//! tests.
+//!
+//! Ring capacity comes from `SANDSLASH_FLIGHT_EVENTS` (events per
+//! ring, default 64, same loud-reject parse contract as every knob)
+//! and is pinned at first use. Slots are recycled oldest-first; a
+//! reader racing a writer can observe a torn event, which is
+//! acceptable for a post-mortem aid and keeps the write path
+//! wait-free.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+use crate::util::fault::Stage;
+use crate::util::pool;
+
+/// Worker-thread ring slots; threads beyond this share rings
+/// (assignment wraps), which only blurs attribution, never drops
+/// events.
+const MAX_RINGS: usize = 64;
+
+/// Default events retained per ring.
+const DEFAULT_EVENTS: usize = 64;
+
+const KIND_EMPTY: u8 = 0;
+const KIND_QUERY_START: u8 = 1;
+const KIND_QUERY_END: u8 = 2;
+const KIND_TRIP: u8 = 3;
+const KIND_STEAL: u8 = 4;
+const KIND_SPLIT: u8 = 5;
+const KIND_STAGE: u8 = 6;
+const KIND_PANIC: u8 = 7;
+
+struct Slot {
+    seq: AtomicU64,
+    kind: AtomicU8,
+    arg: AtomicU64,
+}
+
+struct Ring {
+    head: AtomicU64,
+    slots: Box<[Slot]>,
+}
+
+struct Flight {
+    rings: Vec<Ring>,
+    capacity: usize,
+}
+
+static FLIGHT: OnceLock<Flight> = OnceLock::new();
+static NEXT_RING: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    static MY_RING: Cell<usize> = const { Cell::new(usize::MAX) };
+    static LAST_STAGE: Cell<u64> = const { Cell::new(0) };
+}
+
+fn flight() -> &'static Flight {
+    FLIGHT.get_or_init(|| {
+        let capacity = pool::positive_usize_env(
+            "SANDSLASH_FLIGHT_EVENTS",
+            "the default flight-ring capacity",
+        )
+        .unwrap_or(DEFAULT_EVENTS)
+        .min(1 << 16);
+        let rings = (0..MAX_RINGS)
+            .map(|_| Ring {
+                head: AtomicU64::new(0),
+                slots: (0..capacity)
+                    .map(|_| Slot {
+                        seq: AtomicU64::new(0),
+                        kind: AtomicU8::new(KIND_EMPTY),
+                        arg: AtomicU64::new(0),
+                    })
+                    .collect(),
+            })
+            .collect();
+        Flight { rings, capacity }
+    })
+}
+
+#[inline]
+fn my_ring(f: &Flight) -> &Ring {
+    let idx = MY_RING.with(|c| {
+        if c.get() == usize::MAX {
+            c.set(NEXT_RING.fetch_add(1, Ordering::Relaxed) % MAX_RINGS);
+        }
+        c.get()
+    });
+    &f.rings[idx]
+}
+
+#[inline]
+fn record(kind: u8, arg: u64) {
+    let f = flight();
+    let ring = my_ring(f);
+    let seq = ring.head.fetch_add(1, Ordering::Relaxed);
+    let slot = &ring.slots[(seq as usize) % f.capacity];
+    // Mark the slot in-progress, fill it, then publish the kind last:
+    // a racing reader sees either the old event, "empty", or the new
+    // event — never a half-written kind with a stale payload tag.
+    slot.kind.store(KIND_EMPTY, Ordering::Release);
+    slot.arg.store(arg, Ordering::Relaxed);
+    slot.seq.store(seq, Ordering::Relaxed);
+    slot.kind.store(kind, Ordering::Release);
+}
+
+fn stage_code(stage: Stage) -> u64 {
+    match stage {
+        Stage::RootClaim => 1,
+        Stage::SplitTask => 2,
+        Stage::FsmRegen => 3,
+        Stage::BfsLevel => 4,
+    }
+}
+
+fn stage_name(code: u64) -> &'static str {
+    match code {
+        1 => "root-claim",
+        2 => "split-task",
+        3 => "fsm-regen",
+        4 => "bfs-level",
+        _ => "none",
+    }
+}
+
+/// Record the start of a governed run on this thread.
+#[inline]
+pub(crate) fn note_query_start() {
+    record(KIND_QUERY_START, 0);
+}
+
+/// Record the end of a governed run on this thread.
+#[inline]
+pub(crate) fn note_query_end() {
+    record(KIND_QUERY_END, 0);
+}
+
+/// Record a cancel-token trip (arg: the PR-6 exit code of the
+/// reason).
+#[inline]
+pub(crate) fn note_trip(code: u64) {
+    record(KIND_TRIP, code);
+}
+
+/// Record a successful steal (arg: the victim worker index).
+#[inline]
+pub(crate) fn note_steal(victim: usize) {
+    record(KIND_STEAL, victim as u64);
+}
+
+/// Record a published split task.
+#[inline]
+pub(crate) fn note_split() {
+    record(KIND_SPLIT, 0);
+}
+
+/// Record a fault-point crossing and remember it as this thread's
+/// most recent stage — the stage a subsequent [`note_panic`] is
+/// stamped with.
+#[inline]
+pub(crate) fn note_stage(stage: Stage) {
+    let code = stage_code(stage);
+    LAST_STAGE.with(|c| c.set(code));
+    record(KIND_STAGE, code);
+}
+
+/// Record a caught worker panic, stamped with the last fault stage
+/// this thread crossed (0 = none seen).
+#[inline]
+pub(crate) fn note_panic() {
+    let stage = LAST_STAGE.with(|c| c.get());
+    record(KIND_PANIC, stage);
+}
+
+fn event_json(ring: usize, seq: u64, kind: u8, arg: u64) -> Option<String> {
+    let body = match kind {
+        KIND_QUERY_START => "\"event\":\"query-start\"".to_string(),
+        KIND_QUERY_END => "\"event\":\"query-end\"".to_string(),
+        KIND_TRIP => format!("\"event\":\"trip\",\"code\":{arg}"),
+        KIND_STEAL => format!("\"event\":\"steal\",\"victim\":{arg}"),
+        KIND_SPLIT => "\"event\":\"split\"".to_string(),
+        KIND_STAGE => format!("\"event\":\"stage\",\"stage\":\"{}\"", stage_name(arg)),
+        KIND_PANIC => format!("\"event\":\"panic\",\"stage\":\"{}\"", stage_name(arg)),
+        _ => return None,
+    };
+    Some(format!("{{\"ring\":{ring},\"seq\":{seq},{body}}}"))
+}
+
+/// Render the entire recorder as the line-JSON dump text: one
+/// `sandslash-flight:` line per retained event (per ring, oldest
+/// first), bracketed by begin/end marker lines carrying `reason`.
+/// Used by [`dump_to_stderr`] and directly by tests.
+pub fn render(reason: &str) -> String {
+    let f = flight();
+    let mut out = String::with_capacity(1024);
+    out.push_str(&format!("sandslash-flight: begin dump (reason={reason})\n"));
+    let mut total = 0usize;
+    for (ring_idx, ring) in f.rings.iter().enumerate() {
+        if ring.head.load(Ordering::Acquire) == 0 {
+            continue;
+        }
+        let mut events: Vec<(u64, u8, u64)> = ring
+            .slots
+            .iter()
+            .filter_map(|slot| {
+                let kind = slot.kind.load(Ordering::Acquire);
+                if kind == KIND_EMPTY {
+                    return None;
+                }
+                Some((slot.seq.load(Ordering::Relaxed), kind, slot.arg.load(Ordering::Relaxed)))
+            })
+            .collect();
+        events.sort_by_key(|&(seq, _, _)| seq);
+        for (seq, kind, arg) in events {
+            if let Some(line) = event_json(ring_idx, seq, kind, arg) {
+                out.push_str("sandslash-flight: ");
+                out.push_str(&line);
+                out.push('\n');
+                total += 1;
+            }
+        }
+    }
+    out.push_str(&format!("sandslash-flight: end dump ({total} events)\n"));
+    out
+}
+
+/// Dump the recorder to stderr (worker panic or budget trip). One
+/// `eprint!` call so concurrent dumps interleave per-dump, not
+/// per-line.
+pub fn dump_to_stderr(reason: &str) {
+    eprint!("{}", render(reason));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_record_and_render() {
+        note_query_start();
+        note_stage(Stage::RootClaim);
+        note_steal(3);
+        note_split();
+        note_trip(5);
+        note_panic();
+        note_query_end();
+        let text = render("unit-test");
+        assert!(text.starts_with("sandslash-flight: begin dump (reason=unit-test)\n"), "{text}");
+        assert!(text.contains("\"event\":\"query-start\""), "{text}");
+        assert!(text.contains("\"event\":\"stage\",\"stage\":\"root-claim\""), "{text}");
+        assert!(text.contains("\"event\":\"steal\",\"victim\":3"), "{text}");
+        assert!(text.contains("\"event\":\"trip\",\"code\":5"), "{text}");
+        assert!(text.contains("\"event\":\"panic\",\"stage\":\"root-claim\""), "{text}");
+        assert!(text.trim_end().ends_with("events)"), "{text}");
+        // every event line parses as one JSON object after the prefix
+        for line in text.lines() {
+            let rest = line.strip_prefix("sandslash-flight: ").expect("prefix");
+            if rest.starts_with('{') {
+                assert!(rest.ends_with('}'), "{rest}");
+            }
+        }
+    }
+
+    #[test]
+    fn ring_wraps_and_keeps_newest() {
+        let capacity = flight().capacity;
+        for _ in 0..capacity + 8 {
+            note_split();
+        }
+        let text = render("wrap");
+        // the dump stays bounded by the ring, no matter how many events fired
+        let lines = text.lines().filter(|l| l.contains("\"event\"")).count();
+        assert!(lines <= MAX_RINGS * capacity);
+        assert!(text.contains("\"event\":\"split\""));
+    }
+}

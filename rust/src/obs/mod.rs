@@ -1,0 +1,33 @@
+//! Observability layer (PR 9): per-query tracing, a unified metrics
+//! registry, and a post-mortem flight recorder.
+//!
+//! The paper's two-level story — automatic high-level optimizations
+//! plus user-directed low-level ones — is only debuggable when kernel
+//! dispatch, stealing, LG crossovers, and budget trips are
+//! attributable to a *specific query and level*. The process-global
+//! counter families in [`crate::util::metrics`] cannot do that on the
+//! multi-tenant PR-7 service, and nothing preserved a trail when a
+//! worker panicked. This module adds the three missing pieces:
+//!
+//! - [`trace`] — a scoped, thread-local-propagated [`trace::QueryTrace`]
+//!   attached through the same reentrancy surface as
+//!   [`crate::engine::budget::with_cancel`]: per-level timings,
+//!   per-family dispatch histograms, steal/split/claim counts, LG and
+//!   ExtCore mode selections, budget charges, cache and admission
+//!   verdicts. Default-off and pay-for-what-you-use: every hook is one
+//!   thread-local flag check when no trace is installed, and recording
+//!   is purely observational — counts are bit-identical on/off
+//!   (differential-tested in `rust/tests/obs_differential.rs`).
+//! - [`registry`] — one snapshotting registry over every counter
+//!   family (dispatch/sched/gov plus the PR-9 service counters:
+//!   responses by code, admission sheds, idle-timeout closes, registry
+//!   epoch bumps) with a Prometheus-style text exposition, served by
+//!   the service `stats` op and `sandslash query --stats`.
+//! - [`flight`] — fixed-size lock-free per-worker event rings (query
+//!   start/end, trips, steals, splits, fault-stage crossings, panics)
+//!   dumped to stderr as line-JSON on worker panic or budget trip,
+//!   capacity via `SANDSLASH_FLIGHT_EVENTS`.
+
+pub mod flight;
+pub mod registry;
+pub mod trace;

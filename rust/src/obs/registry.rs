@@ -1,0 +1,311 @@
+//! Unified metrics registry (PR 9): one snapshot over every counter
+//! family, plus a Prometheus-style text exposition.
+//!
+//! PR 8 left three disconnected process-global families in
+//! [`crate::util::metrics`] (dispatch/sched/gov) and the PR-7 service
+//! had no export path at all. This module adds the missing service
+//! counters (responses by wire code, admission sheds, idle-timeout
+//! connection closes, graph-registry epoch bumps — all bumped here so
+//! the cross-module Relaxed-write lint stays clean), a single
+//! [`snapshot`] combining every family, and [`exposition`] rendering
+//! the snapshot (plus the caller's point-in-time service gauges) as
+//! Prometheus text format. The service `stats` op serves both the
+//! structured JSON and the exposition; `sandslash query --stats`
+//! prints the latter.
+//!
+//! Counters are monotone and process-global: attribute to a code
+//! region via before/after [`snapshot`] deltas, exactly like the
+//! underlying families.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::metrics::{dispatch, gov, sched};
+
+/// Distinct wire response codes (0 ok .. 8 overloaded; the PR-6/PR-7
+/// shared code table).
+pub const RESPONSE_CODES: usize = 9;
+
+#[allow(clippy::declare_interior_mutable_const)] // array-init seed only
+const ZERO: AtomicU64 = AtomicU64::new(0);
+
+static RESPONSES: [AtomicU64; RESPONSE_CODES] = [ZERO; RESPONSE_CODES];
+static ADMISSION_SHEDS: AtomicU64 = AtomicU64::new(0);
+static IDLE_TIMEOUT_CLOSES: AtomicU64 = AtomicU64::new(0);
+static EPOCH_BUMPS: AtomicU64 = AtomicU64::new(0);
+
+/// Count one wire response by its `code` field (out-of-table codes
+/// are dropped rather than mis-binned).
+pub(crate) fn note_response(code: i32) {
+    if (0..RESPONSE_CODES as i32).contains(&code) {
+        RESPONSES[code as usize].fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Count one admission shed (a query refused with `overloaded`).
+pub(crate) fn note_admission_shed() {
+    ADMISSION_SHEDS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Count one connection closed by the idle read timeout
+/// (`SANDSLASH_IDLE_TIMEOUT_MS`, close reason `idle-timeout`).
+pub(crate) fn note_idle_timeout_close() {
+    IDLE_TIMEOUT_CLOSES.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Count one graph-registry epoch bump (an `invalidate` op that found
+/// its graph resident).
+pub(crate) fn note_epoch_bump() {
+    EPOCH_BUMPS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Point-in-time copy of the PR-9 service counters.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct ServiceCounts {
+    /// Responses sent, indexed by wire `code` (0 ok .. 8 overloaded).
+    pub responses: [u64; RESPONSE_CODES],
+    /// Queries refused by admission control (`overloaded`).
+    pub admission_sheds: u64,
+    /// Connections closed by the idle read timeout.
+    pub idle_timeout_closes: u64,
+    /// Graph-registry epoch bumps via the `invalidate` op.
+    pub epoch_bumps: u64,
+}
+
+impl ServiceCounts {
+    /// Total responses across every code.
+    pub fn responses_total(&self) -> u64 {
+        self.responses.iter().sum()
+    }
+}
+
+/// One unified snapshot across every counter family (relaxed loads:
+/// exact under quiescence, monotone lower bounds under concurrency).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct RegistrySnapshot {
+    /// Kernel-dispatch selections ([`dispatch::snapshot`]).
+    pub dispatch: dispatch::DispatchCounts,
+    /// Scheduler events ([`sched::snapshot`]).
+    pub sched: sched::SchedCounts,
+    /// Governance events ([`gov::snapshot`]).
+    pub gov: gov::GovCounts,
+    /// PR-9 service counters.
+    pub service: ServiceCounts,
+}
+
+/// Read every counter family at once.
+pub fn snapshot() -> RegistrySnapshot {
+    let mut responses = [0u64; RESPONSE_CODES];
+    for (slot, c) in responses.iter_mut().zip(RESPONSES.iter()) {
+        *slot = c.load(Ordering::Relaxed);
+    }
+    RegistrySnapshot {
+        dispatch: dispatch::snapshot(),
+        sched: sched::snapshot(),
+        gov: gov::snapshot(),
+        service: ServiceCounts {
+            responses,
+            admission_sheds: ADMISSION_SHEDS.load(Ordering::Relaxed),
+            idle_timeout_closes: IDLE_TIMEOUT_CLOSES.load(Ordering::Relaxed),
+            epoch_bumps: EPOCH_BUMPS.load(Ordering::Relaxed),
+        },
+    }
+}
+
+/// Point-in-time service gauges owned by a `Service` instance (not
+/// process-global counters), supplied by the caller so the exposition
+/// can cover cache occupancy and admission depth without this module
+/// depending on the service types.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct ServiceGauges {
+    /// Queries accepted since service start.
+    pub queries: u64,
+    /// Queries currently holding an admission permit.
+    pub inflight: u64,
+    /// Queries currently waiting in the admission queue.
+    pub queued: u64,
+    /// Result-cache hits.
+    pub cache_hits: u64,
+    /// Result-cache misses.
+    pub cache_misses: u64,
+    /// Requests coalesced onto an in-flight leader.
+    pub cache_coalesced: u64,
+    /// Completed fills inserted into the cache.
+    pub cache_fills: u64,
+    /// Fills rejected (oversized or partial results).
+    pub cache_rejected: u64,
+    /// Entries evicted by the LRU byte cap.
+    pub cache_evictions: u64,
+    /// Entries invalidated by epoch bumps.
+    pub cache_invalidated: u64,
+    /// Bytes resident in the result cache.
+    pub cache_bytes: u64,
+    /// Entries resident in the result cache.
+    pub cache_entries: u64,
+}
+
+fn counter(out: &mut String, name: &str, value: u64) {
+    out.push_str("# TYPE ");
+    out.push_str(name);
+    out.push_str(" counter\n");
+    out.push_str(name);
+    out.push(' ');
+    out.push_str(&value.to_string());
+    out.push('\n');
+}
+
+fn gauge(out: &mut String, name: &str, value: u64) {
+    out.push_str("# TYPE ");
+    out.push_str(name);
+    out.push_str(" gauge\n");
+    out.push_str(name);
+    out.push(' ');
+    out.push_str(&value.to_string());
+    out.push('\n');
+}
+
+fn labeled(out: &mut String, name: &str, label: &str, rows: &[(&str, u64)]) {
+    out.push_str("# TYPE ");
+    out.push_str(name);
+    out.push_str(" counter\n");
+    for (value_label, value) in rows {
+        out.push_str(&format!("{name}{{{label}=\"{value_label}\"}} {value}\n"));
+    }
+}
+
+/// Render `snap` (and, when given, per-service `gauges`) as
+/// Prometheus text exposition format: `# TYPE` headers followed by
+/// `name{label="value"} N` sample lines, newline-terminated.
+pub fn exposition(snap: &RegistrySnapshot, gauges: Option<&ServiceGauges>) -> String {
+    let mut out = String::with_capacity(2048);
+    let d = &snap.dispatch;
+    labeled(
+        &mut out,
+        "sandslash_dispatch_calls_total",
+        "family",
+        &[
+            ("merge", d.merge),
+            ("gallop", d.gallop),
+            ("simd_merge", d.simd_merge),
+            ("word_parallel", d.word_parallel),
+            ("mask_filter", d.mask_filter),
+            ("gather_filter", d.gather_filter),
+            ("difference", d.difference),
+        ],
+    );
+    let s = &snap.sched;
+    labeled(
+        &mut out,
+        "sandslash_sched_events_total",
+        "event",
+        &[
+            ("claims", s.claims),
+            ("steals", s.steals),
+            ("shard_claims", s.shard_claims),
+            ("splits", s.splits),
+        ],
+    );
+    let g = &snap.gov;
+    labeled(
+        &mut out,
+        "sandslash_gov_trips_total",
+        "reason",
+        &[
+            ("deadline", g.deadline_trips),
+            ("task-budget", g.task_budget_trips),
+            ("caller", g.caller_trips),
+            ("worker-panic", g.panic_trips),
+        ],
+    );
+    counter(&mut out, "sandslash_gov_panics_caught_total", g.panics_caught);
+    counter(&mut out, "sandslash_gov_faults_injected_total", g.faults_injected);
+    let sv = &snap.service;
+    {
+        out.push_str("# TYPE sandslash_service_responses_total counter\n");
+        for (code, value) in sv.responses.iter().enumerate() {
+            out.push_str(&format!(
+                "sandslash_service_responses_total{{code=\"{code}\"}} {value}\n"
+            ));
+        }
+    }
+    counter(&mut out, "sandslash_admission_sheds_total", sv.admission_sheds);
+    counter(&mut out, "sandslash_service_idle_timeout_closes_total", sv.idle_timeout_closes);
+    counter(&mut out, "sandslash_registry_epoch_bumps_total", sv.epoch_bumps);
+    if let Some(gg) = gauges {
+        counter(&mut out, "sandslash_service_queries_total", gg.queries);
+        gauge(&mut out, "sandslash_admission_inflight", gg.inflight);
+        gauge(&mut out, "sandslash_admission_queued", gg.queued);
+        labeled(
+            &mut out,
+            "sandslash_cache_events_total",
+            "event",
+            &[
+                ("hits", gg.cache_hits),
+                ("misses", gg.cache_misses),
+                ("coalesced", gg.cache_coalesced),
+                ("fills", gg.cache_fills),
+                ("rejected", gg.cache_rejected),
+                ("evictions", gg.cache_evictions),
+                ("invalidated", gg.cache_invalidated),
+            ],
+        );
+        gauge(&mut out, "sandslash_cache_bytes", gg.cache_bytes);
+        gauge(&mut out, "sandslash_cache_entries", gg.cache_entries);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn service_counters_record_and_snapshot() {
+        let before = snapshot();
+        note_response(0);
+        note_response(8);
+        note_response(99); // out of table: dropped, not mis-binned
+        note_admission_shed();
+        note_idle_timeout_close();
+        note_epoch_bump();
+        let after = snapshot();
+        assert!(after.service.responses[0] > before.service.responses[0]);
+        assert!(after.service.responses[8] > before.service.responses[8]);
+        assert!(after.service.admission_sheds > before.service.admission_sheds);
+        assert!(after.service.idle_timeout_closes > before.service.idle_timeout_closes);
+        assert!(after.service.epoch_bumps > before.service.epoch_bumps);
+        assert!(after.service.responses_total() >= before.service.responses_total() + 2);
+    }
+
+    #[test]
+    fn exposition_is_well_formed_and_covers_every_family() {
+        let snap = snapshot();
+        let gauges = ServiceGauges { queries: 3, cache_entries: 1, ..ServiceGauges::default() };
+        let text = exposition(&snap, Some(&gauges));
+        for family in [
+            "sandslash_dispatch_calls_total",
+            "sandslash_sched_events_total",
+            "sandslash_gov_trips_total",
+            "sandslash_service_responses_total",
+            "sandslash_admission_sheds_total",
+            "sandslash_cache_events_total",
+        ] {
+            assert!(text.contains(&format!("# TYPE {family} counter")), "{family}\n{text}");
+        }
+        assert!(text.contains("sandslash_dispatch_calls_total{family=\"merge\"} "));
+        assert!(text.contains("sandslash_service_responses_total{code=\"8\"} "));
+        assert!(text.contains("sandslash_service_queries_total 3\n"));
+        assert!(text.ends_with('\n'));
+        // every non-comment line is `name[{label}] value`
+        for line in text.lines() {
+            if line.starts_with('#') {
+                continue;
+            }
+            let (name, value) = line.rsplit_once(' ').expect("sample line");
+            assert!(!name.is_empty());
+            value.parse::<u64>().expect("numeric sample value");
+        }
+        // without gauges the service-instance families are absent
+        let bare = exposition(&snap, None);
+        assert!(!bare.contains("sandslash_cache_bytes"));
+    }
+}

@@ -1,0 +1,532 @@
+//! Per-query tracing (PR 9): a scoped, thread-local-propagated
+//! profile accumulator.
+//!
+//! A [`QueryTrace`] is attached with [`with_trace`] — the same
+//! Drop-restore reentrancy shape as
+//! [`crate::engine::budget::with_cancel`] and the scheduler override
+//! scope — and the executor re-installs the caller's trace inside
+//! every spawned worker (thread-locals do not cross
+//! `thread::scope`), so one query's events land in one query's
+//! profile even when several tenants share the process.
+//!
+//! Pay-for-what-you-use: every hook ([`on_dispatch`], [`on_steal`],
+//! [`LevelSpan`], ...) first reads a thread-local `Cell<bool>` and
+//! returns when no trace is installed, so the untraced hot path pays
+//! one flag check and nothing else. Recording is purely
+//! observational — no hook influences kernel selection, scheduling,
+//! or budgets — which is what makes the on/off bit-identity
+//! differential suite (`rust/tests/obs_differential.rs`) hold by
+//! construction.
+//!
+//! All counter fields are atomics bumped only by methods in this
+//! file (the repo-invariant lint audits cross-module Relaxed writes);
+//! relaxed loads in [`QueryTrace::render`] are exact once the traced
+//! run has joined its workers.
+
+use std::cell::{Cell, RefCell};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::engine::budget::CancelReason;
+
+/// Deepest extension level with its own timing/call slot; deeper
+/// levels (none of the engines exceed this today — patterns are
+/// ≤ 16 vertices) fold into the last slot.
+pub const MAX_LEVELS: usize = 16;
+
+/// Number of kernel-dispatch families, matching
+/// [`crate::util::metrics::dispatch::DispatchCounts`] field order.
+pub const FAMILIES: usize = 7;
+
+/// Family names in [`crate::util::metrics::dispatch::DispatchCounts`]
+/// field order — index `i` of the trace histogram is family
+/// `FAMILY_NAMES[i]`.
+pub const FAMILY_NAMES: [&str; FAMILIES] = [
+    "merge",
+    "gallop",
+    "simd_merge",
+    "word_parallel",
+    "mask_filter",
+    "gather_filter",
+    "difference",
+];
+
+/// How the result cache answered a traced query (recorded by the
+/// service layer after `get_or_compute` resolves).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CacheVerdict {
+    /// Computed fresh and (if complete) filled into the cache.
+    Miss,
+    /// Served from the cache (including single-flight coalescing onto
+    /// an in-flight leader).
+    Hit,
+    /// Cache skipped entirely (`no_cache` request, or one-shot CLI).
+    Bypass,
+}
+
+#[allow(clippy::declare_interior_mutable_const)] // fresh-profile init seed only
+const ZERO: AtomicU64 = AtomicU64::new(0);
+
+/// Per-query profile accumulator. Shared by `Arc` between the
+/// attaching scope and every worker mining on its behalf; rendered as
+/// a one-line JSON profile with [`render`](Self::render).
+#[derive(Debug)]
+pub struct QueryTrace {
+    level_calls: [AtomicU64; MAX_LEVELS],
+    level_nanos: [AtomicU64; MAX_LEVELS],
+    dispatch: [AtomicU64; FAMILIES],
+    claims: AtomicU64,
+    steals: AtomicU64,
+    shard_claims: AtomicU64,
+    splits: AtomicU64,
+    lg_roots: AtomicU64,
+    excl_dense: AtomicU64,
+    excl_sparse: AtomicU64,
+    budget_charges: AtomicU64,
+    trip_code: AtomicU64,
+    cache_verdict: AtomicU64,
+    admission_recorded: AtomicU64,
+    admission_wait_nanos: AtomicU64,
+}
+
+impl Default for QueryTrace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl QueryTrace {
+    /// A fresh all-zero profile.
+    pub fn new() -> Self {
+        QueryTrace {
+            level_calls: [ZERO; MAX_LEVELS],
+            level_nanos: [ZERO; MAX_LEVELS],
+            dispatch: [ZERO; FAMILIES],
+            claims: ZERO,
+            steals: ZERO,
+            shard_claims: ZERO,
+            splits: ZERO,
+            lg_roots: ZERO,
+            excl_dense: ZERO,
+            excl_sparse: ZERO,
+            budget_charges: ZERO,
+            trip_code: ZERO,
+            cache_verdict: ZERO,
+            admission_recorded: ZERO,
+            admission_wait_nanos: ZERO,
+        }
+    }
+
+    #[inline]
+    fn bump_dispatch(&self, family: usize) {
+        if family < FAMILIES {
+            self.dispatch[family].fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    #[inline]
+    fn note_level(&self, level: usize, nanos: u64) {
+        let slot = level.min(MAX_LEVELS - 1);
+        self.level_calls[slot].fetch_add(1, Ordering::Relaxed);
+        self.level_nanos[slot].fetch_add(nanos, Ordering::Relaxed);
+    }
+
+    #[inline]
+    fn note_trip(&self, reason: CancelReason) {
+        // First trip wins, mirroring the cancel-token latch: the
+        // governor only reports the reason that actually won the race.
+        let code = trip_code(reason);
+        let _ = self.trip_code.compare_exchange(0, code, Ordering::Relaxed, Ordering::Relaxed);
+    }
+
+    /// Record how long this query waited in the admission queue
+    /// (service layer; 0 nanos still marks the verdict as `admitted`).
+    pub fn set_admission_wait(&self, nanos: u64) {
+        self.admission_wait_nanos.store(nanos, Ordering::Relaxed);
+        self.admission_recorded.store(1, Ordering::Relaxed);
+    }
+
+    /// Record the result-cache verdict (service layer).
+    pub fn set_cache_verdict(&self, v: CacheVerdict) {
+        let code = match v {
+            CacheVerdict::Miss => 1,
+            CacheVerdict::Hit => 2,
+            CacheVerdict::Bypass => 3,
+        };
+        self.cache_verdict.store(code, Ordering::Relaxed);
+    }
+
+    /// Root blocks claimed from a worker's own shard while this trace
+    /// was installed.
+    pub fn claims(&self) -> u64 {
+        self.claims.load(Ordering::Relaxed)
+    }
+
+    /// Tasks stolen from another worker's deque.
+    pub fn steals(&self) -> u64 {
+        self.steals.load(Ordering::Relaxed)
+    }
+
+    /// Root blocks claimed from a foreign shard's cursor.
+    pub fn shard_claims(&self) -> u64 {
+        self.shard_claims.load(Ordering::Relaxed)
+    }
+
+    /// Level-1 suffixes published as split tasks.
+    pub fn splits(&self) -> u64 {
+        self.splits.load(Ordering::Relaxed)
+    }
+
+    /// Roots routed through the shrinking-local-graph (LG) path.
+    pub fn lg_roots(&self) -> u64 {
+        self.lg_roots.load(Ordering::Relaxed)
+    }
+
+    /// ExtCore exclusion-chain mode selections: `(dense, sparse)`.
+    pub fn excl_modes(&self) -> (u64, u64) {
+        (self.excl_dense.load(Ordering::Relaxed), self.excl_sparse.load(Ordering::Relaxed))
+    }
+
+    /// Budget charges (governed task admissions) on this query's behalf.
+    pub fn budget_charges(&self) -> u64 {
+        self.budget_charges.load(Ordering::Relaxed)
+    }
+
+    /// Total kernel dispatches across every family.
+    pub fn dispatch_total(&self) -> u64 {
+        self.dispatch.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Total recorded extension calls across every level.
+    pub fn level_calls_total(&self) -> u64 {
+        self.level_calls.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Render the accumulated profile as one line of JSON (the
+    /// `"profile"` field of a traced service response, and the file
+    /// written by the one-shot CLI's `--profile`). Level rows with no
+    /// calls are omitted; the dispatch histogram always lists all
+    /// seven families.
+    pub fn render(&self) -> String {
+        let mut out = String::with_capacity(512);
+        out.push_str("{\"levels\":[");
+        let mut first = true;
+        for level in 0..MAX_LEVELS {
+            let calls = self.level_calls[level].load(Ordering::Relaxed);
+            if calls == 0 {
+                continue;
+            }
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            let nanos = self.level_nanos[level].load(Ordering::Relaxed);
+            out.push_str(&format!(
+                "{{\"level\":{level},\"calls\":{calls},\"nanos\":{nanos}}}"
+            ));
+        }
+        out.push_str("],\"dispatch\":{");
+        for (i, name) in FAMILY_NAMES.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let n = self.dispatch[i].load(Ordering::Relaxed);
+            out.push_str(&format!("\"{name}\":{n}"));
+        }
+        out.push_str(&format!(
+            "}},\"sched\":{{\"claims\":{},\"steals\":{},\"shard_claims\":{},\"splits\":{}}}",
+            self.claims(),
+            self.steals(),
+            self.shard_claims(),
+            self.splits()
+        ));
+        let (dense, sparse) = self.excl_modes();
+        out.push_str(&format!(
+            ",\"modes\":{{\"lg_roots\":{},\"extcore_dense\":{dense},\"extcore_sparse\":{sparse}}}",
+            self.lg_roots()
+        ));
+        out.push_str(&format!(",\"budget\":{{\"charges\":{}", self.budget_charges()));
+        match self.trip_code.load(Ordering::Relaxed) {
+            0 => out.push_str(",\"trip\":null}"),
+            code => out.push_str(&format!(",\"trip\":\"{}\"}}", trip_name(code))),
+        }
+        match self.cache_verdict.load(Ordering::Relaxed) {
+            0 => out.push_str(",\"cache\":null"),
+            1 => out.push_str(",\"cache\":\"miss\""),
+            2 => out.push_str(",\"cache\":\"hit\""),
+            _ => out.push_str(",\"cache\":\"bypass\""),
+        }
+        if self.admission_recorded.load(Ordering::Relaxed) != 0 {
+            out.push_str(&format!(
+                ",\"admission\":{{\"verdict\":\"admitted\",\"wait_nanos\":{}}}",
+                self.admission_wait_nanos.load(Ordering::Relaxed)
+            ));
+        } else {
+            out.push_str(",\"admission\":null");
+        }
+        out.push('}');
+        out
+    }
+}
+
+/// The PR-6 exit code for a trip reason (shared code table: the CLI
+/// process exit, the wire `code` field, and the profile all agree).
+fn trip_code(reason: CancelReason) -> u64 {
+    match reason {
+        CancelReason::WorkerPanic => 4,
+        CancelReason::Deadline => 5,
+        CancelReason::TaskBudget => 6,
+        CancelReason::Caller => 7,
+    }
+}
+
+fn trip_name(code: u64) -> &'static str {
+    match code {
+        4 => "worker-panic",
+        5 => "deadline",
+        6 => "task-budget",
+        7 => "caller",
+        _ => "unknown",
+    }
+}
+
+thread_local! {
+    static CURRENT: RefCell<Option<Arc<QueryTrace>>> = const { RefCell::new(None) };
+    static ACTIVE: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Run `f` with every traced event on this thread (and, via the
+/// executor's propagation, on every worker it spawns) recorded into
+/// `trace`. Scoped and nesting-safe: the previous trace is restored
+/// on return, panic included — the same Drop-restore shape as
+/// [`crate::engine::budget::with_cancel`].
+pub fn with_trace<R>(trace: Arc<QueryTrace>, f: impl FnOnce() -> R) -> R {
+    let prev = CURRENT.with(|t| t.replace(Some(trace)));
+    ACTIVE.with(|a| a.set(true));
+    struct Restore(Option<Arc<QueryTrace>>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            let prev = self.0.take();
+            ACTIVE.with(|a| a.set(prev.is_some()));
+            CURRENT.with(|t| *t.borrow_mut() = prev);
+        }
+    }
+    let _restore = Restore(prev);
+    f()
+}
+
+/// The trace installed on this thread, if any — captured by the
+/// executor before `thread::scope` so spawned workers can re-install
+/// it (thread-locals do not cross scope boundaries).
+pub fn current() -> Option<Arc<QueryTrace>> {
+    if !active() {
+        return None;
+    }
+    CURRENT.with(|t| t.borrow().clone())
+}
+
+/// [`with_trace`] when `trace` is `Some`, plain `f()` otherwise — the
+/// shape the executor uses to re-install a captured caller trace
+/// inside spawned workers without branching at every hook site.
+#[inline]
+pub(crate) fn with_optional<R>(trace: Option<Arc<QueryTrace>>, f: impl FnOnce() -> R) -> R {
+    match trace {
+        Some(t) => with_trace(t, f),
+        None => f(),
+    }
+}
+
+/// Fast per-thread "is a trace installed" check — the single flag
+/// read every hook pays when tracing is off.
+#[inline]
+fn active() -> bool {
+    ACTIVE.with(|a| a.get())
+}
+
+#[inline]
+fn with_current(f: impl FnOnce(&QueryTrace)) {
+    if active() {
+        CURRENT.with(|t| {
+            if let Some(tr) = t.borrow().as_ref() {
+                f(tr);
+            }
+        });
+    }
+}
+
+/// Hook: one kernel dispatch of `family` (index into
+/// [`FAMILY_NAMES`]); called by the dispatch counters alongside the
+/// process-global bump.
+#[inline]
+pub(crate) fn on_dispatch(family: usize) {
+    with_current(|t| t.bump_dispatch(family));
+}
+
+/// Hook: a root block claimed from the worker's own shard.
+#[inline]
+pub(crate) fn on_claim() {
+    with_current(|t| {
+        t.claims.fetch_add(1, Ordering::Relaxed);
+    });
+}
+
+/// Hook: a task stolen from another worker's deque.
+#[inline]
+pub(crate) fn on_steal() {
+    with_current(|t| {
+        t.steals.fetch_add(1, Ordering::Relaxed);
+    });
+}
+
+/// Hook: a root block claimed from a foreign shard's cursor.
+#[inline]
+pub(crate) fn on_shard_claim() {
+    with_current(|t| {
+        t.shard_claims.fetch_add(1, Ordering::Relaxed);
+    });
+}
+
+/// Hook: a level-1 suffix published as a split task.
+#[inline]
+pub(crate) fn on_split() {
+    with_current(|t| {
+        t.splits.fetch_add(1, Ordering::Relaxed);
+    });
+}
+
+/// Hook: a root routed through the shrinking-local-graph path.
+#[inline]
+pub(crate) fn on_lg_root() {
+    with_current(|t| {
+        t.lg_roots.fetch_add(1, Ordering::Relaxed);
+    });
+}
+
+/// Hook: the ExtCore exclusion chain selected its dense (bitset) mode.
+#[inline]
+pub(crate) fn on_excl_dense() {
+    with_current(|t| {
+        t.excl_dense.fetch_add(1, Ordering::Relaxed);
+    });
+}
+
+/// Hook: the ExtCore exclusion chain selected its sparse (sorted-list)
+/// mode.
+#[inline]
+pub(crate) fn on_excl_sparse() {
+    with_current(|t| {
+        t.excl_sparse.fetch_add(1, Ordering::Relaxed);
+    });
+}
+
+/// Hook: the governor charged one task against this query's budget.
+#[inline]
+pub(crate) fn on_budget_charge() {
+    with_current(|t| {
+        t.budget_charges.fetch_add(1, Ordering::Relaxed);
+    });
+}
+
+/// Hook: this query's cancel token latched `reason` (first trip wins).
+#[inline]
+pub(crate) fn on_trip(reason: CancelReason) {
+    with_current(|t| t.note_trip(reason));
+}
+
+/// Inclusive per-level timing guard: created at the top of an
+/// extension call, records `(calls += 1, nanos += elapsed)` for its
+/// level on drop. When no trace is installed it holds no timestamp
+/// and drop is a no-op, so the untraced path pays one flag check.
+pub(crate) struct LevelSpan {
+    level: usize,
+    start: Option<Instant>,
+}
+
+impl LevelSpan {
+    #[inline]
+    pub(crate) fn enter(level: usize) -> Self {
+        let start = if active() { Some(Instant::now()) } else { None };
+        LevelSpan { level, start }
+    }
+}
+
+impl Drop for LevelSpan {
+    fn drop(&mut self) {
+        if let Some(t0) = self.start {
+            let nanos = t0.elapsed().as_nanos() as u64;
+            with_current(|t| t.note_level(self.level, nanos));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hooks_are_inert_without_a_trace() {
+        on_dispatch(0);
+        on_claim();
+        on_steal();
+        on_budget_charge();
+        drop(LevelSpan::enter(2));
+        assert!(current().is_none());
+    }
+
+    #[test]
+    fn with_trace_records_and_restores() {
+        let tr = Arc::new(QueryTrace::new());
+        with_trace(tr.clone(), || {
+            assert!(current().is_some());
+            on_dispatch(0);
+            on_dispatch(6);
+            on_claim();
+            on_steal();
+            on_shard_claim();
+            on_split();
+            on_lg_root();
+            on_excl_dense();
+            on_excl_sparse();
+            on_budget_charge();
+            drop(LevelSpan::enter(1));
+            // nested scopes restore the outer trace
+            let inner = Arc::new(QueryTrace::new());
+            with_trace(inner.clone(), || on_claim());
+            assert_eq!(inner.claims(), 1);
+            on_claim();
+        });
+        assert!(current().is_none());
+        assert_eq!(tr.dispatch_total(), 2);
+        assert_eq!(tr.claims(), 2);
+        assert_eq!(tr.steals(), 1);
+        assert_eq!(tr.shard_claims(), 1);
+        assert_eq!(tr.splits(), 1);
+        assert_eq!(tr.lg_roots(), 1);
+        assert_eq!(tr.excl_modes(), (1, 1));
+        assert_eq!(tr.budget_charges(), 1);
+        assert_eq!(tr.level_calls_total(), 1);
+    }
+
+    #[test]
+    fn profile_renders_one_json_line() {
+        let tr = Arc::new(QueryTrace::new());
+        with_trace(tr.clone(), || {
+            on_dispatch(0);
+            on_claim();
+            drop(LevelSpan::enter(0));
+            on_trip(CancelReason::Deadline);
+            on_trip(CancelReason::Caller); // second trip loses the latch
+        });
+        tr.set_cache_verdict(CacheVerdict::Miss);
+        tr.set_admission_wait(125);
+        let p = tr.render();
+        assert!(!p.contains('\n'));
+        assert!(p.contains("\"level\":0"), "{p}");
+        assert!(p.contains("\"merge\":1"), "{p}");
+        assert!(p.contains("\"claims\":1"), "{p}");
+        assert!(p.contains("\"trip\":\"deadline\""), "{p}");
+        assert!(p.contains("\"cache\":\"miss\""), "{p}");
+        assert!(p.contains("\"wait_nanos\":125"), "{p}");
+    }
+}

@@ -49,6 +49,8 @@ use crate::engine::dfs;
 use crate::engine::hooks::NoHooks;
 use crate::engine::{MinerConfig, OptFlags};
 use crate::graph::CsrGraph;
+use crate::obs::registry as obs_registry;
+use crate::obs::trace::{self as qtrace, CacheVerdict, QueryTrace};
 use crate::pattern::{canonical_code, plan, Pattern};
 use crate::util::pool;
 
@@ -73,11 +75,13 @@ impl ServiceConfig {
     /// Read the service knobs from the environment (loud-reject parses,
     /// like every `SANDSLASH_*` numeric knob).
     pub fn from_env() -> Self {
-        let max_inflight = pool::positive_usize_env("SANDSLASH_MAX_INFLIGHT", 4);
+        let max_inflight =
+            pool::positive_usize_env("SANDSLASH_MAX_INFLIGHT", "the default of 4").unwrap_or(4);
         Self {
             max_inflight,
             max_queued: 2 * max_inflight,
-            cache_bytes: pool::positive_usize_env("SANDSLASH_CACHE_BYTES", 64 << 20),
+            cache_bytes: pool::positive_usize_env("SANDSLASH_CACHE_BYTES", "the default 64 MiB")
+                .unwrap_or(64 << 20),
             default_threads: pool::default_threads(),
             default_budget: crate::engine::Budget::from_env(),
         }
@@ -151,9 +155,10 @@ impl Service {
     }
 
     /// Handle one parsed request (the transport-free entry point the
-    /// in-process suites drive directly).
+    /// in-process suites drive directly). Every response is counted by
+    /// structured code in the unified metrics registry (PR 9).
     pub fn handle(&self, req: &Request) -> Response {
-        match req.op {
+        let resp = match req.op {
             Op::Query => self.run_query(req),
             Op::Cancel => self.cancel(req),
             Op::Invalidate => self.invalidate(req),
@@ -164,7 +169,9 @@ impl Service {
                 self.shutdown.store(true, Ordering::SeqCst);
                 ok_fragment(req, "{\"shutdown\":true}")
             }
-        }
+        };
+        obs_registry::note_response(resp.code());
+        resp
     }
 
     /// Whether a `shutdown` op has been handled (polled by the
@@ -207,11 +214,16 @@ impl Service {
             Ok(p) => p,
             Err(e) => return Response::error(&req.id, e),
         };
+        // traced queries get a private profile accumulator; recording
+        // is purely observational, so counts are identical either way
+        let trace = req.trace.then(|| Arc::new(QueryTrace::new()));
+        let admit_t0 = trace.as_ref().map(|_| std::time::Instant::now());
         // admission before loading: an overloaded service must shed
         // work before materializing graphs for it
         let permit = match self.admission.admit(req.priority) {
             Ok(p) => p,
             Err(AdmitError::Overloaded { inflight, queued }) => {
+                obs_registry::note_admission_shed();
                 return Response::error(
                     &req.id,
                     ProtoError {
@@ -225,6 +237,9 @@ impl Service {
                 )
             }
         };
+        if let (Some(tr), Some(t0)) = (&trace, admit_t0) {
+            tr.set_admission_wait(t0.elapsed().as_nanos() as u64);
+        }
         let (g, epoch) = match self.registry.get(graph_name) {
             Ok(pair) => pair,
             Err(RegistryError::UnknownGraph(name)) => {
@@ -268,15 +283,22 @@ impl Service {
         // defaults, which is exact — only code-0 results are ever cached
         let code = std::cell::Cell::new(0i32);
         let err: std::cell::RefCell<Option<ProtoError>> = std::cell::RefCell::new(None);
-        let compute = || match self.execute(&g, &pattern, req, &token) {
-            Ok((fragment, c)) => {
-                code.set(c);
-                (Arc::new(fragment), c == 0)
-            }
-            Err(e) => {
-                code.set(e.code);
-                *err.borrow_mut() = Some(e);
-                (Arc::new(String::new()), false)
+        let compute = || {
+            // install the query's trace for the engine run, so every
+            // dispatch/sched/budget event lands in this query's profile
+            let run = qtrace::with_optional(trace.clone(), || {
+                self.execute(&g, &pattern, req, &token)
+            });
+            match run {
+                Ok((fragment, c)) => {
+                    code.set(c);
+                    (Arc::new(fragment), c == 0)
+                }
+                Err(e) => {
+                    code.set(e.code);
+                    *err.borrow_mut() = Some(e);
+                    (Arc::new(String::new()), false)
+                }
             }
         };
         let (value, cached) = if req.no_cache {
@@ -285,9 +307,26 @@ impl Service {
             self.cache.get_or_compute(&key, compute)
         };
         drop(permit);
-        match err.into_inner() {
-            Some(e) => Response::error(&req.id, e),
-            None => Response::ok(&req.id, value, cached, code.get(), Some(epoch)),
+        if let Some(tr) = &trace {
+            tr.set_cache_verdict(if req.no_cache {
+                CacheVerdict::Bypass
+            } else if cached {
+                CacheVerdict::Hit
+            } else {
+                CacheVerdict::Miss
+            });
+        }
+        match (err.into_inner(), trace) {
+            (Some(e), _) => Response::error(&req.id, e),
+            (None, Some(tr)) => Response::ok_with_profile(
+                &req.id,
+                value,
+                cached,
+                code.get(),
+                Some(epoch),
+                tr.render(),
+            ),
+            (None, None) => Response::ok(&req.id, value, cached, code.get(), Some(epoch)),
         }
     }
 
@@ -356,6 +395,9 @@ impl Service {
             );
         };
         let epoch = self.registry.bump_epoch(graph);
+        if epoch.is_some() {
+            obs_registry::note_epoch_bump();
+        }
         let purged = self.cache.purge_graph(graph);
         let epoch_json =
             epoch.map(|e| e.to_string()).unwrap_or_else(|| "null".to_string());
@@ -380,25 +422,88 @@ impl Service {
     fn stats_op(&self, req: &Request) -> Response {
         let s = self.cache.stats();
         let (inflight, queued) = self.admission.snapshot();
-        ok_rendered(
-            req,
-            format!(
-                "{{\"queries\":{},\"inflight\":{inflight},\"queued\":{queued},\
-                 \"cache\":{{\"hits\":{},\"misses\":{},\"coalesced\":{},\"fills\":{},\
-                 \"rejected\":{},\"evictions\":{},\"invalidated\":{},\"bytes\":{},\
-                 \"entries\":{}}}}}",
-                self.queries.load(Ordering::Relaxed),
-                s.hits,
-                s.misses,
-                s.coalesced,
-                s.fills,
-                s.rejected,
-                s.evictions,
-                s.invalidated,
-                self.cache.bytes(),
-                self.cache.len(),
-            ),
-        )
+        let snap = obs_registry::snapshot();
+        let gauges = self.gauges();
+        let mut out = format!(
+            "{{\"queries\":{},\"inflight\":{inflight},\"queued\":{queued},\
+             \"cache\":{{\"hits\":{},\"misses\":{},\"coalesced\":{},\"fills\":{},\
+             \"rejected\":{},\"evictions\":{},\"invalidated\":{},\"bytes\":{},\
+             \"entries\":{}}}",
+            self.queries.load(Ordering::Relaxed),
+            s.hits,
+            s.misses,
+            s.coalesced,
+            s.fills,
+            s.rejected,
+            s.evictions,
+            s.invalidated,
+            self.cache.bytes(),
+            self.cache.len(),
+        );
+        // unified registry families (PR 9): process-global dispatch,
+        // scheduler, governance, and service counters
+        let d = &snap.dispatch;
+        out.push_str(&format!(
+            ",\"dispatch\":{{\"merge\":{},\"gallop\":{},\"simd_merge\":{},\
+             \"word_parallel\":{},\"mask_filter\":{},\"gather_filter\":{},\
+             \"difference\":{}}}",
+            d.merge, d.gallop, d.simd_merge, d.word_parallel, d.mask_filter, d.gather_filter,
+            d.difference,
+        ));
+        out.push_str(&format!(
+            ",\"sched\":{{\"claims\":{},\"steals\":{},\"shard_claims\":{},\"splits\":{}}}",
+            snap.sched.claims, snap.sched.steals, snap.sched.shard_claims, snap.sched.splits,
+        ));
+        let gv = &snap.gov;
+        out.push_str(&format!(
+            ",\"gov\":{{\"deadline_trips\":{},\"task_budget_trips\":{},\"caller_trips\":{},\
+             \"panic_trips\":{},\"panics_caught\":{},\"faults_injected\":{}}}",
+            gv.deadline_trips,
+            gv.task_budget_trips,
+            gv.caller_trips,
+            gv.panic_trips,
+            gv.panics_caught,
+            gv.faults_injected,
+        ));
+        let responses: Vec<String> =
+            snap.service.responses.iter().map(|n| n.to_string()).collect();
+        out.push_str(&format!(
+            ",\"service\":{{\"responses\":[{}],\"admission_sheds\":{},\
+             \"idle_timeout_closes\":{},\"epoch_bumps\":{}}}",
+            responses.join(","),
+            snap.service.admission_sheds,
+            snap.service.idle_timeout_closes,
+            snap.service.epoch_bumps,
+        ));
+        // Prometheus-style exposition of the same snapshot, embedded as
+        // one escaped string so one op serves both surfaces
+        out.push_str(&format!(
+            ",\"exposition\":\"{}\"",
+            super::json::escape(&obs_registry::exposition(&snap, Some(&gauges)))
+        ));
+        out.push('}');
+        ok_rendered(req, out)
+    }
+
+    /// Live service gauges for the metrics exposition (the non-monotonic
+    /// complement of the registry's counters).
+    fn gauges(&self) -> obs_registry::ServiceGauges {
+        let s = self.cache.stats();
+        let (inflight, queued) = self.admission.snapshot();
+        obs_registry::ServiceGauges {
+            queries: self.queries.load(Ordering::Relaxed),
+            inflight: inflight as u64,
+            queued: queued as u64,
+            cache_hits: s.hits,
+            cache_misses: s.misses,
+            cache_coalesced: s.coalesced,
+            cache_fills: s.fills,
+            cache_rejected: s.rejected,
+            cache_evictions: s.evictions,
+            cache_invalidated: s.invalidated,
+            cache_bytes: self.cache.bytes() as u64,
+            cache_entries: self.cache.len() as u64,
+        }
     }
 }
 

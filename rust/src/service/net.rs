@@ -12,10 +12,19 @@
 //! A Unix-socket transport would be this same file with
 //! `UnixListener`; TCP on `127.0.0.1` was chosen because it also works
 //! in the CI smoke test without a filesystem rendezvous.
+//!
+//! **Idle read timeout** (PR 9): a resident process must not let an
+//! abandoned client pin a connection thread forever. With
+//! `SANDSLASH_IDLE_TIMEOUT_MS` set to a positive integer (unset = off,
+//! the seed behaviour), each connection's blocking read carries that
+//! timeout; a connection that stays silent past it is closed with the
+//! named reason `idle-timeout`, counted in the unified metrics
+//! registry ([`crate::obs::registry`]).
 
 use std::io::{self, BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
+use std::time::Duration;
 
 use super::core::Service;
 
@@ -69,14 +78,50 @@ impl Server {
     }
 }
 
+/// The idle read timeout from `SANDSLASH_IDLE_TIMEOUT_MS` (loud-reject
+/// parse via the shared helper; unset = no timeout), resolved once per
+/// process.
+fn idle_timeout_ms() -> Option<u64> {
+    static CACHE: OnceLock<Option<u64>> = OnceLock::new();
+    *CACHE.get_or_init(|| {
+        crate::util::pool::positive_usize_env(
+            "SANDSLASH_IDLE_TIMEOUT_MS",
+            "no idle timeout (idle connections stay open)",
+        )
+        .map(|ms| ms as u64)
+    })
+}
+
 fn serve_connection(service: Arc<Service>, stream: TcpStream, addr: SocketAddr) {
+    let idle = idle_timeout_ms();
+    if let Some(ms) = idle {
+        // a failed setsockopt leaves the seed blocking behaviour, which
+        // is safe — the timeout is a hygiene bound, not a correctness one
+        let _ = stream.set_read_timeout(Some(Duration::from_millis(ms)));
+    }
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
         Err(_) => return,
     };
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let Ok(line) = line else { break };
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => break, // clean EOF
+            Ok(_) => {}
+            // both kinds, because platforms disagree on which one a
+            // read timeout surfaces as
+            Err(e) if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) => {
+                crate::obs::registry::note_idle_timeout_close();
+                eprintln!(
+                    "sandslash: closing connection (reason=idle-timeout, no request within {}ms)",
+                    idle.unwrap_or(0)
+                );
+                break;
+            }
+            Err(_) => break,
+        }
         if line.trim().is_empty() {
             continue;
         }

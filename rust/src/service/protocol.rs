@@ -25,6 +25,10 @@
 //! * `deadline_ms` / `max_tasks` set the per-query [`Budget`]
 //!   (`deadline_ms: 0` is accepted and trips at the first poll site —
 //!   useful for testing the partial-result path deterministically).
+//! * `trace` (default `false`) attaches a per-query
+//!   [`QueryTrace`](crate::obs::trace::QueryTrace) profile to the
+//!   response as a `"profile"` object (PR 9) — recording is purely
+//!   observational, so the counts are bit-identical either way.
 //! * Unknown fields are **rejected** (`unknown-field`), not ignored: a
 //!   typo'd budget knob silently ignored would be an unbounded query.
 //!
@@ -151,6 +155,8 @@ pub struct Request {
     pub priority: Priority,
     /// Bypass the result cache for this query.
     pub no_cache: bool,
+    /// Attach a per-query trace profile to the response (PR 9).
+    pub trace: bool,
     /// Target query id (`cancel`).
     pub target: Option<String>,
 }
@@ -169,6 +175,7 @@ impl Request {
             threads: None,
             priority: Priority::Normal,
             no_cache: false,
+            trace: false,
             target: None,
         }
     }
@@ -214,6 +221,9 @@ impl Request {
         }
         if self.no_cache {
             out.push_str(",\"no_cache\":true");
+        }
+        if self.trace {
+            out.push_str(",\"trace\":true");
         }
         if let Some(t) = &self.target {
             out.push_str(&format!(",\"target\":\"{}\"", json::escape(t)));
@@ -264,6 +274,7 @@ pub fn parse_request(line: &str) -> Result<Request, ProtoError> {
         threads: None,
         priority: Priority::Normal,
         no_cache: false,
+        trace: false,
         target: None,
     };
     for (key, val) in pairs {
@@ -326,6 +337,12 @@ pub fn parse_request(line: &str) -> Result<Request, ProtoError> {
                 Some(b) => req.no_cache = b,
                 None => {
                     return Err(ProtoError::usage("bad-field", "no_cache must be a boolean"))
+                }
+            },
+            "trace" => match val.as_bool() {
+                Some(b) => req.trace = b,
+                None => {
+                    return Err(ProtoError::usage("bad-field", "trace must be a boolean"))
                 }
             },
             "target" => match val.as_str() {
@@ -481,6 +498,10 @@ pub enum Body {
         code: i32,
         /// Graph epoch the result was computed against (queries only).
         epoch: Option<u64>,
+        /// Pre-rendered per-query trace profile (traced queries only,
+        /// PR 9) — rendered after `result` so untraced responses are
+        /// byte-identical to the pre-trace wire format.
+        profile: Option<String>,
     },
     /// A named failure.
     Err(ProtoError),
@@ -489,7 +510,22 @@ pub enum Body {
 impl Response {
     /// A successful response.
     pub fn ok(id: &str, result: Arc<String>, cached: bool, code: i32, epoch: Option<u64>) -> Self {
-        Self { id: id.to_string(), body: Body::Ok { result, cached, code, epoch } }
+        Self { id: id.to_string(), body: Body::Ok { result, cached, code, epoch, profile: None } }
+    }
+
+    /// A successful response carrying a rendered trace profile (PR 9).
+    pub fn ok_with_profile(
+        id: &str,
+        result: Arc<String>,
+        cached: bool,
+        code: i32,
+        epoch: Option<u64>,
+        profile: String,
+    ) -> Self {
+        Self {
+            id: id.to_string(),
+            body: Body::Ok { result, cached, code, epoch, profile: Some(profile) },
+        }
     }
 
     /// A named-error response.
@@ -508,13 +544,17 @@ impl Response {
     /// Render as one protocol line (no trailing newline).
     pub fn render(&self) -> String {
         match &self.body {
-            Body::Ok { result, cached, code, epoch } => {
+            Body::Ok { result, cached, code, epoch, profile } => {
                 let epoch_part = match epoch {
                     Some(e) => format!(",\"epoch\":{e}"),
                     None => String::new(),
                 };
+                let profile_part = match profile {
+                    Some(p) => format!(",\"profile\":{p}"),
+                    None => String::new(),
+                };
                 format!(
-                    "{{\"id\":\"{}\",\"ok\":true,\"code\":{code},\"cached\":{cached}{epoch_part},\"result\":{result}}}",
+                    "{{\"id\":\"{}\",\"ok\":true,\"code\":{code},\"cached\":{cached}{epoch_part},\"result\":{result}{profile_part}}}",
                     json::escape(&self.id),
                 )
             }

@@ -49,7 +49,13 @@
 //! shared [`pr7_compare`] protocol) measures the resident service
 //! ([`crate::service`]): one query submitted cold (admission +
 //! governed run + cache fill) and again cached (byte replay), counts
-//! asserted equal across the cache boundary.
+//! asserted equal across the cache boundary. The PR-9 section
+//! (`pr9-obs`, via [`Pr9Section::write`] and the shared
+//! [`pr9_compare`] protocol) prices the *observability layer*: the
+//! same workload run untraced (the default, pay-nothing path) and
+//! again under an installed [`crate::obs::trace::QueryTrace`], counts
+//! asserted bit-identical — the recorded ratio is the whole cost of
+//! the tracing hooks when a trace is live.
 //!
 //! Writers must assert their differential check (scalar count ==
 //! set-centric count, scalar-kernel count == SIMD-kernel count)
@@ -299,8 +305,9 @@ pub fn pr1_meta(threads: usize) -> Json {
              pr3-* sections compare the scalar vs SIMD kernel dispatch, pr4-sched-* the \
              cursor vs work-stealing scheduler, pr5-* the scalar extension oracles vs \
              the shared extension core, pr6-governance the governed vs \
-             governance-disabled run with budgets unset, and pr7-service the resident \
-             service's cold vs cached query latency, each from the same run",
+             governance-disabled run with budgets unset, pr7-service the resident \
+             service's cold vs cached query latency, and pr9-obs the untraced vs \
+             traced run of the same workload, each from the same run",
         )
 }
 
@@ -815,6 +822,92 @@ impl Pr7Section<'_> {
             .num("cold_secs", self.cold_secs)
             .num("cached_secs", self.cached_secs)
             .num("speedup_cold_over_cached", self.speedup())
+            .int("samples", self.samples as u64);
+        upsert_bench_section(&pr1_report_path(), &pr1_meta(threads), section, &body)
+    }
+}
+
+/// One measured untraced-vs-traced comparison (EXPERIMENTS.md §PR-9),
+/// as recorded in the `pr9-obs` report section: the same mining
+/// workload run with no [`crate::obs::trace::QueryTrace`] installed
+/// (the default — every hook is a branch on an empty thread-local) and
+/// again under [`crate::obs::trace::with_trace`], from the same
+/// process, so the rows differ only in whether the trace accumulators
+/// execute. Shared by the benches and the tier-1 smoke test so the
+/// JSON schema cannot drift between writers.
+pub struct Pr9Section<'a> {
+    /// Input description (generator + parameters).
+    pub graph: &'a str,
+    /// Pattern name.
+    pub pattern: &'a str,
+    /// Agreed embedding count (differential check across the toggle).
+    pub count: u64,
+    /// Wall time with no trace installed (seconds).
+    pub untraced_secs: f64,
+    /// Wall time under an installed trace (seconds).
+    pub traced_secs: f64,
+    /// Number of timing samples behind the figures.
+    pub samples: usize,
+}
+
+/// Run the §PR-9 untraced-vs-traced measurement protocol once and
+/// return the section row — the single implementation shared by the
+/// tier-1 smoke test and the benches, completing the sequence of
+/// [`pr3_compare`] (kernels), [`pr4_compare`] (scheduler),
+/// [`pr5_compare`] (extension core), [`pr6_compare`] (governance),
+/// and [`pr7_compare`] (service cache):
+///
+/// 1. call `run` (which must execute the workload and return the
+///    embedding count and the wall seconds to record) with no trace
+///    installed, then again under [`crate::obs::trace::with_trace`]
+///    with a fresh [`crate::obs::trace::QueryTrace`];
+/// 2. assert both runs agree on the count (the bit-identical contract
+///    of EXPERIMENTS.md §PR-9 — tracing observes, never steers);
+/// 3. assert the trace actually recorded work (per-level spans or
+///    kernel dispatches), so a hook-threading regression cannot
+///    silently turn the traced row into a second untraced row.
+///
+/// The workload must therefore route through the traced extension
+/// paths (any DFS pattern qualifies). The recorded
+/// `traced_secs / untraced_secs` ratio is the entire cost of a live
+/// trace, expected ≈ 1.
+pub fn pr9_compare<'a>(
+    graph: &'a str,
+    pattern: &'a str,
+    samples: usize,
+    mut run: impl FnMut() -> (u64, f64),
+) -> Pr9Section<'a> {
+    use crate::obs::trace::{self, QueryTrace};
+    let (untraced_count, untraced_secs) = run();
+    let tr = std::sync::Arc::new(QueryTrace::new());
+    let (traced_count, traced_secs) = trace::with_trace(tr.clone(), &mut run);
+    assert_eq!(
+        untraced_count, traced_count,
+        "traced vs untraced runs disagree on {graph} / {pattern}"
+    );
+    assert!(
+        tr.level_calls_total() + tr.dispatch_total() > 0,
+        "trace installed but no extension hook fired on {graph} / {pattern}"
+    );
+    Pr9Section { graph, pattern, count: traced_count, untraced_secs, traced_secs, samples }
+}
+
+impl Pr9Section<'_> {
+    /// Traced-over-untraced overhead ratio (≈ 1 means the hooks are
+    /// free when idle and cheap when live).
+    pub fn overhead(&self) -> f64 {
+        self.traced_secs / self.untraced_secs
+    }
+
+    /// Upsert this section into the shared report at the repo root.
+    pub fn write(&self, section: &str, threads: usize) -> std::io::Result<()> {
+        let body = Json::new()
+            .str("graph", self.graph)
+            .str("pattern", self.pattern)
+            .int("count", self.count)
+            .num("untraced_secs", self.untraced_secs)
+            .num("traced_secs", self.traced_secs)
+            .num("overhead_traced_over_untraced", self.overhead())
             .int("samples", self.samples as u64);
         upsert_bench_section(&pr1_report_path(), &pr1_meta(threads), section, &body)
     }

@@ -105,9 +105,13 @@ pub fn point(stage: Stage) {
 
 /// Slow path of [`point`]: count the crossing and fire if it is the
 /// planned one. The plan is copied out before any panic so the
-/// `PLAN` mutex is never poisoned by the injection itself.
+/// `PLAN` mutex is never poisoned by the injection itself. Every
+/// armed crossing is also recorded in the flight recorder (and as the
+/// thread's last-seen stage), which is how a post-panic dump names
+/// the faulted stage (PR 9).
 #[cold]
 fn crossed(stage: Stage) {
+    crate::obs::flight::note_stage(stage);
     let plan = {
         let slot = PLAN.lock().unwrap_or_else(|e| e.into_inner());
         match *slot {

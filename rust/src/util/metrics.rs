@@ -104,7 +104,30 @@ pub mod dispatch {
 
     /// Whether dispatch counting is currently on.
     pub fn enabled() -> bool {
+        env_enable();
         ENABLED.load(Ordering::Relaxed)
+    }
+
+    /// Resolve `SANDSLASH_DISPATCH_STATS` once per process (PR 9):
+    /// any usable positive value switches counting on at first use, so
+    /// campaign runs and the resident service can export dispatch
+    /// selections without a programmatic [`set_enabled`] call. Same
+    /// loud-reject parse contract as every `SANDSLASH_*` knob;
+    /// [`set_enabled`] still overrides either way afterwards.
+    #[inline]
+    fn env_enable() {
+        use std::sync::OnceLock;
+        static INIT: OnceLock<()> = OnceLock::new();
+        INIT.get_or_init(|| {
+            if crate::util::pool::positive_usize_env(
+                "SANDSLASH_DISPATCH_STATS",
+                "dispatch counters off until enabled programmatically",
+            )
+            .is_some()
+            {
+                ENABLED.store(true, Ordering::Relaxed);
+            }
+        });
     }
 
     /// A counter alone on its cache line (no false sharing between the
@@ -225,47 +248,59 @@ pub mod dispatch {
         }
     }
 
+    // Each note_* also feeds the per-query trace histogram (PR 9).
+    // The trace hook sits *outside* the `enabled()` gate — a traced
+    // tenant gets its per-family histogram without flipping the
+    // process-global counters on for everyone — and is itself one
+    // thread-local flag check when no trace is installed.
     #[inline]
     pub(crate) fn note_merge() {
         if enabled() {
             note_family(&MERGE, FAM_MERGE);
         }
+        crate::obs::trace::on_dispatch(FAM_MERGE);
     }
     #[inline]
     pub(crate) fn note_gallop() {
         if enabled() {
             note_family(&GALLOP, FAM_GALLOP);
         }
+        crate::obs::trace::on_dispatch(FAM_GALLOP);
     }
     #[inline]
     pub(crate) fn note_simd_merge() {
         if enabled() {
             note_family(&SIMD_MERGE, FAM_SIMD_MERGE);
         }
+        crate::obs::trace::on_dispatch(FAM_SIMD_MERGE);
     }
     #[inline]
     pub(crate) fn note_word_parallel() {
         if enabled() {
             note_family(&WORD_PARALLEL, FAM_WORD_PARALLEL);
         }
+        crate::obs::trace::on_dispatch(FAM_WORD_PARALLEL);
     }
     #[inline]
     pub(crate) fn note_mask_filter() {
         if enabled() {
             note_family(&MASK_FILTER, FAM_MASK_FILTER);
         }
+        crate::obs::trace::on_dispatch(FAM_MASK_FILTER);
     }
     #[inline]
     pub(crate) fn note_gather_filter() {
         if enabled() {
             note_family(&GATHER_FILTER, FAM_GATHER_FILTER);
         }
+        crate::obs::trace::on_dispatch(FAM_GATHER_FILTER);
     }
     #[inline]
     pub(crate) fn note_difference() {
         if enabled() {
             note_family(&DIFFERENCE, FAM_DIFFERENCE);
         }
+        crate::obs::trace::on_dispatch(FAM_DIFFERENCE);
     }
 }
 

@@ -11,7 +11,8 @@
 //! two-hub input) that steals/splits actually fire, (d) runs the ESU
 //! k-MC and FSM workloads on their seed scalar extension oracles and
 //! on the shared extension core (`pr5-*` sections, counts asserted
-//! equal), and (e) rewrites
+//! equal), (e) re-runs the TC workload untraced and under a per-query
+//! trace (`pr9-obs`, counts asserted bit-identical), and (f) rewrites
 //! `BENCH_pr1.json` at the repo root with single-shot wall times. The
 //! `table5_tc` / `table6_kcl` benches overwrite the same sections with
 //! properly sampled release numbers — this test just keeps the
@@ -26,7 +27,7 @@ use sandslash::graph::CsrGraph;
 use sandslash::pattern::{library, plan, Pattern};
 use sandslash::util::bench::{
     pr1_report_path, pr3_compare, pr4_compare, pr5_compare, pr6_compare, pr7_compare,
-    Pr1Section,
+    pr9_compare, Pr1Section,
 };
 use sandslash::util::timer::timed;
 
@@ -240,6 +241,26 @@ fn measure_pr7() -> Option<f64> {
     Some(s.speedup())
 }
 
+/// PR-9 row (§PR-9) through the shared protocol (`bench::pr9_compare`):
+/// the same TC workload untraced (the default pay-nothing path) and
+/// under an installed per-query trace — counts asserted bit-identical
+/// and the trace asserted non-empty inside the protocol. The recorded
+/// ratio is the whole cost of a live trace (expected ≈ 1).
+fn measure_pr9(g: &CsrGraph, graph_desc: &str) -> f64 {
+    let pl = plan(&library::triangle(), true, true);
+    let cfg = MinerConfig::new(OptFlags::hi());
+    let s = pr9_compare(graph_desc, "triangle", 1, || {
+        // warmup + count (tracing observes only, so runs always agree)
+        let (count, _) = dfs::count(g, &pl, &cfg, &NoHooks).unwrap().into_parts();
+        let (_, secs) = timed(|| dfs::count(g, &pl, &cfg, &NoHooks).unwrap().value);
+        (count, secs)
+    });
+    if let Err(e) = s.write("pr9-obs", cfg.threads) {
+        eprintln!("skipping BENCH_pr1.json write: {e}");
+    }
+    s.overhead()
+}
+
 #[test]
 fn bench_pr1_smoke_regenerates_report() {
     let g_tc = gen::rmat(14, 8, 42, &[]);
@@ -304,13 +325,16 @@ fn bench_pr1_smoke_regenerates_report() {
         Some(x) => format!("cold over cached — tc {x:.2}x"),
         None => "service skipped (ungoverned)".to_string(),
     };
+    // PR-9: untraced vs traced run of the same workload (hook cost)
+    let trace_overhead = measure_pr9(&g_tc, "rmat scale=14 ef=8 seed=42");
     eprintln!(
         "BENCH_pr1 smoke: set-centric speedup over scalar — tc {tc_speedup:.2}x, \
          4-clique {cl_speedup:.2}x; {} kernels over scalar kernels — tc {tc_simd:.2}x, \
          4-clique {cl_simd:.2}x; stealing over cursor — tc {tc_sched:.2}x, \
          4-clique {cl_sched:.2}x; extension core over scalar oracles — \
          4-MC {kmc_core:.2}x, FSM {fsm_core:.2}x; governance-on over off — \
-         tc {gov_overhead:.2}x; resident service {service_note} ({})",
+         tc {gov_overhead:.2}x; resident service {service_note}; traced over \
+         untraced — tc {trace_overhead:.2}x ({})",
         setops::simd_level_name(),
         pr1_report_path().display()
     );

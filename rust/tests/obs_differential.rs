@@ -1,0 +1,199 @@
+//! PR-9 observability oracle: tracing observes, never steers.
+//!
+//! The contract of [`sandslash::obs`] is that every hook is passive —
+//! a query traced via [`sandslash::obs::trace::with_trace`] must
+//! produce results bit-identical to the same query untraced, on every
+//! engine (DFS, ESU, BFS, FSM). This file is the differential oracle
+//! for that contract, plus the post-mortem half of the layer: an
+//! injected worker panic must leave a flight-recorder trail
+//! ([`sandslash::obs::flight`]) that names the faulted stage.
+//!
+//! The tests serialize on one mutex: fault injection and the flight
+//! rings are process-global, and the bit-identity runs compare counts
+//! across calls that must not interleave with a planned fault.
+
+use std::sync::Arc;
+
+use sandslash::engine::bfs::bfs_count_motifs;
+use sandslash::engine::budget;
+use sandslash::engine::esu::{count_motifs, MotifTable};
+use sandslash::engine::fsm::mine_fsm;
+use sandslash::engine::hooks::NoHooks;
+use sandslash::engine::{dfs, MineError, MinerConfig, OptFlags};
+use sandslash::graph::gen;
+use sandslash::obs::flight;
+use sandslash::obs::trace::{self, QueryTrace};
+use sandslash::pattern::{library, plan};
+use sandslash::util::fault::{self, FaultAction, FaultPlan, Stage};
+
+/// Serializes the tests in this binary (module docs). A panicking test
+/// poisons the lock; later tests recover the guard and proceed.
+static SERIAL: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn serial() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn tri_plan() -> sandslash::pattern::MatchingPlan {
+    plan(&library::triangle(), true, true)
+}
+
+/// The tentpole acceptance check: all four engines, traced vs
+/// untraced, counts bit-identical — and the traces must actually have
+/// recorded work, so a hook-threading regression cannot pass as a
+/// no-op trace.
+#[test]
+fn traced_counts_bit_identical_on_every_engine() {
+    let _guard = serial();
+    let g = gen::rmat(9, 8, 5, &[]);
+    let lg = gen::erdos_renyi(60, 0.12, 9, &[1, 2, 3]);
+    let cfg = MinerConfig::custom(2, 8, OptFlags::hi());
+    let pl = tri_plan();
+    let t3 = MotifTable::new(3);
+    let fp = |r: &[sandslash::engine::fsm::FrequentPattern]| {
+        r.iter().map(|f| (f.code.clone(), f.support)).collect::<Vec<_>>()
+    };
+
+    let want_dfs = dfs::count(&g, &pl, &cfg, &NoHooks).unwrap().value;
+    let want_esu = count_motifs(&g, 3, &cfg, &NoHooks, &t3).unwrap().value;
+    let want_bfs = bfs_count_motifs(&g, 3, &cfg, &t3).unwrap().value.counts;
+    let want_fsm = mine_fsm(&lg, 3, 1, &cfg).unwrap().value;
+    assert!(want_dfs > 0, "degenerate input");
+
+    let tr_dfs = Arc::new(QueryTrace::new());
+    let got_dfs = trace::with_trace(tr_dfs.clone(), || {
+        dfs::count(&g, &pl, &cfg, &NoHooks).unwrap().value
+    });
+    assert_eq!(got_dfs, want_dfs, "tracing changed the DFS count");
+    assert!(
+        tr_dfs.level_calls_total() > 0,
+        "a traced DFS run must record per-level extension calls"
+    );
+    assert!(
+        tr_dfs.dispatch_total() > 0,
+        "a traced set-centric run must record kernel dispatches"
+    );
+
+    let tr_esu = Arc::new(QueryTrace::new());
+    let got_esu = trace::with_trace(tr_esu.clone(), || {
+        count_motifs(&g, 3, &cfg, &NoHooks, &t3).unwrap().value
+    });
+    assert_eq!(got_esu, want_esu, "tracing changed the ESU motif counts");
+
+    let tr_bfs = Arc::new(QueryTrace::new());
+    let got_bfs = trace::with_trace(tr_bfs.clone(), || {
+        bfs_count_motifs(&g, 3, &cfg, &t3).unwrap().value.counts
+    });
+    assert_eq!(got_bfs, want_bfs, "tracing changed the BFS motif counts");
+
+    let tr_fsm = Arc::new(QueryTrace::new());
+    let got_fsm = trace::with_trace(tr_fsm.clone(), || {
+        mine_fsm(&lg, 3, 1, &cfg).unwrap().value
+    });
+    assert_eq!(fp(&got_fsm), fp(&want_fsm), "tracing changed the FSM result");
+
+    // governed runs charge the budget ledger through the trace too
+    if budget::governance_enabled() {
+        assert!(
+            tr_dfs.budget_charges() > 0,
+            "a governed traced run must record budget charges"
+        );
+    }
+}
+
+/// The scoped-install contract ([`trace::with_trace`] mirrors
+/// `budget::with_cancel`): the trace is visible inside the closure,
+/// restored on exit, and its rendered profile is well-formed one-line
+/// JSON carrying every section of the schema in EXPERIMENTS.md §PR-9.
+#[test]
+fn trace_scope_restores_and_render_is_well_formed() {
+    let _guard = serial();
+    assert!(trace::current().is_none(), "no trace may leak into this test");
+    let g = gen::rmat(8, 6, 7, &[]);
+    let pl = tri_plan();
+    let cfg = MinerConfig::custom(2, 8, OptFlags::hi());
+    let tr = Arc::new(QueryTrace::new());
+    trace::with_trace(tr.clone(), || {
+        let inside = trace::current().expect("trace must be installed in scope");
+        assert!(Arc::ptr_eq(&inside, &tr), "current() must return the installed trace");
+        dfs::count(&g, &pl, &cfg, &NoHooks).unwrap();
+    });
+    assert!(trace::current().is_none(), "with_trace must restore the empty state");
+
+    let profile = tr.render();
+    assert!(!profile.contains('\n'), "profile must be one line: {profile}");
+    assert!(profile.starts_with('{') && profile.ends_with('}'), "{profile}");
+    for section in [
+        "\"levels\":[",
+        "\"dispatch\":{\"merge\":",
+        "\"sched\":{\"claims\":",
+        "\"modes\":{\"lg_roots\":",
+        "\"budget\":{\"charges\":",
+        "\"cache\":",
+        "\"admission\":",
+    ] {
+        assert!(profile.contains(section), "profile missing {section}: {profile}");
+    }
+    // an untripped run renders a null trip, and a level entry recorded
+    // real wall time for the levels the DFS actually visited
+    assert!(profile.contains("\"trip\":null"), "{profile}");
+    assert!(profile.contains("\"level\":"), "{profile}");
+}
+
+/// A fresh trace renders the empty profile — every counter zero, no
+/// levels, verdicts null — so a cache-hit response's profile is
+/// honest about having run no engine work.
+#[test]
+fn empty_trace_renders_empty_profile() {
+    let tr = QueryTrace::new();
+    let profile = tr.render();
+    assert!(profile.contains("\"levels\":[]"), "{profile}");
+    assert!(profile.contains("\"cache\":null"), "{profile}");
+    assert!(profile.contains("\"admission\":null"), "{profile}");
+    assert_eq!(tr.dispatch_total(), 0);
+    assert_eq!(tr.level_calls_total(), 0);
+}
+
+/// The post-mortem acceptance check: an injected worker panic is
+/// contained as [`MineError::WorkerPanicked`] and the flight recorder
+/// holds a trail that names the faulted stage — both the last stage
+/// crossing and the panic event stamped with it.
+#[test]
+fn injected_worker_panic_leaves_a_flight_trail_naming_the_stage() {
+    let _guard = serial();
+    if !budget::governance_enabled() {
+        eprintln!("skipping flight-trail check: panic isolation needs governance on");
+        return;
+    }
+    let g = gen::rmat(9, 8, 5, &[]);
+    let pl = tri_plan();
+    fault::install(FaultPlan {
+        action: FaultAction::Panic,
+        at_task: 0,
+        stage: Some(Stage::RootClaim),
+    });
+    let res = dfs::count(&g, &pl, &MinerConfig::custom(2, 8, OptFlags::hi()), &NoHooks);
+    fault::clear();
+    match res {
+        Err(MineError::WorkerPanicked { engine, payload }) => {
+            assert_eq!(engine, "dfs");
+            assert!(payload.contains("injected fault"), "payload {payload:?}");
+        }
+        other => panic!("expected WorkerPanicked, got {other:?}"),
+    }
+    // the same text the panic already dumped to stderr, re-rendered
+    // for inspection (dumping never drains the rings)
+    let text = flight::render("test-inspection");
+    assert!(
+        text.contains("\"event\":\"stage\",\"stage\":\"root-claim\""),
+        "flight trail must show the root-claim crossing:\n{text}"
+    );
+    assert!(
+        text.contains("\"event\":\"panic\",\"stage\":\"root-claim\""),
+        "flight trail must stamp the panic with the faulted stage:\n{text}"
+    );
+    assert!(
+        text.contains("\"event\":\"query-start\""),
+        "flight trail must show the governed run opening:\n{text}"
+    );
+}

@@ -29,12 +29,15 @@ use sandslash::engine::budget::{self, Budget};
 use sandslash::engine::hooks::NoHooks;
 use sandslash::engine::{dfs, CancelToken, MinerConfig, OptFlags};
 use sandslash::graph::CsrGraph;
+use sandslash::obs::registry;
 use sandslash::pattern::{plan, Pattern};
+use sandslash::service::json;
 use sandslash::service::{
     count_result, resolve_pattern, Body, Op, PatternSpec, Priority, Request, Response, Service,
     ServiceConfig, CODE_OVERLOADED,
 };
 use sandslash::util::fault::{self, FaultAction, FaultPlan, Stage};
+use sandslash::util::metrics::{dispatch, sched as sched_counters};
 use sandslash::util::pool;
 use sandslash::util::rng::Rng;
 
@@ -92,7 +95,7 @@ fn query(id: &str, name: &str) -> Request {
 /// Unpack a successful body; panics (with the error) on a named failure.
 fn ok_body(resp: &Response) -> (Arc<String>, bool, i32, Option<u64>) {
     match &resp.body {
-        Body::Ok { result, cached, code, epoch } => (result.clone(), *cached, *code, *epoch),
+        Body::Ok { result, cached, code, epoch, .. } => (result.clone(), *cached, *code, *epoch),
         Body::Err(e) => panic!("query {} failed: {} ({})", resp.id, e.name, e.detail),
     }
 }
@@ -426,6 +429,109 @@ fn scoped_thread_locals_do_not_leak() {
     let (result, _, code, _) = ok_body(&svc.handle(&query("after", "triangle")));
     assert_eq!(code, 0);
     assert_eq!(*result, one_shot(&g, "triangle", false));
+}
+
+/// PR 9: a traced tenant's profile reconciles with the unified
+/// registry's counter deltas (the same events, two vantage points),
+/// and tracing one tenant never perturbs its neighbors' answers.
+#[test]
+fn traced_profile_reconciles_with_registry_and_leaves_neighbors_alone() {
+    if !budget::governance_enabled() {
+        return;
+    }
+    let _guard = serial();
+    let svc = test_service();
+    let g = datasets::load(GRAPH).unwrap();
+
+    // Phase 1 (quiescent): one traced query, with dispatch counting on,
+    // so the per-query histogram must equal the process-global deltas —
+    // the two observers watch the same note_* call sites.
+    let was = dispatch::enabled();
+    dispatch::set_enabled(true);
+    let d0 = dispatch::snapshot();
+    let s0 = sched_counters::snapshot();
+    let r0 = registry::snapshot();
+    let mut req = query("traced", "triangle");
+    req.trace = true;
+    req.no_cache = true;
+    let resp = svc.handle(&req);
+    let d1 = dispatch::snapshot();
+    let s1 = sched_counters::snapshot();
+    let r1 = registry::snapshot();
+    dispatch::set_enabled(was);
+
+    let (result, cached, code, _) = ok_body(&resp);
+    assert_eq!(code, 0);
+    assert!(!cached, "no_cache keeps the traced run on the engine path");
+    assert_eq!(*result, one_shot(&g, "triangle", false), "tracing must not change the answer");
+
+    let line = resp.render();
+    let v = json::parse(&line).expect("traced response parses");
+    let profile = v.get("profile").expect("profile attached");
+    let section = |sec: &str, key: &str| {
+        profile
+            .get(sec)
+            .and_then(|s| s.get(key))
+            .and_then(|n| n.as_u64())
+            .unwrap_or_else(|| panic!("profile missing {sec}.{key}: {line}"))
+    };
+    for (key, delta) in [
+        ("merge", d1.merge - d0.merge),
+        ("gallop", d1.gallop - d0.gallop),
+        ("simd_merge", d1.simd_merge - d0.simd_merge),
+        ("word_parallel", d1.word_parallel - d0.word_parallel),
+        ("mask_filter", d1.mask_filter - d0.mask_filter),
+        ("gather_filter", d1.gather_filter - d0.gather_filter),
+        ("difference", d1.difference - d0.difference),
+    ] {
+        assert_eq!(section("dispatch", key), delta, "dispatch.{key} diverged from the registry");
+    }
+    for (key, delta) in [
+        ("claims", s1.claims - s0.claims),
+        ("steals", s1.steals - s0.steals),
+        ("shard_claims", s1.shard_claims - s0.shard_claims),
+        ("splits", s1.splits - s0.splits),
+    ] {
+        assert_eq!(section("sched", key), delta, "sched.{key} diverged from the registry");
+    }
+    // the response itself landed in the unified service counters
+    assert_eq!(r1.service.responses_total(), r0.service.responses_total() + 1);
+    assert_eq!(r1.service.responses[0], r0.service.responses[0] + 1);
+
+    // Phase 2 (concurrent): a traced tenant among untraced neighbors —
+    // every neighbor still answers bit-identically to its one-shot.
+    let traced = {
+        let svc = Arc::clone(&svc);
+        std::thread::spawn(move || {
+            let mut req = query("traced-2", "4clique");
+            req.trace = true;
+            req.no_cache = true;
+            svc.handle(&req)
+        })
+    };
+    let names = ["wedge", "4path", "4star", "4cycle"];
+    let neighbors: Vec<_> = names
+        .iter()
+        .map(|&name| {
+            let svc = Arc::clone(&svc);
+            std::thread::spawn(move || (name, svc.handle(&query(&format!("nb-{name}"), name))))
+        })
+        .collect();
+    for h in neighbors {
+        let (name, resp) = h.join().unwrap();
+        let (result, _, code, _) = ok_body(&resp);
+        assert_eq!(code, 0, "neighbor {name}");
+        assert_eq!(*result, one_shot(&g, name, false), "tracing a tenant perturbed {name}");
+        assert!(
+            !resp.render().contains("\"profile\":"),
+            "an untraced neighbor must not carry a profile"
+        );
+    }
+    let resp = traced.join().unwrap();
+    let (result, _, code, _) = ok_body(&resp);
+    assert_eq!(code, 0);
+    assert_eq!(*result, one_shot(&g, "4clique", false));
+    assert!(resp.render().contains("\"profile\":{"), "the traced tenant keeps its profile");
 }
 
 #[test]

@@ -18,6 +18,7 @@ use std::time::Duration;
 use sandslash::engine::bfs::BfsCapExceeded;
 use sandslash::engine::budget::{self, Budget};
 use sandslash::engine::{CancelReason, MineError};
+use sandslash::service::json;
 use sandslash::service::protocol::{mine_error_code, mine_error_name, trip_name};
 use sandslash::service::{
     count_result, parse_request, resolve_pattern, response_code, Body, Op, PatternSpec, Priority,
@@ -49,6 +50,7 @@ fn requests_round_trip_through_render_and_parse() {
     loaded.threads = Some(4);
     loaded.priority = Priority::High;
     loaded.no_cache = true;
+    loaded.trace = true;
     battery.push(loaded);
     let mut cancel = Request::bare("c1", Op::Cancel);
     cancel.target = Some("q3".into());
@@ -95,6 +97,8 @@ fn malformed_lines_are_rejected_with_stable_names() {
         ("{\"id\":\"x\",\"threads\":257}".into(), "bad-field"),
         ("{\"id\":\"x\",\"priority\":\"urgent\"}".into(), "bad-field"),
         ("{\"id\":\"x\",\"no_cache\":1}".into(), "bad-field"),
+        ("{\"id\":\"x\",\"trace\":\"yes\"}".into(), "bad-field"),
+        ("{\"id\":\"x\",\"trace\":1}".into(), "bad-field"),
         ("{\"id\":\"x\",\"target\":\"\"}".into(), "bad-field"),
         ("{\"id\":\"x\",\"edges\":\"zigzag\"}".into(), "bad-edges"),
         ("{\"id\":\"x\",\"edges\":[[0]]}".into(), "bad-edges"),
@@ -175,6 +179,25 @@ fn responses_render_golden_lines() {
          \"result\":{\"count\":41,\"complete\":false,\"tripped\":\"deadline\"}}"
     );
     assert_eq!(response_code(&line), Some(5));
+
+    // a traced response carries the profile strictly after `result`,
+    // so the untraced wire shapes above stay byte-identical to PR 7
+    let traced = Response::ok_with_profile(
+        "q9",
+        Arc::new(count_result(7, None)),
+        false,
+        0,
+        Some(1),
+        "{\"levels\":[]}".to_string(),
+    );
+    let line = traced.render();
+    assert_eq!(
+        line,
+        "{\"id\":\"q9\",\"ok\":true,\"code\":0,\"cached\":false,\"epoch\":1,\
+         \"result\":{\"count\":7,\"complete\":true,\"tripped\":null},\
+         \"profile\":{\"levels\":[]}}"
+    );
+    assert_eq!(response_code(&line), Some(0));
 
     // named errors
     let err = Response::error("z", sandslash::service::ProtoError::usage("unknown-op", "boom"));
@@ -345,4 +368,117 @@ fn handle_line_round_trips_the_wire_shapes() {
     let stats = svc.handle_line("{\"id\":\"s\",\"op\":\"stats\"}");
     assert!(stats.contains("\"queries\":1"), "one engine query ran: {stats}");
     assert!(stats.contains("\"entries\":1"), "its fill is resident: {stats}");
+}
+
+/// PR 9: the `stats` op carries every counter family of the unified
+/// registry — dispatch, sched, gov, and the service counters — plus
+/// the embedded Prometheus text exposition.
+#[test]
+fn stats_op_exposes_every_counter_family_and_the_exposition() {
+    if !budget::governance_enabled() {
+        return;
+    }
+    let _guard = serial();
+    let svc = test_service();
+    let answered = svc.handle_line("{\"id\":\"q\",\"graph\":\"er-small\",\"pattern\":\"triangle\"}");
+    assert!(answered.contains("\"ok\":true"), "{answered}");
+
+    let stats = svc.handle_line("{\"id\":\"s\",\"op\":\"stats\"}");
+    for section in [
+        "\"dispatch\":{\"merge\":",
+        "\"sched\":{\"claims\":",
+        "\"gov\":{\"deadline_trips\":",
+        "\"service\":{\"responses\":[",
+        "\"admission_sheds\":",
+        "\"idle_timeout_closes\":",
+        "\"epoch_bumps\":",
+        "\"exposition\":\"",
+    ] {
+        assert!(stats.contains(section), "stats missing {section}: {stats}");
+    }
+
+    // the exposition rides the wire escaped; parsed back out it is the
+    // Prometheus text format with every metric family present
+    let v = json::parse(&stats).expect("stats response parses");
+    let expo = v
+        .get("result")
+        .and_then(|r| r.get("exposition"))
+        .and_then(|e| e.as_str())
+        .expect("exposition string in the stats result")
+        .to_string();
+    for metric in [
+        "sandslash_dispatch_calls_total",
+        "sandslash_sched_events_total",
+        "sandslash_gov_trips_total",
+        "sandslash_gov_panics_caught_total",
+        "sandslash_gov_faults_injected_total",
+        "sandslash_service_responses_total",
+        "sandslash_admission_sheds_total",
+        "sandslash_service_idle_timeout_closes_total",
+        "sandslash_registry_epoch_bumps_total",
+        "sandslash_service_queries_total",
+        "sandslash_admission_inflight",
+        "sandslash_cache_events_total",
+        "sandslash_cache_bytes",
+        "sandslash_cache_entries",
+    ] {
+        assert!(expo.contains(metric), "exposition missing {metric}:\n{expo}");
+    }
+    for line in expo.lines() {
+        assert!(
+            line.starts_with('#') || line.starts_with("sandslash_") || line.is_empty(),
+            "non-exposition line {line:?}"
+        );
+    }
+}
+
+/// PR 9: `"trace":true` attaches a per-query profile object to the
+/// response; untraced responses never carry the key.
+#[test]
+fn traced_queries_attach_a_profile_and_untraced_ones_do_not() {
+    if !budget::governance_enabled() {
+        return;
+    }
+    let _guard = serial();
+    let svc = test_service();
+
+    let plain = svc.handle_line(
+        "{\"id\":\"u\",\"graph\":\"er-small\",\"pattern\":\"triangle\",\"no_cache\":true}",
+    );
+    assert!(plain.contains("\"ok\":true"), "{plain}");
+    assert!(!plain.contains("\"profile\":"), "untraced response grew a profile: {plain}");
+
+    let traced = svc.handle_line(
+        "{\"id\":\"t\",\"graph\":\"er-small\",\"pattern\":\"triangle\",\
+         \"no_cache\":true,\"trace\":true}",
+    );
+    assert!(traced.contains("\"ok\":true"), "{traced}");
+    assert!(traced.contains("\"profile\":{"), "{traced}");
+    let v = json::parse(&traced).expect("traced response parses");
+    let profile = v.get("profile").expect("profile object");
+    // no_cache forces the bypass verdict, and admission was timed
+    assert_eq!(profile.get("cache").and_then(|c| c.as_str()), Some("bypass"));
+    assert_eq!(
+        profile
+            .get("admission")
+            .and_then(|a| a.get("verdict"))
+            .and_then(|s| s.as_str()),
+        Some("admitted")
+    );
+    // the engine really ran under the trace: kernel dispatches landed
+    let dispatch = profile.get("dispatch").expect("dispatch section");
+    assert!(dispatch.get("merge").and_then(|n| n.as_u64()).is_some(), "{traced}");
+
+    // a cache hit is traced too, with the hit verdict and no engine work
+    let hit = svc.handle_line(
+        "{\"id\":\"h1\",\"graph\":\"er-small\",\"pattern\":\"triangle\"}",
+    );
+    assert!(hit.contains("\"ok\":true"), "{hit}");
+    let hit2 = svc.handle_line(
+        "{\"id\":\"h2\",\"graph\":\"er-small\",\"pattern\":\"triangle\",\"trace\":true}",
+    );
+    let v = json::parse(&hit2).expect("traced hit parses");
+    assert_eq!(v.get("cached").and_then(|c| c.as_bool()), Some(true), "{hit2}");
+    let profile = v.get("profile").expect("profile object on the hit");
+    assert_eq!(profile.get("cache").and_then(|c| c.as_str()), Some("hit"));
 }
