@@ -176,11 +176,17 @@ pub fn motifs(
     sys: System,
     cfg: &MinerConfig,
 ) -> Result<Outcome<Vec<u64>>, MineError> {
-    let cfg = MinerConfig { opts: sys.flags(), ..*cfg };
+    // preset flags, but the caller's planner opt-out survives: the CLI's
+    // `--no-plan` reaches the census through this override (PR 10)
+    let mut opts = sys.flags();
+    opts.plan = opts.plan && cfg.opts.plan;
+    let cfg = MinerConfig { opts, ..*cfg };
     match sys {
+        // planner-fronted wrappers (PR 10): algebraic census when the
+        // plan stage is active, the ESU oracle otherwise
         System::SandslashHi => match k {
-            3 => crate::apps::motif::motif3_hi(g, &cfg),
-            4 => crate::apps::motif::motif4_hi(g, &cfg),
+            3 => crate::apps::motif::motif3(g, &cfg),
+            4 => crate::apps::motif::motif4(g, &cfg),
             _ => panic!("k-MC supports k in 3..=4"),
         },
         System::SandslashLo => match k {

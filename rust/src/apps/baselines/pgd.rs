@@ -4,16 +4,25 @@
 //! baseline uses the same formula set as `motif4_lo` but enumerates its
 //! anchor patterns (4-cliques, 4-cycles) *without* symmetry breaking,
 //! dividing by the automorphism count afterwards.
+//!
+//! Since PR 10 the degree-term reductions come from the planner's
+//! shared formula leaves ([`decompose::vertex_comb_sum`] /
+//! [`decompose::edge_local_counts`] via
+//! [`crate::apps::motif::edge_raw_counts`]) — one implementation for
+//! the Lo path, this baseline, and the decomposition planner. The old
+//! hand-rolled `parallel_reduce` closed forms are kept below as
+//! unit-test references so a regression in the shared leaves cannot
+//! hide behind its own consumers.
 
 use crate::engine::budget::MineError;
 use crate::engine::dfs;
 use crate::engine::hooks::NoHooks;
 use crate::engine::MinerConfig;
 use crate::graph::CsrGraph;
+use crate::pattern::decompose;
 use crate::pattern::{library, plan};
 
 use crate::apps::motif::edge_raw_counts;
-use crate::util::pool::parallel_reduce;
 
 /// PGD-style 3-motif counts: [wedge, triangle]. Governed (PR 6): the
 /// anchor enumeration runs through the governed DFS engine.
@@ -22,17 +31,7 @@ pub fn pgd_motif3(g: &CsrGraph, cfg: &MinerConfig) -> Result<Vec<u64>, MineError
     let tri_plan = plan(&library::triangle(), true, false);
     let (t6, _) = dfs::count(g, &tri_plan, cfg, &NoHooks)?.into_parts();
     let t = t6 / 6;
-    let paths2: u64 = parallel_reduce(
-        g.num_vertices(),
-        cfg.threads,
-        cfg.chunk,
-        || 0u64,
-        |acc, v| {
-            let d = g.degree(v as u32) as u64;
-            *acc += d.saturating_sub(1) * d / 2;
-        },
-        |a, b| a + b,
-    );
+    let paths2 = decompose::vertex_comb_sum(g, cfg, 2);
     Ok(vec![paths2 - 3 * t, t])
 }
 
@@ -47,19 +46,7 @@ pub fn pgd_motif4(g: &CsrGraph, cfg: &MinerConfig) -> Result<Vec<u64>, MineError
     let (cy_raw, _) = dfs::count(g, &cyc_plan, cfg, &NoHooks)?.into_parts();
     let cy = cy_raw / 8;
     let (raw_d, raw_tt, raw_p4) = edge_raw_counts(g, cfg);
-    let raw_s3: u64 = parallel_reduce(
-        g.num_vertices(),
-        cfg.threads,
-        cfg.chunk,
-        || 0u64,
-        |acc, v| {
-            let d = g.degree(v as u32) as u64;
-            if d >= 3 {
-                *acc += d * (d - 1) * (d - 2) / 6;
-            }
-        },
-        |a, b| a + b,
-    );
+    let raw_s3 = decompose::vertex_comb_sum(g, cfg, 3);
     let d = raw_d - 6 * c4;
     let tt = (raw_tt - 4 * d) / 2;
     let p4 = raw_p4 - 4 * cy;
@@ -73,9 +60,66 @@ mod tests {
     use crate::apps::motif::{motif3_lo, motif4_lo};
     use crate::engine::OptFlags;
     use crate::graph::gen;
+    use crate::util::pool::parallel_reduce;
 
     fn cfg() -> MinerConfig {
         MinerConfig::custom(2, 16, OptFlags::hi())
+    }
+
+    /// The pre-PR-10 hand-rolled wedge reduction, kept verbatim as a
+    /// reference oracle for the shared `vertex_comb_sum(_, _, 2)` leaf.
+    fn reference_paths2(g: &CsrGraph, cfg: &MinerConfig) -> u64 {
+        parallel_reduce(
+            g.num_vertices(),
+            cfg.threads,
+            cfg.chunk,
+            || 0u64,
+            |acc, v| {
+                let d = g.degree(v as u32) as u64;
+                *acc += d.saturating_sub(1) * d / 2;
+            },
+            |a, b| a + b,
+        )
+    }
+
+    /// The pre-PR-10 hand-rolled 3-star reduction, kept verbatim as a
+    /// reference oracle for `vertex_comb_sum(_, _, 3)`.
+    fn reference_raw_s3(g: &CsrGraph, cfg: &MinerConfig) -> u64 {
+        parallel_reduce(
+            g.num_vertices(),
+            cfg.threads,
+            cfg.chunk,
+            || 0u64,
+            |acc, v| {
+                let d = g.degree(v as u32) as u64;
+                if d >= 3 {
+                    *acc += d * (d - 1) * (d - 2) / 6;
+                }
+            },
+            |a, b| a + b,
+        )
+    }
+
+    /// The pre-PR-10 hand-rolled per-edge reduction (Listing 3 body),
+    /// kept verbatim as a reference oracle for `edge_local_counts`.
+    fn reference_edge_raw(g: &CsrGraph, cfg: &MinerConfig) -> (u64, u64, u64) {
+        let edges: Vec<(u32, u32)> = g.edges().collect();
+        parallel_reduce(
+            edges.len(),
+            cfg.threads,
+            cfg.chunk,
+            || (0u64, 0u64, 0u64),
+            |acc, i| {
+                let (u, v) = edges[i];
+                let tri = g.intersect_count(u, v) as u64;
+                let su = g.degree(u) as u64 - tri - 1;
+                let sv = g.degree(v) as u64 - tri - 1;
+                acc.0 += tri.saturating_sub(1) * tri / 2;
+                acc.1 += tri * (su + sv);
+                acc.2 += su * sv;
+            },
+            |a, b| (a.0 + b.0, a.1 + b.1, a.2 + b.2),
+        )
     }
 
     #[test]
@@ -83,5 +127,21 @@ mod tests {
         let g = gen::erdos_renyi(50, 0.15, 7, &[]);
         assert_eq!(pgd_motif3(&g, &cfg()).unwrap(), motif3_lo(&g, &cfg()));
         assert_eq!(pgd_motif4(&g, &cfg()).unwrap(), motif4_lo(&g, &cfg()).unwrap());
+    }
+
+    #[test]
+    fn shared_leaves_match_the_old_closed_forms() {
+        for (scale, seed) in [(7u32, 5u64), (8, 6)] {
+            let g = gen::rmat(scale, 5, seed, &[]);
+            assert_eq!(
+                decompose::vertex_comb_sum(&g, &cfg(), 2),
+                reference_paths2(&g, &cfg())
+            );
+            assert_eq!(
+                decompose::vertex_comb_sum(&g, &cfg(), 3),
+                reference_raw_s3(&g, &cfg())
+            );
+            assert_eq!(edge_raw_counts(&g, &cfg()), reference_edge_raw(&g, &cfg()));
+        }
     }
 }

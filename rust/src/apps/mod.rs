@@ -50,10 +50,11 @@ pub fn solve(
         }));
     }
     if !spec.explicit {
-        // implicit vertex-induced: motif counting
+        // implicit vertex-induced: motif counting (planner-fronted
+        // wrappers since PR 10 — the algebraic census when active)
         let counts = match spec.k {
-            3 => motif::motif3_hi(g, cfg)?,
-            4 => motif::motif4_hi(g, cfg)?,
+            3 => motif::motif3(g, cfg)?,
+            4 => motif::motif4(g, cfg)?,
             k => {
                 let table = crate::engine::esu::MotifTable::new(k);
                 crate::engine::esu::count_motifs(
@@ -91,11 +92,15 @@ pub fn solve(
         if spec.listing && !spec.vertex_induced {
             return Ok(sl::sl_count(g, p, cfg)?.map(MiningOutput::Count));
         }
-        let pl = crate::pattern::plan(p, spec.vertex_induced, cfg.opts.sb);
-        let mut out = crate::engine::dfs::count(g, &pl, cfg, &crate::engine::hooks::NoHooks)?;
-        if !cfg.opts.sb {
-            out.value /= crate::pattern::symmetry::automorphism_count(p);
+        if cfg.opts.sb {
+            // count-only single pattern: the PR-10 planner entry point
+            // (enumerated oracle when inactive or cost-model-rejected)
+            let out = crate::pattern::decompose::count_with_plan(g, p, spec.vertex_induced, cfg)?;
+            return Ok(out.map(MiningOutput::Count));
         }
+        let pl = crate::pattern::plan(p, spec.vertex_induced, false);
+        let mut out = crate::engine::dfs::count(g, &pl, cfg, &crate::engine::hooks::NoHooks)?;
+        out.value /= crate::pattern::symmetry::automorphism_count(p);
         return Ok(out.map(MiningOutput::Count));
     }
     // multiple explicit patterns: count each; the first trip carries

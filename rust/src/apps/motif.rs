@@ -13,8 +13,8 @@ use crate::engine::esu::{count_motifs, MotifTable};
 use crate::engine::hooks::NoHooks;
 use crate::engine::MinerConfig;
 use crate::graph::CsrGraph;
+use crate::pattern::decompose;
 use crate::pattern::{library, plan};
-use crate::util::pool::parallel_reduce;
 
 use super::clique::clique_hi;
 use super::tc::tc_hi;
@@ -34,44 +34,47 @@ pub fn motif4_hi(g: &CsrGraph, cfg: &MinerConfig) -> Result<Outcome<Vec<u64>>, M
     count_motifs(g, 4, cfg, &NoHooks, &table)
 }
 
+/// 3-motif census, planner-fronted (PR 10): with
+/// [`OptFlags::plan_active`](crate::engine::OptFlags::plan_active) the
+/// algebraic census ([`decompose::motif_census`]) runs — one triangle
+/// anchor plus a vertex scan; otherwise the exact-once ESU oracle
+/// ([`motif3_hi`]). Both are governed and bit-identical.
+pub fn motif3(g: &CsrGraph, cfg: &MinerConfig) -> Result<Outcome<Vec<u64>>, MineError> {
+    if cfg.opts.plan_active() {
+        decompose::motif_census(g, 3, cfg)
+    } else {
+        motif3_hi(g, cfg)
+    }
+}
+
+/// 4-motif census, planner-fronted (PR 10): with
+/// [`OptFlags::plan_active`](crate::engine::OptFlags::plan_active) the
+/// algebraic census runs — 4-clique and 4-cycle anchors plus one
+/// vertex and one edge scan; otherwise the ESU oracle ([`motif4_hi`]).
+pub fn motif4(g: &CsrGraph, cfg: &MinerConfig) -> Result<Outcome<Vec<u64>>, MineError> {
+    if cfg.opts.plan_active() {
+        decompose::motif_census(g, 4, cfg)
+    } else {
+        motif4_hi(g, cfg)
+    }
+}
+
 /// 3-MC-Lo (paper Listing 2): triangles by enumeration, wedges by the
-/// per-vertex formula Σ_v C(deg v, 2) − 3T.
+/// per-vertex formula Σ_v C(deg v, 2) − 3T (the shared
+/// [`decompose::vertex_comb_sum`] leaf since PR 10).
 pub fn motif3_lo(g: &CsrGraph, cfg: &MinerConfig) -> Vec<u64> {
     let t = tc_hi(g, cfg);
-    let paths2: u64 = parallel_reduce(
-        g.num_vertices(),
-        cfg.threads,
-        cfg.chunk,
-        || 0u64,
-        |acc, v| {
-            let d = g.degree(v as u32) as u64;
-            *acc += d.saturating_sub(1) * d / 2; // localReduce at depth 0
-        },
-        |a, b| a + b,
-    );
+    let paths2 = decompose::vertex_comb_sum(g, cfg, 2);
     vec![paths2 - 3 * t, t]
 }
 
 /// Per-edge raw local counts for the 4-motif formulas: returns
 /// (Σ C(tri_e,2), Σ tri_e(s_u+s_v), Σ s_u·s_v) — the body of Listing 3.
+/// Since PR 10 this delegates to the planner's shared
+/// [`decompose::edge_local_counts`] leaf (one implementation for the
+/// Lo path, the PGD baseline and the decomposition planner).
 pub fn edge_raw_counts(g: &CsrGraph, cfg: &MinerConfig) -> (u64, u64, u64) {
-    let edges: Vec<(u32, u32)> = g.edges().collect();
-    parallel_reduce(
-        edges.len(),
-        cfg.threads,
-        cfg.chunk,
-        || (0u64, 0u64, 0u64),
-        |acc, i| {
-            let (u, v) = edges[i];
-            let tri = g.intersect_count(u, v) as u64;
-            let su = g.degree(u) as u64 - tri - 1;
-            let sv = g.degree(v) as u64 - tri - 1;
-            acc.0 += tri.saturating_sub(1) * tri / 2;
-            acc.1 += tri * (su + sv);
-            acc.2 += su * sv;
-        },
-        |a, b| (a.0 + b.0, a.1 + b.1, a.2 + b.2),
-    )
+    decompose::edge_local_counts(g, cfg)
 }
 
 /// 4-MC-Lo (paper Listing 3 + PGD conversions): enumerate 4-cliques and
@@ -96,21 +99,9 @@ pub fn motif4_lo(g: &CsrGraph, cfg: &MinerConfig) -> Result<Vec<u64>, MineError>
     let (c4, _) = clique_hi(g, 4, cfg);
     let cyc_plan = plan(&library::cycle(4), true, true);
     let (cy, _) = crate::engine::dfs::count(g, &cyc_plan, cfg, &NoHooks)?.into_parts();
-    // local counts
+    // local counts (shared planner leaves since PR 10)
     let (raw_d, raw_tt, raw_p4) = edge_raw_counts(g, cfg);
-    let raw_s3: u64 = parallel_reduce(
-        g.num_vertices(),
-        cfg.threads,
-        cfg.chunk,
-        || 0u64,
-        |acc, v| {
-            let d = g.degree(v as u32) as u64;
-            if d >= 3 {
-                *acc += d * (d - 1) * (d - 2) / 6;
-            }
-        },
-        |a, b| a + b,
-    );
+    let raw_s3 = decompose::vertex_comb_sum(g, cfg, 3);
     // conversions to induced counts
     let d = raw_d - 6 * c4;
     let tt = (raw_tt - 4 * d) / 2;
@@ -182,6 +173,20 @@ mod tests {
         let lo = motif4_lo(&g, &cfg()).unwrap();
         // 12 paths, nothing else
         assert_eq!(lo, vec![0, 12, 0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn planner_fronted_wrappers_match_esu_and_respect_plan_flag() {
+        let g = gen::rmat(7, 5, 2, &[]);
+        let (hi3, _) = motif3_hi(&g, &cfg()).unwrap().into_parts();
+        let (hi4, _) = motif4_hi(&g, &cfg()).unwrap().into_parts();
+        assert_eq!(motif3(&g, &cfg()).unwrap().value, hi3);
+        assert_eq!(motif4(&g, &cfg()).unwrap().value, hi4);
+        // per-run opt-out pins the ESU oracle (same counts by construction)
+        let mut c = cfg();
+        c.opts.plan = false;
+        assert_eq!(motif3(&g, &c).unwrap().value, hi3);
+        assert_eq!(motif4(&g, &c).unwrap().value, hi4);
     }
 
     #[test]

@@ -20,6 +20,10 @@
 //! // not a Table-3 optimization (disable via `extcore = false` or
 //! // `SANDSLASH_NO_EXTCORE=1` to pin the seed scalar oracles)
 //! assert!(OptFlags::pangolin_like().extcore && OptFlags::none().extcore);
+//! // ...and the decomposition counting planner (PR 10), the other
+//! // substrate flag (`plan = false` or `SANDSLASH_NO_PLAN=1` pins the
+//! // enumerated counting oracle)
+//! assert!(OptFlags::hi().plan && OptFlags::none().plan);
 //!
 //! // flags compose freely for sweeps (e.g. Fig. 8's MNC ablation)
 //! let mut ablated = OptFlags::hi();
@@ -76,6 +80,16 @@ pub struct OptFlags {
     /// `SANDSLASH_NO_EXTCORE=1` kill switch, which outranks this flag)
     /// pins the seed loops, the differential oracles.
     pub extcore: bool,
+    /// Decomposition counting planner (PR 10): route count-only
+    /// queries through [`crate::pattern::decompose`], which replaces
+    /// per-embedding enumeration with anchor pieces plus closed-form
+    /// degree formulas (inclusion–exclusion coefficients derived on
+    /// the pattern itself) whenever the cost model says it wins. On in
+    /// every preset — like `extcore` it is an execution substrate, not
+    /// a Table-3 optimization. `false` (or the process-wide
+    /// `SANDSLASH_NO_PLAN=1` kill switch, which outranks this flag)
+    /// pins the enumerated path, the differential oracle.
+    pub plan: bool,
     /// Collect search-space statistics (Fig. 10).
     pub stats: bool,
 }
@@ -84,7 +98,7 @@ impl OptFlags {
     /// Sandslash-Hi: all high-level optimizations (Table 3a left) plus
     /// the set-centric extension frontier.
     pub fn hi() -> Self {
-        Self { sb: true, dag: true, mo: true, df: true, mnc: true, mec: true, sets: true, lc: false, lg: false, extcore: true, stats: false }
+        Self { sb: true, dag: true, mo: true, df: true, mnc: true, mec: true, sets: true, lc: false, lg: false, extcore: true, plan: true, stats: false }
     }
 
     /// Sandslash-Lo: Hi plus low-level optimizations.
@@ -94,7 +108,7 @@ impl OptFlags {
 
     /// Everything off (naive enumeration with only correctness checks).
     pub fn none() -> Self {
-        Self { sb: true, dag: false, mo: false, df: false, mnc: false, mec: false, sets: false, lc: false, lg: false, extcore: true, stats: false }
+        Self { sb: true, dag: false, mo: false, df: false, mnc: false, mec: false, sets: false, lc: false, lg: false, extcore: true, plan: true, stats: false }
     }
 
     /// AutoMine-like: matching order but no symmetry breaking, no DAG —
@@ -102,18 +116,18 @@ impl OptFlags {
     /// Emulations stay on the scalar probe path so the table comparisons
     /// keep isolating the optimizations each system lacks.
     pub fn automine_like() -> Self {
-        Self { sb: false, dag: false, mo: true, df: false, mnc: false, mec: true, sets: false, lc: false, lg: false, extcore: true, stats: false }
+        Self { sb: false, dag: false, mo: true, df: false, mnc: false, mec: true, sets: false, lc: false, lg: false, extcore: true, plan: true, stats: false }
     }
 
     /// Pangolin-like: BFS strategy (selected separately), SB + DAG but no
     /// MNC/MO/DF.
     pub fn pangolin_like() -> Self {
-        Self { sb: true, dag: true, mo: false, df: false, mnc: false, mec: true, sets: false, lc: false, lg: false, extcore: true, stats: false }
+        Self { sb: true, dag: true, mo: false, df: false, mnc: false, mec: true, sets: false, lc: false, lg: false, extcore: true, plan: true, stats: false }
     }
 
     /// Peregrine-like: DFS, on-the-fly SB and MO, but no DAG orientation.
     pub fn peregrine_like() -> Self {
-        Self { sb: true, dag: false, mo: true, df: false, mnc: false, mec: true, sets: false, lc: false, lg: false, extcore: true, stats: false }
+        Self { sb: true, dag: false, mo: true, df: false, mnc: false, mec: true, sets: false, lc: false, lg: false, extcore: true, plan: true, stats: false }
     }
 
     /// This preset with search-space statistics collection enabled.
@@ -138,6 +152,23 @@ impl OptFlags {
     /// [`MinerConfig::steal`].
     pub fn extcore_active(&self) -> bool {
         self.extcore && crate::engine::extend::extcore_enabled_default()
+    }
+
+    /// This preset with the decomposition counting planner switched on
+    /// or off (`false` pins count-only queries to the enumerated
+    /// oracle; sweeps and the differential tests use this).
+    pub fn with_plan(mut self, on: bool) -> Self {
+        self.plan = on;
+        self
+    }
+
+    /// Whether the decomposition counting planner actually runs: the
+    /// per-run [`OptFlags::plan`] flag gated by the process-wide
+    /// `SANDSLASH_NO_PLAN=1` kill switch
+    /// ([`crate::pattern::decompose::plan_enabled_default`]), which
+    /// outranks it — the same contract as [`OptFlags::extcore_active`].
+    pub fn plan_active(&self) -> bool {
+        self.plan && crate::pattern::decompose::plan_enabled_default()
     }
 }
 
@@ -295,11 +326,15 @@ mod tests {
             OptFlags::peregrine_like(),
         ] {
             assert!(preset.extcore);
+            // the counting planner is a substrate too (PR 10)
+            assert!(preset.plan);
         }
         assert!(!OptFlags::hi().with_extcore(false).extcore);
         // the kill switch can only ever pin the oracle, never force the
         // core past an explicit opt-out
         assert!(!OptFlags::hi().with_extcore(false).extcore_active());
+        assert!(!OptFlags::hi().with_plan(false).plan);
+        assert!(!OptFlags::hi().with_plan(false).plan_active());
     }
 
     #[test]

@@ -24,9 +24,12 @@
 //! to the global-cursor scheduling oracle, `--shards N` overrides the
 //! detected locality shard count (PR 4; see `sandslash::exec`), and
 //! `--no-extcore` pins the ESU/BFS/FSM engines to their seed scalar
-//! extension oracles (PR 5; see `sandslash::engine::extend` — the
-//! process-wide equivalents are `SANDSLASH_NO_STEAL=1` /
-//! `SANDSLASH_NO_EXTCORE=1`).
+//! extension oracles (PR 5; see `sandslash::engine::extend`), and
+//! `--no-plan` pins count-only queries to the enumerated counting
+//! oracle instead of the decomposition planner (PR 10; see
+//! `sandslash::pattern::decompose` — the process-wide equivalents are
+//! `SANDSLASH_NO_STEAL=1` / `SANDSLASH_NO_EXTCORE=1` /
+//! `SANDSLASH_NO_PLAN=1`).
 //!
 //! Governance flags (PR 6, any mining subcommand): `--deadline-ms N`
 //! bounds the run's wall clock, `--max-tasks N` bounds its scheduler
@@ -182,6 +185,10 @@ fn config(args: &Args) -> MinerConfig {
     // is a per-run OptFlags field, so the config edit is the whole story
     if args.flag("no-extcore") {
         cfg.opts.extcore = false;
+    }
+    // counting-planner oracle pin (PR 10): same per-run contract
+    if args.flag("no-plan") {
+        cfg.opts.plan = false;
     }
     // governance budgets (PR 6): CLI flags override the env defaults
     // already resolved by Budget::from_env; unusable values are

@@ -88,6 +88,11 @@ pub struct QueryTrace {
     cache_verdict: AtomicU64,
     admission_recorded: AtomicU64,
     admission_wait_nanos: AtomicU64,
+    plan_kind: AtomicU64,
+    plan_leaves: AtomicU64,
+    plan_anchor_pieces: AtomicU64,
+    plan_formula_pieces: AtomicU64,
+    plan_piece_nanos: AtomicU64,
 }
 
 impl Default for QueryTrace {
@@ -115,6 +120,11 @@ impl QueryTrace {
             cache_verdict: ZERO,
             admission_recorded: ZERO,
             admission_wait_nanos: ZERO,
+            plan_kind: ZERO,
+            plan_leaves: ZERO,
+            plan_anchor_pieces: ZERO,
+            plan_formula_pieces: ZERO,
+            plan_piece_nanos: ZERO,
         }
     }
 
@@ -203,6 +213,35 @@ impl QueryTrace {
         self.level_calls.iter().map(|c| c.load(Ordering::Relaxed)).sum()
     }
 
+    /// What the PR-10 counting planner selected for this query:
+    /// `None` if no planner decision was traced, otherwise `"direct"`
+    /// (enumerated oracle) or `"decomposed"`.
+    pub fn plan_selected(&self) -> Option<&'static str> {
+        match self.plan_kind.load(Ordering::Relaxed) {
+            0 => None,
+            1 => Some("direct"),
+            _ => Some("decomposed"),
+        }
+    }
+
+    /// Planner leaf count recorded by the selection hook.
+    pub fn plan_leaves(&self) -> u64 {
+        self.plan_leaves.load(Ordering::Relaxed)
+    }
+
+    /// Executed planner pieces: `(anchor enumerations, formula scans)`.
+    pub fn plan_pieces(&self) -> (u64, u64) {
+        (
+            self.plan_anchor_pieces.load(Ordering::Relaxed),
+            self.plan_formula_pieces.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Total nanoseconds spent inside planner pieces (anchors + scans).
+    pub fn plan_piece_nanos(&self) -> u64 {
+        self.plan_piece_nanos.load(Ordering::Relaxed)
+    }
+
     /// Render the accumulated profile as one line of JSON (the
     /// `"profile"` field of a traced service response, and the file
     /// written by the one-shot CLI's `--profile`). Level rows with no
@@ -246,6 +285,18 @@ impl QueryTrace {
             ",\"modes\":{{\"lg_roots\":{},\"extcore_dense\":{dense},\"extcore_sparse\":{sparse}}}",
             self.lg_roots()
         ));
+        match self.plan_selected() {
+            None => out.push_str(",\"plan\":null"),
+            Some(kind) => {
+                let (anchors, formulas) = self.plan_pieces();
+                out.push_str(&format!(
+                    ",\"plan\":{{\"kind\":\"{kind}\",\"leaves\":{},\"anchor_pieces\":{anchors},\
+                     \"formula_pieces\":{formulas},\"piece_nanos\":{}}}",
+                    self.plan_leaves(),
+                    self.plan_piece_nanos()
+                ));
+            }
+        }
         out.push_str(&format!(",\"budget\":{{\"charges\":{}", self.budget_charges()));
         match self.trip_code.load(Ordering::Relaxed) {
             0 => out.push_str(",\"trip\":null}"),
@@ -434,6 +485,32 @@ pub(crate) fn on_trip(reason: CancelReason) {
     with_current(|t| t.note_trip(reason));
 }
 
+/// Hook: the PR-10 counting planner selected a route for this query
+/// (`decomposed == false` means the enumerated oracle runs) with
+/// `leaves` execution pieces. Plain stores: one selection per traced
+/// query; a census records its single aggregate selection.
+#[inline]
+pub(crate) fn on_plan_select(decomposed: bool, leaves: u64) {
+    with_current(|t| {
+        t.plan_kind.store(if decomposed { 2 } else { 1 }, Ordering::Relaxed);
+        t.plan_leaves.store(leaves, Ordering::Relaxed);
+    });
+}
+
+/// Hook: one planner piece finished — an anchor enumeration
+/// (`anchor == true`) or a formula scan — after `nanos` of work.
+#[inline]
+pub(crate) fn on_plan_piece(anchor: bool, nanos: u64) {
+    with_current(|t| {
+        if anchor {
+            t.plan_anchor_pieces.fetch_add(1, Ordering::Relaxed);
+        } else {
+            t.plan_formula_pieces.fetch_add(1, Ordering::Relaxed);
+        }
+        t.plan_piece_nanos.fetch_add(nanos, Ordering::Relaxed);
+    });
+}
+
 /// Inclusive per-level timing guard: created at the top of an
 /// extension call, records `(calls += 1, nanos += elapsed)` for its
 /// level on drop. When no trace is installed it holds no timestamp
@@ -470,6 +547,8 @@ mod tests {
         on_claim();
         on_steal();
         on_budget_charge();
+        on_plan_select(true, 3);
+        on_plan_piece(true, 10);
         drop(LevelSpan::enter(2));
         assert!(current().is_none());
     }
@@ -489,6 +568,9 @@ mod tests {
             on_excl_dense();
             on_excl_sparse();
             on_budget_charge();
+            on_plan_select(true, 4);
+            on_plan_piece(true, 100);
+            on_plan_piece(false, 50);
             drop(LevelSpan::enter(1));
             // nested scopes restore the outer trace
             let inner = Arc::new(QueryTrace::new());
@@ -506,6 +588,10 @@ mod tests {
         assert_eq!(tr.excl_modes(), (1, 1));
         assert_eq!(tr.budget_charges(), 1);
         assert_eq!(tr.level_calls_total(), 1);
+        assert_eq!(tr.plan_selected(), Some("decomposed"));
+        assert_eq!(tr.plan_leaves(), 4);
+        assert_eq!(tr.plan_pieces(), (1, 1));
+        assert_eq!(tr.plan_piece_nanos(), 150);
     }
 
     #[test]
@@ -528,5 +614,29 @@ mod tests {
         assert!(p.contains("\"trip\":\"deadline\""), "{p}");
         assert!(p.contains("\"cache\":\"miss\""), "{p}");
         assert!(p.contains("\"wait_nanos\":125"), "{p}");
+        // no planner decision traced: explicit null, not absence
+        assert!(p.contains("\"plan\":null"), "{p}");
+    }
+
+    #[test]
+    fn profile_renders_plan_selection() {
+        let tr = Arc::new(QueryTrace::new());
+        with_trace(tr.clone(), || {
+            on_plan_select(true, 2);
+            on_plan_piece(true, 40);
+            on_plan_piece(false, 2);
+        });
+        let p = tr.render();
+        assert!(
+            p.contains(
+                "\"plan\":{\"kind\":\"decomposed\",\"leaves\":2,\"anchor_pieces\":1,\
+                 \"formula_pieces\":1,\"piece_nanos\":42}"
+            ),
+            "{p}"
+        );
+        // the PR-9 smoke-grep anchors survive the insertion
+        assert!(p.contains("\"levels\":["), "{p}");
+        assert!(p.contains("\"dispatch\":{\"merge\":"), "{p}");
+        assert!(p.contains("\"sched\":{\"claims\":"), "{p}");
     }
 }

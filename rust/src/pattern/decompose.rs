@@ -1,0 +1,794 @@
+//! Decomposition counting planner (PR 10): algebraic motif counting
+//! without per-embedding enumeration.
+//!
+//! For a *count-only* query (the `NoHooks` / `HookKind::Count`
+//! boundary — nothing observes individual embeddings), enumerating
+//! every embedding is the wrong asymptotic: DwarvesGraph
+//! (arXiv 2008.09682) and PGD show that a pattern can be decomposed
+//! into small **anchor pieces** (cliques, cycles) that are cheap to
+//! enumerate plus **formula leaves** (per-vertex / per-edge degree
+//! reductions) whose combination recovers the exact count. This module
+//! is the planner: [`decompose`] searches the known decomposition
+//! space with a cost model and emits a [`CountPlan`]; [`execute`] runs
+//! the plan's leaves — closed-form [`parallel_reduce`] scans and small
+//! *governed* [`dfs::count`](crate::engine::dfs::count) runs over the
+//! existing set kernels — and combines them with inclusion–exclusion
+//! coefficients **derived, not hard-coded**: the coefficient of motif
+//! `M` in a formula leaf `F` is the number of `F`-configurations
+//! inside `M`, counted on the ≤16-vertex [`Pattern`] itself
+//! ([`formula_on_pattern`]), with anchor enumeration symmetry handled
+//! by [`automorphism_count`]. The PGD constants of
+//! [`crate::apps::motif::motif4_lo`] fall out as a special case (the
+//! unit tests assert exactly that), and `motif4_lo` / the PGD baseline
+//! remain as independent hand-derived oracles.
+//!
+//! Kill-switch discipline (PR 1..9): the planner is a default-on
+//! [`OptFlags::plan`](crate::engine::OptFlags::plan) stage gated by
+//! the process-wide `SANDSLASH_NO_PLAN=1` switch
+//! ([`plan_enabled_default`]), and the enumerated path — the exact
+//! seed `plan(p) + dfs::count` run — is both the fallback for
+//! unsupported patterns and the differential oracle
+//! (`rust/tests/plan_differential.rs`): plan-vs-enumerate answers are
+//! bit-identical, which is what keeps the service's canonical-code
+//! result cache plan-agnostic.
+//!
+//! Governance: anchor leaves ride the governed DFS engine, so a
+//! deadline / task-budget trip mid-plan surfaces as a *partial*
+//! [`Outcome`] (`complete == false`, value clamped best-effort — the
+//! algebra is unsound on a partial anchor, so the value is a debris
+//! count, exactly like any tripped enumeration partial) and the
+//! service's code-0 gate keeps it out of the result cache. Remaining
+//! leaves are skipped once a trip latches.
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use crate::engine::budget::{CancelReason, MineError, Outcome};
+use crate::engine::dfs;
+use crate::engine::hooks::NoHooks;
+use crate::engine::MinerConfig;
+use crate::graph::CsrGraph;
+use crate::obs::trace;
+use crate::util::metrics::SearchStats;
+use crate::util::pool::parallel_reduce;
+
+use super::canonical::canonical_code;
+use super::library;
+use super::matching_order;
+use super::pgraph::Pattern;
+use super::symmetry::automorphism_count;
+
+/// Whether the decomposition planner is enabled for this process:
+/// `true` unless `SANDSLASH_NO_PLAN` is set non-empty and non-zero.
+/// Cached after the first read (like
+/// [`crate::engine::extend::extcore_enabled_default`]), so the kill
+/// switch is a process-start decision, not a per-query race.
+pub fn plan_enabled_default() -> bool {
+    static CACHE: OnceLock<bool> = OnceLock::new();
+    *CACHE.get_or_init(|| {
+        !std::env::var("SANDSLASH_NO_PLAN")
+            .is_ok_and(|v| !v.trim().is_empty() && v.trim() != "0")
+    })
+}
+
+// ---------------------------------------------------------------- leaves
+
+/// A closed-form formula leaf: one `parallel_reduce` scan whose value,
+/// evaluated on the data graph, is a known linear combination of
+/// induced motif counts (coefficients via [`formula_on_pattern`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Formula {
+    /// `Σ_v C(deg v, k)` — one pass over vertices. Counts every
+    /// k-star subgraph once (raw/non-induced k-star count).
+    VertexComb(usize),
+    /// `Σ_e C(tri_e, 2)` where `tri_e = |N(u) ∩ N(v)|` — one pass over
+    /// edges. Counts every diamond subgraph once (by its hinge edge).
+    EdgeTriPairs,
+    /// `Σ_e tri_e·(s_u + s_v)` with `s_u = deg u − tri_e − 1` — counts
+    /// tailed-triangle configurations (edge + one common + one
+    /// exclusive neighbor).
+    EdgeTriSides,
+    /// `Σ_e s_u·s_v` — counts 4-path configurations centered on an
+    /// edge (one exclusive neighbor on each side).
+    EdgeSideProduct,
+}
+
+/// `C(d, k)` with a u128 intermediate (hub degrees in scale-free
+/// inputs make the falling factorial overflow u64 well before the
+/// count itself does).
+fn binom(d: u64, k: usize) -> u64 {
+    if (d as usize) < k {
+        return 0;
+    }
+    let mut num: u128 = 1;
+    for i in 0..k as u128 {
+        num *= d as u128 - i;
+    }
+    let fact: u128 = (1..=k as u128).product();
+    (num / fact) as u64
+}
+
+/// Shared formula leaf `Σ_v C(deg v, k)`: the *one* implementation of
+/// the per-vertex degree reduction, used by the planner, by
+/// `motif3_lo`/`motif4_lo` and by the PGD baseline (PR 10 rebased the
+/// hand-rolled copies onto this).
+pub fn vertex_comb_sum(g: &CsrGraph, cfg: &MinerConfig, k: usize) -> u64 {
+    parallel_reduce(
+        g.num_vertices(),
+        cfg.threads,
+        cfg.chunk,
+        || 0u64,
+        |acc, v| {
+            *acc += binom(g.degree(v as u32) as u64, k);
+        },
+        |a, b| a + b,
+    )
+}
+
+/// Shared formula leaves over one edge pass: returns
+/// `(Σ C(tri_e,2), Σ tri_e(s_u+s_v), Σ s_u·s_v)` — the body of the
+/// paper's Listing 3, computed once for all three edge formulas.
+pub fn edge_local_counts(g: &CsrGraph, cfg: &MinerConfig) -> (u64, u64, u64) {
+    let edges: Vec<(u32, u32)> = g.edges().collect();
+    parallel_reduce(
+        edges.len(),
+        cfg.threads,
+        cfg.chunk,
+        || (0u64, 0u64, 0u64),
+        |acc, i| {
+            let (u, v) = edges[i];
+            let tri = g.intersect_count(u, v) as u64;
+            let su = g.degree(u) as u64 - tri - 1;
+            let sv = g.degree(v) as u64 - tri - 1;
+            acc.0 += tri.saturating_sub(1) * tri / 2;
+            acc.1 += tri * (su + sv);
+            acc.2 += su * sv;
+        },
+        |a, b| (a.0 + b.0, a.1 + b.1, a.2 + b.2),
+    )
+}
+
+/// Evaluate a formula leaf *on a pattern*: the number of
+/// `f`-configurations inside `m`. Because a formula's graph-side value
+/// is `Σ_{M} formula_on_pattern(f, M) · induced_count(M)` over the
+/// same-size motifs, these are precisely the inclusion–exclusion
+/// coefficients of the decomposition — derived from the pattern's own
+/// adjacency structure instead of transcribed from PGD.
+pub fn formula_on_pattern(f: Formula, m: &Pattern) -> u64 {
+    let n = m.num_vertices();
+    match f {
+        Formula::VertexComb(k) => {
+            (0..n).map(|v| binom(m.degree(v) as u64, k)).sum()
+        }
+        Formula::EdgeTriPairs | Formula::EdgeTriSides | Formula::EdgeSideProduct => {
+            let mut total = 0u64;
+            for (u, v) in m.edges() {
+                let tri = (m.adj_mask(u) & m.adj_mask(v)).count_ones() as u64;
+                let su = m.degree(u) as u64 - tri - 1;
+                let sv = m.degree(v) as u64 - tri - 1;
+                total += match f {
+                    Formula::EdgeTriPairs => tri.saturating_sub(1) * tri / 2,
+                    Formula::EdgeTriSides => tri * (su + sv),
+                    Formula::EdgeSideProduct => su * sv,
+                    Formula::VertexComb(_) => unreachable!(),
+                };
+            }
+            total
+        }
+    }
+}
+
+/// The coefficient vector of `f` against a motif family: entry `i` is
+/// the number of `f`-configurations inside `motifs[i]`.
+pub fn overlap_coeffs(f: Formula, motifs: &[Pattern]) -> Vec<u64> {
+    motifs.iter().map(|m| formula_on_pattern(f, m)).collect()
+}
+
+// ---------------------------------------------------------------- plans
+
+/// Indices of the anchor motifs in `all_motifs(4)` order.
+const M4_CYCLE: usize = 3;
+const M4_CLIQUE: usize = 5;
+
+/// The formula that solves each non-anchor index of `all_motifs(4)`.
+fn motif4_formula(idx: usize) -> Formula {
+    match idx {
+        0 => Formula::VertexComb(3),    // 3-star
+        1 => Formula::EdgeSideProduct,  // 4-path
+        2 => Formula::EdgeTriSides,     // tailed-triangle
+        4 => Formula::EdgeTriPairs,     // diamond
+        _ => unreachable!("motif4 index {idx} is an anchor, not a formula target"),
+    }
+}
+
+/// How a [`CountPlan`] computes its count.
+#[derive(Clone, Debug, PartialEq, Eq)]
+enum Target {
+    /// The enumerated oracle: `plan(p) + dfs::count`, bit-identical to
+    /// the pre-PR-10 path (also the kill-switch route).
+    Direct,
+    /// Induced wedge: `Σ_v C(d,2) − 3·T` with a triangle anchor
+    /// (coefficient 3 derived over `all_motifs(3)`).
+    WedgeInduced,
+    /// Raw (non-induced) k-star: `Σ_v C(d, leaves)` — no anchor at all.
+    StarRaw(usize),
+    /// Raw (non-induced) diamond: `Σ_e C(tri_e, 2)` — no anchor.
+    DiamondRaw,
+    /// Induced 4-motif at this `all_motifs(4)` index, solved by the
+    /// memoized anchor+formula system of [`Ctx::induced_motif4`].
+    Induced4(usize),
+}
+
+/// A counting plan for one pattern: either the enumerated oracle
+/// (`Direct`) or a decomposition into formula and anchor leaves. Built
+/// by [`decompose`], run by [`execute`].
+#[derive(Clone, Debug)]
+pub struct CountPlan {
+    pattern: Pattern,
+    vertex_induced: bool,
+    target: Target,
+    /// Estimated cost of the chosen route (cost-model units; the
+    /// losing candidates' estimates are not retained).
+    est_cost: f64,
+    /// Number of leaves (scans + anchors) the plan will execute.
+    leaves: usize,
+}
+
+impl CountPlan {
+    /// Whether the planner found (and the cost model chose) a genuine
+    /// decomposition; `false` means the enumerated oracle runs.
+    pub fn decomposed(&self) -> bool {
+        self.target != Target::Direct
+    }
+
+    /// Number of leaves (formula scans + anchor enumerations) the plan
+    /// executes; 1 for the direct route.
+    pub fn leaves(&self) -> usize {
+        self.leaves
+    }
+
+    /// The cost-model estimate of the chosen route (arbitrary units;
+    /// comparable only across candidates for the same query).
+    pub fn est_cost(&self) -> f64 {
+        self.est_cost
+    }
+
+    /// Short human label of the chosen decomposition (trace/debug).
+    pub fn describe(&self) -> &'static str {
+        match self.target {
+            Target::Direct => "direct",
+            Target::WedgeInduced => "wedge:vertex-comb-minus-triangles",
+            Target::StarRaw(_) => "star:vertex-comb",
+            Target::DiamondRaw => "diamond:edge-tri-pairs",
+            Target::Induced4(0) => "induced4:3-star",
+            Target::Induced4(1) => "induced4:4-path",
+            Target::Induced4(2) => "induced4:tailed-triangle",
+            Target::Induced4(_) => "induced4",
+        }
+    }
+}
+
+/// Rough per-route cost model (documented in EXPERIMENTS.md §PR-10).
+/// Enumerating pattern `q` explores ≈ `m · d̄^(k−2)` partial
+/// embeddings, divided by `|Aut(q)|` for the symmetry-broken DFS; a
+/// vertex formula costs one `n` scan, an edge formula one `m · d̄`
+/// pass (an intersection per edge).
+struct CostModel {
+    n: f64,
+    m: f64,
+    davg: f64,
+}
+
+impl CostModel {
+    fn of(g: &CsrGraph) -> Self {
+        let n = g.num_vertices().max(1) as f64;
+        let m = g.num_undirected_edges().max(1) as f64;
+        Self { n, m, davg: (2.0 * m / n).max(1.0) }
+    }
+
+    fn enumerate(&self, q: &Pattern) -> f64 {
+        let k = q.num_vertices().max(2) as i32;
+        self.m * self.davg.powi(k - 2) / automorphism_count(q) as f64
+    }
+
+    fn vertex_pass(&self) -> f64 {
+        self.n
+    }
+
+    fn edge_pass(&self) -> f64 {
+        self.m * self.davg
+    }
+
+    fn target(&self, t: &Target, p: &Pattern) -> f64 {
+        match t {
+            Target::Direct => self.enumerate(p),
+            Target::WedgeInduced => {
+                self.vertex_pass() + self.enumerate(&library::triangle())
+            }
+            Target::StarRaw(_) => self.vertex_pass(),
+            Target::DiamondRaw => self.edge_pass(),
+            // the solve's transitive pieces, deduplicated: the edge
+            // pass is shared by every edge formula, the 4-clique
+            // anchor by diamond/tailed-triangle/3-star, the 4-cycle
+            // anchor by the 4-path
+            Target::Induced4(0) => {
+                self.vertex_pass() + self.edge_pass() + self.enumerate(&library::clique(4))
+            }
+            Target::Induced4(1) => self.edge_pass() + self.enumerate(&library::cycle(4)),
+            Target::Induced4(_) => self.edge_pass() + self.enumerate(&library::clique(4)),
+        }
+    }
+}
+
+fn leaves_of(t: &Target) -> usize {
+    match t {
+        Target::Direct => 1,
+        Target::WedgeInduced => 2,           // vertex pass + triangle anchor
+        Target::StarRaw(_) | Target::DiamondRaw => 1,
+        Target::Induced4(0) => 3,            // vertex pass + edge pass + K4
+        Target::Induced4(_) => 2,            // edge pass + anchor
+    }
+}
+
+/// Search the decomposition space for `p` and pick the cheapest route
+/// under the [`CostModel`] built from `g`'s summary statistics. The
+/// candidate set is the known algebraic identities applicable to this
+/// pattern (matched by canonical code) plus the enumerated oracle;
+/// unsupported patterns — labeled patterns, 5-vertex motifs, raw-mode
+/// patterns without a raw identity — always plan `Direct`, so the
+/// planner is total and bit-identical by construction.
+pub fn decompose(p: &Pattern, vertex_induced: bool, g: &CsrGraph) -> CountPlan {
+    let recipe = recipe_for(p, vertex_induced);
+    let model = CostModel::of(g);
+    let direct_cost = model.target(&Target::Direct, p);
+    let (target, est_cost) = match recipe {
+        Some(t) => {
+            let c = model.target(&t, p);
+            if c < direct_cost {
+                (t, c)
+            } else {
+                (Target::Direct, direct_cost)
+            }
+        }
+        None => (Target::Direct, direct_cost),
+    };
+    let leaves = leaves_of(&target);
+    CountPlan { pattern: p.clone(), vertex_induced, target, est_cost, leaves }
+}
+
+/// The algebraic identity applicable to `p` in the requested counting
+/// mode, if any.
+fn recipe_for(p: &Pattern, vertex_induced: bool) -> Option<Target> {
+    if p.is_labeled() || p.num_vertices() < 3 {
+        return None;
+    }
+    let code = canonical_code(p);
+    let k = p.num_vertices();
+    if k == 3 && code == canonical_code(&library::wedge()) {
+        // the raw wedge count is the same vertex scan with no anchor:
+        // Σ C(d,2) counts every wedge subgraph exactly once
+        return Some(if vertex_induced { Target::WedgeInduced } else { Target::StarRaw(2) });
+    }
+    if k == 4 {
+        let motifs = library::all_motifs(4);
+        let idx = motifs.iter().position(|m| canonical_code(m) == code)?;
+        return match (idx, vertex_induced) {
+            // anchors are their own cheapest enumeration
+            (M4_CYCLE | M4_CLIQUE, _) => None,
+            (_, true) => Some(Target::Induced4(idx)),
+            // raw mode: only the anchor-free identities apply
+            (0, false) => Some(Target::StarRaw(3)),
+            (4, false) => Some(Target::DiamondRaw),
+            _ => None,
+        };
+    }
+    // larger stars keep their raw closed form at any size
+    if !vertex_induced && is_star(p) {
+        return Some(Target::StarRaw(k - 1));
+    }
+    None
+}
+
+fn is_star(p: &Pattern) -> bool {
+    let k = p.num_vertices();
+    k >= 3
+        && p.num_edges() == k - 1
+        && (0..k).any(|c| p.degree(c) == k - 1)
+}
+
+// ------------------------------------------------------------- execution
+
+/// Shared execution state: memoized pieces, merged engine stats, and
+/// the first governance trip (which latches and short-circuits every
+/// later leaf).
+struct Ctx<'a> {
+    g: &'a CsrGraph,
+    cfg: &'a MinerConfig,
+    stats: SearchStats,
+    tripped: Option<CancelReason>,
+    edge_locals: Option<(u64, u64, u64)>,
+    motif4: [Option<u64>; 6],
+}
+
+impl<'a> Ctx<'a> {
+    fn new(g: &'a CsrGraph, cfg: &'a MinerConfig) -> Self {
+        Ctx {
+            g,
+            cfg,
+            stats: SearchStats::default(),
+            tripped: None,
+            edge_locals: None,
+            motif4: [None; 6],
+        }
+    }
+
+    /// Enumerate one anchor pattern through the governed DFS engine
+    /// (vertex-induced, symmetry-broken — exact-once counts).
+    fn anchor(&mut self, p: &Pattern) -> Result<u64, MineError> {
+        if self.tripped.is_some() {
+            return Ok(0);
+        }
+        let t0 = Instant::now();
+        let pl = matching_order::plan(p, true, true);
+        let out = dfs::count(self.g, &pl, self.cfg, &NoHooks)?;
+        trace::on_plan_piece(true, t0.elapsed().as_nanos() as u64);
+        self.stats.merge(&out.stats);
+        if let Some(reason) = out.tripped {
+            self.tripped = Some(reason);
+        }
+        Ok(out.value)
+    }
+
+    /// Evaluate one formula leaf on the data graph (memoizing the
+    /// shared edge pass). Skipped — returns 0 — once a trip latched.
+    fn formula(&mut self, f: Formula) -> u64 {
+        if self.tripped.is_some() {
+            return 0;
+        }
+        match f {
+            Formula::VertexComb(k) => {
+                let t0 = Instant::now();
+                let v = vertex_comb_sum(self.g, self.cfg, k);
+                trace::on_plan_piece(false, t0.elapsed().as_nanos() as u64);
+                v
+            }
+            _ => {
+                let (a, b, c) = self.edge_locals();
+                match f {
+                    Formula::EdgeTriPairs => a,
+                    Formula::EdgeTriSides => b,
+                    Formula::EdgeSideProduct => c,
+                    Formula::VertexComb(_) => unreachable!(),
+                }
+            }
+        }
+    }
+
+    fn edge_locals(&mut self) -> (u64, u64, u64) {
+        if let Some(t) = self.edge_locals {
+            return t;
+        }
+        let t0 = Instant::now();
+        let t = edge_local_counts(self.g, self.cfg);
+        trace::on_plan_piece(false, t0.elapsed().as_nanos() as u64);
+        // the edge pass is one intersection per undirected edge
+        self.stats.intersections += self.g.num_undirected_edges() as u64;
+        self.edge_locals = Some(t);
+        t
+    }
+
+    /// The induced count of `motifs[idx]` (all_motifs(4) order),
+    /// memoized: anchors (4-cycle, 4-clique) enumerate, every other
+    /// index solves its formula leaf against the already-known motifs
+    /// with derived coefficients. Dependencies recurse (they form a
+    /// DAG: diamond → K4, tailed-triangle → diamond, 4-path → C4,
+    /// 3-star → {TT, diamond, K4}).
+    fn induced_motif4(
+        &mut self,
+        motifs: &[Pattern],
+        idx: usize,
+        depth: usize,
+    ) -> Result<u64, MineError> {
+        assert!(depth < 8, "decomposition dependency recursion runaway");
+        if let Some(v) = self.motif4[idx] {
+            return Ok(v);
+        }
+        let v = match idx {
+            M4_CLIQUE => self.anchor(&library::clique(4))?,
+            M4_CYCLE => self.anchor(&library::cycle(4))?,
+            _ => {
+                let f = motif4_formula(idx);
+                let coeffs = overlap_coeffs(f, motifs);
+                debug_assert!(coeffs[idx] > 0, "formula must see its own target");
+                // dependencies first (anchors trip fast under a blown
+                // deadline; the formula scan then short-circuits)
+                let mut acc: i128 = 0;
+                for (j, &cj) in coeffs.iter().enumerate() {
+                    if j != idx && cj > 0 {
+                        let known = self.induced_motif4(motifs, j, depth + 1)?;
+                        acc -= cj as i128 * known as i128;
+                    }
+                }
+                acc += self.formula(f) as i128;
+                finish_div(acc, coeffs[idx], self.tripped.is_some())
+            }
+        };
+        self.motif4[idx] = Some(v);
+        Ok(v)
+    }
+
+    fn outcome<T>(self, value: T) -> Outcome<T> {
+        match self.tripped {
+            None => Outcome::complete(value, self.stats),
+            Some(reason) => Outcome::partial(value, self.stats, reason),
+        }
+    }
+}
+
+/// Close an inclusion–exclusion solve: on a complete run the
+/// remainder must divide exactly and be non-negative (the identities
+/// are theorems — a violation is an engine bug, so it asserts); on a
+/// tripped partial the debris is clamped into range.
+fn finish_div(acc: i128, divisor: u64, partial: bool) -> u64 {
+    let d = divisor as i128;
+    if partial {
+        return acc.div_euclid(d).max(0) as u64;
+    }
+    assert!(
+        acc >= 0 && acc % d == 0,
+        "inclusion–exclusion solve left remainder {acc} (divisor {d}): \
+         anchor/formula disagreement"
+    );
+    (acc / d) as u64
+}
+
+/// Run a [`CountPlan`]. Direct plans are bit-identical to the seed
+/// `plan(p) + dfs::count` path; decomposed plans combine their leaves
+/// and forward the governed [`Outcome`] contract (a tripped anchor
+/// yields `complete == false`).
+pub fn execute(
+    g: &CsrGraph,
+    plan: &CountPlan,
+    cfg: &MinerConfig,
+) -> Result<Outcome<u64>, MineError> {
+    trace::on_plan_select(plan.decomposed(), plan.leaves as u64);
+    let mut ctx = Ctx::new(g, cfg);
+    let value = match &plan.target {
+        Target::Direct => {
+            let pl = matching_order::plan(&plan.pattern, plan.vertex_induced, true);
+            return dfs::count(g, &pl, cfg, &NoHooks);
+        }
+        Target::WedgeInduced => {
+            let motifs = library::all_motifs(3);
+            let coeffs = overlap_coeffs(Formula::VertexComb(2), &motifs);
+            let t = ctx.anchor(&library::triangle())?;
+            let acc = ctx.formula(Formula::VertexComb(2)) as i128 - coeffs[1] as i128 * t as i128;
+            finish_div(acc, coeffs[0], ctx.tripped.is_some())
+        }
+        Target::StarRaw(leaves) => ctx.formula(Formula::VertexComb(*leaves)),
+        Target::DiamondRaw => ctx.formula(Formula::EdgeTriPairs),
+        Target::Induced4(idx) => {
+            let motifs = library::all_motifs(4);
+            ctx.induced_motif4(&motifs, *idx, 0)?
+        }
+    };
+    Ok(ctx.outcome(value))
+}
+
+/// Count `p` in `g`, planner-fronted: the PR-10 entry point for every
+/// count-only query. With the stage inactive
+/// ([`OptFlags::plan_active`](crate::engine::OptFlags::plan_active)
+/// false — per-run opt-out or `SANDSLASH_NO_PLAN=1`) this **is** the
+/// seed enumerated path, byte for byte; otherwise [`decompose`] picks
+/// a route and [`execute`] runs it, with the same `Result<Outcome>`
+/// governance contract either way.
+pub fn count_with_plan(
+    g: &CsrGraph,
+    p: &Pattern,
+    vertex_induced: bool,
+    cfg: &MinerConfig,
+) -> Result<Outcome<u64>, MineError> {
+    if !cfg.opts.plan_active() {
+        let pl = matching_order::plan(p, vertex_induced, true);
+        return dfs::count(g, &pl, cfg, &NoHooks);
+    }
+    let cp = decompose(p, vertex_induced, g);
+    execute(g, &cp, cfg)
+}
+
+/// Full algebraic k-motif census (k ∈ 3..=4), `all_motifs(k)` order:
+/// anchors enumerate once (triangle for k=3; 4-clique and 4-cycle for
+/// k=4), everything else is solved from shared formula leaves — the
+/// whole census costs two small anchor enumerations plus one vertex
+/// and one edge scan, against the ESU oracle's enumeration of *every*
+/// connected k-subgraph. Callers gate on
+/// [`OptFlags::plan_active`](crate::engine::OptFlags::plan_active)
+/// (see [`crate::apps::motif::motif3`] /
+/// [`crate::apps::motif::motif4`]); this function always plans.
+pub fn motif_census(
+    g: &CsrGraph,
+    k: usize,
+    cfg: &MinerConfig,
+) -> Result<Outcome<Vec<u64>>, MineError> {
+    assert!((3..=4).contains(&k), "algebraic census supports k in 3..=4");
+    let mut ctx = Ctx::new(g, cfg);
+    if k == 3 {
+        trace::on_plan_select(true, 2);
+        let motifs = library::all_motifs(3);
+        let coeffs = overlap_coeffs(Formula::VertexComb(2), &motifs);
+        let t = ctx.anchor(&library::triangle())?;
+        let acc = ctx.formula(Formula::VertexComb(2)) as i128 - coeffs[1] as i128 * t as i128;
+        let w = finish_div(acc, coeffs[0], ctx.tripped.is_some());
+        return Ok(ctx.outcome(vec![w, t]));
+    }
+    trace::on_plan_select(true, 4); // K4 + C4 anchors, edge pass, vertex pass
+    let motifs = library::all_motifs(4);
+    let mut counts = vec![0u64; motifs.len()];
+    // anchors first (trip fast), then the dependency-ordered solves
+    for idx in [M4_CLIQUE, M4_CYCLE, 4, 2, 1, 0] {
+        counts[idx] = ctx.induced_motif4(&motifs, idx, 0)?;
+    }
+    Ok(ctx.outcome(counts))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::hooks::NoHooks;
+    use crate::engine::OptFlags;
+    use crate::graph::gen;
+
+    fn cfg() -> MinerConfig {
+        MinerConfig::custom(2, 16, OptFlags::hi())
+    }
+
+    /// The derived inclusion–exclusion coefficients must reproduce the
+    /// hand-transcribed PGD constants of `motif4_lo` exactly.
+    #[test]
+    fn derived_coefficients_match_pgd_constants() {
+        let m3 = library::all_motifs(3);
+        assert_eq!(overlap_coeffs(Formula::VertexComb(2), &m3), vec![1, 3]);
+        let m4 = library::all_motifs(4);
+        // order: [3-star, 4-path, tailed-triangle, 4-cycle, diamond, 4-clique]
+        assert_eq!(overlap_coeffs(Formula::EdgeTriPairs, &m4), vec![0, 0, 0, 0, 1, 6]);
+        assert_eq!(overlap_coeffs(Formula::EdgeTriSides, &m4), vec![0, 0, 2, 0, 4, 0]);
+        assert_eq!(overlap_coeffs(Formula::EdgeSideProduct, &m4), vec![0, 1, 0, 4, 0, 0]);
+        assert_eq!(overlap_coeffs(Formula::VertexComb(3), &m4), vec![1, 0, 1, 0, 2, 4]);
+    }
+
+    #[test]
+    fn binom_small_values() {
+        assert_eq!(binom(5, 2), 10);
+        assert_eq!(binom(4, 3), 4);
+        assert_eq!(binom(2, 3), 0);
+        assert_eq!(binom(16384, 3), 16384 * 16383 * 16382 / 6);
+    }
+
+    #[test]
+    fn census_matches_esu_oracle() {
+        use crate::engine::esu::{count_motifs, MotifTable};
+        for seed in [3, 9] {
+            let g = gen::rmat(8, 5, seed, &[]);
+            for k in [3usize, 4] {
+                let table = MotifTable::new(k);
+                let (want, _) =
+                    count_motifs(&g, k, &cfg(), &NoHooks, &table).unwrap().into_parts();
+                let got = motif_census(&g, k, &cfg()).unwrap();
+                assert!(got.complete);
+                assert_eq!(got.value, want, "k={k} seed={seed}");
+            }
+        }
+    }
+
+    #[test]
+    fn census_enumerates_strictly_less_than_esu() {
+        use crate::engine::esu::{count_motifs, MotifTable};
+        let g = gen::rmat(8, 6, 11, &[]);
+        let c = MinerConfig::custom(2, 16, OptFlags::hi().with_stats());
+        let table = MotifTable::new(4);
+        let esu = count_motifs(&g, 4, &c, &NoHooks, &table).unwrap();
+        let planned = motif_census(&g, 4, &c).unwrap();
+        assert_eq!(planned.value, esu.value);
+        assert!(
+            planned.stats.enumerated < esu.stats.enumerated,
+            "planner enumerated {} vs ESU {}",
+            planned.stats.enumerated,
+            esu.stats.enumerated
+        );
+    }
+
+    #[test]
+    fn single_pattern_plans_agree_with_enumeration() {
+        let g = gen::rmat(8, 5, 7, &[]);
+        let patterns: Vec<Pattern> = library::all_motifs(4)
+            .into_iter()
+            .chain(library::all_motifs(3))
+            .chain([library::star(4)])
+            .collect();
+        for p in &patterns {
+            for vi in [true, false] {
+                let pl = matching_order::plan(p, vi, true);
+                let (want, _) = dfs::count(&g, &pl, &cfg(), &NoHooks).unwrap().into_parts();
+                let got = count_with_plan(&g, p, vi, &cfg()).unwrap();
+                assert!(got.complete);
+                assert_eq!(got.value, want, "pattern {p} vi={vi}");
+            }
+        }
+    }
+
+    #[test]
+    fn kill_switch_flag_pins_the_enumerated_route() {
+        // with `plan` off, count_with_plan must be the oracle itself
+        let g = gen::rmat(7, 5, 5, &[]);
+        let p = library::diamond();
+        let mut c = cfg();
+        c.opts.plan = false;
+        assert!(!c.opts.plan_active());
+        let pl = matching_order::plan(&p, true, true);
+        let want = dfs::count(&g, &pl, &c, &NoHooks).unwrap().value;
+        assert_eq!(count_with_plan(&g, &p, true, &c).unwrap().value, want);
+    }
+
+    #[test]
+    fn unsupported_patterns_plan_direct() {
+        let g = gen::rmat(7, 5, 5, &[]);
+        // 5-vertex motif: no identity in the table
+        let p5 = library::cycle(5);
+        assert!(!decompose(&p5, true, &g).decomposed());
+        // labeled pattern: identities assume unlabeled degrees
+        let mut lp = library::wedge();
+        lp.set_label(0, 1);
+        assert!(!decompose(&lp, true, &g).decomposed());
+        // anchors are their own cheapest enumeration
+        assert!(!decompose(&library::clique(4), true, &g).decomposed());
+        assert!(!decompose(&library::cycle(4), true, &g).decomposed());
+        // the supported ones do decompose on a dense-enough input
+        assert!(decompose(&library::diamond(), true, &g).decomposed());
+        assert!(decompose(&library::wedge(), true, &g).decomposed());
+        assert_eq!(decompose(&library::diamond(), true, &g).leaves(), 2);
+    }
+
+    #[test]
+    fn cost_model_prefers_direct_on_sparse_inputs() {
+        // ring: d̄ = 2, so the K4-anchor route cannot beat enumerating
+        // the diamond directly — the search must keep the oracle
+        let ring = gen::ring(64);
+        let cp = decompose(&library::diamond(), true, &ring);
+        assert!(!cp.decomposed(), "chose {} at est {}", cp.describe(), cp.est_cost());
+        // and the count is still exact through the Direct route
+        let want = dfs::count(
+            &ring,
+            &matching_order::plan(&library::diamond(), true, true),
+            &cfg(),
+            &NoHooks,
+        )
+        .unwrap()
+        .value;
+        assert_eq!(count_with_plan(&ring, &library::diamond(), true, &cfg()).unwrap().value, want);
+    }
+
+    #[test]
+    fn deadline_trip_yields_partial_outcome() {
+        use std::time::Duration;
+        // a deadline that has already expired trips the first anchor;
+        // the census must surface complete == false, never panic
+        let g = gen::rmat(8, 6, 13, &[]);
+        let c = cfg().with_deadline(Duration::from_nanos(1));
+        let out = motif_census(&g, 4, &c).unwrap();
+        assert!(!out.complete, "expired deadline must yield a partial census");
+        assert!(out.tripped.is_some());
+    }
+
+    #[test]
+    fn plan_describes_and_counts_leaves() {
+        let g = gen::rmat(7, 6, 3, &[]);
+        let w = decompose(&library::wedge(), true, &g);
+        assert_eq!(w.describe(), "wedge:vertex-comb-minus-triangles");
+        assert_eq!(w.leaves(), 2);
+        let d = decompose(&library::diamond(), false, &g);
+        assert_eq!(d.describe(), "diamond:edge-tri-pairs");
+        assert_eq!(d.leaves(), 1);
+        let s = decompose(&library::star(4), false, &g);
+        assert_eq!(s.describe(), "star:vertex-comb");
+    }
+}

@@ -2,11 +2,13 @@
 //! breaking, matching orders and canonical codes.
 
 pub mod canonical;
+pub mod decompose;
 pub mod library;
 pub mod matching_order;
 pub mod pgraph;
 pub mod symmetry;
 
 pub use canonical::{canonical_code, isomorphic, CanonCode};
+pub use decompose::{count_with_plan, motif_census, CountPlan};
 pub use matching_order::{plan, MatchingPlan};
 pub use pgraph::Pattern;

@@ -45,13 +45,11 @@ use super::protocol::{
 };
 use super::registry::{GraphRegistry, RegistryError};
 use crate::engine::budget::{self, CancelToken};
-use crate::engine::dfs;
-use crate::engine::hooks::NoHooks;
 use crate::engine::{MinerConfig, OptFlags};
 use crate::graph::CsrGraph;
 use crate::obs::registry as obs_registry;
 use crate::obs::trace::{self as qtrace, CacheVerdict, QueryTrace};
-use crate::pattern::{canonical_code, plan, Pattern};
+use crate::pattern::{canonical_code, decompose, Pattern};
 use crate::util::pool;
 
 /// Service-level tunables; [`ServiceConfig::from_env`] reads the
@@ -350,11 +348,16 @@ impl Service {
         if let Some(n) = req.max_tasks {
             cfg.budget.max_tasks = Some(n);
         }
-        let pl = plan(p, req.vertex_induced, true);
-        // the scoped token install is what makes `cancel` reach this
-        // run — and it is scoped: it restores on exit, never leaking
-        // into whatever query this pool thread serves next
-        let run = budget::with_cancel(token.clone(), || dfs::count(g, &pl, &cfg, &NoHooks));
+        // count-only queries go through the PR-10 decomposition
+        // planner (enumerated oracle when inactive — answers are
+        // bit-identical either way, which is what keeps the
+        // canonical-code cache plan-agnostic). The scoped token
+        // install is what makes `cancel` reach this run — and it is
+        // scoped: it restores on exit, never leaking into whatever
+        // query this pool thread serves next
+        let run = budget::with_cancel(token.clone(), || {
+            decompose::count_with_plan(g, p, req.vertex_induced, &cfg)
+        });
         match run {
             Ok(out) => {
                 let code = out.tripped.map(|r| r.exit_code()).unwrap_or(0);

@@ -55,7 +55,15 @@
 //! same workload run untraced (the default, pay-nothing path) and
 //! again under an installed [`crate::obs::trace::QueryTrace`], counts
 //! asserted bit-identical — the recorded ratio is the whole cost of
-//! the tracing hooks when a trace is live.
+//! the tracing hooks when a trace is live. The PR-10 section
+//! (`pr10-plan`, via [`Pr10Section::write`] and the shared
+//! [`pr10_compare`] protocol) measures the *decomposition counting
+//! planner* ([`crate::pattern::decompose`]): the same count-only
+//! workload on the enumerated oracle (`OptFlags::plan = false`) and
+//! through the planner, counts asserted bit-identical and — when the
+//! planner is live — the planner's engine-stats `enumerated` counter
+//! asserted strictly smaller than the oracle's (the asymptotic claim,
+//! not just a stopwatch).
 //!
 //! Writers must assert their differential check (scalar count ==
 //! set-centric count, scalar-kernel count == SIMD-kernel count)
@@ -306,8 +314,9 @@ pub fn pr1_meta(threads: usize) -> Json {
              cursor vs work-stealing scheduler, pr5-* the scalar extension oracles vs \
              the shared extension core, pr6-governance the governed vs \
              governance-disabled run with budgets unset, pr7-service the resident \
-             service's cold vs cached query latency, and pr9-obs the untraced vs \
-             traced run of the same workload, each from the same run",
+             service's cold vs cached query latency, pr9-obs the untraced vs \
+             traced run of the same workload, and pr10-plan the enumerated \
+             counting oracle vs the decomposition planner, each from the same run",
         )
 }
 
@@ -908,6 +917,114 @@ impl Pr9Section<'_> {
             .num("untraced_secs", self.untraced_secs)
             .num("traced_secs", self.traced_secs)
             .num("overhead_traced_over_untraced", self.overhead())
+            .int("samples", self.samples as u64);
+        upsert_bench_section(&pr1_report_path(), &pr1_meta(threads), section, &body)
+    }
+}
+
+/// One measured enumeration-vs-planner comparison (EXPERIMENTS.md
+/// §PR-10), as recorded in the `pr10-plan` report section: the same
+/// count-only workload run on the enumerated oracle
+/// (`OptFlags::plan = false`) and through the decomposition planner
+/// ([`crate::pattern::decompose`]), from the same process, so the rows
+/// differ only in the counting route. Shared by the benches and the
+/// tier-1 smoke test so the JSON schema cannot drift between writers.
+pub struct Pr10Section<'a> {
+    /// Input description (generator + parameters).
+    pub graph: &'a str,
+    /// Workload name (e.g. `4-motif-census`, `5-clique`).
+    pub workload: &'a str,
+    /// Agreed result fingerprint (differential check across routes).
+    pub count: u64,
+    /// Wall time on the enumerated oracle (seconds).
+    pub enum_secs: f64,
+    /// Wall time through the planner (seconds).
+    pub plan_secs: f64,
+    /// Engine-stats `enumerated` counter of the oracle run.
+    pub enum_enumerated: u64,
+    /// Engine-stats `enumerated` counter of the planner run.
+    pub plan_enumerated: u64,
+    /// Number of timing samples behind the figures.
+    pub samples: usize,
+}
+
+/// Run the §PR-10 enumeration-vs-planner measurement protocol once and
+/// return the section row — the single implementation shared by the
+/// tier-1 smoke test and the benches, completing the sequence of
+/// [`pr3_compare`] (kernels), [`pr4_compare`] (scheduler),
+/// [`pr5_compare`] (extension core), [`pr6_compare`] (governance),
+/// [`pr7_compare`] (service cache), and [`pr9_compare`] (tracing):
+/// `run(use_planner)` executes the workload with the planner pinned
+/// off (`false`, the enumerated oracle) then active (`true`),
+/// returning a deterministic result fingerprint, the wall seconds to
+/// record, and the run's engine-stats `enumerated` counter (collect
+/// with `OptFlags::with_stats()`). The two fingerprints are asserted
+/// equal before anything is written; the planner leg may never
+/// enumerate *more*, and when the caller passes
+/// `expect_shrink == true` (a workload whose decomposition is known to
+/// apply, e.g. the 4-motif census) and the planner is actually live
+/// ([`crate::pattern::decompose::plan_enabled_default`]) its
+/// enumeration count is asserted **strictly** smaller — the acceptance
+/// criterion of ISSUE 10. Pass `expect_shrink == false` for workloads
+/// the planner correctly leaves on the direct route (e.g. a k-clique,
+/// its own optimal anchor), where the ratio is recorded as ≈ 1. (Under
+/// `SANDSLASH_NO_PLAN=1` both runs resolve to the oracle and every
+/// check degenerates to self-agreement — the CI oracle leg, as with
+/// [`pr5_compare`].)
+pub fn pr10_compare<'a>(
+    graph: &'a str,
+    workload: &'a str,
+    samples: usize,
+    expect_shrink: bool,
+    mut run: impl FnMut(bool) -> (u64, f64, u64),
+) -> Pr10Section<'a> {
+    let (enum_count, enum_secs, enum_enumerated) = run(false);
+    let (plan_count, plan_secs, plan_enumerated) = run(true);
+    assert_eq!(
+        enum_count, plan_count,
+        "planner vs enumerated oracle disagree on {graph} / {workload}"
+    );
+    assert!(
+        plan_enumerated <= enum_enumerated,
+        "planner enumerated more than the oracle on {graph} / {workload}: \
+         {plan_enumerated} vs {enum_enumerated}"
+    );
+    if expect_shrink && crate::pattern::decompose::plan_enabled_default() {
+        assert!(
+            plan_enumerated < enum_enumerated,
+            "planner live but did not shrink the enumeration space on {graph} / {workload}: \
+             {plan_enumerated} vs {enum_enumerated}"
+        );
+    }
+    Pr10Section {
+        graph,
+        workload,
+        count: plan_count,
+        enum_secs,
+        plan_secs,
+        enum_enumerated,
+        plan_enumerated,
+        samples,
+    }
+}
+
+impl Pr10Section<'_> {
+    /// Enumeration-over-planner speedup (> 1 means the planner won).
+    pub fn speedup(&self) -> f64 {
+        self.enum_secs / self.plan_secs
+    }
+
+    /// Upsert this section into the shared report at the repo root.
+    pub fn write(&self, section: &str, threads: usize) -> std::io::Result<()> {
+        let body = Json::new()
+            .str("graph", self.graph)
+            .str("workload", self.workload)
+            .int("count", self.count)
+            .num("enum_secs", self.enum_secs)
+            .num("plan_secs", self.plan_secs)
+            .num("speedup_plan_over_enum", self.speedup())
+            .int("enum_enumerated", self.enum_enumerated)
+            .int("plan_enumerated", self.plan_enumerated)
             .int("samples", self.samples as u64);
         upsert_bench_section(&pr1_report_path(), &pr1_meta(threads), section, &body)
     }

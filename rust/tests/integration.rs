@@ -205,6 +205,11 @@ fn every_opt_flag_is_a_live_kill_switch() {
     }
     {
         let mut f = base;
+        f.plan = !f.plan;
+        flips.push(("plan", f));
+    }
+    {
+        let mut f = base;
         f.stats = !f.stats;
         flips.push(("stats", f));
     }

@@ -1,0 +1,265 @@
+//! PR-10 differential suite: the decomposition counting planner vs the
+//! enumerated oracle.
+//!
+//! The planner ([`sandslash::pattern::decompose`]) answers count-only
+//! queries from algebraic decompositions — closed-form degree scans
+//! plus small governed anchor enumerations stitched together with
+//! derived inclusion–exclusion coefficients — instead of enumerating
+//! one embedding per match. Its whole correctness contract is
+//! *bit-identical counts*: for every supported pattern the planned
+//! answer must equal the enumerated answer exactly, on every graph, at
+//! every thread count, in both induced modes. This file pins that
+//! contract:
+//!
+//! - every pattern in `library::all_motifs(3..=5)` plus the explicit
+//!   diamond / tailed-triangle anchors, across 3 RMAT seeds × threads
+//!   {1, 8} × the `plan` kill switch on/off (the switch itself must be
+//!   count-invariant);
+//! - the non-induced leg (raw wedge / star / diamond recipes, which
+//!   use different formula leaves than the induced ones);
+//! - the whole-census path vs the ESU oracle, with the ISSUE-10
+//!   acceptance assertion that the planner *enumerates strictly fewer
+//!   embeddings* (engine stats) while agreeing bit-for-bit;
+//! - the governance leg: a deadline trip mid-plan degrades to a
+//!   `complete == false` partial (never a panic, never a wrong
+//!   "complete" answer), and the resident service refuses to cache it.
+//!
+//! The kill switch is exercised through the `OptFlags::plan` *field*
+//! here (process-wide `SANDSLASH_NO_PLAN` is OnceLock-cached, so the
+//! env form gets its own CI leg instead — see `rust-plan` in ci.yml).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use sandslash::engine::budget;
+use sandslash::engine::esu::{count_motifs, MotifTable};
+use sandslash::engine::hooks::NoHooks;
+use sandslash::engine::{Budget, MinerConfig, OptFlags};
+use sandslash::graph::gen;
+use sandslash::graph::CsrGraph;
+use sandslash::pattern::{decompose, library, Pattern};
+use sandslash::service::{Body, PatternSpec, Request, Service, ServiceConfig};
+
+const SEEDS: [u64; 3] = [3, 11, 29];
+const THREADS: [usize; 2] = [1, 8];
+
+fn cfg_with(threads: usize, plan: bool) -> MinerConfig {
+    let mut c = MinerConfig::custom(threads, 16, OptFlags::hi());
+    c.opts.plan = plan;
+    c
+}
+
+/// The full battery the tentpole promises: every 3/4/5-vertex motif
+/// plus the two explicit decomposition anchors.
+fn battery() -> Vec<Pattern> {
+    let mut pats: Vec<Pattern> = Vec::new();
+    for k in 3..=5 {
+        pats.extend(library::all_motifs(k));
+    }
+    pats.push(library::diamond());
+    pats.push(library::tailed_triangle());
+    pats
+}
+
+/// Induced leg: planner on vs planner off (the enumerated oracle) must
+/// be bit-identical for every battery pattern, seed, and thread count.
+#[test]
+fn planned_counts_match_enumerated_counts_vertex_induced() {
+    for seed in SEEDS {
+        let g = gen::rmat(8, 5, seed, &[]);
+        for p in battery() {
+            for threads in THREADS {
+                let oracle = decompose::count_with_plan(&g, &p, true, &cfg_with(threads, false))
+                    .unwrap()
+                    .value;
+                let planned = decompose::count_with_plan(&g, &p, true, &cfg_with(threads, true))
+                    .unwrap()
+                    .value;
+                assert_eq!(
+                    planned, oracle,
+                    "induced {p} on rmat(8,5,{seed}) at {threads} threads: \
+                     planner disagrees with enumeration"
+                );
+            }
+        }
+    }
+}
+
+/// Non-induced leg: the raw recipes (star via vertex-comb, diamond via
+/// edge triangle-pairs) use different leaves than the induced ones, so
+/// they get their own sweep. Patterns whose raw form has no recipe
+/// (paths, cycles, cliques) ride along as plan-direct coverage.
+#[test]
+fn planned_counts_match_enumerated_counts_edge_induced() {
+    let mut pats = vec![
+        library::wedge(),
+        library::star(3),
+        library::star(4),
+        library::star(5),
+        library::diamond(),
+        library::tailed_triangle(),
+        library::path(4),
+        library::cycle(4),
+        library::clique(4),
+    ];
+    pats.extend(library::all_motifs(3));
+    for seed in SEEDS {
+        let g = gen::rmat(8, 5, seed, &[]);
+        for p in &pats {
+            for threads in THREADS {
+                let oracle = decompose::count_with_plan(&g, p, false, &cfg_with(threads, false))
+                    .unwrap()
+                    .value;
+                let planned = decompose::count_with_plan(&g, p, false, &cfg_with(threads, true))
+                    .unwrap()
+                    .value;
+                assert_eq!(
+                    planned, oracle,
+                    "non-induced {p} on rmat(8,5,{seed}) at {threads} threads: \
+                     planner disagrees with enumeration"
+                );
+            }
+        }
+    }
+}
+
+/// Whole-census path vs the ESU oracle: identical vectors, and — the
+/// ISSUE-10 acceptance criterion — the planner reaches them while
+/// enumerating strictly fewer embeddings than ESU's per-subgraph walk.
+#[test]
+fn census_matches_esu_and_enumerates_strictly_fewer_embeddings() {
+    for seed in SEEDS {
+        let g = gen::rmat(9, 5, seed, &[]);
+        for k in [3usize, 4] {
+            let mut cfg = cfg_with(4, true);
+            cfg.opts = cfg.opts.with_stats();
+            let planned = decompose::motif_census(&g, k, &cfg).unwrap();
+            let esu = count_motifs(&g, k, &cfg, &NoHooks, &MotifTable::new(k)).unwrap();
+            assert_eq!(
+                planned.value, esu.value,
+                "{k}-motif census on rmat(9,5,{seed}): planner disagrees with ESU"
+            );
+            if decompose::plan_enabled_default() {
+                assert!(
+                    planned.stats.enumerated < esu.stats.enumerated,
+                    "{k}-motif census on rmat(9,5,{seed}): planner enumerated \
+                     {} embeddings, ESU {} — the decomposition must shrink the \
+                     enumeration space, not just match counts",
+                    planned.stats.enumerated,
+                    esu.stats.enumerated
+                );
+            }
+        }
+    }
+}
+
+/// Governance leg, engine half: an already-expired deadline trips the
+/// anchor enumeration mid-plan; the planner must surface an honest
+/// `complete == false` partial (tripped reason attached), never a
+/// fabricated total.
+#[test]
+fn deadline_trip_mid_plan_degrades_to_partial() {
+    if !budget::governance_enabled() {
+        return;
+    }
+    let g = gen::rmat(8, 5, 3, &[]);
+    let cfg = cfg_with(2, true).with_deadline(Duration::from_nanos(1));
+    for p in [library::diamond(), library::tailed_triangle()] {
+        let out = decompose::count_with_plan(&g, &p, true, &cfg).unwrap();
+        assert!(
+            !out.complete,
+            "an expired deadline must degrade the planned {p} count to a partial"
+        );
+        assert!(out.tripped.is_some(), "partial outcomes carry their trip reason");
+    }
+    let census = decompose::motif_census(&g, 4, &cfg).unwrap();
+    assert!(!census.complete, "an expired deadline must degrade the census to a partial");
+}
+
+fn frag_count(frag: &str) -> u64 {
+    sandslash::service::json::parse(frag)
+        .ok()
+        .and_then(|v| v.get("count").and_then(|c| c.as_u64()))
+        .expect("count field in the result fragment")
+}
+
+/// Governance leg, service half: the resident service routes count-only
+/// queries through the planner; a deadline-tripped partial must answer
+/// with the PR-6 code and must **never** enter the result cache, and
+/// the planned answer that does get cached must be bit-identical to the
+/// enumerated oracle (cache compatibility across the kill switch).
+#[test]
+fn service_routes_counts_through_the_planner_and_never_caches_partials() {
+    if !budget::governance_enabled() {
+        return;
+    }
+    let svc = Service::new(ServiceConfig {
+        max_inflight: 2,
+        max_queued: 4,
+        cache_bytes: 1 << 20,
+        default_threads: 2,
+        default_budget: Budget::default(),
+    })
+    .expect("governed test environment");
+    let svc = Arc::new(svc);
+    svc.preload("er-small").expect("test dataset resident");
+
+    // 1. deadline-tripped planned query: partial code, never cached.
+    //    Vertex-induced so the plan carries governed anchor pieces (the
+    //    raw diamond recipe is formula-only and has nothing to trip).
+    let mut tripped = Request::query("p1", "er-small", PatternSpec::Named("diamond".into()));
+    tripped.vertex_induced = true;
+    tripped.deadline_ms = Some(0);
+    let resp = svc.handle(&tripped);
+    match &resp.body {
+        Body::Ok { code, cached, result, .. } => {
+            assert_ne!(*code, 0, "a 0ms deadline must trip the planned query");
+            assert!(!*cached);
+            assert!(result.contains("\"complete\":false"));
+        }
+        Body::Err(e) => panic!("tripped query must still answer: {e:?}"),
+    }
+    let stats = svc.cache_stats();
+    assert_eq!(stats.fills, 0, "tripped partials must never fill the cache");
+    assert!(stats.rejected >= 1, "the partial must be rejected by the cache, not dropped");
+
+    // 2. the same query unbudgeted: a true miss (nothing was cached),
+    //    answered by the planner, bit-identical to the enumerated
+    //    oracle on the same deterministic dataset
+    let mut req = Request::query("p2", "er-small", PatternSpec::Named("diamond".into()));
+    req.vertex_induced = true;
+    let (count, was_cached) = match &svc.handle(&req).body {
+        Body::Ok { code, cached, result, .. } => {
+            assert_eq!(*code, 0);
+            (frag_count(result), *cached)
+        }
+        Body::Err(e) => panic!("query failed: {e:?}"),
+    };
+    assert!(!was_cached, "the tripped partial must not have been cached");
+    let er_small = gen::erdos_renyi(2000, 0.005, 7, &[]);
+    let oracle = enumerated_diamond_count(&er_small);
+    assert_eq!(
+        count, oracle,
+        "the service's planned answer must be bit-identical to the enumerated oracle"
+    );
+
+    // 3. replay: the complete planned answer is cache-compatible
+    let mut req = Request::query("p3", "er-small", PatternSpec::Named("diamond".into()));
+    req.vertex_induced = true;
+    match &svc.handle(&req).body {
+        Body::Ok { code, cached, result, .. } => {
+            assert_eq!(*code, 0);
+            assert!(*cached, "the complete planned answer must have been cached");
+            assert_eq!(frag_count(result), oracle);
+        }
+        Body::Err(e) => panic!("replay failed: {e:?}"),
+    }
+}
+
+/// The enumerated (planner-off) oracle for the service leg's
+/// vertex-induced diamond query.
+fn enumerated_diamond_count(g: &CsrGraph) -> u64 {
+    decompose::count_with_plan(g, &library::diamond(), true, &cfg_with(2, false))
+        .unwrap()
+        .value
+}
